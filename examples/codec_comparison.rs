@@ -1,0 +1,50 @@
+//! Codec bake-off on real activations from every model: accuracy-side
+//! (reconstruction error at matched ratios) and speed-side (wall
+//! time) — the standalone version of Tables III/IV for people who
+//! just want the codec library.
+//!
+//!     cargo run --release --example codec_comparison
+
+use fourier_compress::codec::{self, rel_error, Codec};
+use fourier_compress::model::executor::SplitExecutor;
+use fourier_compress::model::tokenizer;
+use fourier_compress::runtime::ArtifactStore;
+use fourier_compress::tensor::Tensor;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let store = ArtifactStore::open("artifacts")?;
+    for model in store.model_names() {
+        let exec = SplitExecutor::new(&store, &model)?;
+        let meta = exec.meta.clone();
+        let ids = tokenizer::encode_prompt("Q mira hue ? A blue . Q rok den ? A cave .");
+        let len = ids.len().min(meta.eval_seq);
+        let (b, s, d) = (meta.eval_batch, meta.eval_seq, meta.d_model);
+        let mut toks = Vec::new();
+        for _ in 0..b {
+            toks.extend(tokenizer::pad_to(&ids, s));
+        }
+        let acts = exec.activations(&Tensor::i32(vec![b, s], toks))?;
+        let a1 = &acts[0].as_f32()[..len * d];
+
+        println!("\n== {model} (layer-1 activation {len}x{d}) ==");
+        println!("{:8} {:>7} {:>10} {:>12} {:>12}", "codec", "ratio",
+                 "achieved", "rel-error", "time");
+        for ratio in [6.0, 8.0, 10.0] {
+            for name in ["fc", "topk", "qr", "fwsvd", "asvd", "svdllm"] {
+                let c: Box<dyn Codec> = if name == "fc" {
+                    Box::new(codec::fourier::FourierCodec::with_hint(meta.kd_band()))
+                } else {
+                    codec::by_name(name)?
+                };
+                let t0 = Instant::now();
+                let p = c.compress(a1, len, d, ratio)?;
+                let rec = c.decompress(&p)?;
+                let dt = t0.elapsed();
+                println!("{:8} {:>6.0}x {:>9.1}x {:>12.4} {:>10.1?}",
+                         name, ratio, p.achieved_ratio(), rel_error(a1, &rec), dt);
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! End-to-end collaborative serving (E11 in DESIGN.md §5): a real
+//! edge server + N device clients over loopback TCP with a simulated
+//! 6G uplink.  Each client runs embed+layer1+pallas-FC locally and
+//! generates answers autoregressively in the paper's recompute
+//! regime; the server batches reconstructed activations across
+//! clients.  Reports throughput, latency percentiles, and the wire
+//! compression actually achieved.
+//!
+//!     cargo run --release --example collaborative_serving -- \
+//!         [--clients 4] [--prompts 6] [--gbps 1.0] [--max-batch 4]
+
+use fourier_compress::config::{FromJson, ServeConfig};
+use fourier_compress::coordinator::{DeviceClient, EdgeServer};
+use fourier_compress::net::Channel;
+use fourier_compress::runtime::ArtifactStore;
+use fourier_compress::util::cli::Args;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let n_clients = args.usize_or("clients", 4);
+    let n_prompts = args.usize_or("prompts", 6);
+    let gbps = args.f64_or("gbps", 1.0);
+    let max_batch = args.usize_or("max-batch", 4);
+
+    let cfg = ServeConfig::load(None, &[
+        "listen=127.0.0.1:0".into(),
+        format!("max_batch={max_batch}"),
+        "compute_units=1".into(),
+    ])?;
+    let store = Arc::new(ArtifactStore::open(cfg.artifacts.clone())?);
+    let server = EdgeServer::start(cfg, store.clone())?;
+    let addr = server.addr.to_string();
+    println!("edge server up on {addr}; {n_clients} clients, link {gbps} Gbps");
+
+    // fact-world prompts the build-time models were trained on
+    let prompts = [
+        "Q mira hue ? A", "Q rok den ? A", "Q zeb food ? A", "Q kol mood ? A",
+        "Q fen hue ? A", "Q tas den ? A", "Q ulf job ? A", "Q vex size ? A",
+    ];
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for cid in 0..n_clients {
+        let addr = addr.clone();
+        let store = store.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<_> {
+            let channel = Channel::gbps(gbps, 100);
+            let mut client = DeviceClient::connect(&addr, &store,
+                                                   cid as u64 + 1, channel)?;
+            let mut gens = Vec::new();
+            for p in 0..n_prompts {
+                let prompt = prompts[(cid + p) % prompts.len()];
+                let g = client.generate(prompt, 8)?;
+                gens.push(g);
+            }
+            let stats = client.stats.clone();
+            client.bye()?;
+            Ok((gens, stats))
+        }));
+    }
+
+    let mut total_tokens = 0usize;
+    let mut total_bytes = 0u64;
+    let mut total_raw = 0u64;
+    let mut rts: Vec<u64> = Vec::new();
+    for (cid, h) in handles.into_iter().enumerate() {
+        let (gens, stats) = h.join().unwrap()?;
+        if cid == 0 {
+            for g in gens.iter().take(3) {
+                println!("  [{}] {:?} -> {:?}", cid, g.prompt, g.completion);
+            }
+        }
+        total_tokens += gens.iter().map(|g| g.steps).sum::<usize>();
+        total_bytes += stats.bytes_sent;
+        total_raw += stats.bytes_uncompressed;
+        rts.extend(stats.round_trip_us);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    rts.sort_unstable();
+    let pct = |p: f64| rts.get(((rts.len() as f64 * p) as usize).min(rts.len() - 1))
+        .copied().unwrap_or(0);
+
+    println!("\n=== results ===");
+    println!("tokens generated:   {total_tokens} in {wall:.2}s  \
+              ({:.1} tok/s)", total_tokens as f64 / wall);
+    println!("wire bytes:         {total_bytes} (raw would be {total_raw}, \
+              {:.1}x compression)", total_raw as f64 / total_bytes.max(1) as f64);
+    println!("step round-trip:    p50={}us p95={}us p99={}us",
+             pct(0.50), pct(0.95), pct(0.99));
+
+    // server-side metrics
+    println!("server metrics:     {}",
+             server.metrics.to_json().to_string_compact());
+    server.shutdown();
+    Ok(())
+}

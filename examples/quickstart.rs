@@ -1,0 +1,59 @@
+//! Quickstart: open the artifact store, pull a real layer-1
+//! activation out of the model, and round-trip it through every
+//! codec at the paper's average ratio — the 60-second tour of the
+//! public API.
+//!
+//!     cargo run --release --example quickstart
+
+use fourier_compress::codec::{self, rel_error, Codec};
+use fourier_compress::model::executor::SplitExecutor;
+use fourier_compress::model::tokenizer;
+use fourier_compress::runtime::ArtifactStore;
+use fourier_compress::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let store = ArtifactStore::open("artifacts")?;
+    println!("PJRT platform: {}", store.runtime.platform());
+
+    let exec = SplitExecutor::new(&store, "llamette-s")?;
+    let meta = &exec.meta;
+    println!("model {}: d={} layers={} params={}",
+             meta.name, meta.d_model, meta.n_layers, meta.n_params);
+
+    // a real prompt through embed + all layers; grab layer-1 output
+    let prompt = "Q mira hue ? A blue .";
+    let ids = tokenizer::encode_prompt(prompt);
+    let len = ids.len();
+    let (b, s) = (meta.eval_batch, meta.eval_seq);
+    let mut toks = Vec::new();
+    for _ in 0..b {
+        toks.extend(tokenizer::pad_to(&ids, s));
+    }
+    let acts = exec.activations(&Tensor::i32(vec![b, s], toks))?;
+    let d = meta.d_model;
+    let a1 = &acts[0].as_f32()[..len * d]; // crop to the true length
+
+    println!("\nlayer-1 activation {}x{} — codecs at ratio 7.6:", len, d);
+    println!("{:8} {:>10} {:>12}", "codec", "ratio", "rel-error");
+    for name in ["fc", "topk", "qr", "fwsvd", "asvd", "svdllm", "int8"] {
+        let c: Box<dyn Codec> = if name == "fc" {
+            Box::new(codec::fourier::FourierCodec::with_hint(meta.kd_band()))
+        } else {
+            codec::by_name(name)?
+        };
+        let p = c.compress(a1, len, d, 7.6)?;
+        let rec = c.decompress(&p)?;
+        println!("{:8} {:>9.1}x {:>12.4}", name, p.achieved_ratio(),
+                 rel_error(a1, &rec));
+    }
+
+    // the same comparison on a DEEP activation: the layer-aware story
+    let deep = &acts[meta.n_layers - 1].as_f32()[..len * d];
+    let fc = codec::fourier::FourierCodec::with_hint(meta.kd_band());
+    let p1 = fc.compress(a1, len, d, 7.6)?;
+    let pl = fc.compress(deep, len, d, 7.6)?;
+    println!("\nfc rel-error layer 1:  {:.4}", rel_error(a1, &fc.decompress(&p1)?));
+    println!("fc rel-error layer {}: {:.4}   <- deep layers resist compression",
+             meta.n_layers, rel_error(deep, &fc.decompress(&pl)?));
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Fig-7 in miniature: the multi-client discrete-event simulation in
+//! both regimes — compute-bound (1 unit) where link speed doesn't
+//! help, and bandwidth-bound (8 units) where FourierCompress
+//! multiplies client capacity.
+//!
+//!     cargo run --release --example scalability_sim
+
+use fourier_compress::config::SimConfig;
+use fourier_compress::sim::{simulate, Arm};
+
+fn main() {
+    let mut cfg = SimConfig {
+        clients: vec![10, 50, 150, 500, 1000, 1500],
+        link_gbps: vec![1.0, 10.0],
+        horizon_s: 60.0,
+        ..SimConfig::default()
+    };
+
+    for units in [1usize, 8] {
+        cfg.compute_units = units;
+        println!("\n=== {units} compute unit(s) ===");
+        println!("{:>8} {:>6} {:>6} | {:>12} {:>12}", "clients", "gbps", "arm",
+                 "mean resp s", "server util");
+        for &g in &cfg.link_gbps.clone() {
+            for &c in &cfg.clients.clone() {
+                for (arm, tag) in [(Arm::Original, "orig"), (Arm::Fc, "fc")] {
+                    let st = simulate(&cfg, c, g, arm);
+                    println!("{:>8} {:>6.1} {:>6} | {:>12.3} {:>12.2}",
+                             c, g, tag, st.mean_response_s, st.server_util);
+                }
+            }
+        }
+    }
+    println!("\n(see `repro simulate` for the full Fig-7 sweep + JSON output)");
+}

@@ -1,0 +1,298 @@
+"""AOT pipeline: trains models (if weights are missing), generates
+datasets, lowers every HLO artifact, and dumps golden vectors + the
+manifest the rust runtime consumes.
+
+Interchange format is HLO **text** (not serialized HloModuleProto):
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+(See /opt/xla-example/README.md.)
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets as D
+from . import model as M
+from . import tensor_io
+from .configs import (EVAL_BATCH, EVAL_SEQ, MODELS, PAD_ID, SEQ_BUCKETS,
+                      SERVING_MODEL, TABLE4_HIDDEN, TABLE4_RATIO, TABLE4_SEQ,
+                      TrainConfig, achieved_ratio, fc_block)
+from .kernels import ref as kref
+from .kernels.fourier import fc_compress, fc_decompress, vmem_footprint_bytes
+from .train import load_or_train
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants: the default HLO printer elides big dense
+    # literals as `{...}`, which the text parser silently reads back as
+    # zeros — RoPE tables / DFT panels would vanish from the artifacts.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_to_file(fn, args, path: str) -> None:
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_composable(cfg, out_dir: str, manifest_model: dict) -> None:
+    """embed / layer / head artifacts at the eval geometry (B=8, S=64).
+
+    Weights are runtime arguments in the canonical order, so one layer
+    HLO serves every layer of the model and the rust side can split at
+    any depth (DESIGN.md §3)."""
+    b, s, d = EVAL_BATCH, EVAL_SEQ, cfg.d_model
+    v, f = cfg.vocab_size, cfg.d_ff
+    kv = cfg.n_kv_heads * cfg.head_dim
+    names = M.layer_weight_names(cfg)
+
+    shapes = {
+        "ln1": (d,), "wq": (d, d), "wk": (d, kv), "wv": (d, kv),
+        "bq": (d,), "bk": (kv,), "bv": (kv,), "wo": (d, d), "ln2": (d,),
+        "w_gate": (d, f), "w_up": (d, f), "w_down": (f, d),
+    }
+    layer_args = [spec((b, s, d))] + [spec(shapes[n]) for n in names]
+
+    art = {}
+    path = f"{cfg.name}_embed_b{b}_s{s}.hlo.txt"
+    lower_to_file(lambda t, e: (M.embed(t, e),),
+                  [spec((b, s), I32), spec((v, d))],
+                  os.path.join(out_dir, path))
+    art["embed"] = {"path": path, "weight_args": ["tok_emb"]}
+
+    path = f"{cfg.name}_layer_b{b}_s{s}.hlo.txt"
+    lower_to_file(lambda h, *w: (M.layer_fwd(cfg, h, *w),), layer_args,
+                  os.path.join(out_dir, path))
+    art["layer"] = {"path": path,
+                    "weight_args": [f"layers.{{i}}.{n}" for n in names]}
+
+    path = f"{cfg.name}_head_b{b}_s{s}.hlo.txt"
+    lower_to_file(lambda h, fn_, lh: (M.head(cfg, h, fn_, lh),),
+                  [spec((b, s, d)), spec((d,)), spec((d, v))],
+                  os.path.join(out_dir, path))
+    art["head"] = {"path": path, "weight_args": ["final_norm", "lm_head"]}
+
+    manifest_model["artifacts"] = art
+    manifest_model["eval_batch"] = b
+    manifest_model["eval_seq"] = s
+
+
+def build_serving(cfg, out_dir: str, ratio: float) -> dict:
+    """Fused client/server artifacts with the pallas codec lowered in
+    (split k=1 hot path), per sequence bucket and server batch size."""
+    d, v = cfg.d_model, cfg.vocab_size
+    names = M.layer_weight_names(cfg)
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    f = cfg.d_ff
+    shapes = {
+        "ln1": (d,), "wq": (d, d), "wk": (d, kvd), "wv": (d, kvd),
+        "bq": (d,), "bk": (kvd,), "bv": (kvd,), "wo": (d, d), "ln2": (d,),
+        "w_gate": (d, f), "w_up": (d, f), "w_down": (f, d),
+    }
+    nstack = cfg.n_layers - 1
+    serving = {"model": cfg.name, "ratio": ratio, "buckets": {},
+               "layer_weight_names": list(names)}
+
+    kd_hint = 2 * cfg.l1_freq_bins - 1  # calibrated to the model's layer-1 band
+    for s in SEQ_BUCKETS:
+        ks, kd = fc_block(s, d, ratio, kd_hint=kd_hint)
+        bucket = {"ks": ks, "kd": kd,
+                  "achieved_ratio": achieved_ratio(s, d, ks, kd),
+                  "client": None, "server": {}}
+
+        cl_args = ([spec((1, s), I32), spec((v, d))] +
+                   [spec(shapes[n]) for n in names])
+        path = f"{cfg.name}_client_s{s}.hlo.txt"
+        lower_to_file(
+            lambda t, e, *w, _s=s, _ks=ks, _kd=kd: M.client_fused(
+                cfg, t, e, list(w), _ks, _kd),
+            cl_args, os.path.join(out_dir, path))
+        bucket["client"] = {"path": path,
+                            "weight_args": ["tok_emb"] +
+                            [f"layers.0.{n}" for n in names]}
+
+        for bsz in (1, 4):
+            sv_args = ([spec((bsz, ks, kd)), spec((bsz, ks, kd))] +
+                       [spec((nstack,) + shapes[n]) for n in names] +
+                       [spec((d,)), spec((d, v))])
+            path = f"{cfg.name}_server_s{s}_b{bsz}.hlo.txt"
+            lower_to_file(
+                lambda re, im, *rest, _s=s: (M.server_fused(
+                    cfg, re, im, list(rest[:-2]), rest[-2], rest[-1], _s),),
+                sv_args, os.path.join(out_dir, path))
+            bucket["server"][str(bsz)] = {
+                "path": path,
+                "weight_args": [f"stack.{n}" for n in names] +
+                               ["final_norm", "lm_head"]}
+        serving["buckets"][str(s)] = bucket
+    return serving
+
+
+def build_codec_hw(out_dir: str) -> dict:
+    """Standalone pallas-codec artifacts at the paper's hidden sizes —
+    the 'hardware-accelerated' column of Table IV (stands in for
+    cuFFT/FPGA offload; see DESIGN.md §2)."""
+    out = {"ratio": TABLE4_RATIO, "entries": []}
+    for dh in TABLE4_HIDDEN:
+        s = TABLE4_SEQ
+        ks, kd = fc_block(s, dh, TABLE4_RATIO)
+        cpath = f"fft_compress_{s}x{dh}.hlo.txt"
+        dpath = f"fft_decompress_{s}x{dh}.hlo.txt"
+        mmc = f"fft_compress_mm_{s}x{dh}.hlo.txt"
+        mmd = f"fft_decompress_mm_{s}x{dh}.hlo.txt"
+        lower_to_file(lambda a, _ks=ks, _kd=kd: fc_compress(a, _ks, _kd),
+                      [spec((s, dh))], os.path.join(out_dir, cpath))
+        lower_to_file(
+            lambda re, im, _s=s, _d=dh: (fc_decompress(re, im, _s, _d),),
+            [spec((ks, kd)), spec((ks, kd))], os.path.join(out_dir, dpath))
+        from .kernels.fourier import fc_compress_matmul, fc_decompress_matmul
+        lower_to_file(lambda a, _ks=ks, _kd=kd: fc_compress_matmul(a, _ks, _kd),
+                      [spec((s, dh))], os.path.join(out_dir, mmc))
+        lower_to_file(
+            lambda re, im, _s=s, _d=dh: (fc_decompress_matmul(re, im, _s, _d),),
+            [spec((ks, kd)), spec((ks, kd))], os.path.join(out_dir, mmd))
+        out["entries"].append({
+            "seq": s, "hidden": dh, "ks": ks, "kd": kd,
+            "achieved_ratio": achieved_ratio(s, dh, ks, kd),
+            "compress": cpath, "decompress": dpath,
+            "compress_mm": mmc, "decompress_mm": mmd,
+            "vmem": vmem_footprint_bytes(s, dh, ks, kd),
+        })
+    return out
+
+
+def build_datasets(out_dir: str, n_items: int) -> dict:
+    world = D.World(7)
+    meta = {}
+    os.makedirs(out_dir, exist_ok=True)
+    for name in D.DATASETS:
+        items = D.gen_dataset(name, world, n_items, seed=1)
+        path = os.path.join(out_dir, f"{name}.jsonl")
+        D.write_jsonl(path, items)
+        meta[name] = {"path": f"data/{name}.jsonl", "n": len(items),
+                      "paper_name": D.PAPER_NAMES[name],
+                      "max_len": D.max_item_len(items)}
+    return meta
+
+
+def build_goldens(cfg, params, out_dir: str) -> str:
+    """Golden vectors for the rust parity tests: full-model logits,
+    split+FC logits, layer-1 activation, and codec io pairs."""
+    rng = np.random.default_rng(99 + cfg.seed)
+    b, s, d = 2, EVAL_SEQ, cfg.d_model
+    world = D.World(7)
+    items = D.gen_dataset("oa", world, b, seed=5)
+    toks = np.full((b, s), PAD_ID, np.int32)
+    for i, it in enumerate(items):
+        ids = D.encode_prompt(it["prompt"] + " " + it["choices"][0] + " .")
+        toks[i, :len(ids)] = ids[:s]
+
+    ks, kd = fc_block(s, d, 8.0, kd_hint=2 * cfg.l1_freq_bins - 1)
+    logits = M.forward(cfg, params, jnp.asarray(toks))
+    logits_split = M.split_forward(cfg, params, jnp.asarray(toks), 1, ks, kd)
+    acts = M.activations(cfg, params, jnp.asarray(toks))
+
+    a = np.asarray(acts[0][0], np.float32)  # layer-1 activation, first row
+    re, im = kref.fc_compress_ref(jnp.asarray(a), ks, kd)
+    recon = kref.fc_decompress_ref(re, im, s, d)
+
+    g = {
+        "tokens": toks, "ks_kd": np.asarray([ks, kd], np.int32),
+        "logits_full": np.asarray(logits, np.float32),
+        "logits_split1_fc8": np.asarray(logits_split, np.float32),
+        "act_layer1": np.asarray(acts[0], np.float32),
+        "codec_a": a, "codec_re": np.asarray(re), "codec_im": np.asarray(im),
+        "codec_recon": np.asarray(recon),
+        "topk_recon": np.asarray(kref.topk_ref(jnp.asarray(a), a.size // 16)),
+        "svd_r4_recon": np.asarray(kref.svd_rank_r_ref(jnp.asarray(a), 4)),
+    }
+    path = os.path.join(out_dir, f"{cfg.name}.golden.fcw")
+    tensor_io.write_fcw(path, g)
+    return f"golden/{cfg.name}.golden.fcw"
+
+
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override training steps (smoke builds)")
+    ap.add_argument("--items", type=int, default=192,
+                    help="eval items per dataset")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated subset of models")
+    args = ap.parse_args()
+
+    out = args.out
+    for sub in ("", "weights", "data", "golden", "hlo"):
+        os.makedirs(os.path.join(out, sub), exist_ok=True)
+    hlo_dir = os.path.join(out, "hlo")
+
+    tc = TrainConfig() if args.steps is None else TrainConfig(steps=args.steps)
+    model_names = (args.models.split(",") if args.models else list(MODELS))
+
+    manifest = {
+        "generated_unix": int(time.time()),
+        "vocab": {"size": 259, "bos": 256, "eos": 257, "pad": PAD_ID},
+        "eval": {"batch": EVAL_BATCH, "seq": EVAL_SEQ},
+        "seq_buckets": list(SEQ_BUCKETS),
+        "models": {},
+    }
+
+    t0 = time.time()
+    for name in model_names:
+        cfg = MODELS[name]
+        print(f"=== {name}: train/load ({cfg.n_params():,} params)")
+        params = load_or_train(cfg, tc, os.path.join(out, "weights"))
+        mm = cfg.to_dict()
+        mm["weights"] = f"weights/{name}.fcw"
+        mm["layer_weight_names"] = list(M.layer_weight_names(cfg))
+        print(f"=== {name}: composable artifacts")
+        build_composable(cfg, hlo_dir, mm)
+        print(f"=== {name}: goldens")
+        mm["golden"] = build_goldens(cfg, params, os.path.join(out, "golden"))
+        manifest["models"][name] = mm
+
+    if SERVING_MODEL in model_names:
+        print("=== serving artifacts (fused client/server, pallas codec)")
+        manifest["serving"] = build_serving(MODELS[SERVING_MODEL], hlo_dir, 8.0)
+
+    print("=== codec hardware artifacts (Table IV)")
+    manifest["codec_hw"] = build_codec_hw(hlo_dir)
+
+    print("=== datasets")
+    manifest["datasets"] = build_datasets(os.path.join(out, "data"), args.items)
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"AOT complete in {time.time() - t0:.0f}s -> {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Model + experiment configuration registry.
+
+The four model variants stand in for Llama 3-1B/3B and Qwen2.5-1.5B/3B
+(see DESIGN.md §2).  They are genuine Llama-style decoder-only LMs:
+RMSNorm, RoPE, (grouped-query) multi-head attention, SwiGLU MLP.  The
+"qwenette" family differs from "llamette" the way Qwen differs from
+Llama: QKV bias and grouped KV heads.
+
+Everything downstream (trainer, AOT pipeline, rust runtime) reads model
+geometry from this registry; `aot.py` serialises it into
+``artifacts/manifest.json`` so the rust side never hardcodes shapes.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+# Byte-level tokenizer: 256 raw bytes + specials.
+VOCAB_BYTES = 256
+BOS_ID = 256
+EOS_ID = 257
+PAD_ID = 258
+VOCAB_SIZE = 259
+
+# Sequence buckets used by the eval harness and the serving batcher.
+SEQ_BUCKETS = (16, 32, 48, 64)
+# Eval pads every (prompt, choice) pair to this length.
+EVAL_SEQ = 64
+# Eval batch size baked into the composable artifacts.
+EVAL_BATCH = 8
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int = VOCAB_SIZE
+    max_seq: int = 64
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+    qkv_bias: bool = False  # Qwen-style attention bias
+    # Number of rfft bins the layer-1 residual contributions live in
+    # (hidden-axis spectral bottleneck; DESIGN.md §2 — this induces the
+    # early-layer spectral concentration the paper measures on Llama 3,
+    # which emerges from scale there and from this inductive bias here).
+    l1_freq_bins: int = 8
+    seed: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        d, v, f, L = self.d_model, self.vocab_size, self.d_ff, self.n_layers
+        hd = self.head_dim
+        kv = self.n_kv_heads * hd
+        attn = d * d + 2 * d * kv + d * d  # wq, wk, wv, wo
+        if self.qkv_bias:
+            attn += d + 2 * kv
+        mlp = 3 * d * f
+        norms = 2 * d
+        return v * d + L * (attn + mlp + norms) + d + d * v
+
+    def to_dict(self) -> dict:
+        out = asdict(self)
+        out["head_dim"] = self.head_dim
+        out["n_params"] = self.n_params()
+        return out
+
+
+MODELS = {
+    # stands in for Llama 3-1B
+    "llamette-s": ModelConfig(
+        name="llamette-s", d_model=96, n_layers=6, n_heads=4, n_kv_heads=4,
+        d_ff=256, l1_freq_bins=7, seed=1,
+    ),
+    # stands in for Llama 3-3B
+    "llamette-m": ModelConfig(
+        name="llamette-m", d_model=128, n_layers=8, n_heads=4, n_kv_heads=4,
+        d_ff=344, l1_freq_bins=8, seed=2,
+    ),
+    # stands in for Qwen2.5-1.5B
+    "qwenette-s": ModelConfig(
+        name="qwenette-s", d_model=96, n_layers=6, n_heads=6, n_kv_heads=2,
+        d_ff=256, qkv_bias=True, l1_freq_bins=7, seed=3,
+    ),
+    # stands in for Qwen2.5-3B
+    "qwenette-m": ModelConfig(
+        name="qwenette-m", d_model=128, n_layers=8, n_heads=8, n_kv_heads=4,
+        d_ff=344, qkv_bias=True, l1_freq_bins=8, seed=4,
+    ),
+}
+
+# The model used for the fused serving artifacts + E2E example.
+SERVING_MODEL = "llamette-m"
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 600
+    batch: int = 16
+    seq: int = 64
+    lr: float = 1.5e-3
+    warmup: int = 40
+    weight_decay: float = 0.05
+    grad_clip: float = 1.0
+    log_every: int = 25
+    seed: int = 1234
+
+
+# Hidden sizes for the Table IV codec-timing artifacts (the paper's real
+# model hidden sizes: Qwen2.5-1.5B=1536, Llama3-1B/Qwen2.5-3B=2048,
+# Llama3-3B=3072).
+TABLE4_HIDDEN = (1536, 2048, 3072)
+TABLE4_SEQ = 256
+TABLE4_RATIO = 8.0
+
+
+def _odd_cap(x: int, cap: int) -> int:
+    x = max(1, min(x, cap))
+    if x % 2 == 0:
+        x = x - 1 if x > 1 else (x + 1 if x + 1 <= cap else 1)
+    # a full axis (x == cap) is allowed even when cap is even: keeping
+    # every bin is trivially conjugate-closed
+    return x
+
+
+def fc_block(seq: int, hidden: int, ratio: float,
+             kd_hint: int | None = None) -> tuple[int, int]:
+    """Pick (K_S, K_D) hitting the target ratio under conjugate-
+    symmetric payload accounting: the wire carries only the
+    non-redundant half of the centred block, so
+
+        payload floats = K_S * K_D      ratio = S*D / (K_S*K_D)
+
+    (DESIGN.md §6).  The hidden axis absorbs most of the truncation —
+    LLM layer-1 activations concentrate along d — with `kd_hint`
+    letting the caller pass a calibrated hidden-axis width.
+    """
+    budget = max(1.0, seq * hidden / ratio)  # real-coeff budget
+    kd = kd_hint if kd_hint is not None else max(3, round(hidden / 8.0))
+    kd = _odd_cap(kd, hidden)
+    ks = int(budget // kd)
+    if ks >= seq:
+        ks = seq  # full sequence axis (even allowed: whole axis kept)
+    else:
+        ks = _odd_cap(ks, seq)
+    return ks, kd
+
+
+def achieved_ratio(seq: int, hidden: int, ks: int, kd: int) -> float:
+    """Conjugate-symmetric accounting: K_S*K_D real payload floats."""
+    return seq * hidden / float(ks * kd)

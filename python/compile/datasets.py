@@ -1,0 +1,308 @@
+"""Fact-world corpus + the 10 synthetic MCQ dataset generators.
+
+Stand-ins for the paper's 10 commonsense-reasoning benchmarks
+(DESIGN.md §2).  A closed "fact world" (entities with attributes and a
+friend relation) yields a training corpus the build-time trainer
+memorises; each dataset flavour probes that knowledge with a different
+prompt structure, mirroring the paper's spread:
+
+    oa  OpenBookQA      closed-book attribute recall (color)
+    ae  ARC-Easy        closed-book attribute recall (home, common attrs)
+    ac  ARC-Challenge   two-hop recall through the friend relation
+    pa  PIQA            in-context physical comparison (answer in prompt)
+    sa  SIQA            closed-book mood/social attribute recall
+    wg  WinoGrande      in-context referent resolution (most fragile)
+    cq  CommonsenseQA   category membership (which is a color?)
+    qc  QASC            two-fact composition given in context
+    la  LogiQA          negation/elimination over a binary attribute pair
+    ca  CosmosQA        in-context recall with distractor facts
+
+Like the paper's suite, the in-context tasks (pa, ca) are redundant and
+compression-tolerant, while referent resolution (wg) hinges on fine
+activation detail — this is what produces the dataset-adaptive ratios
+of Table II.
+
+Byte-level tokenizer: token = byte, plus BOS/EOS/PAD specials.
+"""
+
+from __future__ import annotations
+
+import json
+import random
+
+from .configs import BOS_ID, EOS_ID, PAD_ID
+
+# ---------------------------------------------------------------------------
+# tokenizer
+# ---------------------------------------------------------------------------
+
+def encode(text: str) -> list[int]:
+    return list(text.encode("utf-8"))
+
+
+def decode(ids: list[int]) -> str:
+    return bytes(i for i in ids if 0 <= i < 256).decode("utf-8", errors="replace")
+
+
+def encode_prompt(text: str) -> list[int]:
+    return [BOS_ID] + encode(text)
+
+
+# ---------------------------------------------------------------------------
+# the world
+# ---------------------------------------------------------------------------
+
+ENTITIES = [
+    "mira", "rok", "zeb", "kol", "fen", "tas", "ulf", "vex",
+    "nim", "ora", "pax", "quin", "rus", "sil", "tov", "una",
+    "wex", "yan", "zara", "bru", "cal", "dex", "eli", "fay",
+]
+
+ATTRS = {
+    "hue": ["red", "blue", "green", "gold", "gray"],
+    "size": ["big", "small", "tiny", "huge"],
+    "den": ["cave", "lake", "hill", "fort", "barn"],
+    "food": ["figs", "corn", "fish", "nuts", "rice"],
+    "mood": ["glad", "calm", "grim", "wild"],
+    "job": ["smith", "guard", "baker", "scout"],
+}
+
+SIZE_RANK = {"tiny": 0, "small": 1, "big": 2, "huge": 3}
+
+
+class World:
+    """Deterministic assignment of attributes + a friend permutation."""
+
+    def __init__(self, seed: int = 7):
+        rng = random.Random(seed)
+        self.facts: dict[str, dict[str, str]] = {}
+        for e in ENTITIES:
+            self.facts[e] = {a: rng.choice(vs) for a, vs in ATTRS.items()}
+        ents = ENTITIES[:]
+        rng.shuffle(ents)
+        # derangement-ish friend cycle
+        self.friend = {ents[i]: ents[(i + 1) % len(ents)] for i in range(len(ents))}
+        self.rng = rng
+
+    def attr(self, e: str, a: str) -> str:
+        return self.facts[e][a]
+
+
+# ---------------------------------------------------------------------------
+# training corpus
+# ---------------------------------------------------------------------------
+
+def render_corpus(world: World, seed: int = 11, repeats: int = 6) -> str:
+    """Fact statements + QA-format exemplars for every task flavour.
+
+    The QA exemplars cover ALL entities (closed-book memorisation is
+    the point — the paper's models saw their benchmarks' knowledge in
+    pre-training too); the eval sets re-sample prompts/distractors, so
+    items are not byte-identical to training lines.
+    """
+    rng = random.Random(seed)
+    lines: list[str] = []
+    for _ in range(repeats):
+        for e in ENTITIES:
+            for a, v in world.facts[e].items():
+                lines.append(f"{e} {a} is {v} .")
+                lines.append(f"Q {e} {a} ? A {v} .")
+            f = world.friend[e]
+            lines.append(f"friend of {e} is {f} .")
+            for a in ("hue", "food", "den"):
+                lines.append(f"Q friend of {e} {a} ? A {world.attr(f, a)} .")
+        # category exemplars
+        for a, vs in ATTRS.items():
+            for v in vs:
+                lines.append(f"{v} is a {a} .")
+                other = [x for vv in ATTRS.values() for x in vv if x not in vs]
+                d = rng.sample(other, 3)
+                opts = d + [v]
+                rng.shuffle(opts)
+                lines.append(f"Q which is a {a} ? {' '.join(opts)} A {v} .")
+        # in-context exemplars (pa / wg / qc / la / ca formats)
+        for _ in range(len(ENTITIES)):
+            a, b = rng.sample(ENTITIES, 2)
+            sa_, sb = world.attr(a, "size"), world.attr(b, "size")
+            if SIZE_RANK[sa_] == SIZE_RANK[sb]:
+                continue
+            win = a if SIZE_RANK[sa_] > SIZE_RANK[sb] else b
+            lines.append(f"{a} is {sa_} . {b} is {sb} . Q bigger ? A {win} .")
+        for _ in range(len(ENTITIES)):
+            a, b = rng.sample(ENTITIES, 2)
+            ca_, cb = world.attr(a, "hue"), world.attr(b, "hue")
+            if ca_ == cb:
+                continue
+            pick = rng.choice([a, b])
+            cv = world.attr(pick, "hue")
+            lines.append(f"{a} met {b} . it was {cv} . Q {cv} one ? A {pick} .")
+        for _ in range(len(ENTITIES)):
+            e = rng.choice(ENTITIES)
+            v, h = world.attr(e, "food"), world.attr(e, "den")
+            lines.append(f"{e} food is {v} . {e} den is {h} . Q {e} food ? A {v} .")
+        for _ in range(len(ENTITIES)):
+            e = rng.choice(ENTITIES)
+            cv = world.attr(e, "hue")
+            wrong = rng.choice([c for c in ATTRS["hue"] if c != cv])
+            lines.append(f"{e} hue is not {wrong} . Q {e} hue ? A {cv} .")
+        for _ in range(len(ENTITIES)):
+            e, d1 = rng.sample(ENTITIES, 2)
+            cv = world.attr(e, "hue")
+            lines.append(
+                f"{d1} den is {world.attr(d1, 'den')} . {e} hue is {cv} . "
+                f"Q {e} hue ? A {cv} ."
+            )
+    rng.shuffle(lines)
+    return "\n".join(lines) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# MCQ generators — each returns {prompt, choices[4], answer}
+# ---------------------------------------------------------------------------
+
+def _mcq(prompt: str, correct: str, distract: list[str], rng) -> dict:
+    ds = rng.sample([d for d in distract if d != correct], 3)
+    choices = ds + [correct]
+    rng.shuffle(choices)
+    return {"prompt": prompt, "choices": choices, "answer": choices.index(correct)}
+
+
+def gen_attr_recall(world, rng, attr):
+    e = rng.choice(ENTITIES)
+    return _mcq(f"Q {e} {attr} ? A", world.attr(e, attr), ATTRS[attr], rng)
+
+
+def gen_oa(world, rng):
+    return gen_attr_recall(world, rng, "hue")
+
+
+def gen_ae(world, rng):
+    return gen_attr_recall(world, rng, rng.choice(["den", "food"]))
+
+
+def gen_ac(world, rng):
+    e = rng.choice(ENTITIES)
+    a = rng.choice(["hue", "food", "den"])
+    f = world.friend[e]
+    return _mcq(f"Q friend of {e} {a} ? A", world.attr(f, a), ATTRS[a], rng)
+
+
+def gen_pa(world, rng):
+    while True:
+        a, b = rng.sample(ENTITIES, 2)
+        sa_, sb = world.attr(a, "size"), world.attr(b, "size")
+        if SIZE_RANK[sa_] != SIZE_RANK[sb]:
+            break
+    win = a if SIZE_RANK[sa_] > SIZE_RANK[sb] else b
+    lose = b if win == a else a
+    prompt = f"{a} is {sa_} . {b} is {sb} . Q bigger ? A"
+    others = [x for x in ENTITIES if x not in (a, b)]
+    ds = rng.sample(others, 2) + [lose]
+    choices = ds + [win]
+    rng.shuffle(choices)
+    return {"prompt": prompt, "choices": choices, "answer": choices.index(win)}
+
+
+def gen_sa(world, rng):
+    return gen_attr_recall(world, rng, "mood")
+
+
+def gen_wg(world, rng):
+    while True:
+        a, b = rng.sample(ENTITIES, 2)
+        if world.attr(a, "hue") != world.attr(b, "hue"):
+            break
+    pick = rng.choice([a, b])
+    other = b if pick == a else a
+    cv = world.attr(pick, "hue")
+    prompt = f"{a} met {b} . it was {cv} . Q {cv} one ? A"
+    others = [x for x in ENTITIES if x not in (a, b)]
+    choices = rng.sample(others, 2) + [other, pick]
+    rng.shuffle(choices)
+    return {"prompt": prompt, "choices": choices, "answer": choices.index(pick)}
+
+
+def gen_cq(world, rng):
+    a = rng.choice(list(ATTRS))
+    v = rng.choice(ATTRS[a])
+    other = [x for aa, vs in ATTRS.items() if aa != a for x in vs]
+    item = _mcq(f"Q which is a {a} ? A", v, other + [v], rng)
+    # ensure exactly one member of the category among the choices
+    fixed = [c if (c == v or c not in ATTRS[a]) else rng.choice(other)
+             for c in item["choices"]]
+    item["choices"] = fixed
+    item["answer"] = fixed.index(v)
+    return item
+
+
+def gen_qc(world, rng):
+    e = rng.choice(ENTITIES)
+    v, h = world.attr(e, "food"), world.attr(e, "den")
+    prompt = f"{e} food is {v} . {e} den is {h} . Q {e} food ? A"
+    return _mcq(prompt, v, ATTRS["food"], rng)
+
+
+def gen_la(world, rng):
+    e = rng.choice(ENTITIES)
+    cv = world.attr(e, "hue")
+    wrong = rng.choice([c for c in ATTRS["hue"] if c != cv])
+    prompt = f"{e} hue is not {wrong} . Q {e} hue ? A"
+    item = _mcq(prompt, cv, ATTRS["hue"], rng)
+    if wrong not in item["choices"]:
+        # negated value must be a live distractor for the elimination
+        for i, c in enumerate(item["choices"]):
+            if c != cv:
+                item["choices"][i] = wrong
+                break
+        item["answer"] = item["choices"].index(cv)
+    return item
+
+
+def gen_ca(world, rng):
+    e, d1 = rng.sample(ENTITIES, 2)
+    cv = world.attr(e, "hue")
+    prompt = (f"{d1} den is {world.attr(d1, 'den')} . {e} hue is {cv} . "
+              f"Q {e} hue ? A")
+    return _mcq(prompt, cv, ATTRS["hue"], rng)
+
+
+DATASETS = {
+    "oa": gen_oa, "ae": gen_ae, "ac": gen_ac, "pa": gen_pa, "sa": gen_sa,
+    "wg": gen_wg, "cq": gen_cq, "qc": gen_qc, "la": gen_la, "ca": gen_ca,
+}
+
+# paper-name mapping, for reports
+PAPER_NAMES = {
+    "oa": "OpenBookQA", "ae": "ARC-Easy", "ac": "ARC-Challenge", "pa": "PIQA",
+    "sa": "SIQA", "wg": "WinoGrande", "cq": "CommonsenseQA", "qc": "QASC",
+    "la": "LogiQA", "ca": "CosmosQA",
+}
+
+
+def gen_dataset(name: str, world: World, n: int, seed: int = 0) -> list[dict]:
+    rng = random.Random(hash((name, seed)) & 0xFFFFFFFF)
+    gen = DATASETS[name]
+    items, seen = [], set()
+    guard = 0
+    while len(items) < n and guard < 50 * n:
+        guard += 1
+        it = gen(world, rng)
+        key = (it["prompt"], tuple(it["choices"]))
+        if key in seen:
+            continue
+        seen.add(key)
+        items.append(it)
+    return items
+
+
+def write_jsonl(path: str, items: list[dict]) -> None:
+    with open(path, "w") as f:
+        for it in items:
+            f.write(json.dumps(it) + "\n")
+
+
+def max_item_len(items: list[dict]) -> int:
+    return max(
+        len(encode_prompt(it["prompt"])) + len(encode(" " + c + " ."))
+        for it in items for c in it["choices"]
+    )

@@ -1,0 +1,231 @@
+"""L1 — the FourierCompress pallas kernels (truncated 2-D DFT codec).
+
+TPU restatement of the paper's cuFFT/FPGA insight (DESIGN.md §8): the
+truncated 2-D FFT over the centred low-frequency bins is a pair of
+skinny complex matmuls
+
+    block[K_S, K_D] = F_S @ A @ F_D.T          (compress)
+    A'[S, D]        = Re( B_S @ block @ B_D.T )  (decompress)
+
+with fixed DFT panels F/B.  This maps onto the MXU instead of a
+butterfly network.  The pallas schedule streams A (resp. A') through
+VMEM in D-axis tiles while the skinny panels and the K_S×K_D
+accumulator stay VMEM-resident — the BlockSpec plays the role the
+paper's threadblock/DSP-slice pipeline played on GPU/FPGA.
+
+Complex arithmetic is carried as separate re/im planes (no complex MXU
+path).  `interpret=True` everywhere: the CPU PJRT client cannot run
+Mosaic custom-calls; on-TPU performance is analysed statically in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import dft_matrices
+
+# D-axis tile width for the HBM->VMEM stream. 128 matches the TPU lane
+# width; shapes not divisible by the tile fall back to a single tile.
+DEFAULT_BLOCK_D = 128
+
+
+def _block_d(d: int, block_d: int | None) -> int:
+    bd = block_d or DEFAULT_BLOCK_D
+    if d % bd != 0:
+        return d
+    return bd
+
+
+def _panels(n: int, k: int):
+    fwd, bwd = dft_matrices(n, k)
+    return (
+        np.real(fwd).astype(np.float32),
+        np.imag(fwd).astype(np.float32),
+        np.real(bwd).astype(np.float32),
+        np.imag(bwd).astype(np.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# compress:  A[S, D] -> (re, im)[K_S, K_D]
+# ---------------------------------------------------------------------------
+
+def _compress_kernel(a_ref, fdt_re_ref, fdt_im_ref, fs_re_ref, fs_im_ref,
+                     out_re_ref, out_im_ref, t_re, t_im):
+    """Grid step j: fold A[:, j-tile] into the T = A @ F_D.T accumulator;
+    on the last step apply the sequence-axis panel and emit the block."""
+    j = pl.program_id(0)
+    nj = pl.num_programs(0)
+
+    @pl.when(j == 0)
+    def _init():
+        t_re[...] = jnp.zeros_like(t_re)
+        t_im[...] = jnp.zeros_like(t_im)
+
+    a = a_ref[...]  # [S, BD]
+    t_re[...] += a @ fdt_re_ref[...]  # [S, KD]
+    t_im[...] += a @ fdt_im_ref[...]
+
+    @pl.when(j == nj - 1)
+    def _emit():
+        fs_re = fs_re_ref[...]  # [KS, S]
+        fs_im = fs_im_ref[...]
+        tr, ti = t_re[...], t_im[...]
+        out_re_ref[...] = fs_re @ tr - fs_im @ ti
+        out_im_ref[...] = fs_re @ ti + fs_im @ tr
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def fc_compress(a: jnp.ndarray, ks: int, kd: int, block_d: int | None = None):
+    """Pallas truncated-DFT compression of A[S, D] to a K_S×K_D block."""
+    s, d = a.shape
+    bd = _block_d(d, block_d)
+    fs_re, fs_im, _, _ = _panels(s, ks)
+    fd_re, fd_im, _, _ = _panels(d, kd)
+    fdt_re = jnp.asarray(fd_re.T)  # [D, KD]
+    fdt_im = jnp.asarray(fd_im.T)
+
+    grid = (d // bd,)
+    out = pl.pallas_call(
+        _compress_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s, bd), lambda j: (0, j)),      # A tile streams
+            pl.BlockSpec((bd, kd), lambda j: (j, 0)),     # F_D.T tile streams
+            pl.BlockSpec((bd, kd), lambda j: (j, 0)),
+            pl.BlockSpec((ks, s), lambda j: (0, 0)),      # F_S resident
+            pl.BlockSpec((ks, s), lambda j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ks, kd), lambda j: (0, 0)),
+            pl.BlockSpec((ks, kd), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ks, kd), jnp.float32),
+            jax.ShapeDtypeStruct((ks, kd), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((s, kd), jnp.float32),
+            pltpu.VMEM((s, kd), jnp.float32),
+        ],
+        interpret=True,
+    )(a.astype(jnp.float32), fdt_re, fdt_im, jnp.asarray(fs_re), jnp.asarray(fs_im))
+    return out[0], out[1]
+
+
+# ---------------------------------------------------------------------------
+# decompress:  (re, im)[K_S, K_D] -> A'[S, D]
+# ---------------------------------------------------------------------------
+
+def _decompress_kernel(re_ref, im_ref, bs_re_ref, bs_im_ref,
+                       bdt_re_ref, bdt_im_ref, out_ref, c_re, c_im):
+    """Grid step j: on the first step lift the block through the
+    sequence-axis panel (C = B_S @ block, VMEM-resident); every step
+    emits one D-tile of A' = Re(C @ B_D.T)."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _lift():
+        br, bi = re_ref[...], im_ref[...]
+        bs_re, bs_im = bs_re_ref[...], bs_im_ref[...]
+        c_re[...] = bs_re @ br - bs_im @ bi
+        c_im[...] = bs_re @ bi + bs_im @ br
+
+    out_ref[...] = c_re[...] @ bdt_re_ref[...] - c_im[...] @ bdt_im_ref[...]
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def fc_decompress(re: jnp.ndarray, im: jnp.ndarray, s: int, d: int,
+                  block_d: int | None = None):
+    """Pallas truncated-IDFT reconstruction of A'[S, D] from the block."""
+    ks, kd = re.shape
+    bd = _block_d(d, block_d)
+    _, _, bs_re, bs_im = _panels(s, ks)  # [S, KS]
+    _, _, bd_re, bd_im = _panels(d, kd)  # [D, KD]
+    bdt_re = jnp.asarray(bd_re.T)  # [KD, D]
+    bdt_im = jnp.asarray(bd_im.T)
+
+    grid = (d // bd,)
+    out = pl.pallas_call(
+        _decompress_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ks, kd), lambda j: (0, 0)),
+            pl.BlockSpec((ks, kd), lambda j: (0, 0)),
+            pl.BlockSpec((s, ks), lambda j: (0, 0)),
+            pl.BlockSpec((s, ks), lambda j: (0, 0)),
+            pl.BlockSpec((kd, bd), lambda j: (0, j)),
+            pl.BlockSpec((kd, bd), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((s, bd), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((s, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((s, kd), jnp.float32),
+            pltpu.VMEM((s, kd), jnp.float32),
+        ],
+        interpret=True,
+    )(re.astype(jnp.float32), im.astype(jnp.float32),
+      jnp.asarray(bs_re), jnp.asarray(bs_im), bdt_re, bdt_im)
+    return out
+
+
+def fc_compress_matmul(a: jnp.ndarray, ks: int, kd: int):
+    """Truncated-DFT compress as two plain jnp matmuls (no pallas).
+
+    This is the Table-IV "hardware" timing proxy: XLA lowers it to its
+    optimized dense kernels, standing in for a cuFFT/FPGA offload the
+    way the MXU would on a real TPU (DESIGN.md §2).  Identical math to
+    `fc_compress`.
+    """
+    s, d = a.shape
+    fs_re, fs_im, _, _ = _panels(s, ks)
+    fd_re, fd_im, _, _ = _panels(d, kd)
+    a = a.astype(jnp.float32)
+    t_re = a @ jnp.asarray(fd_re.T)
+    t_im = a @ jnp.asarray(fd_im.T)
+    out_re = jnp.asarray(fs_re) @ t_re - jnp.asarray(fs_im) @ t_im
+    out_im = jnp.asarray(fs_re) @ t_im + jnp.asarray(fs_im) @ t_re
+    return out_re, out_im
+
+
+def fc_decompress_matmul(re: jnp.ndarray, im: jnp.ndarray, s: int, d: int):
+    """Inverse of `fc_compress_matmul` (real part of the lift)."""
+    ks, kd = re.shape
+    _, _, bs_re, bs_im = _panels(s, ks)
+    _, _, bd_re, bd_im = _panels(d, kd)
+    c_re = jnp.asarray(bs_re) @ re - jnp.asarray(bs_im) @ im
+    c_im = jnp.asarray(bs_re) @ im + jnp.asarray(bs_im) @ re
+    return c_re @ jnp.asarray(bd_re.T) - c_im @ jnp.asarray(bd_im.T)
+
+
+def fc_roundtrip(a: jnp.ndarray, ks: int, kd: int) -> jnp.ndarray:
+    re, im = fc_compress(a, ks, kd)
+    return fc_decompress(re, im, a.shape[0], a.shape[1])
+
+
+def vmem_footprint_bytes(s: int, d: int, ks: int, kd: int,
+                         block_d: int | None = None) -> dict:
+    """Static VMEM budget of the compress schedule (EXPERIMENTS.md §Perf).
+
+    Resident: F_S panel (2·KS·S), T accumulator (2·S·KD), output block
+    (2·KS·KD); streamed per step: A tile (S·BD) + F_D.T tile (2·BD·KD).
+    """
+    bd = _block_d(d, block_d)
+    f32 = 4
+    resident = (2 * ks * s + 2 * s * kd + 2 * ks * kd) * f32
+    streamed = (s * bd + 2 * bd * kd) * f32
+    macs = ks * s * d * 2 + ks * d * kd * 4  # complex folds
+    return {
+        "block_d": bd,
+        "resident_bytes": resident,
+        "streamed_bytes_per_step": streamed,
+        "total_vmem_bytes": resident + 2 * streamed,  # double-buffered stream
+        "mac_count": macs,
+    }

@@ -1,0 +1,134 @@
+"""Pure-jnp oracles for every pallas kernel.
+
+These are the CORE correctness signal: pytest (with hypothesis sweeps)
+asserts `kernels.* == ref.*` to tolerance, and `aot.py` dumps golden
+vectors computed with these refs that the rust test-suite replays
+against its native codec implementations.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# FourierCompress — centred truncated 2-D FFT (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def freq_indices(n: int, k: int) -> np.ndarray:
+    """The k lowest-|frequency| DFT bins of an n-point axis, k odd.
+
+    Returns [0, 1, .., h, n-h, .., n-1] with h = (k-1)//2 — i.e. the
+    fftshift-centred block.  The set is closed under u -> (n-u) mod n,
+    so the truncated spectrum of a real signal stays conjugate-
+    symmetric and its inverse transform is exactly real.
+    """
+    if k < 1 or k > n:
+        raise ValueError(f"k={k} out of range for n={n}")
+    if k == n:  # full axis — every bin kept, trivially conjugate-closed
+        return np.arange(n, dtype=np.int32)
+    if k % 2 == 0:
+        raise ValueError(f"k={k} must be odd (conjugate closure)")
+    h = (k - 1) // 2
+    return np.concatenate([np.arange(0, h + 1), np.arange(n - h, n)]).astype(np.int32)
+
+
+def fc_compress_ref(a: jnp.ndarray, ks: int, kd: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """A[S,D] -> (re, im)[K_S, K_D]: FFT2 then gather the centred block."""
+    s, d = a.shape
+    spec = jnp.fft.fft2(a)
+    u = jnp.asarray(freq_indices(s, ks))
+    v = jnp.asarray(freq_indices(d, kd))
+    block = spec[jnp.ix_(u, v)]
+    return jnp.real(block).astype(jnp.float32), jnp.imag(block).astype(jnp.float32)
+
+
+def fc_decompress_ref(re: jnp.ndarray, im: jnp.ndarray, s: int, d: int) -> jnp.ndarray:
+    """(re, im)[K_S,K_D] -> A'[S,D]: scatter, IFFT2, take the real part.
+
+    With the centred (conjugate-closed) frequency set, the imaginary
+    part of the inverse transform is identically zero for blocks that
+    came from a real signal; `real` only discards numerical dust.
+    """
+    ks, kd = re.shape
+    u = jnp.asarray(freq_indices(s, ks))
+    v = jnp.asarray(freq_indices(d, kd))
+    spec = jnp.zeros((s, d), dtype=jnp.complex64)
+    spec = spec.at[jnp.ix_(u, v)].set(re + 1j * im)
+    return jnp.real(jnp.fft.ifft2(spec)).astype(jnp.float32)
+
+
+def dft_matrices(n: int, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Forward/backward truncated DFT panels for the matmul formulation.
+
+    fwd[k, n] has rows exp(-2πi u_j s / n) over the centred bins u_j;
+    bwd[n, k] = exp(+2πi u_j s / n) / n.  Then
+
+        block = fwd_S @ A @ fwd_D.T        (compress)
+        A'    = Re( bwd_S @ block @ bwd_D.T )   (decompress)
+    """
+    u = freq_indices(n, k).astype(np.float64)
+    s = np.arange(n, dtype=np.float64)
+    ang = 2.0 * np.pi * np.outer(u, s) / n
+    fwd = np.exp(-1j * ang)
+    bwd = (np.exp(1j * ang) / n).T
+    return fwd.astype(np.complex64), bwd.astype(np.complex64)
+
+
+def fc_compress_matmul_ref(a: jnp.ndarray, ks: int, kd: int):
+    """Same math as fc_compress_ref via two dense matmuls (MXU form)."""
+    s, d = a.shape
+    fs, _ = dft_matrices(s, ks)
+    fd, _ = dft_matrices(d, kd)
+    block = jnp.asarray(fs) @ a.astype(jnp.complex64) @ jnp.asarray(fd).T
+    return jnp.real(block).astype(jnp.float32), jnp.imag(block).astype(jnp.float32)
+
+
+def fc_decompress_matmul_ref(re: jnp.ndarray, im: jnp.ndarray, s: int, d: int):
+    ks, kd = re.shape
+    _, bs = dft_matrices(s, ks)
+    _, bd = dft_matrices(d, kd)
+    block = (re + 1j * im).astype(jnp.complex64)
+    return jnp.real(jnp.asarray(bs) @ block @ jnp.asarray(bd).T).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Baseline codecs (golden vectors + python-side sanity checks)
+# ---------------------------------------------------------------------------
+
+def topk_ref(a: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Keep the k largest-|.| entries of A (stable tie-break), zero the rest."""
+    flat = a.reshape(-1)
+    if k >= flat.shape[0]:
+        return a
+    order = jnp.argsort(-jnp.abs(flat), stable=True)
+    keep = jnp.zeros(flat.shape, dtype=bool).at[order[:k]].set(True)
+    return (flat * keep).reshape(a.shape)
+
+
+def svd_rank_r_ref(a: jnp.ndarray, r: int) -> jnp.ndarray:
+    u, s, vt = jnp.linalg.svd(a, full_matrices=False)
+    return (u[:, :r] * s[:r]) @ vt[:r, :]
+
+
+# ---------------------------------------------------------------------------
+# Transformer building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x / jnp.sqrt(ms + eps)) * w
+
+
+def causal_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """q,k,v: [H, S, hd] (kv already expanded to H heads). Causal softmax."""
+    h, s, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask[None, :, :], logits, jnp.float32(-1e30))
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    probs = jnp.exp(logits - m)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)

@@ -1,0 +1,50 @@
+"""L1 — fused RMSNorm pallas kernel.
+
+Row-parallel over a (rows, D) view of the activations; one grid step
+normalises a tile of rows entirely in VMEM (single read of x, fused
+square/mean/rsqrt/scale — the memory-bound fusion the paper's client
+device wants on the layer-1 path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * (1.0 / jnp.sqrt(ms + eps)) * w_ref[...]
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5,
+            block_rows: int | None = None) -> jnp.ndarray:
+    """RMSNorm over the last axis of x[..., D] with weight w[D]."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = block_rows or DEFAULT_BLOCK_ROWS
+    if rows % br != 0:
+        br = rows
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), jnp.float32),
+        interpret=True,
+    )(x2.astype(jnp.float32), w.astype(jnp.float32))
+    return out.reshape(orig_shape)

@@ -1,0 +1,293 @@
+"""L2 — the Llama-style decoder-only LM (build-time jax).
+
+The model is written so that every weight is an explicit function
+argument: the AOT artifacts (`aot.py`) close over *shapes* only, and
+the rust runtime feeds weights loaded from `.fcw` files at execution
+time.  One `layer_fwd` HLO therefore serves all layers of a model,
+which is what lets the rust eval harness pick ANY split point
+(DESIGN.md §3).
+
+Weight layout per layer (canonical argument order — the manifest and
+the rust side both rely on it):
+
+    ln1, wq, wk, wv, wo, [bq, bk, bv,] ln2, w_gate, w_up, w_down
+
+Model-level: tok_emb [V, D], final_norm [D], lm_head [D, V].
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import ref as kref
+from .kernels.attention import causal_attention as pallas_attention
+from .kernels.fourier import fc_compress, fc_decompress
+from .kernels.rmsnorm import rmsnorm as pallas_rmsnorm
+
+LAYER_WEIGHTS = ("ln1", "wq", "wk", "wv", "wo", "ln2", "w_gate", "w_up", "w_down")
+LAYER_WEIGHTS_BIAS = ("ln1", "wq", "wk", "wv", "bq", "bk", "bv", "wo",
+                      "ln2", "w_gate", "w_up", "w_down")
+
+
+def layer_weight_names(cfg: ModelConfig) -> tuple[str, ...]:
+    return LAYER_WEIGHTS_BIAS if cfg.qkv_bias else LAYER_WEIGHTS
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key=None) -> dict[str, jnp.ndarray]:
+    """Scaled-normal init; names are `tok_emb`, `layers.{i}.{w}`,
+    `final_norm`, `lm_head`."""
+    key = key if key is not None else jax.random.PRNGKey(cfg.seed)
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    kv = cfg.n_kv_heads * cfg.head_dim
+    params: dict[str, jnp.ndarray] = {}
+
+    def nrm(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale)
+
+    keys = jax.random.split(key, 3 + cfg.n_layers)
+    params["tok_emb"] = nrm(keys[0], (v, d), 0.02)
+    params["final_norm"] = jnp.ones((d,), jnp.float32)
+    params["lm_head"] = nrm(keys[1], (d, v), 1.0 / math.sqrt(d))
+    out_scale = 1.0 / math.sqrt(2.0 * cfg.n_layers)
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[3 + i], 8)
+        p = f"layers.{i}."
+        params[p + "ln1"] = jnp.ones((d,), jnp.float32)
+        params[p + "wq"] = nrm(lk[0], (d, d), 1.0 / math.sqrt(d))
+        params[p + "wk"] = nrm(lk[1], (d, kv), 1.0 / math.sqrt(d))
+        params[p + "wv"] = nrm(lk[2], (d, kv), 1.0 / math.sqrt(d))
+        params[p + "wo"] = nrm(lk[3], (d, d), out_scale / math.sqrt(d))
+        if cfg.qkv_bias:
+            params[p + "bq"] = jnp.zeros((d,), jnp.float32)
+            params[p + "bk"] = jnp.zeros((kv,), jnp.float32)
+            params[p + "bv"] = jnp.zeros((kv,), jnp.float32)
+        params[p + "ln2"] = jnp.ones((d,), jnp.float32)
+        params[p + "w_gate"] = nrm(lk[4], (d, f), 1.0 / math.sqrt(d))
+        params[p + "w_up"] = nrm(lk[5], (d, f), 1.0 / math.sqrt(d))
+        params[p + "w_down"] = nrm(lk[6], (f, d), out_scale / math.sqrt(f))
+    return params
+
+
+def layer_params(params: dict, cfg: ModelConfig, i: int) -> list[jnp.ndarray]:
+    return [params[f"layers.{i}.{n}"] for n in layer_weight_names(cfg)]
+
+
+# ---------------------------------------------------------------------------
+# layer-1 spectral bottleneck (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def lowpass_last(w: jnp.ndarray, bins: int) -> jnp.ndarray:
+    """Project rows of w onto the lowest `bins` rfft bins of the last axis."""
+    f = jnp.fft.rfft(w, axis=-1)
+    mask = (jnp.arange(f.shape[-1]) < bins).astype(f.dtype)
+    return jnp.fft.irfft(f * mask, n=w.shape[-1], axis=-1).astype(jnp.float32)
+
+
+L1_PROJECTED = ("tok_emb", "layers.0.wo", "layers.0.w_down")
+
+
+def project_l1(params: dict, cfg: ModelConfig) -> dict:
+    """Constrain every residual-stream contribution up to the layer-1
+    boundary (embeddings + layer-0 attention/MLP outputs) to the lowest
+    `cfg.l1_freq_bins` hidden-axis frequencies.
+
+    Training runs through this reparameterisation, so gradients stay in
+    the subspace and the layer-1 activation is *exactly* band-limited
+    along d — the tiny-model analogue of the early-layer spectral
+    concentration the paper measures on Llama 3 / Qwen2.5.  Deeper
+    layers are unconstrained, so compressibility decays with depth the
+    same way it does in the paper (Fig 2/4).
+    """
+    out = dict(params)
+    for k in L1_PROJECTED:
+        out[k] = lowpass_last(params[k], cfg.l1_freq_bins)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rope_tables(seq: int, head_dim: int, theta: float):
+    """cos/sin [S, hd/2] — computed with numpy so they fold to constants."""
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+    ang = np.outer(np.arange(seq, dtype=np.float64), inv)
+    return (jnp.asarray(np.cos(ang), jnp.float32),
+            jnp.asarray(np.sin(ang), jnp.float32))
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, H, S, hd] rotated pairwise (x0,x1),(x2,x3),.."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    r1 = x1 * c - x2 * s
+    r2 = x1 * s + x2 * c
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+
+
+def _rmsnorm(x, w, eps, use_pallas):
+    if use_pallas:
+        return pallas_rmsnorm(x, w, eps)
+    return kref.rmsnorm_ref(x, w, eps)
+
+
+def _attention(q, k, v, use_pallas):
+    """q,k,v: [B, H, S, hd] -> [B, H, S, hd]"""
+    if use_pallas:
+        return jax.vmap(pallas_attention)(q, k, v)
+    return jax.vmap(kref.causal_attention_ref)(q, k, v)
+
+
+def layer_fwd(cfg: ModelConfig, h: jnp.ndarray, *w, use_pallas: bool = False
+              ) -> jnp.ndarray:
+    """One transformer block over h[B, S, D]; weights in canonical order."""
+    names = layer_weight_names(cfg)
+    p = dict(zip(names, w))
+    b, s, d = h.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    x = _rmsnorm(h, p["ln1"], cfg.rms_eps, use_pallas)
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, nkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, nkv, hd).transpose(0, 2, 1, 3)
+    cos, sin = rope_tables(s, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if nkv != nh:
+        rep = nh // nkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    attn = _attention(q, k, v, use_pallas)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, d)
+    h = h + attn @ p["wo"]
+
+    x = _rmsnorm(h, p["ln2"], cfg.rms_eps, use_pallas)
+    gate = x @ p["w_gate"]
+    up = x @ p["w_up"]
+    h = h + (jax.nn.silu(gate) * up) @ p["w_down"]
+    return h
+
+
+def embed(tokens: jnp.ndarray, tok_emb: jnp.ndarray) -> jnp.ndarray:
+    return tok_emb[tokens]
+
+
+def head(cfg: ModelConfig, h: jnp.ndarray, final_norm: jnp.ndarray,
+         lm_head: jnp.ndarray, use_pallas: bool = False) -> jnp.ndarray:
+    x = _rmsnorm(h, final_norm, cfg.rms_eps, use_pallas)
+    return x @ lm_head
+
+
+# ---------------------------------------------------------------------------
+# whole-model forward (training + goldens)
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+            use_pallas: bool = False) -> jnp.ndarray:
+    """tokens[B, S] -> logits[B, S, V]."""
+    h = embed(tokens, params["tok_emb"])
+    for i in range(cfg.n_layers):
+        h = layer_fwd(cfg, h, *layer_params(params, cfg, i), use_pallas=use_pallas)
+    return head(cfg, h, params["final_norm"], params["lm_head"], use_pallas)
+
+
+def activations(cfg: ModelConfig, params: dict, tokens: jnp.ndarray
+                ) -> list[jnp.ndarray]:
+    """Per-layer activation tensors [B, S, D] AFTER each block (layer 1 ==
+    index 0) — the quantities the paper compresses/analyses (Fig 2)."""
+    h = embed(tokens, params["tok_emb"])
+    acts = []
+    for i in range(cfg.n_layers):
+        h = layer_fwd(cfg, h, *layer_params(params, cfg, i))
+        acts.append(h)
+    return acts
+
+
+def split_forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+                  split: int, ks: int, kd: int) -> jnp.ndarray:
+    """Reference split pipeline: client layers [0, split), FC codec on the
+    boundary activation, server layers [split, L).  Golden for the rust
+    end-to-end parity test."""
+    h = embed(tokens, params["tok_emb"])
+    for i in range(split):
+        h = layer_fwd(cfg, h, *layer_params(params, cfg, i))
+
+    def codec(a):
+        re, im = kref.fc_compress_ref(a, ks, kd)
+        return kref.fc_decompress_ref(re, im, a.shape[0], a.shape[1])
+
+    h = jax.vmap(codec)(h)
+    for i in range(split, cfg.n_layers):
+        h = layer_fwd(cfg, h, *layer_params(params, cfg, i))
+    return head(cfg, h, params["final_norm"], params["lm_head"])
+
+
+# ---------------------------------------------------------------------------
+# fused serving path (split k=1): pallas codec lowered into the artifacts
+# ---------------------------------------------------------------------------
+
+def client_fused(cfg: ModelConfig, tokens: jnp.ndarray, tok_emb: jnp.ndarray,
+                 layer0: list[jnp.ndarray], ks: int, kd: int):
+    """tokens[B,S] -> (re, im)[B, K_S, K_D]: embed + layer 1 + pallas
+    fc_compress, one HLO module — the device-side request path."""
+    h = embed(tokens, tok_emb)
+    h = layer_fwd(cfg, h, *layer0)
+    re, im = jax.vmap(lambda a: fc_compress(a, ks, kd))(h)
+    return re, im
+
+
+def server_fused(cfg: ModelConfig, re: jnp.ndarray, im: jnp.ndarray,
+                 stacked: list[jnp.ndarray], final_norm: jnp.ndarray,
+                 lm_head: jnp.ndarray, seq: int):
+    """(re, im)[B,K_S,K_D] + stacked layer weights [L-1, ...] -> logits.
+
+    Layers 2..L run under lax.scan over the stacked weights (bounds HLO
+    size/compile time); reconstruction uses the pallas fc_decompress.
+    """
+    d = cfg.d_model
+    h = jax.vmap(lambda r, i_: fc_decompress(r, i_, seq, d))(re, im)
+
+    def body(hh, ws):
+        return layer_fwd(cfg, hh, *ws), None
+
+    h, _ = jax.lax.scan(body, h, tuple(stacked))
+    return head(cfg, h, final_norm, lm_head)
+
+
+def stack_layer_params(params: dict, cfg: ModelConfig, lo: int, hi: int
+                       ) -> list[jnp.ndarray]:
+    """Stack weights of layers [lo, hi) along a new leading axis for scan."""
+    names = layer_weight_names(cfg)
+    return [jnp.stack([params[f"layers.{i}.{n}"] for i in range(lo, hi)])
+            for n in names]
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+            targets: jnp.ndarray, pad_id: int) -> jnp.ndarray:
+    logits = forward(cfg, project_l1(params, cfg), tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != pad_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,67 @@
+"""`.fcw` tensor container — the python↔rust weight/golden interchange.
+
+Layout (little-endian):
+
+    magic   b"FCW1"
+    u32     n_tensors
+    per tensor:
+        u16     name_len
+        bytes   name (utf-8)
+        u8      dtype   (0 = f32, 1 = i32)
+        u8      ndim
+        u32*    dims
+        bytes   row-major payload
+
+Deliberately trivial so the rust reader (`rust/src/tensor/io.rs`) stays
+dependency-free.  Used for model weights, golden test vectors, and any
+array the experiment drivers exchange with the build step.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"FCW1"
+DTYPES = {0: np.float32, 1: np.int32}
+DTYPE_IDS = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_fcw(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.asarray(arr)
+            if arr.dtype == np.float64:
+                arr = arr.astype(np.float32)
+            if arr.dtype in (np.int64, np.uint32, np.int16, np.uint8):
+                arr = arr.astype(np.int32)
+            if arr.dtype not in DTYPE_IDS:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPE_IDS[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(np.ascontiguousarray(arr).tobytes())
+
+
+def read_fcw(path: str) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (nl,) = struct.unpack("<H", f.read(2))
+            name = f.read(nl).decode("utf-8")
+            did, nd = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{nd}I", f.read(4 * nd)) if nd else ()
+            dt = np.dtype(DTYPES[did])
+            count = int(np.prod(dims)) if dims else 1
+            arr = np.frombuffer(f.read(count * dt.itemsize), dtype=dt)
+            out[name] = arr.reshape(dims).copy()
+    return out

@@ -1,0 +1,146 @@
+"""Build-time trainer for the four stand-in models.
+
+Hand-rolled AdamW + cosine schedule (no optax in the image).  Trains on
+random windows of the fact-world corpus; logs the loss curve (recorded
+in EXPERIMENTS.md) and dumps weights as `.fcw`.
+
+Run directly for one model:  python -m compile.train --model llamette-s
+`aot.py` invokes train_model() for all four when weights are missing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets as D
+from . import model as M
+from . import tensor_io
+from .configs import MODELS, PAD_ID, ModelConfig, TrainConfig
+
+
+def corpus_tokens(seed: int = 7) -> np.ndarray:
+    world = D.World(seed)
+    text = D.render_corpus(world, seed=seed + 4)
+    return np.asarray(D.encode(text), dtype=np.int32)
+
+
+def sample_batch(tokens: np.ndarray, rng: np.random.Generator, batch: int,
+                 seq: int) -> tuple[np.ndarray, np.ndarray]:
+    """Random corpus windows; x = window, y = next-token targets."""
+    starts = rng.integers(0, len(tokens) - seq - 1, size=batch)
+    x = np.stack([tokens[s:s + seq] for s in starts])
+    y = np.stack([tokens[s + 1:s + seq + 1] for s in starts])
+    return x, y
+
+
+def adamw_init(params: dict) -> dict:
+    return {
+        "m": {k: jnp.zeros_like(v) for k, v in params.items()},
+        "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_at(step, tc: TrainConfig):
+    warm = jnp.minimum(1.0, (step + 1) / tc.warmup)
+    prog = jnp.clip((step - tc.warmup) / max(1, tc.steps - tc.warmup), 0.0, 1.0)
+    return tc.lr * warm * (0.5 * (1.0 + jnp.cos(math.pi * prog)))
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    decay_skip = ("ln1", "ln2", "final_norm", "bq", "bk", "bv")
+
+    @jax.jit
+    def step(params, opt, x, y):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, x, y, PAD_ID))(params)
+        # global-norm clip
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads.values()))
+        scale = jnp.minimum(1.0, tc.grad_clip / (gn + 1e-9))
+        t = opt["t"] + 1
+        lr = lr_at(t, tc)
+        new_p, new_m, new_v = {}, {}, {}
+        for k, g in grads.items():
+            g = g * scale
+            m = b1 * opt["m"][k] + (1 - b1) * g
+            v = b2 * opt["v"][k] + (1 - b2) * g * g
+            mh = m / (1 - b1 ** t)
+            vh = v / (1 - b2 ** t)
+            upd = mh / (jnp.sqrt(vh) + eps)
+            if not any(k.endswith(sfx) for sfx in decay_skip):
+                upd = upd + tc.weight_decay * params[k]
+            new_p[k] = params[k] - lr * upd
+            new_m[k], new_v[k] = m, v
+        return new_p, {"m": new_m, "v": new_v, "t": t}, loss, gn
+
+    return step
+
+
+def train_model(cfg: ModelConfig, tc: TrainConfig, out_dir: str,
+                verbose: bool = True) -> dict:
+    """Train one model; writes <name>.fcw and <name>.train.json; returns
+    the loss log."""
+    tokens = corpus_tokens()
+    rng = np.random.default_rng(tc.seed + cfg.seed)
+    params = M.init_params(cfg)
+    opt = adamw_init(params)
+    step_fn = make_train_step(cfg, tc)
+
+    log = {"model": cfg.name, "steps": [], "loss": [], "config": cfg.to_dict(),
+           "train_config": tc.__dict__, "corpus_tokens": int(len(tokens))}
+    t0 = time.time()
+    for s in range(tc.steps):
+        x, y = sample_batch(tokens, rng, tc.batch, tc.seq)
+        params, opt, loss, gn = step_fn(params, opt, jnp.asarray(x), jnp.asarray(y))
+        if s % tc.log_every == 0 or s == tc.steps - 1:
+            lv = float(loss)
+            log["steps"].append(s)
+            log["loss"].append(lv)
+            if verbose:
+                print(f"[{cfg.name}] step {s:4d} loss {lv:.4f} "
+                      f"gnorm {float(gn):.2f} ({time.time() - t0:.0f}s)")
+    log["wall_seconds"] = time.time() - t0
+
+    # Persist the EFFECTIVE weights (post layer-1 spectral projection):
+    # everything downstream — artifacts, rust runtime — consumes these,
+    # and forward(effective) == the reparameterised training forward.
+    params = M.project_l1(params, cfg)
+    os.makedirs(out_dir, exist_ok=True)
+    tensor_io.write_fcw(os.path.join(out_dir, f"{cfg.name}.fcw"),
+                        {k: np.asarray(v) for k, v in params.items()})
+    with open(os.path.join(out_dir, f"{cfg.name}.train.json"), "w") as f:
+        json.dump(log, f, indent=1)
+    return params
+
+
+def load_or_train(cfg: ModelConfig, tc: TrainConfig, out_dir: str) -> dict:
+    path = os.path.join(out_dir, f"{cfg.name}.fcw")
+    if os.path.exists(path):
+        arrs = tensor_io.read_fcw(path)
+        return {k: jnp.asarray(v) for k, v in arrs.items()}
+    return train_model(cfg, tc, out_dir)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="llamette-s", choices=list(MODELS))
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--out", default="../artifacts/weights")
+    args = ap.parse_args()
+    tc = TrainConfig()
+    if args.steps:
+        tc = TrainConfig(steps=args.steps)
+    train_model(MODELS[args.model], tc, args.out)
+
+
+if __name__ == "__main__":
+    main()

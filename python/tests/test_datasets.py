@@ -1,0 +1,92 @@
+"""Dataset generator invariants: answerability, vocabulary closure,
+length budget, determinism, distinct choices."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import datasets as D
+from compile.configs import EVAL_SEQ, BOS_ID
+
+
+def world():
+    return D.World(7)
+
+
+def test_world_deterministic():
+    w1, w2 = D.World(7), D.World(7)
+    assert w1.facts == w2.facts and w1.friend == w2.friend
+    assert D.World(8).facts != w1.facts
+
+
+def test_corpus_nonempty_and_ascii():
+    text = D.render_corpus(world())
+    assert len(text) > 10_000
+    assert all(ord(c) < 128 for c in set(text))
+
+
+@settings(max_examples=20, deadline=None)
+@given(name=st.sampled_from(sorted(D.DATASETS)), seed=st.integers(0, 100))
+def test_items_well_formed(name, seed):
+    items = D.gen_dataset(name, world(), 16, seed=seed)
+    assert len(items) == 16
+    for it in items:
+        assert len(it["choices"]) == 4
+        assert len(set(it["choices"])) == 4
+        assert 0 <= it["answer"] < 4
+        assert it["prompt"].endswith("A")
+
+
+def test_items_fit_eval_seq():
+    w = world()
+    for name in D.DATASETS:
+        items = D.gen_dataset(name, w, 128, seed=3)
+        assert D.max_item_len(items) <= EVAL_SEQ, name
+
+
+def test_generation_deterministic():
+    w = world()
+    a = D.gen_dataset("oa", w, 32, seed=5)
+    b = D.gen_dataset("oa", w, 32, seed=5)
+    assert a == b
+    c = D.gen_dataset("oa", w, 32, seed=6)
+    assert a != c
+
+
+def test_answers_consistent_with_world():
+    w = world()
+    for it in D.gen_dataset("oa", w, 64, seed=1):
+        ent = it["prompt"].split()[1]
+        assert it["choices"][it["answer"]] == w.attr(ent, "hue")
+    for it in D.gen_dataset("ac", w, 64, seed=1):
+        toks = it["prompt"].split()
+        ent, attr = toks[3], toks[4]
+        assert it["choices"][it["answer"]] == w.attr(w.friend[ent], attr)
+
+
+def test_la_negated_value_among_choices():
+    w = world()
+    for it in D.gen_dataset("la", w, 64, seed=2):
+        neg = it["prompt"].split()[4]
+        assert neg in it["choices"]
+        assert it["choices"][it["answer"]] != neg
+
+
+def test_pa_answer_is_bigger_entity():
+    w = world()
+    for it in D.gen_dataset("pa", w, 64, seed=2):
+        t = it["prompt"].split()
+        a, sa, b, sb = t[0], t[2], t[4], t[6]
+        win = it["choices"][it["answer"]]
+        assert win in (a, b)
+        assert D.SIZE_RANK[w.attr(win, "size")] == max(
+            D.SIZE_RANK[sa], D.SIZE_RANK[sb])
+
+
+@settings(max_examples=30, deadline=None)
+@given(text=st.text(alphabet=st.characters(min_codepoint=32, max_codepoint=126),
+                    max_size=80))
+def test_tokenizer_roundtrip(text):
+    assert D.decode(D.encode(text)) == text
+    ids = D.encode_prompt(text)
+    assert ids[0] == BOS_ID
+    assert all(0 <= i < 259 for i in ids)

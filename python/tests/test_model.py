@@ -1,0 +1,154 @@
+"""L2 correctness: model forward paths, split/fused parity, the
+layer-1 spectral bottleneck, and pallas-vs-jnp agreement."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.configs import MODELS, fc_block, achieved_ratio
+from compile.kernels import ref as kref
+
+
+def toks(b, s, seed=0, vocab=259):
+    return jnp.asarray(np.random.default_rng(seed).integers(0, vocab, (b, s)),
+                       jnp.int32)
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = MODELS["llamette-s"]
+    return cfg, M.init_params(cfg)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = MODELS["qwenette-s"]
+    return cfg, M.init_params(cfg)
+
+
+def test_forward_shapes(small):
+    cfg, p = small
+    lg = M.forward(cfg, p, toks(2, 32))
+    assert lg.shape == (2, 32, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_qwen_forward_shapes(qwen):
+    cfg, p = qwen
+    assert cfg.qkv_bias and cfg.n_kv_heads != cfg.n_heads
+    lg = M.forward(cfg, p, toks(2, 16))
+    assert lg.shape == (2, 16, cfg.vocab_size)
+
+
+def test_param_count_matches_config(small):
+    cfg, p = small
+    assert cfg.n_params() == sum(int(np.prod(v.shape)) for v in p.values())
+
+
+def test_causality(small):
+    """Changing a future token must not change past logits."""
+    cfg, p = small
+    t1 = toks(1, 24, 1)
+    t2 = t1.at[0, 20].set((t1[0, 20] + 1) % cfg.vocab_size)
+    l1 = M.forward(cfg, p, t1)
+    l2 = M.forward(cfg, p, t2)
+    np.testing.assert_allclose(np.asarray(l1[0, :20]), np.asarray(l2[0, :20]),
+                               rtol=1e-4, atol=1e-4)
+    assert np.max(np.abs(np.asarray(l1[0, 20:]) - np.asarray(l2[0, 20:]))) > 1e-3
+
+
+def test_pallas_kernels_match_jnp(small):
+    cfg, p = small
+    t = toks(1, 16, 3)
+    l_jnp = M.forward(cfg, p, t, use_pallas=False)
+    l_pal = M.forward(cfg, p, t, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(l_jnp), np.asarray(l_pal),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_attention_kernel_vs_ref():
+    rng = np.random.default_rng(0)
+    q, k, v = (jnp.asarray(rng.standard_normal((4, 32, 16)), jnp.float32)
+               for _ in range(3))
+    from compile.kernels.attention import causal_attention
+    out = causal_attention(q, k, v)
+    refo = kref.causal_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(refo),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rmsnorm_kernel_vs_ref():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((3, 8, 96)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(96), jnp.float32)
+    from compile.kernels.rmsnorm import rmsnorm
+    np.testing.assert_allclose(np.asarray(rmsnorm(x, w)),
+                               np.asarray(kref.rmsnorm_ref(x, w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_l1_projection_bandlimits_activation(small):
+    cfg, p = small
+    p = M.project_l1(p, cfg)
+    acts = M.activations(cfg, p, toks(1, 32, 7))
+    a = np.asarray(acts[0][0])  # layer-1 activation [S, D]
+    spec = np.fft.rfft(a, axis=-1)
+    assert np.max(np.abs(spec[:, cfg.l1_freq_bins:])) < 1e-3 * np.max(np.abs(spec))
+
+
+def test_split_forward_lossless_at_band(small):
+    """FC block covering the full sequence axis and the model's layer-1
+    band must reproduce full-model logits exactly (to fp32 dust)."""
+    cfg, p = small
+    p = M.project_l1(p, cfg)
+    t = toks(2, 32, 9)
+    kd = 2 * cfg.l1_freq_bins - 1
+    full = M.forward(cfg, p, t)
+    split = M.split_forward(cfg, p, t, 1, 32, kd)
+    np.testing.assert_allclose(np.asarray(split), np.asarray(full),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_fused_serving_matches_split(small):
+    cfg, p = small
+    p = M.project_l1(p, cfg)
+    t = toks(1, 16, 11)
+    ks, kd = fc_block(16, cfg.d_model, 8.0, kd_hint=2 * cfg.l1_freq_bins - 1)
+    re, im = M.client_fused(cfg, t, p["tok_emb"], M.layer_params(p, cfg, 0),
+                            ks, kd)
+    stacked = M.stack_layer_params(p, cfg, 1, cfg.n_layers)
+    fused = M.server_fused(cfg, re, im, stacked, p["final_norm"],
+                           p["lm_head"], 16)
+    split = M.split_forward(cfg, p, t, 1, ks, kd)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(split),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_fc_block_accounting():
+    for s in (16, 32, 48, 64):
+        for ratio in (6.0, 8.0, 10.0):
+            ks, kd = fc_block(s, 128, ratio, kd_hint=15)
+            assert 1 <= ks <= s and 1 <= kd <= 128
+            assert kd % 2 == 1
+            assert ks == s or ks % 2 == 1
+            got = achieved_ratio(s, 128, ks, kd)
+            assert got >= ratio * 0.8  # never undershoots badly
+
+
+def test_loss_decreases_quick():
+    from compile import train as T
+    from compile.configs import TrainConfig
+    cfg = MODELS["llamette-s"]
+    tokens = T.corpus_tokens()
+    rng = np.random.default_rng(0)
+    params = M.init_params(cfg)
+    opt = T.adamw_init(params)
+    tc = TrainConfig(steps=8, batch=4, seq=32)
+    step = T.make_train_step(cfg, tc)
+    losses = []
+    for _ in range(8):
+        x, y = T.sample_batch(tokens, rng, 4, 32)
+        params, opt, loss, _ = step(params, opt, jnp.asarray(x), jnp.asarray(y))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]

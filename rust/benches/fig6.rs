@@ -1,0 +1,97 @@
+//! Fig 6 — proportion of compression time in total response time.
+//! Composes measured codec time (from the same machinery as the
+//! Table-IV bench) with the simulated 6G transfer time of each
+//! method's payload and the measured server-side model execution, per
+//! method.  Emits results/fig6.json.
+
+use fourier_compress::codec::{self, Codec};
+use fourier_compress::coordinator::server::ServingModel;
+use fourier_compress::net::Channel;
+use fourier_compress::runtime::ArtifactStore;
+use fourier_compress::util::bench::once;
+use fourier_compress::util::json::Json;
+use fourier_compress::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    println!("== Fig 6: codec share of end-to-end response time ==");
+    let store = ArtifactStore::open("artifacts")?;
+    let serving = ServingModel::load(&store)?;
+
+    // workload: one 64-token prompt step on the serving model
+    let (s, d) = (64usize, serving.d_model);
+    let mut rng = Rng::new(7);
+    let mut a = vec![0.0f32; s * d];
+    rng.fill_normal_f32(&mut a, 1.0);
+    let channel = Channel::gbps(1.0, 100); // 1 Gbps uplink
+    let ratio = 8.0;
+
+    // measured server compute for one batch-1 step (bucket 64)
+    let bm = serving.buckets.get(&64).unwrap();
+    let item = fourier_compress::coordinator::server::GroupItem {
+        session: 0, request: 0, true_len: s,
+        re: vec![0.0; bm.ks * bm.kd], im: vec![0.0; bm.ks * bm.kd],
+        reply: std::sync::mpsc::channel().0,
+        t_rx: Instant::now(),
+    };
+    let t0 = Instant::now();
+    serving.run_group(64, &[item])?;
+    let server_time = t0.elapsed();
+    println!("server compute (layers 2..L + head): {server_time:?}");
+
+    let mut out = Json::obj();
+    println!("\n{:10} {:>12} {:>12} {:>12} {:>8}", "method", "codec", "transfer",
+             "total", "share");
+    for name in ["none", "fc", "topk", "qr", "svdllm"] {
+        let c = codec::by_name(name)?;
+        let mut payload_bytes = 0usize;
+        let codec_time = once(&format!("{name} codec"), || {
+            let p = c.compress(&a, s, d, ratio).unwrap();
+            payload_bytes = p.wire_bytes();
+            std::hint::black_box(c.decompress(&p).unwrap());
+        });
+        let codec_time = if name == "none" { Duration::ZERO } else { codec_time };
+        let transfer = channel.transfer_time(payload_bytes);
+        let total = codec_time + transfer + server_time;
+        let share = codec_time.as_secs_f64() / total.as_secs_f64();
+        println!("{:10} {:>12.3?} {:>12.3?} {:>12.3?} {:>7.1}%",
+                 name, codec_time, transfer, total, share * 100.0);
+        let mut row = Json::obj();
+        row.set("codec_s", Json::Num(codec_time.as_secs_f64()));
+        row.set("transfer_s", Json::Num(transfer.as_secs_f64()));
+        row.set("server_s", Json::Num(server_time.as_secs_f64()));
+        row.set("share", Json::Num(share));
+        out.set(name, row);
+    }
+
+    // hardware-offload proxy for fc
+    if let Some(entries) = store.manifest.path("codec_hw.entries")
+        .and_then(|v| v.as_arr()) {
+        let e = &entries[0];
+        let (hs, hd) = (e.usize_or("seq", 0), e.usize_or("hidden", 0));
+        let comp = store.get(e.get("compress_mm").unwrap().as_str().unwrap())?;
+        let deco = store.get(e.get("decompress_mm").unwrap().as_str().unwrap())?;
+        let mut big = vec![0.0f32; hs * hd];
+        rng.fill_normal_f32(&mut big, 1.0);
+        let at = fourier_compress::tensor::Tensor::f32(vec![hs, hd], big);
+        let hw = once("fc(hardware) codec", || {
+            let b = comp.run(std::slice::from_ref(&at)).unwrap();
+            std::hint::black_box(deco.run(&[b[0].clone(), b[1].clone()]).unwrap());
+        });
+        // scale hardware time to the serving activation size
+        let scaled = hw.as_secs_f64() * (s * d) as f64 / (hs * hd) as f64;
+        let transfer = channel.transfer_time(s * d * 4 / ratio as usize);
+        let total = scaled + transfer.as_secs_f64() + server_time.as_secs_f64();
+        let mut row = Json::obj();
+        row.set("codec_s", Json::Num(scaled));
+        row.set("share", Json::Num(scaled / total));
+        out.set("fc_hw", row);
+        println!("{:10} {:>12.3?} (scaled) share {:.2}%", "fc_hw",
+                 Duration::from_secs_f64(scaled), 100.0 * scaled / total);
+    }
+
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/fig6.json", out.to_string_pretty())?;
+    println!("\nwrote results/fig6.json");
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Fig 7 — multi-client scalability under varying 6G link rates, both
+//! regimes: (a) 1 compute unit (compute-bound), (b) 8 compute units
+//! (bandwidth-bound).  Prints the saturation analysis and writes
+//! results/fig7_units{1,8}.json.
+
+use fourier_compress::config::SimConfig;
+use fourier_compress::sim;
+use fourier_compress::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    std::fs::create_dir_all("results")?;
+    for units in [1usize, 8] {
+        let cfg = SimConfig {
+            compute_units: units,
+            // regime calibration (DESIGN.md §2 substitution table):
+            // 1 unit = paper's single 4090 without batching headroom;
+            // 8 units = the batched multi-GPU pipeline
+            service_per_token_s: if units == 1 { 4.0e-3 } else { 1.2e-4 },
+            ..SimConfig::default()
+        };
+        println!("\n== Fig 7({}) — {units} compute unit(s) ==",
+                 if units == 1 { 'a' } else { 'b' });
+        let j = sim::fig7(&cfg);
+        std::fs::write(format!("results/fig7_units{units}.json"),
+                       j.to_string_pretty())?;
+
+        // saturation summary: max clients with mean response < 2x the
+        // single-client latency (the paper's "supported clients" notion)
+        for &g in &cfg.link_gbps {
+            for tag in ["orig", "fc"] {
+                let means = j.get(&format!("{tag}_{g}gbps_mean_s"))
+                    .and_then(|v| v.as_arr()).unwrap();
+                let base = means[0].as_f64().unwrap_or(f64::NAN);
+                let thresh = (base * 2.0).max(0.1);
+                let mut cap = cfg.clients[0];
+                for (i, m) in means.iter().enumerate() {
+                    if m.as_f64().unwrap_or(f64::INFINITY) <= thresh {
+                        cap = cfg.clients[i];
+                    }
+                }
+                println!("  {g:>4} Gbps {tag:>5}: base {base:.3}s, \
+                          supports ~{cap} clients");
+            }
+        }
+    }
+    println!("\nwrote results/fig7_units{{1,8}}.json");
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Hot-path microbenchmarks — the §Perf iteration targets: FFT plans,
+//! 2-D transforms, conjugate-symmetric pack/unpack, wire framing,
+//! top-k selection, and the QR/SVD inner loops at eval sizes.
+
+use fourier_compress::codec::fourier::{pack_block, unpack_block, FourierCodec};
+use fourier_compress::codec::Codec;
+use fourier_compress::coordinator::protocol::Frame;
+use fourier_compress::dsp::complex::C64;
+use fourier_compress::dsp::fft::FftPlan;
+use fourier_compress::dsp::fft2d::{fft2, fft2_real};
+use fourier_compress::linalg::matrix::Mat;
+use fourier_compress::linalg::{qr_thin, svd_thin};
+use fourier_compress::util::bench::bench;
+use fourier_compress::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_secs(4);
+    let mut rng = Rng::new(1);
+
+    // 1-D FFT across the sizes the codec hits
+    for n in [64usize, 96, 128, 256, 1536, 2048, 3072] {
+        let plan = FftPlan::new(n);
+        let base: Vec<C64> = (0..n).map(|_| C64::new(rng.normal(), 0.0)).collect();
+        bench(&format!("fft1d n={n}"), 200, budget, || {
+            let mut x = base.clone();
+            plan.forward_in_place(&mut x);
+            std::hint::black_box(&x);
+        });
+    }
+
+    // 2-D FFT at eval + Table-IV sizes
+    for (r, c) in [(64usize, 128usize), (256, 2048)] {
+        let a: Vec<f32> = (0..r * c).map(|_| rng.normal() as f32).collect();
+        bench(&format!("fft2d {r}x{c}"), 50, budget, || {
+            std::hint::black_box(fft2_real(&a, r, c));
+        });
+        let mut buf: Vec<C64> = a.iter().map(|&v| C64::from_re(v as f64)).collect();
+        bench(&format!("fft2d inplace {r}x{c}"), 50, budget, || {
+            fft2(&mut buf, r, c);
+        });
+    }
+
+    // the full software codec round trip at serving size
+    let (s, d) = (64usize, 128usize);
+    let a: Vec<f32> = (0..s * d).map(|_| rng.normal() as f32).collect();
+    let fc = FourierCodec::with_hint(15);
+    bench("fc roundtrip 64x128 r8", 200, budget, || {
+        std::hint::black_box(fc.roundtrip(&a, s, d, 8.0).unwrap());
+    });
+
+    // pack/unpack of the serving block
+    let p = fc.compress_block(&a, s, d, 64, 15).unwrap();
+    let (re, im) = unpack_block(&p.body[4..].chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect::<Vec<_>>(), s, d, 64, 15).unwrap();
+    bench("pack_block 64x15", 500, budget, || {
+        std::hint::black_box(pack_block(&re, &im, s, d, 64, 15));
+    });
+    let packed = pack_block(&re, &im, s, d, 64, 15);
+    bench("unpack_block 64x15", 500, budget, || {
+        std::hint::black_box(unpack_block(&packed, s, d, 64, 15).unwrap());
+    });
+
+    // wire framing
+    let frame = Frame::Activation {
+        session: 1, request: 2, bucket: 64, true_len: 60, ks: 64, kd: 15,
+        packed: packed.clone(),
+    };
+    bench("frame encode+decode", 500, budget, || {
+        let enc = frame.encode();
+        let mut cur = std::io::Cursor::new(enc);
+        std::hint::black_box(Frame::read_from(&mut cur).unwrap());
+    });
+
+    // top-k selection at serving size
+    let tk = fourier_compress::codec::topk::TopkCodec;
+    bench("topk roundtrip 64x128 r8", 200, budget, || {
+        std::hint::black_box(tk.roundtrip(&a, s, d, 8.0).unwrap());
+    });
+
+    // factorizations at eval size
+    let m = Mat::from_f32(&a, s, d);
+    bench("qr_thin 64x128", 50, budget, || {
+        std::hint::black_box(qr_thin(&m));
+    });
+    bench("svd_thin 64x128", 10, budget, || {
+        std::hint::black_box(svd_thin(&m));
+    });
+
+    // matmul kernel shape used by factor reconstruction
+    let b = Mat::from_f32(&a, d, s);
+    bench("matmul 64x128x64", 100, budget, || {
+        std::hint::black_box(m.matmul(&b));
+    });
+}

@@ -1,0 +1,80 @@
+//! Table IV — total activation compression + decompression time per
+//! method across the paper's model hidden sizes (1536 / 2048 / 3072),
+//! software (native rust codecs) and hardware-offload proxy (the
+//! XLA-compiled truncated-DFT artifact).  Emits the same rows the
+//! paper reports plus results/table4.json.
+
+use fourier_compress::codec::{self, Codec};
+use fourier_compress::runtime::ArtifactStore;
+use fourier_compress::tensor::Tensor;
+use fourier_compress::util::bench::{bench, once};
+use fourier_compress::util::json::Json;
+use fourier_compress::util::rng::Rng;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    println!("== Table IV: codec compress+decompress time ==");
+    let store = ArtifactStore::open("artifacts").ok();
+    let sizes = [(256usize, 1536usize), (256, 2048), (256, 3072)];
+    let ratio = 8.0;
+    let mut out = Json::obj();
+
+    for (s, d) in sizes {
+        println!("\n-- activation {s}x{d} (ratio {ratio}) --");
+        let mut rng = Rng::new((s + d) as u64);
+        let mut a = vec![0.0f32; s * d];
+        rng.fill_normal_f32(&mut a, 1.0);
+        let mut row = Json::obj();
+
+        // fast codecs: repeated timing
+        for name in ["fc", "topk", "int8"] {
+            let c = codec::by_name(name)?;
+            let r = bench(&format!("{name}(software) {s}x{d}"), 12,
+                          Duration::from_secs(8), || {
+                let p = c.compress(&a, s, d, ratio).unwrap();
+                std::hint::black_box(c.decompress(&p).unwrap());
+            });
+            row.set(name, Json::Num(r.median.as_secs_f64()));
+        }
+        // slow factorizations: single run (matches the paper's regime
+        // where these are orders of magnitude slower)
+        for name in ["qr", "fwsvd", "asvd", "svdllm"] {
+            let c = codec::by_name(name)?;
+            let dt = once(&format!("{name}(software) {s}x{d}"), || {
+                let p = c.compress(&a, s, d, ratio).unwrap();
+                std::hint::black_box(c.decompress(&p).unwrap());
+            });
+            row.set(name, Json::Num(dt.as_secs_f64()));
+        }
+
+        // hardware-offload proxy: XLA-compiled matmul-DFT artifacts
+        if let Some(store) = &store {
+            if let Some(entries) = store.manifest.path("codec_hw.entries")
+                .and_then(|v| v.as_arr()) {
+                if let Some(e) = entries.iter().find(|e| {
+                    e.usize_or("seq", 0) == s && e.usize_or("hidden", 0) == d
+                }) {
+                    let comp = store.get(e.get("compress_mm").unwrap()
+                        .as_str().unwrap())?;
+                    let deco = store.get(e.get("decompress_mm").unwrap()
+                        .as_str().unwrap())?;
+                    let at = Tensor::f32(vec![s, d], a.clone());
+                    let r = bench(&format!("fc(hardware) {s}x{d}"), 12,
+                                  Duration::from_secs(8), || {
+                        let block = comp.run(std::slice::from_ref(&at)).unwrap();
+                        std::hint::black_box(
+                            deco.run(&[block[0].clone(), block[1].clone()])
+                                .unwrap());
+                    });
+                    row.set("fc_hw", Json::Num(r.median.as_secs_f64()));
+                }
+            }
+        }
+        out.set(&format!("{s}x{d}"), row);
+    }
+
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/table4.json", out.to_string_pretty())?;
+    println!("\nwrote results/table4.json");
+    Ok(())
+}

@@ -1,0 +1,400 @@
+//! The FourierCompress codec (software path): 2-D FFT, centred
+//! low-frequency block retention, conjugate-symmetric wire packing,
+//! zero-pad + inverse FFT reconstruction.
+//!
+//! Wire body:  u16 ks | u16 kd | f32 × (packed coefficients)
+//!
+//! Packing walks the kept frequency set in canonical (row-major over
+//! the centred index lists) order and stores, for each coefficient
+//! whose (u, v) is lexicographically <= its conjugate mirror, `re`
+//! (and `im` unless the point is self-conjugate).  The decoder
+//! regenerates mirrors, so a K_S×K_D complex block costs exactly
+//! K_S·K_D floats — this is the "conjugate symmetry-aware" transport
+//! the paper describes, applied to transmission as well as
+//! reconstruction (DESIGN.md §6).
+
+use super::{block_ratio, fc_block, freq_indices, Codec, Payload, Reader, Writer};
+use crate::dsp::complex::C64;
+
+use anyhow::{ensure, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct FourierCodec {
+    /// Calibrated hidden-axis block width (None = D/8 heuristic).
+    pub kd_hint: Option<usize>,
+}
+
+impl FourierCodec {
+    pub fn with_hint(kd_hint: usize) -> FourierCodec {
+        FourierCodec { kd_hint: Some(kd_hint) }
+    }
+
+    /// Compress with an explicit block (the eval sweeps use this).
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf): only the K_D kept spectrum
+    /// columns are needed, so after the row FFT pass the column pass
+    /// runs on K_D columns instead of all D — ~40% cheaper than a full
+    /// fft2 at the shipped block shapes.
+    pub fn compress_block(&self, a: &[f32], rows: usize, cols: usize,
+                          ks: usize, kd: usize) -> Result<Payload> {
+        ensure!(a.len() == rows * cols, "shape mismatch");
+        let ui = freq_indices(rows, ks);
+        let vi = freq_indices(cols, kd);
+
+        // row pass with the two-for-one real-FFT trick: pack row pairs
+        // (r, r+1) as re/im of ONE complex FFT and split by conjugate
+        // symmetry — halves the row-pass FFT count; only the K_D kept
+        // columns are materialised (EXPERIMENTS.md §Perf, iter 2).
+        let plan_d = crate::dsp::fft2d::plan(cols);
+        let mut narrow = vec![C64::ZERO; rows * kd]; // [rows, K_D]
+        let mut z = vec![C64::ZERO; cols];
+        let mut r = 0;
+        while r < rows {
+            let hi = (r + 1 < rows) as usize;
+            for v in 0..cols {
+                z[v] = C64::new(a[r * cols + v] as f64,
+                                if hi == 1 { a[(r + 1) * cols + v] as f64 }
+                                else { 0.0 });
+            }
+            plan_d.forward_in_place(&mut z);
+            for (j, &v) in vi.iter().enumerate() {
+                let zc = z[v];
+                let zm = z[(cols - v) % cols].conj();
+                narrow[r * kd + j] = (zc + zm).scale(0.5);
+                if hi == 1 {
+                    // (zc - zm) / (2i) = -i (zc - zm) / 2
+                    let d = (zc - zm).scale(0.5);
+                    narrow[(r + 1) * kd + j] = C64::new(d.im, -d.re);
+                }
+            }
+            r += 2;
+        }
+        // selective column pass over the K_D kept columns
+        let plan_s = crate::dsp::fft2d::plan(rows);
+        let mut block = vec![C64::ZERO; ks * kd];
+        let mut col = vec![C64::ZERO; rows];
+        for j in 0..kd {
+            for rr in 0..rows {
+                col[rr] = narrow[rr * kd + j];
+            }
+            plan_s.forward_in_place(&mut col);
+            for (i, &u) in ui.iter().enumerate() {
+                block[i * kd + j] = col[u];
+            }
+        }
+
+        let mut w = Writer::new();
+        w.u16(ks as u16);
+        w.u16(kd as u16);
+        for (i, &u) in ui.iter().enumerate() {
+            for (j, &v) in vi.iter().enumerate() {
+                let (mu, mv) = ((rows - u) % rows, (cols - v) % cols);
+                if (u, v) > (mu, mv) {
+                    continue; // mirror carries it
+                }
+                let c = block[i * kd + j];
+                w.f32(c.re as f32);
+                if (u, v) != (mu, mv) {
+                    w.f32(c.im as f32);
+                }
+            }
+        }
+        Ok(Payload { codec: "fc".into(), rows, cols, body: w.0 })
+    }
+}
+
+impl Codec for FourierCodec {
+    fn name(&self) -> &'static str {
+        "fc"
+    }
+
+    fn compress(&self, a: &[f32], rows: usize, cols: usize, ratio: f64)
+        -> Result<Payload> {
+        let (ks, kd) = fc_block(rows, cols, ratio, self.kd_hint);
+        debug_assert!(block_ratio(rows, cols, ks, kd) >= ratio * 0.8);
+        self.compress_block(a, rows, cols, ks, kd)
+    }
+
+    fn decompress(&self, p: &Payload) -> Result<Vec<f32>> {
+        let (rows, cols) = (p.rows, p.cols);
+        let mut r = Reader::new(&p.body);
+        let ks = r.u16()? as usize;
+        let kd = r.u16()? as usize;
+        ensure!(ks >= 1 && ks <= rows && kd >= 1 && kd <= cols,
+                "bad block {ks}x{kd} for {rows}x{cols}");
+        let ui = freq_indices(rows, ks);
+        let vi = freq_indices(cols, kd);
+
+        // scatter the conjugate-completed block into the (sparse) spectrum
+        let mut spec = vec![C64::ZERO; rows * cols];
+        for &u in &ui {
+            for &v in &vi {
+                let (mu, mv) = ((rows - u) % rows, (cols - v) % cols);
+                if (u, v) > (mu, mv) {
+                    continue;
+                }
+                let re = r.f32()? as f64;
+                let im = if (u, v) != (mu, mv) { r.f32()? as f64 } else { 0.0 };
+                spec[u * cols + v] = C64::new(re, im);
+                spec[mu * cols + mv] = C64::new(re, -im);
+            }
+        }
+        ensure!(r.remaining() == 0, "trailing payload bytes");
+        // inverse column pass only where columns are non-zero, then
+        // inverse row pass (EXPERIMENTS.md §Perf)
+        let plan_s = crate::dsp::fft2d::plan(rows);
+        let mut col = vec![C64::ZERO; rows];
+        for &v in &vi {
+            for rr in 0..rows {
+                col[rr] = spec[rr * cols + v];
+            }
+            plan_s.inverse_in_place(&mut col);
+            for rr in 0..rows {
+                spec[rr * cols + v] = col[rr];
+            }
+        }
+        let plan_d = crate::dsp::fft2d::plan(cols);
+        for rr in 0..rows {
+            plan_d.inverse_in_place(&mut spec[rr * cols..(rr + 1) * cols]);
+        }
+        Ok(spec.iter().map(|c| c.re as f32).collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// block pack/unpack — the serving path's wire transform
+// ---------------------------------------------------------------------------
+//
+// The fused client HLO emits the FULL (re, im) K_S×K_D block; these
+// helpers convert it to/from the non-redundant float packing used by
+// the Activation frame, so the serving path pays the same wire bytes
+// as the software codec.
+
+/// index of frequency `u` inside the centred list for (n, k)
+fn block_pos(n: usize, k: usize, u: usize) -> usize {
+    if k == n {
+        return u;
+    }
+    let h = (k - 1) / 2;
+    if u <= h {
+        u
+    } else {
+        u - (n - k)
+    }
+}
+
+/// Pack a full (re, im) block (row-major ks×kd) into the symmetric
+/// half representation.  `rows`/`cols` are the pre-compression matrix
+/// dims the block was computed for.
+pub fn pack_block(re: &[f32], im: &[f32], rows: usize, cols: usize,
+                  ks: usize, kd: usize) -> Vec<f32> {
+    let ui = freq_indices(rows, ks);
+    let vi = freq_indices(cols, kd);
+    let mut out = Vec::with_capacity(ks * kd);
+    for (i, &u) in ui.iter().enumerate() {
+        for (j, &v) in vi.iter().enumerate() {
+            let (mu, mv) = ((rows - u) % rows, (cols - v) % cols);
+            if (u, v) > (mu, mv) {
+                continue;
+            }
+            out.push(re[i * kd + j]);
+            if (u, v) != (mu, mv) {
+                out.push(im[i * kd + j]);
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_block`]: regenerate the full (re, im) planes.
+pub fn unpack_block(packed: &[f32], rows: usize, cols: usize,
+                    ks: usize, kd: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+    let ui = freq_indices(rows, ks);
+    let vi = freq_indices(cols, kd);
+    let mut re = vec![0.0f32; ks * kd];
+    let mut im = vec![0.0f32; ks * kd];
+    let mut pos = 0usize;
+    let take = |n: &mut usize| -> Result<f32> {
+        ensure!(*n < packed.len(), "packed block truncated");
+        let v = packed[*n];
+        *n += 1;
+        Ok(v)
+    };
+    for (i, &u) in ui.iter().enumerate() {
+        for (j, &v) in vi.iter().enumerate() {
+            let (mu, mv) = ((rows - u) % rows, (cols - v) % cols);
+            if (u, v) > (mu, mv) {
+                continue;
+            }
+            let r = take(&mut pos)?;
+            let iv = if (u, v) != (mu, mv) { take(&mut pos)? } else { 0.0 };
+            re[i * kd + j] = r;
+            im[i * kd + j] = iv;
+            // mirror position inside the block
+            let (mi, mj) = (block_pos(rows, ks, mu), block_pos(cols, kd, mv));
+            re[mi * kd + mj] = r;
+            im[mi * kd + mj] = -iv;
+        }
+    }
+    ensure!(pos == packed.len(), "trailing packed floats");
+    Ok((re, im))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{rand_act, rel_error};
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let (rows, cols, ks, kd) = (32usize, 128usize, 9usize, 15usize);
+        // build a conjugate-symmetric block from a real matrix
+        let a = rand_act(rows, cols, 42);
+        let spec = crate::dsp::fft2d::fft2_real(&a, rows, cols);
+        let ui = freq_indices(rows, ks);
+        let vi = freq_indices(cols, kd);
+        let mut re = vec![0.0f32; ks * kd];
+        let mut im = vec![0.0f32; ks * kd];
+        for (i, &u) in ui.iter().enumerate() {
+            for (j, &v) in vi.iter().enumerate() {
+                re[i * kd + j] = spec[u * cols + v].re as f32;
+                im[i * kd + j] = spec[u * cols + v].im as f32;
+            }
+        }
+        let packed = pack_block(&re, &im, rows, cols, ks, kd);
+        assert_eq!(packed.len(), ks * kd);
+        let (re2, im2) = unpack_block(&packed, rows, cols, ks, kd).unwrap();
+        for (a, b) in re.iter().zip(&re2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        for (a, b) in im.iter().zip(&im2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn pack_full_axis_block() {
+        // ks == rows (even full axis) exercises the k == n branch
+        let (rows, cols, ks, kd) = (16usize, 64usize, 16usize, 7usize);
+        let a = rand_act(rows, cols, 7);
+        let spec = crate::dsp::fft2d::fft2_real(&a, rows, cols);
+        let ui = freq_indices(rows, ks);
+        let vi = freq_indices(cols, kd);
+        let mut re = vec![0.0f32; ks * kd];
+        let mut im = vec![0.0f32; ks * kd];
+        for (i, &u) in ui.iter().enumerate() {
+            for (j, &v) in vi.iter().enumerate() {
+                re[i * kd + j] = spec[u * cols + v].re as f32;
+                im[i * kd + j] = spec[u * cols + v].im as f32;
+            }
+        }
+        let packed = pack_block(&re, &im, rows, cols, ks, kd);
+        // self-conjugate points: (0,0) and (rows/2, 0) -> ks*kd floats
+        assert_eq!(packed.len(), ks * kd);
+        let (re2, im2) = unpack_block(&packed, rows, cols, ks, kd).unwrap();
+        for (a, b) in re.iter().zip(&re2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        for (a, b) in im.iter().zip(&im2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn payload_floats_equal_ks_kd() {
+        let (rows, cols) = (48, 96);
+        let a = rand_act(rows, cols, 1);
+        let c = FourierCodec::default();
+        for (ks, kd) in [(5, 13), (47, 13), (48, 11), (1, 1)] {
+            let p = c.compress_block(&a, rows, cols, ks, kd).unwrap();
+            let floats = (p.body.len() - 4) / 4;
+            assert_eq!(floats, ks * kd, "block {ks}x{kd}");
+        }
+    }
+
+    #[test]
+    fn bandlimited_roundtrip_exact() {
+        // signal synthesised inside the kept band -> exact recovery
+        let (rows, cols, ks, kd) = (32usize, 96usize, 9usize, 13usize);
+        let ui = freq_indices(rows, ks);
+        let vi = freq_indices(cols, kd);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut spec = vec![C64::ZERO; rows * cols];
+        for &u in &ui {
+            for &v in &vi {
+                let (mu, mv) = ((rows - u) % rows, (cols - v) % cols);
+                if (u, v) > (mu, mv) {
+                    continue;
+                }
+                let c = if (u, v) == (mu, mv) {
+                    C64::new(rng.normal(), 0.0)
+                } else {
+                    C64::new(rng.normal(), rng.normal())
+                };
+                spec[u * cols + v] = c;
+                spec[mu * cols + mv] = c.conj();
+            }
+        }
+        crate::dsp::fft2d::ifft2(&mut spec, rows, cols);
+        let a: Vec<f32> = spec.iter().map(|c| c.re as f32).collect();
+
+        let codec = FourierCodec::default();
+        let p = codec.compress_block(&a, rows, cols, ks, kd).unwrap();
+        let out = codec.decompress(&p).unwrap();
+        assert!(rel_error(&a, &out) < 1e-5);
+    }
+
+    #[test]
+    fn full_block_is_lossless() {
+        let (rows, cols) = (16, 31);
+        let a = rand_act(rows, cols, 9);
+        let codec = FourierCodec::default();
+        let p = codec.compress_block(&a, rows, cols, rows, cols).unwrap();
+        let out = codec.decompress(&p).unwrap();
+        assert!(rel_error(&a, &out) < 1e-5);
+    }
+
+    #[test]
+    fn deterministic_bytes() {
+        let a = rand_act(24, 48, 5);
+        let codec = FourierCodec::default();
+        let p1 = codec.compress(&a, 24, 48, 8.0).unwrap();
+        let p2 = codec.compress(&a, 24, 48, 8.0).unwrap();
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn arbitrary_sizes_roundtrip() {
+        // non-pow2 both axes (bluestein path), incl. odd row counts
+        for (rows, cols) in [(31, 96), (17, 60), (48, 100), (5, 7)] {
+            let a = rand_act(rows, cols, (rows * cols) as u64);
+            let codec = FourierCodec::default();
+            let out = codec.roundtrip(&a, rows, cols, 4.0).unwrap();
+            assert_eq!(out.len(), a.len());
+            assert!(out.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn kd_hint_respected() {
+        let a = rand_act(64, 128, 6);
+        let codec = FourierCodec::with_hint(15);
+        let p = codec.compress(&a, 64, 128, 8.0).unwrap();
+        let mut r = Reader::new(&p.body);
+        let _ks = r.u16().unwrap();
+        assert_eq!(r.u16().unwrap(), 15);
+    }
+
+    #[test]
+    fn rejects_corrupt_payload() {
+        let a = rand_act(16, 32, 8);
+        let codec = FourierCodec::default();
+        let mut p = codec.compress(&a, 16, 32, 8.0).unwrap();
+        p.body.truncate(p.body.len() - 3);
+        assert!(codec.decompress(&p).is_err());
+        let mut p2 = codec.compress(&a, 16, 32, 8.0).unwrap();
+        p2.body[0] = 0xFF; // ks out of range
+        p2.body[1] = 0xFF;
+        assert!(codec.decompress(&p2).is_err());
+    }
+}

@@ -1,0 +1,397 @@
+//! Activation codecs: FourierCompress and every baseline the paper
+//! compares against (Table III/IV), all operating on a row-major
+//! `S x D` f32 activation matrix and producing a self-describing wire
+//! payload.
+//!
+//! Payload accounting follows DESIGN.md §6: the achieved ratio is
+//! `raw bytes / wire bytes` with raw = 4·S·D.  FourierCompress packs
+//! only the non-redundant half of the conjugate-symmetric block, so a
+//! K_S×K_D complex block costs K_S·K_D floats on the wire.
+
+pub mod fourier;
+pub mod lowrank;
+pub mod quant;
+pub mod topk;
+
+use anyhow::{bail, Result};
+
+/// A compressed activation as it crosses the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Payload {
+    pub codec: String,
+    pub rows: usize,
+    pub cols: usize,
+    /// Codec-specific body (the transmitted bytes).
+    pub body: Vec<u8>,
+}
+
+impl Payload {
+    pub fn wire_bytes(&self) -> usize {
+        // body + the 12-byte frame header the protocol adds
+        self.body.len() + 12
+    }
+
+    pub fn achieved_ratio(&self) -> f64 {
+        (self.rows * self.cols * 4) as f64 / self.body.len().max(1) as f64
+    }
+}
+
+/// An activation codec.  Implementations must be deterministic: the
+/// same input and ratio produce byte-identical payloads (the golden
+/// parity tests rely on it).
+pub trait Codec: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Compress `a` (rows × cols, row-major) at the target ratio.
+    fn compress(&self, a: &[f32], rows: usize, cols: usize, ratio: f64)
+        -> Result<Payload>;
+
+    /// Reconstruct the full rows × cols matrix.
+    fn decompress(&self, p: &Payload) -> Result<Vec<f32>>;
+
+    /// Convenience: compress-then-decompress (the eval harness path).
+    fn roundtrip(&self, a: &[f32], rows: usize, cols: usize, ratio: f64)
+        -> Result<Vec<f32>> {
+        self.decompress(&self.compress(a, rows, cols, ratio)?)
+    }
+}
+
+/// All codec names in the paper's comparison order.
+pub const ALL_CODECS: &[&str] =
+    &["fc", "topk", "qr", "fwsvd", "asvd", "svdllm", "int8", "none"];
+
+pub fn by_name(name: &str) -> Result<Box<dyn Codec>> {
+    Ok(match name {
+        "fc" | "fourier" => Box::new(fourier::FourierCodec::default()),
+        "topk" => Box::new(topk::TopkCodec),
+        "qr" => Box::new(lowrank::QrCodec),
+        "fwsvd" => Box::new(lowrank::SvdCodec::fwsvd()),
+        "asvd" => Box::new(lowrank::SvdCodec::asvd()),
+        "svdllm" => Box::new(lowrank::SvdCodec::svdllm()),
+        "svd" => Box::new(lowrank::SvdCodec::plain()),
+        "int8" => Box::new(quant::Int8Codec::default()),
+        "none" => Box::new(NoneCodec),
+        other => bail!("unknown codec '{other}'"),
+    })
+}
+
+/// Pass-through codec (the paper's uncompressed baseline).
+pub struct NoneCodec;
+
+impl Codec for NoneCodec {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn compress(&self, a: &[f32], rows: usize, cols: usize, _ratio: f64)
+        -> Result<Payload> {
+        let mut body = Vec::with_capacity(a.len() * 4);
+        for v in a {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        Ok(Payload { codec: "none".into(), rows, cols, body })
+    }
+
+    fn decompress(&self, p: &Payload) -> Result<Vec<f32>> {
+        if p.body.len() != p.rows * p.cols * 4 {
+            bail!("none codec: bad body size");
+        }
+        Ok(p.body
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared byte helpers
+// ---------------------------------------------------------------------------
+
+pub(crate) struct Writer(pub Vec<u8>);
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer(Vec::new())
+    }
+    pub fn u16(&mut self, v: u16) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn f32(&mut self, v: f32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub(crate) struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+    pub fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    pub fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    pub fn byte(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("payload truncated at {} (+{n})", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+// ---------------------------------------------------------------------------
+// block-size selection (port of python configs.fc_block)
+// ---------------------------------------------------------------------------
+
+fn odd_cap(x: usize, cap: usize) -> usize {
+    let mut x = x.clamp(1, cap);
+    if x % 2 == 0 {
+        if x > 1 {
+            x -= 1;
+        } else if x + 1 <= cap {
+            x += 1;
+        }
+    }
+    x
+}
+
+/// Choose (K_S, K_D) for a target ratio under conjugate-symmetric
+/// accounting (payload floats = K_S·K_D).  `kd_hint` carries the
+/// calibrated hidden-axis width (from the manifest or from
+/// [`calibrate_block`]).
+pub fn fc_block(seq: usize, hidden: usize, ratio: f64, kd_hint: Option<usize>)
+    -> (usize, usize) {
+    let budget = ((seq * hidden) as f64 / ratio).max(1.0);
+    let kd = odd_cap(
+        kd_hint.unwrap_or(((hidden as f64) / 8.0).round().max(3.0) as usize),
+        hidden,
+    );
+    let ks = (budget / kd as f64) as usize;
+    let ks = if ks >= seq { seq } else { odd_cap(ks.max(1), seq) };
+    (ks, kd)
+}
+
+pub fn block_ratio(seq: usize, hidden: usize, ks: usize, kd: usize) -> f64 {
+    (seq * hidden) as f64 / (ks * kd) as f64
+}
+
+/// Centred (conjugate-closed) frequency index set — public for the
+/// analysis driver and the benches.
+pub fn centered_indices(n: usize, k: usize) -> Vec<usize> {
+    freq_indices(n, k)
+}
+
+pub(crate) fn freq_indices(n: usize, k: usize) -> Vec<usize> {
+    assert!(k >= 1 && k <= n, "k={k} n={n}");
+    if k == n {
+        return (0..n).collect();
+    }
+    assert!(k % 2 == 1, "k={k} must be odd for n={n}");
+    let h = (k - 1) / 2;
+    let mut v: Vec<usize> = (0..=h).collect();
+    v.extend(n - h..n);
+    v
+}
+
+/// Spectral calibration: given sample activations, pick the hidden-
+/// axis width K_D whose centred block captures the most energy within
+/// the float budget implied by `ratio`.  This is how a deployment
+/// discovers the model's layer-1 band without training internals.
+pub fn calibrate_block(samples: &[(&[f32], usize, usize)], ratio: f64)
+    -> Option<usize> {
+    use crate::dsp::fft2d::fft2_real;
+    let (_, rows, cols) = *samples.first()?;
+    let mut energy = vec![0.0f64; rows * cols];
+    let mut used = 0;
+    for &(a, r, c) in samples {
+        if r != rows || c != cols {
+            continue;
+        }
+        let spec = fft2_real(a, r, c);
+        for (e, s) in energy.iter_mut().zip(&spec) {
+            *e += s.norm_sq();
+        }
+        used += 1;
+    }
+    if used == 0 {
+        return None;
+    }
+    let budget = ((rows * cols) as f64 / ratio).max(1.0);
+    let mut best: Option<(f64, usize)> = None;
+    let mut kd = 3usize;
+    while kd <= cols {
+        let ks_raw = (budget / kd as f64) as usize;
+        if ks_raw >= 1 {
+            let ks = if ks_raw >= rows { rows } else { odd_cap(ks_raw, rows) };
+            let e = block_energy(&energy, rows, cols, ks, kd);
+            if best.map(|(be, _)| e > be).unwrap_or(true) {
+                best = Some((e, kd));
+            }
+        }
+        kd += 2;
+    }
+    best.map(|(_, kd)| kd)
+}
+
+fn block_energy(energy: &[f64], rows: usize, cols: usize, ks: usize, kd: usize)
+    -> f64 {
+    let ui = freq_indices(rows, ks);
+    let vi = freq_indices(cols, kd);
+    let mut e = 0.0;
+    for &u in &ui {
+        for &v in &vi {
+            e += energy[u * cols + v];
+        }
+    }
+    e
+}
+
+/// Relative Frobenius reconstruction error — the Fig 2(a) metric.
+pub fn rel_error(a: &[f32], b: &[f32]) -> f64 {
+    let num: f64 = a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+    let den: f64 = a.iter().map(|x| (*x as f64).powi(2)).sum();
+    (num / den.max(1e-30)).sqrt()
+}
+
+#[cfg(test)]
+pub(crate) fn rand_act(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    (0..rows * cols).map(|_| rng.normal() as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_codec_roundtrip_exact() {
+        let a = rand_act(8, 16, 1);
+        let c = NoneCodec;
+        let out = c.roundtrip(&a, 8, 16, 1.0).unwrap();
+        assert_eq!(out, a);
+        let p = c.compress(&a, 8, 16, 1.0).unwrap();
+        assert!((p.achieved_ratio() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_codecs_constructible() {
+        for name in ALL_CODECS {
+            by_name(name).unwrap();
+        }
+        assert!(by_name("bogus").is_err());
+    }
+
+    #[test]
+    fn every_codec_hits_target_ratio() {
+        let (rows, cols) = (48, 96);
+        let a = rand_act(rows, cols, 2);
+        for name in ["fc", "topk", "qr", "fwsvd", "asvd", "svdllm"] {
+            let c = by_name(name).unwrap();
+            for ratio in [4.0, 8.0, 12.0] {
+                let p = c.compress(&a, rows, cols, ratio).unwrap();
+                let got = p.achieved_ratio();
+                assert!(got >= ratio * 0.7,
+                        "{name} ratio {ratio}: achieved {got:.2}");
+                let out = c.decompress(&p).unwrap();
+                assert_eq!(out.len(), rows * cols);
+                assert!(out.iter().all(|v| v.is_finite()), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_nondecreasing_in_ratio() {
+        let (rows, cols) = (32, 64);
+        let a = rand_act(rows, cols, 3);
+        for name in ["fc", "topk", "qr", "svd"] {
+            let c = by_name(name).unwrap();
+            let mut last = -1.0f64;
+            for ratio in [2.0, 4.0, 8.0, 16.0] {
+                let out = c.roundtrip(&a, rows, cols, ratio).unwrap();
+                let err = rel_error(&a, &out);
+                assert!(err >= last - 0.05, "{name} ratio {ratio}");
+                last = err;
+            }
+        }
+    }
+
+    #[test]
+    fn fc_block_accounting() {
+        for (s, d) in [(16, 96), (48, 128), (64, 128), (256, 2048)] {
+            for ratio in [6.0, 8.0, 10.0] {
+                let (ks, kd) = fc_block(s, d, ratio, None);
+                assert!(ks <= s && kd <= d);
+                let got = block_ratio(s, d, ks, kd);
+                assert!(got >= ratio * 0.8, "({s},{d}) ratio {ratio} got {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn freq_indices_conjugate_closed() {
+        for n in [8usize, 48, 96] {
+            for k in [1usize, 3, 7, 13] {
+                if k > n {
+                    continue;
+                }
+                let idx = freq_indices(n, k);
+                let set: std::collections::HashSet<_> = idx.iter().copied().collect();
+                for &u in &idx {
+                    assert!(set.contains(&((n - u) % n)));
+                }
+            }
+            assert_eq!(freq_indices(n, n).len(), n);
+        }
+    }
+
+    #[test]
+    fn calibration_finds_bandlimited_axis() {
+        // synthesise an activation band-limited to 13 hidden bins
+        let (rows, cols) = (32, 96);
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut a = vec![0.0f32; rows * cols];
+        for bin in 0..7usize {
+            let amp = rng.normal() as f32;
+            let ph = rng.f64() as f32 * 6.28;
+            for r in 0..rows {
+                let rowamp = 1.0 + 0.3 * (r as f32 / rows as f32).sin();
+                for c in 0..cols {
+                    let ang = 6.283_185_5 * bin as f32 * c as f32 / cols as f32 + ph;
+                    a[r * cols + c] += amp * rowamp * ang.cos();
+                }
+            }
+        }
+        let kd = calibrate_block(&[(&a, rows, cols)], 8.0).unwrap();
+        assert!((11..=17).contains(&kd), "calibrated kd={kd}");
+    }
+
+    #[test]
+    fn rel_error_basics() {
+        let a = vec![1.0f32, 2.0, 2.0];
+        assert_eq!(rel_error(&a, &a), 0.0);
+        let b = vec![0.0f32, 0.0, 0.0];
+        assert!((rel_error(&a, &b) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,120 @@
+//! Blockwise INT8 absmax quantization — the quantization arm of the
+//! paper's related-work comparison (an ablation here: its ratio is
+//! capped near 4×, which is exactly the paper's argument for
+//! transform-domain compression at ratios 6-10×).
+//!
+//! Wire body: u16 block | u32 n | f32 scales[ceil(n/block)] | i8 q[n]
+
+use super::{Codec, Payload, Reader, Writer};
+use anyhow::{ensure, Result};
+
+pub struct Int8Codec {
+    pub block: usize,
+}
+
+impl Default for Int8Codec {
+    fn default() -> Self {
+        Int8Codec { block: 64 }
+    }
+}
+
+impl Codec for Int8Codec {
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+
+    fn compress(&self, a: &[f32], rows: usize, cols: usize, _ratio: f64)
+        -> Result<Payload> {
+        ensure!(a.len() == rows * cols, "shape mismatch");
+        let n = a.len();
+        let nb = n.div_ceil(self.block);
+        let mut w = Writer::new();
+        w.u16(self.block as u16);
+        w.u32(n as u32);
+        let mut scales = Vec::with_capacity(nb);
+        for b in 0..nb {
+            let chunk = &a[b * self.block..((b + 1) * self.block).min(n)];
+            let absmax = chunk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+            scales.push(scale);
+            w.f32(scale);
+        }
+        for (i, &v) in a.iter().enumerate() {
+            let q = (v / scales[i / self.block]).round().clamp(-127.0, 127.0) as i8;
+            w.0.push(q as u8);
+        }
+        Ok(Payload { codec: "int8".into(), rows, cols, body: w.0 })
+    }
+
+    fn decompress(&self, p: &Payload) -> Result<Vec<f32>> {
+        let mut r = Reader::new(&p.body);
+        let block = r.u16()? as usize;
+        let n = r.u32()? as usize;
+        ensure!(n == p.rows * p.cols, "element count mismatch");
+        ensure!(block > 0, "zero block");
+        let nb = n.div_ceil(block);
+        let mut scales = Vec::with_capacity(nb);
+        for _ in 0..nb {
+            scales.push(r.f32()?);
+        }
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let q = r.byte()? as i8;
+            out.push(q as f32 * scales[i / block]);
+        }
+        ensure!(r.remaining() == 0, "trailing payload bytes");
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{rand_act, rel_error};
+
+    #[test]
+    fn quantization_error_small() {
+        let a = rand_act(32, 64, 1);
+        let c = Int8Codec::default();
+        let out = c.roundtrip(&a, 32, 64, 4.0).unwrap();
+        assert!(rel_error(&a, &out) < 0.02);
+    }
+
+    #[test]
+    fn ratio_is_near_four() {
+        let a = rand_act(64, 128, 2);
+        let p = Int8Codec::default().compress(&a, 64, 128, 4.0).unwrap();
+        let r = p.achieved_ratio();
+        assert!((3.5..4.1).contains(&r), "ratio {r}");
+    }
+
+    #[test]
+    fn zeros_survive() {
+        let a = vec![0.0f32; 128];
+        let c = Int8Codec::default();
+        let out = c.roundtrip(&a, 8, 16, 4.0).unwrap();
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    fn outlier_block_isolated() {
+        // an outlier in one block must not degrade other blocks
+        let mut a = vec![0.01f32; 128];
+        a[0] = 100.0;
+        let c = Int8Codec { block: 64 };
+        let out = c.roundtrip(&a, 8, 16, 4.0).unwrap();
+        // second block (indices 64..) is outlier-free and near-exact
+        for i in 64..128 {
+            assert!((out[i] - 0.01).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn non_multiple_length() {
+        let a = rand_act(5, 13, 3); // 65 elements, block 64
+        let c = Int8Codec::default();
+        let out = c.roundtrip(&a, 5, 13, 4.0).unwrap();
+        assert_eq!(out.len(), 65);
+        assert!(rel_error(&a, &out) < 0.02);
+    }
+}

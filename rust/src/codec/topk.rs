@@ -1,0 +1,137 @@
+//! Top-k sparsification baseline (Split fine-tuning [24]): keep the k
+//! largest-|·| entries, transmit (index, value) pairs.  Each kept
+//! entry costs 8 bytes, so k = S·D/(2·ratio).
+//!
+//! Selection is a full sort by (|v| desc, idx asc) — matching how the
+//! framework baselines implement `topk` (and keeping payload bytes
+//! deterministic under ties).
+
+use super::{Codec, Payload, Reader, Writer};
+use anyhow::{ensure, Result};
+
+pub struct TopkCodec;
+
+impl TopkCodec {
+    pub fn k_for_ratio(n: usize, ratio: f64) -> usize {
+        ((n as f64 / (2.0 * ratio)).floor() as usize).clamp(1, n)
+    }
+}
+
+impl Codec for TopkCodec {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn compress(&self, a: &[f32], rows: usize, cols: usize, ratio: f64)
+        -> Result<Payload> {
+        ensure!(a.len() == rows * cols, "shape mismatch");
+        let k = Self::k_for_ratio(a.len(), ratio);
+        let mut idx: Vec<u32> = (0..a.len() as u32).collect();
+        idx.sort_by(|&x, &y| {
+            let (ax, ay) = (a[x as usize].abs(), a[y as usize].abs());
+            ay.partial_cmp(&ax).unwrap_or(std::cmp::Ordering::Equal)
+                .then(x.cmp(&y))
+        });
+        let mut kept: Vec<u32> = idx[..k].to_vec();
+        kept.sort_unstable(); // ascending index order compresses deltas well
+
+        let mut w = Writer::new();
+        w.u32(k as u32);
+        for &i in &kept {
+            w.u32(i);
+        }
+        for &i in &kept {
+            w.f32(a[i as usize]);
+        }
+        Ok(Payload { codec: "topk".into(), rows, cols, body: w.0 })
+    }
+
+    fn decompress(&self, p: &Payload) -> Result<Vec<f32>> {
+        let mut r = Reader::new(&p.body);
+        let k = r.u32()? as usize;
+        let n = p.rows * p.cols;
+        ensure!(k <= n, "k={k} exceeds matrix size {n}");
+        let mut out = vec![0.0f32; n];
+        let mut indices = Vec::with_capacity(k);
+        for _ in 0..k {
+            let i = r.u32()? as usize;
+            ensure!(i < n, "index {i} out of range");
+            indices.push(i);
+        }
+        for &i in &indices {
+            out[i] = r.f32()?;
+        }
+        ensure!(r.remaining() == 0, "trailing payload bytes");
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{rand_act, rel_error};
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let a = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 1.0];
+        let c = TopkCodec;
+        // ratio chosen so k=3 of 6
+        let p = c.compress(&a, 2, 3, 1.0).unwrap();
+        let out = c.decompress(&p).unwrap();
+        assert_eq!(out, vec![0.0, -5.0, 0.0, 3.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn ratio_accounting() {
+        let a = rand_act(64, 128, 1);
+        let c = TopkCodec;
+        for ratio in [4.0, 8.0, 16.0] {
+            let p = c.compress(&a, 64, 128, ratio).unwrap();
+            let got = p.achieved_ratio();
+            assert!(got >= ratio * 0.9 && got <= ratio * 1.3,
+                    "ratio {ratio} got {got}");
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_dropped_energy() {
+        let a = rand_act(32, 32, 2);
+        let c = TopkCodec;
+        let out = c.roundtrip(&a, 32, 32, 4.0).unwrap();
+        // kept entries are exact; dropped entries contribute all error
+        let mut dropped: f64 = 0.0;
+        let mut total: f64 = 0.0;
+        for (x, y) in a.iter().zip(&out) {
+            total += (*x as f64) * (*x as f64);
+            if *y == 0.0 {
+                dropped += (*x as f64) * (*x as f64);
+            } else {
+                assert_eq!(x, y);
+            }
+        }
+        let expected = (dropped / total).sqrt();
+        assert!((rel_error(&a, &out) - expected).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_under_ties() {
+        let a = vec![1.0f32; 64];
+        let c = TopkCodec;
+        let p1 = c.compress(&a, 8, 8, 4.0).unwrap();
+        let p2 = c.compress(&a, 8, 8, 4.0).unwrap();
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let a = rand_act(8, 8, 3);
+        let c = TopkCodec;
+        let mut p = c.compress(&a, 8, 8, 4.0).unwrap();
+        // out-of-range index
+        p.body[4] = 0xFF;
+        p.body[5] = 0xFF;
+        p.body[6] = 0xFF;
+        p.body[7] = 0xFF;
+        assert!(c.decompress(&p).is_err());
+    }
+}

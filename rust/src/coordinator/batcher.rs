@@ -1,0 +1,174 @@
+//! Dynamic batcher: groups decompressed activations by sequence
+//! bucket and flushes a batch when it reaches `max_batch` or its
+//! oldest member ages past the deadline — the standard
+//! continuous-batching policy scaled to this testbed.  A `max_batch
+//! == 1` configuration is the paper-faithful no-batching ablation.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// One queued request (activation already unpacked to the full block).
+pub struct Pending<T> {
+    pub item: T,
+    pub enqueued: Instant,
+}
+
+/// Bucketed accumulation with deadline flushing.  Generic over the
+/// item type so the policy is unit-testable without a runtime.
+pub struct Batcher<T> {
+    queues: HashMap<usize, Vec<Pending<T>>>,
+    pub max_batch: usize,
+    pub deadline: Duration,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize, deadline: Duration) -> Batcher<T> {
+        Batcher { queues: HashMap::new(), max_batch, deadline }
+    }
+
+    pub fn push(&mut self, bucket: usize, item: T) {
+        self.queues
+            .entry(bucket)
+            .or_default()
+            .push(Pending { item, enqueued: Instant::now() });
+    }
+
+    /// A bucket ready to flush right now, if any (full first, then
+    /// deadline-expired).
+    pub fn ready_bucket(&self, now: Instant) -> Option<usize> {
+        for (&b, q) in &self.queues {
+            if q.len() >= self.max_batch {
+                return Some(b);
+            }
+        }
+        for (&b, q) in &self.queues {
+            if let Some(head) = q.first() {
+                if now.duration_since(head.enqueued) >= self.deadline {
+                    return Some(b);
+                }
+            }
+        }
+        None
+    }
+
+    /// Pop up to `max_batch` items from the bucket.
+    pub fn take(&mut self, bucket: usize) -> Vec<Pending<T>> {
+        let q = self.queues.entry(bucket).or_default();
+        let n = q.len().min(self.max_batch);
+        let rest = q.split_off(n);
+        let out = std::mem::replace(q, rest);
+        if self.queues.get(&bucket).map(|q| q.is_empty()).unwrap_or(false) {
+            self.queues.remove(&bucket);
+        }
+        out
+    }
+
+    /// Time until the next deadline flush (None if nothing queued).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queues
+            .values()
+            .filter_map(|q| q.first())
+            .map(|p| {
+                self.deadline
+                    .checked_sub(now.duration_since(p.enqueued))
+                    .unwrap_or(Duration::ZERO)
+            })
+            .min()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b: Batcher<u32> = Batcher::new(4, Duration::from_secs(10));
+        for i in 0..4 {
+            b.push(32, i);
+        }
+        assert_eq!(b.ready_bucket(Instant::now()), Some(32));
+        let got = b.take(32);
+        assert_eq!(got.len(), 4);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn does_not_mix_buckets() {
+        let mut b: Batcher<u32> = Batcher::new(2, Duration::from_secs(10));
+        b.push(16, 1);
+        b.push(32, 2);
+        b.push(16, 3);
+        assert_eq!(b.ready_bucket(Instant::now()), Some(16));
+        let got = b.take(16);
+        assert_eq!(got.len(), 2);
+        assert!(got.iter().all(|p| [1, 3].contains(&p.item)));
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut b: Batcher<u32> = Batcher::new(8, Duration::from_millis(5));
+        b.push(64, 7);
+        assert_eq!(b.ready_bucket(Instant::now()), None);
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(b.ready_bucket(Instant::now()), Some(64));
+        assert_eq!(b.take(64).len(), 1);
+    }
+
+    #[test]
+    fn take_caps_at_max_batch() {
+        let mut b: Batcher<u32> = Batcher::new(3, Duration::from_secs(10));
+        for i in 0..7 {
+            b.push(48, i);
+        }
+        assert_eq!(b.take(48).len(), 3);
+        assert_eq!(b.queued(), 4);
+        // FIFO order preserved
+        let next = b.take(48);
+        assert_eq!(next[0].item, 3);
+    }
+
+    #[test]
+    fn next_deadline_monotone() {
+        let mut b: Batcher<u32> = Batcher::new(8, Duration::from_millis(100));
+        assert!(b.next_deadline(Instant::now()).is_none());
+        b.push(16, 1);
+        let d = b.next_deadline(Instant::now()).unwrap();
+        assert!(d <= Duration::from_millis(100));
+    }
+
+    // property-style sweep: conservation — everything pushed is taken
+    // exactly once, never crossing buckets
+    #[test]
+    fn conservation_property() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..50 {
+            let max_batch = 1 + rng.below(6);
+            let mut b: Batcher<(usize, u64)> =
+                Batcher::new(max_batch, Duration::from_secs(100));
+            let n = 1 + rng.below(40);
+            let mut pushed: Vec<(usize, u64)> = Vec::new();
+            for i in 0..n {
+                let bucket = [16usize, 32, 48, 64][rng.below(4)];
+                b.push(bucket, (bucket, i as u64));
+                pushed.push((bucket, i as u64));
+            }
+            let mut taken = Vec::new();
+            while b.queued() > 0 {
+                let bucket = *b.queues.keys().next().unwrap();
+                for p in b.take(bucket) {
+                    assert_eq!(p.item.0, bucket, "item crossed buckets");
+                    taken.push(p.item);
+                }
+            }
+            taken.sort();
+            pushed.sort();
+            assert_eq!(taken, pushed);
+        }
+    }
+}

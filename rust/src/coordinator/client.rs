@@ -1,0 +1,211 @@
+//! The device-side client: runs the fused client HLO (embed + layer 1
+//! + pallas FC compress) locally, packs the block with conjugate
+//! symmetry, ships it through the (optionally bandwidth-shaped)
+//! channel, and drives autoregressive generation in the paper's
+//! recompute regime — every new token re-sends the grown prompt's
+//! compressed activation.
+
+use super::protocol::Frame;
+use crate::codec::fourier::pack_block;
+use crate::model::tokenizer;
+use crate::model::weights::Weights;
+use crate::model::ModelMeta;
+use crate::net::Channel;
+use crate::runtime::{ArtifactStore, Executable};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct ClientBucket {
+    ks: usize,
+    kd: usize,
+    exe: Arc<Executable>,
+}
+
+pub struct DeviceClient {
+    session: u64,
+    stream: BufReader<TcpStream>,
+    channel: Channel,
+    d_model: usize,
+    buckets: BTreeMap<usize, ClientBucket>,
+    client_args: Vec<Tensor>, // tok_emb + layer-0 weights
+    next_request: u64,
+    pub stats: ClientStats,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ClientStats {
+    pub requests: u64,
+    pub bytes_sent: u64,
+    pub bytes_uncompressed: u64,
+    pub client_compute_us: u64,
+    pub round_trip_us: Vec<u64>,
+}
+
+impl ClientStats {
+    pub fn compression_ratio(&self) -> f64 {
+        self.bytes_uncompressed as f64 / self.bytes_sent.max(1) as f64
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Generation {
+    pub prompt: String,
+    pub completion: String,
+    pub tokens: Vec<i32>,
+    pub steps: usize,
+}
+
+impl DeviceClient {
+    pub fn connect(addr: &str, store: &ArtifactStore, session: u64,
+                   channel: Channel) -> Result<DeviceClient> {
+        let serving = store
+            .manifest
+            .get("serving")
+            .ok_or_else(|| anyhow!("manifest has no serving section"))?;
+        let model = serving.str_or("model", "");
+        let meta = ModelMeta::from_manifest(&model, store.model_meta(&model)?)?;
+        let weights = Weights::load(&store.root, &meta)?;
+        let mut client_args = weights.embed_args()?;
+        client_args.extend(weights.layer_args(&meta, 0)?);
+
+        let mut buckets = BTreeMap::new();
+        for (bstr, bj) in serving.get("buckets").and_then(|b| b.as_obj())
+            .ok_or_else(|| anyhow!("serving.buckets missing"))? {
+            let bucket: usize = bstr.parse()?;
+            let path = bj.path("client.path").and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("bucket {bucket}: no client artifact"))?;
+            buckets.insert(bucket, ClientBucket {
+                ks: bj.usize_or("ks", 0),
+                kd: bj.usize_or("kd", 0),
+                exe: store.get(path)?,
+            });
+        }
+
+        let tcp = TcpStream::connect(addr)?;
+        tcp.set_nodelay(true)?;
+        tcp.set_read_timeout(Some(Duration::from_secs(60)))?;
+        let mut client = DeviceClient {
+            session,
+            stream: BufReader::new(tcp),
+            channel,
+            d_model: meta.d_model,
+            buckets,
+            client_args,
+            next_request: 1,
+            stats: ClientStats::default(),
+        };
+        client.send(&Frame::Hello { session, model })?;
+        Ok(client)
+    }
+
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        let bytes = frame.encode();
+        // simulate the wireless uplink on top of loopback TCP
+        self.channel.throttle(bytes.len());
+        self.stats.bytes_sent += bytes.len() as u64;
+        std::io::Write::write_all(self.stream.get_mut(), &bytes)?;
+        std::io::Write::flush(self.stream.get_mut())?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        Frame::read_from(&mut self.stream)
+    }
+
+    /// Pick the smallest bucket that fits `len` tokens.
+    fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.buckets.keys().copied().find(|&b| b >= len)
+    }
+
+    /// One decode step: compress the current context, send, await token.
+    pub fn step(&mut self, context: &[i32]) -> Result<(i32, f32)> {
+        let len = context.len();
+        let bucket = self
+            .bucket_for(len)
+            .ok_or_else(|| anyhow!("context {len} exceeds largest bucket"))?;
+        let cb = &self.buckets[&bucket];
+        let tokens = Tensor::i32(vec![1, bucket], tokenizer::pad_to(context, bucket));
+
+        let t0 = Instant::now();
+        let mut args = vec![tokens];
+        args.extend(self.client_args.iter().cloned());
+        let out = cb.exe.run(&args)?; // [re, im] each [1, ks, kd]
+        let packed = pack_block(out[0].as_f32(), out[1].as_f32(), bucket,
+                                self.d_model, cb.ks, cb.kd);
+        self.stats.client_compute_us += t0.elapsed().as_micros() as u64;
+        self.stats.bytes_uncompressed += (bucket * self.d_model * 4) as u64;
+
+        let request = self.next_request;
+        self.next_request += 1;
+        let t1 = Instant::now();
+        self.send(&Frame::Activation {
+            session: self.session,
+            request,
+            bucket: bucket as u16,
+            true_len: len as u16,
+            ks: cb.ks as u16,
+            kd: cb.kd as u16,
+            packed,
+        })?;
+        self.stats.requests += 1;
+        loop {
+            match self.recv()? {
+                Frame::Token { request: r, token, logprob } if r == request => {
+                    self.stats.round_trip_us.push(t1.elapsed().as_micros() as u64);
+                    return Ok((token, logprob));
+                }
+                Frame::Token { .. } => continue, // stale reply
+                Frame::Error { msg } => bail!("server error: {msg}"),
+                other => bail!("unexpected frame {}", other.type_id()),
+            }
+        }
+    }
+
+    /// Autoregressive generation (recompute regime).
+    pub fn generate(&mut self, prompt: &str, max_new: usize) -> Result<Generation> {
+        let mut context = tokenizer::encode_prompt(prompt);
+        let mut produced = Vec::new();
+        let max_bucket = *self.buckets.keys().last().unwrap_or(&64);
+        for _ in 0..max_new {
+            if context.len() >= max_bucket {
+                break;
+            }
+            let (token, _lp) = self.step(&context)?;
+            context.push(token);
+            produced.push(token);
+            if token == tokenizer::EOS || token == tokenizer::PAD {
+                break;
+            }
+            // sentence terminator in the fact-world corpus
+            if token == b'.' as i32 && produced.len() > 1 {
+                break;
+            }
+        }
+        Ok(Generation {
+            prompt: prompt.to_string(),
+            completion: tokenizer::decode(&produced),
+            tokens: produced.clone(),
+            steps: produced.len(),
+        })
+    }
+
+    pub fn server_stats(&mut self) -> Result<String> {
+        self.send(&Frame::GetStats)?;
+        loop {
+            match self.recv()? {
+                Frame::Stats { json } => return Ok(json),
+                Frame::Token { .. } => continue,
+                other => bail!("unexpected frame {}", other.type_id()),
+            }
+        }
+    }
+
+    pub fn bye(&mut self) -> Result<()> {
+        self.send(&Frame::Bye)
+    }
+}

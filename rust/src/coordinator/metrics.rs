@@ -1,0 +1,78 @@
+//! Serving metrics: counters + latency histograms, dumped as JSON via
+//! the Stats frame and at shutdown.
+
+use crate::util::hist::Histogram;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub tokens: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_size_sum: AtomicU64,
+    pub bytes_rx: AtomicU64,
+    pub bytes_tx: AtomicU64,
+    pub queue_wait_us: Histogram,
+    pub decompress_us: Histogram,
+    pub exec_us: Histogram,
+    pub e2e_us: Histogram,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batch_size_sum.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        let g = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
+        j.set("requests", g(&self.requests));
+        j.set("tokens", g(&self.tokens));
+        j.set("batches", g(&self.batches));
+        j.set("mean_batch_size", Json::Num(self.mean_batch_size()));
+        j.set("bytes_rx", g(&self.bytes_rx));
+        j.set("bytes_tx", g(&self.bytes_tx));
+        for (name, h) in [("queue_wait_us", &self.queue_wait_us),
+                          ("decompress_us", &self.decompress_us),
+                          ("exec_us", &self.exec_us),
+                          ("e2e_us", &self.e2e_us)] {
+            let mut hj = Json::obj();
+            hj.set("count", Json::Num(h.count() as f64));
+            hj.set("mean", Json::Num(h.mean_us()));
+            hj.set("p50", Json::Num(h.percentile_us(50.0) as f64));
+            hj.set("p95", Json::Num(h.percentile_us(95.0) as f64));
+            hj.set("p99", Json::Num(h.percentile_us(99.0) as f64));
+            hj.set("max", Json::Num(h.max_us() as f64));
+            j.set(name, hj);
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_shape() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.batches.fetch_add(2, Ordering::Relaxed);
+        m.batch_size_sum.fetch_add(5, Ordering::Relaxed);
+        m.e2e_us.record_us(1000);
+        let j = m.to_json();
+        assert_eq!(j.usize_or("requests", 0), 3);
+        assert!((j.f64_or("mean_batch_size", 0.0) - 2.5).abs() < 1e-9);
+        assert_eq!(j.path("e2e_us.count").unwrap().as_usize(), Some(1));
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 coordinator — the serving system: a device-side client runs
+//! embed + layer 1 + the pallas FC codec (one fused HLO), ships the
+//! compressed block over a (optionally bandwidth-shaped) TCP link; the
+//! edge server reconstructs and finishes the model inside dynamically
+//! formed batches, with per-session state and metrics.
+//!
+//! Generation follows the paper's recompute regime: every decode step
+//! re-sends the (growing) prompt's compressed activation — this is
+//! precisely the bandwidth amplification Fig 1 describes and Fig 7
+//! measures; `kv-cache mode` is analysed as an ablation in
+//! EXPERIMENTS.md.
+
+pub mod batcher;
+pub mod client;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+pub mod session;
+
+pub use client::DeviceClient;
+pub use server::{EdgeServer, ServerHandle};

@@ -1,0 +1,210 @@
+//! Wire protocol: length-prefixed binary frames over TCP.
+//!
+//!   u32 body_len | u8 frame_type | body
+//!
+//! Frames:
+//!   Hello      c→s  u64 session | u16 model_len | model
+//!   Activation c→s  u64 session | u64 request | u16 bucket | u16 true_len
+//!                   | u16 ks | u16 kd | f32 packed[·]  (conjugate-sym pack)
+//!   Token      s→c  u64 request | i32 token | f32 logprob
+//!   GetStats   c→s  (empty)
+//!   Stats      s→c  u32 json_len | json
+//!   Error      s→c  u16 msg_len | msg
+//!   Bye        c→s  (empty)
+
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+
+pub const MAX_FRAME: usize = 64 << 20;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Hello { session: u64, model: String },
+    Activation {
+        session: u64,
+        request: u64,
+        bucket: u16,
+        true_len: u16,
+        ks: u16,
+        kd: u16,
+        packed: Vec<f32>,
+    },
+    Token { request: u64, token: i32, logprob: f32 },
+    GetStats,
+    Stats { json: String },
+    Error { msg: String },
+    Bye,
+}
+
+impl Frame {
+    pub fn type_id(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => 0,
+            Frame::Activation { .. } => 1,
+            Frame::Token { .. } => 2,
+            Frame::GetStats => 3,
+            Frame::Stats { .. } => 4,
+            Frame::Error { .. } => 5,
+            Frame::Bye => 6,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        match self {
+            Frame::Hello { session, model } => {
+                b.extend_from_slice(&session.to_le_bytes());
+                b.extend_from_slice(&(model.len() as u16).to_le_bytes());
+                b.extend_from_slice(model.as_bytes());
+            }
+            Frame::Activation { session, request, bucket, true_len, ks, kd,
+                                packed } => {
+                b.extend_from_slice(&session.to_le_bytes());
+                b.extend_from_slice(&request.to_le_bytes());
+                b.extend_from_slice(&bucket.to_le_bytes());
+                b.extend_from_slice(&true_len.to_le_bytes());
+                b.extend_from_slice(&ks.to_le_bytes());
+                b.extend_from_slice(&kd.to_le_bytes());
+                for v in packed {
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::Token { request, token, logprob } => {
+                b.extend_from_slice(&request.to_le_bytes());
+                b.extend_from_slice(&token.to_le_bytes());
+                b.extend_from_slice(&logprob.to_le_bytes());
+            }
+            Frame::GetStats | Frame::Bye => {}
+            Frame::Stats { json } => {
+                b.extend_from_slice(&(json.len() as u32).to_le_bytes());
+                b.extend_from_slice(json.as_bytes());
+            }
+            Frame::Error { msg } => {
+                b.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+                b.extend_from_slice(msg.as_bytes());
+            }
+        }
+        let mut out = Vec::with_capacity(5 + b.len());
+        out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+        out.push(self.type_id());
+        out.extend_from_slice(&b);
+        out
+    }
+
+    pub fn decode(type_id: u8, body: &[u8]) -> Result<Frame> {
+        let mut r = crate::codec::Reader::new(body);
+        Ok(match type_id {
+            0 => {
+                let session = u64_of(&mut r)?;
+                let n = r.u16()? as usize;
+                let model = String::from_utf8(r.take(n)?.to_vec())?;
+                Frame::Hello { session, model }
+            }
+            1 => {
+                let session = u64_of(&mut r)?;
+                let request = u64_of(&mut r)?;
+                let bucket = r.u16()?;
+                let true_len = r.u16()?;
+                let ks = r.u16()?;
+                let kd = r.u16()?;
+                let mut packed = Vec::with_capacity(r.remaining() / 4);
+                while r.remaining() >= 4 {
+                    packed.push(r.f32()?);
+                }
+                Frame::Activation { session, request, bucket, true_len, ks, kd,
+                                    packed }
+            }
+            2 => {
+                let request = u64_of(&mut r)?;
+                let token = r.u32()? as i32;
+                let logprob = r.f32()?;
+                Frame::Token { request, token, logprob }
+            }
+            3 => Frame::GetStats,
+            4 => {
+                let n = r.u32()? as usize;
+                Frame::Stats { json: String::from_utf8(r.take(n)?.to_vec())? }
+            }
+            5 => {
+                let n = r.u16()? as usize;
+                Frame::Error { msg: String::from_utf8(r.take(n)?.to_vec())? }
+            }
+            6 => Frame::Bye,
+            t => bail!("unknown frame type {t}"),
+        })
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(&self.encode())?;
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn read_from(r: &mut impl Read) -> Result<Frame> {
+        let mut hdr = [0u8; 5];
+        r.read_exact(&mut hdr)?;
+        let len = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]) as usize;
+        if len > MAX_FRAME {
+            bail!("frame too large: {len}");
+        }
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body)?;
+        Frame::decode(hdr[4], &body)
+    }
+}
+
+fn u64_of(r: &mut crate::codec::Reader) -> Result<u64> {
+    let b = r.take(8)?;
+    Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let enc = f.encode();
+        let mut cur = std::io::Cursor::new(enc);
+        let back = Frame::read_from(&mut cur).unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn all_frames_roundtrip() {
+        roundtrip(Frame::Hello { session: 7, model: "llamette-m".into() });
+        roundtrip(Frame::Activation {
+            session: 1, request: 42, bucket: 32, true_len: 29, ks: 32, kd: 15,
+            packed: vec![1.0, -2.5, 0.0, 3.25],
+        });
+        roundtrip(Frame::Token { request: 42, token: 101, logprob: -0.75 });
+        roundtrip(Frame::GetStats);
+        roundtrip(Frame::Stats { json: r#"{"n": 3}"#.into() });
+        roundtrip(Frame::Error { msg: "bad bucket".into() });
+        roundtrip(Frame::Bye);
+    }
+
+    #[test]
+    fn rejects_unknown_type() {
+        assert!(Frame::decode(99, &[]).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized() {
+        let mut bytes = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        bytes.push(3);
+        let mut cur = std::io::Cursor::new(bytes);
+        assert!(Frame::read_from(&mut cur).is_err());
+    }
+
+    #[test]
+    fn wire_bytes_accounting() {
+        // activation frame payload cost = 16 + header floats (paper's
+        // transmitted volume is dominated by packed[·])
+        let f = Frame::Activation {
+            session: 0, request: 0, bucket: 64, true_len: 64, ks: 64, kd: 15,
+            packed: vec![0.0; 64 * 15],
+        };
+        let enc = f.encode();
+        assert_eq!(enc.len(), 5 + 24 + 64 * 15 * 4);
+    }
+}

@@ -1,0 +1,408 @@
+//! The edge server: TCP accept loop → per-connection readers → shared
+//! dynamic batcher → a worker pool sized to the accelerator count
+//! (compute units), executing the fused server HLOs (reconstruct +
+//! layers 2..L + head).  Thread-per-connection with a writer channel
+//! per client; the batcher and workers communicate over mpsc.
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use super::protocol::Frame;
+use super::session::SessionManager;
+use crate::codec::fourier::unpack_block;
+use crate::config::ServeConfig;
+use crate::model::weights::Weights;
+use crate::model::ModelMeta;
+use crate::runtime::{ArtifactStore, Executable};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BucketMeta {
+    pub bucket: usize,
+    pub ks: usize,
+    pub kd: usize,
+}
+
+/// The serving-side model: fused server executables per (bucket,
+/// batch), plus the stacked weights they consume.
+pub struct ServingModel {
+    pub model: String,
+    pub d_model: usize,
+    pub vocab: usize,
+    pub buckets: BTreeMap<usize, BucketMeta>,
+    exes: HashMap<(usize, usize), Arc<Executable>>, // (bucket, b)
+    server_args: Vec<Tensor>,                       // stacked + head weights
+    pub batch_sizes: Vec<usize>,                    // available b, desc
+}
+
+impl ServingModel {
+    pub fn load(store: &ArtifactStore) -> Result<ServingModel> {
+        let serving = store
+            .manifest
+            .get("serving")
+            .ok_or_else(|| anyhow!("manifest has no serving section"))?;
+        let model = serving.str_or("model", "");
+        let meta = ModelMeta::from_manifest(&model, store.model_meta(&model)?)?;
+        let weights = Weights::load(&store.root, &meta)?;
+        let mut server_args = weights.stacked_layer_args(&meta, 1, meta.n_layers)?;
+        server_args.extend(weights.head_args()?);
+
+        let mut buckets = BTreeMap::new();
+        let mut exes = HashMap::new();
+        let mut batch_sizes: Vec<usize> = Vec::new();
+        let bmap = serving
+            .get("buckets")
+            .and_then(|b| b.as_obj())
+            .ok_or_else(|| anyhow!("serving.buckets missing"))?;
+        for (bstr, bj) in bmap {
+            let bucket: usize = bstr.parse()?;
+            let ks = bj.usize_or("ks", 0);
+            let kd = bj.usize_or("kd", 0);
+            buckets.insert(bucket, BucketMeta { bucket, ks, kd });
+            let servers = bj
+                .get("server")
+                .and_then(|s| s.as_obj())
+                .ok_or_else(|| anyhow!("bucket {bucket}: no server artifacts"))?;
+            for (bs, sj) in servers {
+                let b: usize = bs.parse()?;
+                let path = sj.str_or("path", "");
+                exes.insert((bucket, b), store.get(&path)?);
+                if !batch_sizes.contains(&b) {
+                    batch_sizes.push(b);
+                }
+            }
+        }
+        batch_sizes.sort_unstable_by(|a, b| b.cmp(a));
+        Ok(ServingModel { model, d_model: meta.d_model, vocab: meta.vocab_size,
+                          buckets, exes, server_args, batch_sizes })
+    }
+
+    /// Execute a group (same bucket) and return per-item next-token
+    /// (argmax at true_len-1) + logprob.
+    pub fn run_group(&self, bucket: usize, items: &[GroupItem])
+        -> Result<Vec<(i32, f32)>> {
+        let bm = self.buckets.get(&bucket)
+            .ok_or_else(|| anyhow!("unknown bucket {bucket}"))?;
+        let (ks, kd) = (bm.ks, bm.kd);
+        let mut out = Vec::with_capacity(items.len());
+        let mut off = 0usize;
+        while off < items.len() {
+            let remaining = items.len() - off;
+            // largest available batch size; pad short groups by
+            // repeating the last element (only its own lane is read)
+            let b = *self
+                .batch_sizes
+                .iter()
+                .find(|&&b| b <= remaining)
+                .unwrap_or(self.batch_sizes.last().unwrap());
+            let chunk = &items[off..(off + b).min(items.len())];
+            let mut re = Vec::with_capacity(b * ks * kd);
+            let mut im = Vec::with_capacity(b * ks * kd);
+            for i in 0..b {
+                let it = chunk.get(i).unwrap_or(chunk.last().unwrap());
+                if it.re.len() != ks * kd {
+                    bail!("block size mismatch: {} vs {}", it.re.len(), ks * kd);
+                }
+                re.extend_from_slice(&it.re);
+                im.extend_from_slice(&it.im);
+            }
+            let exe = self.exes.get(&(bucket, b))
+                .ok_or_else(|| anyhow!("no artifact for ({bucket},{b})"))?;
+            let mut args = vec![
+                Tensor::f32(vec![b, ks, kd], re),
+                Tensor::f32(vec![b, ks, kd], im),
+            ];
+            args.extend(self.server_args.iter().cloned());
+            let logits = exe.run(&args)?.remove(0); // [b, S, V]
+            let v = self.vocab;
+            for (i, it) in chunk.iter().enumerate() {
+                let pos = it.true_len.clamp(1, bucket) - 1;
+                let row = &logits.as_f32()[i * bucket * v + pos * v
+                                           ..i * bucket * v + (pos + 1) * v];
+                let (mut best, mut bi) = (f32::MIN, 0usize);
+                for (t, &x) in row.iter().enumerate() {
+                    if x > best {
+                        best = x;
+                        bi = t;
+                    }
+                }
+                let lp = crate::eval::scorer::log_softmax_at(row, bi) as f32;
+                out.push((bi as i32, lp));
+            }
+            off += chunk.len();
+        }
+        Ok(out)
+    }
+}
+
+pub struct GroupItem {
+    pub session: u64,
+    pub request: u64,
+    pub true_len: usize,
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+    pub reply: mpsc::Sender<Frame>,
+    pub t_rx: Instant,
+}
+
+enum Job {
+    Group { bucket: usize, items: Vec<GroupItem> },
+}
+
+pub struct EdgeServer;
+
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    pub metrics: Arc<Metrics>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr); // unblock accept
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl EdgeServer {
+    /// Start the server; returns once the socket is listening.
+    pub fn start(cfg: ServeConfig, store: Arc<ArtifactStore>)
+        -> Result<ServerHandle> {
+        let model = Arc::new(ServingModel::load(&store)?);
+        let metrics = Arc::new(Metrics::new());
+        let sessions = Arc::new(Mutex::new(SessionManager::new(
+            Duration::from_secs(cfg.session_ttl_s), 100_000)));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding {}", cfg.listen))?;
+        let addr = listener.local_addr()?;
+        crate::info!("server", "listening on {addr} model={} units={} batch<= {}",
+                     model.model, cfg.compute_units, cfg.max_batch);
+
+        // batcher input + worker job channels
+        let (breq_tx, breq_rx) = mpsc::channel::<(usize, GroupItem)>();
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let mut handles = Vec::new();
+
+        // batcher thread
+        {
+            let stop = stop.clone();
+            let metrics = metrics.clone();
+            let max_batch = cfg.max_batch;
+            let deadline = Duration::from_micros(cfg.batch_deadline_us);
+            handles.push(std::thread::spawn(move || {
+                let mut batcher: Batcher<GroupItem> = Batcher::new(max_batch, deadline);
+                loop {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let wait = batcher
+                        .next_deadline(Instant::now())
+                        .unwrap_or(Duration::from_millis(50))
+                        .min(Duration::from_millis(50));
+                    match breq_rx.recv_timeout(wait) {
+                        Ok((bucket, item)) => batcher.push(bucket, item),
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                    while let Some(bucket) = batcher.ready_bucket(Instant::now()) {
+                        let group = batcher.take(bucket);
+                        metrics.batches.fetch_add(1, Ordering::Relaxed);
+                        metrics.batch_size_sum
+                            .fetch_add(group.len() as u64, Ordering::Relaxed);
+                        let now = Instant::now();
+                        let items: Vec<GroupItem> = group
+                            .into_iter()
+                            .map(|p| {
+                                metrics.queue_wait_us.record(
+                                    now.duration_since(p.enqueued));
+                                p.item
+                            })
+                            .collect();
+                        if job_tx.send(Job::Group { bucket, items }).is_err() {
+                            return;
+                        }
+                    }
+                }
+            }));
+        }
+
+        // worker pool — one thread per compute unit
+        for wid in 0..cfg.compute_units {
+            let job_rx = job_rx.clone();
+            let model = model.clone();
+            let metrics = metrics.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let job = {
+                    let rx = job_rx.lock().unwrap();
+                    rx.recv_timeout(Duration::from_millis(50))
+                };
+                match job {
+                    Ok(Job::Group { bucket, items }) => {
+                        let t0 = Instant::now();
+                        match model.run_group(bucket, &items) {
+                            Ok(results) => {
+                                metrics.exec_us.record(t0.elapsed());
+                                for (it, (token, logprob)) in
+                                    items.iter().zip(results) {
+                                    metrics.tokens.fetch_add(1, Ordering::Relaxed);
+                                    metrics.e2e_us.record(it.t_rx.elapsed());
+                                    let _ = it.reply.send(Frame::Token {
+                                        request: it.request, token, logprob });
+                                }
+                            }
+                            Err(e) => {
+                                crate::error!("worker", "unit {wid}: {e:#}");
+                                for it in &items {
+                                    let _ = it.reply.send(Frame::Error {
+                                        msg: format!("{e:#}") });
+                                }
+                            }
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }));
+        }
+
+        // accept loop
+        {
+            let stop = stop.clone();
+            let metrics = metrics.clone();
+            let model = model.clone();
+            handles.push(std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let breq_tx = breq_tx.clone();
+                            let metrics = metrics.clone();
+                            let sessions = sessions.clone();
+                            let model = model.clone();
+                            std::thread::spawn(move || {
+                                if let Err(e) = handle_conn(stream, breq_tx,
+                                                            metrics, sessions,
+                                                            model) {
+                                    crate::debug!("conn", "closed: {e:#}");
+                                }
+                            });
+                        }
+                        Err(e) => crate::warn_!("server", "accept: {e}"),
+                    }
+                }
+            }));
+        }
+
+        Ok(ServerHandle { addr, stop, metrics, handles })
+    }
+}
+
+fn handle_conn(stream: TcpStream, breq_tx: mpsc::Sender<(usize, GroupItem)>,
+               metrics: Arc<Metrics>, sessions: Arc<Mutex<SessionManager>>,
+               model: Arc<ServingModel>) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader = std::io::BufReader::new(stream.try_clone()?);
+    let writer = stream;
+
+    // writer thread: serialises replies from batcher workers + us
+    let (reply_tx, reply_rx) = mpsc::channel::<Frame>();
+    let mtx = metrics.clone();
+    let wh = std::thread::spawn(move || {
+        let mut w = std::io::BufWriter::new(writer);
+        while let Ok(frame) = reply_rx.recv() {
+            let bytes = frame.encode();
+            mtx.bytes_tx.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+            if std::io::Write::write_all(&mut w, &bytes).is_err() {
+                break;
+            }
+            let _ = std::io::Write::flush(&mut w);
+        }
+    });
+
+    loop {
+        let frame = match Frame::read_from(&mut reader) {
+            Ok(f) => f,
+            Err(_) => break, // disconnect
+        };
+        match frame {
+            Frame::Hello { session, model: m } => {
+                let ok = sessions.lock().unwrap().hello(session, &m);
+                if !ok {
+                    let _ = reply_tx.send(Frame::Error {
+                        msg: "admission refused".into() });
+                }
+            }
+            Frame::Activation { session, request, bucket, true_len, ks, kd,
+                                packed } => {
+                let t_rx = Instant::now();
+                metrics.requests.fetch_add(1, Ordering::Relaxed);
+                metrics.bytes_rx.fetch_add((packed.len() * 4 + 24) as u64,
+                                           Ordering::Relaxed);
+                sessions.lock().unwrap()
+                    .touch(session, (packed.len() * 4) as u64);
+                let bucket = bucket as usize;
+                let bm = match model.buckets.get(&bucket) {
+                    Some(bm) if bm.ks == ks as usize && bm.kd == kd as usize => bm,
+                    _ => {
+                        let _ = reply_tx.send(Frame::Error {
+                            msg: format!("bad bucket {bucket}/{ks}x{kd}") });
+                        continue;
+                    }
+                };
+                let t0 = Instant::now();
+                let unpacked = unpack_block(&packed, bucket, model.d_model,
+                                            bm.ks, bm.kd);
+                metrics.decompress_us.record(t0.elapsed());
+                match unpacked {
+                    Ok((re, im)) => {
+                        let item = GroupItem {
+                            session, request,
+                            true_len: true_len as usize,
+                            re, im,
+                            reply: reply_tx.clone(),
+                            t_rx,
+                        };
+                        if breq_tx.send((bucket, item)).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = reply_tx.send(Frame::Error {
+                            msg: format!("unpack: {e}") });
+                    }
+                }
+            }
+            Frame::GetStats => {
+                let _ = reply_tx.send(Frame::Stats {
+                    json: metrics.to_json().to_string_compact() });
+            }
+            Frame::Bye => break,
+            other => {
+                let _ = reply_tx.send(Frame::Error {
+                    msg: format!("unexpected frame {}", other.type_id()) });
+            }
+        }
+    }
+    drop(reply_tx);
+    let _ = wh.join();
+    Ok(())
+}

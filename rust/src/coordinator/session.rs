@@ -1,0 +1,135 @@
+//! Session manager: per-client server-side state with TTL + LRU
+//! eviction.  In the paper's recompute regime the state is light
+//! (accounting + admission); the struct carries an optional opaque
+//! context slot so a KV-cache mode can hang per-session tensors here.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+pub struct Session {
+    pub id: u64,
+    pub model: String,
+    pub created: Instant,
+    pub last_seen: Instant,
+    pub requests: u64,
+    pub bytes_rx: u64,
+}
+
+pub struct SessionManager {
+    sessions: HashMap<u64, Session>,
+    ttl: Duration,
+    max_sessions: usize,
+}
+
+impl SessionManager {
+    pub fn new(ttl: Duration, max_sessions: usize) -> SessionManager {
+        SessionManager { sessions: HashMap::new(), ttl, max_sessions }
+    }
+
+    /// Register (or refresh) a session.  Returns false if the table is
+    /// full even after eviction — admission control.
+    pub fn hello(&mut self, id: u64, model: &str) -> bool {
+        self.evict_expired();
+        if !self.sessions.contains_key(&id) && self.sessions.len() >= self.max_sessions {
+            // LRU eviction of the stalest entry
+            if let Some((&stale, _)) = self
+                .sessions
+                .iter()
+                .min_by_key(|(_, s)| s.last_seen)
+            {
+                // never evict a session seen within the TTL window
+                if self.sessions[&stale].last_seen.elapsed() < self.ttl {
+                    return false;
+                }
+                self.sessions.remove(&stale);
+            }
+        }
+        let now = Instant::now();
+        self.sessions
+            .entry(id)
+            .and_modify(|s| s.last_seen = now)
+            .or_insert(Session {
+                id,
+                model: model.to_string(),
+                created: now,
+                last_seen: now,
+                requests: 0,
+                bytes_rx: 0,
+            });
+        true
+    }
+
+    /// Record a request; returns false for unknown sessions.
+    pub fn touch(&mut self, id: u64, bytes: u64) -> bool {
+        match self.sessions.get_mut(&id) {
+            Some(s) => {
+                s.last_seen = Instant::now();
+                s.requests += 1;
+                s.bytes_rx += bytes;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn evict_expired(&mut self) {
+        let ttl = self.ttl;
+        self.sessions.retain(|_, s| s.last_seen.elapsed() < ttl);
+    }
+
+    pub fn remove(&mut self, id: u64) {
+        self.sessions.remove(&id);
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_touch_flow() {
+        let mut m = SessionManager::new(Duration::from_secs(60), 10);
+        assert!(m.hello(1, "x"));
+        assert!(m.touch(1, 100));
+        assert!(!m.touch(2, 100)); // unknown
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn admission_control_when_full_of_active() {
+        let mut m = SessionManager::new(Duration::from_secs(60), 2);
+        assert!(m.hello(1, "x"));
+        assert!(m.hello(2, "x"));
+        // both active within TTL: third must be refused
+        assert!(!m.hello(3, "x"));
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn ttl_eviction() {
+        let mut m = SessionManager::new(Duration::from_millis(10), 10);
+        m.hello(1, "x");
+        std::thread::sleep(Duration::from_millis(20));
+        m.evict_expired();
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn stale_session_evicted_for_new() {
+        let mut m = SessionManager::new(Duration::from_millis(10), 1);
+        m.hello(1, "x");
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(m.hello(2, "x"));
+        assert!(m.touch(2, 1));
+        assert!(!m.touch(1, 1));
+    }
+}

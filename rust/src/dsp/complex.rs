@@ -1,0 +1,116 @@
+//! Complex arithmetic in f64 (FFT internals run in double precision;
+//! codec payloads are cast to f32 at the wire boundary).
+
+use std::ops::{Add, AddAssign, Mul, MulAssign, Neg, Sub};
+
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
+    pub const ONE: C64 = C64 { re: 1.0, im: 0.0 };
+
+    pub fn new(re: f64, im: f64) -> C64 {
+        C64 { re, im }
+    }
+
+    pub fn from_re(re: f64) -> C64 {
+        C64 { re, im: 0.0 }
+    }
+
+    /// e^{i theta}
+    pub fn cis(theta: f64) -> C64 {
+        let (s, c) = theta.sin_cos();
+        C64 { re: c, im: s }
+    }
+
+    pub fn conj(self) -> C64 {
+        C64 { re: self.re, im: -self.im }
+    }
+
+    pub fn norm_sq(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    pub fn abs(self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+
+    pub fn scale(self, k: f64) -> C64 {
+        C64 { re: self.re * k, im: self.im * k }
+    }
+}
+
+impl Add for C64 {
+    type Output = C64;
+    fn add(self, o: C64) -> C64 {
+        C64 { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl AddAssign for C64 {
+    fn add_assign(&mut self, o: C64) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl Sub for C64 {
+    type Output = C64;
+    fn sub(self, o: C64) -> C64 {
+        C64 { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl Mul for C64 {
+    type Output = C64;
+    fn mul(self, o: C64) -> C64 {
+        C64 {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl MulAssign for C64 {
+    fn mul_assign(&mut self, o: C64) {
+        *self = *self * o;
+    }
+}
+
+impl Neg for C64 {
+    type Output = C64;
+    fn neg(self) -> C64 {
+        C64 { re: -self.re, im: -self.im }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = C64::new(1.0, 2.0);
+        let b = C64::new(3.0, -1.0);
+        assert_eq!(a + b, C64::new(4.0, 1.0));
+        assert_eq!(a - b, C64::new(-2.0, 3.0));
+        assert_eq!(a * b, C64::new(5.0, 5.0));
+        assert_eq!(a.conj(), C64::new(1.0, -2.0));
+        assert!((a.abs() - 5.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cis_unit_circle() {
+        for k in 0..16 {
+            let t = k as f64 * std::f64::consts::PI / 8.0;
+            let c = C64::cis(t);
+            assert!((c.abs() - 1.0).abs() < 1e-12);
+        }
+        let c = C64::cis(std::f64::consts::PI);
+        assert!((c.re + 1.0).abs() < 1e-12 && c.im.abs() < 1e-12);
+    }
+}

@@ -1,0 +1,246 @@
+//! FFT: iterative radix-2 Cooley-Tukey for power-of-two sizes,
+//! Bluestein's chirp-z for everything else (activation matrices crop
+//! to arbitrary sequence lengths in the eval path).
+//!
+//! A [`FftPlan`] precomputes twiddles / bit-reversal (and, for
+//! Bluestein, the chirp and its padded transform) once per size; the
+//! codec caches plans per (S, D), so the request-path cost is the
+//! butterflies only.
+
+use super::complex::C64;
+use std::f64::consts::PI;
+
+#[derive(Debug)]
+enum Kind {
+    Radix2 {
+        rev: Vec<u32>,
+        /// twiddle table: for stage length `len`, the `len/2` roots
+        /// e^{-2πi k/len} are at offset `len/2 - 1`… flattened.
+        twiddles: Vec<C64>,
+    },
+    Bluestein {
+        m: usize,
+        chirp: Vec<C64>,     // a_k = e^{-iπ k² / n}
+        chirp_fft: Vec<C64>, // FFT of the zero-padded conjugate chirp
+        inner: Box<FftPlan>,
+    },
+}
+
+#[derive(Debug)]
+pub struct FftPlan {
+    pub n: usize,
+    kind: Kind,
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> FftPlan {
+        assert!(n > 0);
+        if n.is_power_of_two() {
+            FftPlan { n, kind: Self::radix2(n) }
+        } else {
+            FftPlan { n, kind: Self::bluestein(n) }
+        }
+    }
+
+    fn radix2(n: usize) -> Kind {
+        let bits = n.trailing_zeros();
+        let rev: Vec<u32> = if bits == 0 {
+            vec![0]
+        } else {
+            (0..n as u32).map(|i| i.reverse_bits() >> (32 - bits)).collect()
+        };
+        // per-stage twiddles, concatenated: stage len=2,4,..,n
+        let mut twiddles = Vec::with_capacity(n.max(1));
+        let mut len = 2;
+        while len <= n {
+            for k in 0..len / 2 {
+                twiddles.push(C64::cis(-2.0 * PI * k as f64 / len as f64));
+            }
+            len <<= 1;
+        }
+        Kind::Radix2 { rev, twiddles }
+    }
+
+    fn bluestein(n: usize) -> Kind {
+        let m = (2 * n - 1).next_power_of_two();
+        let inner = Box::new(FftPlan::new(m));
+        // chirp a_k = e^{-iπ k²/n}; k² mod 2n avoids precision blowup
+        let chirp: Vec<C64> = (0..n)
+            .map(|k| {
+                let e = ((k as u128 * k as u128) % (2 * n as u128)) as f64;
+                C64::cis(-PI * e / n as f64)
+            })
+            .collect();
+        // b_k = conj(chirp), padded circularly: b[0]=a0*, b[k]=b[m-k]=a_k*
+        let mut b = vec![C64::ZERO; m];
+        b[0] = chirp[0].conj();
+        for k in 1..n {
+            b[k] = chirp[k].conj();
+            b[m - k] = chirp[k].conj();
+        }
+        inner.forward_in_place(&mut b);
+        Kind::Bluestein { m, chirp, chirp_fft: b, inner }
+    }
+
+    /// Forward DFT, in place.  X[k] = Σ x[j] e^{-2πi jk/n}.
+    pub fn forward_in_place(&self, data: &mut [C64]) {
+        assert_eq!(data.len(), self.n);
+        match &self.kind {
+            Kind::Radix2 { rev, twiddles } => {
+                radix2_pass(data, rev, twiddles);
+            }
+            Kind::Bluestein { m, chirp, chirp_fft, inner } => {
+                let n = self.n;
+                let mut a = vec![C64::ZERO; *m];
+                for k in 0..n {
+                    a[k] = data[k] * chirp[k];
+                }
+                inner.forward_in_place(&mut a);
+                for (av, bv) in a.iter_mut().zip(chirp_fft.iter()) {
+                    *av = *av * *bv;
+                }
+                inner.inverse_in_place(&mut a);
+                for k in 0..n {
+                    data[k] = a[k] * chirp[k];
+                }
+            }
+        }
+    }
+
+    /// Inverse DFT (with 1/n normalisation), in place.
+    pub fn inverse_in_place(&self, data: &mut [C64]) {
+        // conjugate trick: ifft(x) = conj(fft(conj(x))) / n
+        for v in data.iter_mut() {
+            *v = v.conj();
+        }
+        self.forward_in_place(data);
+        let inv = 1.0 / self.n as f64;
+        for v in data.iter_mut() {
+            *v = v.conj().scale(inv);
+        }
+    }
+}
+
+fn radix2_pass(data: &mut [C64], rev: &[u32], twiddles: &[C64]) {
+    let n = data.len();
+    for i in 0..n {
+        let j = rev[i] as usize;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    let mut len = 2;
+    let mut toff = 0;
+    while len <= n {
+        let half = len / 2;
+        let tw = &twiddles[toff..toff + half];
+        let mut base = 0;
+        while base < n {
+            for k in 0..half {
+                let u = data[base + k];
+                let v = data[base + k + half] * tw[k];
+                data[base + k] = u + v;
+                data[base + k + half] = u - v;
+            }
+            base += len;
+        }
+        toff += half;
+        len <<= 1;
+    }
+}
+
+/// Direct O(n²) DFT — the oracle the fft is tested against.
+pub fn dft_direct(x: &[C64]) -> Vec<C64> {
+    let n = x.len();
+    (0..n)
+        .map(|k| {
+            let mut acc = C64::ZERO;
+            for (j, &v) in x.iter().enumerate() {
+                acc += v * C64::cis(-2.0 * PI * (j * k % n) as f64 / n as f64);
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<C64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+    }
+
+    fn max_err(a: &[C64], b: &[C64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (*x - *y).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn matches_direct_dft_pow2() {
+        for n in [1usize, 2, 4, 8, 64, 256] {
+            let x = rand_signal(n, n as u64);
+            let mut y = x.clone();
+            FftPlan::new(n).forward_in_place(&mut y);
+            assert!(max_err(&y, &dft_direct(&x)) < 1e-9 * n as f64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn matches_direct_dft_arbitrary() {
+        for n in [3usize, 5, 6, 7, 12, 31, 48, 96, 100, 259] {
+            let x = rand_signal(n, n as u64 + 1);
+            let mut y = x.clone();
+            FftPlan::new(n).forward_in_place(&mut y);
+            assert!(max_err(&y, &dft_direct(&x)) < 1e-8 * n as f64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        for n in [8usize, 17, 48, 64, 96, 200] {
+            let x = rand_signal(n, 77 + n as u64);
+            let mut y = x.clone();
+            let plan = FftPlan::new(n);
+            plan.forward_in_place(&mut y);
+            plan.inverse_in_place(&mut y);
+            assert!(max_err(&y, &x) < 1e-9 * n as f64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let n = 64;
+        let x = rand_signal(n, 5);
+        let mut y = x.clone();
+        FftPlan::new(n).forward_in_place(&mut y);
+        let ex: f64 = x.iter().map(|v| v.norm_sq()).sum();
+        let ey: f64 = y.iter().map(|v| v.norm_sq()).sum::<f64>() / n as f64;
+        assert!((ex - ey).abs() < 1e-9 * ex);
+    }
+
+    #[test]
+    fn impulse_is_flat() {
+        let n = 32;
+        let mut x = vec![C64::ZERO; n];
+        x[0] = C64::ONE;
+        FftPlan::new(n).forward_in_place(&mut x);
+        for v in x {
+            assert!((v.re - 1.0).abs() < 1e-12 && v.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn real_input_conjugate_symmetry() {
+        let n = 48; // non-pow2: exercises bluestein
+        let mut rng = Rng::new(3);
+        let x: Vec<C64> = (0..n).map(|_| C64::from_re(rng.normal())).collect();
+        let mut y = x.clone();
+        FftPlan::new(n).forward_in_place(&mut y);
+        for k in 1..n {
+            let d = y[k] - y[n - k].conj();
+            assert!(d.abs() < 1e-9, "k={k}");
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! 2-D FFT over row-major matrices: rows then columns, with a plan
+//! cache keyed by axis length.  Column passes gather into a scratch
+//! buffer to keep the butterflies on contiguous memory (measurably
+//! faster than strided access on this substrate — see EXPERIMENTS.md
+//! §Perf).
+
+use super::complex::C64;
+use super::fft::FftPlan;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+fn plan_cache() -> &'static Mutex<HashMap<usize, Arc<FftPlan>>> {
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<FftPlan>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+pub fn plan(n: usize) -> Arc<FftPlan> {
+    let mut cache = plan_cache().lock().unwrap();
+    cache.entry(n).or_insert_with(|| Arc::new(FftPlan::new(n))).clone()
+}
+
+fn pass_rows(data: &mut [C64], rows: usize, cols: usize, inverse: bool) {
+    let p = plan(cols);
+    for r in 0..rows {
+        let row = &mut data[r * cols..(r + 1) * cols];
+        if inverse {
+            p.inverse_in_place(row);
+        } else {
+            p.forward_in_place(row);
+        }
+    }
+}
+
+fn pass_cols(data: &mut [C64], rows: usize, cols: usize, inverse: bool) {
+    let p = plan(rows);
+    let mut col = vec![C64::ZERO; rows];
+    for c in 0..cols {
+        for r in 0..rows {
+            col[r] = data[r * cols + c];
+        }
+        if inverse {
+            p.inverse_in_place(&mut col);
+        } else {
+            p.forward_in_place(&mut col);
+        }
+        for r in 0..rows {
+            data[r * cols + c] = col[r];
+        }
+    }
+}
+
+/// In-place 2-D forward FFT of a row-major `rows x cols` matrix.
+pub fn fft2(data: &mut [C64], rows: usize, cols: usize) {
+    assert_eq!(data.len(), rows * cols);
+    pass_rows(data, rows, cols, false);
+    pass_cols(data, rows, cols, false);
+}
+
+/// In-place 2-D inverse FFT (normalised by 1/(rows*cols)).
+pub fn ifft2(data: &mut [C64], rows: usize, cols: usize) {
+    assert_eq!(data.len(), rows * cols);
+    pass_rows(data, rows, cols, true);
+    pass_cols(data, rows, cols, true);
+}
+
+/// Forward 2-D FFT of a real f32 matrix into a fresh complex buffer.
+pub fn fft2_real(a: &[f32], rows: usize, cols: usize) -> Vec<C64> {
+    let mut buf: Vec<C64> = a.iter().map(|&v| C64::from_re(v as f64)).collect();
+    fft2(&mut buf, rows, cols);
+    buf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::f64::consts::PI;
+
+    fn dft2_direct(a: &[C64], rows: usize, cols: usize) -> Vec<C64> {
+        let mut out = vec![C64::ZERO; rows * cols];
+        for u in 0..rows {
+            for v in 0..cols {
+                let mut acc = C64::ZERO;
+                for s in 0..rows {
+                    for d in 0..cols {
+                        let ang = -2.0 * PI
+                            * (u as f64 * s as f64 / rows as f64
+                                + v as f64 * d as f64 / cols as f64);
+                        acc += a[s * cols + d] * C64::cis(ang);
+                    }
+                }
+                out[u * cols + v] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_direct_2d() {
+        for (r, c) in [(4, 8), (6, 10), (5, 7), (16, 12)] {
+            let mut rng = Rng::new((r * c) as u64);
+            let a: Vec<C64> =
+                (0..r * c).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+            let mut y = a.clone();
+            fft2(&mut y, r, c);
+            let want = dft2_direct(&a, r, c);
+            for (got, w) in y.iter().zip(&want) {
+                assert!((*got - *w).abs() < 1e-8, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_2d() {
+        let (r, c) = (48, 96);
+        let mut rng = Rng::new(9);
+        let a: Vec<C64> = (0..r * c).map(|_| C64::from_re(rng.normal())).collect();
+        let mut y = a.clone();
+        fft2(&mut y, r, c);
+        ifft2(&mut y, r, c);
+        for (got, w) in y.iter().zip(&a) {
+            assert!((*got - *w).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn real_matrix_center_symmetry() {
+        let (r, c) = (8, 12);
+        let mut rng = Rng::new(4);
+        let a: Vec<f32> = (0..r * c).map(|_| rng.normal() as f32).collect();
+        let spec = fft2_real(&a, r, c);
+        for u in 0..r {
+            for v in 0..c {
+                let m = spec[((r - u) % r) * c + (c - v) % c].conj();
+                assert!((spec[u * c + v] - m).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Signal-processing substrate: complex arithmetic and FFTs built from
+//! scratch (the dependency set has no math crates).  Drives the
+//! software FourierCompress codec; the "hardware" codec path instead
+//! executes the XLA-compiled truncated-DFT artifact (DESIGN.md §2).
+
+pub mod complex;
+pub mod fft;
+pub mod fft2d;
+
+pub use complex::C64;
+pub use fft::FftPlan;
+pub use fft2d::{fft2, ifft2};

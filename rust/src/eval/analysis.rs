@@ -1,0 +1,175 @@
+//! Activation analysis — the data behind Fig 2:
+//!  (a) per-layer reconstruction error of FC / Top-k / SVD at a fixed
+//!      ratio (plus activation dumps for the heatmaps),
+//!  (b) cross-token activation similarity vs layer across datasets,
+//!  (c) 2-D spectrum energy concentration vs block size.
+
+use super::items::Item;
+use super::tables::EvalContext;
+use crate::codec::{self, rel_error, Codec};
+use crate::dsp::fft2d::fft2_real;
+use crate::model::executor::SplitExecutor;
+use crate::model::tokenizer;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::Result;
+
+fn batch_tokens(exec: &SplitExecutor, items: &[Item]) -> (Tensor, Vec<usize>) {
+    let (b, s) = (exec.meta.eval_batch, exec.meta.eval_seq);
+    let mut toks = Vec::with_capacity(b * s);
+    let mut lens = Vec::with_capacity(b);
+    for e in 0..b {
+        let it = &items[e % items.len()];
+        let ids = tokenizer::encode_prompt(
+            &format!("{} {} .", it.prompt, it.choices[it.answer]));
+        lens.push(ids.len().min(s));
+        toks.extend(tokenizer::pad_to(&ids, s));
+    }
+    (Tensor::i32(vec![b, s], toks), lens)
+}
+
+/// Mean pairwise cosine similarity between token activation vectors —
+/// the Fig 2(b) metric ("activation similarity").
+pub fn token_similarity(act: &[f32], rows: usize, cols: usize) -> f64 {
+    let mut norms = vec![0.0f64; rows];
+    for r in 0..rows {
+        norms[r] = act[r * cols..(r + 1) * cols]
+            .iter()
+            .map(|&v| (v as f64) * (v as f64))
+            .sum::<f64>()
+            .sqrt()
+            .max(1e-12);
+    }
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for i in 0..rows {
+        for j in (i + 1)..rows {
+            let dot: f64 = act[i * cols..(i + 1) * cols]
+                .iter()
+                .zip(&act[j * cols..(j + 1) * cols])
+                .map(|(&a, &b)| a as f64 * b as f64)
+                .sum();
+            sum += dot / (norms[i] * norms[j]);
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Energy fraction captured by the centred (ks, kd) block — Fig 2(c).
+pub fn block_energy_fraction(act: &[f32], rows: usize, cols: usize,
+                             ks: usize, kd: usize) -> f64 {
+    let spec = fft2_real(act, rows, cols);
+    let total: f64 = spec.iter().map(|c| c.norm_sq()).sum();
+    let ui = codec::centered_indices(rows, ks);
+    let vi = codec::centered_indices(cols, kd);
+    let mut e = 0.0;
+    for &u in &ui {
+        for &v in &vi {
+            e += spec[u * cols + v].norm_sq();
+        }
+    }
+    e / total.max(1e-30)
+}
+
+/// Full Fig-2 analysis dump for one model.
+pub fn analyze(ctx: &EvalContext, model: &str, ratio: f64) -> Result<Json> {
+    let exec = SplitExecutor::new(&ctx.store, model)?;
+    let mut out = Json::obj();
+    out.set("model", Json::Str(model.into()));
+    out.set("ratio", Json::Num(ratio));
+
+    // (b) similarity vs layer, across 4 datasets (paper's selection)
+    let mut sim = Json::obj();
+    for ds in ["pa", "ae", "cq", "oa"] {
+        let items = ctx.load_items(ds)?;
+        let (tokens, lens) = batch_tokens(&exec, &items);
+        let acts = exec.activations(&tokens)?;
+        let d = exec.meta.d_model;
+        let mut arr = Vec::new();
+        for act in &acts {
+            // mean over batch elements, cropped to true length
+            let s = act.shape[1];
+            let mut v = 0.0;
+            for e in 0..act.shape[0] {
+                let len = lens[e];
+                v += token_similarity(
+                    &act.as_f32()[e * s * d..e * s * d + len * d], len, d);
+            }
+            arr.push(Json::Num(v / act.shape[0] as f64));
+        }
+        sim.set(ds, Json::Arr(arr));
+    }
+    out.set("similarity_by_layer", sim);
+
+    // (a) per-layer reconstruction error per method at the same ratio
+    let items = ctx.load_items("oa")?;
+    let (tokens, lens) = batch_tokens(&exec, &items);
+    let acts = exec.activations(&tokens)?;
+    let d = exec.meta.d_model;
+    let mut errs = Json::obj();
+    let fc = codec::fourier::FourierCodec::with_hint(exec.meta.kd_band());
+    let methods: Vec<(&str, Box<dyn Codec>)> = vec![
+        ("fc", Box::new(fc)),
+        ("topk", codec::by_name("topk")?),
+        ("svdllm", codec::by_name("svdllm")?),
+    ];
+    for (name, c) in &methods {
+        let mut arr = Vec::new();
+        for act in &acts {
+            let s = act.shape[1];
+            let mut v = 0.0;
+            for e in 0..act.shape[0] {
+                let len = lens[e];
+                let crop = &act.as_f32()[e * s * d..e * s * d + len * d];
+                let rec = c.roundtrip(crop, len, d, ratio)?;
+                v += rel_error(crop, &rec);
+            }
+            arr.push(Json::Num(v / act.shape[0] as f64));
+        }
+        errs.set(name, Json::Arr(arr));
+    }
+    out.set("recon_error_by_layer", errs);
+
+    // (c) spectrum energy concentration vs block size, layer 1 vs deep
+    let mut spec = Json::obj();
+    for (label, idx) in [("layer1", 0usize), ("mid", exec.meta.n_layers / 2),
+                         ("last", exec.meta.n_layers - 1)] {
+        let act = &acts[idx];
+        let s = act.shape[1];
+        let len = lens[0];
+        let crop = &act.as_f32()[..len * d];
+        let mut arr = Vec::new();
+        for frac in [0.02, 0.05, 0.1, 0.2, 0.4, 0.8] {
+            let budget = ((len * d) as f64 * frac).max(1.0);
+            let kd = exec.meta.kd_band().min(d);
+            let ks_raw = (budget / kd as f64) as usize;
+            let ks = ks_raw.clamp(1, len);
+            let ks = if ks == len { ks } else if ks % 2 == 0 { ks.max(2) - 1 } else { ks };
+            arr.push(Json::Num(block_energy_fraction(crop, len, d, ks, kd)));
+        }
+        spec.set(label, Json::Arr(arr));
+    }
+    out.set("energy_fraction", spec);
+
+    // heatmap dump (first item, layer 1 + last): original vs fc recon
+    let act1 = &acts[0];
+    let s = act1.shape[1];
+    let len = lens[0];
+    let crop = &act1.as_f32()[..len * d];
+    let fc2 = codec::fourier::FourierCodec::with_hint(exec.meta.kd_band());
+    let rec = fc2.roundtrip(crop, len, d, ratio)?;
+    out.set("heatmap_rows", Json::Num(len as f64));
+    out.set("heatmap_cols", Json::Num(d as f64));
+    out.set("heatmap_orig",
+            Json::Arr(crop.iter().step_by(4).map(|&v| Json::Num(v as f64)).collect()));
+    out.set("heatmap_fc_err",
+            Json::Arr(crop.iter().zip(&rec).step_by(4)
+                .map(|(&a, &b)| Json::Num((a - b).abs() as f64)).collect()));
+    let _ = s;
+    Ok(out)
+}

@@ -1,0 +1,73 @@
+//! Dataset items: JSONL loader for the synthetic MCQ benchmarks the
+//! python build step generated (schema: prompt / choices[4] / answer).
+
+use crate::util::json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Item {
+    pub prompt: String,
+    pub choices: Vec<String>,
+    pub answer: usize,
+}
+
+pub fn load_dataset(path: impl AsRef<Path>, max_items: usize) -> Result<Vec<Item>> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = json::parse(line)
+            .with_context(|| format!("line {}", lineno + 1))?;
+        let prompt = j
+            .get("prompt")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("line {}: no prompt", lineno + 1))?
+            .to_string();
+        let choices: Vec<String> = j
+            .get("choices")
+            .and_then(|v| v.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|c| c.as_str().map(String::from))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let answer = j.usize_or("answer", usize::MAX);
+        if choices.len() != 4 || answer >= 4 {
+            bail!("line {}: malformed item", lineno + 1);
+        }
+        out.push(Item { prompt, choices, answer });
+        if out.len() >= max_items {
+            break;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_and_truncates() {
+        let path = std::env::temp_dir().join("fc_items_test.jsonl");
+        let line = r#"{"prompt": "Q x hue ? A", "choices": ["a","b","c","d"], "answer": 1}"#;
+        std::fs::write(&path, format!("{line}\n{line}\n{line}\n")).unwrap();
+        let items = load_dataset(&path, 2).unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].answer, 1);
+        assert_eq!(items[0].choices[3], "d");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let path = std::env::temp_dir().join("fc_items_bad.jsonl");
+        std::fs::write(&path, r#"{"prompt": "p", "choices": ["a"], "answer": 0}"#)
+            .unwrap();
+        assert!(load_dataset(&path, 10).is_err());
+    }
+}

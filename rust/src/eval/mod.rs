@@ -1,0 +1,11 @@
+//! Evaluation harness: MCQ accuracy under activation compression —
+//! regenerates Tables II/III and Figs 4/5 — plus the activation
+//! analysis behind Fig 2.
+
+pub mod analysis;
+pub mod items;
+pub mod scorer;
+pub mod tables;
+
+pub use items::{load_dataset, Item};
+pub use scorer::McqScorer;

@@ -1,0 +1,159 @@
+//! MCQ scoring: every (item, choice) pair becomes one padded sequence
+//! `BOS + prompt + " <choice> ."`; the model scores the choice
+//! continuation by length-normalised log-likelihood, exactly the
+//! standard lm-eval recipe the paper uses.  Sequences are packed into
+//! the artifact batch (B=8), so one artifact pipeline pass scores two
+//! items (4 choices each).
+
+use super::items::Item;
+use crate::model::executor::{Boundary, SplitExecutor};
+use crate::model::tokenizer;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+pub struct McqScorer<'a> {
+    pub exec: &'a SplitExecutor,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalOutcome {
+    pub correct: usize,
+    pub total: usize,
+    pub mean_ratio: f64,
+}
+
+impl EvalOutcome {
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+}
+
+struct Seq {
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    len: usize,
+}
+
+impl<'a> McqScorer<'a> {
+    pub fn new(exec: &'a SplitExecutor) -> McqScorer<'a> {
+        McqScorer { exec }
+    }
+
+    fn build_seq(&self, item: &Item, choice: usize) -> Seq {
+        let s = self.exec.meta.eval_seq;
+        let mut ids = tokenizer::encode_prompt(&item.prompt);
+        let prompt_len = ids.len();
+        ids.extend(tokenizer::encode(&format!(" {} .", item.choices[choice])));
+        let len = ids.len().min(s);
+        Seq { tokens: tokenizer::pad_to(&ids, s), prompt_len: prompt_len.min(len), len }
+    }
+
+    /// Score a whole dataset at one (split, boundary) configuration.
+    pub fn evaluate(&self, items: &[Item], split: usize, boundary: &Boundary)
+        -> Result<EvalOutcome> {
+        let b = self.exec.meta.eval_batch;
+        let s = self.exec.meta.eval_seq;
+        debug_assert_eq!(b % 4, 0, "batch must hold whole items");
+        let items_per_batch = b / 4;
+
+        let mut outcome = EvalOutcome::default();
+        let mut ratio_sum = 0.0;
+        let mut ratio_n = 0usize;
+
+        for chunk in items.chunks(items_per_batch) {
+            // assemble the batch (pad the tail by repeating seq 0)
+            let mut seqs: Vec<Seq> = Vec::with_capacity(b);
+            for item in chunk {
+                for c in 0..4 {
+                    seqs.push(self.build_seq(item, c));
+                }
+            }
+            while seqs.len() < b {
+                seqs.push(self.build_seq(&chunk[0], 0));
+            }
+            let mut toks = Vec::with_capacity(b * s);
+            // the codec operates on the whole padded bucket, exactly as
+            // the serving path transmits it (ratio accounting is per
+            // bucket raw bytes); per-item cropping is available through
+            // forward_split directly as an ablation.
+            let lens = vec![s; b];
+            for sq in &seqs {
+                toks.extend_from_slice(&sq.tokens);
+            }
+            let tokens = Tensor::i32(vec![b, s], toks);
+            let (logits, ratio) = self.exec.forward_split(&tokens, &lens, split,
+                                                          boundary)?;
+            ratio_sum += ratio;
+            ratio_n += 1;
+
+            // pick argmax choice per item
+            let v = self.exec.meta.vocab_size;
+            let lg = logits.as_f32();
+            for (ii, item) in chunk.iter().enumerate() {
+                let mut best = (f64::MIN, 0usize);
+                for c in 0..4 {
+                    let e = ii * 4 + c;
+                    let sq = &seqs[e];
+                    let lp = choice_logprob(lg, e, s, v, sq);
+                    if lp > best.0 {
+                        best = (lp, c);
+                    }
+                }
+                outcome.total += 1;
+                if best.1 == item.answer {
+                    outcome.correct += 1;
+                }
+            }
+        }
+        outcome.mean_ratio = if ratio_n > 0 { ratio_sum / ratio_n as f64 } else { 1.0 };
+        Ok(outcome)
+    }
+}
+
+/// Length-normalised log P(choice | prompt) from row `e` of the batch.
+fn choice_logprob(logits: &[f32], e: usize, s: usize, v: usize, sq: &Seq) -> f64 {
+    let mut sum = 0.0f64;
+    let mut n = 0usize;
+    // predict tokens prompt_len .. len-1 from positions one earlier
+    for pos in (sq.prompt_len - 1)..(sq.len - 1) {
+        let row = &logits[e * s * v + pos * v..e * s * v + (pos + 1) * v];
+        let target = sq.tokens[pos + 1] as usize;
+        sum += log_softmax_at(row, target);
+        n += 1;
+    }
+    if n == 0 {
+        f64::MIN
+    } else {
+        sum / n as f64
+    }
+}
+
+pub(crate) fn log_softmax_at(row: &[f32], idx: usize) -> f64 {
+    let m = row.iter().fold(f32::MIN, |a, &b| a.max(b)) as f64;
+    let z: f64 = row.iter().map(|&x| ((x as f64) - m).exp()).sum();
+    (row[idx] as f64 - m) - z.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalises() {
+        let row = vec![1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|i| log_softmax_at(&row, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!(log_softmax_at(&row, 2) > log_softmax_at(&row, 0));
+    }
+
+    #[test]
+    fn log_softmax_stable_large_values() {
+        let row = vec![1000.0f32, 1001.0];
+        let lp = log_softmax_at(&row, 1);
+        assert!(lp.is_finite() && lp < 0.0);
+    }
+}

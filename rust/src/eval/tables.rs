@@ -1,0 +1,270 @@
+//! Experiment drivers that regenerate the paper's accuracy tables and
+//! figures (E4/E5/E6/E8 in DESIGN.md §5).  Results are printed as
+//! aligned tables and dumped as JSON under `results/`.
+
+use super::items::{load_dataset, Item};
+use super::scorer::McqScorer;
+use crate::codec;
+use crate::config::EvalConfig;
+use crate::model::executor::{Boundary, SplitExecutor};
+use crate::runtime::ArtifactStore;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+pub struct EvalContext {
+    pub store: ArtifactStore,
+    pub cfg: EvalConfig,
+}
+
+impl EvalContext {
+    pub fn new(cfg: EvalConfig) -> Result<EvalContext> {
+        let store = ArtifactStore::open(cfg.artifacts.clone())?;
+        Ok(EvalContext { store, cfg })
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        if self.cfg.models.is_empty() {
+            self.store.model_names()
+        } else {
+            self.cfg.models.clone()
+        }
+    }
+
+    pub fn datasets(&self) -> Vec<String> {
+        if self.cfg.datasets.is_empty() {
+            self.store.dataset_names()
+        } else {
+            self.cfg.datasets.clone()
+        }
+    }
+
+    pub fn load_items(&self, ds: &str) -> Result<Vec<Item>> {
+        let rel = self
+            .store
+            .manifest
+            .path(&format!("datasets.{ds}.path"))
+            .and_then(|v| v.as_str())
+            .unwrap_or("")
+            .to_string();
+        load_dataset(self.store.root.join(rel), self.cfg.max_items)
+    }
+
+    fn save(&self, name: &str, value: &Json) -> Result<()> {
+        std::fs::create_dir_all(&self.cfg.out)?;
+        let path = format!("{}/{name}.json", self.cfg.out);
+        std::fs::write(&path, value.to_string_pretty())?;
+        crate::info!("eval", "wrote {path}");
+        Ok(())
+    }
+}
+
+fn jnum(v: f64) -> Json {
+    Json::Num((v * 10000.0).round() / 10000.0)
+}
+
+/// Table II: FC accuracy per (model, dataset, ratio) + the derived
+/// near-lossless max ratio per dataset.
+pub fn table2(ctx: &EvalContext) -> Result<Json> {
+    let mut out = Json::obj();
+    let datasets = ctx.datasets();
+    for model in ctx.models() {
+        let exec = SplitExecutor::new(&ctx.store, &model)?;
+        let scorer = McqScorer::new(&exec);
+        let mut mj = Json::obj();
+        for ds in &datasets {
+            let items = ctx.load_items(ds)?;
+            let base = scorer.evaluate(&items, 1, &Boundary::None)?;
+            let mut dj = Json::obj();
+            dj.set("baseline", jnum(base.accuracy()));
+            let mut best_ratio = 1.0f64;
+            let fc = codec::fourier::FourierCodec::with_hint(exec.meta.kd_band());
+            for &ratio in &ctx.cfg.ratios {
+                let o = scorer.evaluate(&items, 1,
+                    &Boundary::Codec { codec: &fc, ratio })?;
+                dj.set(&format!("r{ratio:.0}"), jnum(o.accuracy()));
+                dj.set(&format!("r{ratio:.0}_achieved"), jnum(o.mean_ratio));
+                // near-lossless: within 0.3 points of baseline
+                if base.accuracy() - o.accuracy() <= 0.003 && o.mean_ratio > best_ratio {
+                    best_ratio = o.mean_ratio;
+                }
+            }
+            dj.set("near_lossless_ratio", jnum(best_ratio));
+            crate::info!("table2", "{model}/{ds}: base={:.3} nl_ratio={:.1}",
+                         base.accuracy(), best_ratio);
+            mj.set(ds, dj);
+        }
+        out.set(&model, mj);
+    }
+    ctx.save("table2", &out)?;
+    Ok(out)
+}
+
+/// Per-dataset near-lossless ratios from a table2 result (fallback:
+/// the paper's 7.6 average).
+pub fn nl_ratios(table2: &Json, model: &str, datasets: &[String])
+    -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for ds in datasets {
+        let r = table2
+            .path(&format!("{model}.{ds}.near_lossless_ratio"))
+            .and_then(|v| v.as_f64())
+            .filter(|&r| r > 1.5)
+            .unwrap_or(7.6);
+        out.insert(ds.clone(), r);
+    }
+    out
+}
+
+/// Table III: all methods at the per-dataset Table-II ratios.
+pub fn table3(ctx: &EvalContext, t2: &Json) -> Result<Json> {
+    let mut out = Json::obj();
+    let datasets = ctx.datasets();
+    for model in ctx.models() {
+        let exec = SplitExecutor::new(&ctx.store, &model)?;
+        let scorer = McqScorer::new(&exec);
+        let ratios = nl_ratios(t2, &model, &datasets);
+        let mut mj = Json::obj();
+
+        // baseline row
+        let mut base_row = Json::obj();
+        let mut base_accs = BTreeMap::new();
+        for ds in &datasets {
+            let items = ctx.load_items(ds)?;
+            let o = scorer.evaluate(&items, 1, &Boundary::None)?;
+            base_row.set(ds, jnum(o.accuracy()));
+            base_accs.insert(ds.clone(), o.accuracy());
+        }
+        mj.set("baseline", base_row);
+
+        for method in &ctx.cfg.methods {
+            let fc_hint = exec.meta.kd_band();
+            let c: Box<dyn codec::Codec> = if method == "fc" {
+                Box::new(codec::fourier::FourierCodec::with_hint(fc_hint))
+            } else {
+                codec::by_name(method)?
+            };
+            let mut row = Json::obj();
+            let mut avg = 0.0;
+            for ds in &datasets {
+                let items = ctx.load_items(ds)?;
+                let o = scorer.evaluate(&items, 1,
+                    &Boundary::Codec { codec: c.as_ref(), ratio: ratios[ds] })?;
+                row.set(ds, jnum(o.accuracy()));
+                avg += o.accuracy();
+            }
+            avg /= datasets.len().max(1) as f64;
+            row.set("avg", jnum(avg));
+            crate::info!("table3", "{model}/{method}: avg={avg:.3}");
+            mj.set(method, row);
+        }
+        out.set(&model, mj);
+    }
+    ctx.save("table3", &out)?;
+    Ok(out)
+}
+
+/// Fig 4: split-layer sweep, all methods, subset of datasets.  Uses
+/// the model's near-lossless operating ratio so that layer 1 is the
+/// favourable case and depth does the damage (the paper's setting:
+/// "their respective optimal compression ratios").
+pub fn fig4(ctx: &EvalContext, model: &str, datasets: &[&str]) -> Result<Json> {
+    let exec = SplitExecutor::new(&ctx.store, model)?;
+    let ratio = exec.meta.d_model as f64 / exec.meta.kd_band() as f64 * 0.99;
+    let scorer = McqScorer::new(&exec);
+    let splits: Vec<usize> = if ctx.cfg.split_layers.len() > 1 {
+        ctx.cfg.split_layers.clone()
+    } else {
+        (1..=exec.meta.n_layers).collect()
+    };
+    let mut out = Json::obj();
+    for ds in datasets {
+        let items = ctx.load_items(ds)?;
+        let mut dj = Json::obj();
+        let base = scorer.evaluate(&items, 1, &Boundary::None)?;
+        dj.set("baseline", jnum(base.accuracy()));
+        for method in &ctx.cfg.methods {
+            let c: Box<dyn codec::Codec> = if method == "fc" {
+                Box::new(codec::fourier::FourierCodec::with_hint(exec.meta.kd_band()))
+            } else {
+                codec::by_name(method)?
+            };
+            let mut arr = Vec::new();
+            for &k in &splits {
+                let o = scorer.evaluate(&items, k,
+                    &Boundary::Codec { codec: c.as_ref(), ratio })?;
+                arr.push(jnum(o.accuracy()));
+            }
+            dj.set(method, Json::Arr(arr));
+        }
+        dj.set("ratio", jnum(ratio));
+        dj.set("splits",
+               Json::Arr(splits.iter().map(|&k| Json::Num(k as f64)).collect()));
+        crate::info!("fig4", "{model}/{ds} done");
+        out.set(ds, dj);
+    }
+    ctx.save("fig4", &out)?;
+    Ok(out)
+}
+
+/// Fig 5: fine ratio sweep for fc / svdllm / topk.
+pub fn fig5(ctx: &EvalContext, model: &str, datasets: &[&str]) -> Result<Json> {
+    let exec = SplitExecutor::new(&ctx.store, model)?;
+    let scorer = McqScorer::new(&exec);
+    let ratios = [2.0, 4.0, 6.0, 8.0, 10.0, 12.0, 16.0];
+    let mut out = Json::obj();
+    out.set("ratios",
+            Json::Arr(ratios.iter().map(|&r| Json::Num(r)).collect()));
+    for ds in datasets {
+        let items = ctx.load_items(ds)?;
+        let mut dj = Json::obj();
+        let base = scorer.evaluate(&items, 1, &Boundary::None)?;
+        dj.set("baseline", jnum(base.accuracy()));
+        for method in ["fc", "svdllm", "topk"] {
+            let c: Box<dyn codec::Codec> = if method == "fc" {
+                Box::new(codec::fourier::FourierCodec::with_hint(exec.meta.kd_band()))
+            } else {
+                codec::by_name(method)?
+            };
+            let mut arr = Vec::new();
+            for &ratio in &ratios {
+                let o = scorer.evaluate(&items, 1,
+                    &Boundary::Codec { codec: c.as_ref(), ratio })?;
+                arr.push(jnum(o.accuracy()));
+            }
+            dj.set(method, Json::Arr(arr));
+        }
+        crate::info!("fig5", "{model}/{ds} done");
+        out.set(ds, dj);
+    }
+    ctx.save("fig5", &out)?;
+    Ok(out)
+}
+
+/// Render a {model: {method: {ds: acc}}} JSON as an aligned text table.
+pub fn render_table(j: &Json, datasets: &[String]) -> String {
+    let mut s = String::new();
+    if let Some(models) = j.as_obj() {
+        for (model, mj) in models {
+            s.push_str(&format!("\n== {model} ==\n{:10}", "method"));
+            for ds in datasets {
+                s.push_str(&format!(" {ds:>6}"));
+            }
+            s.push('\n');
+            if let Some(rows) = mj.as_obj() {
+                for (method, row) in rows {
+                    s.push_str(&format!("{method:10}"));
+                    for ds in datasets {
+                        let v = row.get(ds).and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+                        s.push_str(&format!(" {:6.1}", v * 100.0));
+                    }
+                    if let Some(avg) = row.get("avg").and_then(|v| v.as_f64()) {
+                        s.push_str(&format!("  avg {:5.1}", avg * 100.0));
+                    }
+                    s.push('\n');
+                }
+            }
+        }
+    }
+    s
+}

@@ -1,0 +1,32 @@
+//! FourierCompress — layer-aware spectral activation compression for
+//! collaborative LLM inference (reproduction; see DESIGN.md).
+//!
+//! Crate layout mirrors the three-layer architecture:
+//!
+//! * [`runtime`] — PJRT client wrapper: loads the AOT HLO artifacts the
+//!   python build step produced and executes them on the request path.
+//! * [`model`] — model metadata, weight loading, and the composable
+//!   split executor (client layers / codec boundary / server layers).
+//! * [`codec`] — the FourierCompress codec and every baseline the
+//!   paper compares against (Top-k, QR, FWSVD, ASVD, SVD-LLM, INT8).
+//! * [`coordinator`] — the serving system: wire protocol, router,
+//!   dynamic batcher, session manager, metrics.
+//! * [`net`] — simulated bandwidth/latency channel.
+//! * [`sim`] — discrete-event multi-client simulator (Fig 7).
+//! * [`eval`] — MCQ accuracy harness + activation analysis (Tables
+//!   II/III, Figs 2/4/5).
+//! * [`dsp`], [`linalg`], [`tensor`], [`util`], [`config`] — zero-dep
+//!   substrates (FFT, QR/SVD, `.fcw` IO, JSON, RNG, config system).
+
+pub mod codec;
+pub mod config;
+pub mod coordinator;
+pub mod dsp;
+pub mod eval;
+pub mod linalg;
+pub mod model;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;

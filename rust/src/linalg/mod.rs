@@ -1,0 +1,12 @@
+//! Dense linear-algebra substrate (f64): matrices, Householder QR,
+//! one-sided Jacobi SVD.  Powers the QR / FWSVD / ASVD / SVD-LLM
+//! baseline codecs — the dependency set has no LAPACK, so the paper's
+//! comparison set is built from scratch and oracle-tested.
+
+pub mod matrix;
+pub mod qr;
+pub mod svd;
+
+pub use matrix::Mat;
+pub use qr::qr_thin;
+pub use svd::svd_thin;

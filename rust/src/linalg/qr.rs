@@ -1,0 +1,170 @@
+//! Thin Householder QR: A (m×n) = Q (m×k) R (k×n), k = min(m, n).
+//! Backs the QR baseline codec (rank-r truncation of Q·R).
+
+use super::matrix::Mat;
+
+/// Returns (Q, R) with Q having orthonormal columns and R upper
+/// triangular (its first k rows; rows below the diagonal are zero).
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    let k = m.min(n);
+    let mut r = a.clone();
+    // Householder vectors stored per reflection
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k);
+
+    for j in 0..k {
+        // build the reflector for column j below the diagonal
+        let mut norm = 0.0;
+        for i in j..m {
+            norm += r[(i, j)] * r[(i, j)];
+        }
+        norm = norm.sqrt();
+        let mut v = vec![0.0; m - j];
+        if norm > 0.0 {
+            let alpha = if r[(j, j)] >= 0.0 { -norm } else { norm };
+            v[0] = r[(j, j)] - alpha;
+            for i in j + 1..m {
+                v[i - j] = r[(i, j)];
+            }
+            let vnorm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if vnorm > 1e-300 {
+                v.iter_mut().for_each(|x| *x /= vnorm);
+                // apply H = I - 2vv^T to the trailing block of R
+                for c in j..n {
+                    let mut dot = 0.0;
+                    for i in j..m {
+                        dot += v[i - j] * r[(i, c)];
+                    }
+                    for i in j..m {
+                        r[(i, c)] -= 2.0 * v[i - j] * dot;
+                    }
+                }
+            } else {
+                v.iter_mut().for_each(|x| *x = 0.0);
+            }
+        }
+        vs.push(v);
+    }
+
+    // accumulate Q = H_0 H_1 .. H_{k-1} applied to the thin identity
+    let mut q = Mat::zeros(m, k);
+    for j in 0..k {
+        q[(j, j)] = 1.0;
+    }
+    for j in (0..k).rev() {
+        let v = &vs[j];
+        if v.iter().all(|&x| x == 0.0) {
+            continue;
+        }
+        for c in 0..k {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += v[i - j] * q[(i, c)];
+            }
+            for i in j..m {
+                q[(i, c)] -= 2.0 * v[i - j] * dot;
+            }
+        }
+    }
+
+    // zero strictly-lower part of the thin R (numerical dust)
+    let mut r_thin = Mat::zeros(k, n);
+    for i in 0..k {
+        for c in i..n {
+            r_thin[(i, c)] = r[(i, c)];
+        }
+    }
+    (q, r_thin)
+}
+
+/// Rank-r approximation via QR truncation: Q[:, :r] @ R[:r, :].
+pub fn qr_rank_r(a: &Mat, rank: usize) -> Mat {
+    let (q, r) = qr_thin(a);
+    let rk = rank.min(q.cols);
+    let mut qr_ = Mat::zeros(q.rows, rk);
+    for i in 0..q.rows {
+        for j in 0..rk {
+            qr_[(i, j)] = q[(i, j)];
+        }
+    }
+    let mut rr = Mat::zeros(rk, r.cols);
+    for i in 0..rk {
+        rr.row_mut(i).copy_from_slice(r.row(i));
+    }
+    qr_.matmul(&rr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut m = Mat::zeros(r, c);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    #[test]
+    fn reconstructs() {
+        for (m, n) in [(6, 4), (4, 6), (8, 8), (48, 96), (1, 5), (5, 1)] {
+            let a = rand_mat(m, n, (m * 31 + n) as u64);
+            let (q, r) = qr_thin(&a);
+            let err = q.matmul(&r).sub(&a).frob_norm() / a.frob_norm().max(1e-12);
+            assert!(err < 1e-10, "({m},{n}) err={err}");
+        }
+    }
+
+    #[test]
+    fn q_orthonormal() {
+        let a = rand_mat(20, 12, 3);
+        let (q, _) = qr_thin(&a);
+        let qtq = q.transpose().matmul(&q);
+        let err = qtq.sub(&Mat::eye(12)).frob_norm();
+        assert!(err < 1e-10, "err={err}");
+    }
+
+    #[test]
+    fn r_upper_triangular() {
+        let a = rand_mat(10, 7, 4);
+        let (_, r) = qr_thin(&a);
+        for i in 0..r.rows {
+            for j in 0..i.min(r.cols) {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn full_rank_truncation_is_exact() {
+        let a = rand_mat(9, 5, 6);
+        let approx = qr_rank_r(&a, 5);
+        assert!(approx.sub(&a).frob_norm() < 1e-10);
+    }
+
+    #[test]
+    fn truncation_error_decreases_with_rank() {
+        let a = rand_mat(24, 16, 7);
+        let mut last = f64::MAX;
+        for r in [2, 4, 8, 12, 16] {
+            let err = qr_rank_r(&a, r).sub(&a).frob_norm();
+            assert!(err <= last + 1e-9, "rank={r}");
+            last = err;
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficient() {
+        // two identical columns
+        let mut a = rand_mat(8, 4, 8);
+        for i in 0..8 {
+            let v = a[(i, 0)];
+            a[(i, 1)] = v;
+        }
+        let (q, r) = qr_thin(&a);
+        assert!(q.matmul(&r).sub(&a).frob_norm() < 1e-9);
+    }
+}

@@ -1,0 +1,202 @@
+//! One-sided Jacobi SVD: A (m×n, m ≥ n internally; transposed
+//! otherwise) = U Σ Vᵀ with singular values sorted descending.
+//! Backs the FWSVD / ASVD / SVD-LLM baseline codecs.
+
+use super::matrix::Mat;
+
+pub struct Svd {
+    pub u: Mat,      // m × k
+    pub s: Vec<f64>, // k, descending
+    pub vt: Mat,     // k × n
+}
+
+/// Thin SVD via one-sided Jacobi rotations on the columns of A.
+pub fn svd_thin(a: &Mat) -> Svd {
+    if a.rows >= a.cols {
+        svd_tall(a)
+    } else {
+        // A = U S Vt  =>  At = V S Ut
+        let t = svd_tall(&a.transpose());
+        Svd { u: t.vt.transpose(), s: t.s, vt: t.u.transpose() }
+    }
+}
+
+fn svd_tall(a: &Mat) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    debug_assert!(m >= n);
+    // work on columns: w = A (copy), v = I
+    let mut w = a.clone();
+    let mut v = Mat::eye(n);
+    let eps = 1e-12;
+    let max_sweeps = 60;
+
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // gram entries for the column pair
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let (x, y) = (w[(i, p)], w[(i, q)]);
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) gram entry
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let (x, y) = (w[(i, p)], w[(i, q)]);
+                    w[(i, p)] = c * x - s * y;
+                    w[(i, q)] = s * x + c * y;
+                }
+                for i in 0..n {
+                    let (x, y) = (v[(i, p)], v[(i, q)]);
+                    v[(i, p)] = c * x - s * y;
+                    v[(i, q)] = s * x + c * y;
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+
+    // singular values = column norms of w; U = normalized columns
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|c| (0..m).map(|i| w[(i, c)] * w[(i, c)]).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&x, &y| norms[y].partial_cmp(&norms[x]).unwrap());
+
+    let mut u = Mat::zeros(m, n);
+    let mut s = vec![0.0; n];
+    let mut vt = Mat::zeros(n, n);
+    for (new, &old) in order.iter().enumerate() {
+        s[new] = norms[old];
+        let inv = if norms[old] > 1e-300 { 1.0 / norms[old] } else { 0.0 };
+        for i in 0..m {
+            u[(i, new)] = w[(i, old)] * inv;
+        }
+        for i in 0..n {
+            vt[(new, i)] = v[(i, old)];
+        }
+    }
+    Svd { u, s, vt }
+}
+
+/// Best rank-r approximation from the thin SVD.
+pub fn svd_rank_r(a: &Mat, rank: usize) -> Mat {
+    let d = svd_thin(a);
+    reconstruct_rank_r(&d, rank)
+}
+
+pub fn reconstruct_rank_r(d: &Svd, rank: usize) -> Mat {
+    let k = rank.min(d.s.len());
+    let (m, n) = (d.u.rows, d.vt.cols);
+    let mut out = Mat::zeros(m, n);
+    for r in 0..k {
+        let s = d.s[r];
+        for i in 0..m {
+            let us = d.u[(i, r)] * s;
+            if us == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out[(i, j)] += us * d.vt[(r, j)];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let mut m = Mat::zeros(r, c);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    #[test]
+    fn reconstructs_full() {
+        for (m, n) in [(8, 5), (5, 8), (12, 12), (30, 20)] {
+            let a = rand_mat(m, n, (m + 7 * n) as u64);
+            let d = svd_thin(&a);
+            let approx = reconstruct_rank_r(&d, m.min(n));
+            let err = approx.sub(&a).frob_norm() / a.frob_norm();
+            assert!(err < 1e-9, "({m},{n}) err={err}");
+        }
+    }
+
+    #[test]
+    fn singular_values_sorted_nonneg() {
+        let a = rand_mat(16, 10, 3);
+        let d = svd_thin(&a);
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(d.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn u_v_orthonormal() {
+        let a = rand_mat(14, 9, 5);
+        let d = svd_thin(&a);
+        let utu = d.u.transpose().matmul(&d.u);
+        assert!(utu.sub(&Mat::eye(9)).frob_norm() < 1e-9);
+        let vvt = d.vt.matmul(&d.vt.transpose());
+        assert!(vvt.sub(&Mat::eye(9)).frob_norm() < 1e-9);
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let a = Mat::from_rows(&[&[3.0, 0.0], &[0.0, -2.0], &[0.0, 0.0]]);
+        let d = svd_thin(&a);
+        assert!((d.s[0] - 3.0).abs() < 1e-10);
+        assert!((d.s[1] - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn rank_r_is_truncation_optimal_vs_qr() {
+        // Eckart-Young: SVD rank-r error <= QR rank-r error
+        let a = rand_mat(24, 18, 9);
+        for r in [2, 5, 9] {
+            let es = svd_rank_r(&a, r).sub(&a).frob_norm();
+            let eq = crate::linalg::qr::qr_rank_r(&a, r).sub(&a).frob_norm();
+            assert!(es <= eq + 1e-9, "rank {r}: svd {es} qr {eq}");
+        }
+    }
+
+    #[test]
+    fn rank_r_error_equals_tail_energy() {
+        let a = rand_mat(20, 12, 11);
+        let d = svd_thin(&a);
+        for r in [1, 4, 8] {
+            let err = reconstruct_rank_r(&d, r).sub(&a).frob_norm();
+            let tail: f64 = d.s[r..].iter().map(|s| s * s).sum::<f64>().sqrt();
+            assert!((err - tail).abs() < 1e-8, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn low_rank_input_recovered_exactly() {
+        let b = rand_mat(16, 3, 13);
+        let c = rand_mat(3, 10, 14);
+        let a = b.matmul(&c); // rank 3
+        let err = svd_rank_r(&a, 3).sub(&a).frob_norm() / a.frob_norm();
+        assert!(err < 1e-9);
+    }
+}

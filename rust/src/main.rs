@@ -1,0 +1,176 @@
+//! `repro` — the FourierCompress CLI: serving coordinator, device
+//! client, experiment drivers (tables/figures), analysis dumps, and
+//! the multi-client simulator.  See README.md for a tour.
+
+use anyhow::Result;
+use fourier_compress::config::{EvalConfig, FromJson, ServeConfig, SimConfig};
+use fourier_compress::coordinator::{DeviceClient, EdgeServer};
+use fourier_compress::eval::tables::{self, EvalContext};
+use fourier_compress::info;
+use fourier_compress::net::Channel;
+use fourier_compress::runtime::ArtifactStore;
+use fourier_compress::sim;
+use fourier_compress::util::cli::Args;
+use fourier_compress::util::json::Json;
+use std::sync::Arc;
+
+const USAGE: &str = "\
+repro — FourierCompress reproduction CLI
+
+USAGE: repro <command> [--config FILE] [--set key=value]...
+
+Commands:
+  eval       accuracy experiments (--table2 --table3 --fig4 --fig5 or --all)
+  analyze    Fig-2 activation analysis (--model NAME --ratio R)
+  simulate   Fig-7 multi-client DES (--set compute_units=8 ...)
+  serve      run the edge server (--set listen=.. ratio=8 ...)
+  client     run a device client (--addr A --prompt P --max-new N --gbps G)
+  info       print manifest summary
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let overrides = args.get_all("set");
+    match args.subcommand.as_deref() {
+        Some("eval") => cmd_eval(&args, &overrides),
+        Some("analyze") => cmd_analyze(&args, &overrides),
+        Some("simulate") => cmd_simulate(&args, &overrides),
+        Some("serve") => cmd_serve(&args, &overrides),
+        Some("client") => cmd_client(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_eval(args: &Args, overrides: &[String]) -> Result<()> {
+    let cfg = EvalConfig::load(args.get("config"), overrides)?;
+    let out_dir = cfg.out.clone();
+    let ctx = EvalContext::new(cfg)?;
+    let all = args.has("all");
+    let datasets = ctx.datasets();
+
+    let t2 = if all || args.has("table2") {
+        let t2 = tables::table2(&ctx)?;
+        println!("{}", tables::render_table(&t2, &datasets));
+        Some(t2)
+    } else {
+        // reuse a previous table2 run when available
+        std::fs::read_to_string(format!("{out_dir}/table2.json"))
+            .ok()
+            .and_then(|s| fourier_compress::util::json::parse(&s).ok())
+    };
+
+    if all || args.has("table3") {
+        let t2 = t2.clone().unwrap_or_else(Json::obj);
+        let t3 = tables::table3(&ctx, &t2)?;
+        println!("{}", tables::render_table(&t3, &datasets));
+    }
+    if all || args.has("fig4") {
+        let model = args.str_or("model", "llamette-s");
+        tables::fig4(&ctx, &model, &["pa", "oa", "cq", "ae"])?;
+    }
+    if all || args.has("fig5") {
+        let model = args.str_or("model", "llamette-s");
+        tables::fig5(&ctx, &model, &["pa", "oa"])?;
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args, overrides: &[String]) -> Result<()> {
+    let cfg = EvalConfig::load(args.get("config"), overrides)?;
+    let out_dir = cfg.out.clone();
+    let ctx = EvalContext::new(cfg)?;
+    let model = args.str_or("model", "llamette-s");
+    let ratio = args.f64_or("ratio", 8.0);
+    let j = fourier_compress::eval::analysis::analyze(&ctx, &model, ratio)?;
+    std::fs::create_dir_all(&out_dir)?;
+    let path = format!("{out_dir}/fig2_{model}.json");
+    std::fs::write(&path, j.to_string_pretty())?;
+    info!("analyze", "wrote {path}");
+    if let Some(s) = j.get("similarity_by_layer").and_then(|v| v.get("oa")) {
+        println!("similarity by layer (oa): {}", s.to_string_compact());
+    }
+    if let Some(e) = j.path("recon_error_by_layer.fc") {
+        println!("fc recon err by layer:    {}", e.to_string_compact());
+    }
+    if let Some(e) = j.path("recon_error_by_layer.topk") {
+        println!("topk recon err by layer:  {}", e.to_string_compact());
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args, overrides: &[String]) -> Result<()> {
+    let cfg = SimConfig::load(args.get("config"), overrides)?;
+    let j = sim::fig7(&cfg);
+    let out = args.str_or("out", "results");
+    std::fs::create_dir_all(&out)?;
+    let path = format!("{out}/fig7_units{}.json", cfg.compute_units);
+    std::fs::write(&path, j.to_string_pretty())?;
+    info!("simulate", "wrote {path}");
+    println!("{}", j.to_string_pretty());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, overrides: &[String]) -> Result<()> {
+    let cfg = ServeConfig::load(args.get("config"), overrides)?;
+    let store = Arc::new(ArtifactStore::open(cfg.artifacts.clone())?);
+    let handle = EdgeServer::start(cfg, store)?;
+    println!("serving on {} — ctrl-c to stop", handle.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7433");
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let prompt = args.str_or("prompt", "Q mira hue ? A");
+    let max_new = args.usize_or("max-new", 8);
+    let gbps = args.f64_or("gbps", 0.0);
+    let channel = if gbps > 0.0 {
+        Channel::gbps(gbps, args.usize_or("latency-us", 100) as u64)
+    } else {
+        Channel::unlimited()
+    };
+    let store = ArtifactStore::open(artifacts)?;
+    let mut client = DeviceClient::connect(&addr, &store, 1, channel)?;
+    let gen = client.generate(&prompt, max_new)?;
+    println!("prompt:     {}", gen.prompt);
+    println!("completion: {:?}", gen.completion);
+    println!("steps:      {}", gen.steps);
+    println!("bytes sent: {} (vs {} uncompressed, ratio {:.1}x)",
+             client.stats.bytes_sent, client.stats.bytes_uncompressed,
+             client.stats.compression_ratio());
+    println!("server:     {}", client.server_stats()?);
+    client.bye()?;
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let store = ArtifactStore::open(args.str_or("artifacts", "artifacts"))?;
+    println!("platform: {}", store.runtime.platform());
+    for m in store.model_names() {
+        let j = store.model_meta(&m)?;
+        println!("model {m}: d={} L={} params={}",
+                 j.usize_or("d_model", 0), j.usize_or("n_layers", 0),
+                 j.usize_or("n_params", 0));
+    }
+    println!("datasets: {}", store.dataset_names().join(", "));
+    if store.manifest.get("serving").is_some() {
+        println!("serving: {}",
+                 store.manifest.path("serving.model").and_then(|v| v.as_str())
+                     .unwrap_or("?"));
+    }
+    Ok(())
+}

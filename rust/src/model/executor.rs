@@ -1,0 +1,158 @@
+//! The composable split executor: embed → layers 0..k (client) →
+//! host-side codec round-trip on the boundary activation → layers
+//! k..L (server) → head, all through the per-layer HLO artifacts.
+//!
+//! This is the eval harness's engine: because the layer artifact takes
+//! its weights as arguments, ANY split depth and ANY codec/ratio can
+//! be exercised without re-lowering (DESIGN.md §3).  The fused
+//! serving path (pallas codec baked into client/server HLOs) lives in
+//! the coordinator instead.
+
+use super::{weights::Weights, ModelMeta};
+use crate::codec::{fourier::FourierCodec, block_ratio, fc_block, Codec};
+use crate::runtime::{ArtifactStore, Executable};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+pub struct SplitExecutor {
+    pub meta: ModelMeta,
+    pub weights: Weights,
+    embed: Arc<Executable>,
+    layer: Arc<Executable>,
+    head: Arc<Executable>,
+}
+
+/// What to do at the split boundary.
+#[derive(Clone)]
+pub enum Boundary<'a> {
+    /// No compression (paper's baseline).
+    None,
+    /// A codec at a target ratio, applied per batch element on the
+    /// cropped `len × D` activation (PAD rows are zeroed, not sent).
+    Codec { codec: &'a dyn Codec, ratio: f64 },
+    /// FourierCompress with an explicit block (ratio sweeps).
+    FcBlock { ks: usize, kd: usize },
+}
+
+impl SplitExecutor {
+    pub fn new(store: &ArtifactStore, model: &str) -> Result<SplitExecutor> {
+        let meta = ModelMeta::from_manifest(model, store.model_meta(model)?)?;
+        let weights = Weights::load(&store.root, &meta)?;
+        Ok(SplitExecutor {
+            embed: store.get(&meta.embed_hlo)?,
+            layer: store.get(&meta.layer_hlo)?,
+            head: store.get(&meta.head_hlo)?,
+            meta,
+            weights,
+        })
+    }
+
+    /// Run a full batch through the split pipeline.
+    ///
+    /// * `tokens`: `[B, S]` i32, padded to the artifact geometry.
+    /// * `lens`: true sequence length per element (codec crops to it).
+    /// * `split`: number of client-side layers (0 = compress raw
+    ///   embeddings, paper's setting is 1).
+    ///
+    /// Returns logits `[B, S, V]` and the mean achieved ratio.
+    pub fn forward_split(&self, tokens: &Tensor, lens: &[usize], split: usize,
+                         boundary: &Boundary) -> Result<(Tensor, f64)> {
+        let (b, s) = (tokens.shape[0], tokens.shape[1]);
+        if b != self.meta.eval_batch || s != self.meta.eval_seq {
+            bail!("batch geometry {b}x{s} != artifact {}x{}",
+                  self.meta.eval_batch, self.meta.eval_seq);
+        }
+        if split > self.meta.n_layers {
+            bail!("split {split} > n_layers {}", self.meta.n_layers);
+        }
+
+        // embed
+        let mut args = vec![tokens.clone()];
+        args.extend(self.weights.embed_args()?);
+        let mut h = self.embed.run(&args)?.remove(0);
+
+        // client layers
+        for i in 0..split {
+            h = self.run_layer(i, h)?;
+        }
+
+        // boundary codec
+        let ratio = self.apply_boundary(&mut h, lens, boundary)?;
+
+        // server layers
+        for i in split..self.meta.n_layers {
+            h = self.run_layer(i, h)?;
+        }
+
+        // head
+        let mut args = vec![h];
+        args.extend(self.weights.head_args()?);
+        let logits = self.head.run(&args)?.remove(0);
+        Ok((logits, ratio))
+    }
+
+    fn run_layer(&self, i: usize, h: Tensor) -> Result<Tensor> {
+        let mut args = vec![h];
+        args.extend(self.weights.layer_args(&self.meta, i)?);
+        Ok(self.layer.run(&args)?.remove(0))
+    }
+
+    /// Extract per-layer activations (after each block) for the
+    /// analysis driver (Fig 2).  Returns L tensors of shape [B, S, D].
+    pub fn activations(&self, tokens: &Tensor) -> Result<Vec<Tensor>> {
+        let mut args = vec![tokens.clone()];
+        args.extend(self.weights.embed_args()?);
+        let mut h = self.embed.run(&args)?.remove(0);
+        let mut acts = Vec::with_capacity(self.meta.n_layers);
+        for i in 0..self.meta.n_layers {
+            h = self.run_layer(i, h)?;
+            acts.push(h.clone());
+        }
+        Ok(acts)
+    }
+
+    fn apply_boundary(&self, h: &mut Tensor, lens: &[usize], boundary: &Boundary)
+        -> Result<f64> {
+        let (b, s, d) = (h.shape[0], h.shape[1], h.shape[2]);
+        let data = h.as_f32_mut();
+        let mut ratios = Vec::with_capacity(b);
+        for e in 0..b {
+            let len = lens.get(e).copied().unwrap_or(s).clamp(1, s);
+            let base = e * s * d;
+            let crop: Vec<f32> = data[base..base + len * d].to_vec();
+            let (recon, ratio) = match boundary {
+                Boundary::None => (crop, 1.0),
+                Boundary::Codec { codec, ratio } => {
+                    let p = codec.compress(&crop, len, d, *ratio)?;
+                    (codec.decompress(&p)?, p.achieved_ratio())
+                }
+                Boundary::FcBlock { ks, kd } => {
+                    let ks = (*ks).min(len);
+                    let ks = if ks == len { ks } else if ks % 2 == 0 { ks.max(2) - 1 } else { ks };
+                    let fc = FourierCodec::default();
+                    let p = fc.compress_block(&crop, len, d, ks, *kd)?;
+                    (fc.decompress(&p)?, p.achieved_ratio())
+                }
+            };
+            data[base..base + len * d].copy_from_slice(&recon);
+            // zero the PAD region: it was never transmitted
+            if !matches!(boundary, Boundary::None) {
+                for v in data[base + len * d..base + s * d].iter_mut() {
+                    *v = 0.0;
+                }
+            }
+            ratios.push(ratio);
+        }
+        Ok(ratios.iter().sum::<f64>() / ratios.len().max(1) as f64)
+    }
+
+    /// FC block for this model at a target ratio over `len` rows.
+    pub fn fc_block_for(&self, len: usize, ratio: f64) -> (usize, usize) {
+        fc_block(len, self.meta.d_model, ratio, Some(self.meta.kd_band()))
+    }
+
+    pub fn fc_ratio_for(&self, len: usize, ks: usize, kd: usize) -> f64 {
+        block_ratio(len, self.meta.d_model, ks, kd)
+    }
+}

@@ -1,0 +1,112 @@
+//! Model runtime: manifest-driven metadata, weight loading, the
+//! byte-level tokenizer, and the composable split executor that runs
+//! client layers / codec boundary / server layers at ANY split depth.
+
+pub mod executor;
+pub mod tokenizer;
+pub mod weights;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Geometry + artifact paths for one model, read from the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub max_seq: usize,
+    pub qkv_bias: bool,
+    /// hidden-axis rfft band of the layer-1 activations (kd = 2b-1)
+    pub l1_freq_bins: usize,
+    pub n_params: usize,
+    pub weights_path: String,
+    pub golden_path: String,
+    pub eval_batch: usize,
+    pub eval_seq: usize,
+    pub embed_hlo: String,
+    pub layer_hlo: String,
+    pub head_hlo: String,
+    pub layer_weight_names: Vec<String>,
+}
+
+impl ModelMeta {
+    pub fn from_manifest(name: &str, j: &Json) -> Result<ModelMeta> {
+        let art = |k: &str| -> Result<String> {
+            j.path(&format!("artifacts.{k}.path"))
+                .and_then(|v| v.as_str())
+                .map(String::from)
+                .ok_or_else(|| anyhow!("model {name}: missing artifact {k}"))
+        };
+        Ok(ModelMeta {
+            name: name.to_string(),
+            d_model: j.usize_or("d_model", 0),
+            n_layers: j.usize_or("n_layers", 0),
+            n_heads: j.usize_or("n_heads", 0),
+            n_kv_heads: j.usize_or("n_kv_heads", 0),
+            d_ff: j.usize_or("d_ff", 0),
+            vocab_size: j.usize_or("vocab_size", 259),
+            max_seq: j.usize_or("max_seq", 64),
+            qkv_bias: j.get("qkv_bias").and_then(|v| v.as_bool()).unwrap_or(false),
+            l1_freq_bins: j.usize_or("l1_freq_bins", 8),
+            n_params: j.usize_or("n_params", 0),
+            weights_path: j.str_or("weights", ""),
+            golden_path: j.str_or("golden", ""),
+            eval_batch: j.usize_or("eval_batch", 8),
+            eval_seq: j.usize_or("eval_seq", 64),
+            embed_hlo: art("embed")?,
+            layer_hlo: art("layer")?,
+            head_hlo: art("head")?,
+            layer_weight_names: j
+                .get("layer_weight_names")
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|v| v.as_str().map(String::from))
+                        .collect()
+                })
+                .unwrap_or_default(),
+        })
+    }
+
+    /// The calibrated FC hidden-axis block width for this model.
+    pub fn kd_band(&self) -> usize {
+        2 * self.l1_freq_bins - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn parses_manifest_entry() {
+        let j = parse(
+            r#"{"d_model": 96, "n_layers": 6, "n_heads": 4, "n_kv_heads": 4,
+                "d_ff": 256, "l1_freq_bins": 7, "n_params": 714528,
+                "weights": "weights/x.fcw", "golden": "golden/x.golden.fcw",
+                "eval_batch": 8, "eval_seq": 64,
+                "layer_weight_names": ["ln1", "wq"],
+                "artifacts": {"embed": {"path": "e.hlo"},
+                               "layer": {"path": "l.hlo"},
+                               "head": {"path": "h.hlo"}}}"#,
+        )
+        .unwrap();
+        let m = ModelMeta::from_manifest("x", &j).unwrap();
+        assert_eq!(m.d_model, 96);
+        assert_eq!(m.kd_band(), 13);
+        assert_eq!(m.layer_hlo, "l.hlo");
+        assert_eq!(m.layer_weight_names, vec!["ln1", "wq"]);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let j = parse(r#"{"d_model": 96, "artifacts": {}}"#).unwrap();
+        assert!(ModelMeta::from_manifest("x", &j).is_err());
+    }
+}

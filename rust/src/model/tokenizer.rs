@@ -1,0 +1,65 @@
+//! Byte-level tokenizer — mirror of python/compile/datasets.py
+//! (token = byte; BOS/EOS/PAD specials above 255).
+
+pub const VOCAB_SIZE: usize = 259;
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+pub const PAD: i32 = 258;
+
+pub fn encode(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| b as i32).collect()
+}
+
+pub fn encode_prompt(text: &str) -> Vec<i32> {
+    let mut v = Vec::with_capacity(text.len() + 1);
+    v.push(BOS);
+    v.extend(text.bytes().map(|b| b as i32));
+    v
+}
+
+pub fn decode(ids: &[i32]) -> String {
+    let bytes: Vec<u8> = ids
+        .iter()
+        .filter(|&&i| (0..256).contains(&i))
+        .map(|&i| i as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Pad (or truncate) to `len` with PAD.
+pub fn pad_to(ids: &[i32], len: usize) -> Vec<i32> {
+    let mut v: Vec<i32> = ids.iter().copied().take(len).collect();
+    v.resize(len, PAD);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let s = "Q mira hue ? A blue .";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn prompt_has_bos() {
+        let ids = encode_prompt("hi");
+        assert_eq!(ids, vec![BOS, 104, 105]);
+        assert_eq!(decode(&ids), "hi"); // specials dropped
+    }
+
+    #[test]
+    fn padding() {
+        let ids = vec![1, 2, 3];
+        assert_eq!(pad_to(&ids, 5), vec![1, 2, 3, PAD, PAD]);
+        assert_eq!(pad_to(&ids, 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn matches_python_ids() {
+        // "Q" = 81, " " = 32 (byte identity)
+        assert_eq!(encode("Q "), vec![81, 32]);
+    }
+}

@@ -1,0 +1,119 @@
+//! Weight set: the model's `.fcw` tensors plus helpers that assemble
+//! artifact argument lists in the canonical order recorded in the
+//! manifest (weight_args templates with `{i}` layer substitution).
+
+use super::ModelMeta;
+use crate::tensor::{io, Tensor};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub struct Weights {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(artifacts_root: impl AsRef<Path>, meta: &ModelMeta) -> Result<Weights> {
+        let path = artifacts_root.as_ref().join(&meta.weights_path);
+        Ok(Weights { tensors: io::read_fcw(path)? })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("weight '{name}' missing"))
+    }
+
+    /// Arguments for the per-layer artifact at layer `i`:
+    /// `layers.{i}.<name>` in canonical order.
+    pub fn layer_args(&self, meta: &ModelMeta, i: usize) -> Result<Vec<Tensor>> {
+        meta.layer_weight_names
+            .iter()
+            .map(|n| self.get(&format!("layers.{i}.{n}")).cloned())
+            .collect()
+    }
+
+    pub fn embed_args(&self) -> Result<Vec<Tensor>> {
+        Ok(vec![self.get("tok_emb")?.clone()])
+    }
+
+    pub fn head_args(&self) -> Result<Vec<Tensor>> {
+        Ok(vec![self.get("final_norm")?.clone(), self.get("lm_head")?.clone()])
+    }
+
+    /// Stacked layer weights [lo, hi) for the fused server artifact:
+    /// one tensor per canonical name with a new leading axis.
+    pub fn stacked_layer_args(&self, meta: &ModelMeta, lo: usize, hi: usize)
+        -> Result<Vec<Tensor>> {
+        let mut out = Vec::new();
+        for n in &meta.layer_weight_names {
+            let first = self.get(&format!("layers.{lo}.{n}"))?;
+            let mut shape = vec![hi - lo];
+            shape.extend_from_slice(&first.shape);
+            let mut data = Vec::with_capacity(shape.iter().product());
+            for i in lo..hi {
+                data.extend_from_slice(self.get(&format!("layers.{i}.{n}"))?.as_f32());
+            }
+            out.push(Tensor::f32(shape, data));
+        }
+        Ok(out)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(|t| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn fake() -> (Weights, ModelMeta) {
+        let mut tensors = BTreeMap::new();
+        tensors.insert("tok_emb".into(), Tensor::zeros_f32(vec![10, 4]));
+        tensors.insert("final_norm".into(), Tensor::zeros_f32(vec![4]));
+        tensors.insert("lm_head".into(), Tensor::zeros_f32(vec![4, 10]));
+        for i in 0..2 {
+            tensors.insert(format!("layers.{i}.ln1"), Tensor::f32(vec![4], vec![i as f32; 4]));
+            tensors.insert(format!("layers.{i}.wq"), Tensor::zeros_f32(vec![4, 4]));
+        }
+        let meta = ModelMeta {
+            name: "t".into(), d_model: 4, n_layers: 2, n_heads: 1,
+            n_kv_heads: 1, d_ff: 8, vocab_size: 10, max_seq: 8,
+            qkv_bias: false, l1_freq_bins: 2, n_params: 0,
+            weights_path: String::new(), golden_path: String::new(),
+            eval_batch: 1, eval_seq: 8,
+            embed_hlo: String::new(), layer_hlo: String::new(),
+            head_hlo: String::new(),
+            layer_weight_names: vec!["ln1".into(), "wq".into()],
+        };
+        (Weights { tensors }, meta)
+    }
+
+    #[test]
+    fn layer_args_ordered() {
+        let (w, meta) = fake();
+        let args = w.layer_args(&meta, 1).unwrap();
+        assert_eq!(args.len(), 2);
+        assert_eq!(args[0].as_f32()[0], 1.0); // layer 1's ln1
+        assert_eq!(args[1].shape, vec![4, 4]);
+    }
+
+    #[test]
+    fn stacked_args_shape() {
+        let (w, meta) = fake();
+        let args = w.stacked_layer_args(&meta, 0, 2).unwrap();
+        assert_eq!(args[0].shape, vec![2, 4]);
+        assert_eq!(args[1].shape, vec![2, 4, 4]);
+        // layer order preserved in the stack
+        assert_eq!(args[0].as_f32()[0], 0.0);
+        assert_eq!(args[0].as_f32()[4], 1.0);
+    }
+
+    #[test]
+    fn missing_weight_errors() {
+        let (w, meta) = fake();
+        assert!(w.layer_args(&meta, 5).is_err());
+    }
+}

@@ -1,0 +1,80 @@
+//! Simulated wireless channel: token-bucket bandwidth shaping +
+//! propagation latency, wrapped around byte transfers.
+//!
+//! Two uses: (1) the live coordinator wraps its TCP streams in a
+//! [`Channel`] to emulate 6G link rates on loopback; (2) the DES
+//! (Fig 7) uses [`Channel::transfer_time`] analytically.
+
+use std::time::Duration;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Channel {
+    /// Link rate in bits per second (0 = unlimited).
+    pub bits_per_sec: f64,
+    /// One-way propagation latency.
+    pub latency: Duration,
+}
+
+impl Channel {
+    pub fn gbps(rate: f64, latency_us: u64) -> Channel {
+        Channel {
+            bits_per_sec: rate * 1e9,
+            latency: Duration::from_micros(latency_us),
+        }
+    }
+
+    pub fn unlimited() -> Channel {
+        Channel { bits_per_sec: 0.0, latency: Duration::ZERO }
+    }
+
+    /// Time for `bytes` to cross the link (serialisation + propagation).
+    pub fn transfer_time(&self, bytes: usize) -> Duration {
+        let ser = if self.bits_per_sec > 0.0 {
+            Duration::from_secs_f64(bytes as f64 * 8.0 / self.bits_per_sec)
+        } else {
+            Duration::ZERO
+        };
+        ser + self.latency
+    }
+
+    /// Sleep for the simulated transfer time (live-coordinator use).
+    pub fn throttle(&self, bytes: usize) {
+        let d = self.transfer_time(bytes);
+        if d > Duration::ZERO {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales_linearly() {
+        let ch = Channel::gbps(1.0, 0);
+        let t1 = ch.transfer_time(125_000_000); // 1 Gbit
+        assert!((t1.as_secs_f64() - 1.0).abs() < 1e-9);
+        let t2 = ch.transfer_time(250_000_000);
+        assert!((t2.as_secs_f64() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_added() {
+        let ch = Channel::gbps(10.0, 500);
+        let t = ch.transfer_time(0);
+        assert_eq!(t, Duration::from_micros(500));
+    }
+
+    #[test]
+    fn unlimited_is_zero() {
+        assert_eq!(Channel::unlimited().transfer_time(1 << 30), Duration::ZERO);
+    }
+
+    #[test]
+    fn faster_link_is_faster() {
+        let b = 10_000_000usize;
+        assert!(Channel::gbps(10.0, 0).transfer_time(b)
+                < Channel::gbps(1.0, 0).transfer_time(b));
+    }
+}

@@ -1,0 +1,76 @@
+//! Artifact store: lazy-compiling, caching registry over the
+//! `artifacts/` directory + manifest.  One store per process; all
+//! executables are shared via Arc (compilation happens once per
+//! artifact regardless of how many threads request it).
+
+use super::{Executable, Runtime};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+pub struct ArtifactStore {
+    pub runtime: Arc<Runtime>,
+    pub root: PathBuf,
+    pub manifest: Json,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl ArtifactStore {
+    pub fn open(root: impl Into<PathBuf>) -> Result<ArtifactStore> {
+        let root = root.into();
+        let man_path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {} (run `make artifacts`)",
+                                     man_path.display()))?;
+        let manifest = json::parse(&text)?;
+        Ok(ArtifactStore {
+            runtime: Arc::new(Runtime::cpu()?),
+            root,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Get (compiling if needed) the artifact with the given hlo file
+    /// name (relative to `artifacts/hlo/`).
+    pub fn get(&self, hlo_name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(hlo_name) {
+            return Ok(e.clone());
+        }
+        let path = self.root.join("hlo").join(hlo_name);
+        let exe = Arc::new(self.runtime.load_hlo_text(&path)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(hlo_name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.manifest
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .map(|o| o.iter().map(|(k, _)| k.clone()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn model_meta(&self, name: &str) -> Result<&Json> {
+        self.manifest
+            .path(&format!("models.{name}"))
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+
+    pub fn dataset_names(&self) -> Vec<String> {
+        self.manifest
+            .get("datasets")
+            .and_then(|m| m.as_obj())
+            .map(|o| o.iter().map(|(k, _)| k.clone()).collect())
+            .unwrap_or_default()
+    }
+}

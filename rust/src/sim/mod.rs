@@ -1,0 +1,243 @@
+//! Discrete-event simulator for the multi-client scalability study
+//! (Fig 7).  Models N closed-loop clients sharing one uplink and an
+//! edge server with `compute_units` parallel accelerators.
+//!
+//! Per request (one "conversation turn" of `output_tokens` decode
+//! steps under the paper's recompute regime):
+//!   client think → [per step: compress + uplink transfer of the
+//!   (growing) activation + server queueing + compute] → response.
+//! The uplink is a shared FIFO resource, the server a `k`-server
+//! queue — exactly the two bottlenecks Fig 7 contrasts.
+
+pub mod des;
+
+use crate::config::SimConfig;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use des::{EventQueue, Resource};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arm {
+    /// uncompressed activations
+    Original,
+    /// FourierCompress at `fc_ratio`
+    Fc,
+}
+
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    pub clients: usize,
+    pub link_gbps: f64,
+    pub completed: usize,
+    pub mean_response_s: f64,
+    pub p95_response_s: f64,
+    pub server_util: f64,
+    pub link_util: f64,
+}
+
+/// Simulate one (clients, link, arm) cell of Fig 7.
+pub fn simulate(cfg: &SimConfig, clients: usize, link_gbps: f64, arm: Arm)
+    -> RunStats {
+    let mut rng = Rng::new(cfg.seed ^ (clients as u64) << 8
+                           ^ (link_gbps as u64) << 24
+                           ^ if arm == Arm::Fc { 1 } else { 0 });
+    let mut q = EventQueue::new();
+    let mut link = Resource::new(1);
+    let mut server = Resource::new(cfg.compute_units);
+
+    // per-step activation bytes: recompute regime — step t transmits
+    // the full (prompt + t tokens) × hidden fp32 activation
+    let bytes_at = |step: usize| -> f64 {
+        let toks = cfg.prompt_tokens + step;
+        let raw = (toks * cfg.hidden * 4) as f64;
+        match arm {
+            Arm::Original => raw,
+            Arm::Fc => raw / cfg.fc_ratio,
+        }
+    };
+    // compression cost on the device (hardware-accelerated FC is
+    // sub-ms; it shows up in Fig 6, not here, but we keep it honest)
+    let compress_s = match arm {
+        Arm::Original => 0.0,
+        Arm::Fc => 1.0e-4,
+    };
+    let link_rate = link_gbps * 1e9 / 8.0; // bytes/s
+
+    // state per in-flight request
+    #[derive(Clone)]
+    struct Req {
+        t_start: f64,
+        step: usize,
+    }
+    let mut reqs: Vec<Option<Req>> = vec![None; clients];
+    let mut responses: Vec<f64> = Vec::new();
+    let mut link_busy = 0.0f64;
+    let mut server_busy = 0.0f64;
+
+    // event kinds
+    const THINK_DONE: u32 = 0;
+    const LINK_GRANT: u32 = 1;
+    const LINK_DONE: u32 = 2;
+    const SERVER_GRANT: u32 = 3;
+    const SERVER_DONE: u32 = 4;
+
+    for c in 0..clients {
+        q.schedule(rng.exp(1.0 / cfg.think_time_s), THINK_DONE, c as u64);
+    }
+
+    let service_s = cfg.service_per_token_s;
+    while let Some(ev) = q.pop() {
+        if ev.time > cfg.horizon_s {
+            break;
+        }
+        let c = ev.payload as usize;
+        match ev.kind {
+            THINK_DONE => {
+                reqs[c] = Some(Req { t_start: ev.time, step: 0 });
+                link.request(&mut q, ev.time, LINK_GRANT, c as u64);
+            }
+            LINK_GRANT => {
+                let step = reqs[c].as_ref().map(|r| r.step).unwrap_or(0);
+                let dt = compress_s + bytes_at(step) / link_rate;
+                link_busy += dt;
+                q.schedule(ev.time + dt, LINK_DONE, c as u64);
+            }
+            LINK_DONE => {
+                link.release(&mut q, ev.time);
+                server.request(&mut q, ev.time, SERVER_GRANT, c as u64);
+            }
+            SERVER_GRANT => {
+                // one decode step: prefix recompute + next-token
+                let step = reqs[c].as_ref().map(|r| r.step).unwrap_or(0);
+                let toks = cfg.prompt_tokens + step;
+                let dt = service_s * (1.0 + toks as f64 / cfg.prompt_tokens as f64);
+                server_busy += dt;
+                q.schedule(ev.time + dt, SERVER_DONE, c as u64);
+            }
+            SERVER_DONE => {
+                server.release(&mut q, ev.time);
+                let done = {
+                    let r = reqs[c].as_mut().unwrap();
+                    r.step += 1;
+                    r.step >= cfg.output_tokens
+                };
+                if done {
+                    let r = reqs[c].take().unwrap();
+                    responses.push(ev.time - r.t_start);
+                    q.schedule(ev.time + rng.exp(1.0 / cfg.think_time_s),
+                               THINK_DONE, c as u64);
+                } else {
+                    link.request(&mut q, ev.time, LINK_GRANT, c as u64);
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    responses.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = responses.len();
+    let mean = if n > 0 { responses.iter().sum::<f64>() / n as f64 } else { f64::NAN };
+    let p95 = if n > 0 { responses[(n as f64 * 0.95) as usize % n] } else { f64::NAN };
+    RunStats {
+        clients,
+        link_gbps,
+        completed: n,
+        mean_response_s: mean,
+        p95_response_s: p95,
+        server_util: server_busy / (cfg.horizon_s * cfg.compute_units as f64),
+        link_util: link_busy / cfg.horizon_s,
+    }
+}
+
+/// The full Fig-7 sweep: clients × link rates × {Original, FC}.
+pub fn fig7(cfg: &SimConfig) -> Json {
+    let mut out = Json::obj();
+    out.set("compute_units", Json::Num(cfg.compute_units as f64));
+    out.set("fc_ratio", Json::Num(cfg.fc_ratio));
+    out.set("clients",
+            Json::Arr(cfg.clients.iter().map(|&c| Json::Num(c as f64)).collect()));
+    for &g in &cfg.link_gbps {
+        for (arm, tag) in [(Arm::Original, "orig"), (Arm::Fc, "fc")] {
+            let mut means = Vec::new();
+            let mut utils = Vec::new();
+            for &c in &cfg.clients {
+                let st = simulate(cfg, c, g, arm);
+                means.push(Json::Num((st.mean_response_s * 1000.0).round() / 1000.0));
+                utils.push(Json::Num((st.server_util * 1000.0).round() / 1000.0));
+            }
+            out.set(&format!("{tag}_{g}gbps_mean_s"), Json::Arr(means));
+            out.set(&format!("{tag}_{g}gbps_server_util"), Json::Arr(utils));
+        }
+        crate::info!("fig7", "link {g} Gbps done");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> SimConfig {
+        SimConfig {
+            clients: vec![4],
+            link_gbps: vec![1.0],
+            compute_units: 1,
+            think_time_s: 0.5,
+            output_tokens: 8,
+            prompt_tokens: 32,
+            hidden: 2048,
+            fc_ratio: 10.0,
+            service_per_token_s: 0.002,
+            horizon_s: 60.0,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn completes_requests() {
+        let st = simulate(&quick_cfg(), 4, 1.0, Arm::Fc);
+        assert!(st.completed > 10, "completed {}", st.completed);
+        assert!(st.mean_response_s > 0.0);
+    }
+
+    #[test]
+    fn fc_beats_original_when_bandwidth_bound() {
+        let mut cfg = quick_cfg();
+        cfg.compute_units = 8; // ample compute: link is the bottleneck
+        cfg.link_gbps = vec![0.2];
+        let orig = simulate(&cfg, 32, 0.2, Arm::Original);
+        let fc = simulate(&cfg, 32, 0.2, Arm::Fc);
+        assert!(fc.mean_response_s < orig.mean_response_s * 0.5,
+                "fc {} orig {}", fc.mean_response_s, orig.mean_response_s);
+    }
+
+    #[test]
+    fn link_speed_irrelevant_when_compute_bound() {
+        // Fig 7(a): single unit saturated by many clients
+        let mut cfg = quick_cfg();
+        cfg.compute_units = 1;
+        let slow = simulate(&cfg, 64, 1.0, Arm::Fc);
+        let fast = simulate(&cfg, 64, 10.0, Arm::Fc);
+        let rel = (slow.mean_response_s - fast.mean_response_s).abs()
+            / slow.mean_response_s;
+        assert!(rel < 0.25, "rel diff {rel}");
+        assert!(slow.server_util > 0.9, "util {}", slow.server_util);
+    }
+
+    #[test]
+    fn more_clients_more_latency_at_saturation() {
+        let cfg = quick_cfg();
+        let a = simulate(&cfg, 16, 1.0, Arm::Original);
+        let b = simulate(&cfg, 128, 1.0, Arm::Original);
+        assert!(b.mean_response_s > a.mean_response_s);
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = quick_cfg();
+        let a = simulate(&cfg, 8, 1.0, Arm::Fc);
+        let b = simulate(&cfg, 8, 1.0, Arm::Fc);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.mean_response_s, b.mean_response_s);
+    }
+}

@@ -1,0 +1,132 @@
+//! `.fcw` reader/writer — must stay byte-compatible with
+//! python/compile/tensor_io.py (magic "FCW1", little-endian).
+
+use super::{Tensor, TensorData};
+use anyhow::{bail, ensure, Result, Context};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"FCW1";
+
+pub fn read_fcw(path: impl AsRef<Path>) -> Result<BTreeMap<String, Tensor>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    read_fcw_bytes(&bytes)
+}
+
+pub fn read_fcw_bytes(bytes: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    let mut cur = std::io::Cursor::new(bytes);
+    let mut magic = [0u8; 4];
+    cur.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC, "bad .fcw magic {:?}", magic);
+    let n = read_u32(&mut cur)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let name_len = read_u16(&mut cur)? as usize;
+        let mut name = vec![0u8; name_len];
+        cur.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let mut hdr = [0u8; 2];
+        cur.read_exact(&mut hdr)?;
+        let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut cur)? as usize);
+        }
+        let count: usize = shape.iter().product();
+        let mut buf = vec![0u8; count * 4];
+        cur.read_exact(&mut buf)?;
+        let data = match dtype {
+            0 => TensorData::F32(
+                buf.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            1 => TensorData::I32(
+                buf.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            d => bail!("unknown dtype id {d}"),
+        };
+        out.insert(name, Tensor { shape, data });
+    }
+    Ok(out)
+}
+
+pub fn write_fcw(path: impl AsRef<Path>,
+                 tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u16).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        let dtype = match t.data {
+            TensorData::F32(_) => 0u8,
+            TensorData::I32(_) => 1u8,
+        };
+        f.write_all(&[dtype, t.shape.len() as u8])?;
+        for &d in &t.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert("a".into(), Tensor::f32(vec![2, 3], (0..6).map(|i| i as f32).collect()));
+        m.insert("b.i32".into(), Tensor::i32(vec![4], vec![-1, 0, 7, 1 << 20]));
+        m.insert("scalar".into(), Tensor::f32(vec![], vec![3.5]));
+        let dir = std::env::temp_dir().join("fcw_test_roundtrip.fcw");
+        write_fcw(&dir, &m).unwrap();
+        let back = read_fcw(&dir).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(read_fcw_bytes(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut m = BTreeMap::new();
+        m.insert("a".into(), Tensor::f32(vec![8], vec![1.0; 8]));
+        let path = std::env::temp_dir().join("fcw_test_trunc.fcw");
+        write_fcw(&path, &m).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(read_fcw_bytes(&bytes[..bytes.len() - 5]).is_err());
+    }
+}

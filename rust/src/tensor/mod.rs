@@ -1,0 +1,126 @@
+//! Host tensors + `.fcw` container IO (the python↔rust interchange,
+//! format defined in python/compile/tensor_io.py).
+
+pub mod io;
+
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host-side dense tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    /// Dims as i64 (what the xla crate's literal APIs want).
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+
+    /// Max |a - b| over two f32 tensors of identical shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.as_f32()
+            .iter()
+            .zip(other.as_f32())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl fmt::Display for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}<{:?}>", self.shape, self.dtype())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.dims_i64(), vec![2, 3]);
+        assert_eq!(t.as_f32()[4], 5.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Tensor::f32(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::f32(vec![3], vec![1.0, 2.5, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

@@ -1,0 +1,79 @@
+//! Micro-benchmark harness (criterion isn't in the dependency set):
+//! warmup + timed iterations with median/mean/min reporting, and a
+//! one-shot mode for expensive cases (QR/SVD at Table-IV sizes).
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!("{:36} {:>10.3?} median  {:>10.3?} mean  ({} iters)",
+                self.name, self.median, self.mean, self.iters)
+    }
+}
+
+/// Run `f` repeatedly: a warmup pass, then up to `max_iters`
+/// iterations or `budget` wall time, whichever ends first.
+pub fn bench(name: &str, max_iters: usize, budget: Duration,
+             mut f: impl FnMut()) -> BenchResult {
+    f(); // warmup
+    let mut times = Vec::new();
+    let start = Instant::now();
+    for _ in 0..max_iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    times.sort();
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    let min = times[0];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: times.len(),
+        median,
+        mean,
+        min,
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// One-shot timing for expensive operations.
+pub fn once(name: &str, f: impl FnOnce()) -> Duration {
+    let t0 = Instant::now();
+    f();
+    let dt = t0.elapsed();
+    println!("{:36} {:>10.3?} (single run)", name, dt);
+    dt
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop", 16, Duration::from_millis(200), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 1);
+        assert!(r.min <= r.median);
+    }
+
+    #[test]
+    fn once_returns_duration() {
+        let d = once("sleep", || std::thread::sleep(Duration::from_millis(2)));
+        assert!(d >= Duration::from_millis(2));
+    }
+}

@@ -1,0 +1,93 @@
+//! Minimal CLI argument parser (the dependency set has no clap):
+//! subcommand + `--flag value` / `--flag` switches + repeated `--set
+//! key=value` config overrides.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // value-taking if the next token isn't another flag
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap().clone();
+                        out.flags.entry(name.to_string()).or_default().push(v);
+                    }
+                    _ => out.switches.push(name.to_string()),
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                bail!("unexpected positional argument '{a}'");
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<String> {
+        self.flags.get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+            .unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = args("eval --items 64 --verbose --set a=1 --set b=2");
+        assert_eq!(a.subcommand.as_deref(), Some("eval"));
+        assert_eq!(a.usize_or("items", 0), 64);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_all("set"), vec!["a=1", "b=2"]);
+    }
+
+    #[test]
+    fn rejects_double_positional() {
+        assert!(Args::parse(&["a".into(), "b".into()]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("serve");
+        assert_eq!(a.f64_or("ratio", 8.0), 8.0);
+        assert_eq!(a.str_or("model", "m"), "m");
+        assert!(!a.has("verbose"));
+    }
+}

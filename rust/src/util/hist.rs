@@ -1,0 +1,160 @@
+//! Log-bucketed latency histogram (HDR-style): cheap concurrent
+//! recording in the coordinator hot path, percentile queries for the
+//! benchmark reports.  Buckets are powers of 2^(1/8) over
+//! [1us, ~4000s], i.e. ~8.6% relative precision — ample for latency
+//! reporting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const LINEAR: u64 = 256; // exact buckets below this value
+const SUB: usize = 32; // sub-buckets per octave above the linear region
+const OCTAVES: usize = 34;
+const NBUCKETS: usize = LINEAR as usize + SUB * OCTAVES;
+
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn index(us: u64) -> usize {
+        if us < LINEAR {
+            return us as usize;
+        }
+        let oct = 63 - us.leading_zeros() as usize; // floor(log2), >= 8
+        let frac = ((us - (1 << oct)) * SUB as u64 >> oct) as usize;
+        (LINEAR as usize + (oct - 8) * SUB + frac).min(NBUCKETS - 1)
+    }
+
+    fn bucket_value(idx: usize) -> u64 {
+        if idx < LINEAR as usize {
+            return idx as u64;
+        }
+        let r = idx - LINEAR as usize;
+        let oct = 8 + r / SUB;
+        let frac = (r % SUB) as u64;
+        (1u64 << oct) + (frac << oct) / SUB as u64
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.buckets[Self::index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// p in [0, 100].
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max_us()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={}us p95={}us p99={}us max={}us",
+            self.count(),
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(95.0),
+            self.percentile_us(99.0),
+            self.max_us()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_monotone() {
+        let mut last = 0;
+        for us in [1u64, 2, 3, 5, 9, 17, 100, 1000, 123_456, 10_000_000] {
+            let i = Histogram::index(us);
+            assert!(i >= last);
+            last = i;
+        }
+    }
+
+    #[test]
+    fn bucket_value_brackets_input() {
+        for us in [0u64, 1, 7, 63, 255, 256, 257, 1000, 4095, 1 << 20, 1 << 31] {
+            let idx = Histogram::index(us);
+            let lo = Histogram::bucket_value(idx);
+            assert!(lo <= us, "lo {lo} us {us}");
+            // next bucket must be above
+            let hi = Histogram::bucket_value(idx + 1);
+            assert!(hi > us, "hi {hi} us {us}");
+        }
+    }
+
+    #[test]
+    fn percentiles_reasonable() {
+        let h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record_us(i);
+        }
+        let p50 = h.percentile_us(50.0);
+        assert!((450..=560).contains(&p50), "p50={p50}");
+        let p99 = h.percentile_us(99.0);
+        assert!((900..=1100).contains(&p99), "p99={p99}");
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean_us() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile_us(99.0), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Tiny leveled logger.  `FC_LOG=debug|info|warn|error` selects the
+//! level (default info); output goes to stderr with elapsed-time
+//! stamps so request traces in the coordinator are readable.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+
+fn start() -> Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw == 255 {
+        let lvl = match std::env::var("FC_LOG").as_deref() {
+            Ok("debug") => Level::Debug,
+            Ok("warn") => Level::Warn,
+            Ok("error") => Level::Error,
+            _ => Level::Info,
+        };
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+        return lvl;
+    }
+    match raw {
+        0 => Level::Debug,
+        1 => Level::Info,
+        2 => Level::Warn,
+        _ => Level::Error,
+    }
+}
+
+pub fn set_level(lvl: Level) {
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+pub fn log(lvl: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if lvl < level() {
+        return;
+    }
+    let tag = match lvl {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+        Level::Error => "ERR",
+    };
+    eprintln!("[{:9.3}s {} {}] {}", start().elapsed().as_secs_f64(), tag, target, msg);
+}
+
+#[macro_export]
+macro_rules! debug { ($t:expr, $($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, $t, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! info { ($t:expr, $($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, $t, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! warn_ { ($t:expr, $($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, $t, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! error { ($t:expr, $($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, $t, format_args!($($a)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Warn < Level::Error);
+    }
+
+    #[test]
+    fn set_and_get() {
+        set_level(Level::Warn);
+        assert_eq!(level(), Level::Warn);
+        set_level(Level::Info);
+        assert_eq!(level(), Level::Info);
+    }
+}

@@ -1,0 +1,9 @@
+//! Zero-dependency utilities: JSON, deterministic RNG, logging,
+//! latency histograms.
+
+pub mod hist;
+pub mod json;
+pub mod log;
+pub mod bench;
+pub mod cli;
+pub mod rng;

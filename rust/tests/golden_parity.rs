@@ -1,0 +1,136 @@
+//! Integration: rust runtime + native codecs replay the python-built
+//! goldens — the end-to-end correctness contract between the three
+//! layers.  Requires `make artifacts`; tests skip on a fresh tree.
+
+use fourier_compress::codec::{fourier::FourierCodec, lowrank::SvdCodec,
+                              topk::TopkCodec, Codec, rel_error};
+use fourier_compress::model::executor::{Boundary, SplitExecutor};
+use fourier_compress::runtime::ArtifactStore;
+use fourier_compress::tensor::io::read_fcw;
+
+fn store() -> Option<ArtifactStore> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(ArtifactStore::open(root).expect("open artifacts"))
+}
+
+#[test]
+fn codec_matches_python_reference() {
+    let Some(store) = store() else { return };
+    for model in store.model_names() {
+        let meta = store.model_meta(&model).unwrap();
+        let gpath = store.root.join(meta.str_or("golden", ""));
+        let g = read_fcw(&gpath).unwrap();
+        let a = &g["codec_a"];
+        let (s, d) = (a.shape[0], a.shape[1]);
+        let ks = g["ks_kd"].as_i32()[0] as usize;
+        let kd = g["ks_kd"].as_i32()[1] as usize;
+
+        // FC: reconstruction must match jnp's fft-based reference
+        let fc = FourierCodec::default();
+        let p = fc.compress_block(a.as_f32(), s, d, ks, kd).unwrap();
+        let recon = fc.decompress(&p).unwrap();
+        let err = rel_error(g["codec_recon"].as_f32(), &recon);
+        assert!(err < 5e-4, "{model}: fc parity err {err}");
+
+        // payload float count == ks*kd (conjugate-symmetric packing)
+        assert_eq!((p.body.len() - 4) / 4, ks * kd, "{model}");
+
+        // Top-k parity (k = n/16 as in the golden)
+        let k = a.len() / 16;
+        let tk = TopkCodec;
+        let tp = tk.compress(a.as_f32(), s, d, (a.len() as f64) / (2.0 * k as f64))
+            .unwrap();
+        let trec = tk.decompress(&tp).unwrap();
+        let terr = rel_error(g["topk_recon"].as_f32(), &trec);
+        assert!(terr < 1e-5, "{model}: topk parity err {terr}");
+
+        // SVD rank-4 parity (Jacobi vs LAPACK agree on the subspace)
+        let sv = SvdCodec::plain();
+        let rank4_ratio = (s * d) as f64 / (4 * (s + d)) as f64;
+        let srec = sv.roundtrip(a.as_f32(), s, d, rank4_ratio).unwrap();
+        let serr = rel_error(g["svd_r4_recon"].as_f32(), &srec);
+        assert!(serr < 5e-3, "{model}: svd parity err {serr}");
+    }
+}
+
+#[test]
+fn split_pipeline_matches_python_logits() {
+    let Some(store) = store() else { return };
+    // full parity on one small model keeps the test under a minute;
+    // codec parity above covers all four.
+    let model = "llamette-s".to_string();
+    let exec = SplitExecutor::new(&store, &model).unwrap();
+    let g = read_fcw(store.root.join(&exec.meta.golden_path)).unwrap();
+
+    let gt = &g["tokens"]; // [2, S]
+    let (gb, s) = (gt.shape[0], gt.shape[1]);
+    let b = exec.meta.eval_batch;
+    assert_eq!(s, exec.meta.eval_seq);
+    // tile golden rows up to the artifact batch
+    let mut toks = Vec::with_capacity(b * s);
+    for e in 0..b {
+        let src = e % gb;
+        toks.extend_from_slice(&gt.as_i32()[src * s..(src + 1) * s]);
+    }
+    let tokens = fourier_compress::tensor::Tensor::i32(vec![b, s], toks);
+    let lens = vec![s; b];
+
+    // uncompressed == python forward
+    let (logits, _) = exec.forward_split(&tokens, &lens, 0, &Boundary::None).unwrap();
+    let v = exec.meta.vocab_size;
+    let want = g["logits_full"].as_f32();
+    let got = &logits.as_f32()[..gb * s * v];
+    let max = want.iter().zip(got).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max < 2e-2, "{model}: full-logit parity {max}");
+
+    // split-1 + FC block == python split_forward
+    let ks = g["ks_kd"].as_i32()[0] as usize;
+    let kd = g["ks_kd"].as_i32()[1] as usize;
+    let (logits2, ratio) = exec
+        .forward_split(&tokens, &lens, 1, &Boundary::FcBlock { ks, kd })
+        .unwrap();
+    let want2 = g["logits_split1_fc8"].as_f32();
+    let got2 = &logits2.as_f32()[..gb * s * v];
+    let max2 = want2.iter().zip(got2).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max2 < 5e-2, "{model}: split-logit parity {max2}");
+    assert!(ratio > 1.0);
+
+    // layer-1 activation parity
+    let acts = exec.activations(&tokens).unwrap();
+    let a1 = &acts[0].as_f32()[..g["act_layer1"].len()];
+    let wa = g["act_layer1"].as_f32();
+    let amax = wa.iter().zip(a1).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(amax < 5e-3, "{model}: activation parity {amax}");
+}
+
+#[test]
+fn hardware_codec_artifacts_execute() {
+    let Some(store) = store() else { return };
+    let entries = store.manifest.path("codec_hw.entries").unwrap().as_arr().unwrap();
+    // smallest entry only (compile time); Table IV bench covers the rest
+    let e = &entries[0];
+    let (s, d) = (e.usize_or("seq", 0), e.usize_or("hidden", 0));
+    let (ks, kd) = (e.usize_or("ks", 0), e.usize_or("kd", 0));
+    let comp = store.get(e.get("compress").unwrap().as_str().unwrap()).unwrap();
+    let deco = store.get(e.get("decompress").unwrap().as_str().unwrap()).unwrap();
+
+    let mut rng = fourier_compress::util::rng::Rng::new(1);
+    let mut a = vec![0.0f32; s * d];
+    rng.fill_normal_f32(&mut a, 1.0);
+    let at = fourier_compress::tensor::Tensor::f32(vec![s, d], a.clone());
+    let out = comp.run(&[at]).unwrap();
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].shape, vec![ks, kd]);
+
+    // parity with the native software codec's spectrum gather
+    let fc = FourierCodec::default();
+    let p = fc.compress_block(&a, s, d, ks, kd).unwrap();
+    let native = fc.decompress(&p).unwrap();
+    let rec = deco.run(&[out[0].clone(), out[1].clone()]).unwrap();
+    let err = rel_error(&native, rec[0].as_f32());
+    assert!(err < 1e-3, "hw/sw codec parity {err}");
+}

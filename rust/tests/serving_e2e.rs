@@ -1,0 +1,88 @@
+//! End-to-end coordinator test: real TCP server + device client with
+//! the fused (pallas-codec) artifacts.  Requires `make artifacts`.
+
+use fourier_compress::config::{FromJson, ServeConfig};
+use fourier_compress::coordinator::{DeviceClient, EdgeServer};
+use fourier_compress::net::Channel;
+use fourier_compress::runtime::ArtifactStore;
+use std::sync::Arc;
+
+fn artifacts_root() -> Option<std::path::PathBuf> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    root.join("manifest.json").exists().then_some(root)
+}
+
+#[test]
+fn serve_generate_roundtrip() {
+    let Some(root) = artifacts_root() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let cfg = ServeConfig::load(None, &[
+        "listen=127.0.0.1:0".into(),
+        format!("artifacts={}", root.display()),
+        "max_batch=2".into(),
+        "batch_deadline_us=500".into(),
+    ]).unwrap();
+    let store = Arc::new(ArtifactStore::open(root).unwrap());
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+    let addr = server.addr.to_string();
+
+    // two concurrent clients — exercises the batcher + session manager
+    let mut handles = Vec::new();
+    for cid in 0..2u64 {
+        let addr = addr.clone();
+        let store = store.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = DeviceClient::connect(
+                &addr, &store, cid + 1, Channel::gbps(1.0, 50)).unwrap();
+            let g = client.generate("Q mira hue ? A", 4).unwrap();
+            assert!(g.steps >= 1, "no tokens generated");
+            assert!(client.stats.bytes_sent > 0);
+            // conjugate-symmetric packing must beat raw by ~bandwidth
+            assert!(client.stats.compression_ratio() > 4.0,
+                    "ratio {}", client.stats.compression_ratio());
+            let stats = client.server_stats().unwrap();
+            assert!(stats.contains("\"requests\""));
+            client.bye().unwrap();
+            g
+        }));
+    }
+    let gens: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // the trained serving model must answer the fact-world question
+    for g in &gens {
+        assert!(!g.completion.is_empty());
+    }
+
+    assert!(server.metrics.requests.load(std::sync::atomic::Ordering::Relaxed) >= 2);
+    server.shutdown();
+}
+
+#[test]
+fn server_rejects_bad_bucket() {
+    use fourier_compress::coordinator::protocol::Frame;
+    use std::io::BufReader;
+    let Some(root) = artifacts_root() else { return };
+    let cfg = ServeConfig::load(None, &[
+        "listen=127.0.0.1:0".into(),
+        format!("artifacts={}", root.display()),
+    ]).unwrap();
+    let store = Arc::new(ArtifactStore::open(root).unwrap());
+    let server = EdgeServer::start(cfg, store).unwrap();
+
+    let tcp = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(tcp.try_clone().unwrap());
+    let mut w = tcp;
+    Frame::Hello { session: 9, model: "llamette-m".into() }
+        .write_to(&mut w).unwrap();
+    Frame::Activation {
+        session: 9, request: 1, bucket: 999, true_len: 10, ks: 3, kd: 3,
+        packed: vec![0.0; 9],
+    }.write_to(&mut w).unwrap();
+    match Frame::read_from(&mut reader).unwrap() {
+        Frame::Error { msg } => assert!(msg.contains("bucket")),
+        other => panic!("expected Error, got {}", other.type_id()),
+    }
+    Frame::Bye.write_to(&mut w).unwrap();
+    server.shutdown();
+}
