@@ -44,10 +44,16 @@ fn main() -> anyhow::Result<()> {
              "total", "share");
     for name in ["none", "fc", "topk", "qr", "svdllm"] {
         let c = codec::by_name(name)?;
+        // Fig 6 models the *transport*: transfer time and the recorded
+        // ratio both use framed bytes (Payload::wire_ratio), unlike
+        // the Tables II/III accuracy tables which report the body-only
+        // Payload::achieved_ratio.
         let mut payload_bytes = 0usize;
+        let mut wire_ratio = 1.0f64;
         let codec_time = once(&format!("{name} codec"), || {
             let p = c.compress(&a, s, d, ratio).unwrap();
             payload_bytes = p.wire_bytes();
+            wire_ratio = p.wire_ratio();
             std::hint::black_box(c.decompress(&p).unwrap());
         });
         let codec_time = if name == "none" { Duration::ZERO } else { codec_time };
@@ -61,6 +67,7 @@ fn main() -> anyhow::Result<()> {
         row.set("transfer_s", Json::Num(transfer.as_secs_f64()));
         row.set("server_s", Json::Num(server_time.as_secs_f64()));
         row.set("share", Json::Num(share));
+        row.set("wire_ratio", Json::Num(wire_ratio));
         out.set(name, row);
     }
 

@@ -1,16 +1,21 @@
 //! Hot-path microbenchmarks — the §Perf iteration targets: FFT plans,
 //! 2-D transforms, conjugate-symmetric pack/unpack, wire framing,
-//! top-k selection, and the QR/SVD inner loops at eval sizes.
+//! top-k selection, and the QR/SVD inner loops at eval sizes — plus
+//! the engine-vs-legacy codec comparison at the Table-IV serving size,
+//! recorded to BENCH_codec.json so the perf trajectory is tracked
+//! across PRs.
 
 use fourier_compress::codec::fourier::{pack_block, unpack_block, FourierCodec};
-use fourier_compress::codec::Codec;
+use fourier_compress::codec::{Codec, CodecEngine, Payload};
 use fourier_compress::coordinator::protocol::Frame;
 use fourier_compress::dsp::complex::C64;
 use fourier_compress::dsp::fft::FftPlan;
 use fourier_compress::dsp::fft2d::{fft2, fft2_real};
 use fourier_compress::linalg::matrix::Mat;
 use fourier_compress::linalg::{qr_thin, svd_thin};
+use fourier_compress::tensor::MatView;
 use fourier_compress::util::bench::bench;
+use fourier_compress::util::json::Json;
 use fourier_compress::util::rng::Rng;
 use std::time::Duration;
 
@@ -33,7 +38,7 @@ fn main() {
     for (r, c) in [(64usize, 128usize), (256, 2048)] {
         let a: Vec<f32> = (0..r * c).map(|_| rng.normal() as f32).collect();
         bench(&format!("fft2d {r}x{c}"), 50, budget, || {
-            std::hint::black_box(fft2_real(&a, r, c));
+            std::hint::black_box(fft2_real(MatView::new(&a, r, c)));
         });
         let mut buf: Vec<C64> = a.iter().map(|&v| C64::from_re(v as f64)).collect();
         bench(&format!("fft2d inplace {r}x{c}"), 50, budget, || {
@@ -93,4 +98,94 @@ fn main() {
     bench("matmul 64x128x64", 100, budget, || {
         std::hint::black_box(m.matmul(&b));
     });
+
+    // ---------------------------------------------------------------
+    // engine vs one-shot at the Table-IV serving size (256 x 2048,
+    // r8), three arms:
+    //   * cold    — a fresh CodecEngine per call: reproduces the
+    //               pre-engine cost model (scratch reallocated, index
+    //               sets re-derived, plans from the shared tier),
+    //   * oneshot — the legacy `Codec::compress` API (thread-local
+    //               engine, but per-call Payload/output allocation),
+    //   * engine  — warm caller-owned engine + reused buffers (zero
+    //               steady-state allocation).
+    // Emits BENCH_codec.json so the perf trajectory is recorded.
+    // ---------------------------------------------------------------
+    let (bs, bd, ratio) = (256usize, 2048usize, 8.0f64);
+    let big: Vec<f32> = {
+        let mut rng = Rng::new((bs + bd) as u64);
+        (0..bs * bd).map(|_| rng.normal() as f32).collect()
+    };
+    let fc = FourierCodec::default();
+    let view = MatView::new(&big, bs, bd);
+
+    let cold_c = bench(&format!("fc cold compress {bs}x{bd} r{ratio:.0}"),
+                       60, budget, || {
+        let mut e = CodecEngine::new();
+        let mut p = Payload::empty();
+        fc.compress_into(&mut e, view, ratio, &mut p).unwrap();
+        std::hint::black_box(&p);
+    });
+    let legacy_p = fc.compress(&big, bs, bd, ratio).unwrap();
+    let cold_d = bench(&format!("fc cold decompress {bs}x{bd}"),
+                       60, budget, || {
+        let mut e = CodecEngine::new();
+        let mut out = Vec::new();
+        fc.decompress_into(&mut e, &legacy_p, &mut out).unwrap();
+        std::hint::black_box(&out);
+    });
+
+    let oneshot_c = bench(&format!("fc oneshot compress {bs}x{bd} r{ratio:.0}"),
+                          60, budget, || {
+        std::hint::black_box(fc.compress(&big, bs, bd, ratio).unwrap());
+    });
+    let oneshot_d = bench(&format!("fc oneshot decompress {bs}x{bd}"),
+                          60, budget, || {
+        std::hint::black_box(fc.decompress(&legacy_p).unwrap());
+    });
+
+    let mut eng = CodecEngine::new();
+    let mut payload = Payload::empty();
+    let mut recon: Vec<f32> = Vec::new();
+    // warm-up: fills plan/index caches and grows the scratch arena
+    fc.compress_into(&mut eng, view, ratio, &mut payload).unwrap();
+    fc.decompress_into(&mut eng, &payload, &mut recon).unwrap();
+    assert_eq!(payload, legacy_p, "engine/legacy wire parity");
+    let warm_scratch = eng.scratch_bytes();
+
+    let engine_c = bench(&format!("fc engine compress {bs}x{bd} r{ratio:.0}"),
+                         60, budget, || {
+        fc.compress_into(&mut eng, view, ratio, &mut payload).unwrap();
+        std::hint::black_box(&payload);
+    });
+    let engine_d = bench(&format!("fc engine decompress {bs}x{bd}"),
+                         60, budget, || {
+        fc.decompress_into(&mut eng, &payload, &mut recon).unwrap();
+        std::hint::black_box(&recon);
+    });
+    assert_eq!(eng.scratch_bytes(), warm_scratch,
+               "scratch arena grew after warm-up");
+
+    let speedup_c = cold_c.median.as_secs_f64() / engine_c.median.as_secs_f64();
+    let speedup_d = cold_d.median.as_secs_f64() / engine_d.median.as_secs_f64();
+    println!("engine vs pre-engine cost model: \
+              compress {speedup_c:.2}x decompress {speedup_d:.2}x");
+
+    let mut out = Json::obj();
+    out.set("shape", Json::Str(format!("{bs}x{bd}")));
+    out.set("ratio", Json::Num(ratio));
+    out.set("cold_compress_s", Json::Num(cold_c.median.as_secs_f64()));
+    out.set("cold_decompress_s", Json::Num(cold_d.median.as_secs_f64()));
+    out.set("oneshot_compress_s", Json::Num(oneshot_c.median.as_secs_f64()));
+    out.set("oneshot_decompress_s", Json::Num(oneshot_d.median.as_secs_f64()));
+    out.set("engine_compress_s", Json::Num(engine_c.median.as_secs_f64()));
+    out.set("engine_decompress_s", Json::Num(engine_d.median.as_secs_f64()));
+    out.set("compress_speedup_vs_cold", Json::Num(speedup_c));
+    out.set("decompress_speedup_vs_cold", Json::Num(speedup_d));
+    out.set("scratch_bytes", Json::Num(warm_scratch as f64));
+    out.set("wire_ratio", Json::Num(payload.wire_ratio()));
+    out.set("achieved_ratio", Json::Num(payload.achieved_ratio()));
+    std::fs::write("BENCH_codec.json", out.to_string_pretty())
+        .expect("write BENCH_codec.json");
+    println!("wrote BENCH_codec.json");
 }

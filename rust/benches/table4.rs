@@ -4,9 +4,9 @@
 //! XLA-compiled truncated-DFT artifact).  Emits the same rows the
 //! paper reports plus results/table4.json.
 
-use fourier_compress::codec::{self, Codec};
+use fourier_compress::codec::{self, Codec, CodecEngine, Payload};
 use fourier_compress::runtime::ArtifactStore;
-use fourier_compress::tensor::Tensor;
+use fourier_compress::tensor::{MatView, Tensor};
 use fourier_compress::util::bench::{bench, once};
 use fourier_compress::util::json::Json;
 use fourier_compress::util::rng::Rng;
@@ -35,6 +35,24 @@ fn main() -> anyhow::Result<()> {
                 std::hint::black_box(c.decompress(&p).unwrap());
             });
             row.set(name, Json::Num(r.median.as_secs_f64()));
+        }
+        // fc through a warm per-session engine (the serving decode
+        // loop's cost model: cached plans/index sets, zero alloc)
+        {
+            let fc = codec::fourier::FourierCodec::default();
+            let view = MatView::new(&a, s, d);
+            let mut eng = CodecEngine::new();
+            let mut p = Payload::empty();
+            let mut rec: Vec<f32> = Vec::new();
+            fc.compress_into(&mut eng, view, ratio, &mut p)?; // warm-up
+            fc.decompress_into(&mut eng, &p, &mut rec)?;
+            let r = bench(&format!("fc(engine)   {s}x{d}"), 12,
+                          Duration::from_secs(8), || {
+                fc.compress_into(&mut eng, view, ratio, &mut p).unwrap();
+                fc.decompress_into(&mut eng, &p, &mut rec).unwrap();
+                std::hint::black_box(&rec);
+            });
+            row.set("fc_engine", Json::Num(r.median.as_secs_f64()));
         }
         // slow factorizations: single run (matches the paper's regime
         // where these are orders of magnitude slower)

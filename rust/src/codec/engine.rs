@@ -1,0 +1,202 @@
+//! The codec engine: per-session/per-worker state that makes the
+//! steady-state compression path allocation-free.
+//!
+//! The paper's headline claim is *speed* — FourierCompress wins
+//! because the transform is cheap on real hardware.  The one-shot
+//! [`super::Codec::compress`] path used to re-allocate every scratch
+//! buffer and re-derive the centred frequency index sets on every
+//! call, once per generated token.  A [`CodecEngine`] hoists all of
+//! that out of the loop:
+//!
+//! * **FFT plans** — a per-engine `HashMap<usize, Arc<FftPlan>>` with
+//!   no lock at all; a miss falls back to the shared
+//!   [`crate::dsp::fft2d::plan`] tier (an `RwLock`, read-locked on the
+//!   hit path) and memoises the `Arc` locally, so after warm-up a
+//!   decode loop never touches a lock.
+//! * **Frequency index sets** — `freq_indices(n, k)` results cached
+//!   per `(n, k)`; the (S, D, K_S, K_D) tuple of a bucket maps to two
+//!   such entries.
+//! * **Scratch arena** — the `narrow`/`z`/`col`/`block`/`spec`
+//!   complex buffers and the f32/u32 scratch the codecs need, grown
+//!   monotonically and reused across calls.  After the first call at
+//!   a given shape, `compress_into`/`decompress_into` perform zero
+//!   heap allocation (the engine-reuse test in
+//!   `tests/codec_engine.rs` pins this down via
+//!   [`CodecEngine::scratch_bytes`]).
+//!
+//! Ownership model (see rust/README.md §Codec engine architecture):
+//! the device client owns one engine per session; the edge server owns
+//! one per connection handler; the eval harness and the legacy
+//! one-shot API share a thread-local engine.
+
+use crate::dsp::complex::C64;
+use crate::dsp::fft::FftPlan;
+use crate::dsp::fft2d;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+#[derive(Default)]
+pub struct CodecEngine {
+    plans: HashMap<usize, Arc<FftPlan>>,
+    indices: HashMap<(usize, usize), Arc<Vec<usize>>>,
+    // scratch arena — pub(crate) so the codec impls can split-borrow
+    // individual buffers without going through &mut self methods.
+    pub(crate) narrow: Vec<C64>,
+    pub(crate) z: Vec<C64>,
+    pub(crate) col: Vec<C64>,
+    pub(crate) block: Vec<C64>,
+    pub(crate) spec: Vec<C64>,
+    pub(crate) floats: Vec<f32>,
+    pub(crate) indices32: Vec<u32>,
+}
+
+impl CodecEngine {
+    pub fn new() -> CodecEngine {
+        CodecEngine::default()
+    }
+
+    /// Planned transform for axis length `n`: per-engine map first
+    /// (no lock), shared tier on miss.
+    pub fn plan(&mut self, n: usize) -> Arc<FftPlan> {
+        self.plans.entry(n).or_insert_with(|| fft2d::plan(n)).clone()
+    }
+
+    /// Cached centred (conjugate-closed) frequency index set for
+    /// keeping `k` of `n` bins.
+    pub fn indices(&mut self, n: usize, k: usize) -> Arc<Vec<usize>> {
+        self.indices
+            .entry((n, k))
+            .or_insert_with(|| Arc::new(super::freq_indices(n, k)))
+            .clone()
+    }
+
+    /// Pre-warm the engine for a (rows, cols, ks, kd) block shape so
+    /// the first request of a session pays no plan/index cost either.
+    pub fn warm(&mut self, rows: usize, cols: usize, ks: usize, kd: usize) {
+        self.plan(rows);
+        self.plan(cols);
+        self.indices(rows, ks);
+        self.indices(cols, kd);
+    }
+
+    pub fn cached_plans(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn cached_index_sets(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Release all scratch capacity (the plan/index caches stay — they
+    /// are shared `Arc`s and cheap).  The scratch arena otherwise
+    /// retains its largest-ever footprint, which is the point for a
+    /// per-session decode loop but worth trimming for long-lived
+    /// engines that served one unusually large shape — e.g. the
+    /// thread-local engine behind the legacy one-shot API.
+    pub fn shrink_scratch(&mut self) {
+        self.narrow = Vec::new();
+        self.z = Vec::new();
+        self.col = Vec::new();
+        self.block = Vec::new();
+        self.spec = Vec::new();
+        self.floats = Vec::new();
+        self.indices32 = Vec::new();
+    }
+
+    /// Total bytes of scratch capacity currently held.  The
+    /// engine-reuse invariant: repeated `compress_into` calls on the
+    /// same shape must not grow this after warm-up.
+    pub fn scratch_bytes(&self) -> usize {
+        (self.narrow.capacity()
+            + self.z.capacity()
+            + self.col.capacity()
+            + self.block.capacity()
+            + self.spec.capacity())
+            * std::mem::size_of::<C64>()
+            + self.floats.capacity() * std::mem::size_of::<f32>()
+            + self.indices32.capacity() * std::mem::size_of::<u32>()
+    }
+}
+
+/// Reset a complex scratch buffer to `n` zeros without shrinking its
+/// capacity (the codecs' previous `vec![C64::ZERO; n]` semantics,
+/// minus the allocation).
+pub(crate) fn zeroed(buf: &mut Vec<C64>, n: usize) {
+    buf.clear();
+    buf.resize(n, C64::ZERO);
+}
+
+thread_local! {
+    static THREAD_ENGINE: RefCell<CodecEngine> = RefCell::new(CodecEngine::new());
+}
+
+/// Run `f` with this thread's shared engine — the backing store for
+/// the legacy one-shot `Codec::compress`/`decompress` API.  Callers
+/// must not re-enter (codec `_into` implementations receive their
+/// engine explicitly and never call back into this).
+pub fn with_thread_engine<R>(f: impl FnOnce(&mut CodecEngine) -> R) -> R {
+    THREAD_ENGINE.with(|e| f(&mut e.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_and_index_caches_fill_once() {
+        let mut eng = CodecEngine::new();
+        assert_eq!(eng.cached_plans(), 0);
+        let p1 = eng.plan(64);
+        let p2 = eng.plan(64);
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(eng.cached_plans(), 1);
+
+        let i1 = eng.indices(96, 13);
+        let i2 = eng.indices(96, 13);
+        assert!(Arc::ptr_eq(&i1, &i2));
+        assert_eq!(i1.as_slice(), super::super::freq_indices(96, 13).as_slice());
+        assert_eq!(eng.cached_index_sets(), 1);
+    }
+
+    #[test]
+    fn warm_prefills_both_axes() {
+        let mut eng = CodecEngine::new();
+        eng.warm(64, 128, 9, 15);
+        assert_eq!(eng.cached_plans(), 2);
+        assert_eq!(eng.cached_index_sets(), 2);
+    }
+
+    #[test]
+    fn zeroed_reuses_capacity() {
+        let mut buf = Vec::new();
+        zeroed(&mut buf, 256);
+        assert!(buf.iter().all(|c| *c == C64::ZERO));
+        buf[3] = C64::ONE;
+        let cap = buf.capacity();
+        zeroed(&mut buf, 128);
+        assert_eq!(buf.len(), 128);
+        assert_eq!(buf.capacity(), cap, "shrank capacity");
+        assert!(buf.iter().all(|c| *c == C64::ZERO));
+    }
+
+    #[test]
+    fn shrink_scratch_releases_arena_but_keeps_caches() {
+        let mut eng = CodecEngine::new();
+        eng.plan(32);
+        zeroed(&mut eng.spec, 1024);
+        assert!(eng.scratch_bytes() > 0);
+        eng.shrink_scratch();
+        assert_eq!(eng.scratch_bytes(), 0);
+        assert_eq!(eng.cached_plans(), 1);
+    }
+
+    #[test]
+    fn thread_engine_persists_across_calls() {
+        with_thread_engine(|e| {
+            e.plan(48);
+        });
+        let n = with_thread_engine(|e| e.cached_plans());
+        assert!(n >= 1);
+    }
+}

@@ -12,9 +12,18 @@
 //! K_S·K_D floats — this is the "conjugate symmetry-aware" transport
 //! the paper describes, applied to transmission as well as
 //! reconstruction (DESIGN.md §6).
+//!
+//! All entry points are `_into`-style over a [`CodecEngine`]: plans,
+//! frequency index sets, and every scratch buffer (`narrow`, `z`,
+//! `col`, `block`, `spec`) live in the engine, so the per-token decode
+//! loop re-uses them and performs zero heap allocation after warm-up.
+//! The plain-named wrappers route through the thread-local engine and
+//! stay byte-compatible with the pre-engine codec.
 
-use super::{block_ratio, fc_block, freq_indices, Codec, Payload, Reader, Writer};
+use super::engine::{self, CodecEngine};
+use super::{block_ratio, fc_block, Codec, Payload, Reader, Writer};
 use crate::dsp::complex::C64;
+use crate::tensor::MatView;
 
 use anyhow::{ensure, Result};
 
@@ -35,28 +44,33 @@ impl FourierCodec {
     /// columns are needed, so after the row FFT pass the column pass
     /// runs on K_D columns instead of all D — ~40% cheaper than a full
     /// fft2 at the shipped block shapes.
-    pub fn compress_block(&self, a: &[f32], rows: usize, cols: usize,
-                          ks: usize, kd: usize) -> Result<Payload> {
-        ensure!(a.len() == rows * cols, "shape mismatch");
-        let ui = freq_indices(rows, ks);
-        let vi = freq_indices(cols, kd);
+    pub fn compress_block_into(&self, eng: &mut CodecEngine, a: MatView<'_>,
+                               ks: usize, kd: usize, out: &mut Payload)
+        -> Result<()> {
+        let (rows, cols) = (a.rows(), a.cols());
+        let ui = eng.indices(rows, ks);
+        let vi = eng.indices(cols, kd);
+        let plan_s = eng.plan(rows);
+        let plan_d = eng.plan(cols);
+        let data = a.as_slice();
+
+        let CodecEngine { narrow, z, col, block, .. } = eng;
+        engine::zeroed(narrow, rows * kd); // [rows, K_D]
+        engine::zeroed(z, cols);
 
         // row pass with the two-for-one real-FFT trick: pack row pairs
         // (r, r+1) as re/im of ONE complex FFT and split by conjugate
         // symmetry — halves the row-pass FFT count; only the K_D kept
         // columns are materialised (EXPERIMENTS.md §Perf, iter 2).
-        let plan_d = crate::dsp::fft2d::plan(cols);
-        let mut narrow = vec![C64::ZERO; rows * kd]; // [rows, K_D]
-        let mut z = vec![C64::ZERO; cols];
         let mut r = 0;
         while r < rows {
             let hi = (r + 1 < rows) as usize;
             for v in 0..cols {
-                z[v] = C64::new(a[r * cols + v] as f64,
-                                if hi == 1 { a[(r + 1) * cols + v] as f64 }
+                z[v] = C64::new(data[r * cols + v] as f64,
+                                if hi == 1 { data[(r + 1) * cols + v] as f64 }
                                 else { 0.0 });
             }
-            plan_d.forward_in_place(&mut z);
+            plan_d.forward_in_place(z);
             for (j, &v) in vi.iter().enumerate() {
                 let zc = z[v];
                 let zm = z[(cols - v) % cols].conj();
@@ -70,20 +84,20 @@ impl FourierCodec {
             r += 2;
         }
         // selective column pass over the K_D kept columns
-        let plan_s = crate::dsp::fft2d::plan(rows);
-        let mut block = vec![C64::ZERO; ks * kd];
-        let mut col = vec![C64::ZERO; rows];
+        engine::zeroed(block, ks * kd);
+        engine::zeroed(col, rows);
         for j in 0..kd {
             for rr in 0..rows {
                 col[rr] = narrow[rr * kd + j];
             }
-            plan_s.forward_in_place(&mut col);
+            plan_s.forward_in_place(col);
             for (i, &u) in ui.iter().enumerate() {
                 block[i * kd + j] = col[u];
             }
         }
 
-        let mut w = Writer::new();
+        out.reset("fc", rows, cols);
+        let mut w = Writer(&mut out.body);
         w.u16(ks as u16);
         w.u16(kd as u16);
         for (i, &u) in ui.iter().enumerate() {
@@ -99,7 +113,20 @@ impl FourierCodec {
                 }
             }
         }
-        Ok(Payload { codec: "fc".into(), rows, cols, body: w.0 })
+        Ok(())
+    }
+
+    /// One-shot explicit-block compression (legacy API; thread-local
+    /// engine).
+    pub fn compress_block(&self, a: &[f32], rows: usize, cols: usize,
+                          ks: usize, kd: usize) -> Result<Payload> {
+        ensure!(a.len() == rows * cols, "shape mismatch");
+        let view = MatView::new(a, rows, cols);
+        engine::with_thread_engine(|eng| {
+            let mut out = Payload::empty();
+            self.compress_block_into(eng, view, ks, kd, &mut out)?;
+            Ok(out)
+        })
     }
 }
 
@@ -108,27 +135,31 @@ impl Codec for FourierCodec {
         "fc"
     }
 
-    fn compress(&self, a: &[f32], rows: usize, cols: usize, ratio: f64)
-        -> Result<Payload> {
-        let (ks, kd) = fc_block(rows, cols, ratio, self.kd_hint);
-        debug_assert!(block_ratio(rows, cols, ks, kd) >= ratio * 0.8);
-        self.compress_block(a, rows, cols, ks, kd)
+    fn compress_into(&self, eng: &mut CodecEngine, a: MatView<'_>, ratio: f64,
+                     out: &mut Payload) -> Result<()> {
+        let (ks, kd) = fc_block(a.rows(), a.cols(), ratio, self.kd_hint);
+        debug_assert!(block_ratio(a.rows(), a.cols(), ks, kd) >= ratio * 0.8);
+        self.compress_block_into(eng, a, ks, kd, out)
     }
 
-    fn decompress(&self, p: &Payload) -> Result<Vec<f32>> {
+    fn decompress_into(&self, eng: &mut CodecEngine, p: &Payload,
+                       out: &mut Vec<f32>) -> Result<()> {
         let (rows, cols) = (p.rows, p.cols);
         let mut r = Reader::new(&p.body);
         let ks = r.u16()? as usize;
         let kd = r.u16()? as usize;
-        ensure!(ks >= 1 && ks <= rows && kd >= 1 && kd <= cols,
+        ensure!(super::valid_block_axis(rows, ks) && super::valid_block_axis(cols, kd),
                 "bad block {ks}x{kd} for {rows}x{cols}");
-        let ui = freq_indices(rows, ks);
-        let vi = freq_indices(cols, kd);
+        let ui = eng.indices(rows, ks);
+        let vi = eng.indices(cols, kd);
+        let plan_s = eng.plan(rows);
+        let plan_d = eng.plan(cols);
 
         // scatter the conjugate-completed block into the (sparse) spectrum
-        let mut spec = vec![C64::ZERO; rows * cols];
-        for &u in &ui {
-            for &v in &vi {
+        let CodecEngine { spec, col, .. } = eng;
+        engine::zeroed(spec, rows * cols);
+        for &u in ui.iter() {
+            for &v in vi.iter() {
                 let (mu, mv) = ((rows - u) % rows, (cols - v) % cols);
                 if (u, v) > (mu, mv) {
                     continue;
@@ -142,22 +173,23 @@ impl Codec for FourierCodec {
         ensure!(r.remaining() == 0, "trailing payload bytes");
         // inverse column pass only where columns are non-zero, then
         // inverse row pass (EXPERIMENTS.md §Perf)
-        let plan_s = crate::dsp::fft2d::plan(rows);
-        let mut col = vec![C64::ZERO; rows];
-        for &v in &vi {
+        engine::zeroed(col, rows);
+        for &v in vi.iter() {
             for rr in 0..rows {
                 col[rr] = spec[rr * cols + v];
             }
-            plan_s.inverse_in_place(&mut col);
+            plan_s.inverse_in_place(col);
             for rr in 0..rows {
                 spec[rr * cols + v] = col[rr];
             }
         }
-        let plan_d = crate::dsp::fft2d::plan(cols);
         for rr in 0..rows {
             plan_d.inverse_in_place(&mut spec[rr * cols..(rr + 1) * cols]);
         }
-        Ok(spec.iter().map(|c| c.re as f32).collect())
+        out.clear();
+        out.reserve(rows * cols);
+        out.extend(spec.iter().map(|c| c.re as f32));
+        Ok(())
     }
 }
 
@@ -168,7 +200,8 @@ impl Codec for FourierCodec {
 // The fused client HLO emits the FULL (re, im) K_S×K_D block; these
 // helpers convert it to/from the non-redundant float packing used by
 // the Activation frame, so the serving path pays the same wire bytes
-// as the software codec.
+// as the software codec.  The `_into` forms reuse the caller's
+// buffers and the engine's cached index sets.
 
 /// index of frequency `u` inside the centred list for (n, k)
 fn block_pos(n: usize, k: usize, u: usize) -> usize {
@@ -184,13 +217,16 @@ fn block_pos(n: usize, k: usize, u: usize) -> usize {
 }
 
 /// Pack a full (re, im) block (row-major ks×kd) into the symmetric
-/// half representation.  `rows`/`cols` are the pre-compression matrix
-/// dims the block was computed for.
-pub fn pack_block(re: &[f32], im: &[f32], rows: usize, cols: usize,
-                  ks: usize, kd: usize) -> Vec<f32> {
-    let ui = freq_indices(rows, ks);
-    let vi = freq_indices(cols, kd);
-    let mut out = Vec::with_capacity(ks * kd);
+/// half representation, appended into `out` (cleared first).
+/// `rows`/`cols` are the pre-compression matrix dims the block was
+/// computed for.
+pub fn pack_block_into(eng: &mut CodecEngine, re: &[f32], im: &[f32],
+                       rows: usize, cols: usize, ks: usize, kd: usize,
+                       out: &mut Vec<f32>) {
+    let ui = eng.indices(rows, ks);
+    let vi = eng.indices(cols, kd);
+    out.clear();
+    out.reserve(ks * kd);
     for (i, &u) in ui.iter().enumerate() {
         for (j, &v) in vi.iter().enumerate() {
             let (mu, mv) = ((rows - u) % rows, (cols - v) % cols);
@@ -203,16 +239,29 @@ pub fn pack_block(re: &[f32], im: &[f32], rows: usize, cols: usize,
             }
         }
     }
-    out
 }
 
-/// Inverse of [`pack_block`]: regenerate the full (re, im) planes.
-pub fn unpack_block(packed: &[f32], rows: usize, cols: usize,
-                    ks: usize, kd: usize) -> Result<(Vec<f32>, Vec<f32>)> {
-    let ui = freq_indices(rows, ks);
-    let vi = freq_indices(cols, kd);
-    let mut re = vec![0.0f32; ks * kd];
-    let mut im = vec![0.0f32; ks * kd];
+/// One-shot [`pack_block_into`] (legacy API; thread-local engine).
+pub fn pack_block(re: &[f32], im: &[f32], rows: usize, cols: usize,
+                  ks: usize, kd: usize) -> Vec<f32> {
+    engine::with_thread_engine(|eng| {
+        let mut out = Vec::new();
+        pack_block_into(eng, re, im, rows, cols, ks, kd, &mut out);
+        out
+    })
+}
+
+/// Inverse of [`pack_block_into`]: regenerate the full (re, im)
+/// planes into the caller's buffers (cleared first).
+pub fn unpack_block_into(eng: &mut CodecEngine, packed: &[f32],
+                         rows: usize, cols: usize, ks: usize, kd: usize,
+                         re: &mut Vec<f32>, im: &mut Vec<f32>) -> Result<()> {
+    let ui = eng.indices(rows, ks);
+    let vi = eng.indices(cols, kd);
+    re.clear();
+    re.resize(ks * kd, 0.0);
+    im.clear();
+    im.resize(ks * kd, 0.0);
     let mut pos = 0usize;
     let take = |n: &mut usize| -> Result<f32> {
         ensure!(*n < packed.len(), "packed block truncated");
@@ -237,20 +286,30 @@ pub fn unpack_block(packed: &[f32], rows: usize, cols: usize,
         }
     }
     ensure!(pos == packed.len(), "trailing packed floats");
-    Ok((re, im))
+    Ok(())
+}
+
+/// One-shot [`unpack_block_into`] (legacy API; thread-local engine).
+pub fn unpack_block(packed: &[f32], rows: usize, cols: usize,
+                    ks: usize, kd: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+    engine::with_thread_engine(|eng| {
+        let (mut re, mut im) = (Vec::new(), Vec::new());
+        unpack_block_into(eng, packed, rows, cols, ks, kd, &mut re, &mut im)?;
+        Ok((re, im))
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codec::{rand_act, rel_error};
+    use crate::codec::{freq_indices, rand_act, rel_error};
 
     #[test]
     fn pack_unpack_roundtrip() {
         let (rows, cols, ks, kd) = (32usize, 128usize, 9usize, 15usize);
         // build a conjugate-symmetric block from a real matrix
         let a = rand_act(rows, cols, 42);
-        let spec = crate::dsp::fft2d::fft2_real(&a, rows, cols);
+        let spec = crate::dsp::fft2d::fft2_real(MatView::new(&a, rows, cols));
         let ui = freq_indices(rows, ks);
         let vi = freq_indices(cols, kd);
         let mut re = vec![0.0f32; ks * kd];
@@ -277,7 +336,7 @@ mod tests {
         // ks == rows (even full axis) exercises the k == n branch
         let (rows, cols, ks, kd) = (16usize, 64usize, 16usize, 7usize);
         let a = rand_act(rows, cols, 7);
-        let spec = crate::dsp::fft2d::fft2_real(&a, rows, cols);
+        let spec = crate::dsp::fft2d::fft2_real(MatView::new(&a, rows, cols));
         let ui = freq_indices(rows, ks);
         let vi = freq_indices(cols, kd);
         let mut re = vec![0.0f32; ks * kd];
@@ -361,6 +420,27 @@ mod tests {
         let p1 = codec.compress(&a, 24, 48, 8.0).unwrap();
         let p2 = codec.compress(&a, 24, 48, 8.0).unwrap();
         assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn engine_path_matches_legacy_bytes() {
+        // the tentpole invariant: compress_into over a caller-owned
+        // engine emits exactly the bytes the one-shot path emits
+        let (rows, cols) = (31, 100);
+        let a = rand_act(rows, cols, 11);
+        let codec = FourierCodec::default();
+        let legacy = codec.compress(&a, rows, cols, 6.0).unwrap();
+
+        let mut eng = CodecEngine::new();
+        let mut p = Payload::empty();
+        for _ in 0..3 {
+            codec.compress_into(&mut eng, MatView::new(&a, rows, cols), 6.0,
+                                &mut p).unwrap();
+            assert_eq!(p, legacy);
+        }
+        let mut out = Vec::new();
+        codec.decompress_into(&mut eng, &p, &mut out).unwrap();
+        assert_eq!(out, codec.decompress(&legacy).unwrap());
     }
 
     #[test]

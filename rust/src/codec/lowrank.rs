@@ -8,11 +8,19 @@
 //! ASVD column scales); SVD-LLM's whitening transform is derived from
 //! the payload itself on the decoder side, so it ships no extras.
 
+use super::engine::CodecEngine;
 use super::{Codec, Payload, Reader, Writer};
 use crate::linalg::matrix::Mat;
 use crate::linalg::qr::qr_thin;
 use crate::linalg::svd::svd_thin;
+use crate::tensor::MatView;
 use anyhow::{ensure, Result};
+
+// NOTE: the factorization codecs are cold-path baselines (the paper's
+// Table IV shows them orders of magnitude slower than FC); they write
+// through the engine-owned payload/output buffers like every codec,
+// but their internal QR/SVD working set still allocates `Mat`s — the
+// allocation-free invariant is only claimed for the serving codec.
 
 /// rank such that r·(rows+cols) + extras ≈ rows·cols / ratio
 fn rank_for_ratio(rows: usize, cols: usize, ratio: f64, extra_floats: usize)
@@ -62,25 +70,29 @@ impl Codec for QrCodec {
         "qr"
     }
 
-    fn compress(&self, a: &[f32], rows: usize, cols: usize, ratio: f64)
-        -> Result<Payload> {
-        ensure!(a.len() == rows * cols, "shape mismatch");
+    fn compress_into(&self, _eng: &mut CodecEngine, a: MatView<'_>,
+                     ratio: f64, out: &mut Payload) -> Result<()> {
+        let (rows, cols) = (a.rows(), a.cols());
         let r = rank_for_ratio(rows, cols, ratio, 0);
-        let m = Mat::from_f32(a, rows, cols);
+        let m = Mat::from_f32(a.as_slice(), rows, cols);
         let (q, rr) = qr_thin(&m);
-        let mut w = Writer::new();
+        out.reset("qr", rows, cols);
+        let mut w = Writer(&mut out.body);
         w.u16(r as u16);
         write_factors(&mut w, &q, &rr, r);
-        Ok(Payload { codec: "qr".into(), rows, cols, body: w.0 })
+        Ok(())
     }
 
-    fn decompress(&self, p: &Payload) -> Result<Vec<f32>> {
+    fn decompress_into(&self, _eng: &mut CodecEngine, p: &Payload,
+                       out: &mut Vec<f32>) -> Result<()> {
         let mut rd = Reader::new(&p.body);
         let r = rd.u16()? as usize;
         ensure!(r >= 1 && r <= p.rows.min(p.cols), "bad rank {r}");
         let (q, rr) = read_factors(&mut rd, p.rows, p.cols, r)?;
         ensure!(rd.remaining() == 0, "trailing payload bytes");
-        Ok(q.matmul(&rr).to_f32())
+        out.clear();
+        out.extend(q.matmul(&rr).to_f32());
+        Ok(())
     }
 }
 
@@ -137,14 +149,15 @@ impl Codec for SvdCodec {
         }
     }
 
-    fn compress(&self, a: &[f32], rows: usize, cols: usize, ratio: f64)
-        -> Result<Payload> {
-        ensure!(a.len() == rows * cols, "shape mismatch");
+    fn compress_into(&self, _eng: &mut CodecEngine, a: MatView<'_>,
+                     ratio: f64, out: &mut Payload) -> Result<()> {
+        let (rows, cols) = (a.rows(), a.cols());
         let extras = self.extra_floats(rows, cols);
         let r = rank_for_ratio(rows, cols, ratio, extras);
-        let mut m = Mat::from_f32(a, rows, cols);
+        let mut m = Mat::from_f32(a.as_slice(), rows, cols);
 
-        let mut w = Writer::new();
+        out.reset(self.name(), rows, cols);
+        let mut w = Writer(&mut out.body);
         w.u16(r as u16);
 
         // pre-transform
@@ -201,7 +214,7 @@ impl Codec for SvdCodec {
                     }
                 }
                 write_factors(&mut w, &us, &d.vt, r);
-                return Ok(Payload { codec: self.name().into(), rows, cols, body: w.0 });
+                return Ok(());
             }
         }
 
@@ -214,10 +227,11 @@ impl Codec for SvdCodec {
         }
         write_factors(&mut w, &us, &d.vt, r);
         let _ = (&row_w, &col_s);
-        Ok(Payload { codec: self.name().into(), rows, cols, body: w.0 })
+        Ok(())
     }
 
-    fn decompress(&self, p: &Payload) -> Result<Vec<f32>> {
+    fn decompress_into(&self, _eng: &mut CodecEngine, p: &Payload,
+                       out: &mut Vec<f32>) -> Result<()> {
         let (rows, cols) = (p.rows, p.cols);
         let mut rd = Reader::new(&p.body);
         let r = rd.u16()? as usize;
@@ -240,25 +254,27 @@ impl Codec for SvdCodec {
         }
         let (us, vt) = read_factors(&mut rd, rows, cols, r)?;
         ensure!(rd.remaining() == 0, "trailing payload bytes");
-        let mut out = us.matmul(&vt);
+        let mut rec = us.matmul(&vt);
 
         // undo pre-transforms
         match self.variant {
             SvdVariant::Fwsvd => {
                 for i in 0..rows {
                     let inv = 1.0 / row_w[i].max(1e-12);
-                    for v in out.row_mut(i) {
+                    for v in rec.row_mut(i) {
                         *v *= inv;
                     }
                 }
             }
             SvdVariant::Asvd => {
                 let inv: Vec<f64> = col_s.iter().map(|&s| 1.0 / s.max(1e-12)).collect();
-                out.scale_cols(&inv);
+                rec.scale_cols(&inv);
             }
             _ => {}
         }
-        Ok(out.to_f32())
+        out.clear();
+        out.extend(rec.to_f32());
+        Ok(())
     }
 }
 

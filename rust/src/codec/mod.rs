@@ -4,19 +4,41 @@
 //! payload.
 //!
 //! Payload accounting follows DESIGN.md §6: the achieved ratio is
-//! `raw bytes / wire bytes` with raw = 4·S·D.  FourierCompress packs
-//! only the non-redundant half of the conjugate-symmetric block, so a
-//! K_S×K_D complex block costs K_S·K_D floats on the wire.
+//! `raw bytes / payload bytes` with raw = 4·S·D.  FourierCompress
+//! packs only the non-redundant half of the conjugate-symmetric block,
+//! so a K_S×K_D complex block costs K_S·K_D floats on the wire.
+//!
+//! Two ratio accountings exist and each consumer picks one
+//! deliberately (they used to be conflated — see [`Payload`]):
+//!
+//! * [`Payload::achieved_ratio`] — body bytes only.  This is the
+//!   *codec* ratio the paper's Tables II/III report and what the
+//!   golden-parity fixtures pin (the python reference has no framing).
+//! * [`Payload::wire_ratio`] — framed bytes, including the 12-byte
+//!   Activation frame header.  This is the *transport* ratio; Fig 6's
+//!   transfer-time model and the serving metrics use it.
 
+pub mod engine;
 pub mod fourier;
 pub mod lowrank;
 pub mod quant;
 pub mod topk;
 
-use anyhow::{bail, Result};
+pub use engine::{with_thread_engine, CodecEngine};
+
+use crate::tensor::MatView;
+use anyhow::{bail, ensure, Result};
+
+/// Bytes the coordinator's Activation frame adds around a codec body
+/// (session/request routing + block geometry).
+pub const FRAME_HEADER_BYTES: usize = 12;
 
 /// A compressed activation as it crosses the wire.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// Reusable: `reset` clears the body while keeping its capacity, so a
+/// decode loop that owns one `Payload` and calls
+/// [`Codec::compress_into`] per token allocates nothing after warm-up.
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct Payload {
     pub codec: String,
     pub rows: usize,
@@ -26,28 +48,84 @@ pub struct Payload {
 }
 
 impl Payload {
-    pub fn wire_bytes(&self) -> usize {
-        // body + the 12-byte frame header the protocol adds
-        self.body.len() + 12
+    /// An empty payload to be filled by [`Codec::compress_into`].
+    pub fn empty() -> Payload {
+        Payload::default()
     }
 
+    /// Re-initialise for a fresh compression without releasing the
+    /// body's capacity.
+    pub fn reset(&mut self, codec: &str, rows: usize, cols: usize) {
+        self.codec.clear();
+        self.codec.push_str(codec);
+        self.rows = rows;
+        self.cols = cols;
+        self.body.clear();
+    }
+
+    /// Bytes on the wire: body + the frame header the protocol adds.
+    pub fn wire_bytes(&self) -> usize {
+        self.body.len() + FRAME_HEADER_BYTES
+    }
+
+    /// Codec compression ratio over the body only (no framing) — the
+    /// accounting Tables II/III and the codec unit/parity tests use.
     pub fn achieved_ratio(&self) -> f64 {
         (self.rows * self.cols * 4) as f64 / self.body.len().max(1) as f64
+    }
+
+    /// Transport compression ratio over the framed bytes — the
+    /// accounting Fig 6 and the serving metrics use.  Always ≤
+    /// [`Payload::achieved_ratio`].
+    pub fn wire_ratio(&self) -> f64 {
+        (self.rows * self.cols * 4) as f64 / self.wire_bytes() as f64
     }
 }
 
 /// An activation codec.  Implementations must be deterministic: the
 /// same input and ratio produce byte-identical payloads (the golden
 /// parity tests rely on it).
+///
+/// The primary API is `_into`-style: the caller owns a
+/// [`CodecEngine`] (plans, index sets, scratch) and the output
+/// buffers, so the steady-state decode loop performs zero heap
+/// allocation.  The one-shot `compress`/`decompress` methods are thin
+/// wrappers over a thread-local engine kept for convenience and for
+/// wire-format parity with the pre-engine codebase — they produce
+/// byte-identical payloads.
 pub trait Codec: Send + Sync {
     fn name(&self) -> &'static str;
 
-    /// Compress `a` (rows × cols, row-major) at the target ratio.
-    fn compress(&self, a: &[f32], rows: usize, cols: usize, ratio: f64)
-        -> Result<Payload>;
+    /// Compress `a` at the target ratio into `out` (reusing `out`'s
+    /// buffers; `out` is reset first).
+    fn compress_into(&self, eng: &mut CodecEngine, a: MatView<'_>, ratio: f64,
+                     out: &mut Payload) -> Result<()>;
 
-    /// Reconstruct the full rows × cols matrix.
-    fn decompress(&self, p: &Payload) -> Result<Vec<f32>>;
+    /// Reconstruct the full rows × cols matrix into `out` (cleared
+    /// first, capacity reused).
+    fn decompress_into(&self, eng: &mut CodecEngine, p: &Payload,
+                       out: &mut Vec<f32>) -> Result<()>;
+
+    /// One-shot compression (legacy API; thread-local engine).
+    fn compress(&self, a: &[f32], rows: usize, cols: usize, ratio: f64)
+        -> Result<Payload> {
+        ensure!(a.len() == rows * cols, "shape mismatch");
+        let view = MatView::new(a, rows, cols);
+        with_thread_engine(|eng| {
+            let mut out = Payload::empty();
+            self.compress_into(eng, view, ratio, &mut out)?;
+            Ok(out)
+        })
+    }
+
+    /// One-shot reconstruction (legacy API; thread-local engine).
+    fn decompress(&self, p: &Payload) -> Result<Vec<f32>> {
+        with_thread_engine(|eng| {
+            let mut out = Vec::new();
+            self.decompress_into(eng, p, &mut out)?;
+            Ok(out)
+        })
+    }
 
     /// Convenience: compress-then-decompress (the eval harness path).
     fn roundtrip(&self, a: &[f32], rows: usize, cols: usize, ratio: f64)
@@ -83,23 +161,27 @@ impl Codec for NoneCodec {
         "none"
     }
 
-    fn compress(&self, a: &[f32], rows: usize, cols: usize, _ratio: f64)
-        -> Result<Payload> {
-        let mut body = Vec::with_capacity(a.len() * 4);
-        for v in a {
-            body.extend_from_slice(&v.to_le_bytes());
+    fn compress_into(&self, _eng: &mut CodecEngine, a: MatView<'_>,
+                     _ratio: f64, out: &mut Payload) -> Result<()> {
+        out.reset("none", a.rows(), a.cols());
+        out.body.reserve(a.len() * 4);
+        for v in a.as_slice() {
+            out.body.extend_from_slice(&v.to_le_bytes());
         }
-        Ok(Payload { codec: "none".into(), rows, cols, body })
+        Ok(())
     }
 
-    fn decompress(&self, p: &Payload) -> Result<Vec<f32>> {
+    fn decompress_into(&self, _eng: &mut CodecEngine, p: &Payload,
+                       out: &mut Vec<f32>) -> Result<()> {
         if p.body.len() != p.rows * p.cols * 4 {
             bail!("none codec: bad body size");
         }
-        Ok(p.body
+        out.clear();
+        out.reserve(p.rows * p.cols);
+        out.extend(p.body
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])));
+        Ok(())
     }
 }
 
@@ -107,12 +189,12 @@ impl Codec for NoneCodec {
 // shared byte helpers
 // ---------------------------------------------------------------------------
 
-pub(crate) struct Writer(pub Vec<u8>);
+/// Little-endian byte writer over a caller-owned buffer: the codecs
+/// append straight into `Payload::body`, so a reused payload keeps
+/// its capacity and the hot path allocates nothing.
+pub(crate) struct Writer<'a>(pub &'a mut Vec<u8>);
 
-impl Writer {
-    pub fn new() -> Writer {
-        Writer(Vec::new())
-    }
+impl Writer<'_> {
     pub fn u16(&mut self, v: u16) {
         self.0.extend_from_slice(&v.to_le_bytes());
     }
@@ -197,6 +279,14 @@ pub fn block_ratio(seq: usize, hidden: usize, ks: usize, kd: usize) -> f64 {
     (seq * hidden) as f64 / (ks * kd) as f64
 }
 
+/// Whether keeping `k` of `n` bins is a valid centred block width:
+/// in range, and odd unless the full axis is kept — the invariant
+/// `freq_indices` asserts.  The single source of truth for payload
+/// validation and the coordinator's engine warm-up gating.
+pub fn valid_block_axis(n: usize, k: usize) -> bool {
+    k >= 1 && k <= n && (k == n || k % 2 == 1)
+}
+
 /// Centred (conjugate-closed) frequency index set — public for the
 /// analysis driver and the benches.
 pub fn centered_indices(n: usize, k: usize) -> Vec<usize> {
@@ -219,17 +309,18 @@ pub(crate) fn freq_indices(n: usize, k: usize) -> Vec<usize> {
 /// axis width K_D whose centred block captures the most energy within
 /// the float budget implied by `ratio`.  This is how a deployment
 /// discovers the model's layer-1 band without training internals.
-pub fn calibrate_block(samples: &[(&[f32], usize, usize)], ratio: f64)
+pub fn calibrate_block(samples: &[MatView<'_>], ratio: f64)
     -> Option<usize> {
     use crate::dsp::fft2d::fft2_real;
-    let (_, rows, cols) = *samples.first()?;
+    let first = samples.first()?;
+    let (rows, cols) = (first.rows(), first.cols());
     let mut energy = vec![0.0f64; rows * cols];
     let mut used = 0;
-    for &(a, r, c) in samples {
-        if r != rows || c != cols {
+    for a in samples {
+        if a.rows() != rows || a.cols() != cols {
             continue;
         }
-        let spec = fft2_real(a, r, c);
+        let spec = fft2_real(*a);
         for (e, s) in energy.iter_mut().zip(&spec) {
             *e += s.norm_sq();
         }
@@ -383,7 +474,7 @@ mod tests {
                 }
             }
         }
-        let kd = calibrate_block(&[(&a, rows, cols)], 8.0).unwrap();
+        let kd = calibrate_block(&[MatView::new(&a, rows, cols)], 8.0).unwrap();
         assert!((11..=17).contains(&kd), "calibrated kd={kd}");
     }
 

@@ -5,7 +5,9 @@
 //!
 //! Wire body: u16 block | u32 n | f32 scales[ceil(n/block)] | i8 q[n]
 
+use super::engine::CodecEngine;
 use super::{Codec, Payload, Reader, Writer};
+use crate::tensor::MatView;
 use anyhow::{ensure, Result};
 
 pub struct Int8Codec {
@@ -23,47 +25,55 @@ impl Codec for Int8Codec {
         "int8"
     }
 
-    fn compress(&self, a: &[f32], rows: usize, cols: usize, _ratio: f64)
-        -> Result<Payload> {
-        ensure!(a.len() == rows * cols, "shape mismatch");
-        let n = a.len();
+    fn compress_into(&self, eng: &mut CodecEngine, a: MatView<'_>,
+                     _ratio: f64, out: &mut Payload) -> Result<()> {
+        let data = a.as_slice();
+        let n = data.len();
         let nb = n.div_ceil(self.block);
-        let mut w = Writer::new();
+        out.reset("int8", a.rows(), a.cols());
+        let mut w = Writer(&mut out.body);
         w.u16(self.block as u16);
         w.u32(n as u32);
-        let mut scales = Vec::with_capacity(nb);
+        // per-block absmax scales, staged in the engine's f32 scratch
+        let scales = &mut eng.floats;
+        scales.clear();
+        scales.reserve(nb);
         for b in 0..nb {
-            let chunk = &a[b * self.block..((b + 1) * self.block).min(n)];
+            let chunk = &data[b * self.block..((b + 1) * self.block).min(n)];
             let absmax = chunk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
             let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
             scales.push(scale);
             w.f32(scale);
         }
-        for (i, &v) in a.iter().enumerate() {
+        for (i, &v) in data.iter().enumerate() {
             let q = (v / scales[i / self.block]).round().clamp(-127.0, 127.0) as i8;
             w.0.push(q as u8);
         }
-        Ok(Payload { codec: "int8".into(), rows, cols, body: w.0 })
+        Ok(())
     }
 
-    fn decompress(&self, p: &Payload) -> Result<Vec<f32>> {
+    fn decompress_into(&self, eng: &mut CodecEngine, p: &Payload,
+                       out: &mut Vec<f32>) -> Result<()> {
         let mut r = Reader::new(&p.body);
         let block = r.u16()? as usize;
         let n = r.u32()? as usize;
         ensure!(n == p.rows * p.cols, "element count mismatch");
         ensure!(block > 0, "zero block");
         let nb = n.div_ceil(block);
-        let mut scales = Vec::with_capacity(nb);
+        let scales = &mut eng.floats;
+        scales.clear();
+        scales.reserve(nb);
         for _ in 0..nb {
             scales.push(r.f32()?);
         }
-        let mut out = Vec::with_capacity(n);
+        out.clear();
+        out.reserve(n);
         for i in 0..n {
             let q = r.byte()? as i8;
             out.push(q as f32 * scales[i / block]);
         }
         ensure!(r.remaining() == 0, "trailing payload bytes");
-        Ok(out)
+        Ok(())
     }
 }
 

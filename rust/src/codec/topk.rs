@@ -4,9 +4,12 @@
 //!
 //! Selection is a full sort by (|v| desc, idx asc) — matching how the
 //! framework baselines implement `topk` (and keeping payload bytes
-//! deterministic under ties).
+//! deterministic under ties).  The sort permutation lives in the
+//! engine's u32 scratch so the steady-state path allocates nothing.
 
+use super::engine::CodecEngine;
 use super::{Codec, Payload, Reader, Writer};
+use crate::tensor::MatView;
 use anyhow::{ensure, Result};
 
 pub struct TopkCodec;
@@ -22,47 +25,58 @@ impl Codec for TopkCodec {
         "topk"
     }
 
-    fn compress(&self, a: &[f32], rows: usize, cols: usize, ratio: f64)
-        -> Result<Payload> {
-        ensure!(a.len() == rows * cols, "shape mismatch");
-        let k = Self::k_for_ratio(a.len(), ratio);
-        let mut idx: Vec<u32> = (0..a.len() as u32).collect();
-        idx.sort_by(|&x, &y| {
-            let (ax, ay) = (a[x as usize].abs(), a[y as usize].abs());
+    fn compress_into(&self, eng: &mut CodecEngine, a: MatView<'_>, ratio: f64,
+                     out: &mut Payload) -> Result<()> {
+        let data = a.as_slice();
+        let k = Self::k_for_ratio(data.len(), ratio);
+        let idx = &mut eng.indices32;
+        idx.clear();
+        idx.extend(0..data.len() as u32);
+        // unstable sort: the comparator is a total order (index
+        // tie-break), so the permutation — and the payload bytes —
+        // are identical to a stable sort, without its temp-buffer
+        // allocation.
+        idx.sort_unstable_by(|&x, &y| {
+            let (ax, ay) = (data[x as usize].abs(), data[y as usize].abs());
             ay.partial_cmp(&ax).unwrap_or(std::cmp::Ordering::Equal)
                 .then(x.cmp(&y))
         });
-        let mut kept: Vec<u32> = idx[..k].to_vec();
+        let kept = &mut idx[..k];
         kept.sort_unstable(); // ascending index order compresses deltas well
 
-        let mut w = Writer::new();
+        out.reset("topk", a.rows(), a.cols());
+        let mut w = Writer(&mut out.body);
         w.u32(k as u32);
-        for &i in &kept {
+        for &i in kept.iter() {
             w.u32(i);
         }
-        for &i in &kept {
-            w.f32(a[i as usize]);
+        for &i in kept.iter() {
+            w.f32(data[i as usize]);
         }
-        Ok(Payload { codec: "topk".into(), rows, cols, body: w.0 })
+        Ok(())
     }
 
-    fn decompress(&self, p: &Payload) -> Result<Vec<f32>> {
+    fn decompress_into(&self, eng: &mut CodecEngine, p: &Payload,
+                       out: &mut Vec<f32>) -> Result<()> {
         let mut r = Reader::new(&p.body);
         let k = r.u32()? as usize;
         let n = p.rows * p.cols;
         ensure!(k <= n, "k={k} exceeds matrix size {n}");
-        let mut out = vec![0.0f32; n];
-        let mut indices = Vec::with_capacity(k);
+        out.clear();
+        out.resize(n, 0.0);
+        let indices = &mut eng.indices32;
+        indices.clear();
+        indices.reserve(k);
         for _ in 0..k {
-            let i = r.u32()? as usize;
-            ensure!(i < n, "index {i} out of range");
+            let i = r.u32()?;
+            ensure!((i as usize) < n, "index {i} out of range");
             indices.push(i);
         }
-        for &i in &indices {
-            out[i] = r.f32()?;
+        for &i in indices.iter() {
+            out[i as usize] = r.f32()?;
         }
         ensure!(r.remaining() == 0, "trailing payload bytes");
-        Ok(out)
+        Ok(())
     }
 }
 

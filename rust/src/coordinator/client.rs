@@ -6,7 +6,8 @@
 //! compressed activation.
 
 use super::protocol::Frame;
-use crate::codec::fourier::pack_block;
+use crate::codec::fourier::pack_block_into;
+use crate::codec::CodecEngine;
 use crate::model::tokenizer;
 use crate::model::weights::Weights;
 use crate::model::ModelMeta;
@@ -34,6 +35,13 @@ pub struct DeviceClient {
     buckets: BTreeMap<usize, ClientBucket>,
     client_args: Vec<Tensor>, // tok_emb + layer-0 weights
     next_request: u64,
+    /// Per-session codec engine: index sets + scratch survive the
+    /// whole autoregressive generation, so the per-token loop packs
+    /// without re-deriving or re-allocating anything.
+    engine: CodecEngine,
+    /// Reusable packed-coefficient buffer (moved into the Activation
+    /// frame for the send, then recovered).
+    packed_scratch: Vec<f32>,
     pub stats: ClientStats,
 }
 
@@ -89,6 +97,18 @@ impl DeviceClient {
         let tcp = TcpStream::connect(addr)?;
         tcp.set_nodelay(true)?;
         tcp.set_read_timeout(Some(Duration::from_secs(60)))?;
+        // pre-warm the engine for every bucket this session can use;
+        // a geometry the codec cannot serve is a manifest bug — fail
+        // the connection now, not with a panic mid-generation.
+        let mut engine = CodecEngine::new();
+        for (&bucket, cb) in &buckets {
+            if !crate::codec::valid_block_axis(bucket, cb.ks)
+                || !crate::codec::valid_block_axis(meta.d_model, cb.kd) {
+                bail!("manifest bucket {bucket}: invalid block {}x{} for \
+                       {bucket}x{}", cb.ks, cb.kd, meta.d_model);
+            }
+            engine.warm(bucket, meta.d_model, cb.ks, cb.kd);
+        }
         let mut client = DeviceClient {
             session,
             stream: BufReader::new(tcp),
@@ -97,6 +117,8 @@ impl DeviceClient {
             buckets,
             client_args,
             next_request: 1,
+            engine,
+            packed_scratch: Vec::new(),
             stats: ClientStats::default(),
         };
         client.send(&Frame::Hello { session, model })?;
@@ -135,23 +157,30 @@ impl DeviceClient {
         let mut args = vec![tokens];
         args.extend(self.client_args.iter().cloned());
         let out = cb.exe.run(&args)?; // [re, im] each [1, ks, kd]
-        let packed = pack_block(out[0].as_f32(), out[1].as_f32(), bucket,
-                                self.d_model, cb.ks, cb.kd);
+        let (ks, kd) = (cb.ks, cb.kd);
+        let mut packed = std::mem::take(&mut self.packed_scratch);
+        pack_block_into(&mut self.engine, out[0].as_f32(), out[1].as_f32(),
+                        bucket, self.d_model, ks, kd, &mut packed);
         self.stats.client_compute_us += t0.elapsed().as_micros() as u64;
         self.stats.bytes_uncompressed += (bucket * self.d_model * 4) as u64;
 
         let request = self.next_request;
         self.next_request += 1;
         let t1 = Instant::now();
-        self.send(&Frame::Activation {
+        let frame = Frame::Activation {
             session: self.session,
             request,
             bucket: bucket as u16,
             true_len: len as u16,
-            ks: cb.ks as u16,
-            kd: cb.kd as u16,
+            ks: ks as u16,
+            kd: kd as u16,
             packed,
-        })?;
+        };
+        self.send(&frame)?;
+        // recover the coefficient buffer so the next step reuses it
+        if let Frame::Activation { packed, .. } = frame {
+            self.packed_scratch = packed;
+        }
         self.stats.requests += 1;
         loop {
             match self.recv()? {

@@ -8,7 +8,8 @@ use super::batcher::Batcher;
 use super::metrics::Metrics;
 use super::protocol::Frame;
 use super::session::SessionManager;
-use crate::codec::fourier::unpack_block;
+use crate::codec::fourier::unpack_block_into;
+use crate::codec::CodecEngine;
 use crate::config::ServeConfig;
 use crate::model::weights::Weights;
 use crate::model::ModelMeta;
@@ -78,6 +79,15 @@ impl ServingModel {
             }
         }
         batch_sizes.sort_unstable_by(|a, b| b.cmp(a));
+        // reject unservable bucket geometry at load time — the codec
+        // engines warm from this table and freq_indices asserts on it
+        for (&bucket, bm) in &buckets {
+            if !crate::codec::valid_block_axis(bucket, bm.ks)
+                || !crate::codec::valid_block_axis(meta.d_model, bm.kd) {
+                bail!("manifest bucket {bucket}: invalid block {}x{} for \
+                       {bucket}x{}", bm.ks, bm.kd, meta.d_model);
+            }
+        }
         Ok(ServingModel { model, d_model: meta.d_model, vocab: meta.vocab_size,
                           buckets, exes, server_args, batch_sizes })
     }
@@ -322,6 +332,16 @@ fn handle_conn(stream: TcpStream, breq_tx: mpsc::Sender<(usize, GroupItem)>,
     stream.set_nodelay(true)?;
     let mut reader = std::io::BufReader::new(stream.try_clone()?);
     let writer = stream;
+    // per-connection codec engine: cached index sets survive across
+    // this session's requests, and workers never contend on a shared
+    // plan-cache lock (the old global Mutex<HashMap> is gone — the
+    // shared tier is an RwLock reached only on a per-engine miss).
+    // geometry was validated by ServingModel::load, so warming cannot
+    // trip the freq_indices asserts
+    let mut engine = CodecEngine::new();
+    for (&bucket, bm) in &model.buckets {
+        engine.warm(bucket, model.d_model, bm.ks, bm.kd);
+    }
 
     // writer thread: serialises replies from batcher workers + us
     let (reply_tx, reply_rx) = mpsc::channel::<Frame>();
@@ -369,11 +389,16 @@ fn handle_conn(stream: TcpStream, breq_tx: mpsc::Sender<(usize, GroupItem)>,
                     }
                 };
                 let t0 = Instant::now();
-                let unpacked = unpack_block(&packed, bucket, model.d_model,
-                                            bm.ks, bm.kd);
+                // re/im are owned by the GroupItem (they cross the
+                // batcher thread boundary), but the index sets and
+                // unpack bookkeeping come from the warm engine.
+                let (mut re, mut im) = (Vec::new(), Vec::new());
+                let unpacked = unpack_block_into(&mut engine, &packed, bucket,
+                                                 model.d_model, bm.ks, bm.kd,
+                                                 &mut re, &mut im);
                 metrics.decompress_us.record(t0.elapsed());
                 match unpacked {
-                    Ok((re, im)) => {
+                    Ok(()) => {
                         let item = GroupItem {
                             session, request,
                             true_len: true_len as usize,

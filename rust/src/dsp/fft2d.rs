@@ -3,19 +3,32 @@
 //! buffer to keep the butterflies on contiguous memory (measurably
 //! faster than strided access on this substrate — see EXPERIMENTS.md
 //! §Perf).
+//!
+//! The process-wide plan cache is the slow tier: steady-state request
+//! paths go through a [`crate::codec::CodecEngine`], which holds its
+//! own lock-free per-engine plan map and only falls back here on the
+//! first sighting of a new axis length.  The shared tier itself uses
+//! an `RwLock` so the common hit path is a read lock + `Arc` clone —
+//! server workers no longer serialise on a `Mutex` per transform.
 
 use super::complex::C64;
 use super::fft::FftPlan;
+use crate::tensor::MatView;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock, RwLock};
 
-fn plan_cache() -> &'static Mutex<HashMap<usize, Arc<FftPlan>>> {
-    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<FftPlan>>>> = OnceLock::new();
-    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+fn plan_cache() -> &'static RwLock<HashMap<usize, Arc<FftPlan>>> {
+    static CACHE: OnceLock<RwLock<HashMap<usize, Arc<FftPlan>>>> = OnceLock::new();
+    CACHE.get_or_init(|| RwLock::new(HashMap::new()))
 }
 
+/// Shared-tier plan lookup: read-locked fast path, write lock only on
+/// a miss (double-checked so a racing fill stays consistent).
 pub fn plan(n: usize) -> Arc<FftPlan> {
-    let mut cache = plan_cache().lock().unwrap();
+    if let Some(p) = plan_cache().read().unwrap().get(&n) {
+        return p.clone();
+    }
+    let mut cache = plan_cache().write().unwrap();
     cache.entry(n).or_insert_with(|| Arc::new(FftPlan::new(n))).clone()
 }
 
@@ -64,9 +77,10 @@ pub fn ifft2(data: &mut [C64], rows: usize, cols: usize) {
 }
 
 /// Forward 2-D FFT of a real f32 matrix into a fresh complex buffer.
-pub fn fft2_real(a: &[f32], rows: usize, cols: usize) -> Vec<C64> {
-    let mut buf: Vec<C64> = a.iter().map(|&v| C64::from_re(v as f64)).collect();
-    fft2(&mut buf, rows, cols);
+pub fn fft2_real(a: MatView<'_>) -> Vec<C64> {
+    let mut buf: Vec<C64> =
+        a.as_slice().iter().map(|&v| C64::from_re(v as f64)).collect();
+    fft2(&mut buf, a.rows(), a.cols());
     buf
 }
 
@@ -128,7 +142,7 @@ mod tests {
         let (r, c) = (8, 12);
         let mut rng = Rng::new(4);
         let a: Vec<f32> = (0..r * c).map(|_| rng.normal() as f32).collect();
-        let spec = fft2_real(&a, r, c);
+        let spec = fft2_real(MatView::new(&a, r, c));
         for u in 0..r {
             for v in 0..c {
                 let m = spec[((r - u) % r) * c + (c - v) % c].conj();

@@ -10,7 +10,7 @@ use crate::codec::{self, rel_error, Codec};
 use crate::dsp::fft2d::fft2_real;
 use crate::model::executor::SplitExecutor;
 use crate::model::tokenizer;
-use crate::tensor::Tensor;
+use crate::tensor::{MatView, Tensor};
 use crate::util::json::Json;
 use anyhow::Result;
 
@@ -30,10 +30,11 @@ fn batch_tokens(exec: &SplitExecutor, items: &[Item]) -> (Tensor, Vec<usize>) {
 
 /// Mean pairwise cosine similarity between token activation vectors —
 /// the Fig 2(b) metric ("activation similarity").
-pub fn token_similarity(act: &[f32], rows: usize, cols: usize) -> f64 {
+pub fn token_similarity(act: MatView<'_>) -> f64 {
+    let rows = act.rows();
     let mut norms = vec![0.0f64; rows];
-    for r in 0..rows {
-        norms[r] = act[r * cols..(r + 1) * cols]
+    for (r, norm) in norms.iter_mut().enumerate() {
+        *norm = act.row(r)
             .iter()
             .map(|&v| (v as f64) * (v as f64))
             .sum::<f64>()
@@ -44,9 +45,9 @@ pub fn token_similarity(act: &[f32], rows: usize, cols: usize) -> f64 {
     let mut n = 0usize;
     for i in 0..rows {
         for j in (i + 1)..rows {
-            let dot: f64 = act[i * cols..(i + 1) * cols]
+            let dot: f64 = act.row(i)
                 .iter()
-                .zip(&act[j * cols..(j + 1) * cols])
+                .zip(act.row(j))
                 .map(|(&a, &b)| a as f64 * b as f64)
                 .sum();
             sum += dot / (norms[i] * norms[j]);
@@ -61,9 +62,9 @@ pub fn token_similarity(act: &[f32], rows: usize, cols: usize) -> f64 {
 }
 
 /// Energy fraction captured by the centred (ks, kd) block — Fig 2(c).
-pub fn block_energy_fraction(act: &[f32], rows: usize, cols: usize,
-                             ks: usize, kd: usize) -> f64 {
-    let spec = fft2_real(act, rows, cols);
+pub fn block_energy_fraction(act: MatView<'_>, ks: usize, kd: usize) -> f64 {
+    let (rows, cols) = (act.rows(), act.cols());
+    let spec = fft2_real(act);
     let total: f64 = spec.iter().map(|c| c.norm_sq()).sum();
     let ui = codec::centered_indices(rows, ks);
     let vi = codec::centered_indices(cols, kd);
@@ -97,8 +98,8 @@ pub fn analyze(ctx: &EvalContext, model: &str, ratio: f64) -> Result<Json> {
             let mut v = 0.0;
             for e in 0..act.shape[0] {
                 let len = lens[e];
-                v += token_similarity(
-                    &act.as_f32()[e * s * d..e * s * d + len * d], len, d);
+                v += token_similarity(MatView::new(
+                    &act.as_f32()[e * s * d..e * s * d + len * d], len, d));
             }
             arr.push(Json::Num(v / act.shape[0] as f64));
         }
@@ -139,10 +140,10 @@ pub fn analyze(ctx: &EvalContext, model: &str, ratio: f64) -> Result<Json> {
     let mut spec = Json::obj();
     for (label, idx) in [("layer1", 0usize), ("mid", exec.meta.n_layers / 2),
                          ("last", exec.meta.n_layers - 1)] {
-        let act = &acts[idx];
-        let s = act.shape[1];
+        // [B, S, D] viewed as token rows; the first `len` rows are
+        // element 0's true-length crop
         let len = lens[0];
-        let crop = &act.as_f32()[..len * d];
+        let crop = acts[idx].mat_view().crop_rows(len);
         let mut arr = Vec::new();
         for frac in [0.02, 0.05, 0.1, 0.2, 0.4, 0.8] {
             let budget = ((len * d) as f64 * frac).max(1.0);
@@ -150,17 +151,15 @@ pub fn analyze(ctx: &EvalContext, model: &str, ratio: f64) -> Result<Json> {
             let ks_raw = (budget / kd as f64) as usize;
             let ks = ks_raw.clamp(1, len);
             let ks = if ks == len { ks } else if ks % 2 == 0 { ks.max(2) - 1 } else { ks };
-            arr.push(Json::Num(block_energy_fraction(crop, len, d, ks, kd)));
+            arr.push(Json::Num(block_energy_fraction(crop, ks, kd)));
         }
         spec.set(label, Json::Arr(arr));
     }
     out.set("energy_fraction", spec);
 
     // heatmap dump (first item, layer 1 + last): original vs fc recon
-    let act1 = &acts[0];
-    let s = act1.shape[1];
     let len = lens[0];
-    let crop = &act1.as_f32()[..len * d];
+    let crop = acts[0].mat_view().crop_rows(len).as_slice();
     let fc2 = codec::fourier::FourierCodec::with_hint(exec.meta.kd_band());
     let rec = fc2.roundtrip(crop, len, d, ratio)?;
     out.set("heatmap_rows", Json::Num(len as f64));
@@ -170,6 +169,5 @@ pub fn analyze(ctx: &EvalContext, model: &str, ratio: f64) -> Result<Json> {
     out.set("heatmap_fc_err",
             Json::Arr(crop.iter().zip(&rec).step_by(4)
                 .map(|(&a, &b)| Json::Num((a - b).abs() as f64)).collect()));
-    let _ = s;
     Ok(out)
 }

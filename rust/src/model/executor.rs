@@ -11,7 +11,7 @@
 use super::{weights::Weights, ModelMeta};
 use crate::codec::{fourier::FourierCodec, block_ratio, fc_block, Codec};
 use crate::runtime::{ArtifactStore, Executable};
-use crate::tensor::Tensor;
+use crate::tensor::{MatViewMut, Tensor};
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
@@ -115,12 +115,14 @@ impl SplitExecutor {
     fn apply_boundary(&self, h: &mut Tensor, lens: &[usize], boundary: &Boundary)
         -> Result<f64> {
         let (b, s, d) = (h.shape[0], h.shape[1], h.shape[2]);
-        let data = h.as_f32_mut();
+        // [B, S, D] as a (B·S) × D token-row matrix
+        let mut mat = MatViewMut::new(h.as_f32_mut(), b * s, d);
         let mut ratios = Vec::with_capacity(b);
         for e in 0..b {
             let len = lens.get(e).copied().unwrap_or(s).clamp(1, s);
-            let base = e * s * d;
-            let crop: Vec<f32> = data[base..base + len * d].to_vec();
+            let first = e * s; // this element's first token row
+            let crop: Vec<f32> =
+                mat.as_slice()[first * d..(first + len) * d].to_vec();
             let (recon, ratio) = match boundary {
                 Boundary::None => (crop, 1.0),
                 Boundary::Codec { codec, ratio } => {
@@ -135,11 +137,12 @@ impl SplitExecutor {
                     (fc.decompress(&p)?, p.achieved_ratio())
                 }
             };
-            data[base..base + len * d].copy_from_slice(&recon);
-            // zero the PAD region: it was never transmitted
+            mat.as_slice_mut()[first * d..(first + len) * d]
+                .copy_from_slice(&recon);
+            // zero the PAD rows: they were never transmitted
             if !matches!(boundary, Boundary::None) {
-                for v in data[base + len * d..base + s * d].iter_mut() {
-                    *v = 0.0;
+                for r in first + len..first + s {
+                    mat.row_mut(r).fill(0.0);
                 }
             }
             ratios.push(ratio);

@@ -1,0 +1,108 @@
+//! The real PJRT backend (feature `xla`): compiles HLO text through
+//! the xla_extension bindings and executes on the CPU client.
+
+use crate::tensor::{Tensor, TensorData};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// The PJRT client.  One per process; executables keep it alive via Arc.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(wrap)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(wrap)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path.file_name().unwrap_or_default().to_string_lossy().into(),
+        })
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+/// A compiled artifact.
+///
+/// SAFETY: the PJRT CPU client is internally synchronised and the
+/// executable objects are immutable after compilation; the coordinator
+/// shares them across worker threads behind `Arc`.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Executable {
+    /// Execute with host tensors; returns the flattened output tuple.
+    pub fn run(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            args.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(literals)
+            .map_err(wrap)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("{}: empty result", self.name))?
+            .to_literal_sync()
+            .map_err(wrap)?;
+        // python lowers with return_tuple=True
+        let parts = lit.to_tuple().map_err(wrap)?;
+        parts.iter().map(literal_to_tensor).collect()
+    }
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims = t.dims_i64();
+    let lit = match &t.data {
+        TensorData::F32(v) => xla::Literal::vec1(v.as_slice()),
+        TensorData::I32(v) => xla::Literal::vec1(v.as_slice()),
+    };
+    lit.reshape(&dims).map_err(wrap)
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(wrap)?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            Ok(Tensor::f32(dims, lit.to_vec::<f32>().map_err(wrap)?))
+        }
+        xla::ElementType::S32 => {
+            Ok(Tensor::i32(dims, lit.to_vec::<i32>().map_err(wrap)?))
+        }
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}

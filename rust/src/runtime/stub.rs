@@ -1,0 +1,45 @@
+//! Hermetic no-accelerator backend (default build): the container that
+//! runs tier-1 tests has no XLA toolchain, so `Runtime::cpu()`
+//! succeeds (letting `ArtifactStore` and config plumbing construct)
+//! but any attempt to load or execute an artifact fails with an
+//! actionable message.  Tests that need artifacts already skip when
+//! `artifacts/manifest.json` is absent, so this backend never fires in
+//! the tier-1 path.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "xla runtime unavailable in this build (enable the `xla` feature and \
+     wire the xla_extension dependency)";
+
+pub struct Runtime {
+    _priv: (),
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { _priv: () })
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (no xla feature)".to_string()
+    }
+
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        bail!("{UNAVAILABLE}: cannot load {}", path.as_ref().display())
+    }
+}
+
+/// A compiled artifact (stub: cannot be constructed through the public
+/// API because `load_hlo_text` always errors first).
+pub struct Executable {
+    pub name: String,
+}
+
+impl Executable {
+    pub fn run(&self, _args: &[Tensor]) -> Result<Vec<Tensor>> {
+        bail!("{UNAVAILABLE}: cannot execute {}", self.name)
+    }
+}

@@ -2,6 +2,9 @@
 //! format defined in python/compile/tensor_io.py).
 
 pub mod io;
+pub mod view;
+
+pub use view::{MatView, MatViewMut};
 
 use std::fmt;
 
@@ -74,6 +77,16 @@ impl Tensor {
             TensorData::I32(v) => v,
             _ => panic!("tensor is not i32"),
         }
+    }
+
+    /// The trailing-2-D matrix view of an f32 tensor: `[R, C]` maps
+    /// directly, `[B, S, D]` flattens the leading axes into rows.
+    /// Panics on rank < 2 or non-f32 data.
+    pub fn mat_view(&self) -> MatView<'_> {
+        assert!(self.shape.len() >= 2, "mat_view needs rank >= 2");
+        let cols = *self.shape.last().unwrap();
+        let rows = self.shape[..self.shape.len() - 1].iter().product();
+        MatView::new(self.as_f32(), rows, cols)
     }
 
     /// Dims as i64 (what the xla crate's literal APIs want).

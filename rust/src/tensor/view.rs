@@ -1,0 +1,174 @@
+//! Borrowed row-major matrix views — the crate-wide replacement for
+//! the loose `(&[f32], rows, cols)` triplets that used to flow between
+//! the codecs, the DSP layer, and the coordinator.  A [`MatView`] is
+//! `Copy` and carries its shape, so a shape mismatch is caught at the
+//! construction site instead of deep inside a transform.
+
+use std::fmt;
+
+/// An immutable row-major `rows × cols` f32 matrix view.
+#[derive(Clone, Copy)]
+pub struct MatView<'a> {
+    data: &'a [f32],
+    rows: usize,
+    cols: usize,
+}
+
+impl<'a> MatView<'a> {
+    /// Wrap `data` as a `rows × cols` matrix.  Panics on shape
+    /// mismatch (use [`MatView::try_new`] for fallible callers).
+    pub fn new(data: &'a [f32], rows: usize, cols: usize) -> MatView<'a> {
+        assert_eq!(data.len(), rows * cols,
+                   "MatView: {} elements cannot be {rows}x{cols}", data.len());
+        MatView { data, rows, cols }
+    }
+
+    pub fn try_new(data: &'a [f32], rows: usize, cols: usize)
+        -> Option<MatView<'a>> {
+        (data.len() == rows * cols).then_some(MatView { data, rows, cols })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// Row `r` as a contiguous slice.
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// The raw bytes this matrix occupies uncompressed (4·rows·cols) —
+    /// the numerator of every compression-ratio account.
+    pub fn raw_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// A view of the leading `rows` rows (the eval path crops PAD
+    /// rows before compressing).
+    pub fn crop_rows(&self, rows: usize) -> MatView<'a> {
+        assert!(rows <= self.rows, "crop {rows} > {}", self.rows);
+        MatView { data: &self.data[..rows * self.cols], rows, cols: self.cols }
+    }
+}
+
+impl fmt::Debug for MatView<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "MatView[{}x{}]", self.rows, self.cols)
+    }
+}
+
+/// A mutable row-major `rows × cols` f32 matrix view.
+pub struct MatViewMut<'a> {
+    data: &'a mut [f32],
+    rows: usize,
+    cols: usize,
+}
+
+impl<'a> MatViewMut<'a> {
+    pub fn new(data: &'a mut [f32], rows: usize, cols: usize)
+        -> MatViewMut<'a> {
+        assert_eq!(data.len(), rows * cols,
+                   "MatViewMut: {} elements cannot be {rows}x{cols}",
+                   data.len());
+        MatViewMut { data, rows, cols }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        self.data
+    }
+
+    pub fn as_slice_mut(&mut self) -> &mut [f32] {
+        self.data
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Reborrow as an immutable view.
+    pub fn as_view(&self) -> MatView<'_> {
+        MatView { data: self.data, rows: self.rows, cols: self.cols }
+    }
+}
+
+impl fmt::Debug for MatViewMut<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "MatViewMut[{}x{}]", self.rows, self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn view_shape_and_access() {
+        let d = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let v = MatView::new(&d, 2, 3);
+        assert_eq!(v.rows(), 2);
+        assert_eq!(v.cols(), 3);
+        assert_eq!(v.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(v.at(0, 2), 3.0);
+        assert_eq!(v.raw_bytes(), 24);
+    }
+
+    #[test]
+    #[should_panic]
+    fn view_shape_mismatch_panics() {
+        let d = vec![0.0f32; 5];
+        MatView::new(&d, 2, 3);
+    }
+
+    #[test]
+    fn try_new_is_fallible() {
+        let d = vec![0.0f32; 6];
+        assert!(MatView::try_new(&d, 2, 3).is_some());
+        assert!(MatView::try_new(&d, 3, 3).is_none());
+    }
+
+    #[test]
+    fn crop_rows_narrows() {
+        let d: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let v = MatView::new(&d, 4, 3);
+        let c = v.crop_rows(2);
+        assert_eq!(c.rows(), 2);
+        assert_eq!(c.as_slice(), &d[..6]);
+    }
+
+    #[test]
+    fn mut_view_roundtrip() {
+        let mut d = vec![0.0f32; 6];
+        let mut v = MatViewMut::new(&mut d, 2, 3);
+        v.row_mut(1)[0] = 7.0;
+        assert_eq!(v.as_view().at(1, 0), 7.0);
+        assert_eq!(d[3], 7.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! CodecEngine refactor contract tests:
+//!
+//! 1. **Wire parity** — every codec's `compress_into` over a
+//!    caller-owned engine emits byte-identical payloads to the legacy
+//!    one-shot API, and both decompress to identical floats.
+//! 2. **Golden snapshot** — the `fc` payload bytes for a fixed set of
+//!    (shape, ratio) fixtures are pinned to a checked-in snapshot
+//!    (self-bootstrapping on first run), so a future change that
+//!    silently alters the wire format fails loudly.
+//! 3. **Engine reuse** — repeated `compress_into`/`decompress_into`
+//!    calls on the same shape do not grow the scratch arena after
+//!    warm-up: the steady-state decode loop is allocation-free.
+
+use fourier_compress::codec::{by_name, Codec, CodecEngine, Payload};
+use fourier_compress::tensor::MatView;
+use fourier_compress::util::rng::Rng;
+use std::io::Write;
+use std::path::PathBuf;
+
+fn rand_act(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..rows * cols).map(|_| rng.normal() as f32).collect()
+}
+
+/// The fixture grid: shapes cover pow2 and bluestein axes.
+const FIXTURES: &[(usize, usize, f64, u64)] = &[
+    (16, 96, 6.0, 1),
+    (48, 128, 8.0, 2),
+    (64, 128, 8.0, 3),
+    (31, 100, 4.0, 4),
+];
+
+#[test]
+fn engine_payloads_match_legacy_for_every_codec() {
+    // int8/none ignore ratio; factorization codecs are deterministic
+    for name in ["fc", "topk", "qr", "fwsvd", "asvd", "svdllm", "int8", "none"] {
+        let c = by_name(name).unwrap();
+        let mut eng = CodecEngine::new();
+        let mut p = Payload::empty();
+        let mut rec = Vec::new();
+        for &(rows, cols, ratio, seed) in FIXTURES {
+            let a = rand_act(rows, cols, seed);
+            let legacy = c.compress(&a, rows, cols, ratio).unwrap();
+            c.compress_into(&mut eng, MatView::new(&a, rows, cols), ratio,
+                            &mut p).unwrap();
+            assert_eq!(p, legacy, "{name} {rows}x{cols} r{ratio}");
+            assert_eq!(p.achieved_ratio(), legacy.achieved_ratio(), "{name}");
+
+            c.decompress_into(&mut eng, &p, &mut rec).unwrap();
+            assert_eq!(rec, c.decompress(&legacy).unwrap(),
+                       "{name} {rows}x{cols} decompress");
+        }
+    }
+}
+
+fn snapshot_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join("fc_golden.bin")
+}
+
+/// Concatenated fc payload bodies over the fixture grid, each
+/// length-prefixed (u32 le).
+fn fc_snapshot_bytes() -> Vec<u8> {
+    let fc = by_name("fc").unwrap();
+    let mut out = Vec::new();
+    for &(rows, cols, ratio, seed) in FIXTURES {
+        let a = rand_act(rows, cols, seed);
+        let p = fc.compress(&a, rows, cols, ratio).unwrap();
+        out.extend_from_slice(&(p.body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&p.body);
+    }
+    out
+}
+
+#[test]
+fn fc_golden_snapshot_bytes_stable() {
+    let got = fc_snapshot_bytes();
+    let path = snapshot_path();
+    match std::fs::read(&path) {
+        Ok(want) => {
+            assert_eq!(got.len(), want.len(),
+                       "fc wire format drifted from {}", path.display());
+            assert!(got == want,
+                    "fc payload bytes drifted from {}", path.display());
+        }
+        Err(_) => {
+            // first run on this tree: bootstrap the snapshot
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            let mut f = std::fs::File::create(&path).unwrap();
+            f.write_all(&got).unwrap();
+            eprintln!("bootstrapped fc golden snapshot at {}", path.display());
+        }
+    }
+}
+
+#[test]
+fn engine_scratch_stops_growing_after_warmup() {
+    let fc = by_name("fc").unwrap();
+    let (rows, cols, ratio) = (64usize, 256usize, 8.0);
+    let a = rand_act(rows, cols, 9);
+    let view = MatView::new(&a, rows, cols);
+
+    let mut eng = CodecEngine::new();
+    let mut p = Payload::empty();
+    let mut rec = Vec::new();
+    // warm-up: two full round trips grow the arena to steady state
+    for _ in 0..2 {
+        fc.compress_into(&mut eng, view, ratio, &mut p).unwrap();
+        fc.decompress_into(&mut eng, &p, &mut rec).unwrap();
+    }
+    let warm = eng.scratch_bytes();
+    let (warm_plans, warm_idx) = (eng.cached_plans(), eng.cached_index_sets());
+    assert!(warm > 0, "engine never allocated scratch");
+
+    for _ in 0..100 {
+        fc.compress_into(&mut eng, view, ratio, &mut p).unwrap();
+        fc.decompress_into(&mut eng, &p, &mut rec).unwrap();
+        assert_eq!(eng.scratch_bytes(), warm, "scratch arena grew");
+    }
+    assert_eq!(eng.cached_plans(), warm_plans, "plan cache churned");
+    assert_eq!(eng.cached_index_sets(), warm_idx, "index cache churned");
+}
+
+#[test]
+fn engine_serves_mixed_shapes_without_confusion() {
+    // a server-side engine sees interleaved buckets; results must not
+    // depend on call order (scratch is re-zeroed per call)
+    let fc = by_name("fc").unwrap();
+    let mut eng = CodecEngine::new();
+    let mut p = Payload::empty();
+    let mut rec = Vec::new();
+
+    let shapes = [(16usize, 96usize, 6.0f64, 21u64), (64, 128, 8.0, 22),
+                  (31, 100, 4.0, 23)];
+    // reference outputs from fresh engines
+    let mut want = Vec::new();
+    for &(r, c, ratio, seed) in &shapes {
+        let a = rand_act(r, c, seed);
+        let payload = fc.compress(&a, r, c, ratio).unwrap();
+        let out = fc.decompress(&payload).unwrap();
+        want.push((a, payload, out));
+    }
+    // interleave through one shared engine, twice
+    for _ in 0..2 {
+        for (i, &(r, c, ratio, _)) in shapes.iter().enumerate() {
+            let (a, wp, wo) = &want[i];
+            fc.compress_into(&mut eng, MatView::new(a, r, c), ratio, &mut p)
+                .unwrap();
+            assert_eq!(&p, wp, "shape {r}x{c} payload drifted");
+            fc.decompress_into(&mut eng, &p, &mut rec).unwrap();
+            assert_eq!(&rec, wo, "shape {r}x{c} recon drifted");
+        }
+    }
+}
+
+#[test]
+fn wire_ratio_accounts_for_frame_header() {
+    let fc = by_name("fc").unwrap();
+    let a = rand_act(48, 128, 5);
+    let p = fc.compress(&a, 48, 128, 8.0).unwrap();
+    let raw = (48 * 128 * 4) as f64;
+    assert_eq!(p.wire_bytes(), p.body.len() + 12);
+    assert!((p.achieved_ratio() - raw / p.body.len() as f64).abs() < 1e-12);
+    assert!((p.wire_ratio() - raw / (p.body.len() + 12) as f64).abs() < 1e-12);
+    assert!(p.wire_ratio() < p.achieved_ratio());
+}
