@@ -465,6 +465,128 @@ mod tests {
         assert_eq!(r.u16().unwrap(), 15);
     }
 
+    /// Naive reference: full 2-D FFT, gather the centred block, scatter
+    /// into a zero spectrum, inverse FFT (the `runtime::interp` codec
+    /// path, which mirrors python kernels/ref.py).
+    fn naive_roundtrip(a: &[f32], rows: usize, cols: usize, ks: usize,
+                       kd: usize) -> Vec<f32> {
+        use crate::runtime::interp::{fc_compress_naive, fc_decompress_naive};
+        let (re, im) = fc_compress_naive(a, rows, cols, ks, kd);
+        fc_decompress_naive(&re, &im, rows, cols, ks, kd)
+    }
+
+    /// Largest valid centred width ≤ k for an n-point axis.
+    fn oddify(k: usize, n: usize) -> usize {
+        let k = k.clamp(1, n);
+        if k == n || k % 2 == 1 { k } else { k - 1 }
+    }
+
+    /// Reconstruction disagreement normalised by the INPUT energy —
+    /// stable even for near-empty blocks (a (1,1) block reconstructs
+    /// to ~zero, which would blow up a plain relative error).
+    fn recon_err(input: &[f32], want: &[f32], got: &[f32]) -> f64 {
+        let num: f64 = want.iter().zip(got)
+            .map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+        let den: f64 = input.iter().map(|x| (*x as f64).powi(2)).sum();
+        (num / den.max(1e-30)).sqrt()
+    }
+
+    #[test]
+    fn edge_blocks_match_naive_full_fft() {
+        // odd row/column counts, ks == 1, kd == cols (full axis), tiny
+        // axes — every edge the serving geometry can produce, pinned
+        // against the naive full-FFT reference
+        for (rows, cols) in
+            [(7usize, 9usize), (5, 32), (17, 31), (16, 7), (32, 128)] {
+            let a = rand_act(rows, cols, (rows * 31 + cols) as u64);
+            let codec = FourierCodec::default();
+            let ks_small = oddify(3, rows);
+            let kd_small = oddify(5, cols);
+            for (ks, kd) in [
+                (1, 1),
+                (1, kd_small),
+                (ks_small, 1),
+                (1, cols),
+                (rows, 1),
+                (rows, cols),
+                (rows, kd_small),
+                (ks_small, cols),
+                (ks_small, kd_small),
+            ] {
+                let p = codec.compress_block(&a, rows, cols, ks, kd).unwrap();
+                // conjugate-symmetric packing: exactly ks*kd floats
+                assert_eq!((p.body.len() - 4) / 4, ks * kd,
+                           "({rows},{cols}) block {ks}x{kd}: payload size");
+                let got = codec.decompress(&p).unwrap();
+                let want = naive_roundtrip(&a, rows, cols, ks, kd);
+                let err = recon_err(&a, &want, &got);
+                assert!(err < 1e-5,
+                        "({rows},{cols}) block {ks}x{kd}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn cropped_true_len_rows_match_naive() {
+        // the serving path crops to true_len rows before compressing
+        // (PAD rows are never sent): odd / minimal true_len values
+        // over a padded bucket must round-trip like the naive path
+        let (bucket, cols) = (16usize, 32usize);
+        let a = rand_act(bucket, cols, 77);
+        let codec = FourierCodec::default();
+        for true_len in [1usize, 5, 11, 15] {
+            let crop = &a[..true_len * cols];
+            let ks = oddify(9, true_len);
+            let kd = 7usize;
+            let p = codec.compress_block(crop, true_len, cols, ks, kd).unwrap();
+            assert_eq!((p.body.len() - 4) / 4, ks * kd, "len {true_len}");
+            let got = codec.decompress(&p).unwrap();
+            assert_eq!(got.len(), true_len * cols);
+            let want = naive_roundtrip(crop, true_len, cols, ks, kd);
+            let err = recon_err(crop, &want, &got);
+            assert!(err < 1e-5, "true_len {true_len}: err {err}");
+        }
+    }
+
+    #[test]
+    fn pack_unpack_edge_blocks() {
+        // pack/unpack (the wire transform around the fused artifacts)
+        // on the same edge geometries: ks == 1, kd == cols, odd axes
+        for (rows, cols) in [(7usize, 9usize), (5, 32), (16, 7)] {
+            let a = rand_act(rows, cols, (rows + cols) as u64);
+            let spec = crate::dsp::fft2d::fft2_real(MatView::new(&a, rows, cols));
+            for (ks, kd) in [(1usize, 1usize), (1, oddify(5, cols)),
+                             (oddify(3, rows), cols), (rows, cols)] {
+                let ui = freq_indices(rows, ks);
+                let vi = freq_indices(cols, kd);
+                let mut re = vec![0.0f32; ks * kd];
+                let mut im = vec![0.0f32; ks * kd];
+                for (i, &u) in ui.iter().enumerate() {
+                    for (j, &v) in vi.iter().enumerate() {
+                        re[i * kd + j] = spec[u * cols + v].re as f32;
+                        im[i * kd + j] = spec[u * cols + v].im as f32;
+                    }
+                }
+                let packed = pack_block(&re, &im, rows, cols, ks, kd);
+                assert_eq!(packed.len(), ks * kd,
+                           "({rows},{cols}) {ks}x{kd}: packed count");
+                let (re2, im2) =
+                    unpack_block(&packed, rows, cols, ks, kd).unwrap();
+                for (x, y) in re.iter().zip(&re2) {
+                    assert!((x - y).abs() < 1e-5);
+                }
+                for (x, y) in im.iter().zip(&im2) {
+                    assert!((x - y).abs() < 1e-5);
+                }
+                // a truncated packing must be rejected, not mirrored
+                if packed.len() > 1 {
+                    assert!(unpack_block(&packed[..packed.len() - 1], rows,
+                                         cols, ks, kd).is_err());
+                }
+            }
+        }
+    }
+
     #[test]
     fn rejects_corrupt_payload() {
         let a = rand_act(16, 32, 8);

@@ -142,6 +142,67 @@ mod tests {
         assert!(d <= Duration::from_millis(100));
     }
 
+    #[test]
+    fn full_bucket_flush_precedes_deadline_flush() {
+        let mut b: Batcher<u32> = Batcher::new(2, Duration::from_millis(5));
+        b.push(16, 1); // will age past the deadline
+        std::thread::sleep(Duration::from_millis(10));
+        b.push(32, 2);
+        b.push(32, 3); // full right now
+        // both buckets are flushable; the full one must win
+        assert_eq!(b.ready_bucket(Instant::now()), Some(32),
+                   "full-bucket flush must take precedence");
+        assert_eq!(b.take(32).len(), 2);
+        // then the aged bucket drains via its deadline
+        assert_eq!(b.ready_bucket(Instant::now()), Some(16));
+        assert_eq!(b.take(16).len(), 1);
+        assert_eq!(b.ready_bucket(Instant::now()), None);
+    }
+
+    #[test]
+    fn max_batch_one_is_paper_faithful_no_batching() {
+        // the paper's unbatched ablation: every request flushes alone,
+        // immediately, in FIFO order — the deadline never matters
+        let mut b: Batcher<u32> = Batcher::new(1, Duration::from_secs(10));
+        for i in 0..5 {
+            b.push(64, i);
+        }
+        for want in 0..5u32 {
+            let bucket = b.ready_bucket(Instant::now())
+                .expect("max_batch=1 queues are always ready");
+            assert_eq!(bucket, 64);
+            let got = b.take(bucket);
+            assert_eq!(got.len(), 1, "no batching at max_batch=1");
+            assert_eq!(got[0].item, want);
+        }
+        assert_eq!(b.queued(), 0);
+        assert_eq!(b.ready_bucket(Instant::now()), None);
+    }
+
+    #[test]
+    fn aged_bucket_starves_behind_busy_bucket_until_it_drains() {
+        let mut b: Batcher<u32> = Batcher::new(2, Duration::from_millis(10));
+        b.push(16, 99);
+        std::thread::sleep(Duration::from_millis(30)); // 16 is now aged
+        // a busy bucket that keeps refilling to max_batch is serviced
+        // first every round — the aged bucket waits behind it (this is
+        // the documented full-first policy, pinned here)
+        for round in 0..3u32 {
+            b.push(32, round);
+            b.push(32, round + 100);
+            assert_eq!(b.ready_bucket(Instant::now()), Some(32),
+                       "round {round}: full bucket must still win");
+            assert_eq!(b.take(32).len(), 2);
+        }
+        // the moment no bucket is full, the aged one flushes — even
+        // though the busy bucket still holds a (younger) item
+        b.push(32, 7);
+        assert_eq!(b.ready_bucket(Instant::now()), Some(16),
+                   "aged bucket must flush once no bucket is full");
+        assert_eq!(b.take(16).len(), 1);
+        assert_eq!(b.queued(), 1); // the young 32-item is still queued
+    }
+
     // property-style sweep: conservation — everything pushed is taken
     // exactly once, never crossing buckets
     #[test]

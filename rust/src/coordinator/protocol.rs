@@ -12,7 +12,7 @@
 //!   Error      s→c  u16 msg_len | msg
 //!   Bye        c→s  (empty)
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 use std::io::{Read, Write};
 
 pub const MAX_FRAME: usize = 64 << 20;
@@ -111,6 +111,9 @@ impl Frame {
                 while r.remaining() >= 4 {
                     packed.push(r.f32()?);
                 }
+                ensure!(r.remaining() == 0,
+                        "activation body not f32-aligned ({} stray bytes)",
+                        r.remaining());
                 Frame::Activation { session, request, bucket, true_len, ks, kd,
                                     packed }
             }
@@ -193,6 +196,73 @@ mod tests {
         let mut bytes = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
         bytes.push(3);
         let mut cur = std::io::Cursor::new(bytes);
+        assert!(Frame::read_from(&mut cur).is_err());
+    }
+
+    /// Every variant, for the truncation sweeps below.
+    fn all_variants() -> Vec<Frame> {
+        vec![
+            Frame::Hello { session: 7, model: "llamette-m".into() },
+            Frame::Activation {
+                session: 1, request: 42, bucket: 32, true_len: 29, ks: 3,
+                kd: 3, packed: vec![1.0, -2.5, 0.0, 3.25, 0.5, -1.0, 2.0,
+                                    0.25, 9.0],
+            },
+            Frame::Token { request: 42, token: 101, logprob: -0.75 },
+            Frame::GetStats,
+            Frame::Stats { json: r#"{"n": 3}"#.into() },
+            Frame::Error { msg: "bad bucket".into() },
+            Frame::Bye,
+        ]
+    }
+
+    #[test]
+    fn every_truncated_stream_errors() {
+        // cutting the byte stream anywhere — inside the 5-byte header
+        // or inside the body — must yield an error, never a bogus frame
+        for f in all_variants() {
+            let enc = f.encode();
+            for cut in 0..enc.len() {
+                let mut cur = std::io::Cursor::new(enc[..cut].to_vec());
+                assert!(Frame::read_from(&mut cur).is_err(),
+                        "type {} truncated at {cut}/{} decoded", f.type_id(),
+                        enc.len());
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_body_is_decode_error() {
+        // bodies shorter than their fields declare
+        assert!(Frame::decode(0, &[1, 2]).is_err()); // hello: no session
+        // hello: model_len 5 but only 1 byte of model
+        assert!(Frame::decode(
+            0, &[0, 0, 0, 0, 0, 0, 0, 0, 5, 0, b'a']).is_err());
+        assert!(Frame::decode(1, &[0; 10]).is_err()); // activation header
+        assert!(Frame::decode(2, &[0; 10]).is_err()); // token: needs 16
+        assert!(Frame::decode(4, &[255, 0, 0, 0]).is_err()); // stats: len 255
+        assert!(Frame::decode(5, &[9, 0]).is_err()); // error: msg_len 9
+    }
+
+    #[test]
+    fn activation_rejects_partial_trailing_float() {
+        let f = Frame::Activation {
+            session: 1, request: 2, bucket: 16, true_len: 8, ks: 3, kd: 3,
+            packed: vec![1.0; 9],
+        };
+        let mut enc = f.encode();
+        // append 2 stray bytes to the body and patch the length prefix
+        enc.extend_from_slice(&[0xAA, 0xBB]);
+        let body_len = (enc.len() - 5) as u32;
+        enc[..4].copy_from_slice(&body_len.to_le_bytes());
+        let mut cur = std::io::Cursor::new(enc);
+        assert!(Frame::read_from(&mut cur).is_err(),
+                "stray non-f32 bytes must not be silently dropped");
+    }
+
+    #[test]
+    fn empty_stream_is_clean_eof_error() {
+        let mut cur = std::io::Cursor::new(Vec::<u8>::new());
         assert!(Frame::read_from(&mut cur).is_err());
     }
 

@@ -15,6 +15,9 @@
 //! * [`sim`] — discrete-event multi-client simulator (Fig 7).
 //! * [`eval`] — MCQ accuracy harness + activation analysis (Tables
 //!   II/III, Figs 2/4/5).
+//! * [`testkit`] — the synthetic artifact forge: deterministic
+//!   miniature models + goldens that make the whole stack run (and be
+//!   tested) through [`runtime::interp`] without XLA.
 //! * [`dsp`], [`linalg`], [`tensor`], [`util`], [`config`] — zero-dep
 //!   substrates (FFT, QR/SVD, `.fcw` IO, JSON, RNG, config system).
 
@@ -39,4 +42,5 @@ pub mod net;
 pub mod runtime;
 pub mod sim;
 pub mod tensor;
+pub mod testkit;
 pub mod util;

@@ -1,0 +1,775 @@
+//! Pure-Rust reference interpreter for the small fixed family of
+//! executables this repo lowers to HLO: `embed`, the Llama-style
+//! transformer `layer` (RMSNorm / RoPE / (grouped-query) causal
+//! attention / SwiGLU MLP), the LM `head`, the fused serving graphs
+//! (`client_fused` = embed + layer 0 + FC compress, `server_fused` =
+//! FC decompress + layers 1..L + head), and the standalone codec
+//! kernels (`fc_compress` / `fc_decompress`).
+//!
+//! This is the hermetic counterpart of python/compile/model.py and
+//! kernels/ref.py: the math mirrors those references exactly (weight
+//! order, RoPE pairing, softmax masking, centred frequency blocks), so
+//! an [`InterpExec`] is a drop-in replacement for a compiled PJRT
+//! executable.  `ArtifactStore::get` constructs one transparently
+//! whenever the manifest carries an `interp` spec for an artifact
+//! whose HLO file does not exist — which is how the
+//! `testkit`-forged artifact trees make the full split-inference
+//! stack run (and be tested) from a bare `cargo test`, no XLA
+//! toolchain required.
+//!
+//! Everything is shape-polymorphic: geometry that HLO bakes in (batch,
+//! seq) is read off the argument tensors, and only the knobs a shape
+//! cannot carry (head counts, RoPE theta, RMS eps, the FC block) come
+//! from the spec.  Performance is a non-goal — forged models are tiny
+//! (d_model ≈ 32) and the naive O(S²·D) attention is microseconds at
+//! that scale.
+
+use crate::codec::{centered_indices, valid_block_axis};
+use crate::dsp::complex::C64;
+use crate::dsp::fft2d;
+use crate::tensor::{MatView, Tensor};
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Result};
+
+// ---------------------------------------------------------------------------
+// specs
+// ---------------------------------------------------------------------------
+
+/// The per-layer geometry an HLO module closes over (everything else
+/// is derived from argument shapes at run time).
+#[derive(Debug, Clone)]
+pub struct LayerGeom {
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub rope_theta: f64,
+    pub rms_eps: f32,
+    pub qkv_bias: bool,
+}
+
+impl LayerGeom {
+    pub fn from_spec(spec: &Json) -> Result<LayerGeom> {
+        let n_heads = spec.usize_or("n_heads", 0);
+        ensure!(n_heads >= 1, "interp spec: n_heads missing");
+        let n_kv_heads = spec.usize_or("n_kv_heads", n_heads);
+        ensure!(n_kv_heads >= 1 && n_heads % n_kv_heads == 0,
+                "interp spec: n_heads {n_heads} not divisible by n_kv_heads \
+                 {n_kv_heads}");
+        Ok(LayerGeom {
+            n_heads,
+            n_kv_heads,
+            rope_theta: spec.f64_or("rope_theta", 10000.0),
+            rms_eps: spec.f64_or("rms_eps", 1e-5) as f32,
+            qkv_bias: spec.get("qkv_bias").and_then(|v| v.as_bool())
+                .unwrap_or(false),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+enum InterpOp {
+    Embed,
+    Layer(LayerGeom),
+    Head { rms_eps: f32 },
+    ClientFused { geom: LayerGeom, ks: usize, kd: usize },
+    ServerFused { geom: LayerGeom, seq: usize },
+    FcCompress { ks: usize, kd: usize },
+    FcDecompress { seq: usize, hidden: usize },
+}
+
+/// An interpreted executable: the hermetic stand-in for one compiled
+/// HLO artifact.
+#[derive(Debug, Clone)]
+pub struct InterpExec {
+    pub name: String,
+    op: InterpOp,
+}
+
+impl InterpExec {
+    /// Build from a manifest `interp` spec (`{"op": "...", ...}`).
+    pub fn from_spec(name: &str, spec: &Json) -> Result<InterpExec> {
+        let op = spec.str_or("op", "");
+        let op = match op.as_str() {
+            "embed" => InterpOp::Embed,
+            "layer" => InterpOp::Layer(LayerGeom::from_spec(spec)?),
+            "head" => InterpOp::Head {
+                rms_eps: spec.f64_or("rms_eps", 1e-5) as f32,
+            },
+            "client_fused" => {
+                let (ks, kd) = (spec.usize_or("ks", 0), spec.usize_or("kd", 0));
+                ensure!(ks >= 1 && kd >= 1,
+                        "interp spec {name}: client_fused needs ks/kd");
+                InterpOp::ClientFused { geom: LayerGeom::from_spec(spec)?, ks, kd }
+            }
+            "server_fused" => {
+                let seq = spec.usize_or("seq", 0);
+                ensure!(seq >= 1, "interp spec {name}: server_fused needs seq");
+                InterpOp::ServerFused { geom: LayerGeom::from_spec(spec)?, seq }
+            }
+            "fc_compress" => {
+                let (ks, kd) = (spec.usize_or("ks", 0), spec.usize_or("kd", 0));
+                ensure!(ks >= 1 && kd >= 1,
+                        "interp spec {name}: fc_compress needs ks/kd");
+                InterpOp::FcCompress { ks, kd }
+            }
+            "fc_decompress" => {
+                let (seq, hidden) =
+                    (spec.usize_or("seq", 0), spec.usize_or("hidden", 0));
+                ensure!(seq >= 1 && hidden >= 1,
+                        "interp spec {name}: fc_decompress needs seq/hidden");
+                InterpOp::FcDecompress { seq, hidden }
+            }
+            other => bail!("artifact {name}: unknown interp op '{other}'"),
+        };
+        Ok(InterpExec { name: name.to_string(), op })
+    }
+
+    /// Execute with host tensors — same contract as the compiled
+    /// backends (outputs in the artifact's tuple order).
+    pub fn run(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        match &self.op {
+            InterpOp::Embed => {
+                ensure!(args.len() == 2, "{}: embed wants 2 args", self.name);
+                Ok(vec![embed(&args[0], &args[1])?])
+            }
+            InterpOp::Layer(geom) => {
+                ensure!(args.len() >= 2, "{}: layer wants h + weights", self.name);
+                Ok(vec![layer_forward(geom, &args[0], &args[1..])?])
+            }
+            InterpOp::Head { rms_eps } => {
+                ensure!(args.len() == 3, "{}: head wants 3 args", self.name);
+                Ok(vec![head_forward(&args[0], &args[1], &args[2], *rms_eps)?])
+            }
+            InterpOp::ClientFused { geom, ks, kd } => {
+                ensure!(args.len() >= 3,
+                        "{}: client_fused wants tokens + tok_emb + weights",
+                        self.name);
+                let h = embed(&args[0], &args[1])?;
+                let h = layer_forward(geom, &h, &args[2..])?;
+                let (b, s, d) = (h.shape[0], h.shape[1], h.shape[2]);
+                ensure!(valid_block_axis(s, *ks) && valid_block_axis(d, *kd),
+                        "{}: bad block {ks}x{kd} for {s}x{d}", self.name);
+                let data = h.as_f32();
+                let mut re_all = Vec::with_capacity(b * ks * kd);
+                let mut im_all = Vec::with_capacity(b * ks * kd);
+                for e in 0..b {
+                    let a = &data[e * s * d..(e + 1) * s * d];
+                    let (re, im) = fc_compress_naive(a, s, d, *ks, *kd);
+                    re_all.extend_from_slice(&re);
+                    im_all.extend_from_slice(&im);
+                }
+                Ok(vec![
+                    Tensor::f32(vec![b, *ks, *kd], re_all),
+                    Tensor::f32(vec![b, *ks, *kd], im_all),
+                ])
+            }
+            InterpOp::ServerFused { geom, seq } => {
+                ensure!(args.len() >= 4,
+                        "{}: server_fused wants re/im + weights + head",
+                        self.name);
+                let (re, im) = (&args[0], &args[1]);
+                ensure!(re.shape.len() == 3 && re.shape == im.shape,
+                        "{}: re/im must be [B, ks, kd]", self.name);
+                let (b, ks, kd) = (re.shape[0], re.shape[1], re.shape[2]);
+                let final_norm = &args[args.len() - 2];
+                let lm_head = &args[args.len() - 1];
+                let d = final_norm.len();
+                ensure!(valid_block_axis(*seq, ks) && valid_block_axis(d, kd),
+                        "{}: bad block {ks}x{kd} for {seq}x{d}", self.name);
+                let mut hdata = Vec::with_capacity(b * seq * d);
+                for e in 0..b {
+                    let rs = &re.as_f32()[e * ks * kd..(e + 1) * ks * kd];
+                    let is = &im.as_f32()[e * ks * kd..(e + 1) * ks * kd];
+                    hdata.extend_from_slice(&fc_decompress_naive(
+                        rs, is, *seq, d, ks, kd));
+                }
+                let mut h = Tensor::f32(vec![b, *seq, d], hdata);
+                let stacked = &args[2..args.len() - 2];
+                let n_stack =
+                    stacked.first().map(|t| t.shape[0]).unwrap_or(0);
+                for t in stacked {
+                    ensure!(!t.shape.is_empty() && t.shape[0] == n_stack,
+                            "{}: ragged stacked weights", self.name);
+                }
+                for i in 0..n_stack {
+                    let ws: Vec<Tensor> = stacked
+                        .iter()
+                        .map(|t| slice_leading(t, i))
+                        .collect();
+                    h = layer_forward(geom, &h, &ws)?;
+                }
+                Ok(vec![head_forward(&h, final_norm, lm_head, geom.rms_eps)?])
+            }
+            InterpOp::FcCompress { ks, kd } => {
+                ensure!(args.len() == 1 && args[0].shape.len() == 2,
+                        "{}: fc_compress wants one [S, D] arg", self.name);
+                let (s, d) = (args[0].shape[0], args[0].shape[1]);
+                ensure!(valid_block_axis(s, *ks) && valid_block_axis(d, *kd),
+                        "{}: bad block {ks}x{kd} for {s}x{d}", self.name);
+                let (re, im) = fc_compress_naive(args[0].as_f32(), s, d, *ks, *kd);
+                Ok(vec![
+                    Tensor::f32(vec![*ks, *kd], re),
+                    Tensor::f32(vec![*ks, *kd], im),
+                ])
+            }
+            InterpOp::FcDecompress { seq, hidden } => {
+                ensure!(args.len() == 2 && args[0].shape.len() == 2
+                        && args[0].shape == args[1].shape,
+                        "{}: fc_decompress wants re/im [ks, kd]", self.name);
+                let (ks, kd) = (args[0].shape[0], args[0].shape[1]);
+                ensure!(valid_block_axis(*seq, ks) && valid_block_axis(*hidden, kd),
+                        "{}: bad block {ks}x{kd} for {seq}x{hidden}", self.name);
+                let a = fc_decompress_naive(args[0].as_f32(), args[1].as_f32(),
+                                            *seq, *hidden, ks, kd);
+                Ok(vec![Tensor::f32(vec![*seq, *hidden], a)])
+            }
+        }
+    }
+}
+
+/// Extract sub-tensor `i` along a stacked tensor's leading axis.
+fn slice_leading(t: &Tensor, i: usize) -> Tensor {
+    let tail: Vec<usize> = t.shape[1..].to_vec();
+    let n: usize = tail.iter().product();
+    Tensor::f32(tail, t.as_f32()[i * n..(i + 1) * n].to_vec())
+}
+
+// ---------------------------------------------------------------------------
+// transformer building blocks (mirrors python/compile/model.py)
+// ---------------------------------------------------------------------------
+
+/// `tokens [B, S] i32` + `tok_emb [V, D]` → `h [B, S, D]`.
+pub fn embed(tokens: &Tensor, tok_emb: &Tensor) -> Result<Tensor> {
+    ensure!(tokens.shape.len() == 2, "embed: tokens must be [B, S]");
+    ensure!(tok_emb.shape.len() == 2, "embed: tok_emb must be [V, D]");
+    let (b, s) = (tokens.shape[0], tokens.shape[1]);
+    let (v, d) = (tok_emb.shape[0], tok_emb.shape[1]);
+    let emb = tok_emb.as_f32();
+    let mut out = Vec::with_capacity(b * s * d);
+    for &t in tokens.as_i32() {
+        ensure!(t >= 0 && (t as usize) < v, "embed: token {t} out of vocab {v}");
+        let t = t as usize;
+        out.extend_from_slice(&emb[t * d..(t + 1) * d]);
+    }
+    Ok(Tensor::f32(vec![b, s, d], out))
+}
+
+/// One transformer block over `h [B, S, D]`; weights in the canonical
+/// manifest order (`ln1, wq, wk, wv, [bq, bk, bv,] wo, ln2, w_gate,
+/// w_up, w_down`).
+pub fn layer_forward(geom: &LayerGeom, h: &Tensor, weights: &[Tensor])
+    -> Result<Tensor> {
+    ensure!(h.shape.len() == 3, "layer: h must be [B, S, D]");
+    let (b, s, d) = (h.shape[0], h.shape[1], h.shape[2]);
+    ensure!(d % geom.n_heads == 0, "layer: d {d} % n_heads {}", geom.n_heads);
+    let hd = d / geom.n_heads;
+    ensure!(hd % 2 == 0, "layer: head_dim {hd} must be even for RoPE");
+    let kv_dim = geom.n_kv_heads * hd;
+    let lw = LayerWeights::parse(weights, geom.qkv_bias, d, kv_dim)?;
+    let f = lw.d_ff;
+    let (cos, sin) = rope_tables(s, hd, geom.rope_theta);
+    let eps = geom.rms_eps;
+
+    let mut out = h.as_f32().to_vec();
+    let mut x = vec![0.0f32; s * d];
+    for e in 0..b {
+        let base = e * s * d;
+        // attention sub-block
+        for t in 0..s {
+            rmsnorm_row(&out[base + t * d..base + (t + 1) * d], lw.ln1, eps,
+                        &mut x[t * d..(t + 1) * d]);
+        }
+        let mut q = matmul(&x, s, d, lw.wq, d);
+        let mut k = matmul(&x, s, d, lw.wk, kv_dim);
+        let mut v = matmul(&x, s, d, lw.wv, kv_dim);
+        if let (Some(bq), Some(bk), Some(bv)) = (lw.bq, lw.bk, lw.bv) {
+            add_row_bias(&mut q, s, d, bq);
+            add_row_bias(&mut k, s, kv_dim, bk);
+            add_row_bias(&mut v, s, kv_dim, bv);
+        }
+        apply_rope(&mut q, s, geom.n_heads, hd, &cos, &sin);
+        apply_rope(&mut k, s, geom.n_kv_heads, hd, &cos, &sin);
+
+        let rep = geom.n_heads / geom.n_kv_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut attn = vec![0.0f32; s * d];
+        let mut probs = vec![0.0f32; s];
+        for head in 0..geom.n_heads {
+            let kvh = head / rep;
+            for t in 0..s {
+                let qrow = &q[t * d + head * hd..t * d + head * hd + hd];
+                // causal logits over keys 0..=t, max-subtracted softmax
+                let mut m = f32::MIN;
+                for (j, p) in probs.iter_mut().enumerate().take(t + 1) {
+                    let krow = &k[j * kv_dim + kvh * hd
+                                  ..j * kv_dim + kvh * hd + hd];
+                    let mut dot = 0.0f32;
+                    for (a, bq_) in qrow.iter().zip(krow) {
+                        dot += a * bq_;
+                    }
+                    let logit = dot * scale;
+                    *p = logit;
+                    m = m.max(logit);
+                }
+                let mut z = 0.0f32;
+                for p in probs.iter_mut().take(t + 1) {
+                    *p = (*p - m).exp();
+                    z += *p;
+                }
+                let arow = &mut attn[t * d + head * hd..t * d + head * hd + hd];
+                for (j, p) in probs.iter().enumerate().take(t + 1) {
+                    let w = p / z;
+                    let vrow = &v[j * kv_dim + kvh * hd
+                                  ..j * kv_dim + kvh * hd + hd];
+                    for (acc, vv) in arow.iter_mut().zip(vrow) {
+                        *acc += w * vv;
+                    }
+                }
+            }
+        }
+        let proj = matmul(&attn, s, d, lw.wo, d);
+        for (o, p) in out[base..base + s * d].iter_mut().zip(&proj) {
+            *o += p;
+        }
+
+        // MLP sub-block
+        for t in 0..s {
+            rmsnorm_row(&out[base + t * d..base + (t + 1) * d], lw.ln2, eps,
+                        &mut x[t * d..(t + 1) * d]);
+        }
+        let gate = matmul(&x, s, d, lw.w_gate, f);
+        let up = matmul(&x, s, d, lw.w_up, f);
+        let mut act = vec![0.0f32; s * f];
+        for (a, (g, u)) in act.iter_mut().zip(gate.iter().zip(&up)) {
+            *a = silu(*g) * u;
+        }
+        let down = matmul(&act, s, f, lw.w_down, d);
+        for (o, p) in out[base..base + s * d].iter_mut().zip(&down) {
+            *o += p;
+        }
+    }
+    Ok(Tensor::f32(vec![b, s, d], out))
+}
+
+/// `h [B, S, D]` + `final_norm [D]` + `lm_head [D, V]` → logits
+/// `[B, S, V]`.
+pub fn head_forward(h: &Tensor, final_norm: &Tensor, lm_head: &Tensor,
+                    rms_eps: f32) -> Result<Tensor> {
+    ensure!(h.shape.len() == 3, "head: h must be [B, S, D]");
+    let (b, s, d) = (h.shape[0], h.shape[1], h.shape[2]);
+    ensure!(final_norm.len() == d, "head: final_norm len != D");
+    ensure!(lm_head.shape.len() == 2 && lm_head.shape[0] == d,
+            "head: lm_head must be [D, V]");
+    let v = lm_head.shape[1];
+    let rows = b * s;
+    let mut x = vec![0.0f32; rows * d];
+    let data = h.as_f32();
+    for t in 0..rows {
+        rmsnorm_row(&data[t * d..(t + 1) * d], final_norm.as_f32(), rms_eps,
+                    &mut x[t * d..(t + 1) * d]);
+    }
+    let logits = matmul(&x, rows, d, lm_head.as_f32(), v);
+    Ok(Tensor::f32(vec![b, s, v], logits))
+}
+
+struct LayerWeights<'a> {
+    ln1: &'a [f32],
+    wq: &'a [f32],
+    wk: &'a [f32],
+    wv: &'a [f32],
+    bq: Option<&'a [f32]>,
+    bk: Option<&'a [f32]>,
+    bv: Option<&'a [f32]>,
+    wo: &'a [f32],
+    ln2: &'a [f32],
+    w_gate: &'a [f32],
+    w_up: &'a [f32],
+    w_down: &'a [f32],
+    d_ff: usize,
+}
+
+impl<'a> LayerWeights<'a> {
+    fn parse(args: &'a [Tensor], qkv_bias: bool, d: usize, kv_dim: usize)
+        -> Result<LayerWeights<'a>> {
+        let need = if qkv_bias { 12 } else { 9 };
+        ensure!(args.len() == need,
+                "layer: got {} weights, canonical order needs {need}",
+                args.len());
+        let shape_ok = |t: &Tensor, want: &[usize]| t.shape == want;
+        let off = if qkv_bias { 3 } else { 0 };
+        let (ln1, wq, wk, wv) = (&args[0], &args[1], &args[2], &args[3]);
+        let (wo, ln2) = (&args[4 + off], &args[5 + off]);
+        let (w_gate, w_up, w_down) =
+            (&args[6 + off], &args[7 + off], &args[8 + off]);
+        ensure!(shape_ok(ln1, &[d]) && shape_ok(wq, &[d, d])
+                && shape_ok(wk, &[d, kv_dim]) && shape_ok(wv, &[d, kv_dim])
+                && shape_ok(wo, &[d, d]) && shape_ok(ln2, &[d]),
+                "layer: attention weight shapes inconsistent with d={d}, \
+                 kv={kv_dim}");
+        ensure!(w_gate.shape.len() == 2 && w_gate.shape[0] == d
+                && w_up.shape == w_gate.shape,
+                "layer: w_gate/w_up must be [D, F]");
+        let d_ff = w_gate.shape[1];
+        ensure!(shape_ok(w_down, &[d_ff, d]), "layer: w_down must be [F, D]");
+        let (bq, bk, bv) = if qkv_bias {
+            ensure!(shape_ok(&args[4], &[d]) && shape_ok(&args[5], &[kv_dim])
+                    && shape_ok(&args[6], &[kv_dim]),
+                    "layer: qkv bias shapes inconsistent");
+            (Some(args[4].as_f32()), Some(args[5].as_f32()),
+             Some(args[6].as_f32()))
+        } else {
+            (None, None, None)
+        };
+        Ok(LayerWeights {
+            ln1: ln1.as_f32(),
+            wq: wq.as_f32(),
+            wk: wk.as_f32(),
+            wv: wv.as_f32(),
+            bq, bk, bv,
+            wo: wo.as_f32(),
+            ln2: ln2.as_f32(),
+            w_gate: w_gate.as_f32(),
+            w_up: w_up.as_f32(),
+            w_down: w_down.as_f32(),
+            d_ff,
+        })
+    }
+}
+
+/// RMSNorm of one row: `(x / sqrt(mean(x²) + eps)) * w`.
+pub fn rmsnorm_row(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    let mut ms = 0.0f64;
+    for &v in x {
+        ms += (v as f64) * (v as f64);
+    }
+    let inv = 1.0 / ((ms / x.len().max(1) as f64) as f32 + eps).sqrt();
+    for ((o, &v), &g) in out.iter_mut().zip(x).zip(w) {
+        *o = v * inv * g;
+    }
+}
+
+/// Naive row-major `[m, k] × [k, n]` matmul (f32 accumulate — forged
+/// models are tiny, parity is with jnp's f32 math anyway).
+fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+fn add_row_bias(x: &mut [f32], rows: usize, cols: usize, bias: &[f32]) {
+    for r in 0..rows {
+        for (v, &b) in x[r * cols..(r + 1) * cols].iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+fn silu(z: f32) -> f32 {
+    z / (1.0 + (-z).exp())
+}
+
+/// cos/sin tables `[S, hd/2]` — same pairing as python `rope_tables`.
+fn rope_tables(s: usize, hd: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
+    let half = hd / 2;
+    let mut cos = Vec::with_capacity(s * half);
+    let mut sin = Vec::with_capacity(s * half);
+    for t in 0..s {
+        for j in 0..half {
+            let inv = 1.0 / theta.powf((2 * j) as f64 / hd as f64);
+            let ang = t as f64 * inv;
+            cos.push(ang.cos() as f32);
+            sin.push(ang.sin() as f32);
+        }
+    }
+    (cos, sin)
+}
+
+/// Rotate (x[2j], x[2j+1]) pairs per head — python `apply_rope`.
+fn apply_rope(x: &mut [f32], s: usize, n_heads: usize, hd: usize,
+              cos: &[f32], sin: &[f32]) {
+    let half = hd / 2;
+    let stride = n_heads * hd;
+    for t in 0..s {
+        for head in 0..n_heads {
+            for j in 0..half {
+                let i0 = t * stride + head * hd + 2 * j;
+                let (x1, x2) = (x[i0], x[i0 + 1]);
+                let (c, sn) = (cos[t * half + j], sin[t * half + j]);
+                x[i0] = x1 * c - x2 * sn;
+                x[i0 + 1] = x1 * sn + x2 * c;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FourierCompress naive reference (mirrors kernels/ref.py)
+// ---------------------------------------------------------------------------
+
+/// `A [S, D]` → full `(re, im) [ks, kd]` centred block via a full 2-D
+/// FFT — the naive reference the optimised codec in `codec::fourier`
+/// is checked against.
+pub fn fc_compress_naive(a: &[f32], s: usize, d: usize, ks: usize, kd: usize)
+    -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(a.len(), s * d, "fc_compress_naive: shape mismatch");
+    let spec = fft2d::fft2_real(MatView::new(a, s, d));
+    let ui = centered_indices(s, ks);
+    let vi = centered_indices(d, kd);
+    let mut re = Vec::with_capacity(ks * kd);
+    let mut im = Vec::with_capacity(ks * kd);
+    for &u in &ui {
+        for &v in &vi {
+            let c = spec[u * d + v];
+            re.push(c.re as f32);
+            im.push(c.im as f32);
+        }
+    }
+    (re, im)
+}
+
+/// `(re, im) [ks, kd]` → `A' [S, D]`: scatter the centred block into a
+/// zero spectrum, inverse FFT, take the real part.
+pub fn fc_decompress_naive(re: &[f32], im: &[f32], s: usize, d: usize,
+                           ks: usize, kd: usize) -> Vec<f32> {
+    assert_eq!(re.len(), ks * kd, "fc_decompress_naive: re shape mismatch");
+    assert_eq!(im.len(), ks * kd, "fc_decompress_naive: im shape mismatch");
+    let ui = centered_indices(s, ks);
+    let vi = centered_indices(d, kd);
+    let mut spec = vec![C64::ZERO; s * d];
+    for (i, &u) in ui.iter().enumerate() {
+        for (j, &v) in vi.iter().enumerate() {
+            spec[u * d + v] = C64::new(re[i * kd + j] as f64,
+                                       im[i * kd + j] as f64);
+        }
+    }
+    fft2d::ifft2(&mut spec, s, d);
+    spec.iter().map(|c| c.re as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::rel_error;
+    use crate::util::rng::Rng;
+
+    fn geom() -> LayerGeom {
+        LayerGeom { n_heads: 2, n_kv_heads: 2, rope_theta: 10000.0,
+                    rms_eps: 1e-5, qkv_bias: false }
+    }
+
+    fn rand_tensor(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal_f32(&mut v, scale);
+        Tensor::f32(shape, v)
+    }
+
+    fn layer_weights(rng: &mut Rng, d: usize, kv: usize, f: usize,
+                     bias: bool) -> Vec<Tensor> {
+        let s = 1.0 / (d as f32).sqrt();
+        let mut w = vec![
+            Tensor::f32(vec![d], vec![1.0; d]),
+            rand_tensor(rng, vec![d, d], s),
+            rand_tensor(rng, vec![d, kv], s),
+            rand_tensor(rng, vec![d, kv], s),
+        ];
+        if bias {
+            w.push(rand_tensor(rng, vec![d], 0.05));
+            w.push(rand_tensor(rng, vec![kv], 0.05));
+            w.push(rand_tensor(rng, vec![kv], 0.05));
+        }
+        w.push(rand_tensor(rng, vec![d, d], s));
+        w.push(Tensor::f32(vec![d], vec![1.0; d]));
+        w.push(rand_tensor(rng, vec![d, f], s));
+        w.push(rand_tensor(rng, vec![d, f], s));
+        w.push(rand_tensor(rng, vec![f, d], s));
+        w
+    }
+
+    #[test]
+    fn embed_gathers_rows() {
+        let emb = Tensor::f32(vec![4, 2],
+                              vec![0., 1., 10., 11., 20., 21., 30., 31.]);
+        let toks = Tensor::i32(vec![1, 3], vec![2, 0, 3]);
+        let h = embed(&toks, &emb).unwrap();
+        assert_eq!(h.shape, vec![1, 3, 2]);
+        assert_eq!(h.as_f32(), &[20., 21., 0., 1., 30., 31.]);
+        // out-of-vocab is an error, not UB
+        assert!(embed(&Tensor::i32(vec![1, 1], vec![9]), &emb).is_err());
+    }
+
+    #[test]
+    fn layer_preserves_shape_and_is_causal() {
+        let (d, kv, f, s) = (8usize, 8usize, 16usize, 6usize);
+        let mut rng = Rng::new(1);
+        let w = layer_weights(&mut rng, d, kv, f, false);
+        let h = rand_tensor(&mut rng, vec![1, s, d], 1.0);
+        let out = layer_forward(&geom(), &h, &w).unwrap();
+        assert_eq!(out.shape, vec![1, s, d]);
+        // causality: perturbing a late token must not change early rows
+        let mut h2 = h.clone();
+        h2.as_f32_mut()[(s - 1) * d] += 3.0;
+        let out2 = layer_forward(&geom(), &h2, &w).unwrap();
+        for t in 0..s - 1 {
+            for c in 0..d {
+                assert_eq!(out.as_f32()[t * d + c], out2.as_f32()[t * d + c],
+                           "row {t} changed by a future token");
+            }
+        }
+    }
+
+    #[test]
+    fn gqa_and_bias_paths_run() {
+        let (d, f, s) = (8usize, 16usize, 5usize);
+        let g = LayerGeom { n_heads: 4, n_kv_heads: 2, rope_theta: 10000.0,
+                            rms_eps: 1e-5, qkv_bias: true };
+        let kv = g.n_kv_heads * (d / g.n_heads);
+        let mut rng = Rng::new(2);
+        let w = layer_weights(&mut rng, d, kv, f, true);
+        let h = rand_tensor(&mut rng, vec![2, s, d], 1.0);
+        let out = layer_forward(&g, &h, &w).unwrap();
+        assert_eq!(out.shape, vec![2, s, d]);
+        assert!(out.as_f32().iter().all(|v| v.is_finite()));
+        // wrong weight count is rejected
+        assert!(layer_forward(&geom(), &h, &w[..8]).is_err());
+    }
+
+    #[test]
+    fn batch_elements_are_independent() {
+        let (d, f, s) = (8usize, 16usize, 4usize);
+        let mut rng = Rng::new(3);
+        let w = layer_weights(&mut rng, d, d, f, false);
+        let a = rand_tensor(&mut rng, vec![1, s, d], 1.0);
+        let b = rand_tensor(&mut rng, vec![1, s, d], 1.0);
+        let mut both = a.as_f32().to_vec();
+        both.extend_from_slice(b.as_f32());
+        let batched =
+            layer_forward(&geom(), &Tensor::f32(vec![2, s, d], both), &w)
+                .unwrap();
+        let oa = layer_forward(&geom(), &a, &w).unwrap();
+        let ob = layer_forward(&geom(), &b, &w).unwrap();
+        assert_eq!(&batched.as_f32()[..s * d], oa.as_f32());
+        assert_eq!(&batched.as_f32()[s * d..], ob.as_f32());
+    }
+
+    #[test]
+    fn head_shapes_and_norm() {
+        let (d, v) = (4usize, 10usize);
+        let mut rng = Rng::new(4);
+        let h = rand_tensor(&mut rng, vec![1, 2, d], 1.0);
+        let fnorm = Tensor::f32(vec![d], vec![1.0; d]);
+        let lm = rand_tensor(&mut rng, vec![d, v], 0.5);
+        let logits = head_forward(&h, &fnorm, &lm, 1e-5).unwrap();
+        assert_eq!(logits.shape, vec![1, 2, v]);
+    }
+
+    #[test]
+    fn fc_naive_roundtrip_exact_for_bandlimited() {
+        // signal synthesised inside the kept band → exact recovery
+        let (s, d, ks, kd) = (8usize, 16usize, 5usize, 7usize);
+        let mut rng = Rng::new(5);
+        let mut a = vec![0.0f32; s * d];
+        // band-limited along the hidden axis only (bins < (kd+1)/2)
+        for bin in 0..(kd + 1) / 2 {
+            let amp = rng.normal() as f32;
+            for r in 0..s {
+                for c in 0..d {
+                    let ang = 2.0 * std::f32::consts::PI * bin as f32 * c as f32
+                        / d as f32;
+                    a[r * d + c] += amp * ang.cos();
+                }
+            }
+        }
+        let (re, im) = fc_compress_naive(&a, s, d, s, kd);
+        let back = fc_decompress_naive(&re, &im, s, d, s, kd);
+        assert!(rel_error(&a, &back) < 1e-5);
+        // and a strict (ks < s) block stays finite + deterministic
+        let (re2, im2) = fc_compress_naive(&a, s, d, ks, kd);
+        let (re3, im3) = fc_compress_naive(&a, s, d, ks, kd);
+        assert_eq!(re2, re3);
+        assert_eq!(im2, im3);
+    }
+
+    #[test]
+    fn fused_graphs_match_composable_pipeline() {
+        // client_fused + server_fused == embed → layer → naive codec
+        // round-trip → layer → head, the defining identity of the
+        // serving artifacts.
+        let (d, f, s, v) = (8usize, 16usize, 8usize, 12usize);
+        let (ks, kd) = (5usize, 5usize);
+        let mut rng = Rng::new(6);
+        let w0 = layer_weights(&mut rng, d, d, f, false);
+        let w1 = layer_weights(&mut rng, d, d, f, false);
+        let emb = rand_tensor(&mut rng, vec![v, d], 0.1);
+        let fnorm = Tensor::f32(vec![d], vec![1.0; d]);
+        let lm = rand_tensor(&mut rng, vec![d, v], 0.5);
+        let toks = Tensor::i32(vec![1, s], (0..s as i32).collect());
+
+        // composable path
+        let h = embed(&toks, &emb).unwrap();
+        let h = layer_forward(&geom(), &h, &w0).unwrap();
+        let (re, im) = fc_compress_naive(&h.as_f32()[..s * d], s, d, ks, kd);
+        let hprime = Tensor::f32(vec![1, s, d],
+                                 fc_decompress_naive(&re, &im, s, d, ks, kd));
+        let hprime = layer_forward(&geom(), &hprime, &w1).unwrap();
+        let want = head_forward(&hprime, &fnorm, &lm, 1e-5).unwrap();
+
+        // fused path through InterpExec
+        let mut spec = Json::obj();
+        spec.set("op", Json::Str("client_fused".into()));
+        spec.set("n_heads", Json::Num(2.0));
+        spec.set("ks", Json::Num(ks as f64));
+        spec.set("kd", Json::Num(kd as f64));
+        let client = InterpExec::from_spec("client", &spec).unwrap();
+        let mut cargs = vec![toks.clone(), emb.clone()];
+        cargs.extend(w0.iter().cloned());
+        let cout = client.run(&cargs).unwrap();
+        assert_eq!(cout[0].shape, vec![1, ks, kd]);
+        assert_eq!(cout[0].as_f32(), &re[..]);
+        assert_eq!(cout[1].as_f32(), &im[..]);
+
+        let mut sspec = Json::obj();
+        sspec.set("op", Json::Str("server_fused".into()));
+        sspec.set("n_heads", Json::Num(2.0));
+        sspec.set("seq", Json::Num(s as f64));
+        let server = InterpExec::from_spec("server", &sspec).unwrap();
+        // stack the single server layer along a new leading axis
+        let mut sargs = vec![cout[0].clone(), cout[1].clone()];
+        for t in &w1 {
+            let mut shape = vec![1usize];
+            shape.extend_from_slice(&t.shape);
+            sargs.push(Tensor::f32(shape, t.as_f32().to_vec()));
+        }
+        sargs.push(fnorm.clone());
+        sargs.push(lm.clone());
+        let sout = server.run(&sargs).unwrap();
+        assert_eq!(sout[0].shape, vec![1, s, v]);
+        assert_eq!(sout[0].as_f32(), want.as_f32());
+    }
+
+    #[test]
+    fn spec_parsing_rejects_garbage() {
+        let mut bad = Json::obj();
+        bad.set("op", Json::Str("warp_drive".into()));
+        assert!(InterpExec::from_spec("x", &bad).is_err());
+        let mut no_heads = Json::obj();
+        no_heads.set("op", Json::Str("layer".into()));
+        assert!(InterpExec::from_spec("x", &no_heads).is_err());
+        let mut ok = Json::obj();
+        ok.set("op", Json::Str("embed".into()));
+        assert!(InterpExec::from_spec("x", &ok).is_ok());
+    }
+}

@@ -1,6 +1,7 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts the python build
-//! step produced, compiles them once on the CPU PJRT client, and
-//! executes them from the request path.
+//! Runtime: loads the AOT HLO-text artifacts the python build step
+//! produced (compiled once on the CPU PJRT client and executed from
+//! the request path), or — hermetically — interprets them with the
+//! pure-Rust reference interpreter.
 //!
 //! Two backends share one surface (`Runtime` / `Executable`):
 //!
@@ -8,12 +9,16 @@
 //!   HLO *text* (python lowered with return_tuple=True, so every
 //!   output is a tuple) — see /opt/xla-example/README.md for why
 //!   serialized protos are rejected by xla_extension 0.5.1.
-//! * `stub` (default) — a hermetic no-accelerator build: construction
-//!   succeeds so config/store plumbing is testable, but loading or
-//!   executing an artifact returns a descriptive error.  Everything
-//!   that doesn't need artifacts (codecs, engine, sim, protocol)
-//!   builds and tests without the XLA toolchain.
+//! * `stub` (default) — a hermetic no-accelerator build.  Compiled
+//!   artifacts are unavailable, but the backend can build
+//!   **interpreted** executables from manifest `interp` specs (see
+//!   [`interp`]), which `ArtifactStore::get` selects transparently
+//!   whenever an artifact's HLO file does not exist.  With a
+//!   `testkit`-forged tree this makes the entire split-inference
+//!   stack — embed/layer/head, the fused client/server graphs, the
+//!   TCP coordinator — executable from a bare `cargo test`.
 
+pub mod interp;
 pub mod store;
 
 // The `xla` feature only declares intent: the xla_extension bindings

@@ -37,6 +37,15 @@ impl Runtime {
             name: path.file_name().unwrap_or_default().to_string_lossy().into(),
         })
     }
+
+    /// Interpreted artifacts (manifest `interp` specs) are a host-side
+    /// testing facility; the compiled backend refuses them so a forged
+    /// tree can never silently shadow a real deployment.
+    pub fn load_interp(&self, name: &str,
+                       _spec: &crate::util::json::Json) -> Result<Executable> {
+        bail!("artifact {name}: interp specs are not supported on the pjrt \
+               backend (compile the HLO artifact instead)")
+    }
 }
 
 fn wrap(e: xla::Error) -> anyhow::Error {
@@ -59,6 +68,12 @@ unsafe impl Send for Runtime {}
 unsafe impl Sync for Runtime {}
 
 impl Executable {
+    /// Compiled artifacts are never interpreter-backed (parity with
+    /// the stub backend's surface, which tests probe).
+    pub fn is_interpreted(&self) -> bool {
+        false
+    }
+
     /// Execute with host tensors; returns the flattened output tuple.
     pub fn run(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
         let literals: Vec<xla::Literal> =

@@ -2,6 +2,12 @@
 //! `artifacts/` directory + manifest.  One store per process; all
 //! executables are shared via Arc (compilation happens once per
 //! artifact regardless of how many threads request it).
+//!
+//! Backend selection per artifact: a compiled HLO file under
+//! `artifacts/hlo/` always wins; when the file does not exist and the
+//! manifest carries an `interp` spec for the name (forged trees —
+//! `testkit`), the runtime builds a reference-interpreter executable
+//! instead, so callers never know which backend served them.
 
 use super::{Executable, Runtime};
 use crate::util::json::{self, Json};
@@ -34,18 +40,36 @@ impl ArtifactStore {
     }
 
     /// Get (compiling if needed) the artifact with the given hlo file
-    /// name (relative to `artifacts/hlo/`).
+    /// name (relative to `artifacts/hlo/`).  Falls back to the
+    /// reference interpreter when the HLO file is absent but the
+    /// manifest carries an `interp` spec for the name.
     pub fn get(&self, hlo_name: &str) -> Result<Arc<Executable>> {
         if let Some(e) = self.cache.lock().unwrap().get(hlo_name) {
             return Ok(e.clone());
         }
         let path = self.root.join("hlo").join(hlo_name);
-        let exe = Arc::new(self.runtime.load_hlo_text(&path)?);
+        let exe = if !path.exists() {
+            if let Some(spec) = self.interp_spec(hlo_name) {
+                Arc::new(self.runtime.load_interp(hlo_name, spec)?)
+            } else {
+                // keep the compiled backend's "cannot load" diagnostic
+                Arc::new(self.runtime.load_hlo_text(&path)?)
+            }
+        } else {
+            Arc::new(self.runtime.load_hlo_text(&path)?)
+        };
         self.cache
             .lock()
             .unwrap()
             .insert(hlo_name.to_string(), exe.clone());
         Ok(exe)
+    }
+
+    /// The manifest's `interp` spec for an artifact name, if any
+    /// (artifact names contain dots, so this is a flat key lookup, not
+    /// a `Json::path`).
+    pub fn interp_spec(&self, hlo_name: &str) -> Option<&Json> {
+        self.manifest.get("interp").and_then(|m| m.get(hlo_name))
     }
 
     pub fn cached_count(&self) -> usize {

@@ -1,12 +1,18 @@
 //! Hermetic no-accelerator backend (default build): the container that
-//! runs tier-1 tests has no XLA toolchain, so `Runtime::cpu()`
-//! succeeds (letting `ArtifactStore` and config plumbing construct)
-//! but any attempt to load or execute an artifact fails with an
-//! actionable message.  Tests that need artifacts already skip when
-//! `artifacts/manifest.json` is absent, so this backend never fires in
-//! the tier-1 path.
+//! runs tier-1 tests has no XLA toolchain, so `Runtime::cpu()` always
+//! succeeds and executables come in two flavours:
+//!
+//! * **interpreted** — built by [`Runtime::load_interp`] from a
+//!   manifest `interp` spec (see [`super::interp`]); `run` executes
+//!   the pure-Rust reference interpreter.  This is how forged artifact
+//!   trees (`testkit`) make the full split-inference stack executable
+//!   from a bare `cargo test`.
+//! * **unavailable** — anything that would need a compiled HLO
+//!   artifact; loading or executing fails with an actionable message.
 
+use super::interp::InterpExec;
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use anyhow::{bail, Result};
 use std::path::Path;
 
@@ -24,22 +30,41 @@ impl Runtime {
     }
 
     pub fn platform(&self) -> String {
-        "stub (no xla feature)".to_string()
+        "stub (no xla feature; interp-capable)".to_string()
     }
 
     pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
         bail!("{UNAVAILABLE}: cannot load {}", path.as_ref().display())
     }
+
+    /// Build an interpreted executable from a manifest `interp` spec.
+    pub fn load_interp(&self, name: &str, spec: &Json) -> Result<Executable> {
+        Ok(Executable {
+            name: name.to_string(),
+            interp: Some(InterpExec::from_spec(name, spec)?),
+        })
+    }
 }
 
-/// A compiled artifact (stub: cannot be constructed through the public
-/// API because `load_hlo_text` always errors first).
+/// A runnable artifact: either an interpreted executable (forged
+/// trees) or a placeholder that reports the missing XLA toolchain.
+#[derive(Debug)]
 pub struct Executable {
     pub name: String,
+    interp: Option<InterpExec>,
 }
 
 impl Executable {
-    pub fn run(&self, _args: &[Tensor]) -> Result<Vec<Tensor>> {
-        bail!("{UNAVAILABLE}: cannot execute {}", self.name)
+    pub fn run(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        match &self.interp {
+            Some(ix) => ix.run(args),
+            None => bail!("{UNAVAILABLE}: cannot execute {}", self.name),
+        }
+    }
+
+    /// Whether this executable is backed by the reference interpreter
+    /// (vs a compiled artifact — always true for runnable stubs).
+    pub fn is_interpreted(&self) -> bool {
+        self.interp.is_some()
     }
 }

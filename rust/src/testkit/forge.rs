@@ -1,0 +1,637 @@
+//! The synthetic artifact forge: miniature models + manifest + goldens
+//! from a seed (see the module docs in [`super`]).
+
+use crate::codec::{block_ratio, fc_block};
+use crate::dsp::complex::C64;
+use crate::dsp::fft2d;
+use crate::linalg::matrix::Mat;
+use crate::linalg::svd::svd_thin;
+use crate::model::tokenizer;
+use crate::runtime::interp::{self, LayerGeom};
+use crate::runtime::ArtifactStore;
+use crate::tensor::{io, Tensor};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Geometry + seed of one forged model.  Mirrors the fields of
+/// python/compile/configs.py `ModelConfig` at miniature scale.
+#[derive(Debug, Clone)]
+pub struct ForgeSpec {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub rms_eps: f64,
+    pub qkv_bias: bool,
+    /// hidden-axis rfft band of the layer-1 residual contributions
+    /// (the forge band-limits `tok_emb`, `layers.0.wo`,
+    /// `layers.0.w_down` to it, like python `project_l1`)
+    pub l1_freq_bins: usize,
+    pub eval_batch: usize,
+    pub eval_seq: usize,
+    /// serving sequence buckets (ascending)
+    pub seq_buckets: Vec<usize>,
+    /// server batch sizes lowered per bucket
+    pub server_batches: Vec<usize>,
+    /// serving target compression ratio
+    pub ratio: f64,
+    pub seed: u64,
+}
+
+impl ForgeSpec {
+    /// The default miniature model: 2 layers, d_model 32, full byte
+    /// vocab so the real tokenizer/client drive it unchanged.
+    pub fn tiny() -> ForgeSpec {
+        ForgeSpec {
+            name: "forge-tiny".into(),
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 2,
+            d_ff: 64,
+            vocab_size: tokenizer::VOCAB_SIZE,
+            max_seq: 32,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+            qkv_bias: false,
+            l1_freq_bins: 4,
+            eval_batch: 2,
+            eval_seq: 16,
+            seq_buckets: vec![16, 32],
+            server_batches: vec![1, 2],
+            ratio: 8.0,
+            seed: 0xF0C5,
+        }
+    }
+
+    /// Qwen-style variant: grouped KV heads + QKV bias, so the
+    /// hermetic suite exercises both attention formulations.
+    pub fn tiny_gqa() -> ForgeSpec {
+        ForgeSpec {
+            name: "forge-gqa".into(),
+            n_heads: 4,
+            n_kv_heads: 2,
+            qkv_bias: true,
+            seed: 0xF0C6,
+            ..ForgeSpec::tiny()
+        }
+    }
+
+    /// Calibrated hidden-axis block width (`2·bins - 1`, the centred
+    /// equivalent of the rfft band).
+    pub fn kd_band(&self) -> usize {
+        2 * self.l1_freq_bins - 1
+    }
+
+    fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    fn geom(&self) -> LayerGeom {
+        LayerGeom {
+            n_heads: self.n_heads,
+            n_kv_heads: self.n_kv_heads,
+            rope_theta: self.rope_theta,
+            rms_eps: self.rms_eps as f32,
+            qkv_bias: self.qkv_bias,
+        }
+    }
+
+    fn layer_weight_names(&self) -> Vec<&'static str> {
+        if self.qkv_bias {
+            vec!["ln1", "wq", "wk", "wv", "bq", "bk", "bv", "wo", "ln2",
+                 "w_gate", "w_up", "w_down"]
+        } else {
+            vec!["ln1", "wq", "wk", "wv", "wo", "ln2", "w_gate", "w_up",
+                 "w_down"]
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        ensure!(self.n_heads >= 1 && self.d_model % self.n_heads == 0,
+                "{}: d_model {} not divisible by n_heads {}", self.name,
+                self.d_model, self.n_heads);
+        ensure!(self.head_dim() % 2 == 0,
+                "{}: head_dim must be even for RoPE", self.name);
+        ensure!(self.n_kv_heads >= 1 && self.n_heads % self.n_kv_heads == 0,
+                "{}: n_heads {} not divisible by n_kv_heads {}", self.name,
+                self.n_heads, self.n_kv_heads);
+        ensure!(self.n_layers >= 2,
+                "{}: split serving needs >= 2 layers", self.name);
+        ensure!(!self.seq_buckets.is_empty() && !self.server_batches.is_empty(),
+                "{}: empty bucket/batch lists", self.name);
+        ensure!(self.eval_seq <= self.max_seq, "{}: eval_seq > max_seq",
+                self.name);
+        ensure!(self.eval_batch >= 1, "{}: eval_batch must be >= 1", self.name);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// weights
+// ---------------------------------------------------------------------------
+
+fn normal_tensor(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut v, scale);
+    Tensor::f32(shape, v)
+}
+
+/// Project every row of a `[·, cols]` tensor onto the lowest `bins`
+/// rfft bins of the last axis (python `lowpass_last`): the layer-1
+/// spectral bottleneck that makes the boundary activation genuinely
+/// band-limited, as the paper measures on real LLMs.
+fn lowpass_rows(t: &mut Tensor, bins: usize) {
+    let cols = *t.shape.last().expect("lowpass on scalar");
+    if 2 * bins >= cols + 1 {
+        return; // band covers the whole axis
+    }
+    let plan = fft2d::plan(cols);
+    let mut buf = vec![C64::ZERO; cols];
+    for row in t.as_f32_mut().chunks_mut(cols) {
+        for (b, &v) in buf.iter_mut().zip(row.iter()) {
+            *b = C64::from_re(v as f64);
+        }
+        plan.forward_in_place(&mut buf);
+        for (u, b) in buf.iter_mut().enumerate() {
+            if u.min(cols - u) >= bins {
+                *b = C64::ZERO;
+            }
+        }
+        plan.inverse_in_place(&mut buf);
+        for (v, b) in row.iter_mut().zip(&buf) {
+            *v = b.re as f32;
+        }
+    }
+}
+
+/// Deterministic scaled-normal init, canonical names (`tok_emb`,
+/// `layers.{i}.{w}`, `final_norm`, `lm_head`), with the layer-1
+/// residual contributions band-limited to `l1_freq_bins`.
+pub fn init_weights(spec: &ForgeSpec) -> BTreeMap<String, Tensor> {
+    let mut rng = Rng::new(spec.seed);
+    let (d, f, v) = (spec.d_model, spec.d_ff, spec.vocab_size);
+    let kv = spec.kv_dim();
+    let inv_d = 1.0 / (d as f32).sqrt();
+    let out_scale = 1.0 / (2.0 * spec.n_layers as f32).sqrt();
+
+    let mut w = BTreeMap::new();
+    let mut tok_emb = normal_tensor(&mut rng, vec![v, d], 0.02);
+    lowpass_rows(&mut tok_emb, spec.l1_freq_bins);
+    w.insert("tok_emb".to_string(), tok_emb);
+    w.insert("final_norm".to_string(), Tensor::f32(vec![d], vec![1.0; d]));
+    w.insert("lm_head".to_string(), normal_tensor(&mut rng, vec![d, v], inv_d));
+
+    for i in 0..spec.n_layers {
+        let p = format!("layers.{i}.");
+        w.insert(p.clone() + "ln1", Tensor::f32(vec![d], vec![1.0; d]));
+        w.insert(p.clone() + "wq", normal_tensor(&mut rng, vec![d, d], inv_d));
+        w.insert(p.clone() + "wk", normal_tensor(&mut rng, vec![d, kv], inv_d));
+        w.insert(p.clone() + "wv", normal_tensor(&mut rng, vec![d, kv], inv_d));
+        if spec.qkv_bias {
+            w.insert(p.clone() + "bq", normal_tensor(&mut rng, vec![d], 0.05));
+            w.insert(p.clone() + "bk", normal_tensor(&mut rng, vec![kv], 0.05));
+            w.insert(p.clone() + "bv", normal_tensor(&mut rng, vec![kv], 0.05));
+        }
+        let mut wo = normal_tensor(&mut rng, vec![d, d], out_scale * inv_d);
+        w.insert(p.clone() + "ln2", Tensor::f32(vec![d], vec![1.0; d]));
+        let w_gate = normal_tensor(&mut rng, vec![d, f], inv_d);
+        let w_up = normal_tensor(&mut rng, vec![d, f], inv_d);
+        let mut w_down =
+            normal_tensor(&mut rng, vec![f, d], out_scale / (f as f32).sqrt());
+        if i == 0 {
+            // layer-1 boundary band-limit (python L1_PROJECTED)
+            lowpass_rows(&mut wo, spec.l1_freq_bins);
+            lowpass_rows(&mut w_down, spec.l1_freq_bins);
+        }
+        w.insert(p.clone() + "wo", wo);
+        w.insert(p.clone() + "w_gate", w_gate);
+        w.insert(p.clone() + "w_up", w_up);
+        w.insert(p + "w_down", w_down);
+    }
+    w
+}
+
+// ---------------------------------------------------------------------------
+// reference codecs for the goldens
+// ---------------------------------------------------------------------------
+
+/// Stable top-k (|v| desc, index asc tie-break) — the naive reference
+/// the optimised `codec::topk` sort must agree with.
+pub fn naive_topk(a: &[f32], k: usize) -> Vec<f32> {
+    let mut idx: Vec<usize> = (0..a.len()).collect();
+    idx.sort_by(|&x, &y| {
+        a[y].abs()
+            .partial_cmp(&a[x].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(x.cmp(&y))
+    });
+    let mut out = vec![0.0f32; a.len()];
+    for &i in idx.iter().take(k.min(a.len())) {
+        out[i] = a[i];
+    }
+    out
+}
+
+/// Rank-`r` reconstruction straight from the Jacobi SVD (no payload
+/// round-trip) — the reference for the SVD codec fixtures.
+pub fn svd_rank_r(a: &[f32], rows: usize, cols: usize, r: usize) -> Vec<f32> {
+    let svd = svd_thin(&Mat::from_f32(a, rows, cols));
+    let r = r.min(svd.s.len());
+    let mut out = vec![0.0f32; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            let mut acc = 0.0f64;
+            for t in 0..r {
+                acc += svd.u[(i, t)] * svd.s[t] * svd.vt[(t, j)];
+            }
+            out[i * cols + j] = acc as f32;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// goldens
+// ---------------------------------------------------------------------------
+
+fn layer_args(w: &BTreeMap<String, Tensor>, spec: &ForgeSpec, i: usize)
+    -> Vec<Tensor> {
+    spec.layer_weight_names()
+        .iter()
+        .map(|n| w[&format!("layers.{i}.{n}")].clone())
+        .collect()
+}
+
+/// Golden vectors with the same tensor names the python AOT pipeline
+/// dumps, computed with the reference interpreter + naive codec
+/// references (see the module docs for why this is not circular).
+fn build_goldens(spec: &ForgeSpec, w: &BTreeMap<String, Tensor>)
+    -> Result<BTreeMap<String, Tensor>> {
+    let (b, s, d) = (spec.eval_batch, spec.eval_seq, spec.d_model);
+    let geom = spec.geom();
+    let eps = spec.rms_eps as f32;
+
+    // deterministic fact-world-style prompts, one per golden batch
+    // row (the golden batch matches the manifest's eval_batch so the
+    // parity tests compare every lane), padded/truncated to S
+    let mut toks = Vec::with_capacity(b * s);
+    for i in 0..b {
+        let p = format!("Q mira hue {i} ? A blue .");
+        toks.extend(tokenizer::pad_to(&tokenizer::encode_prompt(&p), s));
+    }
+    let tokens = Tensor::i32(vec![b, s], toks);
+
+    // full forward + per-layer activations
+    let mut h = interp::embed(&tokens, &w["tok_emb"])?;
+    let mut acts = Vec::with_capacity(spec.n_layers);
+    for i in 0..spec.n_layers {
+        h = interp::layer_forward(&geom, &h, &layer_args(w, spec, i))?;
+        acts.push(h.clone());
+    }
+    let logits_full =
+        interp::head_forward(&h, &w["final_norm"], &w["lm_head"], eps)?;
+
+    // split-1 + FC block at the golden ratio (8.0, python build_goldens)
+    let (ks, kd) = fc_block(s, d, 8.0, Some(spec.kd_band()));
+    let mut hs = acts[0].clone();
+    {
+        let data = hs.as_f32_mut();
+        for e in 0..b {
+            let a = data[e * s * d..(e + 1) * s * d].to_vec();
+            let (re, im) = interp::fc_compress_naive(&a, s, d, ks, kd);
+            let recon = interp::fc_decompress_naive(&re, &im, s, d, ks, kd);
+            data[e * s * d..(e + 1) * s * d].copy_from_slice(&recon);
+        }
+    }
+    for i in 1..spec.n_layers {
+        hs = interp::layer_forward(&geom, &hs, &layer_args(w, spec, i))?;
+    }
+    let logits_split =
+        interp::head_forward(&hs, &w["final_norm"], &w["lm_head"], eps)?;
+
+    // codec fixtures on the first element's layer-1 activation
+    let a: Vec<f32> = acts[0].as_f32()[..s * d].to_vec();
+    let (re, im) = interp::fc_compress_naive(&a, s, d, ks, kd);
+    let recon = interp::fc_decompress_naive(&re, &im, s, d, ks, kd);
+    let k = a.len() / 16;
+
+    let mut g = BTreeMap::new();
+    g.insert("tokens".to_string(), tokens);
+    g.insert("ks_kd".to_string(),
+             Tensor::i32(vec![2], vec![ks as i32, kd as i32]));
+    g.insert("logits_full".to_string(), logits_full);
+    g.insert("logits_split1_fc8".to_string(), logits_split);
+    g.insert("act_layer1".to_string(), acts[0].clone());
+    g.insert("codec_a".to_string(), Tensor::f32(vec![s, d], a.clone()));
+    g.insert("codec_re".to_string(), Tensor::f32(vec![ks, kd], re));
+    g.insert("codec_im".to_string(), Tensor::f32(vec![ks, kd], im));
+    g.insert("codec_recon".to_string(), Tensor::f32(vec![s, d], recon));
+    g.insert("topk_recon".to_string(),
+             Tensor::f32(vec![s, d], naive_topk(&a, k)));
+    g.insert("svd_r4_recon".to_string(),
+             Tensor::f32(vec![s, d], svd_rank_r(&a, s, d, 4)));
+    Ok(g)
+}
+
+// ---------------------------------------------------------------------------
+// manifest
+// ---------------------------------------------------------------------------
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn st(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn layer_spec(op: &str, spec: &ForgeSpec) -> Json {
+    let mut j = Json::obj();
+    j.set("op", st(op));
+    j.set("n_heads", num(spec.n_heads as f64));
+    j.set("n_kv_heads", num(spec.n_kv_heads as f64));
+    j.set("rope_theta", num(spec.rope_theta));
+    j.set("rms_eps", num(spec.rms_eps));
+    j.set("qkv_bias", Json::Bool(spec.qkv_bias));
+    j
+}
+
+fn model_manifest(spec: &ForgeSpec, n_params: usize, interp_map: &mut Json)
+    -> Json {
+    let embed_name = format!("{}_embed.interp", spec.name);
+    let layer_name = format!("{}_layer.interp", spec.name);
+    let head_name = format!("{}_head.interp", spec.name);
+
+    let mut espec = Json::obj();
+    espec.set("op", st("embed"));
+    interp_map.set(&embed_name, espec);
+    interp_map.set(&layer_name, layer_spec("layer", spec));
+    let mut hspec = Json::obj();
+    hspec.set("op", st("head"));
+    hspec.set("rms_eps", num(spec.rms_eps));
+    interp_map.set(&head_name, hspec);
+
+    let mut arts = Json::obj();
+    for (key, name) in [("embed", &embed_name), ("layer", &layer_name),
+                        ("head", &head_name)] {
+        let mut a = Json::obj();
+        a.set("path", st(name));
+        arts.set(key, a);
+    }
+
+    let mut m = Json::obj();
+    m.set("name", st(&spec.name));
+    m.set("d_model", num(spec.d_model as f64));
+    m.set("n_layers", num(spec.n_layers as f64));
+    m.set("n_heads", num(spec.n_heads as f64));
+    m.set("n_kv_heads", num(spec.n_kv_heads as f64));
+    m.set("d_ff", num(spec.d_ff as f64));
+    m.set("vocab_size", num(spec.vocab_size as f64));
+    m.set("max_seq", num(spec.max_seq as f64));
+    m.set("rope_theta", num(spec.rope_theta));
+    m.set("rms_eps", num(spec.rms_eps));
+    m.set("qkv_bias", Json::Bool(spec.qkv_bias));
+    m.set("l1_freq_bins", num(spec.l1_freq_bins as f64));
+    m.set("n_params", num(n_params as f64));
+    m.set("weights", st(&format!("weights/{}.fcw", spec.name)));
+    m.set("golden", st(&format!("golden/{}.golden.fcw", spec.name)));
+    m.set("eval_batch", num(spec.eval_batch as f64));
+    m.set("eval_seq", num(spec.eval_seq as f64));
+    m.set("artifacts", arts);
+    m.set("layer_weight_names",
+          Json::Arr(spec.layer_weight_names().iter().map(|n| st(n)).collect()));
+    m
+}
+
+fn serving_manifest(spec: &ForgeSpec, interp_map: &mut Json) -> Json {
+    let d = spec.d_model;
+    let mut buckets = Json::obj();
+    for &bucket in &spec.seq_buckets {
+        let (ks, kd) = fc_block(bucket, d, spec.ratio, Some(spec.kd_band()));
+        let client_name = format!("{}_client_s{bucket}.interp", spec.name);
+        let mut cspec = layer_spec("client_fused", spec);
+        cspec.set("ks", num(ks as f64));
+        cspec.set("kd", num(kd as f64));
+        interp_map.set(&client_name, cspec);
+
+        let mut client = Json::obj();
+        client.set("path", st(&client_name));
+
+        let mut servers = Json::obj();
+        for &bsz in &spec.server_batches {
+            let server_name =
+                format!("{}_server_s{bucket}_b{bsz}.interp", spec.name);
+            let mut sspec = layer_spec("server_fused", spec);
+            sspec.set("seq", num(bucket as f64));
+            interp_map.set(&server_name, sspec);
+            let mut sj = Json::obj();
+            sj.set("path", st(&server_name));
+            servers.set(&bsz.to_string(), sj);
+        }
+
+        let mut bj = Json::obj();
+        bj.set("ks", num(ks as f64));
+        bj.set("kd", num(kd as f64));
+        bj.set("achieved_ratio", num(block_ratio(bucket, d, ks, kd)));
+        bj.set("client", client);
+        bj.set("server", servers);
+        buckets.set(&bucket.to_string(), bj);
+    }
+    let mut serving = Json::obj();
+    serving.set("model", st(&spec.name));
+    serving.set("ratio", num(spec.ratio));
+    serving.set("buckets", buckets);
+    serving
+}
+
+fn codec_hw_manifest(spec: &ForgeSpec, interp_map: &mut Json) -> Json {
+    let (s, d) = (spec.eval_seq, spec.d_model);
+    let (ks, kd) = fc_block(s, d, spec.ratio, None);
+    let comp_name = format!("fc_compress_{s}x{d}.interp");
+    let deco_name = format!("fc_decompress_{s}x{d}.interp");
+    let mut cspec = Json::obj();
+    cspec.set("op", st("fc_compress"));
+    cspec.set("ks", num(ks as f64));
+    cspec.set("kd", num(kd as f64));
+    interp_map.set(&comp_name, cspec);
+    let mut dspec = Json::obj();
+    dspec.set("op", st("fc_decompress"));
+    dspec.set("seq", num(s as f64));
+    dspec.set("hidden", num(d as f64));
+    interp_map.set(&deco_name, dspec);
+
+    let mut e = Json::obj();
+    e.set("seq", num(s as f64));
+    e.set("hidden", num(d as f64));
+    e.set("ks", num(ks as f64));
+    e.set("kd", num(kd as f64));
+    e.set("achieved_ratio", num(block_ratio(s, d, ks, kd)));
+    e.set("compress", st(&comp_name));
+    e.set("decompress", st(&deco_name));
+    let mut hw = Json::obj();
+    hw.set("ratio", num(spec.ratio));
+    hw.set("entries", Json::Arr(vec![e]));
+    hw
+}
+
+// ---------------------------------------------------------------------------
+// tree assembly
+// ---------------------------------------------------------------------------
+
+/// Forge a complete artifact tree at `root`: weights + goldens for
+/// every spec, serving/codec_hw sections for `serving_model`, and the
+/// `interp` spec table.  Overwrites files, never deletes.
+pub fn forge_tree(root: impl AsRef<Path>, specs: &[ForgeSpec],
+                  serving_model: &str) -> Result<()> {
+    let root = root.as_ref();
+    ensure!(!specs.is_empty(), "forge_tree: no specs");
+    let serving_spec = specs
+        .iter()
+        .find(|s| s.name == serving_model)
+        .with_context(|| format!("serving model '{serving_model}' not among \
+                                  forged specs"))?;
+    for sub in ["weights", "golden"] {
+        std::fs::create_dir_all(root.join(sub))
+            .with_context(|| format!("creating {}/{sub}", root.display()))?;
+    }
+
+    let mut interp_map = Json::obj();
+    let mut models = Json::obj();
+    for spec in specs {
+        spec.validate()?;
+        let w = init_weights(spec);
+        let n_params: usize = w.values().map(|t| t.len()).sum();
+        io::write_fcw(root.join(format!("weights/{}.fcw", spec.name)), &w)?;
+        let g = build_goldens(spec, &w)?;
+        io::write_fcw(root.join(format!("golden/{}.golden.fcw", spec.name)),
+                      &g)?;
+        models.set(&spec.name, model_manifest(spec, n_params, &mut interp_map));
+    }
+
+    let serving = serving_manifest(serving_spec, &mut interp_map);
+    let codec_hw = codec_hw_manifest(serving_spec, &mut interp_map);
+
+    let mut vocab = Json::obj();
+    vocab.set("size", num(tokenizer::VOCAB_SIZE as f64));
+    vocab.set("bos", num(tokenizer::BOS as f64));
+    vocab.set("eos", num(tokenizer::EOS as f64));
+    vocab.set("pad", num(tokenizer::PAD as f64));
+
+    let mut manifest = Json::obj();
+    manifest.set("forged", Json::Bool(true));
+    manifest.set("vocab", vocab);
+    manifest.set("seq_buckets",
+                 Json::Arr(serving_spec.seq_buckets.iter()
+                           .map(|&b| num(b as f64)).collect()));
+    manifest.set("models", models);
+    manifest.set("serving", serving);
+    manifest.set("codec_hw", codec_hw);
+    manifest.set("interp", interp_map);
+
+    std::fs::write(root.join("manifest.json"), manifest.to_string_pretty())
+        .with_context(|| format!("writing {}/manifest.json", root.display()))?;
+    Ok(())
+}
+
+/// A per-test scratch root under the system temp dir — unique per
+/// (process, tag) so parallel tests never collide.
+pub fn forge_root(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fc_forge_{}_{tag}", std::process::id()))
+}
+
+/// Forge the default tree (tiny + tiny-gqa, serving = tiny) into a
+/// fresh per-test scratch dir and open it as an [`ArtifactStore`].
+pub fn forged_store(tag: &str) -> Result<ArtifactStore> {
+    forged_store_with(tag, &[ForgeSpec::tiny(), ForgeSpec::tiny_gqa()],
+                      "forge-tiny")
+}
+
+/// Forge a custom tree into a fresh per-test scratch dir and open it.
+pub fn forged_store_with(tag: &str, specs: &[ForgeSpec], serving_model: &str)
+    -> Result<ArtifactStore> {
+    let root = forge_root(tag);
+    let _ = std::fs::remove_dir_all(&root);
+    forge_tree(&root, specs, serving_model)?;
+    ArtifactStore::open(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::rel_error;
+
+    #[test]
+    fn weights_are_deterministic_and_bandlimited() {
+        let spec = ForgeSpec::tiny();
+        let w1 = init_weights(&spec);
+        let w2 = init_weights(&spec);
+        assert_eq!(w1, w2);
+        assert_eq!(w1["tok_emb"].shape,
+                   vec![spec.vocab_size, spec.d_model]);
+        // a band-limited row must be exactly recoverable from its
+        // lowest kd_band() centred bins
+        let d = spec.d_model;
+        let row: Vec<f32> = w1["tok_emb"].as_f32()[..d].to_vec();
+        let (re, im) =
+            crate::runtime::interp::fc_compress_naive(&row, 1, d, 1,
+                                                      spec.kd_band());
+        let back = crate::runtime::interp::fc_decompress_naive(
+            &re, &im, 1, d, 1, spec.kd_band());
+        assert!(rel_error(&row, &back) < 1e-5, "tok_emb row not band-limited");
+    }
+
+    #[test]
+    fn naive_topk_matches_codec() {
+        let a = crate::codec::rand_act(8, 16, 3);
+        let k = a.len() / 16;
+        use crate::codec::Codec;
+        let codec = crate::codec::topk::TopkCodec;
+        let p = codec
+            .compress(&a, 8, 16, a.len() as f64 / (2.0 * k as f64))
+            .unwrap();
+        let got = codec.decompress(&p).unwrap();
+        assert_eq!(got, naive_topk(&a, k));
+    }
+
+    #[test]
+    fn svd_rank_r_reduces_error_with_rank() {
+        let a = crate::codec::rand_act(12, 8, 5);
+        let e2 = rel_error(&a, &svd_rank_r(&a, 12, 8, 2));
+        let e4 = rel_error(&a, &svd_rank_r(&a, 12, 8, 4));
+        let e8 = rel_error(&a, &svd_rank_r(&a, 12, 8, 8));
+        assert!(e4 <= e2 + 1e-9);
+        assert!(e8 <= e4 + 1e-9);
+        assert!(rel_error(&a, &svd_rank_r(&a, 12, 8, 12)) < 1e-5);
+    }
+
+    #[test]
+    fn forged_tree_opens_and_serves_interp_executables() {
+        let store = forged_store("forge_unit").unwrap();
+        assert!(store.manifest.get("forged").is_some());
+        let names = store.model_names();
+        assert!(names.contains(&"forge-tiny".to_string()));
+        assert!(names.contains(&"forge-gqa".to_string()));
+        let meta = store.model_meta("forge-tiny").unwrap();
+        let embed = meta.path("artifacts.embed.path").unwrap()
+            .as_str().unwrap().to_string();
+        let exe = store.get(&embed).unwrap();
+        assert!(exe.is_interpreted());
+        assert_eq!(store.cached_count(), 1);
+        // unknown artifacts still produce the actionable stub error
+        assert!(store.get("no_such_artifact.hlo").is_err());
+    }
+}

@@ -1,0 +1,30 @@
+//! Hermetic test kit: the synthetic artifact forge.
+//!
+//! `testkit::forge` deterministically generates miniature models
+//! (weights in `.fcw`, manifest, serving bucket geometry, golden
+//! vectors) entirely from [`crate::util::rng`] — no python, no XLA, no
+//! wall clock — and writes them as a complete artifact tree that
+//! [`crate::runtime::ArtifactStore`] opens exactly like a
+//! python-built one.  The artifacts carry `interp` specs instead of
+//! HLO files, so the store transparently serves
+//! [`crate::runtime::interp`] reference-interpreter executables and
+//! the full split-inference stack (device client → TCP → batcher →
+//! CodecEngine → fused server graph) runs from a bare `cargo test`.
+//!
+//! ## Determinism contract
+//!
+//! Forging the same [`ForgeSpec`] twice produces **byte-identical**
+//! trees: every weight and golden is derived from `ForgeSpec::seed`
+//! through the deterministic xoshiro RNG, iteration orders are fixed
+//! (`BTreeMap`, explicit name lists), and nothing reads the clock or
+//! the environment.  `tests/hermetic_serving.rs::forge_is_deterministic`
+//! pins this down.  Goldens are *self-consistent*: they are computed
+//! with the same reference interpreter the runtime executes, plus
+//! naive full-FFT / stable-top-k / direct-SVD references for the codec
+//! fixtures — so golden-parity asserts cross-implementation agreement
+//! (optimised codec vs naive transform), not just replay.
+
+pub mod forge;
+
+pub use forge::{forge_tree, forged_store, forged_store_with, naive_topk,
+                svd_rank_r, ForgeSpec};

@@ -1,0 +1,175 @@
+//! The hermetic serving soak: N device clients × M generations driven
+//! through the real TCP server, dynamic batcher, session manager, and
+//! per-connection CodecEngines — all against `testkit`-forged
+//! artifacts executed by the pure-Rust reference interpreter.  No
+//! `make artifacts`, no XLA: these tests hard-assert on every
+//! checkout and are the executable harness future scaling PRs (async
+//! server, sharding, batching policies) build on.
+
+use fourier_compress::config::{FromJson, ServeConfig};
+use fourier_compress::coordinator::{DeviceClient, EdgeServer};
+use fourier_compress::model::tokenizer;
+use fourier_compress::net::Channel;
+use fourier_compress::testkit::{forge_tree, forged_store, ForgeSpec};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+fn serve_config(store_root: &std::path::Path, overrides: &[String]) -> ServeConfig {
+    let mut args = vec![
+        "listen=127.0.0.1:0".to_string(),
+        format!("artifacts={}", store_root.display()),
+    ];
+    args.extend_from_slice(overrides);
+    ServeConfig::load(None, &args).unwrap()
+}
+
+#[test]
+fn multi_client_soak_through_tcp_batcher_codec() {
+    const CLIENTS: u64 = 4;
+    const GENS: usize = 2;
+
+    let store = Arc::new(forged_store("soak").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &[
+        "max_batch=4".into(),
+        "batch_deadline_us=300".into(),
+        "compute_units=2".into(),
+    ]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+    let addr = server.addr.to_string();
+
+    let mut handles = Vec::new();
+    for cid in 0..CLIENTS {
+        let addr = addr.clone();
+        let store = store.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = DeviceClient::connect(
+                &addr, &store, cid + 1, Channel::unlimited()).unwrap();
+            let mut steps = 0usize;
+            for g in 0..GENS {
+                let prompt = format!("Q probe {cid} {g} ? A");
+                let gen = client.generate(&prompt, 4).unwrap();
+                assert!(gen.steps >= 1, "client {cid} gen {g}: no tokens");
+                steps += gen.steps;
+            }
+            // per-session engine + conjugate packing must beat raw
+            assert!(client.stats.compression_ratio() > 4.0,
+                    "client {cid}: ratio {}", client.stats.compression_ratio());
+            assert_eq!(client.stats.requests as usize, steps);
+            let stats = client.server_stats().unwrap();
+            assert!(stats.contains("\"requests\""), "stats json: {stats}");
+            client.bye().unwrap();
+            steps
+        }));
+    }
+    let total_steps: usize =
+        handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total_steps >= (CLIENTS as usize) * GENS);
+
+    let m = &server.metrics;
+    assert!(m.requests.load(Ordering::Relaxed) >= total_steps as u64,
+            "server saw fewer requests than clients sent");
+    assert!(m.tokens.load(Ordering::Relaxed) >= total_steps as u64);
+    assert!(m.batches.load(Ordering::Relaxed) >= 1);
+    assert!(m.bytes_rx.load(Ordering::Relaxed) > 0);
+    assert!(m.bytes_tx.load(Ordering::Relaxed) > 0);
+    server.shutdown();
+}
+
+#[test]
+fn generation_is_deterministic_across_sessions() {
+    // recompute-regime serving is pure: the same prompt must produce
+    // the same tokens regardless of session id or batch composition
+    let store = Arc::new(forged_store("determinism").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &["max_batch=2".into()]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+    let addr = server.addr.to_string();
+
+    let mut first: Option<Vec<i32>> = None;
+    for session in [11u64, 12, 13] {
+        let mut client =
+            DeviceClient::connect(&addr, &store, session, Channel::unlimited())
+                .unwrap();
+        let g = client.generate("Q mira hue ? A", 4).unwrap();
+        client.bye().unwrap();
+        if let Some(want) = &first {
+            assert_eq!(&g.tokens, want, "session {session} diverged");
+        } else {
+            first = Some(g.tokens);
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn context_growth_promotes_to_larger_bucket() {
+    // a growing prompt must cross the 16-token bucket into the 32
+    // bucket mid-generation and keep receiving tokens
+    let store = Arc::new(forged_store("bucket_promo").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &[]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+    let addr = server.addr.to_string();
+
+    let mut client =
+        DeviceClient::connect(&addr, &store, 7, Channel::unlimited()).unwrap();
+    let mut context = tokenizer::encode_prompt("Q mira hue ? A");
+    assert!(context.len() < 16);
+    let mut crossed = false;
+    for _ in 0..6 {
+        let (token, logprob) = client.step(&context).unwrap();
+        assert!(logprob <= 0.0, "logprob {logprob} not a log-probability");
+        context.push(token);
+        if context.len() > 16 {
+            crossed = true;
+        }
+    }
+    assert!(crossed, "context never crossed the 16-token bucket");
+    client.bye().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn forge_is_deterministic() {
+    // the forge's determinism contract: same spec → byte-identical
+    // tree (weights, goldens, manifest) — no wall clock, no env
+    let ra = fourier_compress::testkit::forge::forge_root("det_a");
+    let rb = fourier_compress::testkit::forge::forge_root("det_b");
+    let _ = std::fs::remove_dir_all(&ra);
+    let _ = std::fs::remove_dir_all(&rb);
+    let specs = [ForgeSpec::tiny(), ForgeSpec::tiny_gqa()];
+    forge_tree(&ra, &specs, "forge-tiny").unwrap();
+    forge_tree(&rb, &specs, "forge-tiny").unwrap();
+    for rel in ["manifest.json",
+                "weights/forge-tiny.fcw", "weights/forge-gqa.fcw",
+                "golden/forge-tiny.golden.fcw", "golden/forge-gqa.golden.fcw"] {
+        let a = std::fs::read(ra.join(rel)).unwrap();
+        let b = std::fs::read(rb.join(rel)).unwrap();
+        assert_eq!(a, b, "{rel} differs between identical forges");
+    }
+}
+
+#[test]
+fn interp_executables_are_selected_without_hlo_files() {
+    // the store must serve interpreter-backed executables for every
+    // artifact the serving path needs, from a tree with no hlo/ dir
+    let store = forged_store("interp_select").expect("forge artifacts");
+    assert!(!store.root.join("hlo").exists());
+    let serving = store.manifest.get("serving").unwrap();
+    let buckets = serving.get("buckets").and_then(|b| b.as_obj()).unwrap();
+    let mut loaded = 0;
+    for (_, bj) in buckets {
+        let cpath = bj.path("client.path").and_then(|v| v.as_str()).unwrap();
+        assert!(store.get(cpath).unwrap().is_interpreted());
+        loaded += 1;
+        for (_, sj) in bj.get("server").and_then(|s| s.as_obj()).unwrap() {
+            let spath = sj.get("path").and_then(|v| v.as_str()).unwrap();
+            assert!(store.get(spath).unwrap().is_interpreted());
+            loaded += 1;
+        }
+    }
+    assert!(loaded >= 4, "expected client+server artifacts per bucket");
+    assert_eq!(store.cached_count(), loaded);
+    // an artifact with no interp spec still reports the stub error
+    let err = store.get("missing_artifact.hlo.txt").unwrap_err();
+    assert!(format!("{err:#}").contains("xla runtime unavailable"),
+            "unexpected error: {err:#}");
+}
