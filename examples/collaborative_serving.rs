@@ -7,8 +7,15 @@
 //! compression actually achieved.
 //!
 //!     cargo run --release --example collaborative_serving -- \
-//!         [--clients 4] [--prompts 6] [--gbps 1.0] [--max-batch 4]
+//!         [--clients 4] [--prompts 6] [--gbps 1.0] [--max-batch 4] \
+//!         [--stream] [--keyframe-interval 32] [--drift 0.05]
+//!
+//! `--stream` switches the clients to the spectral delta stream
+//! (`codec::stream`): keyframes on cadence/bucket promotion, sparse
+//! coefficient deltas otherwise — the regime that removes the
+//! recompute retransmission.
 
+use fourier_compress::codec::stream::StreamConfig;
 use fourier_compress::config::{FromJson, ServeConfig};
 use fourier_compress::coordinator::{DeviceClient, EdgeServer};
 use fourier_compress::net::Channel;
@@ -24,6 +31,11 @@ fn main() -> anyhow::Result<()> {
     let n_prompts = args.usize_or("prompts", 6);
     let gbps = args.f64_or("gbps", 1.0);
     let max_batch = args.usize_or("max-batch", 4);
+    let stream = args.has("stream");
+    let stream_cfg = StreamConfig {
+        keyframe_interval: args.usize_or("keyframe-interval", 32) as u32,
+        drift_threshold: args.f64_or("drift", 0.05),
+    };
 
     let cfg = ServeConfig::load(None, &[
         "listen=127.0.0.1:0".into(),
@@ -50,6 +62,9 @@ fn main() -> anyhow::Result<()> {
             let channel = Channel::gbps(gbps, 100);
             let mut client = DeviceClient::connect(&addr, &store,
                                                    cid as u64 + 1, channel)?;
+            if stream {
+                client.enable_stream(stream_cfg);
+            }
             let mut gens = Vec::new();
             for p in 0..n_prompts {
                 let prompt = prompts[(cid + p) % prompts.len()];
@@ -65,6 +80,7 @@ fn main() -> anyhow::Result<()> {
     let mut total_tokens = 0usize;
     let mut total_bytes = 0u64;
     let mut total_raw = 0u64;
+    let (mut keys, mut deltas, mut resyncs) = (0u64, 0u64, 0u64);
     let mut rts: Vec<u64> = Vec::new();
     for (cid, h) in handles.into_iter().enumerate() {
         let (gens, stats) = h.join().unwrap()?;
@@ -76,6 +92,9 @@ fn main() -> anyhow::Result<()> {
         total_tokens += gens.iter().map(|g| g.steps).sum::<usize>();
         total_bytes += stats.bytes_sent;
         total_raw += stats.bytes_uncompressed;
+        keys += stats.key_frames;
+        deltas += stats.delta_frames;
+        resyncs += stats.resyncs;
         rts.extend(stats.round_trip_us);
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -90,6 +109,10 @@ fn main() -> anyhow::Result<()> {
               {:.1}x compression)", total_raw as f64 / total_bytes.max(1) as f64);
     println!("step round-trip:    p50={}us p95={}us p99={}us",
              pct(0.50), pct(0.95), pct(0.99));
+    if stream {
+        println!("stream frames:      {keys} keyframes, {deltas} deltas, \
+                  {resyncs} resyncs");
+    }
 
     // server-side metrics
     println!("server metrics:     {}",

@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
         // saturation summary: max clients with mean response < 2x the
         // single-client latency (the paper's "supported clients" notion)
         for &g in &cfg.link_gbps {
-            for tag in ["orig", "fc"] {
+            for tag in ["orig", "fc", "fcs"] {
                 let means = j.get(&format!("{tag}_{g}gbps_mean_s"))
                     .and_then(|v| v.as_arr()).unwrap();
                 let base = means[0].as_f64().unwrap_or(f64::NAN);

@@ -166,6 +166,17 @@ fn main() {
     assert_eq!(eng.scratch_bytes(), warm_scratch,
                "scratch arena grew after warm-up");
 
+    // int8 at the same serving size — pins the hoisted per-block
+    // scale reciprocal (one divide per block, not one per element)
+    let int8 = fourier_compress::codec::quant::Int8Codec::default();
+    let mut p8 = Payload::empty();
+    int8.compress_into(&mut eng, view, 4.0, &mut p8).unwrap();
+    let int8_c = bench(&format!("int8 engine compress {bs}x{bd}"), 100, budget,
+                       || {
+        int8.compress_into(&mut eng, view, 4.0, &mut p8).unwrap();
+        std::hint::black_box(&p8);
+    });
+
     let speedup_c = cold_c.median.as_secs_f64() / engine_c.median.as_secs_f64();
     let speedup_d = cold_d.median.as_secs_f64() / engine_d.median.as_secs_f64();
     println!("engine vs pre-engine cost model: \
@@ -180,6 +191,7 @@ fn main() {
     out.set("oneshot_decompress_s", Json::Num(oneshot_d.median.as_secs_f64()));
     out.set("engine_compress_s", Json::Num(engine_c.median.as_secs_f64()));
     out.set("engine_decompress_s", Json::Num(engine_d.median.as_secs_f64()));
+    out.set("int8_compress_s", Json::Num(int8_c.median.as_secs_f64()));
     out.set("compress_speedup_vs_cold", Json::Num(speedup_c));
     out.set("decompress_speedup_vs_cold", Json::Num(speedup_d));
     out.set("scratch_bytes", Json::Num(warm_scratch as f64));

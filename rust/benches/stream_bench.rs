@@ -1,0 +1,115 @@
+//! Stream-vs-recompute wire-byte bench: 128 decode steps over an
+//! evolving spectral block at a serving-like geometry, comparing the
+//! cumulative uplink bytes of the recompute regime (a full Activation
+//! frame per step) against the spectral delta stream (keyframes +
+//! sparse coefficient deltas), plus the Fig-7 byte-model columns.
+//! Writes BENCH_stream.json and hard-asserts the >= 5x saving so the
+//! CI smoke step fails loudly if the stream regresses.
+//!
+//!     cargo bench --bench stream_bench
+
+use fourier_compress::codec::stream::{BlockGeom, StreamConfig, StreamDecoder,
+                                      StreamEncoder, StreamStep};
+use fourier_compress::codec::CodecEngine;
+use fourier_compress::config::SimConfig;
+use fourier_compress::coordinator::protocol::Frame;
+use fourier_compress::sim::{bytes_per_step, Arm};
+use fourier_compress::util::bench::bench;
+use fourier_compress::util::json::Json;
+use fourier_compress::util::rng::Rng;
+use std::time::Duration;
+
+const STEPS: usize = 128;
+
+fn main() {
+    let geom = BlockGeom { rows: 64, cols: 128, ks: 33, kd: 15 };
+    let n = geom.ks * geom.kd;
+    let cfg = StreamConfig { keyframe_interval: 16, drift_threshold: 0.02 };
+
+    let mut rng = Rng::new(0x5B);
+    let mut truth: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut enc = StreamEncoder::new(cfg);
+    let mut dec = StreamDecoder::new();
+    let mut eng = CodecEngine::new();
+    let mut step = StreamStep::default();
+
+    let (mut recompute_bytes, mut stream_bytes) = (0u64, 0u64);
+    let (mut keys, mut deltas, mut updates) = (0u64, 0u64, 0u64);
+    for t in 0..STEPS as u64 {
+        if t > 0 {
+            // decode-step evolution: a few spectral coefficients move
+            for _ in 0..4 {
+                let i = rng.below(n);
+                truth[i] += rng.normal() as f32;
+            }
+        }
+        let recompute = Frame::Activation {
+            session: 1, request: t + 1, bucket: geom.rows as u16,
+            true_len: geom.rows as u16, ks: geom.ks as u16,
+            kd: geom.kd as u16, packed: truth.clone(),
+        };
+        recompute_bytes += recompute.encode().len() as u64;
+
+        enc.encode_into(&mut eng, geom, &truth, &mut step).unwrap();
+        let frame = Frame::Delta {
+            session: 1, request: t + 1, seq: step.seq, keyframe: step.keyframe,
+            bucket: geom.rows as u16, true_len: geom.rows as u16,
+            ks: geom.ks as u16, kd: geom.kd as u16,
+            packed: step.packed.clone(), updates: step.updates.clone(),
+        };
+        stream_bytes += frame.encode().len() as u64;
+        if step.keyframe {
+            keys += 1;
+            dec.apply_key(step.seq, geom, &step.packed).unwrap();
+        } else {
+            deltas += 1;
+            updates += step.updates.len() as u64;
+            dec.apply_delta(step.seq, geom, &step.updates).unwrap();
+        }
+    }
+    // the stream is exact at the coefficients it sends: encoder and
+    // decoder state must agree bit for bit at the end of the run
+    assert_eq!(dec.block().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+               enc.state().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+               "encoder/decoder state diverged");
+
+    let savings = recompute_bytes as f64 / stream_bytes as f64;
+    println!("{STEPS} steps @ {}x{} block {}x{}: recompute {recompute_bytes} B, \
+              stream {stream_bytes} B ({savings:.1}x, {keys} keys / {deltas} \
+              deltas, {updates} updates)",
+             geom.rows, geom.cols, geom.ks, geom.kd);
+    assert!(savings >= 5.0, "stream saved only {savings:.1}x");
+
+    // encoder hot path at the same geometry
+    let enc_t = bench("stream encode 64x128 (delta)", 500,
+                      Duration::from_secs(2), || {
+        enc.encode_into(&mut eng, geom, &truth, &mut step).unwrap();
+        std::hint::black_box(&step);
+    });
+
+    // the Fig-7 byte model for the same 128-step horizon
+    let sim_cfg = SimConfig { output_tokens: STEPS, ..SimConfig::default() };
+    let cum = |arm: Arm| -> f64 {
+        (0..STEPS).map(|t| bytes_per_step(&sim_cfg, arm, t)).sum()
+    };
+
+    let mut out = Json::obj();
+    out.set("steps", Json::Num(STEPS as f64));
+    out.set("geometry", Json::Str(format!("{}x{} block {}x{}", geom.rows,
+                                          geom.cols, geom.ks, geom.kd)));
+    out.set("keyframe_interval", Json::Num(cfg.keyframe_interval as f64));
+    out.set("drift_threshold", Json::Num(cfg.drift_threshold));
+    out.set("recompute_bytes", Json::Num(recompute_bytes as f64));
+    out.set("stream_bytes", Json::Num(stream_bytes as f64));
+    out.set("savings_x", Json::Num(savings));
+    out.set("key_frames", Json::Num(keys as f64));
+    out.set("delta_frames", Json::Num(deltas as f64));
+    out.set("delta_updates", Json::Num(updates as f64));
+    out.set("encode_s", Json::Num(enc_t.median.as_secs_f64()));
+    out.set("model_orig_bytes", Json::Num(cum(Arm::Original)));
+    out.set("model_fc_bytes", Json::Num(cum(Arm::Fc)));
+    out.set("model_fcs_bytes", Json::Num(cum(Arm::FcStream)));
+    std::fs::write("BENCH_stream.json", out.to_string_pretty())
+        .expect("write BENCH_stream.json");
+    println!("wrote BENCH_stream.json");
+}

@@ -22,6 +22,7 @@ pub mod engine;
 pub mod fourier;
 pub mod lowrank;
 pub mod quant;
+pub mod stream;
 pub mod topk;
 
 pub use engine::{with_thread_engine, CodecEngine};

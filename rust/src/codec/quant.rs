@@ -45,9 +45,16 @@ impl Codec for Int8Codec {
             scales.push(scale);
             w.f32(scale);
         }
-        for (i, &v) in data.iter().enumerate() {
-            let q = (v / scales[i / self.block]).round().clamp(-127.0, 127.0) as i8;
-            w.0.push(q as u8);
+        // per-block reciprocal hoisted out of the inner loop: one
+        // divide per block instead of a float divide (plus an integer
+        // divide for the scale lookup) per element — scale is never
+        // zero, see above
+        for (chunk, &scale) in data.chunks(self.block).zip(scales.iter()) {
+            let inv = 1.0 / scale;
+            for &v in chunk {
+                let q = (v * inv).round().clamp(-127.0, 127.0) as i8;
+                w.0.push(q as u8);
+            }
         }
         Ok(())
     }
@@ -68,9 +75,14 @@ impl Codec for Int8Codec {
         }
         out.clear();
         out.reserve(n);
-        for i in 0..n {
-            let q = r.byte()? as i8;
-            out.push(q as f32 * scales[i / block]);
+        // same hoist on the decode side: the scale lookup's integer
+        // divide leaves the inner loop
+        for b in 0..nb {
+            let scale = scales[b];
+            for _ in b * block..((b + 1) * block).min(n) {
+                let q = r.byte()? as i8;
+                out.push(q as f32 * scale);
+            }
         }
         ensure!(r.remaining() == 0, "trailing payload bytes");
         Ok(())

@@ -1,0 +1,653 @@
+//! Spectral delta streaming: a session-stateful temporal codec over
+//! the FourierCompress block that kills the recompute regime's
+//! bandwidth amplification.
+//!
+//! In the paper's recompute regime (Fig 1/Fig 7) decode step *t*
+//! retransmits the full (prompt + *t*)×D activation, so wire bytes per
+//! conversation grow quadratically with output length.  But
+//! consecutive steps compress *nearly the same matrix*: inside one
+//! serving bucket the block geometry is fixed and only the rows from
+//! the appended token onward change, so most of the K_S×K_D spectral
+//! coefficients drift by little.  This module streams that block
+//! temporally, the way atsc streams frames of a time series:
+//!
+//! * a **keyframe** carries the full conjugate-symmetric packing
+//!   (exactly the floats an Activation frame carries) and
+//!   unconditionally resynchronises the receiver;
+//! * a **delta frame** carries only the coefficients whose last
+//!   transmitted value drifted, as `(u32 index, f32 value)` updates
+//!   into the packed vector — int-indexed like atsc's
+//!   `FrequencyPoint`, 8 wire bytes per coefficient.
+//!
+//! The [`StreamEncoder`] (device side) keeps the last transmitted
+//! packed block per session and picks per step: keyframe when the
+//! geometry changed (bucket promotion), every
+//! [`StreamConfig::keyframe_interval`] frames, on
+//! [`StreamEncoder::force_keyframe`] (resync), or when a delta would
+//! cost more wire bytes than the keyframe it replaces; otherwise a
+//! delta whose *unsent* drift is bounded by
+//! [`StreamConfig::drift_threshold`].  Updates are exact f32
+//! replacements, so encoder and decoder state never diverge — with a
+//! zero threshold the stream is bit-identical to the recompute regime.
+//!
+//! ## Drift accounting
+//!
+//! Drift is measured in the spectral domain with conjugate-mirror
+//! weights (a packed re/im pair stands for a coefficient *and* its
+//! mirror, so it carries weight 2; a self-conjugate slot weight 1).
+//! By Parseval this weighted relative error equals the relative error
+//! between the *reconstructions* of the stale and the true block, so
+//! `drift_threshold` directly bounds the per-step reconstruction
+//! error the stream adds on top of the FC truncation the keyframe
+//! regime already has.
+//!
+//! The [`StreamDecoder`] (server side) reconstructs from per-session
+//! state and **hard-fails on sequence gaps**: a lost or reordered
+//! delta desynchronises the session until the next keyframe, which
+//! recovers byte-identical state (`tests/stream_serving.rs` pins
+//! this).  The decoder never guesses — silent drift is the one failure
+//! mode a lossy activation link cannot afford.
+
+use super::engine::CodecEngine;
+use super::{valid_block_axis, Payload, Writer};
+use anyhow::{bail, ensure, Result};
+
+/// Wire bytes per sparse coefficient update (u32 index + f32 value).
+pub const UPDATE_WIRE_BYTES: usize = 8;
+
+/// Block geometry of one stream: the pre-compression matrix shape and
+/// the kept centred block.  Any change forces a keyframe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockGeom {
+    pub rows: usize,
+    pub cols: usize,
+    pub ks: usize,
+    pub kd: usize,
+}
+
+/// Encoder policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamConfig {
+    /// Force a keyframe every this many frames (1 = every frame).
+    pub keyframe_interval: u32,
+    /// Max relative spectral drift a delta frame may leave unsent
+    /// (0.0 = deltas replace every changed coefficient exactly).
+    pub drift_threshold: f64,
+}
+
+impl Default for StreamConfig {
+    fn default() -> StreamConfig {
+        StreamConfig { keyframe_interval: 32, drift_threshold: 0.05 }
+    }
+}
+
+/// One encoded stream frame, written into caller-owned buffers so the
+/// per-token loop allocates nothing after warm-up (the `packed` /
+/// `updates` vectors are moved into the wire frame and recovered, like
+/// the client's Activation scratch).
+#[derive(Debug, Default)]
+pub struct StreamStep {
+    pub seq: u32,
+    pub keyframe: bool,
+    /// Keyframe payload: the full packed block (empty for deltas).
+    pub packed: Vec<f32>,
+    /// Delta payload: sparse updates (empty for keyframes).
+    pub updates: Vec<(u32, f32)>,
+}
+
+impl StreamStep {
+    /// Codec-body wire bytes of this frame (the protocol adds
+    /// [`crate::coordinator::protocol::STREAM_HEADER_BYTES`] on top).
+    pub fn body_bytes(&self) -> usize {
+        if self.keyframe {
+            self.packed.len() * 4
+        } else {
+            4 + self.updates.len() * UPDATE_WIRE_BYTES
+        }
+    }
+}
+
+/// Conjugate-mirror energy weight per packed float slot, in exactly
+/// the order [`super::fourier::pack_block_into`] emits: self-conjugate
+/// coefficients contribute their own energy (weight 1), every other
+/// packed pair stands for the coefficient and its mirror (weight 2 on
+/// both the re and the im slot).
+fn mirror_weights(eng: &mut CodecEngine, g: BlockGeom, out: &mut Vec<f32>) {
+    let ui = eng.indices(g.rows, g.ks);
+    let vi = eng.indices(g.cols, g.kd);
+    out.clear();
+    out.reserve(g.ks * g.kd);
+    for &u in ui.iter() {
+        for &v in vi.iter() {
+            let (mu, mv) = ((g.rows - u) % g.rows, (g.cols - v) % g.cols);
+            if (u, v) > (mu, mv) {
+                continue; // mirror carries it
+            }
+            if (u, v) == (mu, mv) {
+                out.push(1.0); // self-conjugate: re only
+            } else {
+                out.push(2.0); // re
+                out.push(2.0); // im
+            }
+        }
+    }
+}
+
+/// Assemble the `fc` wire payload for a packed coefficient block, so
+/// stream state reconstructs through the ordinary
+/// [`super::fourier::FourierCodec`] decompression path (the benches
+/// and drift tests use this bridge).
+pub fn fc_payload(geom: BlockGeom, packed: &[f32]) -> Payload {
+    let mut p = Payload::empty();
+    p.reset("fc", geom.rows, geom.cols);
+    let mut w = Writer(&mut p.body);
+    w.u16(geom.ks as u16);
+    w.u16(geom.kd as u16);
+    for &v in packed {
+        w.f32(v);
+    }
+    p
+}
+
+// ---------------------------------------------------------------------------
+// encoder (device side)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct StreamEncoder {
+    cfg: StreamConfig,
+    geom: Option<BlockGeom>,
+    /// Last transmitted packed block — mirrors the decoder exactly.
+    state: Vec<f32>,
+    weight: Vec<f32>,
+    seq: u32,
+    since_key: u32,
+    force_key: bool,
+    /// Scratch: (drift energy, index) candidates, largest first.
+    cand: Vec<(f64, u32)>,
+}
+
+impl StreamEncoder {
+    pub fn new(cfg: StreamConfig) -> StreamEncoder {
+        StreamEncoder {
+            cfg: StreamConfig {
+                keyframe_interval: cfg.keyframe_interval.max(1),
+                drift_threshold: cfg.drift_threshold.max(0.0),
+            },
+            geom: None,
+            state: Vec::new(),
+            weight: Vec::new(),
+            seq: 0,
+            since_key: 0,
+            force_key: false,
+            cand: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> StreamConfig {
+        self.cfg
+    }
+
+    /// The encoder's view of the receiver state (the last transmitted
+    /// packed block).
+    pub fn state(&self) -> &[f32] {
+        &self.state
+    }
+
+    pub fn next_seq(&self) -> u32 {
+        self.seq
+    }
+
+    /// Make the next frame a keyframe regardless of cadence — the
+    /// client calls this when the server reports lost stream state
+    /// (TTL eviction, sequence gap) to resynchronise.
+    pub fn force_keyframe(&mut self) {
+        self.force_key = true;
+    }
+
+    /// Encode the current packed block as the next stream frame into
+    /// `out` (buffers reused, cleared first).  Exactly one frame is
+    /// produced per call and the encoder state advances with it, so
+    /// the caller must transmit every encoded frame (or
+    /// [`StreamEncoder::force_keyframe`] afterwards).
+    pub fn encode_into(&mut self, eng: &mut CodecEngine, geom: BlockGeom,
+                       packed: &[f32], out: &mut StreamStep) -> Result<()> {
+        ensure!(valid_block_axis(geom.rows, geom.ks)
+                    && valid_block_axis(geom.cols, geom.kd),
+                "invalid stream block {}x{} for {}x{}", geom.ks, geom.kd,
+                geom.rows, geom.cols);
+        let geom_changed = self.geom != Some(geom);
+        if geom_changed {
+            mirror_weights(eng, geom, &mut self.weight);
+            self.geom = Some(geom);
+        }
+        ensure!(packed.len() == self.weight.len(),
+                "packed block {} floats, geometry wants {}", packed.len(),
+                self.weight.len());
+
+        out.seq = self.seq;
+        out.packed.clear();
+        out.updates.clear();
+
+        let need_key = self.force_key
+            || geom_changed
+            || self.state.len() != packed.len()
+            || self.since_key + 1 >= self.cfg.keyframe_interval;
+        if !need_key {
+            // candidate updates: coefficients whose last transmitted
+            // value drifted, by mirror-weighted energy
+            let e_cur: f64 = packed
+                .iter()
+                .zip(&self.weight)
+                .map(|(&p, &w)| w as f64 * p as f64 * p as f64)
+                .sum();
+            self.cand.clear();
+            let mut drift = 0.0f64;
+            for (i, (&p, &s)) in packed.iter().zip(&self.state).enumerate() {
+                if p != s {
+                    let d = self.weight[i] as f64
+                        * (p as f64 - s as f64)
+                        * (p as f64 - s as f64);
+                    drift += d;
+                    self.cand.push((d, i as u32));
+                }
+            }
+            let thr = self.cfg.drift_threshold;
+            let target = thr * thr * e_cur;
+            if drift > target {
+                // largest drift first; index tie-break keeps the wire
+                // bytes deterministic
+                self.cand
+                    .sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+                for &(d, i) in &self.cand {
+                    out.updates.push((i, packed[i as usize]));
+                    drift -= d;
+                    if drift <= target {
+                        break;
+                    }
+                }
+            }
+            // a dense delta is a false economy: 8 wire bytes per
+            // update vs 4 per keyframe float — fall back to a keyframe
+            if out.updates.len() * UPDATE_WIRE_BYTES < packed.len() * 4 {
+                for &(i, v) in &out.updates {
+                    self.state[i as usize] = v;
+                }
+                out.keyframe = false;
+                self.since_key += 1;
+                self.seq = self.seq.wrapping_add(1);
+                return Ok(());
+            }
+            out.updates.clear();
+        }
+
+        out.keyframe = true;
+        out.packed.extend_from_slice(packed);
+        self.state.clear();
+        self.state.extend_from_slice(packed);
+        self.force_key = false;
+        self.since_key = 0;
+        self.seq = self.seq.wrapping_add(1);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// decoder (server side)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+pub struct StreamDecoder {
+    geom: Option<BlockGeom>,
+    state: Vec<f32>,
+    next_seq: u32,
+    synced: bool,
+}
+
+impl StreamDecoder {
+    pub fn new() -> StreamDecoder {
+        StreamDecoder::default()
+    }
+
+    /// The current packed block (empty until the first keyframe).
+    pub fn block(&self) -> &[f32] {
+        &self.state
+    }
+
+    pub fn geom(&self) -> Option<BlockGeom> {
+        self.geom
+    }
+
+    pub fn next_seq(&self) -> u32 {
+        self.next_seq
+    }
+
+    pub fn is_synced(&self) -> bool {
+        self.synced
+    }
+
+    /// Apply a keyframe: unconditional resync at any sequence number.
+    pub fn apply_key(&mut self, seq: u32, geom: BlockGeom, packed: &[f32])
+        -> Result<()> {
+        ensure!(valid_block_axis(geom.rows, geom.ks)
+                    && valid_block_axis(geom.cols, geom.kd),
+                "invalid stream block {}x{} for {}x{}", geom.ks, geom.kd,
+                geom.rows, geom.cols);
+        // the conjugate-symmetric packing is exactly ks*kd floats
+        ensure!(packed.len() == geom.ks * geom.kd,
+                "keyframe carries {} floats, geometry wants {}", packed.len(),
+                geom.ks * geom.kd);
+        self.state.clear();
+        self.state.extend_from_slice(packed);
+        self.geom = Some(geom);
+        self.next_seq = seq.wrapping_add(1);
+        self.synced = true;
+        Ok(())
+    }
+
+    /// Apply a delta.  Hard-fails — and desynchronises, so every
+    /// further delta is refused until a keyframe — on a sequence gap,
+    /// a geometry change, a missing keyframe, or an out-of-range
+    /// index.  State is untouched on failure.
+    pub fn apply_delta(&mut self, seq: u32, geom: BlockGeom,
+                       updates: &[(u32, f32)]) -> Result<()> {
+        if !self.synced {
+            bail!("stream not synced: keyframe required");
+        }
+        if self.geom != Some(geom) {
+            self.synced = false;
+            bail!("stream geometry changed without a keyframe");
+        }
+        if seq != self.next_seq {
+            self.synced = false;
+            bail!("stream gap: got seq {seq}, expected {}", self.next_seq);
+        }
+        if let Some(&(i, _)) =
+            updates.iter().find(|&&(i, _)| i as usize >= self.state.len()) {
+            self.synced = false;
+            bail!("update index {i} out of range ({} coefficients)",
+                  self.state.len());
+        }
+        for &(i, v) in updates {
+            self.state[i as usize] = v;
+        }
+        self.next_seq = self.next_seq.wrapping_add(1);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::fourier::FourierCodec;
+    use crate::codec::{rel_error, Codec};
+    use crate::util::rng::Rng;
+
+    const GEOM: BlockGeom = BlockGeom { rows: 16, cols: 32, ks: 5, kd: 7 };
+
+    fn rand_packed(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn first_frame_is_keyframe_and_roundtrips() {
+        let mut enc = StreamEncoder::new(StreamConfig::default());
+        let mut dec = StreamDecoder::new();
+        let mut eng = CodecEngine::new();
+        let mut out = StreamStep::default();
+        let p = rand_packed(35, 1);
+        enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+        assert!(out.keyframe);
+        assert_eq!(out.seq, 0);
+        assert_eq!(out.packed, p);
+        dec.apply_key(out.seq, GEOM, &out.packed).unwrap();
+        assert_eq!(bits(dec.block()), bits(&p));
+        assert_eq!(dec.next_seq(), 1);
+    }
+
+    #[test]
+    fn unchanged_block_yields_empty_delta() {
+        let mut enc = StreamEncoder::new(StreamConfig {
+            keyframe_interval: 64,
+            drift_threshold: 0.05,
+        });
+        let mut eng = CodecEngine::new();
+        let mut out = StreamStep::default();
+        let p = rand_packed(35, 2);
+        enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+        assert!(out.keyframe);
+        enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+        assert!(!out.keyframe);
+        assert!(out.updates.is_empty());
+        assert_eq!(out.seq, 1);
+        assert_eq!(out.body_bytes(), 4);
+    }
+
+    #[test]
+    fn threshold_zero_deltas_are_exact() {
+        let mut enc = StreamEncoder::new(StreamConfig {
+            keyframe_interval: 1024,
+            drift_threshold: 0.0,
+        });
+        let mut dec = StreamDecoder::new();
+        let mut eng = CodecEngine::new();
+        let mut out = StreamStep::default();
+        let mut rng = Rng::new(3);
+        let mut p = rand_packed(35, 4);
+        for step in 0..20u32 {
+            if step > 0 {
+                // sparse mutation: two coefficients move per step
+                for _ in 0..2 {
+                    let i = rng.below(p.len());
+                    p[i] = rng.normal() as f32;
+                }
+            }
+            enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+            if out.keyframe {
+                dec.apply_key(out.seq, GEOM, &out.packed).unwrap();
+            } else {
+                assert!(out.updates.len() <= 2, "step {step}");
+                dec.apply_delta(out.seq, GEOM, &out.updates).unwrap();
+            }
+            // zero threshold: decoder state tracks the truth bit for bit
+            assert_eq!(bits(dec.block()), bits(&p), "step {step}");
+        }
+    }
+
+    #[test]
+    fn keyframe_interval_forced() {
+        let mut enc = StreamEncoder::new(StreamConfig {
+            keyframe_interval: 4,
+            drift_threshold: 0.05,
+        });
+        let mut eng = CodecEngine::new();
+        let mut out = StreamStep::default();
+        let p = rand_packed(35, 5);
+        let mut kinds = Vec::new();
+        for _ in 0..9 {
+            enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+            kinds.push(out.keyframe);
+        }
+        assert_eq!(kinds, vec![true, false, false, false, true, false, false,
+                               false, true]);
+    }
+
+    #[test]
+    fn geometry_change_forces_keyframe() {
+        let mut enc = StreamEncoder::new(StreamConfig {
+            keyframe_interval: 64,
+            drift_threshold: 0.05,
+        });
+        let mut eng = CodecEngine::new();
+        let mut out = StreamStep::default();
+        let p = rand_packed(35, 6);
+        enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+        enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+        assert!(!out.keyframe);
+        // bucket promotion: 16 -> 32 rows
+        let g2 = BlockGeom { rows: 32, cols: 32, ks: 5, kd: 7 };
+        enc.encode_into(&mut eng, g2, &p, &mut out).unwrap();
+        assert!(out.keyframe, "geometry change must resync");
+        // and returning to the old geometry resyncs again
+        enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+        assert!(out.keyframe);
+    }
+
+    #[test]
+    fn dense_change_falls_back_to_keyframe() {
+        let mut enc = StreamEncoder::new(StreamConfig {
+            keyframe_interval: 64,
+            drift_threshold: 0.0,
+        });
+        let mut eng = CodecEngine::new();
+        let mut out = StreamStep::default();
+        let p = rand_packed(35, 7);
+        enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+        // every coefficient moves: a delta would cost 8 bytes per
+        // coefficient vs the keyframe's 4 — must fall back
+        let p2 = rand_packed(35, 8);
+        enc.encode_into(&mut eng, GEOM, &p2, &mut out).unwrap();
+        assert!(out.keyframe);
+        assert_eq!(out.packed, p2);
+    }
+
+    #[test]
+    fn drift_threshold_bounds_reconstruction_error() {
+        // Parseval: the mirror-weighted spectral drift equals the
+        // relative error between the reconstructions of the stale and
+        // the true block — the property that makes drift_threshold a
+        // reconstruction-error bound
+        let thr = 0.3;
+        let mut enc = StreamEncoder::new(StreamConfig {
+            keyframe_interval: 1024,
+            drift_threshold: thr,
+        });
+        let mut dec = StreamDecoder::new();
+        let mut eng = CodecEngine::new();
+        let mut out = StreamStep::default();
+        let codec = FourierCodec::default();
+        let mut rng = Rng::new(9);
+        let mut p = rand_packed(35, 10);
+        enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+        dec.apply_key(out.seq, GEOM, &out.packed).unwrap();
+        for step in 0..16 {
+            for _ in 0..4 {
+                let i = rng.below(p.len());
+                p[i] += 0.4 * rng.normal() as f32;
+            }
+            enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+            if out.keyframe {
+                // dense-change fallback: exact, so trivially in bound
+                dec.apply_key(out.seq, GEOM, &out.packed).unwrap();
+            } else {
+                dec.apply_delta(out.seq, GEOM, &out.updates).unwrap();
+            }
+            let want = codec.decompress(&fc_payload(GEOM, &p)).unwrap();
+            let got = codec.decompress(&fc_payload(GEOM, dec.block())).unwrap();
+            let err = rel_error(&want, &got);
+            assert!(err <= thr * 1.01 + 1e-6, "step {step}: drift {err}");
+        }
+    }
+
+    #[test]
+    fn gap_rejected_until_keyframe() {
+        let mut enc = StreamEncoder::new(StreamConfig {
+            keyframe_interval: 1024,
+            drift_threshold: 0.0,
+        });
+        let mut dec = StreamDecoder::new();
+        let mut eng = CodecEngine::new();
+        let mut out = StreamStep::default();
+        let mut p = rand_packed(35, 11);
+        enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+        dec.apply_key(out.seq, GEOM, &out.packed).unwrap();
+        // frame 1 encoded but DROPPED on the wire
+        p[3] = 9.0;
+        enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+        assert!(!out.keyframe);
+        // frame 2 arrives: sequence gap -> hard fail, desync
+        p[4] = -9.0;
+        enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+        assert!(dec.apply_delta(out.seq, GEOM, &out.updates).is_err());
+        assert!(!dec.is_synced());
+        // further deltas refused until a keyframe
+        p[5] = 1.5;
+        enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+        assert!(dec.apply_delta(out.seq, GEOM, &out.updates).is_err());
+        // resync: keyframe recovers byte-identical state
+        enc.force_keyframe();
+        p[6] = 2.5;
+        enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+        assert!(out.keyframe);
+        dec.apply_key(out.seq, GEOM, &out.packed).unwrap();
+        assert_eq!(bits(dec.block()), bits(&p));
+        // and the stream continues
+        p[7] = -2.5;
+        enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+        assert!(!out.keyframe);
+        dec.apply_delta(out.seq, GEOM, &out.updates).unwrap();
+        assert_eq!(bits(dec.block()), bits(&p));
+    }
+
+    #[test]
+    fn decoder_rejects_bad_inputs() {
+        let mut dec = StreamDecoder::new();
+        // delta before any keyframe
+        assert!(dec.apply_delta(0, GEOM, &[]).is_err());
+        // keyframe with the wrong float count
+        assert!(dec.apply_key(0, GEOM, &[0.0; 7]).is_err());
+        // keyframe with invalid geometry (even, non-full axis)
+        let bad = BlockGeom { rows: 16, cols: 32, ks: 4, kd: 7 };
+        assert!(dec.apply_key(0, bad, &[0.0; 28]).is_err());
+        // out-of-range update index desyncs
+        dec.apply_key(0, GEOM, &[0.0; 35]).unwrap();
+        assert!(dec.apply_delta(1, GEOM, &[(35, 1.0)]).is_err());
+        assert!(!dec.is_synced());
+    }
+
+    #[test]
+    fn mirror_weights_match_packed_energy() {
+        // weighted packed energy must equal the full kept-block
+        // spectral energy (both coefficient and mirror)
+        use crate::codec::{freq_indices, rand_act};
+        use crate::dsp::fft2d::fft2_real;
+        use crate::tensor::MatView;
+        let (g, seed) = (GEOM, 13u64);
+        let a = rand_act(g.rows, g.cols, seed);
+        let spec = fft2_real(MatView::new(&a, g.rows, g.cols));
+        let ui = freq_indices(g.rows, g.ks);
+        let vi = freq_indices(g.cols, g.kd);
+        let mut full = 0.0f64;
+        for &u in &ui {
+            for &v in &vi {
+                full += spec[u * g.cols + v].norm_sq();
+            }
+        }
+        let mut re = vec![0.0f32; g.ks * g.kd];
+        let mut im = vec![0.0f32; g.ks * g.kd];
+        for (i, &u) in ui.iter().enumerate() {
+            for (j, &v) in vi.iter().enumerate() {
+                re[i * g.kd + j] = spec[u * g.cols + v].re as f32;
+                im[i * g.kd + j] = spec[u * g.cols + v].im as f32;
+            }
+        }
+        let packed = crate::codec::fourier::pack_block(&re, &im, g.rows,
+                                                       g.cols, g.ks, g.kd);
+        let mut eng = CodecEngine::new();
+        let mut w = Vec::new();
+        mirror_weights(&mut eng, g, &mut w);
+        assert_eq!(w.len(), packed.len());
+        let weighted: f64 = packed
+            .iter()
+            .zip(&w)
+            .map(|(&p, &wt)| wt as f64 * p as f64 * p as f64)
+            .sum();
+        let rel = (weighted - full).abs() / full.max(1e-30);
+        assert!(rel < 1e-5, "weighted {weighted} vs full {full}");
+    }
+}

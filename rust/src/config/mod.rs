@@ -99,6 +99,12 @@ pub struct SimConfig {
     pub hidden: usize,
     /// Compression ratio for the FC arm (payload divider).
     pub fc_ratio: f64,
+    /// `Arm::FcStream`: decode steps between forced keyframes.
+    pub stream_keyframe_interval: usize,
+    /// `Arm::FcStream`: fraction of the block's coefficients a delta
+    /// step retransmits (at 8 wire bytes each — u32 index + f32
+    /// value; see `sim::bytes_per_step`).
+    pub stream_delta_fill: f64,
     /// Per-token server compute time on one unit (s).
     pub service_per_token_s: f64,
     /// Simulated duration (s).
@@ -117,6 +123,8 @@ impl Default for SimConfig {
             prompt_tokens: 32,
             hidden: 2048,
             fc_ratio: 10.3,
+            stream_keyframe_interval: 32,
+            stream_delta_fill: 0.05,
             // calibrated so a fully-batched 8-unit server is NOT the
             // bottleneck below ~2000 clients (Fig 7b); the 1-unit
             // regime (Fig 7a) overrides this to 4e-3 (unbatched
@@ -281,6 +289,10 @@ impl FromJson for SimConfig {
         self.prompt_tokens = j.usize_or("prompt_tokens", self.prompt_tokens);
         self.hidden = j.usize_or("hidden", self.hidden);
         self.fc_ratio = j.f64_or("fc_ratio", self.fc_ratio);
+        self.stream_keyframe_interval =
+            j.usize_or("stream_keyframe_interval", self.stream_keyframe_interval);
+        self.stream_delta_fill =
+            j.f64_or("stream_delta_fill", self.stream_delta_fill);
         self.service_per_token_s =
             j.f64_or("service_per_token_s", self.service_per_token_s);
         self.horizon_s = j.f64_or("horizon_s", self.horizon_s);
@@ -298,6 +310,9 @@ impl FromJson for SimConfig {
             "prompt_tokens" => self.prompt_tokens = value.parse()?,
             "hidden" => self.hidden = value.parse()?,
             "fc_ratio" => self.fc_ratio = value.parse()?,
+            "stream_keyframe_interval" =>
+                self.stream_keyframe_interval = value.parse()?,
+            "stream_delta_fill" => self.stream_delta_fill = value.parse()?,
             "service_per_token_s" => self.service_per_token_s = value.parse()?,
             "horizon_s" => self.horizon_s = value.parse()?,
             "seed" => self.seed = value.parse()?,
@@ -315,6 +330,12 @@ impl FromJson for SimConfig {
         }
         if self.horizon_s <= 0.0 {
             bail!("horizon_s must be positive");
+        }
+        if self.stream_keyframe_interval == 0 {
+            bail!("stream_keyframe_interval must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&self.stream_delta_fill) {
+            bail!("stream_delta_fill must be in [0, 1]");
         }
         Ok(())
     }

@@ -1,12 +1,17 @@
 //! The device-side client: runs the fused client HLO (embed + layer 1
 //! + pallas FC compress) locally, packs the block with conjugate
 //! symmetry, ships it through the (optionally bandwidth-shaped)
-//! channel, and drives autoregressive generation in the paper's
-//! recompute regime — every new token re-sends the grown prompt's
-//! compressed activation.
+//! channel, and drives autoregressive generation — either in the
+//! paper's recompute regime (every token re-sends the grown prompt's
+//! compressed activation) or, with [`DeviceClient::enable_stream`],
+//! through the spectral delta stream (`codec::stream`): keyframes on
+//! bucket promotion / cadence, sparse coefficient deltas otherwise,
+//! and a transparent keyframe resync when the server reports lost
+//! stream state.
 
 use super::protocol::Frame;
 use crate::codec::fourier::pack_block_into;
+use crate::codec::stream::{BlockGeom, StreamConfig, StreamEncoder, StreamStep};
 use crate::codec::CodecEngine;
 use crate::model::tokenizer;
 use crate::model::weights::Weights;
@@ -42,6 +47,12 @@ pub struct DeviceClient {
     /// Reusable packed-coefficient buffer (moved into the Activation
     /// frame for the send, then recovered).
     packed_scratch: Vec<f32>,
+    /// Stream mode: the session-stateful delta encoder (None =
+    /// recompute regime, the default).
+    encoder: Option<StreamEncoder>,
+    /// Reusable stream-frame buffers (moved into the Delta frame for
+    /// the send, then recovered).
+    step_scratch: StreamStep,
     pub stats: ClientStats,
 }
 
@@ -52,6 +63,11 @@ pub struct ClientStats {
     pub bytes_uncompressed: u64,
     pub client_compute_us: u64,
     pub round_trip_us: Vec<u64>,
+    /// Stream mode: keyframes / delta frames sent, and keyframe
+    /// resyncs after a server-side stream rejection.
+    pub key_frames: u64,
+    pub delta_frames: u64,
+    pub resyncs: u64,
 }
 
 impl ClientStats {
@@ -119,6 +135,8 @@ impl DeviceClient {
             next_request: 1,
             engine,
             packed_scratch: Vec::new(),
+            encoder: None,
+            step_scratch: StreamStep::default(),
             stats: ClientStats::default(),
         };
         client.send(&Frame::Hello { session, model })?;
@@ -144,6 +162,18 @@ impl DeviceClient {
         self.buckets.keys().copied().find(|&b| b >= len)
     }
 
+    /// Switch this session to the spectral delta stream: subsequent
+    /// steps send keyframes/deltas (`Frame::Delta`) instead of full
+    /// Activation frames.  Enabling mid-generation is safe — the
+    /// fresh encoder's first frame is a keyframe.
+    pub fn enable_stream(&mut self, cfg: StreamConfig) {
+        self.encoder = Some(StreamEncoder::new(cfg));
+    }
+
+    pub fn stream_enabled(&self) -> bool {
+        self.encoder.is_some()
+    }
+
     /// One decode step: compress the current context, send, await token.
     pub fn step(&mut self, context: &[i32]) -> Result<(i32, f32)> {
         let len = context.len();
@@ -167,25 +197,37 @@ impl DeviceClient {
         let request = self.next_request;
         self.next_request += 1;
         let t1 = Instant::now();
-        let frame = Frame::Activation {
-            session: self.session,
-            request,
-            bucket: bucket as u16,
-            true_len: len as u16,
-            ks: ks as u16,
-            kd: kd as u16,
-            packed,
-        };
-        self.send(&frame)?;
-        // recover the coefficient buffer so the next step reuses it
-        if let Frame::Activation { packed, .. } = frame {
+        let reply = if self.encoder.is_some() {
+            let r = self.stream_step(request, bucket, len, ks, kd, &packed);
             self.packed_scratch = packed;
-        }
-        self.stats.requests += 1;
+            r?
+        } else {
+            let frame = Frame::Activation {
+                session: self.session,
+                request,
+                bucket: bucket as u16,
+                true_len: len as u16,
+                ks: ks as u16,
+                kd: kd as u16,
+                packed,
+            };
+            self.send(&frame)?;
+            // recover the coefficient buffer so the next step reuses it
+            if let Frame::Activation { packed, .. } = frame {
+                self.packed_scratch = packed;
+            }
+            self.stats.requests += 1;
+            self.await_token(request)?
+        };
+        self.stats.round_trip_us.push(t1.elapsed().as_micros() as u64);
+        Ok(reply)
+    }
+
+    /// Wait for this request's Token, skipping stale replies.
+    fn await_token(&mut self, request: u64) -> Result<(i32, f32)> {
         loop {
             match self.recv()? {
                 Frame::Token { request: r, token, logprob } if r == request => {
-                    self.stats.round_trip_us.push(t1.elapsed().as_micros() as u64);
                     return Ok((token, logprob));
                 }
                 Frame::Token { .. } => continue, // stale reply
@@ -193,6 +235,74 @@ impl DeviceClient {
                 other => bail!("unexpected frame {}", other.type_id()),
             }
         }
+    }
+
+    /// One stream-mode send: encode the packed block as a keyframe or
+    /// delta against the per-session encoder state.  If the server
+    /// rejects a delta (stream state TTL-evicted, sequence gap), force
+    /// a keyframe carrying the same activation and retry once — the
+    /// resync protocol.
+    fn stream_step(&mut self, request: u64, bucket: usize, len: usize,
+                   ks: usize, kd: usize, packed: &[f32]) -> Result<(i32, f32)> {
+        let geom = BlockGeom { rows: bucket, cols: self.d_model, ks, kd };
+        let mut counted = false;
+        for attempt in 0..2 {
+            {
+                let enc = self.encoder.as_mut().expect("stream mode");
+                enc.encode_into(&mut self.engine, geom, packed,
+                                &mut self.step_scratch)?;
+            }
+            let keyframe = self.step_scratch.keyframe;
+            if keyframe {
+                self.stats.key_frames += 1;
+            } else {
+                self.stats.delta_frames += 1;
+            }
+            let frame = Frame::Delta {
+                session: self.session,
+                request,
+                seq: self.step_scratch.seq,
+                keyframe,
+                bucket: bucket as u16,
+                true_len: len as u16,
+                ks: ks as u16,
+                kd: kd as u16,
+                packed: std::mem::take(&mut self.step_scratch.packed),
+                updates: std::mem::take(&mut self.step_scratch.updates),
+            };
+            self.send(&frame)?;
+            // recover the frame buffers so the next step reuses them
+            if let Frame::Delta { packed, updates, .. } = frame {
+                self.step_scratch.packed = packed;
+                self.step_scratch.updates = updates;
+            }
+            if !counted {
+                self.stats.requests += 1;
+                counted = true;
+            }
+            loop {
+                match self.recv()? {
+                    Frame::Token { request: r, token, logprob }
+                        if r == request => {
+                        return Ok((token, logprob));
+                    }
+                    Frame::Token { .. } => continue, // stale reply
+                    Frame::Error { msg } if !keyframe && attempt == 0 => {
+                        // the server lost the stream state (TTL
+                        // eviction, restart) or saw a gap: resync with
+                        // a keyframe carrying the same activation
+                        crate::debug!("client", "stream resync: {msg}");
+                        self.stats.resyncs += 1;
+                        self.encoder.as_mut().expect("stream mode")
+                            .force_keyframe();
+                        break;
+                    }
+                    Frame::Error { msg } => bail!("server error: {msg}"),
+                    other => bail!("unexpected frame {}", other.type_id()),
+                }
+            }
+        }
+        bail!("stream resync failed: keyframe rejected")
     }
 
     /// Autoregressive generation (recompute regime).

@@ -13,6 +13,14 @@ pub struct Metrics {
     pub batch_size_sum: AtomicU64,
     pub bytes_rx: AtomicU64,
     pub bytes_tx: AtomicU64,
+    /// Spectral stream split: keyframe vs delta frames and their wire
+    /// bytes (both also counted in `bytes_rx`), plus rejected frames
+    /// (sequence gap / evicted state → client keyframe resync).
+    pub key_frames: AtomicU64,
+    pub delta_frames: AtomicU64,
+    pub key_bytes_rx: AtomicU64,
+    pub delta_bytes_rx: AtomicU64,
+    pub stream_rejects: AtomicU64,
     pub queue_wait_us: Histogram,
     pub decompress_us: Histogram,
     pub exec_us: Histogram,
@@ -42,6 +50,11 @@ impl Metrics {
         j.set("mean_batch_size", Json::Num(self.mean_batch_size()));
         j.set("bytes_rx", g(&self.bytes_rx));
         j.set("bytes_tx", g(&self.bytes_tx));
+        j.set("key_frames", g(&self.key_frames));
+        j.set("delta_frames", g(&self.delta_frames));
+        j.set("key_bytes_rx", g(&self.key_bytes_rx));
+        j.set("delta_bytes_rx", g(&self.delta_bytes_rx));
+        j.set("stream_rejects", g(&self.stream_rejects));
         for (name, h) in [("queue_wait_us", &self.queue_wait_us),
                           ("decompress_us", &self.decompress_us),
                           ("exec_us", &self.exec_us),
@@ -70,9 +83,14 @@ mod tests {
         m.batches.fetch_add(2, Ordering::Relaxed);
         m.batch_size_sum.fetch_add(5, Ordering::Relaxed);
         m.e2e_us.record_us(1000);
+        m.key_frames.fetch_add(1, Ordering::Relaxed);
+        m.delta_bytes_rx.fetch_add(64, Ordering::Relaxed);
         let j = m.to_json();
         assert_eq!(j.usize_or("requests", 0), 3);
         assert!((j.f64_or("mean_batch_size", 0.0) - 2.5).abs() < 1e-9);
         assert_eq!(j.path("e2e_us.count").unwrap().as_usize(), Some(1));
+        assert_eq!(j.usize_or("key_frames", 0), 1);
+        assert_eq!(j.usize_or("delta_bytes_rx", 0), 64);
+        assert_eq!(j.usize_or("stream_rejects", 9), 0);
     }
 }

@@ -11,11 +11,27 @@
 //!   Stats      s→c  u32 json_len | json
 //!   Error      s→c  u16 msg_len | msg
 //!   Bye        c→s  (empty)
+//!   Delta      c→s  u64 session | u64 request | u32 seq | u8 keyframe
+//!                   | u16 bucket | u16 true_len | u16 ks | u16 kd
+//!                   | keyframe=1: f32 packed[·]   (full block)
+//!                   | keyframe=0: u32 count | (u32 idx | f32 val)[count]
+//!
+//! `Delta` is the spectral stream's frame (`codec::stream`): `seq` is
+//! the per-session stream sequence number and `keyframe` selects
+//! between a full conjugate-symmetric block and sparse coefficient
+//! updates into it.  The server keeps per-session decoder state and
+//! hard-fails deltas that arrive out of sequence.
 
 use anyhow::{bail, ensure, Result};
 use std::io::{Read, Write};
 
 pub const MAX_FRAME: usize = 64 << 20;
+
+/// Body-header bytes of a `Delta` frame (session + request + seq +
+/// keyframe flag + bucket + true_len + ks + kd) — the stream
+/// counterpart of the Activation frame's 24-byte header, used by the
+/// wire-byte accounting.
+pub const STREAM_HEADER_BYTES: usize = 29;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
@@ -34,6 +50,22 @@ pub enum Frame {
     Stats { json: String },
     Error { msg: String },
     Bye,
+    /// Spectral stream frame: a keyframe carries the full packed
+    /// block in `packed` (and `updates` is empty); a delta carries
+    /// sparse `(index, value)` coefficient updates (and `packed` is
+    /// empty).
+    Delta {
+        session: u64,
+        request: u64,
+        seq: u32,
+        keyframe: bool,
+        bucket: u16,
+        true_len: u16,
+        ks: u16,
+        kd: u16,
+        packed: Vec<f32>,
+        updates: Vec<(u32, f32)>,
+    },
 }
 
 impl Frame {
@@ -46,6 +78,7 @@ impl Frame {
             Frame::Stats { .. } => 4,
             Frame::Error { .. } => 5,
             Frame::Bye => 6,
+            Frame::Delta { .. } => 7,
         }
     }
 
@@ -82,6 +115,28 @@ impl Frame {
             Frame::Error { msg } => {
                 b.extend_from_slice(&(msg.len() as u16).to_le_bytes());
                 b.extend_from_slice(msg.as_bytes());
+            }
+            Frame::Delta { session, request, seq, keyframe, bucket, true_len,
+                           ks, kd, packed, updates } => {
+                b.extend_from_slice(&session.to_le_bytes());
+                b.extend_from_slice(&request.to_le_bytes());
+                b.extend_from_slice(&seq.to_le_bytes());
+                b.push(*keyframe as u8);
+                b.extend_from_slice(&bucket.to_le_bytes());
+                b.extend_from_slice(&true_len.to_le_bytes());
+                b.extend_from_slice(&ks.to_le_bytes());
+                b.extend_from_slice(&kd.to_le_bytes());
+                if *keyframe {
+                    for v in packed {
+                        b.extend_from_slice(&v.to_le_bytes());
+                    }
+                } else {
+                    b.extend_from_slice(&(updates.len() as u32).to_le_bytes());
+                    for (i, v) in updates {
+                        b.extend_from_slice(&i.to_le_bytes());
+                        b.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
             }
         }
         let mut out = Vec::with_capacity(5 + b.len());
@@ -133,6 +188,41 @@ impl Frame {
                 Frame::Error { msg: String::from_utf8(r.take(n)?.to_vec())? }
             }
             6 => Frame::Bye,
+            7 => {
+                let session = u64_of(&mut r)?;
+                let request = u64_of(&mut r)?;
+                let seq = r.u32()?;
+                let kf = r.byte()?;
+                ensure!(kf <= 1, "bad keyframe flag {kf}");
+                let keyframe = kf == 1;
+                let bucket = r.u16()?;
+                let true_len = r.u16()?;
+                let ks = r.u16()?;
+                let kd = r.u16()?;
+                let (packed, updates) = if keyframe {
+                    let mut p = Vec::with_capacity(r.remaining() / 4);
+                    while r.remaining() >= 4 {
+                        p.push(r.f32()?);
+                    }
+                    ensure!(r.remaining() == 0,
+                            "keyframe body not f32-aligned ({} stray bytes)",
+                            r.remaining());
+                    (p, Vec::new())
+                } else {
+                    let n = r.u32()? as usize;
+                    let mut u = Vec::with_capacity(n.min(r.remaining() / 8));
+                    for _ in 0..n {
+                        let i = r.u32()?;
+                        let v = r.f32()?;
+                        u.push((i, v));
+                    }
+                    ensure!(r.remaining() == 0,
+                            "trailing delta bytes ({})", r.remaining());
+                    (Vec::new(), u)
+                };
+                Frame::Delta { session, request, seq, keyframe, bucket,
+                               true_len, ks, kd, packed, updates }
+            }
             t => bail!("unknown frame type {t}"),
         })
     }
@@ -184,6 +274,21 @@ mod tests {
         roundtrip(Frame::Stats { json: r#"{"n": 3}"#.into() });
         roundtrip(Frame::Error { msg: "bad bucket".into() });
         roundtrip(Frame::Bye);
+        roundtrip(Frame::Delta {
+            session: 3, request: 9, seq: 4, keyframe: true, bucket: 16,
+            true_len: 12, ks: 5, kd: 3, packed: vec![0.5; 15],
+            updates: vec![],
+        });
+        roundtrip(Frame::Delta {
+            session: 3, request: 10, seq: 5, keyframe: false, bucket: 16,
+            true_len: 13, ks: 5, kd: 3, packed: vec![],
+            updates: vec![(0, 1.0), (7, -2.5), (14, 0.125)],
+        });
+        // empty delta: the "nothing drifted" frame is legal and tiny
+        roundtrip(Frame::Delta {
+            session: 3, request: 11, seq: 6, keyframe: false, bucket: 16,
+            true_len: 13, ks: 5, kd: 3, packed: vec![], updates: vec![],
+        });
     }
 
     #[test]
@@ -213,6 +318,16 @@ mod tests {
             Frame::Stats { json: r#"{"n": 3}"#.into() },
             Frame::Error { msg: "bad bucket".into() },
             Frame::Bye,
+            Frame::Delta {
+                session: 1, request: 43, seq: 2, keyframe: true, bucket: 32,
+                true_len: 29, ks: 3, kd: 3, packed: vec![1.0; 9],
+                updates: vec![],
+            },
+            Frame::Delta {
+                session: 1, request: 44, seq: 3, keyframe: false, bucket: 32,
+                true_len: 30, ks: 3, kd: 3, packed: vec![],
+                updates: vec![(2, 0.5), (8, -1.0)],
+            },
         ]
     }
 
@@ -264,6 +379,64 @@ mod tests {
     fn empty_stream_is_clean_eof_error() {
         let mut cur = std::io::Cursor::new(Vec::<u8>::new());
         assert!(Frame::read_from(&mut cur).is_err());
+    }
+
+    #[test]
+    fn delta_decode_rejections() {
+        // bad keyframe flag
+        let f = Frame::Delta {
+            session: 1, request: 2, seq: 0, keyframe: false, bucket: 16,
+            true_len: 8, ks: 3, kd: 3, packed: vec![], updates: vec![(1, 2.0)],
+        };
+        let enc = f.encode();
+        let mut body = enc[5..].to_vec();
+        body[20] = 2; // keyframe flag offset: 8 + 8 + 4
+        assert!(Frame::decode(7, &body).is_err());
+
+        // keyframe with a partial trailing float
+        let kf = Frame::Delta {
+            session: 1, request: 2, seq: 0, keyframe: true, bucket: 16,
+            true_len: 8, ks: 3, kd: 3, packed: vec![1.0; 9], updates: vec![],
+        };
+        let mut kenc = kf.encode();
+        kenc.extend_from_slice(&[0xAA, 0xBB]);
+        let body_len = (kenc.len() - 5) as u32;
+        kenc[..4].copy_from_slice(&body_len.to_le_bytes());
+        let mut cur = std::io::Cursor::new(kenc);
+        assert!(Frame::read_from(&mut cur).is_err());
+
+        // delta whose count promises more updates than the body holds
+        let d = Frame::Delta {
+            session: 1, request: 2, seq: 0, keyframe: false, bucket: 16,
+            true_len: 8, ks: 3, kd: 3, packed: vec![],
+            updates: vec![(1, 2.0), (3, 4.0)],
+        };
+        let denc = d.encode();
+        let mut dbody = denc[5..].to_vec();
+        dbody[29] = 3; // count offset: STREAM_HEADER_BYTES
+        assert!(Frame::decode(7, &dbody).is_err());
+        // ...and trailing bytes after the promised updates
+        let mut tbody = denc[5..].to_vec();
+        tbody[29] = 1;
+        assert!(Frame::decode(7, &tbody).is_err());
+    }
+
+    #[test]
+    fn delta_wire_bytes_accounting() {
+        // keyframe: header + 4 bytes per packed float
+        let kf = Frame::Delta {
+            session: 0, request: 0, seq: 1, keyframe: true, bucket: 64,
+            true_len: 64, ks: 33, kd: 15, packed: vec![0.0; 33 * 15],
+            updates: vec![],
+        };
+        assert_eq!(kf.encode().len(), 5 + STREAM_HEADER_BYTES + 33 * 15 * 4);
+        // delta: header + count + 8 bytes per update
+        let d = Frame::Delta {
+            session: 0, request: 0, seq: 2, keyframe: false, bucket: 64,
+            true_len: 64, ks: 33, kd: 15, packed: vec![],
+            updates: vec![(0, 1.0); 7],
+        };
+        assert_eq!(d.encode().len(), 5 + STREAM_HEADER_BYTES + 4 + 7 * 8);
     }
 
     #[test]

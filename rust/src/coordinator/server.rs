@@ -6,9 +6,10 @@
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
-use super::protocol::Frame;
+use super::protocol::{Frame, STREAM_HEADER_BYTES};
 use super::session::SessionManager;
 use crate::codec::fourier::unpack_block_into;
+use crate::codec::stream::{BlockGeom, UPDATE_WIRE_BYTES};
 use crate::codec::CodecEngine;
 use crate::config::ServeConfig;
 use crate::model::weights::Weights;
@@ -326,6 +327,34 @@ impl EdgeServer {
     }
 }
 
+/// Apply one stream frame to the session's decoder (keyframe:
+/// re-admit + reseed; delta: live session + in-sequence only) and
+/// return a copy of the resulting packed block.  The caller holds the
+/// session lock for the whole operation so the decode state can never
+/// interleave with another frame of the same session; the copy keeps
+/// the critical section to the decoder apply — unpacking happens
+/// outside the lock, like the Activation path.  `body_bytes` is the
+/// codec-body size charged to the session (headerless, matching the
+/// Activation path's accounting).
+fn apply_stream_frame(sessions: &mut SessionManager, session: u64, seq: u32,
+                      keyframe: bool, geom: BlockGeom, body_bytes: u64,
+                      packed: &[f32], updates: &[(u32, f32)])
+    -> Result<Vec<f32>> {
+    let dec = if keyframe {
+        sessions.stream_key_decoder(session, body_bytes)
+            .ok_or_else(|| anyhow!("stream admission refused"))?
+    } else {
+        sessions.stream_delta_decoder(session, body_bytes)
+            .ok_or_else(|| anyhow!("stream state evicted; keyframe required"))?
+    };
+    if keyframe {
+        dec.apply_key(seq, geom, packed)?;
+    } else {
+        dec.apply_delta(seq, geom, updates)?;
+    }
+    Ok(dec.block().to_vec())
+}
+
 fn handle_conn(stream: TcpStream, breq_tx: mpsc::Sender<(usize, GroupItem)>,
                metrics: Arc<Metrics>, sessions: Arc<Mutex<SessionManager>>,
                model: Arc<ServingModel>) -> Result<()> {
@@ -413,6 +442,80 @@ fn handle_conn(stream: TcpStream, breq_tx: mpsc::Sender<(usize, GroupItem)>,
                     Err(e) => {
                         let _ = reply_tx.send(Frame::Error {
                             msg: format!("unpack: {e}") });
+                    }
+                }
+            }
+            Frame::Delta { session, request, seq, keyframe, bucket, true_len,
+                           ks, kd, packed, updates } => {
+                let t_rx = Instant::now();
+                metrics.requests.fetch_add(1, Ordering::Relaxed);
+                let body_bytes = if keyframe {
+                    packed.len() * 4
+                } else {
+                    4 + updates.len() * UPDATE_WIRE_BYTES
+                };
+                let wire = (body_bytes + STREAM_HEADER_BYTES) as u64;
+                metrics.bytes_rx.fetch_add(wire, Ordering::Relaxed);
+                if keyframe {
+                    metrics.key_frames.fetch_add(1, Ordering::Relaxed);
+                    metrics.key_bytes_rx.fetch_add(wire, Ordering::Relaxed);
+                } else {
+                    metrics.delta_frames.fetch_add(1, Ordering::Relaxed);
+                    metrics.delta_bytes_rx.fetch_add(wire, Ordering::Relaxed);
+                }
+                let bucket = bucket as usize;
+                let (bks, bkd) = match model.buckets.get(&bucket) {
+                    Some(bm) if bm.ks == ks as usize
+                        && bm.kd == kd as usize => (bm.ks, bm.kd),
+                    _ => {
+                        let _ = reply_tx.send(Frame::Error {
+                            msg: format!("bad bucket {bucket}/{ks}x{kd}") });
+                        continue;
+                    }
+                };
+                let geom = BlockGeom { rows: bucket, cols: model.d_model,
+                                       ks: bks, kd: bkd };
+                // apply the frame to the per-session decoder state
+                // under the session lock — any failure (gap, evicted
+                // state, admission) surfaces as an Error the client
+                // answers with a keyframe resync
+                let applied = {
+                    let mut guard = sessions.lock().unwrap();
+                    apply_stream_frame(&mut guard, session, seq, keyframe,
+                                       geom, body_bytes as u64, &packed,
+                                       &updates)
+                };
+                match applied {
+                    Ok(block) => {
+                        let t0 = Instant::now();
+                        let (mut re, mut im) = (Vec::new(), Vec::new());
+                        let unpacked = unpack_block_into(
+                            &mut engine, &block, bucket, model.d_model, bks,
+                            bkd, &mut re, &mut im);
+                        metrics.decompress_us.record(t0.elapsed());
+                        match unpacked {
+                            Ok(()) => {
+                                let item = GroupItem {
+                                    session, request,
+                                    true_len: true_len as usize,
+                                    re, im,
+                                    reply: reply_tx.clone(),
+                                    t_rx,
+                                };
+                                if breq_tx.send((bucket, item)).is_err() {
+                                    break;
+                                }
+                            }
+                            Err(e) => {
+                                let _ = reply_tx.send(Frame::Error {
+                                    msg: format!("unpack: {e}") });
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        metrics.stream_rejects.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply_tx.send(Frame::Error {
+                            msg: format!("stream: {e:#}") });
                     }
                 }
             }

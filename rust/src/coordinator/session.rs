@@ -1,8 +1,11 @@
 //! Session manager: per-client server-side state with TTL + LRU
-//! eviction.  In the paper's recompute regime the state is light
-//! (accounting + admission); the struct carries an optional opaque
-//! context slot so a KV-cache mode can hang per-session tensors here.
+//! eviction.  Sessions carry the server half of the spectral stream
+//! (`codec::stream::StreamDecoder`): a keyframe (re-)admits a session
+//! and reseeds its decoder; a delta requires a live, synced session —
+//! TTL eviction mid-stream therefore forces the client through a
+//! keyframe resync, never through silent state divergence.
 
+use crate::codec::stream::StreamDecoder;
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
@@ -14,6 +17,10 @@ pub struct Session {
     pub last_seen: Instant,
     pub requests: u64,
     pub bytes_rx: u64,
+    /// Per-session spectral stream decoder state (reset by every
+    /// keyframe); dropped with the session on eviction, which is what
+    /// makes eviction mid-stream safe.
+    pub stream: StreamDecoder,
 }
 
 pub struct SessionManager {
@@ -56,8 +63,50 @@ impl SessionManager {
                 last_seen: now,
                 requests: 0,
                 bytes_rx: 0,
+                stream: StreamDecoder::default(),
             });
         true
+    }
+
+    /// Decoder for a stream **keyframe**: (re-)admits the session
+    /// under the same TTL/LRU rules as [`SessionManager::hello`] and
+    /// records the request.  `None` means admission was refused (table
+    /// full of live sessions).
+    pub fn stream_key_decoder(&mut self, id: u64, bytes: u64)
+        -> Option<&mut StreamDecoder> {
+        if !self.hello(id, "") {
+            return None;
+        }
+        let s = self.sessions.get_mut(&id)?;
+        s.requests += 1;
+        s.bytes_rx += bytes;
+        Some(&mut s.stream)
+    }
+
+    /// Decoder for a stream **delta**: only for a live (non-expired)
+    /// session.  An expired session is evicted here and `None`
+    /// returned, which the protocol surfaces to the client as
+    /// "keyframe required" — the resync path.
+    pub fn stream_delta_decoder(&mut self, id: u64, bytes: u64)
+        -> Option<&mut StreamDecoder> {
+        let expired = self
+            .sessions
+            .get(&id)
+            .map(|s| s.last_seen.elapsed() >= self.ttl)
+            .unwrap_or(false);
+        if expired {
+            self.sessions.remove(&id);
+            return None;
+        }
+        let s = self.sessions.get_mut(&id)?;
+        s.last_seen = Instant::now();
+        s.requests += 1;
+        s.bytes_rx += bytes;
+        Some(&mut s.stream)
+    }
+
+    pub fn get(&self, id: u64) -> Option<&Session> {
+        self.sessions.get(&id)
     }
 
     /// Record a request; returns false for unknown sessions.
@@ -131,5 +180,66 @@ mod tests {
         assert!(m.hello(2, "x"));
         assert!(m.touch(2, 1));
         assert!(!m.touch(1, 1));
+    }
+
+    // -- stream-state lifecycle ------------------------------------------
+
+    use crate::codec::stream::BlockGeom;
+
+    const GEOM: BlockGeom = BlockGeom { rows: 4, cols: 8, ks: 1, kd: 3 };
+
+    #[test]
+    fn ttl_eviction_mid_stream_forces_keyframe_resync() {
+        let mut m = SessionManager::new(Duration::from_millis(10), 4);
+        assert!(m.hello(1, "x"));
+        let packed = vec![1.0f32, 2.0, 3.0];
+        m.stream_key_decoder(1, 12)
+            .unwrap()
+            .apply_key(0, GEOM, &packed)
+            .unwrap();
+        m.stream_delta_decoder(1, 8)
+            .unwrap()
+            .apply_delta(1, GEOM, &[(0, 5.0)])
+            .unwrap();
+        assert_eq!(m.get(1).unwrap().requests, 2);
+        assert_eq!(m.get(1).unwrap().bytes_rx, 20);
+
+        std::thread::sleep(Duration::from_millis(20));
+        // stream state expired mid-generation: the delta path refuses
+        // (and evicts) — the decoder state is gone, not stale
+        assert!(m.stream_delta_decoder(1, 8).is_none());
+        assert_eq!(m.len(), 0);
+        // the keyframe path re-admits and reseeds the decoder
+        let dec = m.stream_key_decoder(1, 12).unwrap();
+        dec.apply_key(7, GEOM, &packed).unwrap();
+        assert_eq!(dec.block(), &packed[..]);
+        assert!(m.touch(1, 1));
+    }
+
+    #[test]
+    fn stream_admission_under_max_sessions_pressure() {
+        let mut m = SessionManager::new(Duration::from_secs(60), 2);
+        assert!(m.hello(1, "x"));
+        assert!(m.hello(2, "x"));
+        // table full of live sessions: a new stream may not evict them
+        assert!(m.stream_key_decoder(3, 0).is_none());
+        assert_eq!(m.len(), 2);
+        // but existing sessions keep streaming (and keep their model)
+        assert!(m.stream_key_decoder(2, 0).is_some());
+        assert_eq!(m.get(2).unwrap().model, "x");
+    }
+
+    #[test]
+    fn touch_after_remove_is_refused() {
+        let mut m = SessionManager::new(Duration::from_secs(60), 4);
+        assert!(m.hello(5, "x"));
+        assert!(m.touch(5, 10));
+        m.remove(5);
+        assert!(!m.touch(5, 10));
+        assert!(m.stream_delta_decoder(5, 0).is_none());
+        assert!(m.get(5).is_none());
+        // a keyframe after removal re-admits from scratch
+        assert!(m.stream_key_decoder(5, 0).is_some());
+        assert!(!m.get(5).unwrap().stream.is_synced());
     }
 }

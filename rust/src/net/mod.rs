@@ -7,6 +7,13 @@
 
 use std::time::Duration;
 
+/// Serialisation chunk for [`Channel::throttle`]: shaped links sleep
+/// per chunk instead of one monolithic sleep, so a multi-MB transfer
+/// (a large-bucket keyframe, an uncompressed baseline) yields the
+/// thread repeatedly and interleaves with the other connections this
+/// process is shaping instead of parking for whole seconds.
+pub const THROTTLE_CHUNK_BYTES: usize = 256 * 1024;
+
 #[derive(Debug, Clone, Copy)]
 pub struct Channel {
     /// Link rate in bits per second (0 = unlimited).
@@ -37,11 +44,33 @@ impl Channel {
         ser + self.latency
     }
 
+    /// Number of per-chunk sleeps [`Channel::throttle`] performs for
+    /// `bytes` (0 for an unshaped link or an empty transfer).
+    pub fn throttle_chunks(&self, bytes: usize) -> usize {
+        if self.bits_per_sec <= 0.0 || bytes == 0 {
+            0
+        } else {
+            bytes.div_ceil(THROTTLE_CHUNK_BYTES)
+        }
+    }
+
     /// Sleep for the simulated transfer time (live-coordinator use).
+    /// Serialisation is slept in [`THROTTLE_CHUNK_BYTES`] chunks — the
+    /// total equals [`Channel::transfer_time`], but the thread wakes
+    /// between chunks so concurrent shaped connections interleave.
     pub fn throttle(&self, bytes: usize) {
-        let d = self.transfer_time(bytes);
-        if d > Duration::ZERO {
-            std::thread::sleep(d);
+        if self.latency > Duration::ZERO {
+            std::thread::sleep(self.latency);
+        }
+        if self.bits_per_sec <= 0.0 || bytes == 0 {
+            return;
+        }
+        let mut remaining = bytes;
+        while remaining > 0 {
+            let chunk = remaining.min(THROTTLE_CHUNK_BYTES);
+            std::thread::sleep(Duration::from_secs_f64(
+                chunk as f64 * 8.0 / self.bits_per_sec));
+            remaining -= chunk;
         }
     }
 }
@@ -76,5 +105,36 @@ mod tests {
         let b = 10_000_000usize;
         assert!(Channel::gbps(10.0, 0).transfer_time(b)
                 < Channel::gbps(1.0, 0).transfer_time(b));
+    }
+
+    #[test]
+    fn throttle_chunk_count() {
+        let ch = Channel::gbps(1.0, 0);
+        assert_eq!(ch.throttle_chunks(0), 0);
+        assert_eq!(ch.throttle_chunks(1), 1);
+        assert_eq!(ch.throttle_chunks(THROTTLE_CHUNK_BYTES), 1);
+        assert_eq!(ch.throttle_chunks(THROTTLE_CHUNK_BYTES + 1), 2);
+        // a 5 MiB transfer interleaves in 20 chunks rather than one
+        // monolithic sleep
+        assert_eq!(ch.throttle_chunks(5 * 1024 * 1024), 20);
+        // unshaped links never sleep for serialisation
+        assert_eq!(Channel::unlimited().throttle_chunks(1 << 30), 0);
+    }
+
+    #[test]
+    fn chunked_throttle_totals_transfer_time() {
+        // fast link so the test stays quick: 1 MiB at 1 Gbps ~ 8.4 ms,
+        // slept in 4 chunks
+        let ch = Channel::gbps(1.0, 0);
+        let bytes = 1024 * 1024;
+        assert_eq!(ch.throttle_chunks(bytes), 4);
+        let t0 = std::time::Instant::now();
+        ch.throttle(bytes);
+        let dt = t0.elapsed();
+        // 10us slack: per-chunk Duration rounding never exceeds it,
+        // while OS sleep overshoot keeps the real total above anyway
+        let floor = ch.transfer_time(bytes)
+            .saturating_sub(Duration::from_micros(10));
+        assert!(dt >= floor, "slept {dt:?} < modelled {floor:?}");
     }
 }

@@ -11,7 +11,9 @@
 
 pub mod des;
 
+use crate::codec::stream::UPDATE_WIRE_BYTES;
 use crate::config::SimConfig;
+use crate::coordinator::protocol::STREAM_HEADER_BYTES;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use des::{EventQueue, Resource};
@@ -22,6 +24,40 @@ pub enum Arm {
     Original,
     /// FourierCompress at `fc_ratio`
     Fc,
+    /// FourierCompress + spectral delta streaming (`codec::stream`):
+    /// keyframes every `stream_keyframe_interval` steps, sparse
+    /// coefficient deltas otherwise — the regime that removes the
+    /// recompute retransmission
+    FcStream,
+}
+
+/// Per-step uplink payload bytes for one decode step under `arm` —
+/// public so the benches and tests can audit the Fig-7 byte model
+/// against the real codec.
+///
+/// Recompute regimes (`Original`, `Fc`) retransmit the full
+/// (prompt + step)-token activation.  `FcStream` sends the same full
+/// block only on keyframes; a delta step carries
+/// `stream_delta_fill` of the block's coefficients at
+/// [`UPDATE_WIRE_BYTES`] each (u32 index + f32 value, i.e. 2x a
+/// keyframe float) plus the [`STREAM_HEADER_BYTES`] Delta frame
+/// header — the same constants the real wire format uses.
+pub fn bytes_per_step(cfg: &SimConfig, arm: Arm, step: usize) -> f64 {
+    let toks = cfg.prompt_tokens + step;
+    let raw = (toks * cfg.hidden * 4) as f64;
+    match arm {
+        Arm::Original => raw,
+        Arm::Fc => raw / cfg.fc_ratio,
+        Arm::FcStream => {
+            let key = raw / cfg.fc_ratio;
+            if step % cfg.stream_keyframe_interval.max(1) == 0 {
+                key
+            } else {
+                key * cfg.stream_delta_fill * (UPDATE_WIRE_BYTES as f64 / 4.0)
+                    + STREAM_HEADER_BYTES as f64
+            }
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -40,26 +76,23 @@ pub fn simulate(cfg: &SimConfig, clients: usize, link_gbps: f64, arm: Arm)
     -> RunStats {
     let mut rng = Rng::new(cfg.seed ^ (clients as u64) << 8
                            ^ (link_gbps as u64) << 24
-                           ^ if arm == Arm::Fc { 1 } else { 0 });
+                           ^ match arm {
+                               Arm::Original => 0,
+                               Arm::Fc => 1,
+                               Arm::FcStream => 2,
+                           });
     let mut q = EventQueue::new();
     let mut link = Resource::new(1);
     let mut server = Resource::new(cfg.compute_units);
 
-    // per-step activation bytes: recompute regime — step t transmits
-    // the full (prompt + t tokens) × hidden fp32 activation
-    let bytes_at = |step: usize| -> f64 {
-        let toks = cfg.prompt_tokens + step;
-        let raw = (toks * cfg.hidden * 4) as f64;
-        match arm {
-            Arm::Original => raw,
-            Arm::Fc => raw / cfg.fc_ratio,
-        }
-    };
+    // per-step activation bytes — see `bytes_per_step` for the three
+    // regimes (full recompute, FC recompute, FC delta stream)
+    let bytes_at = |step: usize| -> f64 { bytes_per_step(cfg, arm, step) };
     // compression cost on the device (hardware-accelerated FC is
     // sub-ms; it shows up in Fig 6, not here, but we keep it honest)
     let compress_s = match arm {
         Arm::Original => 0.0,
-        Arm::Fc => 1.0e-4,
+        Arm::Fc | Arm::FcStream => 1.0e-4,
     };
     let link_rate = link_gbps * 1e9 / 8.0; // bytes/s
 
@@ -157,7 +190,8 @@ pub fn fig7(cfg: &SimConfig) -> Json {
     out.set("clients",
             Json::Arr(cfg.clients.iter().map(|&c| Json::Num(c as f64)).collect()));
     for &g in &cfg.link_gbps {
-        for (arm, tag) in [(Arm::Original, "orig"), (Arm::Fc, "fc")] {
+        for (arm, tag) in [(Arm::Original, "orig"), (Arm::Fc, "fc"),
+                           (Arm::FcStream, "fcs")] {
             let mut means = Vec::new();
             let mut utils = Vec::new();
             for &c in &cfg.clients {
@@ -187,6 +221,8 @@ mod tests {
             prompt_tokens: 32,
             hidden: 2048,
             fc_ratio: 10.0,
+            stream_keyframe_interval: 32,
+            stream_delta_fill: 0.05,
             service_per_token_s: 0.002,
             horizon_s: 60.0,
             seed: 1,
@@ -239,5 +275,43 @@ mod tests {
         let b = simulate(&cfg, 8, 1.0, Arm::Fc);
         assert_eq!(a.completed, b.completed);
         assert_eq!(a.mean_response_s, b.mean_response_s);
+        let c = simulate(&cfg, 8, 1.0, Arm::FcStream);
+        let d = simulate(&cfg, 8, 1.0, Arm::FcStream);
+        assert_eq!(c.completed, d.completed);
+        assert_eq!(c.mean_response_s, d.mean_response_s);
+    }
+
+    #[test]
+    fn stream_cumulative_bytes_beat_recompute_5x_at_128_steps() {
+        // the Fig-7 byte model: 128 decode steps, cumulative uplink
+        // bytes — the stream arm must undercut the FC recompute
+        // regime >= 5x (and the uncompressed regime far more)
+        let cfg = quick_cfg();
+        let cum = |arm: Arm| -> f64 {
+            (0..128).map(|t| bytes_per_step(&cfg, arm, t)).sum()
+        };
+        let (orig, fc, fcs) = (cum(Arm::Original), cum(Arm::Fc),
+                               cum(Arm::FcStream));
+        assert!(fc / fcs >= 5.0, "fc {fc:.0} vs stream {fcs:.0}");
+        assert!(orig / fcs >= 40.0, "orig {orig:.0} vs stream {fcs:.0}");
+        // keyframe cadence: step 0 is a full block, deltas are not
+        assert_eq!(bytes_per_step(&cfg, Arm::FcStream, 0),
+                   bytes_per_step(&cfg, Arm::Fc, 0));
+        assert!(bytes_per_step(&cfg, Arm::FcStream, 1)
+                < bytes_per_step(&cfg, Arm::Fc, 1) / 4.0);
+    }
+
+    #[test]
+    fn stream_beats_fc_when_bandwidth_bound() {
+        // a link slow enough that the FC recompute regime saturates it
+        // (offered load > 1) while the delta stream stays comfortable
+        let mut cfg = quick_cfg();
+        cfg.compute_units = 8; // ample compute: link is the bottleneck
+        cfg.link_gbps = vec![0.05];
+        let fc = simulate(&cfg, 32, 0.05, Arm::Fc);
+        let fcs = simulate(&cfg, 32, 0.05, Arm::FcStream);
+        assert!(fcs.mean_response_s < fc.mean_response_s * 0.5,
+                "stream {} fc {}", fcs.mean_response_s, fc.mean_response_s);
+        assert!(fcs.link_util < fc.link_util);
     }
 }

@@ -1,0 +1,289 @@
+//! Hermetic spectral-delta-stream tests: the full stream protocol
+//! (keyframes, sparse deltas, sequence-gap rejection, TTL resync)
+//! both at codec level over a 128-step decode and end-to-end through
+//! the live TCP server against testkit-forged artifacts.  All tests
+//! hard-assert on every checkout — no python, no XLA.
+
+use fourier_compress::codec::fourier::FourierCodec;
+use fourier_compress::codec::stream::{fc_payload, BlockGeom, StreamConfig,
+                                      StreamDecoder, StreamEncoder, StreamStep};
+use fourier_compress::codec::{rel_error, Codec, CodecEngine};
+use fourier_compress::config::{FromJson, ServeConfig};
+use fourier_compress::coordinator::protocol::Frame;
+use fourier_compress::coordinator::{DeviceClient, EdgeServer};
+use fourier_compress::model::tokenizer;
+use fourier_compress::net::Channel;
+use fourier_compress::testkit::forged_store;
+use fourier_compress::util::rng::Rng;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+fn serve_config(store_root: &std::path::Path, overrides: &[String])
+    -> ServeConfig {
+    let mut args = vec![
+        "listen=127.0.0.1:0".to_string(),
+        format!("artifacts={}", store_root.display()),
+    ];
+    args.extend_from_slice(overrides);
+    ServeConfig::load(None, &args).unwrap()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The ISSUE's acceptance pin: a 128-step decode in the delta regime
+/// transmits >= 5x fewer cumulative wire bytes than the recompute
+/// regime while every step's reconstruction stays within the drift
+/// threshold of the keyframe-exact reconstruction.
+#[test]
+fn stream_128_steps_beats_recompute_5x_within_drift() {
+    let geom = BlockGeom { rows: 64, cols: 128, ks: 33, kd: 15 };
+    let n = geom.ks * geom.kd;
+    let threshold = 0.05;
+    let mut rng = Rng::new(0x57AE);
+    let mut truth: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut enc = StreamEncoder::new(StreamConfig {
+        keyframe_interval: 16,
+        drift_threshold: threshold,
+    });
+    let mut dec = StreamDecoder::new();
+    let mut eng = CodecEngine::new();
+    let codec = FourierCodec::default();
+    let mut step_out = StreamStep::default();
+
+    let (mut recompute_bytes, mut stream_bytes) = (0u64, 0u64);
+    let (mut keys, mut deltas) = (0u64, 0u64);
+    for step in 0..128u64 {
+        if step > 0 {
+            // decode-step evolution: the appended token's in-band
+            // contribution moves a handful of spectral coefficients
+            for _ in 0..3 {
+                let i = rng.below(n);
+                truth[i] += 0.35 * rng.normal() as f32;
+            }
+        }
+        // recompute regime: the full FC payload every step
+        let recompute = Frame::Activation {
+            session: 1, request: step + 1, bucket: geom.rows as u16,
+            true_len: geom.rows as u16, ks: geom.ks as u16,
+            kd: geom.kd as u16, packed: truth.clone(),
+        };
+        recompute_bytes += recompute.encode().len() as u64;
+
+        // stream regime
+        enc.encode_into(&mut eng, geom, &truth, &mut step_out).unwrap();
+        let frame = Frame::Delta {
+            session: 1, request: step + 1, seq: step_out.seq,
+            keyframe: step_out.keyframe, bucket: geom.rows as u16,
+            true_len: geom.rows as u16, ks: geom.ks as u16,
+            kd: geom.kd as u16, packed: step_out.packed.clone(),
+            updates: step_out.updates.clone(),
+        };
+        stream_bytes += frame.encode().len() as u64;
+        if step_out.keyframe {
+            keys += 1;
+            dec.apply_key(step_out.seq, geom, &step_out.packed).unwrap();
+        } else {
+            deltas += 1;
+            dec.apply_delta(step_out.seq, geom, &step_out.updates).unwrap();
+        }
+
+        // per-step drift bound: reconstruction from the decoder state
+        // vs reconstruction from the true block
+        let want = codec.decompress(&fc_payload(geom, &truth)).unwrap();
+        let got = codec.decompress(&fc_payload(geom, dec.block())).unwrap();
+        let err = rel_error(&want, &got);
+        assert!(err <= threshold * 1.02 + 1e-6, "step {step}: drift {err}");
+    }
+    assert!(keys >= 8, "keyframe cadence broke: {keys} keyframes");
+    assert!(deltas >= 100, "delta regime never engaged: {deltas} deltas");
+    let ratio = recompute_bytes as f64 / stream_bytes as f64;
+    assert!(ratio >= 5.0,
+            "stream saved only {ratio:.1}x ({recompute_bytes} vs \
+             {stream_bytes} B over 128 steps)");
+}
+
+/// Drop a delta frame on the floor: the decoder must reject the next
+/// frame (sequence gap), stay desynced through further deltas, and a
+/// forced keyframe must recover byte-identical state.
+#[test]
+fn dropped_delta_rejects_then_keyframe_recovers_bitexact() {
+    let geom = BlockGeom { rows: 16, cols: 32, ks: 5, kd: 7 };
+    let n = geom.ks * geom.kd;
+    let mut rng = Rng::new(0xD20B);
+    let mut truth: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut enc = StreamEncoder::new(StreamConfig {
+        keyframe_interval: 1024,
+        drift_threshold: 0.0,
+    });
+    let mut dec = StreamDecoder::new();
+    let mut eng = CodecEngine::new();
+    let mut out = StreamStep::default();
+
+    let mut mutate = |truth: &mut Vec<f32>, rng: &mut Rng| {
+        for _ in 0..2 {
+            let i = rng.below(n);
+            truth[i] = rng.normal() as f32;
+        }
+    };
+
+    // healthy stream: key + applied deltas track the truth bit-exactly
+    for step in 0..5u32 {
+        if step > 0 {
+            mutate(&mut truth, &mut rng);
+        }
+        enc.encode_into(&mut eng, geom, &truth, &mut out).unwrap();
+        if out.keyframe {
+            dec.apply_key(out.seq, geom, &out.packed).unwrap();
+        } else {
+            dec.apply_delta(out.seq, geom, &out.updates).unwrap();
+        }
+        assert_eq!(bits(dec.block()), bits(&truth), "step {step}");
+    }
+
+    // the next delta is encoded but DROPPED on the wire
+    mutate(&mut truth, &mut rng);
+    enc.encode_into(&mut eng, geom, &truth, &mut out).unwrap();
+    assert!(!out.keyframe);
+
+    // the following delta arrives: sequence gap -> hard fail + desync
+    mutate(&mut truth, &mut rng);
+    enc.encode_into(&mut eng, geom, &truth, &mut out).unwrap();
+    assert!(dec.apply_delta(out.seq, geom, &out.updates).is_err());
+    assert!(!dec.is_synced());
+
+    // every further delta is refused until a keyframe
+    mutate(&mut truth, &mut rng);
+    enc.encode_into(&mut eng, geom, &truth, &mut out).unwrap();
+    assert!(dec.apply_delta(out.seq, geom, &out.updates).is_err());
+
+    // client-side recovery: force a keyframe -> byte-identical state
+    enc.force_keyframe();
+    mutate(&mut truth, &mut rng);
+    enc.encode_into(&mut eng, geom, &truth, &mut out).unwrap();
+    assert!(out.keyframe);
+    dec.apply_key(out.seq, geom, &out.packed).unwrap();
+    assert_eq!(bits(dec.block()), bits(&truth));
+
+    // and the stream continues cleanly
+    mutate(&mut truth, &mut rng);
+    enc.encode_into(&mut eng, geom, &truth, &mut out).unwrap();
+    assert!(!out.keyframe);
+    dec.apply_delta(out.seq, geom, &out.updates).unwrap();
+    assert_eq!(bits(dec.block()), bits(&truth));
+}
+
+/// Stream mode with a zero drift threshold is lossless end to end:
+/// driven through the live TCP server, batcher, and session manager,
+/// it must produce exactly the recompute regime's tokens while never
+/// sending materially more bytes.
+#[test]
+fn stream_mode_generates_identical_tokens_lossless() {
+    let store = Arc::new(forged_store("stream_lossless").expect("forge"));
+    let cfg = serve_config(&store.root, &[]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+    let addr = server.addr.to_string();
+    const STEPS: usize = 8;
+
+    // reference: recompute regime (plain Activation frames)
+    let mut base = DeviceClient::connect(&addr, &store, 21,
+                                         Channel::unlimited()).unwrap();
+    let mut ctx = tokenizer::encode_prompt("Q mira hue ? A");
+    let mut base_tokens = Vec::new();
+    for _ in 0..STEPS {
+        let (t, _) = base.step(&ctx).unwrap();
+        ctx.push(t);
+        base_tokens.push(t);
+    }
+    let base_bytes = base.stats.bytes_sent;
+    base.bye().unwrap();
+
+    // stream mode, zero threshold: deltas replace every changed
+    // coefficient exactly, so reconstruction — and therefore every
+    // token — matches the recompute regime
+    let mut sc = DeviceClient::connect(&addr, &store, 22,
+                                       Channel::unlimited()).unwrap();
+    sc.enable_stream(StreamConfig {
+        keyframe_interval: 64,
+        drift_threshold: 0.0,
+    });
+    assert!(sc.stream_enabled());
+    let mut ctx = tokenizer::encode_prompt("Q mira hue ? A");
+    let mut tokens = Vec::new();
+    for _ in 0..STEPS {
+        let (t, _) = sc.step(&ctx).unwrap();
+        ctx.push(t);
+        tokens.push(t);
+    }
+    assert_eq!(tokens, base_tokens, "stream mode diverged from recompute");
+    assert_eq!((sc.stats.key_frames + sc.stats.delta_frames) as usize, STEPS);
+    assert!(sc.stats.key_frames >= 1, "first frame must be a keyframe");
+    assert_eq!(sc.stats.resyncs, 0);
+    // the growing context crosses the 16-token bucket mid-run: the
+    // geometry change must have forced a fresh keyframe
+    assert!(ctx.len() > 16, "context never crossed the 16-token bucket");
+    assert!(sc.stats.key_frames >= 2, "bucket promotion must resync");
+    // a stream frame is never materially larger than its Activation
+    // twin (a fallback keyframe costs the 5 extra header bytes)
+    assert!(sc.stats.bytes_sent <= base_bytes + (STEPS * 16) as u64,
+            "stream {} B vs recompute {} B", sc.stats.bytes_sent, base_bytes);
+
+    // server saw the split
+    let m = &server.metrics;
+    assert!(m.key_frames.load(Ordering::Relaxed) >= 2);
+    assert_eq!(m.key_frames.load(Ordering::Relaxed)
+                   + m.delta_frames.load(Ordering::Relaxed),
+               STEPS as u64);
+    assert!(m.key_bytes_rx.load(Ordering::Relaxed) > 0);
+    assert_eq!(m.stream_rejects.load(Ordering::Relaxed), 0);
+    sc.bye().unwrap();
+    server.shutdown();
+}
+
+/// TTL-evict the server-side stream state mid-generation: the next
+/// delta must be rejected and the client must recover transparently
+/// with exactly one keyframe resync.
+#[test]
+fn ttl_eviction_mid_stream_recovers_via_keyframe_resync() {
+    let store = Arc::new(forged_store("stream_ttl").expect("forge"));
+    let cfg = serve_config(&store.root, &["session_ttl_s=1".into()]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+    let addr = server.addr.to_string();
+
+    let mut sc = DeviceClient::connect(&addr, &store, 31,
+                                       Channel::unlimited()).unwrap();
+    // a high threshold keeps every post-keyframe step in the delta
+    // regime regardless of how much the activation moves
+    sc.enable_stream(StreamConfig {
+        keyframe_interval: 1024,
+        drift_threshold: 0.9,
+    });
+    // short prompt: all four steps stay inside the 16-token bucket,
+    // so no geometry-change keyframes muddy the resync accounting
+    // (BOS + 9 bytes = 10 tokens, +4 generated = 14 <= 16)
+    let mut ctx = tokenizer::encode_prompt("Q rok ? A");
+    let (t1, _) = sc.step(&ctx).unwrap(); // keyframe
+    ctx.push(t1);
+    let (t2, _) = sc.step(&ctx).unwrap(); // delta
+    ctx.push(t2);
+    assert_eq!(sc.stats.key_frames, 1);
+    assert_eq!(sc.stats.delta_frames, 1);
+    assert_eq!(sc.stats.resyncs, 0);
+
+    std::thread::sleep(std::time::Duration::from_millis(1400));
+    // the server evicted the session: the next delta is rejected and
+    // the client transparently resends as a keyframe
+    let (_t3, _) = sc.step(&ctx).unwrap();
+    assert_eq!(sc.stats.resyncs, 1, "expected exactly one resync");
+    assert_eq!(sc.stats.key_frames, 2);
+    assert_eq!(server.metrics.stream_rejects.load(Ordering::Relaxed), 1);
+
+    // the resynced stream keeps working without further keyframes
+    ctx.push(_t3);
+    let (_t4, _) = sc.step(&ctx).unwrap();
+    assert_eq!(sc.stats.resyncs, 1);
+    assert_eq!(sc.stats.key_frames, 2);
+    sc.bye().unwrap();
+    server.shutdown();
+}
