@@ -62,8 +62,9 @@ fn main() -> anyhow::Result<()> {
             let channel = Channel::gbps(gbps, 100);
             let mut client = DeviceClient::connect(&addr, &store,
                                                    cid as u64 + 1, channel)?;
-            if stream {
-                client.enable_stream(stream_cfg);
+            if stream && !client.enable_stream(stream_cfg) {
+                // the v2 handshake negotiated the capability away
+                anyhow::bail!("server did not advertise the stream capability");
             }
             let mut gens = Vec::new();
             for p in 0..n_prompts {

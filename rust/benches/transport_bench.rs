@@ -1,0 +1,80 @@
+//! Transport overhead bench: the same serving step — fixed context,
+//! fixed bucket, one compressed activation up, one token back —
+//! driven through the same running service core over (a) loopback
+//! TCP and (b) the zero-socket in-proc transport.  The spread between
+//! the two is the per-step cost of the OS network stack, which the
+//! serving API v2 made swappable.  Writes BENCH_transport.json.
+//!
+//!     cargo bench --bench transport_bench
+
+use fourier_compress::config::{FromJson, ServeConfig};
+use fourier_compress::coordinator::{DeviceClient, EdgeServer};
+use fourier_compress::model::tokenizer;
+use fourier_compress::net::Channel;
+use fourier_compress::testkit::forged_store;
+use fourier_compress::util::json::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+const STEPS: usize = 64;
+
+/// Drive STEPS identical decode steps (the context never grows, so
+/// every step ships the same bucket) and return (mean us/step, wire
+/// bytes, tokens).
+fn run_steps(client: &mut DeviceClient, ctx: &[i32])
+    -> (f64, u64, Vec<i32>) {
+    // one warm-up step: engine caches, artifact load, first batch
+    client.step(ctx).expect("warm-up step");
+    let bytes_before = client.stats.bytes_sent;
+    let mut tokens = Vec::with_capacity(STEPS);
+    let t0 = Instant::now();
+    for _ in 0..STEPS {
+        let (t, _lp) = client.step(ctx).expect("bench step");
+        tokens.push(t);
+    }
+    let us = t0.elapsed().as_micros() as f64 / STEPS as f64;
+    (us, client.stats.bytes_sent - bytes_before, tokens)
+}
+
+fn main() {
+    let store = Arc::new(forged_store("transport_bench").expect("forge"));
+    let cfg = ServeConfig::load(None, &[
+        "listen=127.0.0.1:0".to_string(),
+        format!("artifacts={}", store.root.display()),
+    ]).unwrap();
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+    let addr = server.addr.to_string();
+    // BOS + 14 bytes = 15 tokens: pinned inside the 16-token bucket
+    let ctx = tokenizer::encode_prompt("Q mira hue ? A");
+    assert!(ctx.len() <= 16, "prompt must stay in the smallest bucket");
+
+    let mut tcp = DeviceClient::connect(&addr, &store, 1,
+                                        Channel::unlimited()).unwrap();
+    let (tcp_us, tcp_bytes, tcp_tokens) = run_steps(&mut tcp, &ctx);
+    tcp.bye().unwrap();
+
+    let mut inproc = DeviceClient::connect_over(
+        Box::new(server.connect_inproc()), &store, 2).unwrap();
+    let (ip_us, ip_bytes, ip_tokens) = run_steps(&mut inproc, &ctx);
+    inproc.bye().unwrap();
+
+    // same step, same service: the media must agree on bytes + tokens
+    assert_eq!(tcp_bytes, ip_bytes, "wire accounting diverged across media");
+    assert_eq!(tcp_tokens, ip_tokens, "tokens diverged across media");
+
+    println!("{STEPS} steps, bucket 16: tcp {tcp_us:.1} us/step, \
+              in-proc {ip_us:.1} us/step (spread {:.1} us), \
+              {} B/step", tcp_us - ip_us, tcp_bytes / STEPS as u64);
+
+    let mut out = Json::obj();
+    out.set("steps", Json::Num(STEPS as f64));
+    out.set("bucket", Json::Num(16.0));
+    out.set("tcp_us_per_step", Json::Num(tcp_us));
+    out.set("inproc_us_per_step", Json::Num(ip_us));
+    out.set("tcp_overhead_us_per_step", Json::Num(tcp_us - ip_us));
+    out.set("bytes_per_step", Json::Num((tcp_bytes / STEPS as u64) as f64));
+    std::fs::write("BENCH_transport.json", out.to_string_pretty())
+        .expect("write BENCH_transport.json");
+    println!("wrote BENCH_transport.json");
+    server.shutdown();
+}

@@ -33,6 +33,11 @@ pub struct ServeConfig {
     pub link_latency_us: u64,
     /// Session KV/state eviction TTL in seconds.
     pub session_ttl_s: u64,
+    /// Advertise the spectral-delta-stream capability in the
+    /// handshake.  `false` makes v2 clients downgrade cleanly to the
+    /// recompute regime (and rejects raw Delta frames) — the
+    /// capability-negotiation lever.
+    pub stream: bool,
 }
 
 impl Default for ServeConfig {
@@ -49,6 +54,7 @@ impl Default for ServeConfig {
             link_gbps: 0.0,
             link_latency_us: 0,
             session_ttl_s: 300,
+            stream: true,
         }
     }
 }
@@ -191,6 +197,9 @@ impl FromJson for ServeConfig {
         self.link_latency_us =
             j.f64_or("link_latency_us", self.link_latency_us as f64) as u64;
         self.session_ttl_s = j.f64_or("session_ttl_s", self.session_ttl_s as f64) as u64;
+        if let Some(b) = j.get("stream").and_then(|v| v.as_bool()) {
+            self.stream = b;
+        }
         Ok(())
     }
 
@@ -207,6 +216,7 @@ impl FromJson for ServeConfig {
             "link_gbps" => self.link_gbps = value.parse()?,
             "link_latency_us" => self.link_latency_us = value.parse()?,
             "session_ttl_s" => self.session_ttl_s = value.parse()?,
+            "stream" => self.stream = value.parse()?,
             _ => bail!("unknown ServeConfig key '{key}'"),
         }
         Ok(())
@@ -362,6 +372,9 @@ mod tests {
         assert_eq!(cfg.compute_units, 8);
         assert_eq!(cfg.codec, "topk");
         assert_eq!(cfg.ratio, 6.5);
+        assert!(cfg.stream, "stream capability defaults on");
+        let cfg = ServeConfig::load(None, &["stream=false".into()]).unwrap();
+        assert!(!cfg.stream);
     }
 
     #[test]

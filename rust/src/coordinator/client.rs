@@ -1,30 +1,41 @@
 //! The device-side client: runs the fused client HLO (embed + layer 1
 //! + pallas FC compress) locally, packs the block with conjugate
-//! symmetry, ships it through the (optionally bandwidth-shaped)
-//! channel, and drives autoregressive generation — either in the
-//! paper's recompute regime (every token re-sends the grown prompt's
-//! compressed activation) or, with [`DeviceClient::enable_stream`],
-//! through the spectral delta stream (`codec::stream`): keyframes on
-//! bucket promotion / cadence, sparse coefficient deltas otherwise,
-//! and a transparent keyframe resync when the server reports lost
-//! stream state.
+//! symmetry, ships it through any [`Transport`] (TCP, in-proc, or a
+//! bandwidth-shaped decorator), and drives autoregressive generation —
+//! either in the paper's recompute regime (every token re-sends the
+//! grown prompt's compressed activation) or, with
+//! [`DeviceClient::enable_stream`], through the spectral delta stream
+//! (`codec::stream`).
+//!
+//! Connections start with the v2 handshake: the client announces its
+//! protocol version + capability bits and checks the server's
+//! [`Frame::HelloAck`] — version, capability intersection, and bucket
+//! geometry against the local manifest — so features are *negotiated*
+//! (a server without the stream capability downgrades the client to
+//! the recompute regime) and manifest drift fails the connection
+//! instead of the codec.  Server `Error` frames surface as structured
+//! [`ServerError`]s; only [`ErrorCode::StreamReject`] triggers the
+//! transparent keyframe resync.
 
-use super::protocol::Frame;
+use super::protocol::{caps, ErrorCode, Frame, ServerError, PROTOCOL_VERSION};
+use super::transport::{FrameRx, FrameTx, ShapedTransport, TcpTransport,
+                       Transport};
 use crate::codec::fourier::pack_block_into;
 use crate::codec::stream::{BlockGeom, StreamConfig, StreamEncoder, StreamStep};
 use crate::codec::CodecEngine;
 use crate::model::tokenizer;
 use crate::model::weights::Weights;
 use crate::model::ModelMeta;
-use crate::net::Channel;
+use crate::net::{Channel, DropPlan};
 use crate::runtime::{ArtifactStore, Executable};
 use crate::tensor::Tensor;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::BTreeMap;
-use std::io::BufReader;
-use std::net::TcpStream;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
+
+/// Capabilities this client implementation requests in its `Hello`.
+pub const CLIENT_CAPS: u32 = caps::STREAM | caps::CODEC_FC;
 
 struct ClientBucket {
     ks: usize,
@@ -34,8 +45,8 @@ struct ClientBucket {
 
 pub struct DeviceClient {
     session: u64,
-    stream: BufReader<TcpStream>,
-    channel: Channel,
+    tx: Box<dyn FrameTx>,
+    rx: Box<dyn FrameRx>,
     d_model: usize,
     buckets: BTreeMap<usize, ClientBucket>,
     client_args: Vec<Tensor>, // tok_emb + layer-0 weights
@@ -53,6 +64,11 @@ pub struct DeviceClient {
     /// Reusable stream-frame buffers (moved into the Delta frame for
     /// the send, then recovered).
     step_scratch: StreamStep,
+    /// Capability bits the server advertised in its `HelloAck`.
+    server_caps: u32,
+    /// Bucket geometry the server advertised (validated against the
+    /// local manifest at connect).
+    server_buckets: Vec<super::protocol::BucketGeom>,
     pub stats: ClientStats,
 }
 
@@ -85,8 +101,25 @@ pub struct Generation {
 }
 
 impl DeviceClient {
+    /// TCP convenience: connect to `addr` with the uplink shaped by
+    /// `channel` — an unshaped channel ([`Channel::unlimited`]) skips
+    /// the shaping decorator entirely.
     pub fn connect(addr: &str, store: &ArtifactStore, session: u64,
                    channel: Channel) -> Result<DeviceClient> {
+        let tcp = Box::new(TcpTransport::connect(addr)?);
+        let transport: Box<dyn Transport> = if channel.is_shaping() {
+            Box::new(ShapedTransport::new(tcp, channel, DropPlan::none()))
+        } else {
+            tcp
+        };
+        Self::connect_over(transport, store, session)
+    }
+
+    /// Connect over any transport — the in-proc/shaped entry point
+    /// the hermetic tests, benches, and the sim's live probe use.
+    /// Performs the full v2 handshake before returning.
+    pub fn connect_over(transport: Box<dyn Transport>, store: &ArtifactStore,
+                        session: u64) -> Result<DeviceClient> {
         let serving = store
             .manifest
             .get("serving")
@@ -110,9 +143,6 @@ impl DeviceClient {
             });
         }
 
-        let tcp = TcpStream::connect(addr)?;
-        tcp.set_nodelay(true)?;
-        tcp.set_read_timeout(Some(Duration::from_secs(60)))?;
         // pre-warm the engine for every bucket this session can use;
         // a geometry the codec cannot serve is a manifest bug — fail
         // the connection now, not with a panic mid-generation.
@@ -125,10 +155,12 @@ impl DeviceClient {
             }
             engine.warm(bucket, meta.d_model, cb.ks, cb.kd);
         }
+
+        let (tx, rx) = transport.split()?;
         let mut client = DeviceClient {
             session,
-            stream: BufReader::new(tcp),
-            channel,
+            tx,
+            rx,
             d_model: meta.d_model,
             buckets,
             client_args,
@@ -137,24 +169,69 @@ impl DeviceClient {
             packed_scratch: Vec::new(),
             encoder: None,
             step_scratch: StreamStep::default(),
+            server_caps: 0,
+            server_buckets: Vec::new(),
             stats: ClientStats::default(),
         };
-        client.send(&Frame::Hello { session, model })?;
+        client.handshake(model)?;
         Ok(client)
     }
 
+    /// Send `Hello`, await `HelloAck`, and validate what the server
+    /// advertised: protocol version, and bucket geometry agreeing
+    /// with the local manifest (both sides must compress/reconstruct
+    /// the same ks×kd blocks — drift here used to corrupt silently).
+    fn handshake(&mut self, model: String) -> Result<()> {
+        self.send(&Frame::hello(self.session, CLIENT_CAPS, model))?;
+        match self.recv()? {
+            Frame::HelloAck { version, caps: server_caps, buckets } => {
+                ensure!(version == PROTOCOL_VERSION,
+                        "server speaks protocol v{version}, \
+                         client v{PROTOCOL_VERSION}");
+                ensure!(buckets.len() == self.buckets.len(),
+                        "server serves {} buckets, local manifest has {}",
+                        buckets.len(), self.buckets.len());
+                for bg in &buckets {
+                    match self.buckets.get(&(bg.bucket as usize)) {
+                        Some(cb) if cb.ks == bg.ks as usize
+                            && cb.kd == bg.kd as usize => {}
+                        _ => bail!("bucket geometry drift: server advertises \
+                                    {}:{}x{}, local manifest disagrees",
+                                   bg.bucket, bg.ks, bg.kd),
+                    }
+                }
+                self.server_caps = server_caps;
+                self.server_buckets = buckets;
+                Ok(())
+            }
+            Frame::Error { code, msg } => Err(ServerError { code, msg }.into()),
+            other => bail!("handshake: unexpected frame {}", other.type_id()),
+        }
+    }
+
     fn send(&mut self, frame: &Frame) -> Result<()> {
-        let bytes = frame.encode();
-        // simulate the wireless uplink on top of loopback TCP
-        self.channel.throttle(bytes.len());
-        self.stats.bytes_sent += bytes.len() as u64;
-        std::io::Write::write_all(self.stream.get_mut(), &bytes)?;
-        std::io::Write::flush(self.stream.get_mut())?;
+        let n = self.tx.send(frame)?;
+        self.stats.bytes_sent += n as u64;
         Ok(())
     }
 
     fn recv(&mut self) -> Result<Frame> {
-        Frame::read_from(&mut self.stream)
+        self.rx.recv()
+    }
+
+    /// Capability bits the server advertised in its `HelloAck`.
+    pub fn server_caps(&self) -> u32 {
+        self.server_caps
+    }
+
+    /// Capabilities in effect on this connection (client ∩ server).
+    pub fn negotiated_caps(&self) -> u32 {
+        self.server_caps & CLIENT_CAPS
+    }
+
+    /// The bucket geometry the server advertised at handshake.
+    pub fn server_buckets(&self) -> &[super::protocol::BucketGeom] {
+        &self.server_buckets
     }
 
     /// Pick the smallest bucket that fits `len` tokens.
@@ -164,10 +241,22 @@ impl DeviceClient {
 
     /// Switch this session to the spectral delta stream: subsequent
     /// steps send keyframes/deltas (`Frame::Delta`) instead of full
-    /// Activation frames.  Enabling mid-generation is safe — the
-    /// fresh encoder's first frame is a keyframe.
-    pub fn enable_stream(&mut self, cfg: StreamConfig) {
+    /// Activation frames.  Returns false (and stays in the recompute
+    /// regime) when the handshake did not negotiate the stream
+    /// capability — the clean downgrade path.  Enabling
+    /// mid-generation is safe — the fresh encoder's first frame is a
+    /// keyframe.
+    #[must_use = "a false return means the server refused the stream \
+                  capability and the client stays in the recompute regime"]
+    pub fn enable_stream(&mut self, cfg: StreamConfig) -> bool {
+        if self.negotiated_caps() & caps::STREAM == 0 {
+            crate::warn_!("client",
+                          "session {}: server lacks the stream capability; \
+                           staying in the recompute regime", self.session);
+            return false;
+        }
         self.encoder = Some(StreamEncoder::new(cfg));
+        true
     }
 
     pub fn stream_enabled(&self) -> bool {
@@ -231,7 +320,9 @@ impl DeviceClient {
                     return Ok((token, logprob));
                 }
                 Frame::Token { .. } => continue, // stale reply
-                Frame::Error { msg } => bail!("server error: {msg}"),
+                Frame::Error { code, msg } => {
+                    return Err(ServerError { code, msg }.into());
+                }
                 other => bail!("unexpected frame {}", other.type_id()),
             }
         }
@@ -239,9 +330,10 @@ impl DeviceClient {
 
     /// One stream-mode send: encode the packed block as a keyframe or
     /// delta against the per-session encoder state.  If the server
-    /// rejects a delta (stream state TTL-evicted, sequence gap), force
-    /// a keyframe carrying the same activation and retry once — the
-    /// resync protocol.
+    /// rejects a delta with [`ErrorCode::StreamReject`] (stream state
+    /// TTL-evicted, sequence gap), force a keyframe carrying the same
+    /// activation and retry once — the resync protocol.  Any other
+    /// error code is fatal and surfaces as a [`ServerError`].
     fn stream_step(&mut self, request: u64, bucket: usize, len: usize,
                    ks: usize, kd: usize, packed: &[f32]) -> Result<(i32, f32)> {
         let geom = BlockGeom { rows: bucket, cols: self.d_model, ks, kd };
@@ -287,7 +379,8 @@ impl DeviceClient {
                         return Ok((token, logprob));
                     }
                     Frame::Token { .. } => continue, // stale reply
-                    Frame::Error { msg } if !keyframe && attempt == 0 => {
+                    Frame::Error { code: ErrorCode::StreamReject, msg }
+                        if !keyframe && attempt == 0 => {
                         // the server lost the stream state (TTL
                         // eviction, restart) or saw a gap: resync with
                         // a keyframe carrying the same activation
@@ -297,7 +390,9 @@ impl DeviceClient {
                             .force_keyframe();
                         break;
                     }
-                    Frame::Error { msg } => bail!("server error: {msg}"),
+                    Frame::Error { code, msg } => {
+                        return Err(ServerError { code, msg }.into());
+                    }
                     other => bail!("unexpected frame {}", other.type_id()),
                 }
             }
@@ -339,6 +434,9 @@ impl DeviceClient {
             match self.recv()? {
                 Frame::Stats { json } => return Ok(json),
                 Frame::Token { .. } => continue,
+                Frame::Error { code, msg } => {
+                    return Err(ServerError { code, msg }.into());
+                }
                 other => bail!("unexpected frame {}", other.type_id()),
             }
         }

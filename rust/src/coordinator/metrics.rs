@@ -21,6 +21,11 @@ pub struct Metrics {
     pub key_bytes_rx: AtomicU64,
     pub delta_bytes_rx: AtomicU64,
     pub stream_rejects: AtomicU64,
+    /// Handshake split: `Hello` frames seen, and how many were
+    /// rejected for a bad magic or protocol version (typed
+    /// version-mismatch rejects, the v2 negotiation's failure lane).
+    pub hellos: AtomicU64,
+    pub proto_rejects: AtomicU64,
     pub queue_wait_us: Histogram,
     pub decompress_us: Histogram,
     pub exec_us: Histogram,
@@ -55,6 +60,8 @@ impl Metrics {
         j.set("key_bytes_rx", g(&self.key_bytes_rx));
         j.set("delta_bytes_rx", g(&self.delta_bytes_rx));
         j.set("stream_rejects", g(&self.stream_rejects));
+        j.set("hellos", g(&self.hellos));
+        j.set("proto_rejects", g(&self.proto_rejects));
         for (name, h) in [("queue_wait_us", &self.queue_wait_us),
                           ("decompress_us", &self.decompress_us),
                           ("exec_us", &self.exec_us),
@@ -92,5 +99,10 @@ mod tests {
         assert_eq!(j.usize_or("key_frames", 0), 1);
         assert_eq!(j.usize_or("delta_bytes_rx", 0), 64);
         assert_eq!(j.usize_or("stream_rejects", 9), 0);
+        m.hellos.fetch_add(2, Ordering::Relaxed);
+        m.proto_rejects.fetch_add(1, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.usize_or("hellos", 0), 2);
+        assert_eq!(j.usize_or("proto_rejects", 0), 1);
     }
 }

@@ -1,14 +1,31 @@
-//! L3 coordinator — the serving system: a device-side client runs
-//! embed + layer 1 + the pallas FC codec (one fused HLO), ships the
-//! compressed block over a (optionally bandwidth-shaped) TCP link; the
-//! edge server reconstructs and finishes the model inside dynamically
-//! formed batches, with per-session state and metrics.
+//! L3 coordinator — the serving system, redesigned around three
+//! seams (the "serving API v2"):
 //!
-//! Generation follows the paper's recompute regime: every decode step
-//! re-sends the (growing) prompt's compressed activation — this is
-//! precisely the bandwidth amplification Fig 1 describes and Fig 7
-//! measures; `kv-cache mode` is analysed as an ablation in
-//! EXPERIMENTS.md.
+//! * [`transport`] — a [`transport::Transport`] is any framed,
+//!   ordered, bidirectional link: TCP for production, in-proc
+//!   (mpsc-backed, zero sockets) for hermetic tests and the sim's
+//!   live probe, and a shaped decorator adding bandwidth emulation +
+//!   deterministic frame drops.
+//! * [`protocol`] — versioned frames with a negotiated handshake:
+//!   `Hello` (magic + version + capability bits) is answered by
+//!   `HelloAck` (server capabilities + bucket geometry), and every
+//!   `Error` carries a typed code.
+//! * [`server::ServingService`] — the transport-agnostic service
+//!   core: sessions, dynamic batching, metrics, and frame semantics
+//!   behind a typed `handle(frame) -> Response` API; the TCP accept
+//!   loop and the in-proc connector are thin adapters over it.
+//!
+//! A device-side [`DeviceClient`] runs embed + layer 1 + the pallas
+//! FC codec (one fused HLO), negotiates features at connect, and
+//! ships compressed blocks — full recompute activations or spectral
+//! stream deltas — to the service, which reconstructs and finishes
+//! the model inside dynamically formed batches.
+//!
+//! Generation follows the paper's recompute regime by default: every
+//! decode step re-sends the (growing) prompt's compressed activation
+//! — this is precisely the bandwidth amplification Fig 1 describes
+//! and Fig 7 measures; the spectral delta stream (`codec::stream`)
+//! removes it when both sides negotiate the stream capability.
 
 pub mod batcher;
 pub mod client;
@@ -16,6 +33,10 @@ pub mod metrics;
 pub mod protocol;
 pub mod server;
 pub mod session;
+pub mod transport;
 
-pub use client::DeviceClient;
-pub use server::{EdgeServer, ServerHandle};
+pub use client::{DeviceClient, CLIENT_CAPS};
+pub use server::{serve_transport, start_service, EdgeServer, Response,
+                 ServerHandle, ServiceHandle, ServingService};
+pub use transport::{FrameRx, FrameTx, InProcTransport, ShapedTransport,
+                    TcpTransport, Transport};

@@ -1,41 +1,198 @@
-//! Wire protocol: length-prefixed binary frames over TCP.
+//! Wire protocol v2: length-prefixed binary frames over any
+//! [`super::transport::Transport`].
 //!
 //!   u32 body_len | u8 frame_type | body
 //!
 //! Frames:
-//!   Hello      c→s  u64 session | u16 model_len | model
+//!   Hello      c→s  u32 magic | u16 version | u32 caps | u64 session
+//!                   | u16 model_len | model
 //!   Activation c→s  u64 session | u64 request | u16 bucket | u16 true_len
 //!                   | u16 ks | u16 kd | f32 packed[·]  (conjugate-sym pack)
 //!   Token      s→c  u64 request | i32 token | f32 logprob
 //!   GetStats   c→s  (empty)
 //!   Stats      s→c  u32 json_len | json
-//!   Error      s→c  u16 msg_len | msg
+//!   Error      s→c  u8 code | u16 msg_len | msg
 //!   Bye        c→s  (empty)
 //!   Delta      c→s  u64 session | u64 request | u32 seq | u8 keyframe
 //!                   | u16 bucket | u16 true_len | u16 ks | u16 kd
 //!                   | keyframe=1: f32 packed[·]   (full block)
 //!                   | keyframe=0: u32 count | (u32 idx | f32 val)[count]
+//!   HelloAck   s→c  u16 version | u32 caps | u16 bucket_count
+//!                   | (u16 bucket | u16 ks | u16 kd)[bucket_count]
+//!
+//! The v2 handshake replaces the old unversioned `Hello {session,
+//! model}`: the client leads with [`PROTOCOL_MAGIC`], its protocol
+//! version, and a capability bitset ([`caps`]); the server answers
+//! with [`Frame::HelloAck`] advertising its own capabilities and the
+//! bucket geometry it serves, so the client *negotiates* features
+//! (stream, int8, codec set) instead of assuming its local manifest
+//! matches the server's.  A version or magic mismatch is answered
+//! with a typed [`ErrorCode::VersionMismatch`] reject, never silent
+//! drift.
 //!
 //! `Delta` is the spectral stream's frame (`codec::stream`): `seq` is
 //! the per-session stream sequence number and `keyframe` selects
 //! between a full conjugate-symmetric block and sparse coefficient
 //! updates into it.  The server keeps per-session decoder state and
-//! hard-fails deltas that arrive out of sequence.
+//! hard-fails deltas that arrive out of sequence, answering with
+//! [`ErrorCode::StreamReject`] so the client resyncs via keyframe.
 
 use anyhow::{bail, ensure, Result};
 use std::io::{Read, Write};
 
 pub const MAX_FRAME: usize = 64 << 20;
 
+/// First field of every `Hello`: lets the server drop non-protocol
+/// peers (and v1 clients, whose first body bytes are a session id)
+/// with a typed reject instead of misparsing them.  ASCII "FCRP".
+pub const PROTOCOL_MAGIC: u32 = 0x4643_5250;
+
+/// Wire protocol version.  v1 was the unversioned `Hello {session,
+/// model}` era; v2 introduced the negotiated handshake.  The server
+/// rejects any other version with [`ErrorCode::VersionMismatch`].
+pub const PROTOCOL_VERSION: u16 = 2;
+
+/// Bytes every frame pays on the wire before its body: u32 body_len +
+/// u8 frame_type.
+pub const FRAME_OVERHEAD_BYTES: usize = 5;
+
+/// Fixed body-header bytes of a `Hello` frame (magic + version + caps
+/// + session + model_len); the model string follows.
+pub const HELLO_HEADER_BYTES: usize = 20;
+
+/// Fixed body-header bytes of an `Activation` frame (session +
+/// request + bucket + true_len + ks + kd); the packed block follows.
+pub const ACTIVATION_HEADER_BYTES: usize = 24;
+
+/// Full body of a `Token` frame (request + token + logprob).
+pub const TOKEN_BODY_BYTES: usize = 16;
+
+/// Fixed body-header bytes of a `Stats` frame (json_len).
+pub const STATS_HEADER_BYTES: usize = 4;
+
+/// Fixed body-header bytes of an `Error` frame (code + msg_len).
+pub const ERROR_HEADER_BYTES: usize = 3;
+
 /// Body-header bytes of a `Delta` frame (session + request + seq +
 /// keyframe flag + bucket + true_len + ks + kd) — the stream
-/// counterpart of the Activation frame's 24-byte header, used by the
-/// wire-byte accounting.
+/// counterpart of the Activation frame's
+/// [`ACTIVATION_HEADER_BYTES`], used by the wire-byte accounting.
 pub const STREAM_HEADER_BYTES: usize = 29;
+
+/// Fixed body-header bytes of a `HelloAck` frame (version + caps +
+/// bucket_count); [`HELLO_ACK_BUCKET_BYTES`] per advertised bucket
+/// follow.
+pub const HELLO_ACK_HEADER_BYTES: usize = 8;
+
+/// Bytes per bucket-geometry entry in a `HelloAck` (bucket + ks + kd).
+pub const HELLO_ACK_BUCKET_BYTES: usize = 6;
+
+/// Capability bits negotiated by the handshake.  The effective
+/// feature set of a connection is the intersection of the client's
+/// `Hello.caps` and the server's `HelloAck.caps`; either side simply
+/// not setting a bit is a *clean downgrade*, never an error.
+pub mod caps {
+    /// Spectral delta streaming ([`super::Frame::Delta`]).
+    pub const STREAM: u32 = 1 << 0;
+    /// Int8-quantised payloads (reserved: the int8 codec tier exists
+    /// but no wire frame carries it yet).
+    pub const INT8: u32 = 1 << 1;
+    /// The FourierCompress codec (conjugate-symmetric packed blocks).
+    pub const CODEC_FC: u32 = 1 << 2;
+    /// The top-k sparse codec (reserved for future wire payloads).
+    pub const CODEC_TOPK: u32 = 1 << 3;
+}
+
+/// Typed reason byte carried by every [`Frame::Error`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// Bad magic or unsupported protocol version in `Hello`.
+    VersionMismatch = 1,
+    /// Data frame arrived before a successful handshake on this
+    /// connection, or named a session other than the one the
+    /// connection handshook (the handshake *binds* connection and
+    /// session — no cross-tenant serving or resurrection).  An
+    /// *evicted own session* is not this: stateless recompute
+    /// requests are transparently re-admitted, and stream frames get
+    /// a [`ErrorCode::StreamReject`] resync instead.
+    UnknownSession = 2,
+    /// Stream frame refused: sequence gap, evicted decoder state, or
+    /// stream admission pressure — the client answers with a keyframe
+    /// resync.
+    StreamReject = 3,
+    /// Server-side execution failure.
+    Internal = 4,
+    /// Malformed or un-negotiated request (bad bucket geometry,
+    /// unexpected frame, stream frames without the stream capability).
+    BadRequest = 5,
+    /// Session admission refused: the table is full of live sessions.
+    AdmissionRefused = 6,
+}
+
+impl ErrorCode {
+    pub fn from_u8(b: u8) -> Option<ErrorCode> {
+        Some(match b {
+            1 => ErrorCode::VersionMismatch,
+            2 => ErrorCode::UnknownSession,
+            3 => ErrorCode::StreamReject,
+            4 => ErrorCode::Internal,
+            5 => ErrorCode::BadRequest,
+            6 => ErrorCode::AdmissionRefused,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ErrorCode::VersionMismatch => "version-mismatch",
+            ErrorCode::UnknownSession => "unknown-session",
+            ErrorCode::StreamReject => "stream-reject",
+            ErrorCode::Internal => "internal",
+            ErrorCode::BadRequest => "bad-request",
+            ErrorCode::AdmissionRefused => "admission-refused",
+        })
+    }
+}
+
+/// A [`Frame::Error`] surfaced as a structured Rust error by
+/// `DeviceClient`: callers match or `downcast_ref::<ServerError>()`
+/// on the code instead of parsing message strings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServerError {
+    pub code: ErrorCode,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ServerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server error [{}]: {}", self.code, self.msg)
+    }
+}
+
+impl std::error::Error for ServerError {}
+
+/// One bucket's serving geometry as advertised in a
+/// [`Frame::HelloAck`]: sequence bucket plus the kept spectral block
+/// (ks × kd) the server expects for it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BucketGeom {
+    pub bucket: u16,
+    pub ks: u16,
+    pub kd: u16,
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
-    Hello { session: u64, model: String },
+    Hello {
+        magic: u32,
+        version: u16,
+        caps: u32,
+        session: u64,
+        model: String,
+    },
     Activation {
         session: u64,
         request: u64,
@@ -48,7 +205,7 @@ pub enum Frame {
     Token { request: u64, token: i32, logprob: f32 },
     GetStats,
     Stats { json: String },
-    Error { msg: String },
+    Error { code: ErrorCode, msg: String },
     Bye,
     /// Spectral stream frame: a keyframe carries the full packed
     /// block in `packed` (and `updates` is empty); a delta carries
@@ -66,9 +223,29 @@ pub enum Frame {
         packed: Vec<f32>,
         updates: Vec<(u32, f32)>,
     },
+    /// Server's handshake answer: its protocol version, capability
+    /// bits, and the bucket geometry it serves — the client checks
+    /// the geometry against its local manifest so device/server
+    /// manifest drift fails the connection instead of the codec.
+    HelloAck {
+        version: u16,
+        caps: u32,
+        buckets: Vec<BucketGeom>,
+    },
 }
 
 impl Frame {
+    /// A `Hello` carrying the current magic + protocol version.
+    pub fn hello(session: u64, caps: u32, model: impl Into<String>) -> Frame {
+        Frame::Hello {
+            magic: PROTOCOL_MAGIC,
+            version: PROTOCOL_VERSION,
+            caps,
+            session,
+            model: model.into(),
+        }
+    }
+
     pub fn type_id(&self) -> u8 {
         match self {
             Frame::Hello { .. } => 0,
@@ -79,13 +256,17 @@ impl Frame {
             Frame::Error { .. } => 5,
             Frame::Bye => 6,
             Frame::Delta { .. } => 7,
+            Frame::HelloAck { .. } => 8,
         }
     }
 
     pub fn encode(&self) -> Vec<u8> {
         let mut b = Vec::new();
         match self {
-            Frame::Hello { session, model } => {
+            Frame::Hello { magic, version, caps, session, model } => {
+                b.extend_from_slice(&magic.to_le_bytes());
+                b.extend_from_slice(&version.to_le_bytes());
+                b.extend_from_slice(&caps.to_le_bytes());
                 b.extend_from_slice(&session.to_le_bytes());
                 b.extend_from_slice(&(model.len() as u16).to_le_bytes());
                 b.extend_from_slice(model.as_bytes());
@@ -112,7 +293,8 @@ impl Frame {
                 b.extend_from_slice(&(json.len() as u32).to_le_bytes());
                 b.extend_from_slice(json.as_bytes());
             }
-            Frame::Error { msg } => {
+            Frame::Error { code, msg } => {
+                b.push(*code as u8);
                 b.extend_from_slice(&(msg.len() as u16).to_le_bytes());
                 b.extend_from_slice(msg.as_bytes());
             }
@@ -138,8 +320,18 @@ impl Frame {
                     }
                 }
             }
+            Frame::HelloAck { version, caps, buckets } => {
+                b.extend_from_slice(&version.to_le_bytes());
+                b.extend_from_slice(&caps.to_le_bytes());
+                b.extend_from_slice(&(buckets.len() as u16).to_le_bytes());
+                for g in buckets {
+                    b.extend_from_slice(&g.bucket.to_le_bytes());
+                    b.extend_from_slice(&g.ks.to_le_bytes());
+                    b.extend_from_slice(&g.kd.to_le_bytes());
+                }
+            }
         }
-        let mut out = Vec::with_capacity(5 + b.len());
+        let mut out = Vec::with_capacity(FRAME_OVERHEAD_BYTES + b.len());
         out.extend_from_slice(&(b.len() as u32).to_le_bytes());
         out.push(self.type_id());
         out.extend_from_slice(&b);
@@ -150,10 +342,26 @@ impl Frame {
         let mut r = crate::codec::Reader::new(body);
         Ok(match type_id {
             0 => {
+                // magic + version lead the body so a Hello from a
+                // different protocol era still *decodes* (the foreign
+                // remainder is not parsed) and reaches the service,
+                // which answers with a typed VersionMismatch — a v1
+                // peer gets a reject frame, not a silent disconnect.
+                let magic = r.u32()?;
+                let version = r.u16()?;
+                if magic != PROTOCOL_MAGIC || version != PROTOCOL_VERSION {
+                    return Ok(Frame::Hello {
+                        magic, version, caps: 0, session: 0,
+                        model: String::new(),
+                    });
+                }
+                let caps = r.u32()?;
                 let session = u64_of(&mut r)?;
                 let n = r.u16()? as usize;
                 let model = String::from_utf8(r.take(n)?.to_vec())?;
-                Frame::Hello { session, model }
+                ensure!(r.remaining() == 0,
+                        "trailing hello bytes ({})", r.remaining());
+                Frame::Hello { magic, version, caps, session, model }
             }
             1 => {
                 let session = u64_of(&mut r)?;
@@ -184,8 +392,12 @@ impl Frame {
                 Frame::Stats { json: String::from_utf8(r.take(n)?.to_vec())? }
             }
             5 => {
+                let c = r.byte()?;
+                let code = ErrorCode::from_u8(c)
+                    .ok_or_else(|| anyhow::anyhow!("unknown error code {c}"))?;
                 let n = r.u16()? as usize;
-                Frame::Error { msg: String::from_utf8(r.take(n)?.to_vec())? }
+                let msg = String::from_utf8(r.take(n)?.to_vec())?;
+                Frame::Error { code, msg }
             }
             6 => Frame::Bye,
             7 => {
@@ -223,6 +435,23 @@ impl Frame {
                 Frame::Delta { session, request, seq, keyframe, bucket,
                                true_len, ks, kd, packed, updates }
             }
+            8 => {
+                let version = r.u16()?;
+                let caps = r.u32()?;
+                let n = r.u16()? as usize;
+                let mut buckets =
+                    Vec::with_capacity(n.min(r.remaining()
+                                             / HELLO_ACK_BUCKET_BYTES));
+                for _ in 0..n {
+                    let bucket = r.u16()?;
+                    let ks = r.u16()?;
+                    let kd = r.u16()?;
+                    buckets.push(BucketGeom { bucket, ks, kd });
+                }
+                ensure!(r.remaining() == 0,
+                        "trailing hello-ack bytes ({})", r.remaining());
+                Frame::HelloAck { version, caps, buckets }
+            }
             t => bail!("unknown frame type {t}"),
         })
     }
@@ -234,7 +463,7 @@ impl Frame {
     }
 
     pub fn read_from(r: &mut impl Read) -> Result<Frame> {
-        let mut hdr = [0u8; 5];
+        let mut hdr = [0u8; FRAME_OVERHEAD_BYTES];
         r.read_exact(&mut hdr)?;
         let len = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]) as usize;
         if len > MAX_FRAME {
@@ -254,6 +483,7 @@ fn u64_of(r: &mut crate::codec::Reader) -> Result<u64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     fn roundtrip(f: Frame) {
         let enc = f.encode();
@@ -264,7 +494,7 @@ mod tests {
 
     #[test]
     fn all_frames_roundtrip() {
-        roundtrip(Frame::Hello { session: 7, model: "llamette-m".into() });
+        roundtrip(Frame::hello(7, caps::STREAM | caps::CODEC_FC, "llamette-m"));
         roundtrip(Frame::Activation {
             session: 1, request: 42, bucket: 32, true_len: 29, ks: 32, kd: 15,
             packed: vec![1.0, -2.5, 0.0, 3.25],
@@ -272,7 +502,8 @@ mod tests {
         roundtrip(Frame::Token { request: 42, token: 101, logprob: -0.75 });
         roundtrip(Frame::GetStats);
         roundtrip(Frame::Stats { json: r#"{"n": 3}"#.into() });
-        roundtrip(Frame::Error { msg: "bad bucket".into() });
+        roundtrip(Frame::Error {
+            code: ErrorCode::BadRequest, msg: "bad bucket".into() });
         roundtrip(Frame::Bye);
         roundtrip(Frame::Delta {
             session: 3, request: 9, seq: 4, keyframe: true, bucket: 16,
@@ -289,11 +520,60 @@ mod tests {
             session: 3, request: 11, seq: 6, keyframe: false, bucket: 16,
             true_len: 13, ks: 5, kd: 3, packed: vec![], updates: vec![],
         });
+        roundtrip(Frame::HelloAck {
+            version: PROTOCOL_VERSION, caps: caps::STREAM | caps::CODEC_FC,
+            buckets: vec![BucketGeom { bucket: 16, ks: 9, kd: 15 },
+                          BucketGeom { bucket: 32, ks: 17, kd: 15 }],
+        });
+        // a bucketless ack is legal on the wire (rejected higher up)
+        roundtrip(Frame::HelloAck { version: 1, caps: 0, buckets: vec![] });
     }
 
     #[test]
     fn rejects_unknown_type() {
         assert!(Frame::decode(99, &[]).is_err());
+    }
+
+    /// A Hello from a different protocol era (v1 layout, or any
+    /// future shape) must still decode into a rejectable Hello — the
+    /// service's typed VersionMismatch is unreachable if foreign
+    /// handshakes die in the parser.
+    #[test]
+    fn foreign_era_hello_decodes_to_rejectable_hello() {
+        // v1 layout: u64 session | u16 model_len | model
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(&9u64.to_le_bytes());
+        v1.extend_from_slice(&(10u16).to_le_bytes());
+        v1.extend_from_slice(b"llamette-m");
+        match Frame::decode(0, &v1).unwrap() {
+            Frame::Hello { magic, .. } => {
+                assert_ne!(magic, PROTOCOL_MAGIC, "v1 bytes are not magic");
+            }
+            other => panic!("expected Hello, got {}", other.type_id()),
+        }
+        // current magic, future version, longer body: still decodes
+        let mut v3 = Vec::new();
+        v3.extend_from_slice(&PROTOCOL_MAGIC.to_le_bytes());
+        v3.extend_from_slice(&3u16.to_le_bytes());
+        v3.extend_from_slice(&[0xAB; 40]); // unknown v3 payload
+        match Frame::decode(0, &v3).unwrap() {
+            Frame::Hello { magic, version, .. } => {
+                assert_eq!(magic, PROTOCOL_MAGIC);
+                assert_eq!(version, 3);
+            }
+            other => panic!("expected Hello, got {}", other.type_id()),
+        }
+        // fewer than magic+version bytes is still a decode error
+        assert!(Frame::decode(0, &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_error_code() {
+        let f = Frame::Error { code: ErrorCode::Internal, msg: "x".into() };
+        let enc = f.encode();
+        let mut body = enc[FRAME_OVERHEAD_BYTES..].to_vec();
+        body[0] = 200; // not a defined ErrorCode
+        assert!(Frame::decode(5, &body).is_err());
     }
 
     #[test]
@@ -307,7 +587,7 @@ mod tests {
     /// Every variant, for the truncation sweeps below.
     fn all_variants() -> Vec<Frame> {
         vec![
-            Frame::Hello { session: 7, model: "llamette-m".into() },
+            Frame::hello(7, caps::STREAM, "llamette-m"),
             Frame::Activation {
                 session: 1, request: 42, bucket: 32, true_len: 29, ks: 3,
                 kd: 3, packed: vec![1.0, -2.5, 0.0, 3.25, 0.5, -1.0, 2.0,
@@ -316,7 +596,8 @@ mod tests {
             Frame::Token { request: 42, token: 101, logprob: -0.75 },
             Frame::GetStats,
             Frame::Stats { json: r#"{"n": 3}"#.into() },
-            Frame::Error { msg: "bad bucket".into() },
+            Frame::Error { code: ErrorCode::BadRequest,
+                           msg: "bad bucket".into() },
             Frame::Bye,
             Frame::Delta {
                 session: 1, request: 43, seq: 2, keyframe: true, bucket: 32,
@@ -327,6 +608,10 @@ mod tests {
                 session: 1, request: 44, seq: 3, keyframe: false, bucket: 32,
                 true_len: 30, ks: 3, kd: 3, packed: vec![],
                 updates: vec![(2, 0.5), (8, -1.0)],
+            },
+            Frame::HelloAck {
+                version: PROTOCOL_VERSION, caps: caps::STREAM,
+                buckets: vec![BucketGeom { bucket: 16, ks: 9, kd: 15 }],
             },
         ]
     }
@@ -349,14 +634,23 @@ mod tests {
     #[test]
     fn truncated_body_is_decode_error() {
         // bodies shorter than their fields declare
-        assert!(Frame::decode(0, &[1, 2]).is_err()); // hello: no session
+        assert!(Frame::decode(0, &[1, 2]).is_err()); // hello: no header
         // hello: model_len 5 but only 1 byte of model
-        assert!(Frame::decode(
-            0, &[0, 0, 0, 0, 0, 0, 0, 0, 5, 0, b'a']).is_err());
+        let mut h = Frame::hello(0, 0, "abcde").encode()[FRAME_OVERHEAD_BYTES..]
+            .to_vec();
+        h.truncate(HELLO_HEADER_BYTES + 1);
+        assert!(Frame::decode(0, &h).is_err());
         assert!(Frame::decode(1, &[0; 10]).is_err()); // activation header
         assert!(Frame::decode(2, &[0; 10]).is_err()); // token: needs 16
         assert!(Frame::decode(4, &[255, 0, 0, 0]).is_err()); // stats: len 255
-        assert!(Frame::decode(5, &[9, 0]).is_err()); // error: msg_len 9
+        assert!(Frame::decode(5, &[4, 9, 0]).is_err()); // error: msg_len 9
+        // hello-ack: 3 buckets promised, body holds 1
+        let mut a = Frame::HelloAck {
+            version: 2, caps: 0,
+            buckets: vec![BucketGeom { bucket: 16, ks: 3, kd: 3 }],
+        }.encode()[FRAME_OVERHEAD_BYTES..].to_vec();
+        a[6] = 3;
+        assert!(Frame::decode(8, &a).is_err());
     }
 
     #[test]
@@ -368,7 +662,7 @@ mod tests {
         let mut enc = f.encode();
         // append 2 stray bytes to the body and patch the length prefix
         enc.extend_from_slice(&[0xAA, 0xBB]);
-        let body_len = (enc.len() - 5) as u32;
+        let body_len = (enc.len() - FRAME_OVERHEAD_BYTES) as u32;
         enc[..4].copy_from_slice(&body_len.to_le_bytes());
         let mut cur = std::io::Cursor::new(enc);
         assert!(Frame::read_from(&mut cur).is_err(),
@@ -389,7 +683,7 @@ mod tests {
             true_len: 8, ks: 3, kd: 3, packed: vec![], updates: vec![(1, 2.0)],
         };
         let enc = f.encode();
-        let mut body = enc[5..].to_vec();
+        let mut body = enc[FRAME_OVERHEAD_BYTES..].to_vec();
         body[20] = 2; // keyframe flag offset: 8 + 8 + 4
         assert!(Frame::decode(7, &body).is_err());
 
@@ -400,7 +694,7 @@ mod tests {
         };
         let mut kenc = kf.encode();
         kenc.extend_from_slice(&[0xAA, 0xBB]);
-        let body_len = (kenc.len() - 5) as u32;
+        let body_len = (kenc.len() - FRAME_OVERHEAD_BYTES) as u32;
         kenc[..4].copy_from_slice(&body_len.to_le_bytes());
         let mut cur = std::io::Cursor::new(kenc);
         assert!(Frame::read_from(&mut cur).is_err());
@@ -412,11 +706,11 @@ mod tests {
             updates: vec![(1, 2.0), (3, 4.0)],
         };
         let denc = d.encode();
-        let mut dbody = denc[5..].to_vec();
+        let mut dbody = denc[FRAME_OVERHEAD_BYTES..].to_vec();
         dbody[29] = 3; // count offset: STREAM_HEADER_BYTES
         assert!(Frame::decode(7, &dbody).is_err());
         // ...and trailing bytes after the promised updates
-        let mut tbody = denc[5..].to_vec();
+        let mut tbody = denc[FRAME_OVERHEAD_BYTES..].to_vec();
         tbody[29] = 1;
         assert!(Frame::decode(7, &tbody).is_err());
     }
@@ -429,25 +723,122 @@ mod tests {
             true_len: 64, ks: 33, kd: 15, packed: vec![0.0; 33 * 15],
             updates: vec![],
         };
-        assert_eq!(kf.encode().len(), 5 + STREAM_HEADER_BYTES + 33 * 15 * 4);
+        assert_eq!(kf.encode().len(),
+                   FRAME_OVERHEAD_BYTES + STREAM_HEADER_BYTES + 33 * 15 * 4);
         // delta: header + count + 8 bytes per update
         let d = Frame::Delta {
             session: 0, request: 0, seq: 2, keyframe: false, bucket: 64,
             true_len: 64, ks: 33, kd: 15, packed: vec![],
             updates: vec![(0, 1.0); 7],
         };
-        assert_eq!(d.encode().len(), 5 + STREAM_HEADER_BYTES + 4 + 7 * 8);
+        assert_eq!(d.encode().len(),
+                   FRAME_OVERHEAD_BYTES + STREAM_HEADER_BYTES + 4 + 7 * 8);
     }
 
     #[test]
     fn wire_bytes_accounting() {
-        // activation frame payload cost = 16 + header floats (paper's
-        // transmitted volume is dominated by packed[·])
+        // activation frame payload cost = header + packed floats (the
+        // paper's transmitted volume is dominated by packed[·])
         let f = Frame::Activation {
             session: 0, request: 0, bucket: 64, true_len: 64, ks: 64, kd: 15,
             packed: vec![0.0; 64 * 15],
         };
         let enc = f.encode();
-        assert_eq!(enc.len(), 5 + 24 + 64 * 15 * 4);
+        assert_eq!(enc.len(),
+                   FRAME_OVERHEAD_BYTES + ACTIVATION_HEADER_BYTES
+                   + 64 * 15 * 4);
+    }
+
+    /// Satellite pin: for every frame variant, the documented header
+    /// byte constants exactly match what `encode()` emits — a
+    /// constant drifting from the wire layout breaks every byte
+    /// accounting built on it.
+    #[test]
+    fn header_constants_match_encode_lengths() {
+        let body_len = |f: &Frame| f.encode().len() - FRAME_OVERHEAD_BYTES;
+
+        let model = "m";
+        assert_eq!(body_len(&Frame::hello(1, 0, model)),
+                   HELLO_HEADER_BYTES + model.len());
+
+        assert_eq!(body_len(&Frame::Activation {
+            session: 0, request: 0, bucket: 16, true_len: 8, ks: 0, kd: 0,
+            packed: vec![],
+        }), ACTIVATION_HEADER_BYTES);
+
+        assert_eq!(body_len(&Frame::Token {
+            request: 0, token: 0, logprob: 0.0,
+        }), TOKEN_BODY_BYTES);
+
+        assert_eq!(body_len(&Frame::GetStats), 0);
+        assert_eq!(body_len(&Frame::Bye), 0);
+
+        let json = "{}";
+        assert_eq!(body_len(&Frame::Stats { json: json.into() }),
+                   STATS_HEADER_BYTES + json.len());
+
+        let msg = "boom";
+        assert_eq!(body_len(&Frame::Error {
+            code: ErrorCode::Internal, msg: msg.into(),
+        }), ERROR_HEADER_BYTES + msg.len());
+
+        // a keyframe delta's body is exactly the stream header + block
+        assert_eq!(body_len(&Frame::Delta {
+            session: 0, request: 0, seq: 0, keyframe: true, bucket: 16,
+            true_len: 8, ks: 0, kd: 0, packed: vec![], updates: vec![],
+        }), STREAM_HEADER_BYTES);
+        // a sparse delta adds its u32 count even when empty
+        assert_eq!(body_len(&Frame::Delta {
+            session: 0, request: 0, seq: 0, keyframe: false, bucket: 16,
+            true_len: 8, ks: 0, kd: 0, packed: vec![], updates: vec![],
+        }), STREAM_HEADER_BYTES + 4);
+
+        assert_eq!(body_len(&Frame::HelloAck {
+            version: 2, caps: 0, buckets: vec![],
+        }), HELLO_ACK_HEADER_BYTES);
+        assert_eq!(body_len(&Frame::HelloAck {
+            version: 2, caps: 0,
+            buckets: vec![BucketGeom { bucket: 16, ks: 3, kd: 3 }; 3],
+        }), HELLO_ACK_HEADER_BYTES + 3 * HELLO_ACK_BUCKET_BYTES);
+    }
+
+    /// Satellite pin: `Frame::decode` over seeded-random type ids and
+    /// bodies returns errors, never panics (and never over-allocates
+    /// from attacker-controlled counts).
+    #[test]
+    fn decode_random_bodies_never_panics() {
+        let mut rng = Rng::new(0xF0_22ED);
+        for _ in 0..20_000 {
+            let tid = rng.below(12) as u8; // valid ids 0..=8 + invalid
+            let len = rng.below(300);
+            let body: Vec<u8> =
+                (0..len).map(|_| rng.next_u64() as u8).collect();
+            let _ = Frame::decode(tid, &body); // Err is fine; panic is not
+        }
+        // bit-flip corruption of every valid variant's encoding
+        for f in all_variants() {
+            let enc = f.encode();
+            if enc.len() <= FRAME_OVERHEAD_BYTES {
+                continue;
+            }
+            for _ in 0..256 {
+                let mut body = enc[FRAME_OVERHEAD_BYTES..].to_vec();
+                let i = rng.below(body.len());
+                body[i] ^= 1 << rng.below(8);
+                let _ = Frame::decode(enc[4], &body);
+            }
+        }
+        // huge declared counts must error without allocating
+        let mut sparse = Frame::Delta {
+            session: 0, request: 0, seq: 0, keyframe: false, bucket: 1,
+            true_len: 1, ks: 1, kd: 1, packed: vec![], updates: vec![],
+        }.encode()[FRAME_OVERHEAD_BYTES..].to_vec();
+        let off = STREAM_HEADER_BYTES;
+        sparse[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Frame::decode(7, &sparse).is_err());
+        let mut ack = Frame::HelloAck { version: 2, caps: 0, buckets: vec![] }
+            .encode()[FRAME_OVERHEAD_BYTES..].to_vec();
+        ack[6..8].copy_from_slice(&u16::MAX.to_le_bytes());
+        assert!(Frame::decode(8, &ack).is_err());
     }
 }

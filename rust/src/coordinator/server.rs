@@ -1,13 +1,29 @@
-//! The edge server: TCP accept loop → per-connection readers → shared
-//! dynamic batcher → a worker pool sized to the accelerator count
-//! (compute units), executing the fused server HLOs (reconstruct +
-//! layers 2..L + head).  Thread-per-connection with a writer channel
-//! per client; the batcher and workers communicate over mpsc.
+//! The edge serving stack, split along three seams:
+//!
+//! * [`ServingModel`] — the fused server executables per (bucket,
+//!   batch) plus the stacked weights they consume.
+//! * [`ServingService`] — the transport-agnostic service core: it
+//!   owns sessions, the dynamic batcher feed, metrics, handshake
+//!   negotiation, and all frame semantics behind the typed
+//!   [`ServingService::handle`] API.  It never sees a socket.
+//! * Transport adapters — [`serve_transport`] pumps any
+//!   [`Transport`] (TCP, in-proc, shaped) through the core;
+//!   [`EdgeServer`] is the thin TCP accept loop,
+//!   [`ServiceHandle::connect_inproc`] the zero-socket connector the
+//!   hermetic tests, benches, and the sim's live probe use.
+//!
+//! Batching is unchanged: per-connection readers feed a shared
+//! dynamic batcher; a worker pool sized to the accelerator count
+//! executes the fused server HLOs (reconstruct + layers 2..L + head)
+//! and answers through per-connection writer channels.
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
-use super::protocol::{Frame, STREAM_HEADER_BYTES};
+use super::protocol::{caps, BucketGeom, ErrorCode, Frame,
+                      ACTIVATION_HEADER_BYTES, PROTOCOL_MAGIC,
+                      PROTOCOL_VERSION, STREAM_HEADER_BYTES};
 use super::session::SessionManager;
+use super::transport::{InProcTransport, TcpTransport, Transport};
 use crate::codec::fourier::unpack_block_into;
 use crate::codec::stream::{BlockGeom, UPDATE_WIRE_BYTES};
 use crate::codec::CodecEngine;
@@ -93,6 +109,18 @@ impl ServingModel {
                           buckets, exes, server_args, batch_sizes })
     }
 
+    /// The bucket geometry table as advertised in the `HelloAck`.
+    pub fn bucket_geoms(&self) -> Vec<BucketGeom> {
+        self.buckets
+            .values()
+            .map(|bm| BucketGeom {
+                bucket: bm.bucket as u16,
+                ks: bm.ks as u16,
+                kd: bm.kd as u16,
+            })
+            .collect()
+    }
+
     /// Execute a group (same bucket) and return per-item next-token
     /// (argmax at true_len-1) + logprob.
     pub fn run_group(&self, bucket: usize, items: &[GroupItem])
@@ -165,165 +193,319 @@ enum Job {
     Group { bucket: usize, items: Vec<GroupItem> },
 }
 
-pub struct EdgeServer;
-
-pub struct ServerHandle {
-    pub addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    pub metrics: Arc<Metrics>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+/// Immediate outcome of [`ServingService::handle`] for one inbound
+/// frame.  Asynchronous results (tokens from the batcher workers)
+/// flow through the connection's reply channel, never through this.
+pub enum Response {
+    /// Nothing to send now.
+    None,
+    /// Send this frame to the peer.
+    Reply(Frame),
+    /// The connection is done (client `Bye` or service shutdown).
+    Close,
 }
 
-impl ServerHandle {
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.addr); // unblock accept
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+/// Per-connection state owned by the transport adapter and threaded
+/// through [`ServingService::handle`]: the warm codec engine, the
+/// reply channel the batcher answers on, and what the handshake
+/// negotiated.
+pub struct ConnState {
+    engine: CodecEngine,
+    reply: mpsc::Sender<Frame>,
+    peer: String,
+    client_caps: u32,
+    /// This connection's ownership nonce (nonzero, unique per
+    /// connection) — recorded as the session's `owner` at handshake
+    /// so no other live connection can `Hello` the same session.
+    conn_id: u64,
+    /// The session this connection handshook (valid once
+    /// `hello_done`).  Data frames must name exactly this session — a
+    /// connection cannot act on (or resurrect) other tenants'
+    /// sessions.
+    session: u64,
+    hello_done: bool,
+}
+
+impl ConnState {
+    /// Capabilities in effect on this connection (client ∩ server).
+    pub fn negotiated_caps(&self, server_caps: u32) -> u32 {
+        self.client_caps & server_caps
     }
 }
 
-impl EdgeServer {
-    /// Start the server; returns once the socket is listening.
-    pub fn start(cfg: ServeConfig, store: Arc<ArtifactStore>)
-        -> Result<ServerHandle> {
-        let model = Arc::new(ServingModel::load(&store)?);
-        let metrics = Arc::new(Metrics::new());
-        let sessions = Arc::new(Mutex::new(SessionManager::new(
-            Duration::from_secs(cfg.session_ttl_s), 100_000)));
-        let stop = Arc::new(AtomicBool::new(false));
+/// The transport-agnostic serving core: sessions, batching feed,
+/// metrics, and frame semantics.  One instance serves every
+/// connection regardless of medium; adapters call
+/// [`ServingService::open_conn`] once per link and then
+/// [`ServingService::handle`] per frame.
+pub struct ServingService {
+    model: Arc<ServingModel>,
+    pub metrics: Arc<Metrics>,
+    sessions: Arc<Mutex<SessionManager>>,
+    breq_tx: mpsc::Sender<(usize, GroupItem)>,
+    /// Capability bits this server advertises in `HelloAck`.
+    pub caps: u32,
+    /// Connection-nonce source for session ownership (starts at 1 —
+    /// owner 0 means "unowned").
+    next_conn: std::sync::atomic::AtomicU64,
+}
 
-        let listener = TcpListener::bind(&cfg.listen)
-            .with_context(|| format!("binding {}", cfg.listen))?;
-        let addr = listener.local_addr()?;
-        crate::info!("server", "listening on {addr} model={} units={} batch<= {}",
-                     model.model, cfg.compute_units, cfg.max_batch);
+impl ServingService {
+    /// Per-connection setup: a codec engine pre-warmed for every
+    /// servable bucket (geometry was validated by
+    /// [`ServingModel::load`], so warming cannot trip the
+    /// freq_indices asserts).
+    pub fn open_conn(&self, reply: mpsc::Sender<Frame>, peer: String)
+        -> ConnState {
+        let mut engine = CodecEngine::new();
+        for (&bucket, bm) in &self.model.buckets {
+            engine.warm(bucket, self.model.d_model, bm.ks, bm.kd);
+        }
+        let conn_id = self.next_conn.fetch_add(1, Ordering::Relaxed);
+        ConnState { engine, reply, peer, client_caps: 0, conn_id, session: 0,
+                    hello_done: false }
+    }
 
-        // batcher input + worker job channels
-        let (breq_tx, breq_rx) = mpsc::channel::<(usize, GroupItem)>();
-        let (job_tx, job_rx) = mpsc::channel::<Job>();
-        let job_rx = Arc::new(Mutex::new(job_rx));
-        let mut handles = Vec::new();
+    /// Connection teardown: release the session-ownership binding so
+    /// a legitimate reconnect (same session, new connection) is
+    /// admitted immediately.  Called by [`serve_transport`] on every
+    /// exit path.
+    pub fn close_conn(&self, conn: &ConnState) {
+        if conn.hello_done {
+            self.sessions.lock().unwrap()
+                .release_owner(conn.session, conn.conn_id);
+        }
+    }
 
-        // batcher thread
-        {
-            let stop = stop.clone();
-            let metrics = metrics.clone();
-            let max_batch = cfg.max_batch;
-            let deadline = Duration::from_micros(cfg.batch_deadline_us);
-            handles.push(std::thread::spawn(move || {
-                let mut batcher: Batcher<GroupItem> = Batcher::new(max_batch, deadline);
-                loop {
-                    if stop.load(Ordering::SeqCst) {
-                        break;
+    /// The handshake + session-binding gate every data frame passes:
+    /// a frame before `Hello`, or naming a session other than the one
+    /// this connection handshook, is a typed unknown-session reject.
+    fn session_gate(&self, conn: &ConnState, session: u64)
+        -> Option<Response> {
+        if !conn.hello_done {
+            return Some(Self::err(ErrorCode::UnknownSession,
+                                  "handshake required".into()));
+        }
+        if session != conn.session {
+            return Some(Self::err(
+                ErrorCode::UnknownSession,
+                format!("session {session} is not bound to this connection \
+                         (handshook {})", conn.session)));
+        }
+        None
+    }
+
+    fn err(code: ErrorCode, msg: String) -> Response {
+        Response::Reply(Frame::Error { code, msg })
+    }
+
+    /// Bucket lookup + geometry agreement check shared by the
+    /// Activation and Delta arms: the frame's (ks, kd) must match the
+    /// manifest's for that bucket.
+    fn checked_geom(&self, bucket: usize, ks: u16, kd: u16)
+        -> Option<(usize, usize)> {
+        match self.model.buckets.get(&bucket) {
+            Some(bm) if bm.ks == ks as usize && bm.kd == kd as usize => {
+                Some((bm.ks, bm.kd))
+            }
+            _ => None,
+        }
+    }
+
+    /// Shared tail of both data arms: unpack a packed block with the
+    /// connection's warm engine and hand the result to the batcher.
+    /// `re`/`im` are owned by the GroupItem (they cross the batcher
+    /// thread boundary), but the index sets and unpack bookkeeping
+    /// come from the warm engine.
+    fn unpack_and_enqueue(&self, conn: &mut ConnState, session: u64,
+                          request: u64, bucket: usize, bks: usize, bkd: usize,
+                          true_len: u16, block: &[f32], t_rx: Instant)
+        -> Response {
+        let t0 = Instant::now();
+        let (mut re, mut im) = (Vec::new(), Vec::new());
+        let unpacked = unpack_block_into(&mut conn.engine, block, bucket,
+                                         self.model.d_model, bks, bkd,
+                                         &mut re, &mut im);
+        self.metrics.decompress_us.record(t0.elapsed());
+        if let Err(e) = unpacked {
+            return Self::err(ErrorCode::BadRequest, format!("unpack: {e}"));
+        }
+        let item = GroupItem {
+            session,
+            request,
+            true_len: true_len as usize,
+            re,
+            im,
+            reply: conn.reply.clone(),
+            t_rx,
+        };
+        if self.breq_tx.send((bucket, item)).is_err() {
+            return Response::Close; // service shutting down
+        }
+        Response::None
+    }
+
+    /// Handle one inbound frame against this connection's state.
+    /// Every protocol decision lives here; transports only move
+    /// bytes.
+    pub fn handle(&self, conn: &mut ConnState, frame: Frame) -> Response {
+        match frame {
+            Frame::Hello { magic, version, caps: client_caps, session,
+                           model } => {
+                self.metrics.hellos.fetch_add(1, Ordering::Relaxed);
+                if magic != PROTOCOL_MAGIC {
+                    self.metrics.proto_rejects.fetch_add(1, Ordering::Relaxed);
+                    crate::debug!("service", "{}: bad magic {magic:#010x}",
+                                  conn.peer);
+                    return Self::err(ErrorCode::VersionMismatch,
+                                     format!("bad magic {magic:#010x}"));
+                }
+                if version != PROTOCOL_VERSION {
+                    self.metrics.proto_rejects.fetch_add(1, Ordering::Relaxed);
+                    crate::debug!("service", "{}: protocol v{version}",
+                                  conn.peer);
+                    return Self::err(
+                        ErrorCode::VersionMismatch,
+                        format!("protocol v{version} unsupported \
+                                 (server speaks v{PROTOCOL_VERSION})"));
+                }
+                {
+                    let mut sessions = self.sessions.lock().unwrap();
+                    // ownership check first: a refused takeover must
+                    // not refresh or rewrite the foreign session
+                    if sessions.owned_by_other(session, conn.conn_id) {
+                        return Self::err(
+                            ErrorCode::AdmissionRefused,
+                            format!("session {session} is bound to another \
+                                     live connection"));
                     }
-                    let wait = batcher
-                        .next_deadline(Instant::now())
-                        .unwrap_or(Duration::from_millis(50))
-                        .min(Duration::from_millis(50));
-                    match breq_rx.recv_timeout(wait) {
-                        Ok((bucket, item)) => batcher.push(bucket, item),
-                        Err(mpsc::RecvTimeoutError::Timeout) => {}
-                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    if !sessions.hello(session, &model, client_caps) {
+                        return Self::err(ErrorCode::AdmissionRefused,
+                                         "admission refused".into());
                     }
-                    while let Some(bucket) = batcher.ready_bucket(Instant::now()) {
-                        let group = batcher.take(bucket);
-                        metrics.batches.fetch_add(1, Ordering::Relaxed);
-                        metrics.batch_size_sum
-                            .fetch_add(group.len() as u64, Ordering::Relaxed);
-                        let now = Instant::now();
-                        let items: Vec<GroupItem> = group
-                            .into_iter()
-                            .map(|p| {
-                                metrics.queue_wait_us.record(
-                                    now.duration_since(p.enqueued));
-                                p.item
-                            })
-                            .collect();
-                        if job_tx.send(Job::Group { bucket, items }).is_err() {
-                            return;
-                        }
+                    // cannot fail: the lock is held and the ownership
+                    // check above passed
+                    sessions.bind_owner(session, conn.conn_id);
+                    // re-handshaking onto a different session releases
+                    // the old binding
+                    if conn.hello_done && conn.session != session {
+                        sessions.release_owner(conn.session, conn.conn_id);
                     }
                 }
-            }));
-        }
-
-        // worker pool — one thread per compute unit
-        for wid in 0..cfg.compute_units {
-            let job_rx = job_rx.clone();
-            let model = model.clone();
-            let metrics = metrics.clone();
-            let stop = stop.clone();
-            handles.push(std::thread::spawn(move || loop {
-                let job = {
-                    let rx = job_rx.lock().unwrap();
-                    rx.recv_timeout(Duration::from_millis(50))
+                conn.client_caps = client_caps;
+                conn.session = session;
+                conn.hello_done = true;
+                Response::Reply(Frame::HelloAck {
+                    version: PROTOCOL_VERSION,
+                    caps: self.caps,
+                    buckets: self.model.bucket_geoms(),
+                })
+            }
+            Frame::Activation { session, request, bucket, true_len, ks, kd,
+                                packed } => {
+                let t_rx = Instant::now();
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                self.metrics.bytes_rx.fetch_add(
+                    (packed.len() * 4 + ACTIVATION_HEADER_BYTES) as u64,
+                    Ordering::Relaxed);
+                if let Some(reject) = self.session_gate(conn, session) {
+                    return reject;
+                }
+                {
+                    let body = (packed.len() * 4) as u64;
+                    let mut sessions = self.sessions.lock().unwrap();
+                    if !sessions.touch(session, body) {
+                        // recompute requests are stateless: an evicted
+                        // session is re-admitted like a stream keyframe
+                        // rather than failed mid-generation — only
+                        // live-table admission pressure refuses
+                        if !sessions.readmit(session) {
+                            return Self::err(ErrorCode::AdmissionRefused,
+                                             "admission refused".into());
+                        }
+                        sessions.touch(session, body);
+                    }
+                }
+                let bucket = bucket as usize;
+                let Some((bks, bkd)) = self.checked_geom(bucket, ks, kd)
+                else {
+                    return Self::err(ErrorCode::BadRequest,
+                                     format!("bad bucket {bucket}/{ks}x{kd}"));
                 };
-                match job {
-                    Ok(Job::Group { bucket, items }) => {
-                        let t0 = Instant::now();
-                        match model.run_group(bucket, &items) {
-                            Ok(results) => {
-                                metrics.exec_us.record(t0.elapsed());
-                                for (it, (token, logprob)) in
-                                    items.iter().zip(results) {
-                                    metrics.tokens.fetch_add(1, Ordering::Relaxed);
-                                    metrics.e2e_us.record(it.t_rx.elapsed());
-                                    let _ = it.reply.send(Frame::Token {
-                                        request: it.request, token, logprob });
-                                }
-                            }
-                            Err(e) => {
-                                crate::error!("worker", "unit {wid}: {e:#}");
-                                for it in &items {
-                                    let _ = it.reply.send(Frame::Error {
-                                        msg: format!("{e:#}") });
-                                }
-                            }
-                        }
-                    }
-                    Err(mpsc::RecvTimeoutError::Timeout) => {
-                        if stop.load(Ordering::SeqCst) {
-                            break;
-                        }
-                    }
-                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                self.unpack_and_enqueue(conn, session, request, bucket, bks,
+                                        bkd, true_len, &packed, t_rx)
+            }
+            Frame::Delta { session, request, seq, keyframe, bucket, true_len,
+                           ks, kd, packed, updates } => {
+                let t_rx = Instant::now();
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                let body_bytes = if keyframe {
+                    packed.len() * 4
+                } else {
+                    4 + updates.len() * UPDATE_WIRE_BYTES
+                };
+                let wire = (body_bytes + STREAM_HEADER_BYTES) as u64;
+                self.metrics.bytes_rx.fetch_add(wire, Ordering::Relaxed);
+                if let Some(reject) = self.session_gate(conn, session) {
+                    return reject;
                 }
-            }));
-        }
-
-        // accept loop
-        {
-            let stop = stop.clone();
-            let metrics = metrics.clone();
-            let model = model.clone();
-            handles.push(std::thread::spawn(move || {
-                for conn in listener.incoming() {
-                    if stop.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    match conn {
-                        Ok(stream) => {
-                            let breq_tx = breq_tx.clone();
-                            let metrics = metrics.clone();
-                            let sessions = sessions.clone();
-                            let model = model.clone();
-                            std::thread::spawn(move || {
-                                if let Err(e) = handle_conn(stream, breq_tx,
-                                                            metrics, sessions,
-                                                            model) {
-                                    crate::debug!("conn", "closed: {e:#}");
-                                }
-                            });
-                        }
-                        Err(e) => crate::warn_!("server", "accept: {e}"),
-                    }
+                if conn.negotiated_caps(self.caps) & caps::STREAM == 0 {
+                    return Self::err(
+                        ErrorCode::BadRequest,
+                        "stream capability not negotiated".into());
                 }
-            }));
+                let bucket = bucket as usize;
+                let Some((bks, bkd)) = self.checked_geom(bucket, ks, kd)
+                else {
+                    return Self::err(ErrorCode::BadRequest,
+                                     format!("bad bucket {bucket}/{ks}x{kd}"));
+                };
+                // only frames a negotiated peer aims at a real stream
+                // count in the key/delta wire split (in-sequence
+                // rejections still count — stream_rejects marks them);
+                // rogue or mis-negotiated frames must not fabricate
+                // stream traffic in the byte-win accounting
+                if keyframe {
+                    self.metrics.key_frames.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.key_bytes_rx.fetch_add(wire,
+                                                        Ordering::Relaxed);
+                } else {
+                    self.metrics.delta_frames.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.delta_bytes_rx.fetch_add(wire,
+                                                          Ordering::Relaxed);
+                }
+                let geom = BlockGeom { rows: bucket,
+                                       cols: self.model.d_model,
+                                       ks: bks, kd: bkd };
+                // apply the frame to the per-session decoder state
+                // under the session lock — any failure (gap, evicted
+                // state, admission) surfaces as a StreamReject the
+                // client answers with a keyframe resync
+                let applied = {
+                    let mut guard = self.sessions.lock().unwrap();
+                    apply_stream_frame(&mut guard, session, seq, keyframe,
+                                       geom, body_bytes as u64, &packed,
+                                       &updates)
+                };
+                let block = match applied {
+                    Ok(block) => block,
+                    Err(e) => {
+                        self.metrics.stream_rejects.fetch_add(
+                            1, Ordering::Relaxed);
+                        return Self::err(ErrorCode::StreamReject,
+                                         format!("stream: {e:#}"));
+                    }
+                };
+                self.unpack_and_enqueue(conn, session, request, bucket, bks,
+                                        bkd, true_len, &block, t_rx)
+            }
+            Frame::GetStats => Response::Reply(Frame::Stats {
+                json: self.metrics.to_json().to_string_compact() }),
+            Frame::Bye => Response::Close,
+            other => Self::err(ErrorCode::BadRequest,
+                               format!("unexpected frame {}",
+                                       other.type_id())),
         }
-
-        Ok(ServerHandle { addr, stop, metrics, handles })
     }
 }
 
@@ -355,182 +537,295 @@ fn apply_stream_frame(sessions: &mut SessionManager, session: u64, seq: u32,
     Ok(dec.block().to_vec())
 }
 
-fn handle_conn(stream: TcpStream, breq_tx: mpsc::Sender<(usize, GroupItem)>,
-               metrics: Arc<Metrics>, sessions: Arc<Mutex<SessionManager>>,
-               model: Arc<ServingModel>) -> Result<()> {
-    stream.set_nodelay(true)?;
-    let mut reader = std::io::BufReader::new(stream.try_clone()?);
-    let writer = stream;
-    // per-connection codec engine: cached index sets survive across
-    // this session's requests, and workers never contend on a shared
-    // plan-cache lock (the old global Mutex<HashMap> is gone — the
-    // shared tier is an RwLock reached only on a per-engine miss).
-    // geometry was validated by ServingModel::load, so warming cannot
-    // trip the freq_indices asserts
-    let mut engine = CodecEngine::new();
-    for (&bucket, bm) in &model.buckets {
-        engine.warm(bucket, model.d_model, bm.ks, bm.kd);
-    }
+/// Pump one transport through the service core: a writer thread
+/// drains the reply channel into the tx half while this thread feeds
+/// inbound frames to [`ServingService::handle`].  Returns when the
+/// peer disconnects, says `Bye`, or the service shuts down.  Every
+/// medium — TCP, in-proc, shaped — goes through exactly this loop.
+pub fn serve_transport(service: Arc<ServingService>,
+                       transport: Box<dyn Transport>) -> Result<()> {
+    let peer = transport.peer();
+    let (mut tx, mut rx) = transport.split()?;
 
     // writer thread: serialises replies from batcher workers + us
     let (reply_tx, reply_rx) = mpsc::channel::<Frame>();
-    let mtx = metrics.clone();
+    let metrics = service.metrics.clone();
     let wh = std::thread::spawn(move || {
-        let mut w = std::io::BufWriter::new(writer);
         while let Ok(frame) = reply_rx.recv() {
-            let bytes = frame.encode();
-            mtx.bytes_tx.fetch_add(bytes.len() as u64, Ordering::Relaxed);
-            if std::io::Write::write_all(&mut w, &bytes).is_err() {
-                break;
+            match tx.send(&frame) {
+                Ok(n) => {
+                    metrics.bytes_tx.fetch_add(n as u64, Ordering::Relaxed);
+                }
+                Err(_) => break,
             }
-            let _ = std::io::Write::flush(&mut w);
         }
     });
 
+    let mut conn = service.open_conn(reply_tx.clone(), peer);
     loop {
-        let frame = match Frame::read_from(&mut reader) {
+        let frame = match rx.recv() {
             Ok(f) => f,
             Err(_) => break, // disconnect
         };
-        match frame {
-            Frame::Hello { session, model: m } => {
-                let ok = sessions.lock().unwrap().hello(session, &m);
-                if !ok {
-                    let _ = reply_tx.send(Frame::Error {
-                        msg: "admission refused".into() });
+        match service.handle(&mut conn, frame) {
+            Response::None => {}
+            Response::Reply(f) => {
+                if reply_tx.send(f).is_err() {
+                    break;
                 }
             }
-            Frame::Activation { session, request, bucket, true_len, ks, kd,
-                                packed } => {
-                let t_rx = Instant::now();
-                metrics.requests.fetch_add(1, Ordering::Relaxed);
-                metrics.bytes_rx.fetch_add((packed.len() * 4 + 24) as u64,
-                                           Ordering::Relaxed);
-                sessions.lock().unwrap()
-                    .touch(session, (packed.len() * 4) as u64);
-                let bucket = bucket as usize;
-                let bm = match model.buckets.get(&bucket) {
-                    Some(bm) if bm.ks == ks as usize && bm.kd == kd as usize => bm,
-                    _ => {
-                        let _ = reply_tx.send(Frame::Error {
-                            msg: format!("bad bucket {bucket}/{ks}x{kd}") });
-                        continue;
-                    }
-                };
-                let t0 = Instant::now();
-                // re/im are owned by the GroupItem (they cross the
-                // batcher thread boundary), but the index sets and
-                // unpack bookkeeping come from the warm engine.
-                let (mut re, mut im) = (Vec::new(), Vec::new());
-                let unpacked = unpack_block_into(&mut engine, &packed, bucket,
-                                                 model.d_model, bm.ks, bm.kd,
-                                                 &mut re, &mut im);
-                metrics.decompress_us.record(t0.elapsed());
-                match unpacked {
-                    Ok(()) => {
-                        let item = GroupItem {
-                            session, request,
-                            true_len: true_len as usize,
-                            re, im,
-                            reply: reply_tx.clone(),
-                            t_rx,
-                        };
-                        if breq_tx.send((bucket, item)).is_err() {
-                            break;
-                        }
-                    }
-                    Err(e) => {
-                        let _ = reply_tx.send(Frame::Error {
-                            msg: format!("unpack: {e}") });
-                    }
-                }
-            }
-            Frame::Delta { session, request, seq, keyframe, bucket, true_len,
-                           ks, kd, packed, updates } => {
-                let t_rx = Instant::now();
-                metrics.requests.fetch_add(1, Ordering::Relaxed);
-                let body_bytes = if keyframe {
-                    packed.len() * 4
-                } else {
-                    4 + updates.len() * UPDATE_WIRE_BYTES
-                };
-                let wire = (body_bytes + STREAM_HEADER_BYTES) as u64;
-                metrics.bytes_rx.fetch_add(wire, Ordering::Relaxed);
-                if keyframe {
-                    metrics.key_frames.fetch_add(1, Ordering::Relaxed);
-                    metrics.key_bytes_rx.fetch_add(wire, Ordering::Relaxed);
-                } else {
-                    metrics.delta_frames.fetch_add(1, Ordering::Relaxed);
-                    metrics.delta_bytes_rx.fetch_add(wire, Ordering::Relaxed);
-                }
-                let bucket = bucket as usize;
-                let (bks, bkd) = match model.buckets.get(&bucket) {
-                    Some(bm) if bm.ks == ks as usize
-                        && bm.kd == kd as usize => (bm.ks, bm.kd),
-                    _ => {
-                        let _ = reply_tx.send(Frame::Error {
-                            msg: format!("bad bucket {bucket}/{ks}x{kd}") });
-                        continue;
-                    }
-                };
-                let geom = BlockGeom { rows: bucket, cols: model.d_model,
-                                       ks: bks, kd: bkd };
-                // apply the frame to the per-session decoder state
-                // under the session lock — any failure (gap, evicted
-                // state, admission) surfaces as an Error the client
-                // answers with a keyframe resync
-                let applied = {
-                    let mut guard = sessions.lock().unwrap();
-                    apply_stream_frame(&mut guard, session, seq, keyframe,
-                                       geom, body_bytes as u64, &packed,
-                                       &updates)
-                };
-                match applied {
-                    Ok(block) => {
-                        let t0 = Instant::now();
-                        let (mut re, mut im) = (Vec::new(), Vec::new());
-                        let unpacked = unpack_block_into(
-                            &mut engine, &block, bucket, model.d_model, bks,
-                            bkd, &mut re, &mut im);
-                        metrics.decompress_us.record(t0.elapsed());
-                        match unpacked {
-                            Ok(()) => {
-                                let item = GroupItem {
-                                    session, request,
-                                    true_len: true_len as usize,
-                                    re, im,
-                                    reply: reply_tx.clone(),
-                                    t_rx,
-                                };
-                                if breq_tx.send((bucket, item)).is_err() {
-                                    break;
-                                }
-                            }
-                            Err(e) => {
-                                let _ = reply_tx.send(Frame::Error {
-                                    msg: format!("unpack: {e}") });
-                            }
-                        }
-                    }
-                    Err(e) => {
-                        metrics.stream_rejects.fetch_add(1, Ordering::Relaxed);
-                        let _ = reply_tx.send(Frame::Error {
-                            msg: format!("stream: {e:#}") });
-                    }
-                }
-            }
-            Frame::GetStats => {
-                let _ = reply_tx.send(Frame::Stats {
-                    json: metrics.to_json().to_string_compact() });
-            }
-            Frame::Bye => break,
-            other => {
-                let _ = reply_tx.send(Frame::Error {
-                    msg: format!("unexpected frame {}", other.type_id()) });
-            }
+            Response::Close => break,
         }
     }
+    service.close_conn(&conn);
+    drop(conn);
     drop(reply_tx);
     let _ = wh.join();
     Ok(())
+}
+
+/// A running service core (batcher + worker pool) with no listener
+/// attached: transports are plugged in via [`ServiceHandle::serve`]
+/// or [`ServiceHandle::connect_inproc`].  [`EdgeServer::start`] wraps
+/// one of these with a TCP accept loop.
+pub struct ServiceHandle {
+    service: Arc<ServingService>,
+    pub metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServiceHandle {
+    pub fn service(&self) -> Arc<ServingService> {
+        self.service.clone()
+    }
+
+    /// Serve one transport on its own (detached) thread — the same
+    /// lifecycle as a TCP connection thread.
+    pub fn serve(&self, transport: Box<dyn Transport>) {
+        let service = self.service.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = serve_transport(service, transport) {
+                crate::debug!("conn", "closed: {e:#}");
+            }
+        });
+    }
+
+    /// Open a zero-socket connection to this service: returns the
+    /// device half of an [`InProcTransport`] pair whose server half
+    /// is already being served.
+    pub fn connect_inproc(&self) -> InProcTransport {
+        let (device, server) = InProcTransport::pair();
+        self.serve(Box::new(server));
+        device
+    }
+
+    /// Stop the batcher + workers and join them.  Connection threads
+    /// are detached and exit when their peer (or the batcher feed)
+    /// goes away.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Start the service core: model load, batcher thread, and a worker
+/// pool sized to `cfg.compute_units`.  No listener — see
+/// [`EdgeServer::start`] for the TCP adapter.
+pub fn start_service(cfg: &ServeConfig, store: Arc<ArtifactStore>)
+    -> Result<ServiceHandle> {
+    let model = Arc::new(ServingModel::load(&store)?);
+    let metrics = Arc::new(Metrics::new());
+    let sessions = Arc::new(Mutex::new(SessionManager::new(
+        Duration::from_secs(cfg.session_ttl_s), 100_000)));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // batcher input + worker job channels
+    let (breq_tx, breq_rx) = mpsc::channel::<(usize, GroupItem)>();
+    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let mut handles = Vec::new();
+
+    // batcher thread
+    {
+        let stop = stop.clone();
+        let metrics = metrics.clone();
+        let max_batch = cfg.max_batch;
+        let deadline = Duration::from_micros(cfg.batch_deadline_us);
+        handles.push(std::thread::spawn(move || {
+            let mut batcher: Batcher<GroupItem> = Batcher::new(max_batch, deadline);
+            loop {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let wait = batcher
+                    .next_deadline(Instant::now())
+                    .unwrap_or(Duration::from_millis(50))
+                    .min(Duration::from_millis(50));
+                match breq_rx.recv_timeout(wait) {
+                    Ok((bucket, item)) => batcher.push(bucket, item),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+                while let Some(bucket) = batcher.ready_bucket(Instant::now()) {
+                    let group = batcher.take(bucket);
+                    metrics.batches.fetch_add(1, Ordering::Relaxed);
+                    metrics.batch_size_sum
+                        .fetch_add(group.len() as u64, Ordering::Relaxed);
+                    let now = Instant::now();
+                    let items: Vec<GroupItem> = group
+                        .into_iter()
+                        .map(|p| {
+                            metrics.queue_wait_us.record(
+                                now.duration_since(p.enqueued));
+                            p.item
+                        })
+                        .collect();
+                    if job_tx.send(Job::Group { bucket, items }).is_err() {
+                        return;
+                    }
+                }
+            }
+        }));
+    }
+
+    // worker pool — one thread per compute unit
+    for wid in 0..cfg.compute_units {
+        let job_rx = job_rx.clone();
+        let model = model.clone();
+        let metrics = metrics.clone();
+        let stop = stop.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let job = {
+                let rx = job_rx.lock().unwrap();
+                rx.recv_timeout(Duration::from_millis(50))
+            };
+            match job {
+                Ok(Job::Group { bucket, items }) => {
+                    let t0 = Instant::now();
+                    match model.run_group(bucket, &items) {
+                        Ok(results) => {
+                            metrics.exec_us.record(t0.elapsed());
+                            for (it, (token, logprob)) in
+                                items.iter().zip(results) {
+                                metrics.tokens.fetch_add(1, Ordering::Relaxed);
+                                metrics.e2e_us.record(it.t_rx.elapsed());
+                                let _ = it.reply.send(Frame::Token {
+                                    request: it.request, token, logprob });
+                            }
+                        }
+                        Err(e) => {
+                            crate::error!("worker", "unit {wid}: {e:#}");
+                            for it in &items {
+                                let _ = it.reply.send(Frame::Error {
+                                    code: ErrorCode::Internal,
+                                    msg: format!("{e:#}") });
+                            }
+                        }
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }));
+    }
+
+    let mut server_caps = caps::CODEC_FC;
+    if cfg.stream {
+        server_caps |= caps::STREAM;
+    }
+    let service = Arc::new(ServingService {
+        model,
+        metrics: metrics.clone(),
+        sessions,
+        breq_tx,
+        caps: server_caps,
+        next_conn: std::sync::atomic::AtomicU64::new(1),
+    });
+    Ok(ServiceHandle { service, metrics, stop, handles })
+}
+
+pub struct EdgeServer;
+
+/// A service core plus its TCP accept loop.  `connect_inproc` still
+/// works — TCP and in-proc clients share the same sessions, batcher,
+/// and metrics.
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    pub metrics: Arc<Metrics>,
+    inner: ServiceHandle,
+}
+
+impl ServerHandle {
+    /// Zero-socket connection into the same running service.
+    pub fn connect_inproc(&self) -> InProcTransport {
+        self.inner.connect_inproc()
+    }
+
+    pub fn service(&self) -> Arc<ServingService> {
+        self.inner.service()
+    }
+
+    pub fn shutdown(self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr); // unblock accept
+        self.inner.shutdown();
+    }
+}
+
+impl EdgeServer {
+    /// Start the service core and its TCP transport adapter; returns
+    /// once the socket is listening.
+    pub fn start(cfg: ServeConfig, store: Arc<ArtifactStore>)
+        -> Result<ServerHandle> {
+        let mut inner = start_service(&cfg, store)?;
+
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding {}", cfg.listen))?;
+        let addr = listener.local_addr()?;
+        crate::info!("server", "listening on {addr} model={} units={} batch<= {}",
+                     inner.service.model.model, cfg.compute_units,
+                     cfg.max_batch);
+
+        // accept loop: a thin adapter — every connection is just a
+        // TcpTransport pumped through the shared service core
+        {
+            let stop = inner.stop.clone();
+            let service = inner.service.clone();
+            inner.handles.push(std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let service = service.clone();
+                            std::thread::spawn(move || {
+                                let t = match TcpTransport::from_stream(stream) {
+                                    Ok(t) => t,
+                                    Err(e) => {
+                                        crate::debug!("conn", "setup: {e:#}");
+                                        return;
+                                    }
+                                };
+                                if let Err(e) =
+                                    serve_transport(service, Box::new(t)) {
+                                    crate::debug!("conn", "closed: {e:#}");
+                                }
+                            });
+                        }
+                        Err(e) => crate::warn_!("server", "accept: {e}"),
+                    }
+                }
+            }));
+        }
+
+        Ok(ServerHandle { addr, metrics: inner.metrics.clone(), inner })
+    }
 }

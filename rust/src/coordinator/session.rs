@@ -13,6 +13,16 @@ use std::time::{Duration, Instant};
 pub struct Session {
     pub id: u64,
     pub model: String,
+    /// Capability bits the client advertised in its v2 `Hello` —
+    /// recorded so operators (and future multi-link sessions) can see
+    /// what each session negotiated, not just what it sends.
+    pub caps: u32,
+    /// Nonzero while a live connection owns this session (the
+    /// connection's nonce); released at connection teardown.  A
+    /// `Hello` for a session owned by another live connection is
+    /// refused — no cross-tenant takeover while the owner is
+    /// connected.
+    pub owner: u64,
     pub created: Instant,
     pub last_seen: Instant,
     pub requests: u64,
@@ -34,9 +44,33 @@ impl SessionManager {
         SessionManager { sessions: HashMap::new(), ttl, max_sessions }
     }
 
-    /// Register (or refresh) a session.  Returns false if the table is
-    /// full even after eviction — admission control.
-    pub fn hello(&mut self, id: u64, model: &str) -> bool {
+    /// Register (or refresh) a session from a handshake, recording
+    /// the client's advertised capability bits.  Returns false if the
+    /// table is full even after eviction — admission control.
+    pub fn hello(&mut self, id: u64, model: &str, caps: u32) -> bool {
+        if !self.admit(id, model) {
+            return false;
+        }
+        if let Some(s) = self.sessions.get_mut(&id) {
+            s.caps = caps;
+        }
+        true
+    }
+
+    /// Re-admit a session outside a handshake.  Recompute-regime
+    /// requests are stateless, so a TTL/LRU-evicted session resumes
+    /// here (with empty model and untouched caps) instead of failing
+    /// the client mid-generation — the Activation-path analogue of
+    /// the stream keyframe's re-admission.  Returns false only under
+    /// live-table admission pressure.
+    pub fn readmit(&mut self, id: u64) -> bool {
+        self.admit(id, "")
+    }
+
+    /// Admission under the TTL/LRU rules, without touching the
+    /// recorded capability bits — the keyframe re-admission path,
+    /// which must not erase what the handshake negotiated.
+    fn admit(&mut self, id: u64, model: &str) -> bool {
         self.evict_expired();
         if !self.sessions.contains_key(&id) && self.sessions.len() >= self.max_sessions {
             // LRU eviction of the stalest entry
@@ -59,6 +93,8 @@ impl SessionManager {
             .or_insert(Session {
                 id,
                 model: model.to_string(),
+                caps: 0,
+                owner: 0,
                 created: now,
                 last_seen: now,
                 requests: 0,
@@ -68,13 +104,50 @@ impl SessionManager {
         true
     }
 
+    /// Whether `id` is currently owned by a live connection other
+    /// than `conn` — checked *before* `hello` so a refused takeover
+    /// cannot refresh or rewrite the foreign session's state.
+    pub fn owned_by_other(&self, id: u64, conn: u64) -> bool {
+        self.sessions
+            .get(&id)
+            .map(|s| s.owner != 0 && s.owner != conn)
+            .unwrap_or(false)
+    }
+
+    /// Bind session `id` to connection nonce `conn` (nonzero).
+    /// Refuses when another live connection owns the session;
+    /// re-binding by the same connection is idempotent.  Ownership is
+    /// undone by [`SessionManager::release_owner`] at connection
+    /// teardown (or implicitly by TTL eviction of the session).
+    pub fn bind_owner(&mut self, id: u64, conn: u64) -> bool {
+        match self.sessions.get_mut(&id) {
+            Some(s) if s.owner == 0 || s.owner == conn => {
+                s.owner = conn;
+                true
+            }
+            Some(_) => false,
+            None => false,
+        }
+    }
+
+    /// Release `conn`'s ownership of `id` (no-op if the session is
+    /// gone or owned by someone else — eviction may already have
+    /// recycled the id).
+    pub fn release_owner(&mut self, id: u64, conn: u64) {
+        if let Some(s) = self.sessions.get_mut(&id) {
+            if s.owner == conn {
+                s.owner = 0;
+            }
+        }
+    }
+
     /// Decoder for a stream **keyframe**: (re-)admits the session
     /// under the same TTL/LRU rules as [`SessionManager::hello`] and
     /// records the request.  `None` means admission was refused (table
     /// full of live sessions).
     pub fn stream_key_decoder(&mut self, id: u64, bytes: u64)
         -> Option<&mut StreamDecoder> {
-        if !self.hello(id, "") {
+        if !self.admit(id, "") {
             return None;
         }
         let s = self.sessions.get_mut(&id)?;
@@ -147,7 +220,7 @@ mod tests {
     #[test]
     fn hello_touch_flow() {
         let mut m = SessionManager::new(Duration::from_secs(60), 10);
-        assert!(m.hello(1, "x"));
+        assert!(m.hello(1, "x", 0));
         assert!(m.touch(1, 100));
         assert!(!m.touch(2, 100)); // unknown
         assert_eq!(m.len(), 1);
@@ -156,17 +229,17 @@ mod tests {
     #[test]
     fn admission_control_when_full_of_active() {
         let mut m = SessionManager::new(Duration::from_secs(60), 2);
-        assert!(m.hello(1, "x"));
-        assert!(m.hello(2, "x"));
+        assert!(m.hello(1, "x", 0));
+        assert!(m.hello(2, "x", 0));
         // both active within TTL: third must be refused
-        assert!(!m.hello(3, "x"));
+        assert!(!m.hello(3, "x", 0));
         assert_eq!(m.len(), 2);
     }
 
     #[test]
     fn ttl_eviction() {
         let mut m = SessionManager::new(Duration::from_millis(10), 10);
-        m.hello(1, "x");
+        m.hello(1, "x", 0);
         std::thread::sleep(Duration::from_millis(20));
         m.evict_expired();
         assert!(m.is_empty());
@@ -175,9 +248,9 @@ mod tests {
     #[test]
     fn stale_session_evicted_for_new() {
         let mut m = SessionManager::new(Duration::from_millis(10), 1);
-        m.hello(1, "x");
+        m.hello(1, "x", 0);
         std::thread::sleep(Duration::from_millis(20));
-        assert!(m.hello(2, "x"));
+        assert!(m.hello(2, "x", 0));
         assert!(m.touch(2, 1));
         assert!(!m.touch(1, 1));
     }
@@ -191,7 +264,7 @@ mod tests {
     #[test]
     fn ttl_eviction_mid_stream_forces_keyframe_resync() {
         let mut m = SessionManager::new(Duration::from_millis(10), 4);
-        assert!(m.hello(1, "x"));
+        assert!(m.hello(1, "x", 0));
         let packed = vec![1.0f32, 2.0, 3.0];
         m.stream_key_decoder(1, 12)
             .unwrap()
@@ -219,8 +292,8 @@ mod tests {
     #[test]
     fn stream_admission_under_max_sessions_pressure() {
         let mut m = SessionManager::new(Duration::from_secs(60), 2);
-        assert!(m.hello(1, "x"));
-        assert!(m.hello(2, "x"));
+        assert!(m.hello(1, "x", 0));
+        assert!(m.hello(2, "x", 0));
         // table full of live sessions: a new stream may not evict them
         assert!(m.stream_key_decoder(3, 0).is_none());
         assert_eq!(m.len(), 2);
@@ -230,9 +303,53 @@ mod tests {
     }
 
     #[test]
+    fn readmit_revives_an_evicted_session() {
+        let mut m = SessionManager::new(Duration::from_secs(60), 4);
+        // unknown session: touch refuses, readmit creates it
+        assert!(!m.touch(3, 1));
+        assert!(m.readmit(3));
+        assert!(m.touch(3, 1));
+        // under live-table pressure, readmit refuses like hello does
+        let mut full = SessionManager::new(Duration::from_secs(60), 1);
+        assert!(full.hello(1, "x", 0));
+        assert!(!full.readmit(2));
+    }
+
+    #[test]
+    fn ownership_blocks_takeover_until_released() {
+        let mut m = SessionManager::new(Duration::from_secs(60), 4);
+        assert!(m.hello(7, "x", 0));
+        assert!(m.bind_owner(7, 101));
+        assert!(m.bind_owner(7, 101), "same connection re-binds freely");
+        // another live connection may not take the session over
+        assert!(!m.bind_owner(7, 102));
+        // wrong releaser is a no-op; the right one frees it
+        m.release_owner(7, 102);
+        assert!(!m.bind_owner(7, 102));
+        m.release_owner(7, 101);
+        assert!(m.bind_owner(7, 102), "released session is re-bindable");
+        // unknown sessions cannot be bound at all
+        assert!(!m.bind_owner(99, 101));
+    }
+
+    #[test]
+    fn caps_survive_keyframe_readmission() {
+        let mut m = SessionManager::new(Duration::from_secs(60), 4);
+        assert!(m.hello(9, "x", 0b101));
+        assert_eq!(m.get(9).unwrap().caps, 0b101);
+        // keyframe re-admission must not erase the negotiated bits
+        assert!(m.stream_key_decoder(9, 4).is_some());
+        assert_eq!(m.get(9).unwrap().caps, 0b101);
+        assert_eq!(m.get(9).unwrap().model, "x");
+        // a fresh handshake re-records them
+        assert!(m.hello(9, "x", 0b1));
+        assert_eq!(m.get(9).unwrap().caps, 0b1);
+    }
+
+    #[test]
     fn touch_after_remove_is_refused() {
         let mut m = SessionManager::new(Duration::from_secs(60), 4);
-        assert!(m.hello(5, "x"));
+        assert!(m.hello(5, "x", 0));
         assert!(m.touch(5, 10));
         m.remove(5);
         assert!(!m.touch(5, 10));

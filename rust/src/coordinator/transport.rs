@@ -1,0 +1,375 @@
+//! Transport abstraction: a framed, ordered, bidirectional link
+//! between a device client and the serving core.
+//!
+//! The serving stack never touches sockets directly — it speaks
+//! [`Frame`]s through a [`Transport`], which splits into a sending
+//! ([`FrameTx`]) and a receiving ([`FrameRx`]) half so the server's
+//! writer thread and reader loop (and the client's send/await pair)
+//! can live on different threads.  Three implementations:
+//!
+//! * [`TcpTransport`] — the production medium: length-prefixed frames
+//!   over a `TcpStream` (nodelay, buffered halves).
+//! * [`InProcTransport`] — an mpsc-backed pair with **zero sockets**:
+//!   hermetic tests, the sim's live probe, and benches drive the real
+//!   serving core through it.  Frames still cross the link as encoded
+//!   bytes, so the full encode/decode path is exercised and byte
+//!   accounting matches TCP exactly.
+//! * [`ShapedTransport`] — a decorator composing any inner transport
+//!   with [`Channel`] bandwidth/latency shaping and deterministic
+//!   frame-drop injection ([`DropPlan`]) for stream-resync testing.
+//!
+//! Contract every impl must honour: frames arrive **in send order**,
+//! exactly once per direction (unless a shaping decorator explicitly
+//! drops them), and `recv` returns `Err` on a closed peer — there is
+//! no silent truncation and no reordering.
+
+use super::protocol::Frame;
+use crate::net::{Channel, DropPlan};
+use anyhow::{anyhow, Result};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Sending half of a framed link.
+pub trait FrameTx: Send {
+    /// Write one already-encoded frame (the full wire image:
+    /// length-prefix + type + body); returns its length.  Impls and
+    /// decorators work at this level so a frame is serialised exactly
+    /// once per send, however deep the decorator stack.
+    fn send_encoded(&mut self, bytes: &[u8]) -> Result<usize>;
+
+    /// Encode + write one frame; returns the wire bytes it occupied,
+    /// which the byte accounting on both sides records.
+    fn send(&mut self, frame: &Frame) -> Result<usize> {
+        self.send_encoded(&frame.encode())
+    }
+}
+
+/// Receiving half of a framed link.  `recv` blocks until a frame
+/// arrives and returns `Err` once the peer is gone.
+pub trait FrameRx: Send {
+    fn recv(&mut self) -> Result<Frame>;
+}
+
+/// A framed, ordered, bidirectional byte link.
+pub trait Transport: Send {
+    /// Consume the transport into its two directional halves.
+    fn split(self: Box<Self>) -> Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)>;
+    /// Human-readable peer label for logs.
+    fn peer(&self) -> String;
+}
+
+// ---------------------------------------------------------------------------
+// TCP
+// ---------------------------------------------------------------------------
+
+/// Length-prefixed frames over a `TcpStream` — the current production
+/// medium, now one impl among equals.
+pub struct TcpTransport {
+    stream: TcpStream,
+}
+
+impl TcpTransport {
+    /// Client side: connect with nodelay and a 60 s read timeout (a
+    /// hung server must surface as an error, not a wedged device).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<TcpTransport> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+        Ok(TcpTransport { stream })
+    }
+
+    /// Server side: adopt an accepted connection.
+    pub fn from_stream(stream: TcpStream) -> Result<TcpTransport> {
+        stream.set_nodelay(true)?;
+        Ok(TcpTransport { stream })
+    }
+}
+
+impl Transport for TcpTransport {
+    fn split(self: Box<Self>) -> Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)> {
+        let TcpTransport { stream } = *self;
+        let reader = stream.try_clone()?;
+        Ok((Box::new(TcpTx { w: BufWriter::new(stream) }),
+            Box::new(TcpRx { r: BufReader::new(reader) })))
+    }
+
+    fn peer(&self) -> String {
+        self.stream
+            .peer_addr()
+            .map(|a| format!("tcp:{a}"))
+            .unwrap_or_else(|_| "tcp:?".into())
+    }
+}
+
+struct TcpTx {
+    w: BufWriter<TcpStream>,
+}
+
+impl FrameTx for TcpTx {
+    fn send_encoded(&mut self, bytes: &[u8]) -> Result<usize> {
+        self.w.write_all(bytes)?;
+        self.w.flush()?;
+        Ok(bytes.len())
+    }
+}
+
+struct TcpRx {
+    r: BufReader<TcpStream>,
+}
+
+impl FrameRx for TcpRx {
+    fn recv(&mut self) -> Result<Frame> {
+        Frame::read_from(&mut self.r)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// in-process
+// ---------------------------------------------------------------------------
+
+/// An mpsc-backed transport pair: no sockets, no OS at all, but
+/// frames still cross the link as encoded byte vectors so both ends
+/// run the exact wire encode/decode path (including [`Frame`]'s
+/// size/alignment checks) and per-frame byte counts are identical to
+/// TCP.
+pub struct InProcTransport {
+    tx: mpsc::Sender<Vec<u8>>,
+    rx: mpsc::Receiver<Vec<u8>>,
+    label: &'static str,
+}
+
+impl InProcTransport {
+    /// A connected (device, server) pair.
+    pub fn pair() -> (InProcTransport, InProcTransport) {
+        let (c2s_tx, c2s_rx) = mpsc::channel();
+        let (s2c_tx, s2c_rx) = mpsc::channel();
+        (InProcTransport { tx: c2s_tx, rx: s2c_rx, label: "inproc:device" },
+         InProcTransport { tx: s2c_tx, rx: c2s_rx, label: "inproc:server" })
+    }
+}
+
+impl Transport for InProcTransport {
+    fn split(self: Box<Self>) -> Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)> {
+        let InProcTransport { tx, rx, .. } = *self;
+        Ok((Box::new(InProcTx { tx }), Box::new(InProcRx { rx })))
+    }
+
+    fn peer(&self) -> String {
+        self.label.to_string()
+    }
+}
+
+struct InProcTx {
+    tx: mpsc::Sender<Vec<u8>>,
+}
+
+impl FrameTx for InProcTx {
+    fn send_encoded(&mut self, bytes: &[u8]) -> Result<usize> {
+        let n = bytes.len();
+        self.tx
+            .send(bytes.to_vec())
+            .map_err(|_| anyhow!("in-proc peer disconnected"))?;
+        Ok(n)
+    }
+
+    // direct (undecorated) sends move the encoded vector instead of
+    // copying it through the slice-level path
+    fn send(&mut self, frame: &Frame) -> Result<usize> {
+        let bytes = frame.encode();
+        let n = bytes.len();
+        self.tx
+            .send(bytes)
+            .map_err(|_| anyhow!("in-proc peer disconnected"))?;
+        Ok(n)
+    }
+}
+
+struct InProcRx {
+    rx: mpsc::Receiver<Vec<u8>>,
+}
+
+impl FrameRx for InProcRx {
+    fn recv(&mut self) -> Result<Frame> {
+        // same hung-peer bound as TcpTransport::connect's read
+        // timeout: a wedged service must turn into a test failure,
+        // not a CI job that hangs until the job-level timeout
+        let bytes = self
+            .rx
+            .recv_timeout(Duration::from_secs(60))
+            .map_err(|e| anyhow!("in-proc recv: {e}"))?;
+        let mut cur = std::io::Cursor::new(bytes);
+        Frame::read_from(&mut cur)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shaped decorator
+// ---------------------------------------------------------------------------
+
+/// Decorator composing any inner transport with [`Channel`] shaping
+/// (uplink serialisation + propagation sleeps on every send) and a
+/// deterministic [`DropPlan`] that silently discards selected frames
+/// by send index — the lever the stream-resync tests pull to lose a
+/// delta "on the wire" without a lossy network.
+///
+/// Only the send direction is shaped/dropped: the device uplink is
+/// the bottleneck the paper models, and dropping server replies would
+/// test the client's timeout, not the stream protocol.
+pub struct ShapedTransport {
+    inner: Box<dyn Transport>,
+    channel: Channel,
+    drop: DropPlan,
+}
+
+impl ShapedTransport {
+    pub fn new(inner: Box<dyn Transport>, channel: Channel, drop: DropPlan)
+        -> ShapedTransport {
+        ShapedTransport { inner, channel, drop }
+    }
+}
+
+impl Transport for ShapedTransport {
+    fn split(self: Box<Self>) -> Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)> {
+        let ShapedTransport { inner, channel, drop } = *self;
+        let peer = inner.peer();
+        let (tx, rx) = inner.split()?;
+        Ok((Box::new(ShapedTx { inner: tx, channel, drop, peer }), rx))
+    }
+
+    fn peer(&self) -> String {
+        format!("shaped({})", self.inner.peer())
+    }
+}
+
+struct ShapedTx {
+    inner: Box<dyn FrameTx>,
+    channel: Channel,
+    drop: DropPlan,
+    peer: String,
+}
+
+impl FrameTx for ShapedTx {
+    fn send_encoded(&mut self, bytes: &[u8]) -> Result<usize> {
+        let n = bytes.len();
+        if self.drop.should_drop() {
+            // the frame is lost after crossing the link: it still
+            // costs the sender its transfer time and byte budget
+            self.channel.throttle(n);
+            crate::debug!("transport", "{}: dropped frame type {} ({n} B)",
+                          self.peer, bytes.get(4).copied().unwrap_or(0xFF));
+            return Ok(n);
+        }
+        // sleep the emulated transfer time BEFORE the peer can see
+        // the frame — the server must not start computing while the
+        // bytes are still "on the wire" (no-op on unshaped channels)
+        self.channel.throttle(n);
+        self.inner.send_encoded(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::{caps, ErrorCode};
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::hello(7, caps::STREAM | caps::CODEC_FC, "llamette-m"),
+            Frame::Activation {
+                session: 1, request: 2, bucket: 16, true_len: 9, ks: 3, kd: 3,
+                packed: vec![0.5; 9],
+            },
+            Frame::Token { request: 2, token: 65, logprob: -0.5 },
+            Frame::Error { code: ErrorCode::StreamReject, msg: "gap".into() },
+            Frame::Bye,
+        ]
+    }
+
+    #[test]
+    fn inproc_roundtrips_frames_in_order() {
+        let (device, server) = InProcTransport::pair();
+        let (mut dtx, mut drx) = Box::new(device).split().unwrap();
+        let (mut stx, mut srx) = Box::new(server).split().unwrap();
+        for f in sample_frames() {
+            let n = dtx.send(&f).unwrap();
+            assert_eq!(n, f.encode().len(), "reported wire bytes");
+            assert_eq!(srx.recv().unwrap(), f);
+        }
+        // and the reverse direction
+        let tok = Frame::Token { request: 9, token: 1, logprob: 0.0 };
+        stx.send(&tok).unwrap();
+        assert_eq!(drx.recv().unwrap(), tok);
+    }
+
+    #[test]
+    fn inproc_disconnect_is_error_not_hang() {
+        let (device, server) = InProcTransport::pair();
+        let (dtx, drx) = Box::new(device).split().unwrap();
+        drop(dtx);
+        drop(drx);
+        let (mut stx, mut srx) = Box::new(server).split().unwrap();
+        assert!(stx.send(&Frame::Bye).is_err());
+        assert!(srx.recv().is_err());
+    }
+
+    #[test]
+    fn tcp_transport_roundtrips_over_loopback() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let echo = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let t = TcpTransport::from_stream(stream).unwrap();
+            let (mut tx, mut rx) = (Box::new(t) as Box<dyn Transport>)
+                .split().unwrap();
+            loop {
+                match rx.recv() {
+                    Ok(Frame::Bye) | Err(_) => break,
+                    Ok(f) => { tx.send(&f).unwrap(); }
+                }
+            }
+        });
+        let t = TcpTransport::connect(addr).unwrap();
+        assert!(t.peer().starts_with("tcp:"));
+        let (mut tx, mut rx) = (Box::new(t) as Box<dyn Transport>)
+            .split().unwrap();
+        for f in sample_frames() {
+            if matches!(f, Frame::Bye) {
+                continue;
+            }
+            tx.send(&f).unwrap();
+            assert_eq!(rx.recv().unwrap(), f, "echo mismatch");
+        }
+        tx.send(&Frame::Bye).unwrap();
+        echo.join().unwrap();
+    }
+
+    #[test]
+    fn shaped_drops_exactly_the_planned_indices() {
+        let (device, server) = InProcTransport::pair();
+        let shaped = ShapedTransport::new(Box::new(device),
+                                          Channel::unlimited(),
+                                          DropPlan::at(&[1, 3]));
+        assert!(shaped.peer().starts_with("shaped("));
+        let (mut dtx, _drx) = Box::new(shaped).split().unwrap();
+        let (_stx, mut srx) = Box::new(server).split().unwrap();
+        let frames: Vec<Frame> = (0..5)
+            .map(|i| Frame::Token { request: i, token: i as i32,
+                                    logprob: 0.0 })
+            .collect();
+        for f in &frames {
+            // dropped frames still report their wire size
+            assert_eq!(dtx.send(f).unwrap(), f.encode().len());
+        }
+        // only indices 0, 2, 4 arrive, in order
+        for want in [0u64, 2, 4] {
+            match srx.recv().unwrap() {
+                Frame::Token { request, .. } => assert_eq!(request, want),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        drop(dtx);
+        assert!(srx.recv().is_err(), "no ghost frames after the plan");
+    }
+}

@@ -9,9 +9,13 @@
 //!   split executor (client layers / codec boundary / server layers).
 //! * [`codec`] — the FourierCompress codec and every baseline the
 //!   paper compares against (Top-k, QR, FWSVD, ASVD, SVD-LLM, INT8).
-//! * [`coordinator`] — the serving system: wire protocol, router,
-//!   dynamic batcher, session manager, metrics.
-//! * [`net`] — simulated bandwidth/latency channel.
+//! * [`coordinator`] — the serving system (API v2): versioned wire
+//!   protocol with a negotiated handshake, pluggable transports
+//!   (TCP / in-proc / shaped), the transport-agnostic
+//!   `ServingService` core, dynamic batcher, session manager,
+//!   metrics.
+//! * [`net`] — simulated bandwidth/latency channel + deterministic
+//!   frame-drop plans.
 //! * [`sim`] — discrete-event multi-client simulator (Fig 7).
 //! * [`eval`] — MCQ accuracy harness + activation analysis (Tables
 //!   II/III, Figs 2/4/5).

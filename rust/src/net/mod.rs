@@ -1,9 +1,12 @@
 //! Simulated wireless channel: token-bucket bandwidth shaping +
-//! propagation latency, wrapped around byte transfers.
+//! propagation latency, wrapped around byte transfers, plus
+//! deterministic frame-loss injection ([`DropPlan`]).
 //!
-//! Two uses: (1) the live coordinator wraps its TCP streams in a
-//! [`Channel`] to emulate 6G link rates on loopback; (2) the DES
-//! (Fig 7) uses [`Channel::transfer_time`] analytically.
+//! Three uses: (1) the live coordinator's shaped transport wraps any
+//! framed link in a [`Channel`] to emulate 6G link rates on loopback
+//! or in-proc; (2) the DES (Fig 7) uses [`Channel::transfer_time`]
+//! analytically; (3) the stream-resync tests lose selected frames via
+//! a [`DropPlan`] instead of a lossy network.
 
 use std::time::Duration;
 
@@ -32,6 +35,14 @@ impl Channel {
 
     pub fn unlimited() -> Channel {
         Channel { bits_per_sec: 0.0, latency: Duration::ZERO }
+    }
+
+    /// Whether this channel actually delays anything — false for
+    /// [`Channel::unlimited`], letting callers (the device client's
+    /// TCP connect path) skip the shaping decorator entirely on
+    /// unshaped links.
+    pub fn is_shaping(&self) -> bool {
+        self.bits_per_sec > 0.0 || self.latency > Duration::ZERO
     }
 
     /// Time for `bytes` to cross the link (serialisation + propagation).
@@ -75,9 +86,67 @@ impl Channel {
     }
 }
 
+/// Deterministic frame-drop schedule for the shaped transport: the
+/// frames whose 0-based send index appears in the plan are silently
+/// discarded after "crossing" the link.  Deterministic by
+/// construction — a test that drops frame 2 drops exactly frame 2 on
+/// every run, so resync behaviour is assertable, not probabilistic.
+#[derive(Debug, Clone, Default)]
+pub struct DropPlan {
+    indices: Vec<u64>,
+    next: u64,
+    dropped: u64,
+}
+
+impl DropPlan {
+    /// Drop nothing (the plan every production link uses).
+    pub fn none() -> DropPlan {
+        DropPlan::default()
+    }
+
+    /// Drop exactly the frames at these 0-based send indices.
+    pub fn at(indices: &[u64]) -> DropPlan {
+        DropPlan { indices: indices.to_vec(), next: 0, dropped: 0 }
+    }
+
+    /// Advance the send counter; true means "lose this frame".
+    pub fn should_drop(&mut self) -> bool {
+        let i = self.next;
+        self.next += 1;
+        if self.indices.contains(&i) {
+            self.dropped += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Frames lost so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Frames offered so far (dropped or delivered).
+    pub fn offered(&self) -> u64 {
+        self.next
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn drop_plan_is_deterministic_by_index() {
+        let mut p = DropPlan::at(&[0, 2, 2, 5]);
+        let got: Vec<bool> = (0..7).map(|_| p.should_drop()).collect();
+        assert_eq!(got, vec![true, false, true, false, false, true, false]);
+        assert_eq!(p.dropped(), 3);
+        assert_eq!(p.offered(), 7);
+        let mut none = DropPlan::none();
+        assert!((0..100).all(|_| !none.should_drop()));
+        assert_eq!(none.dropped(), 0);
+    }
 
     #[test]
     fn transfer_time_scales_linearly() {
@@ -98,6 +167,9 @@ mod tests {
     #[test]
     fn unlimited_is_zero() {
         assert_eq!(Channel::unlimited().transfer_time(1 << 30), Duration::ZERO);
+        assert!(!Channel::unlimited().is_shaping());
+        assert!(Channel::gbps(1.0, 0).is_shaping());
+        assert!(Channel::gbps(0.0, 50).is_shaping());
     }
 
     #[test]

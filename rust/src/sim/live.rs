@@ -1,0 +1,179 @@
+//! Live calibration probe: drive the *real* serving core (sessions,
+//! batcher, workers, codec engines) through an in-proc transport —
+//! zero sockets — and record per-step wire bytes, so the DES byte
+//! model ([`super::bytes_per_step`]) can be audited against the live
+//! stack instead of trusted.
+//!
+//! The DES abstracts a decode step to "bytes over a shared link";
+//! this module produces those bytes from an actual
+//! `DeviceClient`/`ServingService` exchange over
+//! [`crate::coordinator::InProcTransport`], per step and per regime
+//! (recompute vs spectral delta stream).
+
+use crate::codec::stream::StreamConfig;
+use crate::config::ServeConfig;
+use crate::coordinator::{start_service, DeviceClient};
+use crate::model::tokenizer;
+use crate::runtime::ArtifactStore;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// One decode step as observed on the wire.
+#[derive(Debug, Clone, Copy)]
+pub struct LiveStep {
+    /// Uplink bytes this step cost (frame overhead + header + body).
+    pub wire_bytes: u64,
+    /// Whether the step went out as a stream keyframe (always false
+    /// in the recompute regime).
+    pub keyframe: bool,
+}
+
+/// A measured generation: per-step wire bytes plus the tokens it
+/// produced (so regimes can be checked for semantic parity, not just
+/// byte counts).
+#[derive(Debug, Clone)]
+pub struct LiveTrace {
+    pub steps: Vec<LiveStep>,
+    pub key_frames: u64,
+    pub delta_frames: u64,
+    pub tokens: Vec<i32>,
+}
+
+impl LiveTrace {
+    pub fn total_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.wire_bytes).sum()
+    }
+}
+
+/// Run `steps` decode steps against the real serving core over an
+/// in-proc link and return the per-step wire accounting.  `stream`
+/// switches the spectral delta regime on (the server must advertise
+/// the stream capability).  The service is started and shut down
+/// inside the call — the probe is hermetic and socket-free.
+pub fn trace_serving_bytes(cfg: &ServeConfig, store: Arc<ArtifactStore>,
+                           prompt: &str, steps: usize,
+                           stream: Option<StreamConfig>) -> Result<LiveTrace> {
+    let handle = start_service(cfg, store.clone())?;
+    let transport = handle.connect_inproc();
+    let mut client = DeviceClient::connect_over(Box::new(transport), &store, 1)?;
+    if let Some(sc) = stream {
+        ensure!(client.enable_stream(sc),
+                "server did not advertise the stream capability");
+    }
+
+    let mut ctx = tokenizer::encode_prompt(prompt);
+    let mut trace = LiveTrace {
+        steps: Vec::with_capacity(steps),
+        key_frames: 0,
+        delta_frames: 0,
+        tokens: Vec::with_capacity(steps),
+    };
+    let mut last_bytes = client.stats.bytes_sent;
+    let mut last_keys = client.stats.key_frames;
+    for _ in 0..steps {
+        let (token, _lp) = client.step(&ctx)?;
+        ctx.push(token);
+        trace.tokens.push(token);
+        trace.steps.push(LiveStep {
+            wire_bytes: client.stats.bytes_sent - last_bytes,
+            keyframe: client.stats.key_frames > last_keys,
+        });
+        last_bytes = client.stats.bytes_sent;
+        last_keys = client.stats.key_frames;
+    }
+    trace.key_frames = client.stats.key_frames;
+    trace.delta_frames = client.stats.delta_frames;
+    client.bye()?;
+    drop(client);
+    handle.shutdown();
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::{ACTIVATION_HEADER_BYTES,
+                                       FRAME_OVERHEAD_BYTES,
+                                       STREAM_HEADER_BYTES};
+    use crate::testkit::forged_store;
+
+    // short prompt: BOS + 9 bytes = 10 tokens, +4 steps stays inside
+    // the forged 16-token bucket, so every step ships the same block
+    const PROMPT: &str = "Q rok ? A";
+    const STEPS: usize = 4;
+
+    fn bucket16_block(store: &ArtifactStore) -> usize {
+        let b = store.manifest.path("serving.buckets.16").unwrap();
+        b.usize_or("ks", 0) * b.usize_or("kd", 0)
+    }
+
+    #[test]
+    fn recompute_steps_cost_exactly_one_activation_frame() {
+        let store = Arc::new(forged_store("sim_live_rc").unwrap());
+        let n = bucket16_block(&store);
+        assert!(n > 0, "forged manifest must carry bucket 16 geometry");
+        let trace = trace_serving_bytes(&ServeConfig::default(), store.clone(),
+                                        PROMPT, STEPS, None).unwrap();
+        let want = (FRAME_OVERHEAD_BYTES + ACTIVATION_HEADER_BYTES + n * 4)
+            as u64;
+        for (i, s) in trace.steps.iter().enumerate() {
+            assert!(!s.keyframe);
+            assert_eq!(s.wire_bytes, want,
+                       "step {i}: the live wire cost must equal the \
+                        Activation frame size the DES model charges");
+        }
+        assert_eq!(trace.key_frames + trace.delta_frames, 0);
+    }
+
+    #[test]
+    fn lossless_stream_trace_is_token_identical_to_recompute() {
+        let store = Arc::new(forged_store("sim_live_st").unwrap());
+        let n = bucket16_block(&store);
+        let base = trace_serving_bytes(&ServeConfig::default(), store.clone(),
+                                       PROMPT, STEPS, None).unwrap();
+        // zero drift threshold: every changed coefficient is replaced
+        // exactly (sparse delta or dense-change keyframe fallback), so
+        // token parity with the recompute regime is exact
+        let sc = StreamConfig { keyframe_interval: 1024,
+                                drift_threshold: 0.0 };
+        let stream = trace_serving_bytes(&ServeConfig::default(),
+                                         store.clone(), PROMPT, STEPS,
+                                         Some(sc)).unwrap();
+        assert_eq!(stream.tokens, base.tokens,
+                   "stream regime diverged from recompute");
+        assert!(stream.steps[0].keyframe, "first stream step is a keyframe");
+        let key_bytes = (FRAME_OVERHEAD_BYTES + STREAM_HEADER_BYTES + n * 4)
+            as u64;
+        assert_eq!(stream.steps[0].wire_bytes, key_bytes);
+    }
+
+    #[test]
+    fn delta_regime_undercuts_recompute_bytes() {
+        let store = Arc::new(forged_store("sim_live_dl").unwrap());
+        let n = bucket16_block(&store);
+        let base = trace_serving_bytes(&ServeConfig::default(), store.clone(),
+                                       PROMPT, STEPS, None).unwrap();
+        // a high threshold keeps every post-keyframe step in the delta
+        // regime regardless of how much the activation moves (the
+        // regime the DES's `stream_delta_fill` column models)
+        let sc = StreamConfig { keyframe_interval: 1024,
+                                drift_threshold: 0.9 };
+        let stream = trace_serving_bytes(&ServeConfig::default(),
+                                         store.clone(), PROMPT, STEPS,
+                                         Some(sc)).unwrap();
+        let key_bytes = (FRAME_OVERHEAD_BYTES + STREAM_HEADER_BYTES + n * 4)
+            as u64;
+        assert!(stream.steps[0].keyframe);
+        for (i, s) in stream.steps.iter().enumerate().skip(1) {
+            assert!(!s.keyframe, "step {i} re-keyed inside the bucket");
+            assert!(s.wire_bytes < key_bytes,
+                    "delta step {i} ({} B) must undercut a keyframe \
+                     ({key_bytes} B)", s.wire_bytes);
+        }
+        assert_eq!(stream.key_frames, 1);
+        assert_eq!(stream.delta_frames as usize, STEPS - 1);
+        assert!(stream.total_bytes() < base.total_bytes(),
+                "stream {} B vs recompute {} B", stream.total_bytes(),
+                base.total_bytes());
+    }
+}

@@ -8,8 +8,13 @@
 //!   (growing) activation + server queueing + compute] → response.
 //! The uplink is a shared FIFO resource, the server a `k`-server
 //! queue — exactly the two bottlenecks Fig 7 contrasts.
+//!
+//! The per-step byte model ([`bytes_per_step`]) is not taken on
+//! faith: [`live`] drives the real serving core over an in-proc
+//! transport and measures the same quantities on the actual wire.
 
 pub mod des;
+pub mod live;
 
 use crate::codec::stream::UPDATE_WIRE_BYTES;
 use crate::config::SimConfig;

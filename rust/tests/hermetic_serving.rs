@@ -76,9 +76,10 @@ fn multi_client_soak_through_tcp_batcher_codec() {
 }
 
 #[test]
-fn generation_is_deterministic_across_sessions() {
+fn generation_is_deterministic_across_sessions_and_transports() {
     // recompute-regime serving is pure: the same prompt must produce
-    // the same tokens regardless of session id or batch composition
+    // the same tokens regardless of session id, batch composition —
+    // or transport medium
     let store = Arc::new(forged_store("determinism").expect("forge artifacts"));
     let cfg = serve_config(&store.root, &["max_batch=2".into()]);
     let server = EdgeServer::start(cfg, store.clone()).unwrap();
@@ -97,6 +98,15 @@ fn generation_is_deterministic_across_sessions() {
             first = Some(g.tokens);
         }
     }
+
+    // the same generation, socket-free: an in-proc transport into the
+    // same running service must produce byte-identical token output
+    // to its TCP twins
+    let mut inproc = DeviceClient::connect_over(
+        Box::new(server.connect_inproc()), &store, 14).unwrap();
+    let g = inproc.generate("Q mira hue ? A", 4).unwrap();
+    assert_eq!(Some(g.tokens), first, "in-proc transport diverged from tcp");
+    inproc.bye().unwrap();
     server.shutdown();
 }
 

@@ -8,8 +8,9 @@
 //! absent (allowed skips are listed in rust/README.md).
 
 use fourier_compress::config::{FromJson, ServeConfig};
-use fourier_compress::coordinator::protocol::Frame;
-use fourier_compress::coordinator::{DeviceClient, EdgeServer};
+use fourier_compress::coordinator::protocol::{ErrorCode, Frame};
+use fourier_compress::coordinator::{DeviceClient, EdgeServer, TcpTransport,
+                                    Transport, CLIENT_CAPS};
 use fourier_compress::net::Channel;
 use fourier_compress::runtime::ArtifactStore;
 use fourier_compress::testkit::forged_store;
@@ -83,9 +84,10 @@ fn serve_generate_roundtrip_body(store: Arc<ArtifactStore>,
 }
 
 /// A geometry the manifest does not serve must be refused with a
-/// protocol Error, not a crash.
+/// typed protocol Error, not a crash — driven over a raw
+/// `TcpTransport` so the test pins the wire behaviour, not the
+/// `DeviceClient` conveniences.
 fn rejects_bad_bucket_body(store: Arc<ArtifactStore>) {
-    use std::io::BufReader;
     let model = store
         .manifest
         .path("serving.model")
@@ -95,19 +97,27 @@ fn rejects_bad_bucket_body(store: Arc<ArtifactStore>) {
     let cfg = serve_config(&store, &[]);
     let server = EdgeServer::start(cfg, store).unwrap();
 
-    let tcp = std::net::TcpStream::connect(server.addr).unwrap();
-    let mut reader = BufReader::new(tcp.try_clone().unwrap());
-    let mut w = tcp;
-    Frame::Hello { session: 9, model }.write_to(&mut w).unwrap();
-    Frame::Activation {
+    let t = TcpTransport::connect(server.addr).unwrap();
+    let (mut tx, mut rx) = Box::new(t).split().unwrap();
+    tx.send(&Frame::hello(9, CLIENT_CAPS, model)).unwrap();
+    match rx.recv().unwrap() {
+        Frame::HelloAck { buckets, .. } => {
+            assert!(!buckets.is_empty(), "ack must advertise geometry");
+        }
+        other => panic!("expected HelloAck, got {}", other.type_id()),
+    }
+    tx.send(&Frame::Activation {
         session: 9, request: 1, bucket: 999, true_len: 10, ks: 3, kd: 3,
         packed: vec![0.0; 9],
-    }.write_to(&mut w).unwrap();
-    match Frame::read_from(&mut reader).unwrap() {
-        Frame::Error { msg } => assert!(msg.contains("bucket")),
+    }).unwrap();
+    match rx.recv().unwrap() {
+        Frame::Error { code, msg } => {
+            assert_eq!(code, ErrorCode::BadRequest, "typed reject: {msg}");
+            assert!(msg.contains("bucket"));
+        }
         other => panic!("expected Error, got {}", other.type_id()),
     }
-    Frame::Bye.write_to(&mut w).unwrap();
+    tx.send(&Frame::Bye).unwrap();
     server.shutdown();
 }
 

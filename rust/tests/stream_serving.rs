@@ -204,10 +204,10 @@ fn stream_mode_generates_identical_tokens_lossless() {
     // token — matches the recompute regime
     let mut sc = DeviceClient::connect(&addr, &store, 22,
                                        Channel::unlimited()).unwrap();
-    sc.enable_stream(StreamConfig {
+    assert!(sc.enable_stream(StreamConfig {
         keyframe_interval: 64,
         drift_threshold: 0.0,
-    });
+    }), "handshake must negotiate the stream capability");
     assert!(sc.stream_enabled());
     let mut ctx = tokenizer::encode_prompt("Q mira hue ? A");
     let mut tokens = Vec::new();
@@ -255,10 +255,10 @@ fn ttl_eviction_mid_stream_recovers_via_keyframe_resync() {
                                        Channel::unlimited()).unwrap();
     // a high threshold keeps every post-keyframe step in the delta
     // regime regardless of how much the activation moves
-    sc.enable_stream(StreamConfig {
+    assert!(sc.enable_stream(StreamConfig {
         keyframe_interval: 1024,
         drift_threshold: 0.9,
-    });
+    }));
     // short prompt: all four steps stay inside the 16-token bucket,
     // so no geometry-change keyframes muddy the resync accounting
     // (BOS + 9 bytes = 10 tokens, +4 generated = 14 <= 16)

@@ -1,0 +1,405 @@
+//! Serving API v2 integration tests: the transport abstraction (TCP
+//! / in-proc / shaped), the negotiated handshake (version +
+//! capability bits + bucket geometry), typed error codes, and
+//! deterministic frame-drop stream resync — all hermetic against
+//! testkit-forged artifacts, most of them without a single socket.
+
+use fourier_compress::config::{FromJson, ServeConfig};
+use fourier_compress::coordinator::protocol::{caps, ErrorCode, Frame,
+                                              ServerError, PROTOCOL_MAGIC,
+                                              PROTOCOL_VERSION};
+use fourier_compress::coordinator::{DeviceClient, EdgeServer, ShapedTransport,
+                                    Transport, CLIENT_CAPS};
+use fourier_compress::net::{Channel, DropPlan};
+use fourier_compress::runtime::ArtifactStore;
+use fourier_compress::testkit::forged_store;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+fn serve_config(store_root: &std::path::Path, overrides: &[String])
+    -> ServeConfig {
+    let mut args = vec![
+        "listen=127.0.0.1:0".to_string(),
+        format!("artifacts={}", store_root.display()),
+    ];
+    args.extend_from_slice(overrides);
+    ServeConfig::load(None, &args).unwrap()
+}
+
+fn bucket16(store: &ArtifactStore) -> (u16, u16) {
+    let b = store.manifest.path("serving.buckets.16").expect("bucket 16");
+    (b.usize_or("ks", 0) as u16, b.usize_or("kd", 0) as u16)
+}
+
+/// The acceptance pin: a full serving body — two concurrent clients,
+/// generation, stats, compression accounting — runs socket-free over
+/// `InProcTransport`, and its token output is byte-identical to the
+/// same prompts driven through the TCP adapter of the *same* server.
+#[test]
+fn full_serving_body_over_inproc_matches_tcp_twin() {
+    let store = Arc::new(forged_store("tapi_twin").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &[
+        "max_batch=2".into(),
+        "batch_deadline_us=500".into(),
+    ]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+    let addr = server.addr.to_string();
+    let prompts = ["Q mira hue ? A", "Q rok den ? A"];
+
+    // TCP reference generations
+    let mut tcp_tokens = Vec::new();
+    for (i, prompt) in prompts.iter().enumerate() {
+        let mut c = DeviceClient::connect(&addr, &store, 100 + i as u64,
+                                          Channel::unlimited()).unwrap();
+        let g = c.generate(prompt, 4).unwrap();
+        assert!(g.steps >= 1);
+        c.bye().unwrap();
+        tcp_tokens.push(g.tokens);
+    }
+
+    // the same prompts, concurrently, with zero sockets
+    let mut handles = Vec::new();
+    for (i, prompt) in prompts.iter().enumerate() {
+        let transport = server.connect_inproc();
+        let store = store.clone();
+        let prompt = prompt.to_string();
+        handles.push(std::thread::spawn(move || {
+            let mut c = DeviceClient::connect_over(Box::new(transport), &store,
+                                                   200 + i as u64).unwrap();
+            let g = c.generate(&prompt, 4).unwrap();
+            assert!(c.stats.bytes_sent > 0);
+            // byte accounting is medium-independent, so the
+            // conjugate-symmetric packing win carries over unchanged
+            assert!(c.stats.compression_ratio() > 4.0,
+                    "ratio {}", c.stats.compression_ratio());
+            let stats = c.server_stats().unwrap();
+            assert!(stats.contains("\"requests\""));
+            c.bye().unwrap();
+            g.tokens
+        }));
+    }
+    for (h, want) in handles.into_iter().zip(&tcp_tokens) {
+        let got = h.join().unwrap();
+        assert_eq!(&got, want, "in-proc tokens diverged from tcp twin");
+    }
+    assert!(server.metrics.requests.load(Ordering::Relaxed) >= 4);
+    server.shutdown();
+}
+
+#[test]
+fn version_and_magic_mismatch_are_typed_rejects() {
+    let store = Arc::new(forged_store("tapi_ver").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &[]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+
+    let (mut tx, mut rx) = Box::new(server.connect_inproc()).split().unwrap();
+    // wrong protocol version
+    tx.send(&Frame::Hello {
+        magic: PROTOCOL_MAGIC, version: 99, caps: CLIENT_CAPS, session: 1,
+        model: "m".into(),
+    }).unwrap();
+    match rx.recv().unwrap() {
+        Frame::Error { code, msg } => {
+            assert_eq!(code, ErrorCode::VersionMismatch);
+            assert!(msg.contains("v99"), "msg: {msg}");
+        }
+        other => panic!("expected typed reject, got {}", other.type_id()),
+    }
+    // wrong magic (a v1 peer or garbage)
+    tx.send(&Frame::Hello {
+        magic: 0xDEAD_BEEF, version: PROTOCOL_VERSION, caps: CLIENT_CAPS,
+        session: 1, model: "m".into(),
+    }).unwrap();
+    match rx.recv().unwrap() {
+        Frame::Error { code, .. } => {
+            assert_eq!(code, ErrorCode::VersionMismatch);
+        }
+        other => panic!("expected typed reject, got {}", other.type_id()),
+    }
+    // data before a successful handshake is an unknown-session reject
+    tx.send(&Frame::Activation {
+        session: 1, request: 1, bucket: 16, true_len: 4, ks: 1, kd: 1,
+        packed: vec![0.0],
+    }).unwrap();
+    match rx.recv().unwrap() {
+        Frame::Error { code, .. } => {
+            assert_eq!(code, ErrorCode::UnknownSession);
+        }
+        other => panic!("expected unknown-session, got {}", other.type_id()),
+    }
+    assert_eq!(server.metrics.hellos.load(Ordering::Relaxed), 2);
+    assert_eq!(server.metrics.proto_rejects.load(Ordering::Relaxed), 2);
+    tx.send(&Frame::Bye).unwrap();
+    server.shutdown();
+}
+
+/// Recompute-regime requests are stateless: the connection's own
+/// session, TTL/LRU-evicted server-side, is transparently re-admitted
+/// — a generation must survive an idle gap, exactly like the stream
+/// regime survives it via keyframe resync.  But the handshake *binds*
+/// the connection to its session: frames naming any other session are
+/// a typed unknown-session reject, so one tenant can neither serve
+/// through nor resurrect another's session id.
+#[test]
+fn recompute_requests_survive_session_eviction() {
+    let store = Arc::new(forged_store("tapi_sess").expect("forge artifacts"));
+    let (ks, kd) = bucket16(&store);
+    let cfg = serve_config(&store.root, &["session_ttl_s=1".into()]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+
+    let (mut tx, mut rx) = Box::new(server.connect_inproc()).split().unwrap();
+    tx.send(&Frame::hello(7, CLIENT_CAPS, "forge-tiny")).unwrap();
+    assert!(matches!(rx.recv().unwrap(), Frame::HelloAck { .. }));
+    let activation = |request: u64, session: u64| Frame::Activation {
+        session, request, bucket: 16, true_len: 10, ks, kd,
+        packed: vec![0.25; ks as usize * kd as usize],
+    };
+    tx.send(&activation(1, 7)).unwrap();
+    assert!(matches!(rx.recv().unwrap(), Frame::Token { request: 1, .. }));
+
+    // idle past the TTL, then force eviction via another handshake
+    // (eviction runs at admission time)
+    std::thread::sleep(std::time::Duration::from_millis(1400));
+    let (mut tx2, mut rx2) = Box::new(server.connect_inproc()).split().unwrap();
+    tx2.send(&Frame::hello(8, CLIENT_CAPS, "forge-tiny")).unwrap();
+    assert!(matches!(rx2.recv().unwrap(), Frame::HelloAck { .. }));
+
+    // the evicted session's next recompute request must be served
+    // (re-admitted), not failed mid-generation
+    tx.send(&activation(2, 7)).unwrap();
+    assert!(matches!(rx.recv().unwrap(), Frame::Token { request: 2, .. }));
+    // ...but a frame naming a session this connection did NOT
+    // handshake is rejected — no cross-tenant serving or resurrection
+    tx.send(&activation(3, 999)).unwrap();
+    match rx.recv().unwrap() {
+        Frame::Error { code, msg } => {
+            assert_eq!(code, ErrorCode::UnknownSession, "{msg}");
+            assert!(msg.contains("999"), "msg: {msg}");
+        }
+        other => panic!("expected unknown-session, got {}", other.type_id()),
+    }
+    tx.send(&Frame::Bye).unwrap();
+    tx2.send(&Frame::Bye).unwrap();
+    server.shutdown();
+}
+
+/// The scenario the versioned handshake exists for: a v1-era client
+/// (old unversioned `Hello {session, model}` wire layout) must
+/// receive a typed VersionMismatch reject frame, not a silent
+/// disconnect on a parse failure.
+#[test]
+fn v1_wire_hello_gets_typed_version_reject() {
+    use std::io::Write;
+    let store = Arc::new(forged_store("tapi_v1").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &[]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+
+    // hand-build the v1 frame: u32 body_len | u8 type=0
+    //                          | u64 session | u16 model_len | model
+    let model = b"llamette-m";
+    let mut body = Vec::new();
+    body.extend_from_slice(&9u64.to_le_bytes());
+    body.extend_from_slice(&(model.len() as u16).to_le_bytes());
+    body.extend_from_slice(model);
+    let mut wire = (body.len() as u32).to_le_bytes().to_vec();
+    wire.push(0);
+    wire.extend_from_slice(&body);
+
+    let mut tcp = std::net::TcpStream::connect(server.addr).unwrap();
+    tcp.write_all(&wire).unwrap();
+    tcp.flush().unwrap();
+    match Frame::read_from(&mut tcp).unwrap() {
+        Frame::Error { code, msg } => {
+            assert_eq!(code, ErrorCode::VersionMismatch, "{msg}");
+        }
+        other => panic!("expected VersionMismatch, got {}", other.type_id()),
+    }
+    assert_eq!(server.metrics.proto_rejects.load(Ordering::Relaxed), 1);
+    server.shutdown();
+}
+
+/// Capability downgrade: the client wants the stream, the server
+/// does not advertise it → `enable_stream` reports the downgrade and
+/// generation proceeds in the recompute regime, no errors anywhere.
+#[test]
+fn stream_capability_downgrade_falls_back_to_recompute() {
+    let store = Arc::new(forged_store("tapi_caps").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &["stream=false".into()]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+
+    let mut client = DeviceClient::connect_over(
+        Box::new(server.connect_inproc()), &store, 31).unwrap();
+    assert_eq!(client.server_caps() & caps::STREAM, 0);
+    assert_ne!(client.server_caps() & caps::CODEC_FC, 0);
+    assert!(!client.enable_stream(Default::default()),
+            "enable_stream must report the downgrade");
+    assert!(!client.stream_enabled());
+
+    let g = client.generate("Q mira hue ? A", 3).unwrap();
+    assert!(g.steps >= 1, "recompute fallback must still generate");
+    assert_eq!(client.stats.key_frames + client.stats.delta_frames, 0,
+               "no stream frames may leave a downgraded client");
+    assert_eq!(client.stats.requests as usize, g.steps);
+    client.bye().unwrap();
+
+    let m = &server.metrics;
+    assert_eq!(m.key_frames.load(Ordering::Relaxed), 0);
+    assert_eq!(m.delta_frames.load(Ordering::Relaxed), 0);
+    // ...and a rogue Delta from a non-negotiated peer is a typed reject
+    let (mut tx, mut rx) = Box::new(server.connect_inproc()).split().unwrap();
+    tx.send(&Frame::hello(32, CLIENT_CAPS, "forge-tiny")).unwrap();
+    assert!(matches!(rx.recv().unwrap(), Frame::HelloAck { .. }));
+    let (ks, kd) = bucket16(&store);
+    tx.send(&Frame::Delta {
+        session: 32, request: 1, seq: 0, keyframe: true, bucket: 16,
+        true_len: 10, ks, kd, packed: vec![0.1; ks as usize * kd as usize],
+        updates: vec![],
+    }).unwrap();
+    match rx.recv().unwrap() {
+        Frame::Error { code, msg } => {
+            assert_eq!(code, ErrorCode::BadRequest);
+            assert!(msg.contains("capability"), "msg: {msg}");
+        }
+        other => panic!("expected typed reject, got {}", other.type_id()),
+    }
+    tx.send(&Frame::Bye).unwrap();
+    server.shutdown();
+}
+
+/// The HelloAck's advertised bucket geometry must agree with the
+/// manifest both sides loaded — the negotiation closes the "client
+/// assumes its manifest matches" hole, so this pin is the contract.
+#[test]
+fn helloack_bucket_geometry_agrees_with_manifest() {
+    let store = Arc::new(forged_store("tapi_geom").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &[]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+
+    let client = DeviceClient::connect_over(
+        Box::new(server.connect_inproc()), &store, 41).unwrap();
+    assert_eq!(client.negotiated_caps() & caps::STREAM, caps::STREAM);
+    let advertised = client.server_buckets();
+    let bmap = store.manifest.path("serving.buckets")
+        .and_then(|b| b.as_obj()).expect("manifest buckets");
+    assert_eq!(advertised.len(), bmap.len());
+    for (bstr, bj) in bmap {
+        let bucket: u16 = bstr.parse().unwrap();
+        let geom = advertised.iter().find(|g| g.bucket == bucket)
+            .unwrap_or_else(|| panic!("bucket {bucket} not advertised"));
+        assert_eq!(geom.ks as usize, bj.usize_or("ks", 0), "bucket {bucket}");
+        assert_eq!(geom.kd as usize, bj.usize_or("kd", 0), "bucket {bucket}");
+    }
+    server.shutdown();
+}
+
+/// Lose one delta frame "on the wire" via the shaped transport's
+/// deterministic drop plan: the server must reject the next delta
+/// with a typed StreamReject (sequence gap), and a keyframe must
+/// resync the stream — the exact recovery path the DeviceClient
+/// automates, pinned here frame by frame.
+#[test]
+fn shaped_frame_drop_forces_stream_reject_then_keyframe_recovers() {
+    let store = Arc::new(forged_store("tapi_drop").expect("forge artifacts"));
+    let (ks, kd) = bucket16(&store);
+    let n = ks as usize * kd as usize;
+    let cfg = serve_config(&store.root, &[]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+
+    // send index 2 (the first sparse delta) is lost after crossing
+    let shaped = ShapedTransport::new(Box::new(server.connect_inproc()),
+                                      Channel::unlimited(),
+                                      DropPlan::at(&[2]));
+    let (mut tx, mut rx) = Box::new(shaped).split().unwrap();
+    let delta = |request: u64, seq: u32, keyframe: bool| Frame::Delta {
+        session: 51, request, seq, keyframe, bucket: 16, true_len: 10,
+        ks, kd,
+        packed: if keyframe { vec![0.5; n] } else { vec![] },
+        updates: if keyframe { vec![] } else { vec![(0, 0.75)] },
+    };
+
+    tx.send(&Frame::hello(51, CLIENT_CAPS, "forge-tiny")).unwrap(); // idx 0
+    assert!(matches!(rx.recv().unwrap(), Frame::HelloAck { .. }));
+    tx.send(&delta(1, 0, true)).unwrap(); // idx 1: keyframe, seq 0
+    assert!(matches!(rx.recv().unwrap(), Frame::Token { request: 1, .. }));
+    tx.send(&delta(2, 1, false)).unwrap(); // idx 2: DROPPED on the wire
+    tx.send(&delta(3, 2, false)).unwrap(); // idx 3: server sees a seq gap
+    match rx.recv().unwrap() {
+        Frame::Error { code, msg } => {
+            assert_eq!(code, ErrorCode::StreamReject, "{msg}");
+        }
+        other => panic!("expected StreamReject, got {}", other.type_id()),
+    }
+    // keyframe resync carries the full block and any sequence number
+    tx.send(&delta(4, 3, true)).unwrap(); // idx 4
+    assert!(matches!(rx.recv().unwrap(), Frame::Token { request: 4, .. }));
+    // and the stream continues in-sequence
+    tx.send(&delta(5, 4, false)).unwrap(); // idx 5
+    assert!(matches!(rx.recv().unwrap(), Frame::Token { request: 5, .. }));
+
+    assert_eq!(server.metrics.stream_rejects.load(Ordering::Relaxed), 1);
+    tx.send(&Frame::Bye).unwrap();
+    server.shutdown();
+}
+
+/// The handshake binds connection↔session both ways: while its owner
+/// connection is alive, a session cannot be re-Hello'd by another
+/// connection (no decoder stomping, no caps rewriting); once the
+/// owner disconnects, the id becomes re-bindable — the legitimate
+/// reconnect path.
+#[test]
+fn live_session_cannot_be_taken_over_by_another_connection() {
+    let store = Arc::new(forged_store("tapi_own").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &[]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+
+    let (mut tx_a, mut rx_a) =
+        Box::new(server.connect_inproc()).split().unwrap();
+    tx_a.send(&Frame::hello(7, CLIENT_CAPS, "forge-tiny")).unwrap();
+    assert!(matches!(rx_a.recv().unwrap(), Frame::HelloAck { .. }));
+
+    // a second live connection may not bind the same session
+    let (mut tx_b, mut rx_b) =
+        Box::new(server.connect_inproc()).split().unwrap();
+    tx_b.send(&Frame::hello(7, CLIENT_CAPS, "forge-tiny")).unwrap();
+    match rx_b.recv().unwrap() {
+        Frame::Error { code, msg } => {
+            assert_eq!(code, ErrorCode::AdmissionRefused, "{msg}");
+            assert!(msg.contains("bound"), "msg: {msg}");
+        }
+        other => panic!("expected takeover reject, got {}", other.type_id()),
+    }
+
+    // owner disconnects: the session becomes re-bindable (poll — the
+    // connection thread releases ownership asynchronously after Bye)
+    tx_a.send(&Frame::Bye).unwrap();
+    drop(tx_a);
+    drop(rx_a);
+    let mut rebound = false;
+    for _ in 0..250 {
+        tx_b.send(&Frame::hello(7, CLIENT_CAPS, "forge-tiny")).unwrap();
+        match rx_b.recv().unwrap() {
+            Frame::HelloAck { .. } => {
+                rebound = true;
+                break;
+            }
+            Frame::Error { .. } => {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            other => panic!("unexpected frame {}", other.type_id()),
+        }
+    }
+    assert!(rebound, "released session never became re-bindable");
+    tx_b.send(&Frame::Bye).unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn server_error_downcasts_from_anyhow() {
+    let e: anyhow::Error = ServerError {
+        code: ErrorCode::StreamReject,
+        msg: "gap".into(),
+    }.into();
+    let se = e.downcast_ref::<ServerError>().expect("downcast");
+    assert_eq!(se.code, ErrorCode::StreamReject);
+    assert!(format!("{se}").contains("stream-reject"));
+}
