@@ -8,13 +8,19 @@
 //!
 //!     cargo run --release --example collaborative_serving -- \
 //!         [--clients 4] [--prompts 6] [--gbps 1.0] [--max-batch 4] \
-//!         [--stream] [--keyframe-interval 32] [--drift 0.05]
+//!         [--stream] [--keyframe-interval 32] [--drift 0.05] \
+//!         [--adaptive] [--error-budget 1.0] [--target-step-ms 25]
 //!
 //! `--stream` switches the clients to the spectral delta stream
 //! (`codec::stream`): keyframes on cadence/bucket promotion, sparse
 //! coefficient deltas otherwise — the regime that removes the
-//! recompute retransmission.
+//! recompute retransmission.  `--adaptive` turns on closed-loop
+//! spectral rate control (`codec::rate`): each client rides the
+//! bucket quality ladder the server advertises, downshifting when the
+//! link cannot clear a step inside `--target-step-ms` and upshifting
+//! back (with hysteresis) when it can, under `--error-budget`.
 
+use fourier_compress::codec::rate::RateConfig;
 use fourier_compress::codec::stream::StreamConfig;
 use fourier_compress::config::{FromJson, ServeConfig};
 use fourier_compress::coordinator::{DeviceClient, EdgeServer};
@@ -35,6 +41,12 @@ fn main() -> anyhow::Result<()> {
     let stream_cfg = StreamConfig {
         keyframe_interval: args.usize_or("keyframe-interval", 32) as u32,
         drift_threshold: args.f64_or("drift", 0.05),
+    };
+    let adaptive = args.has("adaptive");
+    let rate_cfg = RateConfig {
+        error_budget: args.f64_or("error-budget", 1.0),
+        target_step_s: args.f64_or("target-step-ms", 25.0) / 1000.0,
+        ..RateConfig::default()
     };
 
     let cfg = ServeConfig::load(None, &[
@@ -66,6 +78,9 @@ fn main() -> anyhow::Result<()> {
                 // the v2 handshake negotiated the capability away
                 anyhow::bail!("server did not advertise the stream capability");
             }
+            if adaptive && !client.enable_adaptive(rate_cfg) {
+                anyhow::bail!("server did not advertise the ladder capability");
+            }
             let mut gens = Vec::new();
             for p in 0..n_prompts {
                 let prompt = prompts[(cid + p) % prompts.len()];
@@ -82,6 +97,7 @@ fn main() -> anyhow::Result<()> {
     let mut total_bytes = 0u64;
     let mut total_raw = 0u64;
     let (mut keys, mut deltas, mut resyncs) = (0u64, 0u64, 0u64);
+    let (mut switches, mut max_point) = (0u64, 0u8);
     let mut rts: Vec<u64> = Vec::new();
     for (cid, h) in handles.into_iter().enumerate() {
         let (gens, stats) = h.join().unwrap()?;
@@ -96,6 +112,8 @@ fn main() -> anyhow::Result<()> {
         keys += stats.key_frames;
         deltas += stats.delta_frames;
         resyncs += stats.resyncs;
+        switches += stats.ladder_switches;
+        max_point = max_point.max(stats.max_point);
         rts.extend(stats.round_trip_us);
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -113,6 +131,10 @@ fn main() -> anyhow::Result<()> {
     if stream {
         println!("stream frames:      {keys} keyframes, {deltas} deltas, \
                   {resyncs} resyncs");
+    }
+    if adaptive {
+        println!("rate control:       {switches} ladder switches, deepest \
+                  point {max_point}");
     }
 
     // server-side metrics

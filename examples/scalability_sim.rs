@@ -24,7 +24,8 @@ fn main() {
         for &g in &cfg.link_gbps.clone() {
             for &c in &cfg.clients.clone() {
                 for (arm, tag) in [(Arm::Original, "orig"), (Arm::Fc, "fc"),
-                                   (Arm::FcStream, "fcs")] {
+                                   (Arm::FcStream, "fcs"),
+                                   (Arm::FcAdaptive, "fca")] {
                     let st = simulate(&cfg, c, g, arm);
                     println!("{:>8} {:>6.1} {:>6} | {:>12.3} {:>12.2}",
                              c, g, tag, st.mean_response_s, st.server_util);

@@ -70,7 +70,7 @@ fn main() {
     // wire framing
     let frame = Frame::Activation {
         session: 1, request: 2, bucket: 64, true_len: 60, ks: 64, kd: 15,
-        packed: packed.clone(),
+        point: 0, packed: packed.clone(),
     };
     bench("frame encode+decode", 500, budget, || {
         let enc = frame.encode();

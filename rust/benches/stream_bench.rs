@@ -46,7 +46,7 @@ fn main() {
         let recompute = Frame::Activation {
             session: 1, request: t + 1, bucket: geom.rows as u16,
             true_len: geom.rows as u16, ks: geom.ks as u16,
-            kd: geom.kd as u16, packed: truth.clone(),
+            kd: geom.kd as u16, point: 0, packed: truth.clone(),
         };
         recompute_bytes += recompute.encode().len() as u64;
 
@@ -54,7 +54,7 @@ fn main() {
         let frame = Frame::Delta {
             session: 1, request: t + 1, seq: step.seq, keyframe: step.keyframe,
             bucket: geom.rows as u16, true_len: geom.rows as u16,
-            ks: geom.ks as u16, kd: geom.kd as u16,
+            ks: geom.ks as u16, kd: geom.kd as u16, point: 0,
             packed: step.packed.clone(), updates: step.updates.clone(),
         };
         stream_bytes += frame.encode().len() as u64;

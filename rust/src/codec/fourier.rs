@@ -299,6 +299,86 @@ pub fn unpack_block(packed: &[f32], rows: usize, cols: usize,
     })
 }
 
+// ---------------------------------------------------------------------------
+// nested-block crop/embed — the adaptive rate ladder's transform
+// ---------------------------------------------------------------------------
+//
+// A ladder point (`codec::rate`) keeps a centred block nested inside
+// the bucket's primary block (ks1 <= ks0, kd1 <= kd0): its frequency
+// set is a subset of the primary's, so the device can *crop* the full
+// (re, im) block its fused executable already emits — no second
+// compile per point — and the server *embeds* the small block back
+// into a zeroed primary-geometry block, the truncated frequencies
+// reconstructing as zero exactly like FC truncation itself.
+
+fn ensure_nested(rows: usize, cols: usize, ks0: usize, kd0: usize,
+                 ks1: usize, kd1: usize) -> Result<()> {
+    ensure!(ks1 <= ks0 && kd1 <= kd0,
+            "block {ks1}x{kd1} not nested in {ks0}x{kd0}");
+    ensure!(super::valid_block_axis(rows, ks0)
+                && super::valid_block_axis(cols, kd0)
+                && super::valid_block_axis(rows, ks1)
+                && super::valid_block_axis(cols, kd1),
+            "invalid nested blocks {ks1}x{kd1} <= {ks0}x{kd0} \
+             for {rows}x{cols}");
+    Ok(())
+}
+
+/// Crop a full (re, im) `ks0`×`kd0` block to the nested ladder point
+/// `ks1`×`kd1` (buffers cleared first).  A pure gather: the centred
+/// index set for a smaller odd width is a subset of the larger one's.
+pub fn crop_block_into(eng: &mut CodecEngine, re0: &[f32], im0: &[f32],
+                       rows: usize, cols: usize, ks0: usize, kd0: usize,
+                       ks1: usize, kd1: usize,
+                       re1: &mut Vec<f32>, im1: &mut Vec<f32>) -> Result<()> {
+    ensure_nested(rows, cols, ks0, kd0, ks1, kd1)?;
+    ensure!(re0.len() == ks0 * kd0 && im0.len() == ks0 * kd0,
+            "crop source carries {} floats, geometry wants {}", re0.len(),
+            ks0 * kd0);
+    let ui = eng.indices(rows, ks1);
+    let vi = eng.indices(cols, kd1);
+    re1.clear();
+    im1.clear();
+    re1.reserve(ks1 * kd1);
+    im1.reserve(ks1 * kd1);
+    for &u in ui.iter() {
+        let i0 = block_pos(rows, ks0, u);
+        for &v in vi.iter() {
+            let j0 = block_pos(cols, kd0, v);
+            re1.push(re0[i0 * kd0 + j0]);
+            im1.push(im0[i0 * kd0 + j0]);
+        }
+    }
+    Ok(())
+}
+
+/// Inverse of [`crop_block_into`]: scatter a nested `ks1`×`kd1` block
+/// into a zeroed `ks0`×`kd0` primary block (buffers cleared first).
+pub fn embed_block_into(eng: &mut CodecEngine, re1: &[f32], im1: &[f32],
+                        rows: usize, cols: usize, ks1: usize, kd1: usize,
+                        ks0: usize, kd0: usize,
+                        re0: &mut Vec<f32>, im0: &mut Vec<f32>) -> Result<()> {
+    ensure_nested(rows, cols, ks0, kd0, ks1, kd1)?;
+    ensure!(re1.len() == ks1 * kd1 && im1.len() == ks1 * kd1,
+            "embed source carries {} floats, geometry wants {}", re1.len(),
+            ks1 * kd1);
+    let ui = eng.indices(rows, ks1);
+    let vi = eng.indices(cols, kd1);
+    re0.clear();
+    re0.resize(ks0 * kd0, 0.0);
+    im0.clear();
+    im0.resize(ks0 * kd0, 0.0);
+    for (a, &u) in ui.iter().enumerate() {
+        let i0 = block_pos(rows, ks0, u);
+        for (b, &v) in vi.iter().enumerate() {
+            let j0 = block_pos(cols, kd0, v);
+            re0[i0 * kd0 + j0] = re1[a * kd1 + b];
+            im0[i0 * kd0 + j0] = im1[a * kd1 + b];
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -585,6 +665,101 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn crop_then_embed_keeps_exactly_the_nested_frequencies() {
+        let (rows, cols, ks0, kd0, ks1, kd1) = (16usize, 32, 9, 15, 5, 7);
+        let a = rand_act(rows, cols, 21);
+        let spec = crate::dsp::fft2d::fft2_real(MatView::new(&a, rows, cols));
+        let gather = |ks: usize, kd: usize| -> (Vec<f32>, Vec<f32>) {
+            let ui = freq_indices(rows, ks);
+            let vi = freq_indices(cols, kd);
+            let mut re = vec![0.0f32; ks * kd];
+            let mut im = vec![0.0f32; ks * kd];
+            for (i, &u) in ui.iter().enumerate() {
+                for (j, &v) in vi.iter().enumerate() {
+                    re[i * kd + j] = spec[u * cols + v].re as f32;
+                    im[i * kd + j] = spec[u * cols + v].im as f32;
+                }
+            }
+            (re, im)
+        };
+        let (re0, im0) = gather(ks0, kd0);
+        let (want_re, want_im) = gather(ks1, kd1);
+
+        let mut eng = CodecEngine::new();
+        let (mut re1, mut im1) = (Vec::new(), Vec::new());
+        crop_block_into(&mut eng, &re0, &im0, rows, cols, ks0, kd0, ks1, kd1,
+                        &mut re1, &mut im1).unwrap();
+        // the crop is exactly the directly-gathered small block
+        assert_eq!(re1, want_re);
+        assert_eq!(im1, want_im);
+
+        // embed back: nested frequencies survive bit-exactly, the
+        // truncated ones are zero
+        let (mut bre, mut bim) = (Vec::new(), Vec::new());
+        embed_block_into(&mut eng, &re1, &im1, rows, cols, ks1, kd1, ks0, kd0,
+                         &mut bre, &mut bim).unwrap();
+        let ui1: std::collections::HashSet<_> =
+            freq_indices(rows, ks1).into_iter().collect();
+        let vi1: std::collections::HashSet<_> =
+            freq_indices(cols, kd1).into_iter().collect();
+        for (i, &u) in freq_indices(rows, ks0).iter().enumerate() {
+            for (j, &v) in freq_indices(cols, kd0).iter().enumerate() {
+                let kept = ui1.contains(&u) && vi1.contains(&v);
+                if kept {
+                    assert_eq!(bre[i * kd0 + j].to_bits(),
+                               re0[i * kd0 + j].to_bits());
+                    assert_eq!(bim[i * kd0 + j].to_bits(),
+                               im0[i * kd0 + j].to_bits());
+                } else {
+                    assert_eq!(bre[i * kd0 + j], 0.0);
+                    assert_eq!(bim[i * kd0 + j], 0.0);
+                }
+            }
+        }
+
+        // embedding into the primary reconstructs identically to
+        // compressing straight at the small block: the serving
+        // path's ladder-point equivalence
+        let codec = FourierCodec::default();
+        let small = codec.compress_block(&a, rows, cols, ks1, kd1).unwrap();
+        let want = codec.decompress(&small).unwrap();
+        let packed_embedded = pack_block(&bre, &bim, rows, cols, ks0, kd0);
+        let via_primary = codec
+            .decompress(&{
+                let mut p = Payload::empty();
+                p.reset("fc", rows, cols);
+                let mut w = Writer(&mut p.body);
+                w.u16(ks0 as u16);
+                w.u16(kd0 as u16);
+                for v in &packed_embedded {
+                    w.f32(*v);
+                }
+                p
+            })
+            .unwrap();
+        for (x, y) in want.iter().zip(&via_primary) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn crop_and_embed_reject_non_nested_or_misshapen() {
+        let mut eng = CodecEngine::new();
+        let (mut re, mut im) = (Vec::new(), Vec::new());
+        // not nested: kd1 > kd0
+        assert!(crop_block_into(&mut eng, &[0.0; 45], &[0.0; 45], 16, 32, 9,
+                                5, 5, 7, &mut re, &mut im).is_err());
+        // invalid axis (even, non-full)
+        assert!(crop_block_into(&mut eng, &[0.0; 45], &[0.0; 45], 16, 32, 9,
+                                5, 4, 5, &mut re, &mut im).is_err());
+        // wrong source length
+        assert!(crop_block_into(&mut eng, &[0.0; 7], &[0.0; 7], 16, 32, 9, 5,
+                                5, 5, &mut re, &mut im).is_err());
+        assert!(embed_block_into(&mut eng, &[0.0; 7], &[0.0; 7], 16, 32, 5, 5,
+                                 9, 5, &mut re, &mut im).is_err());
     }
 
     #[test]

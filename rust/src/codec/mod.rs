@@ -22,6 +22,7 @@ pub mod engine;
 pub mod fourier;
 pub mod lowrank;
 pub mod quant;
+pub mod rate;
 pub mod stream;
 pub mod topk;
 
@@ -248,7 +249,7 @@ impl<'a> Reader<'a> {
 // block-size selection (port of python configs.fc_block)
 // ---------------------------------------------------------------------------
 
-fn odd_cap(x: usize, cap: usize) -> usize {
+pub(crate) fn odd_cap(x: usize, cap: usize) -> usize {
     let mut x = x.clamp(1, cap);
     if x % 2 == 0 {
         if x > 1 {

@@ -1,0 +1,497 @@
+//! Adaptive spectral rate control: a channel-aware (K_S, K_D) ladder
+//! and the per-session controller that rides it.
+//!
+//! The paper fixes one low-frequency block per layer offline, but its
+//! own trade-off curves (Fig 5/6) show the retained-coefficient
+//! budget is a knob: on a fluctuating edge link a static (ks, kd)
+//! either wastes accuracy headroom or blows the latency budget.  This
+//! module closes the loop.  Each serving bucket carries a small
+//! **quality ladder** of operating points — point 0 is the paper's
+//! fixed block, later points keep nested, smaller centred blocks —
+//! each with a *forged Parseval error bound* (`testkit::forge`
+//! measures the additional reconstruction error the point introduces
+//! over the primary block on the model's band-limited activation
+//! family and bakes it into the manifest, with headroom).  The
+//! ladder is advertised in the
+//! `HelloAck` and a ladder-point id rides every Activation/Delta
+//! header, so both sides always agree on which block a frame carries.
+//!
+//! The device-side [`RateController`] picks the point each step from
+//!
+//! * an **EWMA pace estimate** (seconds per bit, fed by transport
+//!   send timing — under `net::Channel` shaping the send blocks for
+//!   the emulated transfer time, so the measurement *is* the link),
+//! * the stream codec's **measured drift**
+//!   ([`crate::codec::stream::StreamEncoder::last_drift`]),
+//!
+//! under a caller-supplied **error budget**: a point is admissible
+//! only while `err_bound + drift <= error_budget`, and among
+//! admissible points the controller takes the highest-quality one
+//! whose estimated transfer time fits the step deadline (falling back
+//! to the cheapest admissible point on a link none fits).
+//! **Hysteresis** keeps it from flapping: switches are spaced at
+//! least `min_dwell_steps` apart and an upshift needs `up_margin`
+//! headroom — except the *emergency* lane, where the current point
+//! has become inadmissible (drift ate the budget) and quality is
+//! restored immediately.  That emergency override is what makes the
+//! safety invariant hold: after every [`RateController::step`], the
+//! chosen point is within budget whenever any point is
+//! (`tests/properties.rs` pins it).
+//!
+//! A ladder switch changes the block geometry, so in stream mode it
+//! forces a keyframe exactly like bucket promotion — the server
+//! rejects a delta that names a new point without one.
+
+use crate::util::json::Json;
+use anyhow::{ensure, Result};
+
+/// One advertised operating point: the kept centred block and its
+/// forged Parseval error bound — the *additional* relative
+/// reconstruction error (Frobenius) the point introduces over the
+/// bucket's primary block, measured offline on the model's
+/// band-limited activation family (`testkit::forge::forged_err_bound`)
+/// and baked into the manifest.  Point 0 carries the measurement
+/// floor: riding the primary block sacrifices nothing by definition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LadderPoint {
+    pub ks: usize,
+    pub kd: usize,
+    pub err_bound: f64,
+}
+
+/// Per-frame wire overhead the controller charges on top of the
+/// packed floats when estimating a point's transfer time (frame
+/// length prefix + type + Activation/Delta header) — an upper bound;
+/// exactness does not matter for control.
+pub const POINT_OVERHEAD_BYTES: usize = 35;
+
+impl LadderPoint {
+    /// Estimated wire bytes of one frame at this point (keyframe /
+    /// Activation equivalent: the worst case the deadline must fit).
+    pub fn frame_bytes(&self) -> usize {
+        self.ks * self.kd * 4 + POINT_OVERHEAD_BYTES
+    }
+}
+
+/// Controller policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RateConfig {
+    /// Max acceptable reconstruction error: forged point bound plus
+    /// measured stream drift — the caller's quality contract.
+    pub error_budget: f64,
+    /// Target per-step uplink transfer time (seconds).
+    pub target_step_s: f64,
+    /// EWMA smoothing for the pace/drift estimates, in (0, 1].
+    pub ewma_alpha: f64,
+    /// Minimum steps at a point before a (non-emergency) switch.
+    pub min_dwell_steps: u32,
+    /// Upshift headroom: a higher-quality point is adopted only once
+    /// its estimated transfer time fits `target_step_s / up_margin`,
+    /// so a borderline link does not flap.  Must be >= 1.
+    pub up_margin: f64,
+}
+
+impl Default for RateConfig {
+    fn default() -> RateConfig {
+        RateConfig {
+            error_budget: 1.0,
+            target_step_s: 0.05,
+            ewma_alpha: 0.5,
+            min_dwell_steps: 2,
+            up_margin: 1.5,
+        }
+    }
+}
+
+/// Ladder shape invariants (geometry-independent): non-empty, quality
+/// monotone — ks/kd non-increasing, err_bound non-decreasing in
+/// [0, 1] — so "higher index" always means "cheaper and no better".
+/// Geometry validity against a concrete (rows, cols) is checked where
+/// those are known ([`ladder_from_manifest`], the forge, the server's
+/// model load).
+pub fn validate_ladder(ladder: &[LadderPoint]) -> Result<()> {
+    ensure!(!ladder.is_empty(), "empty ladder");
+    for (i, p) in ladder.iter().enumerate() {
+        ensure!(p.ks >= 1 && p.kd >= 1, "ladder point {i}: zero axis");
+        ensure!((0.0..=1.0).contains(&p.err_bound),
+                "ladder point {i}: err_bound {} outside [0, 1]", p.err_bound);
+        if i > 0 {
+            let q = &ladder[i - 1];
+            ensure!(p.ks <= q.ks && p.kd <= q.kd,
+                    "ladder point {i} ({}x{}) not nested in point {} ({}x{})",
+                    p.ks, p.kd, i - 1, q.ks, q.kd);
+            ensure!(p.err_bound >= q.err_bound,
+                    "ladder point {i}: err_bound not monotone");
+        }
+    }
+    Ok(())
+}
+
+/// Parse one serving bucket's ladder from its manifest entry: the
+/// primary `ks`/`kd` fields are point 0; an optional `ladder` array
+/// (objects with `ks`, `kd`, `err_bound`) refines it.  A manifest
+/// without a ladder (older artifact trees) yields the single primary
+/// point with a vacuous bound of 1.0.  Every point is validated
+/// against the bucket geometry and nesting under the primary block.
+pub fn ladder_from_manifest(bj: &Json, rows: usize, cols: usize)
+    -> Result<Vec<LadderPoint>> {
+    let pks = bj.usize_or("ks", 0);
+    let pkd = bj.usize_or("kd", 0);
+    let ladder = match bj.get("ladder").and_then(|v| v.as_arr()) {
+        None => vec![LadderPoint { ks: pks, kd: pkd, err_bound: 1.0 }],
+        Some(arr) => {
+            let mut out = Vec::with_capacity(arr.len());
+            for e in arr {
+                out.push(LadderPoint {
+                    ks: e.usize_or("ks", 0),
+                    kd: e.usize_or("kd", 0),
+                    err_bound: e.f64_or("err_bound", 1.0),
+                });
+            }
+            out
+        }
+    };
+    validate_ladder(&ladder)?;
+    ensure!(ladder[0].ks == pks && ladder[0].kd == pkd,
+            "ladder point 0 ({}x{}) disagrees with the bucket's primary \
+             block ({pks}x{pkd})", ladder[0].ks, ladder[0].kd);
+    for (i, p) in ladder.iter().enumerate() {
+        ensure!(super::valid_block_axis(rows, p.ks)
+                    && super::valid_block_axis(cols, p.kd),
+                "ladder point {i}: invalid block {}x{} for {rows}x{cols}",
+                p.ks, p.kd);
+    }
+    Ok(ladder)
+}
+
+/// The per-session closed-loop controller.  Deterministic: its state
+/// advances only through [`RateController::observe_send`],
+/// [`RateController::observe_drift`], and [`RateController::step`] —
+/// no clocks, no randomness — so the property suite can replay it.
+#[derive(Debug, Clone)]
+pub struct RateController {
+    cfg: RateConfig,
+    ladder: Vec<LadderPoint>,
+    current: usize,
+    pinned: Option<usize>,
+    /// Steps spent at `current` since the last switch.
+    dwell: u32,
+    switches: u64,
+    /// EWMA link pace in seconds per bit (0.0 until primed).  Pace —
+    /// not rate — so a 100x slowdown registers multiplicatively
+    /// within a couple of observations instead of averaging away.
+    pace_s_per_bit: f64,
+    /// EWMA of the stream codec's measured relative drift.
+    drift: f64,
+}
+
+impl RateController {
+    pub fn new(ladder: Vec<LadderPoint>, cfg: RateConfig)
+        -> Result<RateController> {
+        validate_ladder(&ladder)?;
+        ensure!(cfg.error_budget > 0.0, "error_budget must be > 0");
+        ensure!(cfg.target_step_s > 0.0, "target_step_s must be > 0");
+        ensure!(cfg.ewma_alpha > 0.0 && cfg.ewma_alpha <= 1.0,
+                "ewma_alpha must be in (0, 1]");
+        ensure!(cfg.min_dwell_steps >= 1, "min_dwell_steps must be >= 1");
+        ensure!(cfg.up_margin >= 1.0, "up_margin must be >= 1");
+        Ok(RateController {
+            cfg,
+            ladder,
+            current: 0,
+            pinned: None,
+            dwell: 0,
+            switches: 0,
+            pace_s_per_bit: 0.0,
+            drift: 0.0,
+        })
+    }
+
+    /// Swap the ladder (bucket promotion changes the geometry but not
+    /// the link): the pace/drift estimates carry over, the point index
+    /// is clamped into the new ladder.
+    pub fn retarget(&mut self, ladder: Vec<LadderPoint>) -> Result<()> {
+        validate_ladder(&ladder)?;
+        self.current = self.current.min(ladder.len() - 1);
+        if let Some(p) = self.pinned.as_mut() {
+            if *p >= ladder.len() {
+                // a clamped pin no longer measures what the caller
+                // asked for — say so instead of silently re-pinning
+                crate::warn_!("rate",
+                              "pinned ladder point {} clamped to {} by a \
+                               shorter ladder", *p, ladder.len() - 1);
+                *p = ladder.len() - 1;
+            }
+        }
+        self.ladder = ladder;
+        Ok(())
+    }
+
+    /// Pin to one ladder point (the benches' fixed-point ablation
+    /// lever): [`RateController::step`] holds it until unpinned.
+    pub fn pin(&mut self, point: usize) -> Result<()> {
+        ensure!(point < self.ladder.len(),
+                "pin {point} outside ladder of {}", self.ladder.len());
+        self.pinned = Some(point);
+        self.current = point;
+        Ok(())
+    }
+
+    pub fn ladder(&self) -> &[LadderPoint] {
+        &self.ladder
+    }
+
+    pub fn point(&self) -> usize {
+        self.current
+    }
+
+    pub fn current_point(&self) -> LadderPoint {
+        self.ladder[self.current]
+    }
+
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// Estimated link goodput in bits/s (0.0 until primed).
+    pub fn goodput_bps(&self) -> f64 {
+        if self.pace_s_per_bit > 0.0 {
+            1.0 / self.pace_s_per_bit
+        } else {
+            0.0
+        }
+    }
+
+    /// Feed one transport send: `bytes` took `elapsed_s` to clear the
+    /// (possibly shaped) tx half.
+    pub fn observe_send(&mut self, bytes: usize, elapsed_s: f64) {
+        if bytes == 0 || elapsed_s <= 0.0 {
+            return;
+        }
+        let inst = elapsed_s / (bytes * 8) as f64;
+        self.pace_s_per_bit = if self.pace_s_per_bit <= 0.0 {
+            inst
+        } else {
+            self.cfg.ewma_alpha * inst
+                + (1.0 - self.cfg.ewma_alpha) * self.pace_s_per_bit
+        };
+    }
+
+    /// Feed the stream codec's measured relative drift for the step
+    /// (0.0 in the recompute regime / after a keyframe).
+    pub fn observe_drift(&mut self, drift: f64) {
+        let d = drift.max(0.0);
+        self.drift = self.cfg.ewma_alpha * d
+            + (1.0 - self.cfg.ewma_alpha) * self.drift;
+    }
+
+    fn admissible(&self, i: usize) -> bool {
+        self.ladder[i].err_bound + self.drift
+            <= self.cfg.error_budget + 1e-9
+    }
+
+    /// Estimated transfer time of one frame at point `i` (0.0 while
+    /// the pace estimate is unprimed — optimism until measured).
+    fn est_send_s(&self, i: usize) -> f64 {
+        (self.ladder[i].frame_bytes() * 8) as f64 * self.pace_s_per_bit
+    }
+
+    /// The point the estimates call for, ignoring hysteresis: the
+    /// highest-quality admissible point that fits the deadline, else
+    /// the cheapest admissible point, else (nothing admissible) the
+    /// highest-quality point — best effort under a blown budget.
+    fn desired(&self) -> usize {
+        let mut cheapest_adm = None;
+        for i in 0..self.ladder.len() {
+            if !self.admissible(i) {
+                continue;
+            }
+            if self.est_send_s(i) <= self.cfg.target_step_s {
+                return i;
+            }
+            cheapest_adm = Some(i);
+        }
+        cheapest_adm.unwrap_or(0)
+    }
+
+    /// Advance one decode step and return the ladder point to use.
+    /// Hysteresis lives here; the emergency lane (current point no
+    /// longer within the error budget) bypasses it.
+    pub fn step(&mut self) -> usize {
+        if let Some(p) = self.pinned {
+            self.current = p;
+            return p;
+        }
+        let want = self.desired();
+        if want != self.current {
+            let emergency = !self.admissible(self.current);
+            let rested = self.dwell >= self.cfg.min_dwell_steps;
+            let upshift = want < self.current;
+            let headroom = !upshift
+                || self.est_send_s(want) * self.cfg.up_margin
+                    <= self.cfg.target_step_s;
+            if emergency || (rested && headroom) {
+                self.current = want;
+                self.dwell = 0;
+                self.switches += 1;
+            }
+        }
+        self.dwell = self.dwell.saturating_add(1);
+        self.current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder3() -> Vec<LadderPoint> {
+        vec![
+            LadderPoint { ks: 9, kd: 15, err_bound: 0.05 },
+            LadderPoint { ks: 9, kd: 9, err_bound: 0.15 },
+            LadderPoint { ks: 5, kd: 7, err_bound: 0.40 },
+        ]
+    }
+
+    fn cfg() -> RateConfig {
+        RateConfig {
+            error_budget: 0.5,
+            target_step_s: 0.01,
+            ewma_alpha: 0.5,
+            min_dwell_steps: 2,
+            up_margin: 1.5,
+        }
+    }
+
+    #[test]
+    fn validation_rejects_malformed_ladders() {
+        assert!(validate_ladder(&[]).is_err());
+        let mut l = ladder3();
+        assert!(validate_ladder(&l).is_ok());
+        l[2].kd = 99; // not nested
+        assert!(validate_ladder(&l).is_err());
+        let mut l = ladder3();
+        l[1].err_bound = 0.01; // bound not monotone
+        assert!(validate_ladder(&l).is_err());
+        let mut l = ladder3();
+        l[0].err_bound = 1.5; // outside [0, 1]
+        assert!(validate_ladder(&l).is_err());
+        assert!(RateController::new(ladder3(), RateConfig {
+            ewma_alpha: 0.0,
+            ..cfg()
+        }).is_err());
+    }
+
+    #[test]
+    fn downshifts_on_a_slow_link_and_recovers() {
+        let mut c = RateController::new(ladder3(), cfg()).unwrap();
+        // fast link: point-0 frames clear in ~0.1 ms
+        c.observe_send(575, 0.0001);
+        for _ in 0..3 {
+            assert_eq!(c.step(), 0);
+        }
+        // link collapses: the same frame now takes 100 ms
+        let mut seen = Vec::new();
+        for _ in 0..6 {
+            c.observe_send(575, 0.1);
+            seen.push(c.step());
+        }
+        assert_eq!(*seen.last().unwrap(), 2,
+                   "slow link must ride the cheapest admissible point: \
+                    {seen:?}");
+        // link recovers: cheap frames clear fast again
+        for _ in 0..8 {
+            c.observe_send(175, 0.00002);
+            c.step();
+        }
+        assert_eq!(c.point(), 0, "fast link must restore full quality");
+        assert_eq!(c.switches(), 2, "exactly one down + one up switch");
+    }
+
+    #[test]
+    fn drift_over_budget_forces_immediate_quality_upshift() {
+        let mut c = RateController::new(ladder3(), cfg()).unwrap();
+        // park on the cheapest point via a slow link
+        for _ in 0..6 {
+            c.observe_send(575, 0.1);
+            c.step();
+        }
+        assert_eq!(c.point(), 2);
+        // measured stream drift eats the budget: 0.40 + ~0.25 > 0.5
+        c.observe_drift(0.5);
+        let p = c.step();
+        assert!(p < 2, "emergency upshift must bypass dwell, got {p}");
+        assert!(c.ladder()[p].err_bound + 0.26 <= 0.51,
+                "chosen point must be back within budget");
+    }
+
+    #[test]
+    fn hysteresis_never_flaps_within_dwell() {
+        let mut c = RateController::new(ladder3(), RateConfig {
+            min_dwell_steps: 3,
+            ..cfg()
+        }).unwrap();
+        // borderline link: alternate fast and slow observations
+        let mut last = c.point();
+        let mut switch_gaps = Vec::new();
+        let mut since = 0u32;
+        for i in 0..60 {
+            if i % 2 == 0 {
+                c.observe_send(575, 0.1); // slow
+            } else {
+                c.observe_send(575, 0.0001); // fast
+            }
+            let p = c.step();
+            since += 1;
+            if p != last {
+                switch_gaps.push(since);
+                since = 0;
+                last = p;
+            }
+        }
+        // drift is zero, so there are no emergency switches: every
+        // switch must respect the dwell floor
+        assert!(switch_gaps.iter().all(|&g| g >= 3),
+                "switch gaps {switch_gaps:?} violate min_dwell");
+    }
+
+    #[test]
+    fn pin_holds_and_retarget_clamps() {
+        let mut c = RateController::new(ladder3(), cfg()).unwrap();
+        c.pin(2).unwrap();
+        c.observe_send(575, 0.00001); // blazing link
+        assert_eq!(c.step(), 2, "pinned point must hold");
+        assert!(c.pin(3).is_err());
+        // bucket promotion onto a shorter ladder clamps the pin
+        c.retarget(ladder3()[..2].to_vec()).unwrap();
+        assert_eq!(c.step(), 1);
+        assert_eq!(c.ladder().len(), 2);
+    }
+
+    #[test]
+    fn manifest_ladder_parsing() {
+        let j = crate::util::json::parse(
+            r#"{"ks": 9, "kd": 15, "ladder": [
+                 {"ks": 9, "kd": 15, "err_bound": 0.1},
+                 {"ks": 9, "kd": 9, "err_bound": 0.2}]}"#).unwrap();
+        let l = ladder_from_manifest(&j, 16, 32).unwrap();
+        assert_eq!(l.len(), 2);
+        assert_eq!((l[0].ks, l[0].kd), (9, 15));
+        assert!((l[1].err_bound - 0.2).abs() < 1e-12);
+        // no ladder array: single vacuous point
+        let j = crate::util::json::parse(r#"{"ks": 9, "kd": 15}"#).unwrap();
+        let l = ladder_from_manifest(&j, 16, 32).unwrap();
+        assert_eq!(l.len(), 1);
+        assert_eq!(l[0].err_bound, 1.0);
+        // point 0 disagreeing with the primary block is a bug
+        let j = crate::util::json::parse(
+            r#"{"ks": 9, "kd": 15, "ladder": [
+                 {"ks": 7, "kd": 15, "err_bound": 0.1}]}"#).unwrap();
+        assert!(ladder_from_manifest(&j, 16, 32).is_err());
+        // geometry invalid for the bucket (even, non-full axis)
+        let j = crate::util::json::parse(
+            r#"{"ks": 4, "kd": 15, "ladder": [
+                 {"ks": 4, "kd": 15, "err_bound": 0.1}]}"#).unwrap();
+        assert!(ladder_from_manifest(&j, 16, 32).is_err());
+    }
+}

@@ -163,6 +163,10 @@ pub struct StreamEncoder {
     seq: u32,
     since_key: u32,
     force_key: bool,
+    /// Relative spectral drift the last encoded frame left unsent
+    /// (0.0 after a keyframe) — the measurement the adaptive rate
+    /// controller (`codec::rate`) consumes.
+    last_drift: f64,
     /// Scratch: (drift energy, index) candidates, largest first.
     cand: Vec<(f64, u32)>,
 }
@@ -180,6 +184,7 @@ impl StreamEncoder {
             seq: 0,
             since_key: 0,
             force_key: false,
+            last_drift: 0.0,
             cand: Vec::new(),
         }
     }
@@ -196,6 +201,14 @@ impl StreamEncoder {
 
     pub fn next_seq(&self) -> u32 {
         self.seq
+    }
+
+    /// Relative spectral drift (mirror-weighted, i.e. by Parseval a
+    /// reconstruction-error delta) the most recent frame left unsent:
+    /// bounded by [`StreamConfig::drift_threshold`] for deltas, 0.0
+    /// for keyframes.  The adaptive rate controller's second input.
+    pub fn last_drift(&self) -> f64 {
+        self.last_drift
     }
 
     /// Make the next frame a keyframe regardless of cadence — the
@@ -273,6 +286,11 @@ impl StreamEncoder {
                 for &(i, v) in &out.updates {
                     self.state[i as usize] = v;
                 }
+                self.last_drift = if e_cur > 0.0 {
+                    (drift.max(0.0) / e_cur).sqrt()
+                } else {
+                    0.0
+                };
                 out.keyframe = false;
                 self.since_key += 1;
                 self.seq = self.seq.wrapping_add(1);
@@ -281,6 +299,7 @@ impl StreamEncoder {
             out.updates.clear();
         }
 
+        self.last_drift = 0.0;
         out.keyframe = true;
         out.packed.extend_from_slice(packed);
         self.state.clear();
@@ -552,6 +571,40 @@ mod tests {
             let err = rel_error(&want, &got);
             assert!(err <= thr * 1.01 + 1e-6, "step {step}: drift {err}");
         }
+    }
+
+    #[test]
+    fn last_drift_bounded_by_threshold_and_zero_on_keyframes() {
+        let thr = 0.3;
+        let mut enc = StreamEncoder::new(StreamConfig {
+            keyframe_interval: 1024,
+            drift_threshold: thr,
+        });
+        let mut eng = CodecEngine::new();
+        let mut out = StreamStep::default();
+        let mut rng = Rng::new(21);
+        let mut p = rand_packed(35, 22);
+        enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+        assert!(out.keyframe);
+        assert_eq!(enc.last_drift(), 0.0, "keyframes leave no drift");
+        for step in 0..12 {
+            for _ in 0..3 {
+                let i = rng.below(p.len());
+                p[i] += 0.4 * rng.normal() as f32;
+            }
+            enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+            if out.keyframe {
+                assert_eq!(enc.last_drift(), 0.0, "step {step}");
+            } else {
+                assert!(enc.last_drift() <= thr + 1e-9,
+                        "step {step}: drift {} > threshold", enc.last_drift());
+            }
+        }
+        // a forced keyframe resets the measurement
+        enc.force_keyframe();
+        enc.encode_into(&mut eng, GEOM, &p, &mut out).unwrap();
+        assert!(out.keyframe);
+        assert_eq!(enc.last_drift(), 0.0);
     }
 
     #[test]

@@ -38,6 +38,12 @@ pub struct ServeConfig {
     /// recompute regime (and rejects raw Delta frames) — the
     /// capability-negotiation lever.
     pub stream: bool,
+    /// Advertise the adaptive rate-control capability + full bucket
+    /// quality ladders in the handshake (`codec::rate`).  `false`
+    /// truncates the advert to the primary point and rejects data
+    /// frames at non-primary ladder points — clients downgrade
+    /// cleanly to the paper's fixed block.
+    pub ladder: bool,
 }
 
 impl Default for ServeConfig {
@@ -55,6 +61,7 @@ impl Default for ServeConfig {
             link_latency_us: 0,
             session_ttl_s: 300,
             stream: true,
+            ladder: true,
         }
     }
 }
@@ -111,6 +118,13 @@ pub struct SimConfig {
     /// step retransmits (at 8 wire bytes each — u32 index + f32
     /// value; see `sim::bytes_per_step`).
     pub stream_delta_fill: f64,
+    /// `Arm::FcAdaptive`: length (in decode steps) of each phase of
+    /// the built-in fluctuating-link trace — fast and slow phases
+    /// alternate.
+    pub adaptive_phase_steps: usize,
+    /// `Arm::FcAdaptive`: fraction of the block the reduced ladder
+    /// point keeps during slow phases (1.0 = never downshifts).
+    pub adaptive_low_fill: f64,
     /// Per-token server compute time on one unit (s).
     pub service_per_token_s: f64,
     /// Simulated duration (s).
@@ -131,6 +145,8 @@ impl Default for SimConfig {
             fc_ratio: 10.3,
             stream_keyframe_interval: 32,
             stream_delta_fill: 0.05,
+            adaptive_phase_steps: 16,
+            adaptive_low_fill: 0.35,
             // calibrated so a fully-batched 8-unit server is NOT the
             // bottleneck below ~2000 clients (Fig 7b); the 1-unit
             // regime (Fig 7a) overrides this to 4e-3 (unbatched
@@ -200,6 +216,9 @@ impl FromJson for ServeConfig {
         if let Some(b) = j.get("stream").and_then(|v| v.as_bool()) {
             self.stream = b;
         }
+        if let Some(b) = j.get("ladder").and_then(|v| v.as_bool()) {
+            self.ladder = b;
+        }
         Ok(())
     }
 
@@ -217,6 +236,7 @@ impl FromJson for ServeConfig {
             "link_latency_us" => self.link_latency_us = value.parse()?,
             "session_ttl_s" => self.session_ttl_s = value.parse()?,
             "stream" => self.stream = value.parse()?,
+            "ladder" => self.ladder = value.parse()?,
             _ => bail!("unknown ServeConfig key '{key}'"),
         }
         Ok(())
@@ -303,6 +323,10 @@ impl FromJson for SimConfig {
             j.usize_or("stream_keyframe_interval", self.stream_keyframe_interval);
         self.stream_delta_fill =
             j.f64_or("stream_delta_fill", self.stream_delta_fill);
+        self.adaptive_phase_steps =
+            j.usize_or("adaptive_phase_steps", self.adaptive_phase_steps);
+        self.adaptive_low_fill =
+            j.f64_or("adaptive_low_fill", self.adaptive_low_fill);
         self.service_per_token_s =
             j.f64_or("service_per_token_s", self.service_per_token_s);
         self.horizon_s = j.f64_or("horizon_s", self.horizon_s);
@@ -323,6 +347,9 @@ impl FromJson for SimConfig {
             "stream_keyframe_interval" =>
                 self.stream_keyframe_interval = value.parse()?,
             "stream_delta_fill" => self.stream_delta_fill = value.parse()?,
+            "adaptive_phase_steps" =>
+                self.adaptive_phase_steps = value.parse()?,
+            "adaptive_low_fill" => self.adaptive_low_fill = value.parse()?,
             "service_per_token_s" => self.service_per_token_s = value.parse()?,
             "horizon_s" => self.horizon_s = value.parse()?,
             "seed" => self.seed = value.parse()?,
@@ -346,6 +373,12 @@ impl FromJson for SimConfig {
         }
         if !(0.0..=1.0).contains(&self.stream_delta_fill) {
             bail!("stream_delta_fill must be in [0, 1]");
+        }
+        if self.adaptive_phase_steps == 0 {
+            bail!("adaptive_phase_steps must be >= 1");
+        }
+        if self.adaptive_low_fill <= 0.0 || self.adaptive_low_fill > 1.0 {
+            bail!("adaptive_low_fill must be in (0, 1]");
         }
         Ok(())
     }
@@ -373,8 +406,11 @@ mod tests {
         assert_eq!(cfg.codec, "topk");
         assert_eq!(cfg.ratio, 6.5);
         assert!(cfg.stream, "stream capability defaults on");
-        let cfg = ServeConfig::load(None, &["stream=false".into()]).unwrap();
+        assert!(cfg.ladder, "ladder capability defaults on");
+        let cfg = ServeConfig::load(None, &["stream=false".into(),
+                                            "ladder=false".into()]).unwrap();
         assert!(!cfg.stream);
+        assert!(!cfg.ladder);
     }
 
     #[test]

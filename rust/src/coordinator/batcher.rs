@@ -33,22 +33,30 @@ impl<T> Batcher<T> {
             .push(Pending { item, enqueued: Instant::now() });
     }
 
-    /// A bucket ready to flush right now, if any (full first, then
-    /// deadline-expired).
+    /// A bucket ready to flush right now, if any: full buckets first,
+    /// then deadline-expired ones.  Selection is deterministic —
+    /// among candidates the one whose head waited longest wins, the
+    /// bucket id breaking ties — where it used to iterate the
+    /// `HashMap` and flush whichever candidate hash order surfaced
+    /// first (a run-to-run nondeterminism the batching tests could
+    /// never pin).
     pub fn ready_bucket(&self, now: Instant) -> Option<usize> {
-        for (&b, q) in &self.queues {
-            if q.len() >= self.max_batch {
-                return Some(b);
-            }
+        let full = self
+            .queues
+            .iter()
+            .filter(|(_, q)| q.len() >= self.max_batch)
+            .filter_map(|(&b, q)| q.first().map(|p| (p.enqueued, b)))
+            .min()
+            .map(|(_, b)| b);
+        if full.is_some() {
+            return full;
         }
-        for (&b, q) in &self.queues {
-            if let Some(head) = q.first() {
-                if now.duration_since(head.enqueued) >= self.deadline {
-                    return Some(b);
-                }
-            }
-        }
-        None
+        self.queues
+            .iter()
+            .filter_map(|(&b, q)| q.first().map(|p| (p.enqueued, b)))
+            .filter(|&(t, _)| now.duration_since(t) >= self.deadline)
+            .min()
+            .map(|(_, b)| b)
     }
 
     /// Pop up to `max_batch` items from the bucket.
@@ -201,6 +209,43 @@ mod tests {
                    "aged bucket must flush once no bucket is full");
         assert_eq!(b.take(16).len(), 1);
         assert_eq!(b.queued(), 1); // the young 32-item is still queued
+    }
+
+    #[test]
+    fn ready_bucket_is_deterministic_oldest_head_first() {
+        // two simultaneously-full buckets: the one whose head waited
+        // longest flushes first, regardless of HashMap hash order —
+        // and the answer is stable across repeated queries
+        let mut b: Batcher<u32> = Batcher::new(1, Duration::from_secs(10));
+        b.push(64, 1);
+        std::thread::sleep(Duration::from_millis(2));
+        b.push(16, 2);
+        b.push(48, 3);
+        for _ in 0..100 {
+            assert_eq!(b.ready_bucket(Instant::now()), Some(64),
+                       "oldest full head must win");
+        }
+        assert_eq!(b.take(64).len(), 1);
+        // 16 and 48 were pushed back to back; whichever head is older
+        // wins — and that answer never changes between queries
+        let first = b.ready_bucket(Instant::now()).unwrap();
+        for _ in 0..100 {
+            assert_eq!(b.ready_bucket(Instant::now()), Some(first));
+        }
+        b.take(first);
+
+        // expired path: same oldest-head-first rule
+        let mut b: Batcher<u32> = Batcher::new(8, Duration::from_millis(5));
+        b.push(48, 1);
+        std::thread::sleep(Duration::from_millis(2));
+        b.push(32, 2);
+        std::thread::sleep(Duration::from_millis(10)); // both expired
+        for _ in 0..100 {
+            assert_eq!(b.ready_bucket(Instant::now()), Some(48),
+                       "oldest expired head must win");
+        }
+        assert_eq!(b.take(48).len(), 1);
+        assert_eq!(b.ready_bucket(Instant::now()), Some(32));
     }
 
     // property-style sweep: conservation — everything pushed is taken

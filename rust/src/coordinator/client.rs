@@ -20,7 +20,9 @@
 use super::protocol::{caps, ErrorCode, Frame, ServerError, PROTOCOL_VERSION};
 use super::transport::{FrameRx, FrameTx, ShapedTransport, TcpTransport,
                        Transport};
-use crate::codec::fourier::pack_block_into;
+use crate::codec::fourier::{crop_block_into, pack_block_into};
+use crate::codec::rate::{ladder_from_manifest, LadderPoint, RateConfig,
+                         RateController};
 use crate::codec::stream::{BlockGeom, StreamConfig, StreamEncoder, StreamStep};
 use crate::codec::CodecEngine;
 use crate::model::tokenizer;
@@ -35,12 +37,22 @@ use std::sync::Arc;
 use std::time::Instant;
 
 /// Capabilities this client implementation requests in its `Hello`.
-pub const CLIENT_CAPS: u32 = caps::STREAM | caps::CODEC_FC;
+pub const CLIENT_CAPS: u32 = caps::STREAM | caps::CODEC_FC | caps::LADDER;
 
 struct ClientBucket {
     ks: usize,
     kd: usize,
+    /// Quality ladder (`codec::rate`); point 0 == (ks, kd) above.
+    ladder: Vec<LadderPoint>,
     exe: Arc<Executable>,
+}
+
+/// Adaptive rate-control state: the per-session controller plus the
+/// bucket whose ladder it is currently driving (retargeted on bucket
+/// promotion, estimates carried over).
+struct AdaptiveState {
+    ctrl: RateController,
+    bucket: usize,
 }
 
 pub struct DeviceClient {
@@ -64,11 +76,19 @@ pub struct DeviceClient {
     /// Reusable stream-frame buffers (moved into the Delta frame for
     /// the send, then recovered).
     step_scratch: StreamStep,
+    /// Adaptive rate control (None = pinned to the primary point).
+    adaptive: Option<AdaptiveState>,
+    /// Reusable planes for cropping the fused executable's full block
+    /// down to a non-primary ladder point.
+    crop_re: Vec<f32>,
+    crop_im: Vec<f32>,
+    /// Ladder point the previous step shipped (switch accounting).
+    last_point: u8,
     /// Capability bits the server advertised in its `HelloAck`.
     server_caps: u32,
-    /// Bucket geometry the server advertised (validated against the
-    /// local manifest at connect).
-    server_buckets: Vec<super::protocol::BucketGeom>,
+    /// Bucket quality ladders the server advertised (validated
+    /// against the local manifest at connect).
+    server_buckets: Vec<super::protocol::BucketAdvert>,
     pub stats: ClientStats,
 }
 
@@ -84,6 +104,11 @@ pub struct ClientStats {
     pub key_frames: u64,
     pub delta_frames: u64,
     pub resyncs: u64,
+    /// Adaptive rate control: ladder-point switches this session
+    /// performed and the deepest (cheapest) point it ever rode —
+    /// `max_point > 0` means the session downshifted at least once.
+    pub ladder_switches: u64,
+    pub max_point: u8,
 }
 
 impl ClientStats {
@@ -136,16 +161,21 @@ impl DeviceClient {
             let bucket: usize = bstr.parse()?;
             let path = bj.path("client.path").and_then(|v| v.as_str())
                 .ok_or_else(|| anyhow!("bucket {bucket}: no client artifact"))?;
+            let ladder = ladder_from_manifest(bj, bucket, meta.d_model)
+                .map_err(|e| anyhow!("manifest bucket {bucket}: {e}"))?;
             buckets.insert(bucket, ClientBucket {
                 ks: bj.usize_or("ks", 0),
                 kd: bj.usize_or("kd", 0),
+                ladder,
                 exe: store.get(path)?,
             });
         }
 
-        // pre-warm the engine for every bucket this session can use;
-        // a geometry the codec cannot serve is a manifest bug — fail
-        // the connection now, not with a panic mid-generation.
+        // pre-warm the engine for every ladder point of every bucket
+        // this session can use; a geometry the codec cannot serve is
+        // a manifest bug — fail the connection now, not with a panic
+        // mid-generation (ladder_from_manifest has already validated
+        // each point's block axes and nesting).
         let mut engine = CodecEngine::new();
         for (&bucket, cb) in &buckets {
             if !crate::codec::valid_block_axis(bucket, cb.ks)
@@ -153,7 +183,9 @@ impl DeviceClient {
                 bail!("manifest bucket {bucket}: invalid block {}x{} for \
                        {bucket}x{}", cb.ks, cb.kd, meta.d_model);
             }
-            engine.warm(bucket, meta.d_model, cb.ks, cb.kd);
+            for lp in &cb.ladder {
+                engine.warm(bucket, meta.d_model, lp.ks, lp.kd);
+            }
         }
 
         let (tx, rx) = transport.split()?;
@@ -169,6 +201,10 @@ impl DeviceClient {
             packed_scratch: Vec::new(),
             encoder: None,
             step_scratch: StreamStep::default(),
+            adaptive: None,
+            crop_re: Vec::new(),
+            crop_im: Vec::new(),
+            last_point: 0,
             server_caps: 0,
             server_buckets: Vec::new(),
             stats: ClientStats::default(),
@@ -191,13 +227,43 @@ impl DeviceClient {
                 ensure!(buckets.len() == self.buckets.len(),
                         "server serves {} buckets, local manifest has {}",
                         buckets.len(), self.buckets.len());
-                for bg in &buckets {
-                    match self.buckets.get(&(bg.bucket as usize)) {
-                        Some(cb) if cb.ks == bg.ks as usize
-                            && cb.kd == bg.kd as usize => {}
-                        _ => bail!("bucket geometry drift: server advertises \
-                                    {}:{}x{}, local manifest disagrees",
-                                   bg.bucket, bg.ks, bg.kd),
+                for adv in &buckets {
+                    let Some(cb) = self.buckets.get(&(adv.bucket as usize))
+                    else {
+                        bail!("bucket geometry drift: server advertises \
+                               bucket {}, local manifest lacks it",
+                              adv.bucket);
+                    };
+                    let (aks, akd) = adv.primary();
+                    ensure!(cb.ks == aks as usize && cb.kd == akd as usize,
+                            "bucket geometry drift: server advertises \
+                             {}:{}x{}, local manifest disagrees",
+                            adv.bucket, aks, akd);
+                    // the advertised ladder must be a prefix of the
+                    // local one (a server without the ladder
+                    // capability advertises only point 0) — point ids
+                    // are meaningless if the two sides' ladders drift
+                    ensure!(adv.ladder.len() <= cb.ladder.len(),
+                            "bucket {}: server advertises {} ladder \
+                             points, local manifest has {}", adv.bucket,
+                            adv.ladder.len(), cb.ladder.len());
+                    for (i, le) in adv.ladder.iter().enumerate() {
+                        let lp = &cb.ladder[i];
+                        ensure!(lp.ks == le.ks as usize
+                                    && lp.kd == le.kd as usize,
+                                "bucket {} ladder point {i} drift: server \
+                                 {}x{}, local {}x{}", adv.bucket, le.ks,
+                                le.kd, lp.ks, lp.kd);
+                    }
+                }
+                // the usable ladder is what the server advertised: a
+                // controller fed extra local-only points would
+                // downshift to geometry the server rejects as
+                // bad-request mid-generation
+                for adv in &buckets {
+                    if let Some(cb) = self.buckets.get_mut(&(adv.bucket
+                                                            as usize)) {
+                        cb.ladder.truncate(adv.ladder.len().max(1));
                     }
                 }
                 self.server_caps = server_caps;
@@ -229,8 +295,8 @@ impl DeviceClient {
         self.server_caps & CLIENT_CAPS
     }
 
-    /// The bucket geometry the server advertised at handshake.
-    pub fn server_buckets(&self) -> &[super::protocol::BucketGeom] {
+    /// The bucket quality ladders the server advertised at handshake.
+    pub fn server_buckets(&self) -> &[super::protocol::BucketAdvert] {
         &self.server_buckets
     }
 
@@ -263,23 +329,128 @@ impl DeviceClient {
         self.encoder.is_some()
     }
 
-    /// One decode step: compress the current context, send, await token.
+    /// Switch this session to adaptive spectral rate control
+    /// (`codec::rate`): each step the per-session [`RateController`]
+    /// picks a ladder point from the EWMA goodput estimate (fed by
+    /// transport send timing) and the stream codec's measured drift,
+    /// under `cfg.error_budget`.  Returns false (and stays pinned to
+    /// the primary point) when the handshake did not negotiate the
+    /// ladder capability — the clean downgrade path.  Composes with
+    /// [`DeviceClient::enable_stream`]: a ladder switch changes the
+    /// block geometry, which forces a stream keyframe exactly like
+    /// bucket promotion.
+    #[must_use = "a false return means the server refused the ladder \
+                  capability and the client stays at the primary point"]
+    pub fn enable_adaptive(&mut self, cfg: RateConfig) -> bool {
+        if self.negotiated_caps() & caps::LADDER == 0 {
+            crate::warn_!("client",
+                          "session {}: server lacks the ladder capability; \
+                           staying at the primary point", self.session);
+            return false;
+        }
+        let Some((&bucket, cb)) = self.buckets.iter().next() else {
+            return false;
+        };
+        match RateController::new(cb.ladder.clone(), cfg) {
+            Ok(ctrl) => {
+                self.adaptive = Some(AdaptiveState { ctrl, bucket });
+                true
+            }
+            Err(e) => {
+                crate::warn_!("client", "session {}: bad rate config: {e:#}",
+                              self.session);
+                false
+            }
+        }
+    }
+
+    pub fn adaptive_enabled(&self) -> bool {
+        self.adaptive.is_some()
+    }
+
+    /// Pin the session to one advertised ladder point (the benches'
+    /// fixed-point ablation lever): adaptive accounting still runs
+    /// but the point never moves.  Returns false without the ladder
+    /// capability or for a point outside the ladder.
+    pub fn pin_ladder_point(&mut self, point: u8) -> bool {
+        let enabled_here = self.adaptive.is_none();
+        if enabled_here && !self.enable_adaptive(RateConfig::default()) {
+            return false;
+        }
+        let st = self.adaptive.as_mut().expect("adaptive state");
+        if st.ctrl.pin(point as usize).is_ok() {
+            true
+        } else {
+            // a failed pin must not leave free-running rate control
+            // enabled as a side effect — the caller asked for a fixed
+            // point, not adaptation
+            if enabled_here {
+                self.adaptive = None;
+            }
+            false
+        }
+    }
+
+    /// The ladder point the next step will ride (0 without adaptive
+    /// rate control).
+    pub fn current_point(&self) -> u8 {
+        self.adaptive.as_ref().map(|s| s.ctrl.point() as u8).unwrap_or(0)
+    }
+
+    /// One decode step: compress the current context (at the ladder
+    /// point the rate controller picks, if adaptive), send, await
+    /// token.
     pub fn step(&mut self, context: &[i32]) -> Result<(i32, f32)> {
         let len = context.len();
         let bucket = self
             .bucket_for(len)
             .ok_or_else(|| anyhow!("context {len} exceeds largest bucket"))?;
+        // adaptive: retarget the controller on bucket promotion (pace
+        // and drift estimates carry over — the link did not change),
+        // then advance it one step to pick this step's ladder point
+        let point: u8 = match self.adaptive.as_mut() {
+            Some(st) => {
+                if st.bucket != bucket {
+                    st.ctrl.retarget(self.buckets[&bucket].ladder.clone())?;
+                    st.bucket = bucket;
+                }
+                st.ctrl.step() as u8
+            }
+            None => 0,
+        };
+        if point != self.last_point {
+            self.stats.ladder_switches += 1;
+            self.last_point = point;
+        }
+        self.stats.max_point = self.stats.max_point.max(point);
+
         let cb = &self.buckets[&bucket];
+        let lp = cb.ladder[point as usize];
         let tokens = Tensor::i32(vec![1, bucket], tokenizer::pad_to(context, bucket));
 
         let t0 = Instant::now();
         let mut args = vec![tokens];
         args.extend(self.client_args.iter().cloned());
-        let out = cb.exe.run(&args)?; // [re, im] each [1, ks, kd]
-        let (ks, kd) = (cb.ks, cb.kd);
+        let out = cb.exe.run(&args)?; // [re, im] each [1, ks0, kd0]
+        let (ks, kd) = (lp.ks, lp.kd);
         let mut packed = std::mem::take(&mut self.packed_scratch);
-        pack_block_into(&mut self.engine, out[0].as_f32(), out[1].as_f32(),
-                        bucket, self.d_model, ks, kd, &mut packed);
+        if point == 0 {
+            pack_block_into(&mut self.engine, out[0].as_f32(), out[1].as_f32(),
+                            bucket, self.d_model, ks, kd, &mut packed);
+        } else {
+            // non-primary point: gather the nested sub-block out of
+            // the full block the fused executable already emitted —
+            // no per-point artifact — then pack that
+            let mut cre = std::mem::take(&mut self.crop_re);
+            let mut cim = std::mem::take(&mut self.crop_im);
+            crop_block_into(&mut self.engine, out[0].as_f32(),
+                            out[1].as_f32(), bucket, self.d_model, cb.ks,
+                            cb.kd, ks, kd, &mut cre, &mut cim)?;
+            pack_block_into(&mut self.engine, &cre, &cim, bucket,
+                            self.d_model, ks, kd, &mut packed);
+            self.crop_re = cre;
+            self.crop_im = cim;
+        }
         self.stats.client_compute_us += t0.elapsed().as_micros() as u64;
         self.stats.bytes_uncompressed += (bucket * self.d_model * 4) as u64;
 
@@ -287,7 +458,8 @@ impl DeviceClient {
         self.next_request += 1;
         let t1 = Instant::now();
         let reply = if self.encoder.is_some() {
-            let r = self.stream_step(request, bucket, len, ks, kd, &packed);
+            let r = self.stream_step(request, bucket, len, ks, kd, point,
+                                     &packed);
             self.packed_scratch = packed;
             r?
         } else {
@@ -298,9 +470,10 @@ impl DeviceClient {
                 true_len: len as u16,
                 ks: ks as u16,
                 kd: kd as u16,
+                point,
                 packed,
             };
-            self.send(&frame)?;
+            self.timed_send(&frame)?;
             // recover the coefficient buffer so the next step reuses it
             if let Frame::Activation { packed, .. } = frame {
                 self.packed_scratch = packed;
@@ -310,6 +483,21 @@ impl DeviceClient {
         };
         self.stats.round_trip_us.push(t1.elapsed().as_micros() as u64);
         Ok(reply)
+    }
+
+    /// Send one frame, timing the tx half and feeding the adaptive
+    /// controller's pace estimate — under a shaped link the send
+    /// blocks for the emulated transfer time, so the measurement *is*
+    /// the link.
+    fn timed_send(&mut self, frame: &Frame) -> Result<()> {
+        let b0 = self.stats.bytes_sent;
+        let t = Instant::now();
+        self.send(frame)?;
+        if let Some(st) = self.adaptive.as_mut() {
+            st.ctrl.observe_send((self.stats.bytes_sent - b0) as usize,
+                                 t.elapsed().as_secs_f64());
+        }
+        Ok(())
     }
 
     /// Wait for this request's Token, skipping stale replies.
@@ -334,8 +522,10 @@ impl DeviceClient {
     /// TTL-evicted, sequence gap), force a keyframe carrying the same
     /// activation and retry once — the resync protocol.  Any other
     /// error code is fatal and surfaces as a [`ServerError`].
+    #[allow(clippy::too_many_arguments)]
     fn stream_step(&mut self, request: u64, bucket: usize, len: usize,
-                   ks: usize, kd: usize, packed: &[f32]) -> Result<(i32, f32)> {
+                   ks: usize, kd: usize, point: u8, packed: &[f32])
+        -> Result<(i32, f32)> {
         let geom = BlockGeom { rows: bucket, cols: self.d_model, ks, kd };
         let mut counted = false;
         for attempt in 0..2 {
@@ -343,6 +533,15 @@ impl DeviceClient {
                 let enc = self.encoder.as_mut().expect("stream mode");
                 enc.encode_into(&mut self.engine, geom, packed,
                                 &mut self.step_scratch)?;
+            }
+            // the codec's measured leftover drift is the rate
+            // controller's second input (alongside the send pace): as
+            // drift approaches the error budget the controller
+            // upshifts back toward the primary point
+            let drift = self.encoder.as_ref().expect("stream mode")
+                .last_drift();
+            if let Some(st) = self.adaptive.as_mut() {
+                st.ctrl.observe_drift(drift);
             }
             let keyframe = self.step_scratch.keyframe;
             if keyframe {
@@ -359,10 +558,11 @@ impl DeviceClient {
                 true_len: len as u16,
                 ks: ks as u16,
                 kd: kd as u16,
+                point,
                 packed: std::mem::take(&mut self.step_scratch.packed),
                 updates: std::mem::take(&mut self.step_scratch.updates),
             };
-            self.send(&frame)?;
+            self.timed_send(&frame)?;
             // recover the frame buffers so the next step reuses them
             if let Frame::Delta { packed, updates, .. } = frame {
                 self.step_scratch.packed = packed;

@@ -26,6 +26,12 @@ pub struct Metrics {
     /// version-mismatch rejects, the v2 negotiation's failure lane).
     pub hellos: AtomicU64,
     pub proto_rejects: AtomicU64,
+    /// Adaptive rate control (`codec::rate`): ladder-point switches
+    /// observed across sessions, and the dwell — in *frames*, not
+    /// microseconds, despite the histogram's time-flavoured API —
+    /// sessions spent at a point before switching away.
+    pub ladder_switches: AtomicU64,
+    pub ladder_dwell_frames: Histogram,
     pub queue_wait_us: Histogram,
     pub decompress_us: Histogram,
     pub exec_us: Histogram,
@@ -62,10 +68,12 @@ impl Metrics {
         j.set("stream_rejects", g(&self.stream_rejects));
         j.set("hellos", g(&self.hellos));
         j.set("proto_rejects", g(&self.proto_rejects));
+        j.set("ladder_switches", g(&self.ladder_switches));
         for (name, h) in [("queue_wait_us", &self.queue_wait_us),
                           ("decompress_us", &self.decompress_us),
                           ("exec_us", &self.exec_us),
-                          ("e2e_us", &self.e2e_us)] {
+                          ("e2e_us", &self.e2e_us),
+                          ("ladder_dwell_frames", &self.ladder_dwell_frames)] {
             let mut hj = Json::obj();
             hj.set("count", Json::Num(h.count() as f64));
             hj.set("mean", Json::Num(h.mean_us()));
@@ -101,8 +109,13 @@ mod tests {
         assert_eq!(j.usize_or("stream_rejects", 9), 0);
         m.hellos.fetch_add(2, Ordering::Relaxed);
         m.proto_rejects.fetch_add(1, Ordering::Relaxed);
+        m.ladder_switches.fetch_add(3, Ordering::Relaxed);
+        m.ladder_dwell_frames.record_us(12);
         let j = m.to_json();
         assert_eq!(j.usize_or("hellos", 0), 2);
         assert_eq!(j.usize_or("proto_rejects", 0), 1);
+        assert_eq!(j.usize_or("ladder_switches", 0), 3);
+        assert_eq!(j.path("ladder_dwell_frames.count").unwrap().as_usize(),
+                   Some(1));
     }
 }

@@ -7,18 +7,20 @@
 //!   Hello      c→s  u32 magic | u16 version | u32 caps | u64 session
 //!                   | u16 model_len | model
 //!   Activation c→s  u64 session | u64 request | u16 bucket | u16 true_len
-//!                   | u16 ks | u16 kd | f32 packed[·]  (conjugate-sym pack)
+//!                   | u16 ks | u16 kd | u8 point
+//!                   | f32 packed[·]  (conjugate-sym pack)
 //!   Token      s→c  u64 request | i32 token | f32 logprob
 //!   GetStats   c→s  (empty)
 //!   Stats      s→c  u32 json_len | json
 //!   Error      s→c  u8 code | u16 msg_len | msg
 //!   Bye        c→s  (empty)
 //!   Delta      c→s  u64 session | u64 request | u32 seq | u8 keyframe
-//!                   | u16 bucket | u16 true_len | u16 ks | u16 kd
+//!                   | u16 bucket | u16 true_len | u16 ks | u16 kd | u8 point
 //!                   | keyframe=1: f32 packed[·]   (full block)
 //!                   | keyframe=0: u32 count | (u32 idx | f32 val)[count]
 //!   HelloAck   s→c  u16 version | u32 caps | u16 bucket_count
-//!                   | (u16 bucket | u16 ks | u16 kd)[bucket_count]
+//!                   | per bucket: u16 bucket | u8 n
+//!                   | n x (u16 ks | u16 kd | f32 err_bound)
 //!
 //! The v2 handshake replaces the old unversioned `Hello {session,
 //! model}`: the client leads with [`PROTOCOL_MAGIC`], its protocol
@@ -48,9 +50,13 @@ pub const MAX_FRAME: usize = 64 << 20;
 pub const PROTOCOL_MAGIC: u32 = 0x4643_5250;
 
 /// Wire protocol version.  v1 was the unversioned `Hello {session,
-/// model}` era; v2 introduced the negotiated handshake.  The server
-/// rejects any other version with [`ErrorCode::VersionMismatch`].
-pub const PROTOCOL_VERSION: u16 = 2;
+/// model}` era; v2 introduced the negotiated handshake; v3 added the
+/// adaptive rate ladder (a point byte on every Activation/Delta
+/// header and per-bucket ladders in the HelloAck) — an incompatible
+/// re-layout, which is exactly what the version field is for.  The
+/// server rejects any other version with
+/// [`ErrorCode::VersionMismatch`].
+pub const PROTOCOL_VERSION: u16 = 3;
 
 /// Bytes every frame pays on the wire before its body: u32 body_len +
 /// u8 frame_type.
@@ -61,8 +67,9 @@ pub const FRAME_OVERHEAD_BYTES: usize = 5;
 pub const HELLO_HEADER_BYTES: usize = 20;
 
 /// Fixed body-header bytes of an `Activation` frame (session +
-/// request + bucket + true_len + ks + kd); the packed block follows.
-pub const ACTIVATION_HEADER_BYTES: usize = 24;
+/// request + bucket + true_len + ks + kd + ladder point); the packed
+/// block follows.
+pub const ACTIVATION_HEADER_BYTES: usize = 25;
 
 /// Full body of a `Token` frame (request + token + logprob).
 pub const TOKEN_BODY_BYTES: usize = 16;
@@ -74,18 +81,23 @@ pub const STATS_HEADER_BYTES: usize = 4;
 pub const ERROR_HEADER_BYTES: usize = 3;
 
 /// Body-header bytes of a `Delta` frame (session + request + seq +
-/// keyframe flag + bucket + true_len + ks + kd) — the stream
-/// counterpart of the Activation frame's
+/// keyframe flag + bucket + true_len + ks + kd + ladder point) — the
+/// stream counterpart of the Activation frame's
 /// [`ACTIVATION_HEADER_BYTES`], used by the wire-byte accounting.
-pub const STREAM_HEADER_BYTES: usize = 29;
+pub const STREAM_HEADER_BYTES: usize = 30;
 
 /// Fixed body-header bytes of a `HelloAck` frame (version + caps +
 /// bucket_count); [`HELLO_ACK_BUCKET_BYTES`] per advertised bucket
 /// follow.
 pub const HELLO_ACK_HEADER_BYTES: usize = 8;
 
-/// Bytes per bucket-geometry entry in a `HelloAck` (bucket + ks + kd).
-pub const HELLO_ACK_BUCKET_BYTES: usize = 6;
+/// Fixed bytes per bucket advertisement in a `HelloAck` (bucket +
+/// ladder point count); [`HELLO_ACK_POINT_BYTES`] per point follow.
+pub const HELLO_ACK_BUCKET_BYTES: usize = 3;
+
+/// Bytes per quality-ladder point in a `HelloAck` bucket
+/// advertisement (ks + kd + err_bound).
+pub const HELLO_ACK_POINT_BYTES: usize = 8;
 
 /// Capability bits negotiated by the handshake.  The effective
 /// feature set of a connection is the intersection of the client's
@@ -101,6 +113,10 @@ pub mod caps {
     pub const CODEC_FC: u32 = 1 << 2;
     /// The top-k sparse codec (reserved for future wire payloads).
     pub const CODEC_TOPK: u32 = 1 << 3;
+    /// Adaptive spectral rate control (`codec::rate`): the server
+    /// accepts data frames at the non-primary ladder points it
+    /// advertises in its `HelloAck`.
+    pub const LADDER: u32 = 1 << 4;
 }
 
 /// Typed reason byte carried by every [`Frame::Error`].
@@ -174,14 +190,33 @@ impl std::fmt::Display for ServerError {
 
 impl std::error::Error for ServerError {}
 
-/// One bucket's serving geometry as advertised in a
-/// [`Frame::HelloAck`]: sequence bucket plus the kept spectral block
-/// (ks × kd) the server expects for it.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct BucketGeom {
-    pub bucket: u16,
+/// One (ks, kd) operating point of a bucket's quality ladder as it
+/// crosses the wire, with its forged Parseval error bound — the
+/// additional reconstruction error the point introduces over the
+/// bucket's primary block (see `codec::rate`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LadderEntry {
     pub ks: u16,
     pub kd: u16,
+    pub err_bound: f32,
+}
+
+/// One bucket's advertisement in a [`Frame::HelloAck`]: the sequence
+/// bucket and its quality ladder — point 0 is the primary geometry
+/// (the paper's fixed block), later points keep nested, smaller
+/// centred blocks a rate-controlled client may downshift to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BucketAdvert {
+    pub bucket: u16,
+    pub ladder: Vec<LadderEntry>,
+}
+
+impl BucketAdvert {
+    /// The primary (point-0) block geometry; (0, 0) for a malformed
+    /// pointless advert, which callers reject like a bucketless ack.
+    pub fn primary(&self) -> (u16, u16) {
+        self.ladder.first().map(|p| (p.ks, p.kd)).unwrap_or((0, 0))
+    }
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -200,6 +235,10 @@ pub enum Frame {
         true_len: u16,
         ks: u16,
         kd: u16,
+        /// Quality-ladder point the (ks, kd) block belongs to (0 =
+        /// the bucket's primary geometry); the server validates it
+        /// against the ladder it advertised.
+        point: u8,
         packed: Vec<f32>,
     },
     Token { request: u64, token: i32, logprob: f32 },
@@ -220,17 +259,22 @@ pub enum Frame {
         true_len: u16,
         ks: u16,
         kd: u16,
+        /// Quality-ladder point of the stream's current geometry; a
+        /// ladder switch must arrive as a keyframe (the geometry
+        /// changed), so a delta naming a new point is rejected.
+        point: u8,
         packed: Vec<f32>,
         updates: Vec<(u32, f32)>,
     },
     /// Server's handshake answer: its protocol version, capability
-    /// bits, and the bucket geometry it serves — the client checks
-    /// the geometry against its local manifest so device/server
-    /// manifest drift fails the connection instead of the codec.
+    /// bits, and the bucket quality ladders it serves — the client
+    /// checks the geometry against its local manifest so
+    /// device/server manifest drift fails the connection instead of
+    /// the codec.
     HelloAck {
         version: u16,
         caps: u32,
-        buckets: Vec<BucketGeom>,
+        buckets: Vec<BucketAdvert>,
     },
 }
 
@@ -272,13 +316,14 @@ impl Frame {
                 b.extend_from_slice(model.as_bytes());
             }
             Frame::Activation { session, request, bucket, true_len, ks, kd,
-                                packed } => {
+                                point, packed } => {
                 b.extend_from_slice(&session.to_le_bytes());
                 b.extend_from_slice(&request.to_le_bytes());
                 b.extend_from_slice(&bucket.to_le_bytes());
                 b.extend_from_slice(&true_len.to_le_bytes());
                 b.extend_from_slice(&ks.to_le_bytes());
                 b.extend_from_slice(&kd.to_le_bytes());
+                b.push(*point);
                 for v in packed {
                     b.extend_from_slice(&v.to_le_bytes());
                 }
@@ -299,7 +344,7 @@ impl Frame {
                 b.extend_from_slice(msg.as_bytes());
             }
             Frame::Delta { session, request, seq, keyframe, bucket, true_len,
-                           ks, kd, packed, updates } => {
+                           ks, kd, point, packed, updates } => {
                 b.extend_from_slice(&session.to_le_bytes());
                 b.extend_from_slice(&request.to_le_bytes());
                 b.extend_from_slice(&seq.to_le_bytes());
@@ -308,6 +353,7 @@ impl Frame {
                 b.extend_from_slice(&true_len.to_le_bytes());
                 b.extend_from_slice(&ks.to_le_bytes());
                 b.extend_from_slice(&kd.to_le_bytes());
+                b.push(*point);
                 if *keyframe {
                     for v in packed {
                         b.extend_from_slice(&v.to_le_bytes());
@@ -326,8 +372,12 @@ impl Frame {
                 b.extend_from_slice(&(buckets.len() as u16).to_le_bytes());
                 for g in buckets {
                     b.extend_from_slice(&g.bucket.to_le_bytes());
-                    b.extend_from_slice(&g.ks.to_le_bytes());
-                    b.extend_from_slice(&g.kd.to_le_bytes());
+                    b.push(g.ladder.len() as u8);
+                    for p in &g.ladder {
+                        b.extend_from_slice(&p.ks.to_le_bytes());
+                        b.extend_from_slice(&p.kd.to_le_bytes());
+                        b.extend_from_slice(&p.err_bound.to_le_bytes());
+                    }
                 }
             }
         }
@@ -370,6 +420,7 @@ impl Frame {
                 let true_len = r.u16()?;
                 let ks = r.u16()?;
                 let kd = r.u16()?;
+                let point = r.byte()?;
                 let mut packed = Vec::with_capacity(r.remaining() / 4);
                 while r.remaining() >= 4 {
                     packed.push(r.f32()?);
@@ -378,7 +429,7 @@ impl Frame {
                         "activation body not f32-aligned ({} stray bytes)",
                         r.remaining());
                 Frame::Activation { session, request, bucket, true_len, ks, kd,
-                                    packed }
+                                    point, packed }
             }
             2 => {
                 let request = u64_of(&mut r)?;
@@ -411,6 +462,7 @@ impl Frame {
                 let true_len = r.u16()?;
                 let ks = r.u16()?;
                 let kd = r.u16()?;
+                let point = r.byte()?;
                 let (packed, updates) = if keyframe {
                     let mut p = Vec::with_capacity(r.remaining() / 4);
                     while r.remaining() >= 4 {
@@ -433,7 +485,7 @@ impl Frame {
                     (Vec::new(), u)
                 };
                 Frame::Delta { session, request, seq, keyframe, bucket,
-                               true_len, ks, kd, packed, updates }
+                               true_len, ks, kd, point, packed, updates }
             }
             8 => {
                 let version = r.u16()?;
@@ -444,9 +496,16 @@ impl Frame {
                                              / HELLO_ACK_BUCKET_BYTES));
                 for _ in 0..n {
                     let bucket = r.u16()?;
-                    let ks = r.u16()?;
-                    let kd = r.u16()?;
-                    buckets.push(BucketGeom { bucket, ks, kd });
+                    let points = r.byte()? as usize;
+                    let mut ladder = Vec::with_capacity(
+                        points.min(r.remaining() / HELLO_ACK_POINT_BYTES));
+                    for _ in 0..points {
+                        let ks = r.u16()?;
+                        let kd = r.u16()?;
+                        let err_bound = r.f32()?;
+                        ladder.push(LadderEntry { ks, kd, err_bound });
+                    }
+                    buckets.push(BucketAdvert { bucket, ladder });
                 }
                 ensure!(r.remaining() == 0,
                         "trailing hello-ack bytes ({})", r.remaining());
@@ -492,12 +551,27 @@ mod tests {
         assert_eq!(back, f);
     }
 
+    fn advert(bucket: u16, points: &[(u16, u16, f32)]) -> BucketAdvert {
+        BucketAdvert {
+            bucket,
+            ladder: points
+                .iter()
+                .map(|&(ks, kd, err_bound)| LadderEntry { ks, kd, err_bound })
+                .collect(),
+        }
+    }
+
     #[test]
     fn all_frames_roundtrip() {
         roundtrip(Frame::hello(7, caps::STREAM | caps::CODEC_FC, "llamette-m"));
         roundtrip(Frame::Activation {
             session: 1, request: 42, bucket: 32, true_len: 29, ks: 32, kd: 15,
-            packed: vec![1.0, -2.5, 0.0, 3.25],
+            point: 0, packed: vec![1.0, -2.5, 0.0, 3.25],
+        });
+        // a downshifted ladder point rides the same header
+        roundtrip(Frame::Activation {
+            session: 1, request: 43, bucket: 32, true_len: 29, ks: 32, kd: 7,
+            point: 2, packed: vec![1.0, -2.5],
         });
         roundtrip(Frame::Token { request: 42, token: 101, logprob: -0.75 });
         roundtrip(Frame::GetStats);
@@ -507,26 +581,34 @@ mod tests {
         roundtrip(Frame::Bye);
         roundtrip(Frame::Delta {
             session: 3, request: 9, seq: 4, keyframe: true, bucket: 16,
-            true_len: 12, ks: 5, kd: 3, packed: vec![0.5; 15],
+            true_len: 12, ks: 5, kd: 3, point: 1, packed: vec![0.5; 15],
             updates: vec![],
         });
         roundtrip(Frame::Delta {
             session: 3, request: 10, seq: 5, keyframe: false, bucket: 16,
-            true_len: 13, ks: 5, kd: 3, packed: vec![],
+            true_len: 13, ks: 5, kd: 3, point: 0, packed: vec![],
             updates: vec![(0, 1.0), (7, -2.5), (14, 0.125)],
         });
         // empty delta: the "nothing drifted" frame is legal and tiny
         roundtrip(Frame::Delta {
             session: 3, request: 11, seq: 6, keyframe: false, bucket: 16,
-            true_len: 13, ks: 5, kd: 3, packed: vec![], updates: vec![],
+            true_len: 13, ks: 5, kd: 3, point: 0, packed: vec![],
+            updates: vec![],
         });
         roundtrip(Frame::HelloAck {
             version: PROTOCOL_VERSION, caps: caps::STREAM | caps::CODEC_FC,
-            buckets: vec![BucketGeom { bucket: 16, ks: 9, kd: 15 },
-                          BucketGeom { bucket: 32, ks: 17, kd: 15 }],
+            buckets: vec![
+                advert(16, &[(9, 15, 0.05), (9, 9, 0.2), (5, 7, 0.5)]),
+                advert(32, &[(17, 15, 0.04)]),
+            ],
         });
         // a bucketless ack is legal on the wire (rejected higher up)
         roundtrip(Frame::HelloAck { version: 1, caps: 0, buckets: vec![] });
+        // ...as is a pointless bucket advertisement
+        roundtrip(Frame::HelloAck {
+            version: PROTOCOL_VERSION, caps: 0,
+            buckets: vec![advert(16, &[])],
+        });
     }
 
     #[test]
@@ -552,14 +634,15 @@ mod tests {
             other => panic!("expected Hello, got {}", other.type_id()),
         }
         // current magic, future version, longer body: still decodes
-        let mut v3 = Vec::new();
-        v3.extend_from_slice(&PROTOCOL_MAGIC.to_le_bytes());
-        v3.extend_from_slice(&3u16.to_le_bytes());
-        v3.extend_from_slice(&[0xAB; 40]); // unknown v3 payload
-        match Frame::decode(0, &v3).unwrap() {
+        let future = PROTOCOL_VERSION + 1;
+        let mut vf = Vec::new();
+        vf.extend_from_slice(&PROTOCOL_MAGIC.to_le_bytes());
+        vf.extend_from_slice(&future.to_le_bytes());
+        vf.extend_from_slice(&[0xAB; 40]); // unknown future payload
+        match Frame::decode(0, &vf).unwrap() {
             Frame::Hello { magic, version, .. } => {
                 assert_eq!(magic, PROTOCOL_MAGIC);
-                assert_eq!(version, 3);
+                assert_eq!(version, future);
             }
             other => panic!("expected Hello, got {}", other.type_id()),
         }
@@ -590,8 +673,8 @@ mod tests {
             Frame::hello(7, caps::STREAM, "llamette-m"),
             Frame::Activation {
                 session: 1, request: 42, bucket: 32, true_len: 29, ks: 3,
-                kd: 3, packed: vec![1.0, -2.5, 0.0, 3.25, 0.5, -1.0, 2.0,
-                                    0.25, 9.0],
+                kd: 3, point: 0,
+                packed: vec![1.0, -2.5, 0.0, 3.25, 0.5, -1.0, 2.0, 0.25, 9.0],
             },
             Frame::Token { request: 42, token: 101, logprob: -0.75 },
             Frame::GetStats,
@@ -601,17 +684,17 @@ mod tests {
             Frame::Bye,
             Frame::Delta {
                 session: 1, request: 43, seq: 2, keyframe: true, bucket: 32,
-                true_len: 29, ks: 3, kd: 3, packed: vec![1.0; 9],
+                true_len: 29, ks: 3, kd: 3, point: 1, packed: vec![1.0; 9],
                 updates: vec![],
             },
             Frame::Delta {
                 session: 1, request: 44, seq: 3, keyframe: false, bucket: 32,
-                true_len: 30, ks: 3, kd: 3, packed: vec![],
+                true_len: 30, ks: 3, kd: 3, point: 0, packed: vec![],
                 updates: vec![(2, 0.5), (8, -1.0)],
             },
             Frame::HelloAck {
                 version: PROTOCOL_VERSION, caps: caps::STREAM,
-                buckets: vec![BucketGeom { bucket: 16, ks: 9, kd: 15 }],
+                buckets: vec![advert(16, &[(9, 15, 0.1), (9, 7, 0.3)])],
             },
         ]
     }
@@ -647,9 +730,16 @@ mod tests {
         // hello-ack: 3 buckets promised, body holds 1
         let mut a = Frame::HelloAck {
             version: 2, caps: 0,
-            buckets: vec![BucketGeom { bucket: 16, ks: 3, kd: 3 }],
+            buckets: vec![advert(16, &[(3, 3, 0.5)])],
         }.encode()[FRAME_OVERHEAD_BYTES..].to_vec();
         a[6] = 3;
+        assert!(Frame::decode(8, &a).is_err());
+        // hello-ack: bucket promises 4 ladder points, body holds 1
+        let mut a = Frame::HelloAck {
+            version: 2, caps: 0,
+            buckets: vec![advert(16, &[(3, 3, 0.5)])],
+        }.encode()[FRAME_OVERHEAD_BYTES..].to_vec();
+        a[HELLO_ACK_HEADER_BYTES + 2] = 4; // point count of bucket 0
         assert!(Frame::decode(8, &a).is_err());
     }
 
@@ -657,7 +747,7 @@ mod tests {
     fn activation_rejects_partial_trailing_float() {
         let f = Frame::Activation {
             session: 1, request: 2, bucket: 16, true_len: 8, ks: 3, kd: 3,
-            packed: vec![1.0; 9],
+            point: 0, packed: vec![1.0; 9],
         };
         let mut enc = f.encode();
         // append 2 stray bytes to the body and patch the length prefix
@@ -680,7 +770,8 @@ mod tests {
         // bad keyframe flag
         let f = Frame::Delta {
             session: 1, request: 2, seq: 0, keyframe: false, bucket: 16,
-            true_len: 8, ks: 3, kd: 3, packed: vec![], updates: vec![(1, 2.0)],
+            true_len: 8, ks: 3, kd: 3, point: 0, packed: vec![],
+            updates: vec![(1, 2.0)],
         };
         let enc = f.encode();
         let mut body = enc[FRAME_OVERHEAD_BYTES..].to_vec();
@@ -690,7 +781,8 @@ mod tests {
         // keyframe with a partial trailing float
         let kf = Frame::Delta {
             session: 1, request: 2, seq: 0, keyframe: true, bucket: 16,
-            true_len: 8, ks: 3, kd: 3, packed: vec![1.0; 9], updates: vec![],
+            true_len: 8, ks: 3, kd: 3, point: 0, packed: vec![1.0; 9],
+            updates: vec![],
         };
         let mut kenc = kf.encode();
         kenc.extend_from_slice(&[0xAA, 0xBB]);
@@ -702,16 +794,16 @@ mod tests {
         // delta whose count promises more updates than the body holds
         let d = Frame::Delta {
             session: 1, request: 2, seq: 0, keyframe: false, bucket: 16,
-            true_len: 8, ks: 3, kd: 3, packed: vec![],
+            true_len: 8, ks: 3, kd: 3, point: 0, packed: vec![],
             updates: vec![(1, 2.0), (3, 4.0)],
         };
         let denc = d.encode();
         let mut dbody = denc[FRAME_OVERHEAD_BYTES..].to_vec();
-        dbody[29] = 3; // count offset: STREAM_HEADER_BYTES
+        dbody[STREAM_HEADER_BYTES] = 3; // update count leads the body
         assert!(Frame::decode(7, &dbody).is_err());
         // ...and trailing bytes after the promised updates
         let mut tbody = denc[FRAME_OVERHEAD_BYTES..].to_vec();
-        tbody[29] = 1;
+        tbody[STREAM_HEADER_BYTES] = 1;
         assert!(Frame::decode(7, &tbody).is_err());
     }
 
@@ -720,7 +812,7 @@ mod tests {
         // keyframe: header + 4 bytes per packed float
         let kf = Frame::Delta {
             session: 0, request: 0, seq: 1, keyframe: true, bucket: 64,
-            true_len: 64, ks: 33, kd: 15, packed: vec![0.0; 33 * 15],
+            true_len: 64, ks: 33, kd: 15, point: 0, packed: vec![0.0; 33 * 15],
             updates: vec![],
         };
         assert_eq!(kf.encode().len(),
@@ -728,7 +820,7 @@ mod tests {
         // delta: header + count + 8 bytes per update
         let d = Frame::Delta {
             session: 0, request: 0, seq: 2, keyframe: false, bucket: 64,
-            true_len: 64, ks: 33, kd: 15, packed: vec![],
+            true_len: 64, ks: 33, kd: 15, point: 0, packed: vec![],
             updates: vec![(0, 1.0); 7],
         };
         assert_eq!(d.encode().len(),
@@ -741,7 +833,7 @@ mod tests {
         // paper's transmitted volume is dominated by packed[·])
         let f = Frame::Activation {
             session: 0, request: 0, bucket: 64, true_len: 64, ks: 64, kd: 15,
-            packed: vec![0.0; 64 * 15],
+            point: 0, packed: vec![0.0; 64 * 15],
         };
         let enc = f.encode();
         assert_eq!(enc.len(),
@@ -763,7 +855,7 @@ mod tests {
 
         assert_eq!(body_len(&Frame::Activation {
             session: 0, request: 0, bucket: 16, true_len: 8, ks: 0, kd: 0,
-            packed: vec![],
+            point: 0, packed: vec![],
         }), ACTIVATION_HEADER_BYTES);
 
         assert_eq!(body_len(&Frame::Token {
@@ -785,21 +877,25 @@ mod tests {
         // a keyframe delta's body is exactly the stream header + block
         assert_eq!(body_len(&Frame::Delta {
             session: 0, request: 0, seq: 0, keyframe: true, bucket: 16,
-            true_len: 8, ks: 0, kd: 0, packed: vec![], updates: vec![],
+            true_len: 8, ks: 0, kd: 0, point: 0, packed: vec![],
+            updates: vec![],
         }), STREAM_HEADER_BYTES);
         // a sparse delta adds its u32 count even when empty
         assert_eq!(body_len(&Frame::Delta {
             session: 0, request: 0, seq: 0, keyframe: false, bucket: 16,
-            true_len: 8, ks: 0, kd: 0, packed: vec![], updates: vec![],
+            true_len: 8, ks: 0, kd: 0, point: 0, packed: vec![],
+            updates: vec![],
         }), STREAM_HEADER_BYTES + 4);
 
         assert_eq!(body_len(&Frame::HelloAck {
             version: 2, caps: 0, buckets: vec![],
         }), HELLO_ACK_HEADER_BYTES);
+        // 3 buckets x 2 ladder points each
         assert_eq!(body_len(&Frame::HelloAck {
             version: 2, caps: 0,
-            buckets: vec![BucketGeom { bucket: 16, ks: 3, kd: 3 }; 3],
-        }), HELLO_ACK_HEADER_BYTES + 3 * HELLO_ACK_BUCKET_BYTES);
+            buckets: vec![advert(16, &[(3, 3, 0.5), (3, 1, 0.9)]); 3],
+        }), HELLO_ACK_HEADER_BYTES + 3 * HELLO_ACK_BUCKET_BYTES
+            + 6 * HELLO_ACK_POINT_BYTES);
     }
 
     /// Satellite pin: `Frame::decode` over seeded-random type ids and
@@ -831,7 +927,8 @@ mod tests {
         // huge declared counts must error without allocating
         let mut sparse = Frame::Delta {
             session: 0, request: 0, seq: 0, keyframe: false, bucket: 1,
-            true_len: 1, ks: 1, kd: 1, packed: vec![], updates: vec![],
+            true_len: 1, ks: 1, kd: 1, point: 0, packed: vec![],
+            updates: vec![],
         }.encode()[FRAME_OVERHEAD_BYTES..].to_vec();
         let off = STREAM_HEADER_BYTES;
         sparse[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
@@ -839,6 +936,12 @@ mod tests {
         let mut ack = Frame::HelloAck { version: 2, caps: 0, buckets: vec![] }
             .encode()[FRAME_OVERHEAD_BYTES..].to_vec();
         ack[6..8].copy_from_slice(&u16::MAX.to_le_bytes());
+        assert!(Frame::decode(8, &ack).is_err());
+        // ...and a huge ladder-point count inside one advert
+        let mut ack = Frame::HelloAck {
+            version: 2, caps: 0, buckets: vec![advert(16, &[])],
+        }.encode()[FRAME_OVERHEAD_BYTES..].to_vec();
+        ack[HELLO_ACK_HEADER_BYTES + 2] = u8::MAX;
         assert!(Frame::decode(8, &ack).is_err());
     }
 }

@@ -19,12 +19,13 @@
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
-use super::protocol::{caps, BucketGeom, ErrorCode, Frame,
+use super::protocol::{caps, BucketAdvert, ErrorCode, Frame, LadderEntry,
                       ACTIVATION_HEADER_BYTES, PROTOCOL_MAGIC,
                       PROTOCOL_VERSION, STREAM_HEADER_BYTES};
 use super::session::SessionManager;
 use super::transport::{InProcTransport, TcpTransport, Transport};
-use crate::codec::fourier::unpack_block_into;
+use crate::codec::fourier::{embed_block_into, unpack_block_into};
+use crate::codec::rate::{ladder_from_manifest, LadderPoint};
 use crate::codec::stream::{BlockGeom, UPDATE_WIRE_BYTES};
 use crate::codec::CodecEngine;
 use crate::config::ServeConfig;
@@ -44,6 +45,11 @@ pub struct BucketMeta {
     pub bucket: usize,
     pub ks: usize,
     pub kd: usize,
+    /// The bucket's quality ladder (`codec::rate`): point 0 is the
+    /// primary (ks, kd) block above; later points keep nested smaller
+    /// blocks with monotone forged error bounds.  Manifests without a
+    /// ladder get the single primary point.
+    pub ladder: Vec<LadderPoint>,
 }
 
 /// The serving-side model: fused server executables per (bucket,
@@ -81,7 +87,9 @@ impl ServingModel {
             let bucket: usize = bstr.parse()?;
             let ks = bj.usize_or("ks", 0);
             let kd = bj.usize_or("kd", 0);
-            buckets.insert(bucket, BucketMeta { bucket, ks, kd });
+            let ladder = ladder_from_manifest(bj, bucket, meta.d_model)
+                .with_context(|| format!("bucket {bucket} ladder"))?;
+            buckets.insert(bucket, BucketMeta { bucket, ks, kd, ladder });
             let servers = bj
                 .get("server")
                 .and_then(|s| s.as_obj())
@@ -109,14 +117,26 @@ impl ServingModel {
                           buckets, exes, server_args, batch_sizes })
     }
 
-    /// The bucket geometry table as advertised in the `HelloAck`.
-    pub fn bucket_geoms(&self) -> Vec<BucketGeom> {
+    /// The bucket quality-ladder table as advertised in the
+    /// `HelloAck`.  `full_ladder: false` truncates every ladder to
+    /// its primary point — the `ServeConfig::ladder = false` lever,
+    /// paired with withholding the [`caps::LADDER`] bit.
+    pub fn bucket_adverts(&self, full_ladder: bool) -> Vec<BucketAdvert> {
         self.buckets
             .values()
-            .map(|bm| BucketGeom {
-                bucket: bm.bucket as u16,
-                ks: bm.ks as u16,
-                kd: bm.kd as u16,
+            .map(|bm| {
+                let n = if full_ladder { bm.ladder.len() } else { 1 };
+                BucketAdvert {
+                    bucket: bm.bucket as u16,
+                    ladder: bm.ladder[..n]
+                        .iter()
+                        .map(|p| LadderEntry {
+                            ks: p.ks as u16,
+                            kd: p.kd as u16,
+                            err_bound: p.err_bound as f32,
+                        })
+                        .collect(),
+                }
             })
             .collect()
     }
@@ -213,6 +233,11 @@ pub struct ConnState {
     engine: CodecEngine,
     reply: mpsc::Sender<Frame>,
     peer: String,
+    /// Reusable planes for unpacking a non-primary ladder point
+    /// before embedding it into the primary block (they never leave
+    /// the connection, unlike the GroupItem's re/im).
+    point_re: Vec<f32>,
+    point_im: Vec<f32>,
     client_caps: u32,
     /// This connection's ownership nonce (nonzero, unique per
     /// connection) — recorded as the session's `owner` at handshake
@@ -245,6 +270,9 @@ pub struct ServingService {
     breq_tx: mpsc::Sender<(usize, GroupItem)>,
     /// Capability bits this server advertises in `HelloAck`.
     pub caps: u32,
+    /// Advertise full quality ladders in `HelloAck` (paired with
+    /// [`caps::LADDER`]); false truncates the advert to point 0.
+    advertise_ladder: bool,
     /// Connection-nonce source for session ownership (starts at 1 —
     /// owner 0 means "unowned").
     next_conn: std::sync::atomic::AtomicU64,
@@ -259,10 +287,17 @@ impl ServingService {
         -> ConnState {
         let mut engine = CodecEngine::new();
         for (&bucket, bm) in &self.model.buckets {
-            engine.warm(bucket, self.model.d_model, bm.ks, bm.kd);
+            // only servable points are warmed: with the ladder
+            // withheld, non-primary geometries are rejected before
+            // they ever reach the codec
+            let n = if self.advertise_ladder { bm.ladder.len() } else { 1 };
+            for lp in &bm.ladder[..n] {
+                engine.warm(bucket, self.model.d_model, lp.ks, lp.kd);
+            }
         }
         let conn_id = self.next_conn.fetch_add(1, Ordering::Relaxed);
-        ConnState { engine, reply, peer, client_caps: 0, conn_id, session: 0,
+        ConnState { engine, reply, peer, point_re: Vec::new(),
+                    point_im: Vec::new(), client_caps: 0, conn_id, session: 0,
                     hello_done: false }
     }
 
@@ -299,33 +334,51 @@ impl ServingService {
         Response::Reply(Frame::Error { code, msg })
     }
 
-    /// Bucket lookup + geometry agreement check shared by the
-    /// Activation and Delta arms: the frame's (ks, kd) must match the
-    /// manifest's for that bucket.
-    fn checked_geom(&self, bucket: usize, ks: u16, kd: u16)
+    /// Bucket + ladder-point agreement check shared by the Activation
+    /// and Delta arms: the frame's point id must exist in the
+    /// bucket's ladder and its (ks, kd) must match that point's
+    /// geometry.  Returns the point's block geometry.
+    fn checked_point(&self, bucket: usize, point: u8, ks: u16, kd: u16)
         -> Option<(usize, usize)> {
-        match self.model.buckets.get(&bucket) {
-            Some(bm) if bm.ks == ks as usize && bm.kd == kd as usize => {
-                Some((bm.ks, bm.kd))
-            }
-            _ => None,
-        }
+        let bm = self.model.buckets.get(&bucket)?;
+        let lp = bm.ladder.get(point as usize)?;
+        (lp.ks == ks as usize && lp.kd == kd as usize)
+            .then_some((lp.ks, lp.kd))
     }
 
     /// Shared tail of both data arms: unpack a packed block with the
-    /// connection's warm engine and hand the result to the batcher.
+    /// connection's warm engine — a non-primary ladder point is then
+    /// embedded into the bucket's primary block, its truncated
+    /// frequencies zero, so the fused server executable always sees
+    /// its compiled geometry — and hand the result to the batcher.
     /// `re`/`im` are owned by the GroupItem (they cross the batcher
     /// thread boundary), but the index sets and unpack bookkeeping
     /// come from the warm engine.
+    #[allow(clippy::too_many_arguments)]
     fn unpack_and_enqueue(&self, conn: &mut ConnState, session: u64,
-                          request: u64, bucket: usize, bks: usize, bkd: usize,
+                          request: u64, bucket: usize, pks: usize, pkd: usize,
                           true_len: u16, block: &[f32], t_rx: Instant)
         -> Response {
+        let bm = &self.model.buckets[&bucket];
+        let (ks0, kd0) = (bm.ks, bm.kd);
+        let d = self.model.d_model;
         let t0 = Instant::now();
         let (mut re, mut im) = (Vec::new(), Vec::new());
-        let unpacked = unpack_block_into(&mut conn.engine, block, bucket,
-                                         self.model.d_model, bks, bkd,
-                                         &mut re, &mut im);
+        let unpacked = if pks == ks0 && pkd == kd0 {
+            unpack_block_into(&mut conn.engine, block, bucket, d, pks, pkd,
+                              &mut re, &mut im)
+        } else {
+            let mut sre = std::mem::take(&mut conn.point_re);
+            let mut sim = std::mem::take(&mut conn.point_im);
+            let r = unpack_block_into(&mut conn.engine, block, bucket, d, pks,
+                                      pkd, &mut sre, &mut sim)
+                .and_then(|_| embed_block_into(&mut conn.engine, &sre, &sim,
+                                               bucket, d, pks, pkd, ks0, kd0,
+                                               &mut re, &mut im));
+            conn.point_re = sre;
+            conn.point_im = sim;
+            r
+        };
         self.metrics.decompress_us.record(t0.elapsed());
         if let Err(e) = unpacked {
             return Self::err(ErrorCode::BadRequest, format!("unpack: {e}"));
@@ -398,11 +451,11 @@ impl ServingService {
                 Response::Reply(Frame::HelloAck {
                     version: PROTOCOL_VERSION,
                     caps: self.caps,
-                    buckets: self.model.bucket_geoms(),
+                    buckets: self.model.bucket_adverts(self.advertise_ladder),
                 })
             }
             Frame::Activation { session, request, bucket, true_len, ks, kd,
-                                packed } => {
+                                point, packed } => {
                 let t_rx = Instant::now();
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 self.metrics.bytes_rx.fetch_add(
@@ -411,6 +464,21 @@ impl ServingService {
                 if let Some(reject) = self.session_gate(conn, session) {
                     return reject;
                 }
+                if point != 0
+                    && conn.negotiated_caps(self.caps) & caps::LADDER == 0 {
+                    return Self::err(
+                        ErrorCode::BadRequest,
+                        "ladder capability not negotiated".into());
+                }
+                let bucket = bucket as usize;
+                let Some((pks, pkd)) =
+                    self.checked_point(bucket, point, ks, kd)
+                else {
+                    return Self::err(
+                        ErrorCode::BadRequest,
+                        format!("bad bucket {bucket} point {point} \
+                                 ({ks}x{kd})"));
+                };
                 {
                     let body = (packed.len() * 4) as u64;
                     let mut sessions = self.sessions.lock().unwrap();
@@ -426,17 +494,27 @@ impl ServingService {
                         sessions.touch(session, body);
                     }
                 }
-                let bucket = bucket as usize;
-                let Some((bks, bkd)) = self.checked_geom(bucket, ks, kd)
-                else {
-                    return Self::err(ErrorCode::BadRequest,
-                                     format!("bad bucket {bucket}/{ks}x{kd}"));
-                };
-                self.unpack_and_enqueue(conn, session, request, bucket, bks,
-                                        bkd, true_len, &packed, t_rx)
+                let resp = self.unpack_and_enqueue(conn, session, request,
+                                                   bucket, pks, pkd, true_len,
+                                                   &packed, t_rx);
+                // record the ladder point only for frames that were
+                // actually served: a rejected body must not move the
+                // session's point (a stream running at another point
+                // would get a spurious switch-requires-keyframe
+                // reject) nor fabricate switch metrics
+                if matches!(resp, Response::None) {
+                    let switched = self.sessions.lock().unwrap()
+                        .note_point(session, point);
+                    if let Some(dwell) = switched {
+                        self.metrics.ladder_switches
+                            .fetch_add(1, Ordering::Relaxed);
+                        self.metrics.ladder_dwell_frames.record_us(dwell);
+                    }
+                }
+                resp
             }
             Frame::Delta { session, request, seq, keyframe, bucket, true_len,
-                           ks, kd, packed, updates } => {
+                           ks, kd, point, packed, updates } => {
                 let t_rx = Instant::now();
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 let body_bytes = if keyframe {
@@ -454,11 +532,20 @@ impl ServingService {
                         ErrorCode::BadRequest,
                         "stream capability not negotiated".into());
                 }
+                if point != 0
+                    && conn.negotiated_caps(self.caps) & caps::LADDER == 0 {
+                    return Self::err(
+                        ErrorCode::BadRequest,
+                        "ladder capability not negotiated".into());
+                }
                 let bucket = bucket as usize;
-                let Some((bks, bkd)) = self.checked_geom(bucket, ks, kd)
+                let Some((bks, bkd)) =
+                    self.checked_point(bucket, point, ks, kd)
                 else {
-                    return Self::err(ErrorCode::BadRequest,
-                                     format!("bad bucket {bucket}/{ks}x{kd}"));
+                    return Self::err(
+                        ErrorCode::BadRequest,
+                        format!("bad bucket {bucket} point {point} \
+                                 ({ks}x{kd})"));
                 };
                 // only frames a negotiated peer aims at a real stream
                 // count in the key/delta wire split (in-sequence
@@ -484,11 +571,11 @@ impl ServingService {
                 let applied = {
                     let mut guard = self.sessions.lock().unwrap();
                     apply_stream_frame(&mut guard, session, seq, keyframe,
-                                       geom, body_bytes as u64, &packed,
-                                       &updates)
+                                       point, geom, body_bytes as u64,
+                                       &packed, &updates)
                 };
-                let block = match applied {
-                    Ok(block) => block,
+                let (block, switched) = match applied {
+                    Ok(ok) => ok,
                     Err(e) => {
                         self.metrics.stream_rejects.fetch_add(
                             1, Ordering::Relaxed);
@@ -496,6 +583,11 @@ impl ServingService {
                                          format!("stream: {e:#}"));
                     }
                 };
+                if let Some(dwell) = switched {
+                    self.metrics.ladder_switches
+                        .fetch_add(1, Ordering::Relaxed);
+                    self.metrics.ladder_dwell_frames.record_us(dwell);
+                }
                 self.unpack_and_enqueue(conn, session, request, bucket, bks,
                                         bkd, true_len, &block, t_rx)
             }
@@ -511,30 +603,51 @@ impl ServingService {
 
 /// Apply one stream frame to the session's decoder (keyframe:
 /// re-admit + reseed; delta: live session + in-sequence only) and
-/// return a copy of the resulting packed block.  The caller holds the
-/// session lock for the whole operation so the decode state can never
-/// interleave with another frame of the same session; the copy keeps
-/// the critical section to the decoder apply — unpacking happens
-/// outside the lock, like the Activation path.  `body_bytes` is the
-/// codec-body size charged to the session (headerless, matching the
-/// Activation path's accounting).
+/// return a copy of the resulting packed block plus the completed
+/// dwell when the frame switched the session's ladder point.  A
+/// ladder switch is only legal on a keyframe — the geometry changed,
+/// so the decoder state is stale by construction — a delta naming a
+/// new point is rejected like a sequence gap and the client resyncs.
+/// The caller holds the session lock for the whole operation so the
+/// decode state can never interleave with another frame of the same
+/// session; the copy keeps the critical section to the decoder apply
+/// — unpacking happens outside the lock, like the Activation path.
+/// `body_bytes` is the codec-body size charged to the session
+/// (headerless, matching the Activation path's accounting).
+#[allow(clippy::too_many_arguments)]
 fn apply_stream_frame(sessions: &mut SessionManager, session: u64, seq: u32,
-                      keyframe: bool, geom: BlockGeom, body_bytes: u64,
-                      packed: &[f32], updates: &[(u32, f32)])
-    -> Result<Vec<f32>> {
-    let dec = if keyframe {
-        sessions.stream_key_decoder(session, body_bytes)
-            .ok_or_else(|| anyhow!("stream admission refused"))?
-    } else {
-        sessions.stream_delta_decoder(session, body_bytes)
-            .ok_or_else(|| anyhow!("stream state evicted; keyframe required"))?
+                      keyframe: bool, point: u8, geom: BlockGeom,
+                      body_bytes: u64, packed: &[f32],
+                      updates: &[(u32, f32)])
+    -> Result<(Vec<f32>, Option<u64>)> {
+    // continuity is validated against the STREAM's own point (moved
+    // only by keyframes) — an interleaved recompute frame at another
+    // point must not poison an in-sequence delta
+    let prev = sessions.stream_point_of(session);
+    if !keyframe && prev.is_some_and(|p| p != point) {
+        bail!("ladder switch (point {} -> {point}) requires a keyframe",
+              prev.unwrap());
+    }
+    let block = {
+        let dec = if keyframe {
+            sessions.stream_key_decoder(session, body_bytes)
+                .ok_or_else(|| anyhow!("stream admission refused"))?
+        } else {
+            sessions.stream_delta_decoder(session, body_bytes)
+                .ok_or_else(|| anyhow!("stream state evicted; keyframe \
+                                        required"))?
+        };
+        if keyframe {
+            dec.apply_key(seq, geom, packed)?;
+        } else {
+            dec.apply_delta(seq, geom, updates)?;
+        }
+        dec.block().to_vec()
     };
     if keyframe {
-        dec.apply_key(seq, geom, packed)?;
-    } else {
-        dec.apply_delta(seq, geom, updates)?;
+        sessions.set_stream_point(session, point);
     }
-    Ok(dec.block().to_vec())
+    Ok((block, sessions.note_point(session, point)))
 }
 
 /// Pump one transport through the service core: a writer thread
@@ -740,12 +853,16 @@ pub fn start_service(cfg: &ServeConfig, store: Arc<ArtifactStore>)
     if cfg.stream {
         server_caps |= caps::STREAM;
     }
+    if cfg.ladder {
+        server_caps |= caps::LADDER;
+    }
     let service = Arc::new(ServingService {
         model,
         metrics: metrics.clone(),
         sessions,
         breq_tx,
         caps: server_caps,
+        advertise_ladder: cfg.ladder,
         next_conn: std::sync::atomic::AtomicU64::new(1),
     });
     Ok(ServiceHandle { service, metrics, stop, handles })

@@ -31,6 +31,17 @@ pub struct Session {
     /// keyframe); dropped with the session on eviction, which is what
     /// makes eviction mid-stream safe.
     pub stream: StreamDecoder,
+    /// Quality-ladder point the session's data frames currently ride
+    /// (`codec::rate`; 0 = the bucket's primary block) and how many
+    /// frames it has dwelt there — switches feed the server's
+    /// dwell-time histogram.
+    pub point: u8,
+    pub point_frames: u64,
+    /// Ladder point of the session's *stream* geometry, tracked
+    /// separately from the dwell accounting above: only stream
+    /// keyframes move it, so an interleaved recompute frame at a
+    /// different point cannot poison in-sequence delta validation.
+    pub stream_point: u8,
 }
 
 pub struct SessionManager {
@@ -100,6 +111,9 @@ impl SessionManager {
                 requests: 0,
                 bytes_rx: 0,
                 stream: StreamDecoder::default(),
+                point: 0,
+                point_frames: 0,
+                stream_point: 0,
             });
         true
     }
@@ -180,6 +194,44 @@ impl SessionManager {
 
     pub fn get(&self, id: u64) -> Option<&Session> {
         self.sessions.get(&id)
+    }
+
+    /// The ladder point the session's frames currently ride.
+    pub fn point_of(&self, id: u64) -> Option<u8> {
+        self.sessions.get(&id).map(|s| s.point)
+    }
+
+    /// The ladder point of the session's stream geometry (moved only
+    /// by stream keyframes, via
+    /// [`SessionManager::set_stream_point`]).
+    pub fn stream_point_of(&self, id: u64) -> Option<u8> {
+        self.sessions.get(&id).map(|s| s.stream_point)
+    }
+
+    /// Record the stream geometry's ladder point after a successful
+    /// keyframe apply.
+    pub fn set_stream_point(&mut self, id: u64, point: u8) {
+        if let Some(s) = self.sessions.get_mut(&id) {
+            s.stream_point = point;
+        }
+    }
+
+    /// Record the ladder point a data frame used.  Returns
+    /// `Some(previous dwell in frames)` when this frame *switched*
+    /// the session to a new point — the caller records it in the
+    /// dwell-time histogram — and `None` when the point is unchanged
+    /// (dwell grows) or the session is unknown.
+    pub fn note_point(&mut self, id: u64, point: u8) -> Option<u64> {
+        let s = self.sessions.get_mut(&id)?;
+        if s.point == point {
+            s.point_frames = s.point_frames.saturating_add(1);
+            None
+        } else {
+            let dwell = s.point_frames;
+            s.point = point;
+            s.point_frames = 1;
+            Some(dwell)
+        }
     }
 
     /// Record a request; returns false for unknown sessions.
@@ -344,6 +396,24 @@ mod tests {
         // a fresh handshake re-records them
         assert!(m.hello(9, "x", 0b1));
         assert_eq!(m.get(9).unwrap().caps, 0b1);
+    }
+
+    #[test]
+    fn note_point_tracks_dwell_and_switches() {
+        let mut m = SessionManager::new(Duration::from_secs(60), 4);
+        assert!(m.note_point(1, 0).is_none(), "unknown session");
+        assert!(m.hello(1, "x", 0));
+        assert_eq!(m.point_of(1), Some(0));
+        // three frames at the primary point: dwell grows, no switch
+        for _ in 0..3 {
+            assert!(m.note_point(1, 0).is_none());
+        }
+        // downshift: the completed dwell comes back
+        assert_eq!(m.note_point(1, 2), Some(3));
+        assert_eq!(m.point_of(1), Some(2));
+        assert!(m.note_point(1, 2).is_none());
+        // upshift after two frames at point 2
+        assert_eq!(m.note_point(1, 0), Some(2));
     }
 
     #[test]

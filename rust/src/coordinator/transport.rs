@@ -24,7 +24,7 @@
 //! no silent truncation and no reordering.
 
 use super::protocol::Frame;
-use crate::net::{Channel, DropPlan};
+use crate::net::{Channel, ChannelTrace, DropPlan};
 use anyhow::{anyhow, Result};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
@@ -220,22 +220,38 @@ impl FrameRx for InProcRx {
 pub struct ShapedTransport {
     inner: Box<dyn Transport>,
     channel: Channel,
+    /// Time-varying override: when set, each send crosses the channel
+    /// the trace assigns to its 0-based send index (the fluctuating
+    /// links the adaptive rate-control suite emulates).
+    trace: Option<ChannelTrace>,
     drop: DropPlan,
 }
 
 impl ShapedTransport {
     pub fn new(inner: Box<dyn Transport>, channel: Channel, drop: DropPlan)
         -> ShapedTransport {
-        ShapedTransport { inner, channel, drop }
+        ShapedTransport { inner, channel, trace: None, drop }
+    }
+
+    /// A shaped transport whose per-send channel follows a
+    /// deterministic [`ChannelTrace`] instead of one fixed channel.
+    pub fn with_trace(inner: Box<dyn Transport>, trace: ChannelTrace,
+                      drop: DropPlan) -> ShapedTransport {
+        ShapedTransport {
+            inner,
+            channel: Channel::unlimited(),
+            trace: Some(trace),
+            drop,
+        }
     }
 }
 
 impl Transport for ShapedTransport {
     fn split(self: Box<Self>) -> Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)> {
-        let ShapedTransport { inner, channel, drop } = *self;
+        let ShapedTransport { inner, channel, trace, drop } = *self;
         let peer = inner.peer();
         let (tx, rx) = inner.split()?;
-        Ok((Box::new(ShapedTx { inner: tx, channel, drop, peer }), rx))
+        Ok((Box::new(ShapedTx { inner: tx, channel, trace, drop, peer }), rx))
     }
 
     fn peer(&self) -> String {
@@ -246,6 +262,7 @@ impl Transport for ShapedTransport {
 struct ShapedTx {
     inner: Box<dyn FrameTx>,
     channel: Channel,
+    trace: Option<ChannelTrace>,
     drop: DropPlan,
     peer: String,
 }
@@ -253,10 +270,14 @@ struct ShapedTx {
 impl FrameTx for ShapedTx {
     fn send_encoded(&mut self, bytes: &[u8]) -> Result<usize> {
         let n = bytes.len();
+        let channel = match self.trace.as_mut() {
+            Some(t) => t.next_channel(),
+            None => self.channel,
+        };
         if self.drop.should_drop() {
             // the frame is lost after crossing the link: it still
             // costs the sender its transfer time and byte budget
-            self.channel.throttle(n);
+            channel.throttle(n);
             crate::debug!("transport", "{}: dropped frame type {} ({n} B)",
                           self.peer, bytes.get(4).copied().unwrap_or(0xFF));
             return Ok(n);
@@ -264,7 +285,7 @@ impl FrameTx for ShapedTx {
         // sleep the emulated transfer time BEFORE the peer can see
         // the frame — the server must not start computing while the
         // bytes are still "on the wire" (no-op on unshaped channels)
-        self.channel.throttle(n);
+        channel.throttle(n);
         self.inner.send_encoded(bytes)
     }
 }
@@ -279,7 +300,7 @@ mod tests {
             Frame::hello(7, caps::STREAM | caps::CODEC_FC, "llamette-m"),
             Frame::Activation {
                 session: 1, request: 2, bucket: 16, true_len: 9, ks: 3, kd: 3,
-                packed: vec![0.5; 9],
+                point: 0, packed: vec![0.5; 9],
             },
             Frame::Token { request: 2, token: 65, logprob: -0.5 },
             Frame::Error { code: ErrorCode::StreamReject, msg: "gap".into() },

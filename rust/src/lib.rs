@@ -8,12 +8,14 @@
 //! * [`model`] — model metadata, weight loading, and the composable
 //!   split executor (client layers / codec boundary / server layers).
 //! * [`codec`] — the FourierCompress codec and every baseline the
-//!   paper compares against (Top-k, QR, FWSVD, ASVD, SVD-LLM, INT8).
+//!   paper compares against (Top-k, QR, FWSVD, ASVD, SVD-LLM, INT8),
+//!   plus the spectral delta stream (`codec::stream`) and the
+//!   adaptive (ks, kd) rate ladder + controller (`codec::rate`).
 //! * [`coordinator`] — the serving system (API v2): versioned wire
-//!   protocol with a negotiated handshake, pluggable transports
-//!   (TCP / in-proc / shaped), the transport-agnostic
-//!   `ServingService` core, dynamic batcher, session manager,
-//!   metrics.
+//!   protocol with a negotiated handshake (capabilities + bucket
+//!   quality ladders), pluggable transports (TCP / in-proc / shaped),
+//!   the transport-agnostic `ServingService` core, dynamic batcher,
+//!   session manager, metrics.
 //! * [`net`] — simulated bandwidth/latency channel + deterministic
 //!   frame-drop plans.
 //! * [`sim`] — discrete-event multi-client simulator (Fig 7).

@@ -86,6 +86,57 @@ impl Channel {
     }
 }
 
+/// Deterministic time-varying link for the shaped transport: a
+/// sequence of (frame count, [`Channel`]) phases applied by 0-based
+/// send index, the last phase holding forever.  Index-based — not
+/// wall-clock — so a test that says "frames 4..10 cross a collapsed
+/// link" means exactly those frames on every run; the adaptive
+/// rate-control suite drives its throttle step-down/recovery with
+/// one of these.
+#[derive(Debug, Clone)]
+pub struct ChannelTrace {
+    phases: Vec<(u64, Channel)>,
+    sent: u64,
+}
+
+impl ChannelTrace {
+    /// A trace of `(frames, channel)` phases.  Must be non-empty; the
+    /// last phase's channel governs every send past the trace's end.
+    pub fn new(phases: &[(u64, Channel)]) -> ChannelTrace {
+        assert!(!phases.is_empty(), "empty channel trace");
+        ChannelTrace { phases: phases.to_vec(), sent: 0 }
+    }
+
+    /// A single never-ending phase (equivalent to a plain `Channel`).
+    pub fn constant(ch: Channel) -> ChannelTrace {
+        ChannelTrace::new(&[(1, ch)])
+    }
+
+    /// The channel governing the next send, advancing the send index.
+    pub fn next_channel(&mut self) -> Channel {
+        let ch = self.channel_at(self.sent);
+        self.sent += 1;
+        ch
+    }
+
+    /// The channel a given 0-based send index crosses.
+    pub fn channel_at(&self, index: u64) -> Channel {
+        let mut start = 0u64;
+        for &(frames, ch) in &self.phases {
+            if index < start + frames {
+                return ch;
+            }
+            start += frames;
+        }
+        self.phases.last().expect("non-empty trace").1
+    }
+
+    /// Frames sent through the trace so far.
+    pub fn offered(&self) -> u64 {
+        self.sent
+    }
+}
+
 /// Deterministic frame-drop schedule for the shaped transport: the
 /// frames whose 0-based send index appears in the plan are silently
 /// discarded after "crossing" the link.  Deterministic by
@@ -191,6 +242,29 @@ mod tests {
         assert_eq!(ch.throttle_chunks(5 * 1024 * 1024), 20);
         // unshaped links never sleep for serialisation
         assert_eq!(Channel::unlimited().throttle_chunks(1 << 30), 0);
+    }
+
+    #[test]
+    fn channel_trace_phases_by_send_index_and_holds_last() {
+        let fast = Channel::gbps(1.0, 0);
+        let slow = Channel::gbps(0.001, 7);
+        let mut t = ChannelTrace::new(&[(2, fast), (3, slow)]);
+        let rates: Vec<f64> =
+            (0..8).map(|_| t.next_channel().bits_per_sec).collect();
+        assert_eq!(rates[..2], [1e9, 1e9]);
+        // phase 2, then the last phase holds forever
+        assert!(rates[2..].iter().all(|&r| (r - 1e6).abs() < 1.0),
+                "rates {rates:?}");
+        assert_eq!(t.offered(), 8);
+        // index probe does not advance
+        assert_eq!(t.channel_at(0).bits_per_sec, 1e9);
+        assert_eq!(t.channel_at(100).latency, Duration::from_micros(7));
+        assert_eq!(t.offered(), 8);
+        // constant trace == the plain channel
+        let mut c = ChannelTrace::constant(fast);
+        for _ in 0..5 {
+            assert_eq!(c.next_channel().bits_per_sec, 1e9);
+        }
     }
 
     #[test]

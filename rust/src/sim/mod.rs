@@ -34,6 +34,25 @@ pub enum Arm {
     /// coefficient deltas otherwise — the regime that removes the
     /// recompute retransmission
     FcStream,
+    /// The full adaptive stack (`codec::rate` over the delta stream):
+    /// during the slow phases of a built-in fluctuating-link trace
+    /// (alternating `adaptive_phase_steps`-step phases) the
+    /// controller rides a reduced ladder point keeping
+    /// `adaptive_low_fill` of the block; fast phases restore full
+    /// quality
+    FcAdaptive,
+}
+
+/// The built-in fluctuating-link trace `Arm::FcAdaptive` models: the
+/// fraction of the primary block the controller keeps at `step`
+/// (fast phases 1.0, slow phases `adaptive_low_fill`).  Public so the
+/// benches can audit the byte model against the real controller.
+pub fn adaptive_fill(cfg: &SimConfig, step: usize) -> f64 {
+    if (step / cfg.adaptive_phase_steps.max(1)) % 2 == 1 {
+        cfg.adaptive_low_fill
+    } else {
+        1.0
+    }
 }
 
 /// Per-step uplink payload bytes for one decode step under `arm` —
@@ -53,8 +72,14 @@ pub fn bytes_per_step(cfg: &SimConfig, arm: Arm, step: usize) -> f64 {
     match arm {
         Arm::Original => raw,
         Arm::Fc => raw / cfg.fc_ratio,
-        Arm::FcStream => {
-            let key = raw / cfg.fc_ratio;
+        Arm::FcStream | Arm::FcAdaptive => {
+            // FcAdaptive scales the kept block by the trace-driven
+            // ladder fill; FcStream is the fill == 1.0 special case
+            let fill = match arm {
+                Arm::FcAdaptive => adaptive_fill(cfg, step),
+                _ => 1.0,
+            };
+            let key = raw / cfg.fc_ratio * fill;
             if step % cfg.stream_keyframe_interval.max(1) == 0 {
                 key
             } else {
@@ -85,6 +110,7 @@ pub fn simulate(cfg: &SimConfig, clients: usize, link_gbps: f64, arm: Arm)
                                Arm::Original => 0,
                                Arm::Fc => 1,
                                Arm::FcStream => 2,
+                               Arm::FcAdaptive => 3,
                            });
     let mut q = EventQueue::new();
     let mut link = Resource::new(1);
@@ -97,7 +123,7 @@ pub fn simulate(cfg: &SimConfig, clients: usize, link_gbps: f64, arm: Arm)
     // sub-ms; it shows up in Fig 6, not here, but we keep it honest)
     let compress_s = match arm {
         Arm::Original => 0.0,
-        Arm::Fc | Arm::FcStream => 1.0e-4,
+        Arm::Fc | Arm::FcStream | Arm::FcAdaptive => 1.0e-4,
     };
     let link_rate = link_gbps * 1e9 / 8.0; // bytes/s
 
@@ -196,7 +222,8 @@ pub fn fig7(cfg: &SimConfig) -> Json {
             Json::Arr(cfg.clients.iter().map(|&c| Json::Num(c as f64)).collect()));
     for &g in &cfg.link_gbps {
         for (arm, tag) in [(Arm::Original, "orig"), (Arm::Fc, "fc"),
-                           (Arm::FcStream, "fcs")] {
+                           (Arm::FcStream, "fcs"),
+                           (Arm::FcAdaptive, "fca")] {
             let mut means = Vec::new();
             let mut utils = Vec::new();
             for &c in &cfg.clients {
@@ -228,6 +255,8 @@ mod tests {
             fc_ratio: 10.0,
             stream_keyframe_interval: 32,
             stream_delta_fill: 0.05,
+            adaptive_phase_steps: 16,
+            adaptive_low_fill: 0.35,
             service_per_token_s: 0.002,
             horizon_s: 60.0,
             seed: 1,
@@ -304,6 +333,33 @@ mod tests {
                    bytes_per_step(&cfg, Arm::Fc, 0));
         assert!(bytes_per_step(&cfg, Arm::FcStream, 1)
                 < bytes_per_step(&cfg, Arm::Fc, 1) / 4.0);
+    }
+
+    #[test]
+    fn adaptive_bytes_undercut_stream_only_in_slow_phases() {
+        let cfg = quick_cfg();
+        // fast phase (first adaptive_phase_steps steps): identical to
+        // the plain stream arm, keyframe and delta alike
+        assert_eq!(bytes_per_step(&cfg, Arm::FcAdaptive, 0),
+                   bytes_per_step(&cfg, Arm::FcStream, 0));
+        assert_eq!(bytes_per_step(&cfg, Arm::FcAdaptive, 3),
+                   bytes_per_step(&cfg, Arm::FcStream, 3));
+        // slow phase: the reduced ladder point undercuts the stream
+        let slow = cfg.adaptive_phase_steps + 1; // delta inside phase 1
+        assert!(bytes_per_step(&cfg, Arm::FcAdaptive, slow)
+                    < bytes_per_step(&cfg, Arm::FcStream, slow));
+        // cumulative over a horizon with both phases: adaptive wins
+        let cum = |arm: Arm| -> f64 {
+            (0..128).map(|t| bytes_per_step(&cfg, arm, t)).sum()
+        };
+        let (fcs, fca) = (cum(Arm::FcStream), cum(Arm::FcAdaptive));
+        assert!(fca < fcs, "adaptive {fca:.0} vs stream {fcs:.0}");
+        // the DES runs it end to end deterministically
+        let a = simulate(&cfg, 8, 1.0, Arm::FcAdaptive);
+        let b = simulate(&cfg, 8, 1.0, Arm::FcAdaptive);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.mean_response_s, b.mean_response_s);
+        assert!(a.completed > 0);
     }
 
     #[test]

@@ -26,5 +26,6 @@
 
 pub mod forge;
 
-pub use forge::{forge_tree, forged_store, forged_store_with, naive_topk,
-                svd_rank_r, ForgeSpec};
+pub use forge::{band_limited_act, bucket_ladder, forge_tree, forged_err_bound,
+                forged_store, forged_store_with, naive_topk, svd_rank_r,
+                ForgeSpec};

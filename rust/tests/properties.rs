@@ -1,0 +1,317 @@
+//! Seeded property suite (`util::rng`, no external fuzzer): hundreds
+//! of random shapes and ladder points driven through the codec wire
+//! transforms, the forged Parseval bounds, the stream encoder's drift
+//! contract, and the rate controller's safety invariant — the four
+//! properties the adaptive serving stack leans on.  Everything is
+//! deterministic: a failure reproduces from its printed case index.
+
+use fourier_compress::codec::fourier::{pack_block, unpack_block,
+                                       FourierCodec};
+use fourier_compress::codec::rate::{validate_ladder, LadderPoint, RateConfig,
+                                    RateController};
+use fourier_compress::codec::stream::{fc_payload, BlockGeom, StreamConfig,
+                                      StreamDecoder, StreamEncoder,
+                                      StreamStep};
+use fourier_compress::codec::{rel_error, valid_block_axis, Codec,
+                              CodecEngine};
+use fourier_compress::coordinator::protocol::Frame;
+use fourier_compress::testkit::{band_limited_act, bucket_ladder, ForgeSpec};
+use fourier_compress::util::rng::Rng;
+
+/// A random valid centred block width for an `n`-point axis: odd and
+/// <= n, occasionally the full axis.
+fn rand_axis(rng: &mut Rng, n: usize) -> usize {
+    if rng.below(8) == 0 {
+        return n;
+    }
+    let k = 2 * rng.below(n.div_ceil(2)) + 1;
+    if k > n { n } else { k }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Property: for random geometries, the conjugate-symmetric wire
+/// transform round-trips bit-exactly — unpack(pack) of a block
+/// derived from real data, and pack(unpack) of *arbitrary* packed
+/// floats — and the fc codec is byte-deterministic at every point.
+#[test]
+fn pack_unpack_roundtrips_bit_exactly_over_random_geometries() {
+    let mut rng = Rng::new(0x9E01);
+    let codec = FourierCodec::default();
+    for case in 0..300 {
+        let rows = 1 + rng.below(40);
+        let cols = 1 + rng.below(48);
+        let ks = rand_axis(&mut rng, rows);
+        let kd = rand_axis(&mut rng, cols);
+        assert!(valid_block_axis(rows, ks) && valid_block_axis(cols, kd),
+                "case {case}: generator produced invalid axis");
+
+        // arbitrary packed floats: unpack -> pack must reproduce them
+        // bit for bit (the mirror completion is exact, not lossy)
+        let n = ks * kd;
+        let packed: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let (re, im) = unpack_block(&packed, rows, cols, ks, kd)
+            .unwrap_or_else(|e| panic!("case {case} ({rows}x{cols} block \
+                                        {ks}x{kd}): {e}"));
+        let back = pack_block(&re, &im, rows, cols, ks, kd);
+        assert_eq!(bits(&back), bits(&packed),
+                   "case {case}: pack(unpack) not bit-exact");
+
+        // fc compression is byte-deterministic and self-consistent
+        let a: Vec<f32> =
+            (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let p1 = codec.compress_block(&a, rows, cols, ks, kd).unwrap();
+        let p2 = codec.compress_block(&a, rows, cols, ks, kd).unwrap();
+        assert_eq!(p1, p2, "case {case}: nondeterministic payload");
+        let out = codec.decompress(&p1).unwrap();
+        assert_eq!(out.len(), rows * cols);
+        assert!(out.iter().all(|v| v.is_finite()), "case {case}");
+    }
+}
+
+/// Property: ladder-bearing wire frames round-trip through
+/// encode/decode exactly, for random header fields and bodies.
+#[test]
+fn ladder_frames_roundtrip_over_random_fields() {
+    let mut rng = Rng::new(0x9E02);
+    for case in 0..300 {
+        let frame = if rng.below(2) == 0 {
+            Frame::Activation {
+                session: rng.next_u64(),
+                request: rng.next_u64(),
+                bucket: rng.below(1 << 16) as u16,
+                true_len: rng.below(1 << 16) as u16,
+                ks: rng.below(64) as u16,
+                kd: rng.below(64) as u16,
+                point: rng.below(8) as u8,
+                packed: (0..rng.below(50))
+                    .map(|_| rng.normal() as f32)
+                    .collect(),
+            }
+        } else {
+            let keyframe = rng.below(2) == 0;
+            Frame::Delta {
+                session: rng.next_u64(),
+                request: rng.next_u64(),
+                seq: rng.next_u64() as u32,
+                keyframe,
+                bucket: rng.below(1 << 16) as u16,
+                true_len: rng.below(1 << 16) as u16,
+                ks: rng.below(64) as u16,
+                kd: rng.below(64) as u16,
+                point: rng.below(8) as u8,
+                packed: if keyframe {
+                    (0..rng.below(50)).map(|_| rng.normal() as f32).collect()
+                } else {
+                    vec![]
+                },
+                updates: if keyframe {
+                    vec![]
+                } else {
+                    (0..rng.below(20))
+                        .map(|_| (rng.next_u64() as u32,
+                                  rng.normal() as f32))
+                        .collect()
+                },
+            }
+        };
+        let enc = frame.encode();
+        let mut cur = std::io::Cursor::new(enc);
+        let back = Frame::read_from(&mut cur).unwrap();
+        assert_eq!(back, frame, "case {case}");
+    }
+}
+
+/// Property: for every forged ladder point of every forged spec, the
+/// *additional* FC reconstruction error the point introduces over the
+/// bucket's primary block — measured on fresh band-limited
+/// activations — respects the manifest's forged Parseval bound.  This
+/// is the quantity the rate controller's error budget is written
+/// against: what adaptivity may sacrifice relative to the paper's
+/// fixed block.
+#[test]
+fn fc_error_respects_the_forged_parseval_bound() {
+    let codec = FourierCodec::default();
+    let mut rng = Rng::new(0x9E03);
+    let mut checked = 0usize;
+    for spec in [ForgeSpec::tiny(), ForgeSpec::tiny_adaptive()] {
+        for &bucket in &spec.seq_buckets {
+            let ladder = bucket_ladder(bucket, spec.d_model,
+                                       spec.l1_freq_bins, &spec.ladder_kds,
+                                       spec.ratio).unwrap();
+            for _ in 0..30 {
+                let a = band_limited_act(bucket, spec.d_model,
+                                         spec.l1_freq_bins, rng.next_u64());
+                let r0 = codec
+                    .decompress(&codec.compress_block(&a, bucket,
+                                                      spec.d_model,
+                                                      ladder[0].ks,
+                                                      ladder[0].kd).unwrap())
+                    .unwrap();
+                for p in &ladder {
+                    let pay = codec.compress_block(&a, bucket, spec.d_model,
+                                                   p.ks, p.kd).unwrap();
+                    let rec = codec.decompress(&pay).unwrap();
+                    let err = rel_error(&r0, &rec);
+                    assert!(err <= p.err_bound + 1e-9,
+                            "{} bucket {bucket} point {}x{}: extra err \
+                             {err} > forged bound {}", spec.name, p.ks, p.kd,
+                            p.err_bound);
+                    checked += 1;
+                }
+            }
+        }
+    }
+    assert!(checked >= 300, "only {checked} (point, sample) pairs checked");
+}
+
+/// Property: across random geometries, thresholds, and evolution
+/// walks, the stream encoder's unsent drift never exceeds its
+/// threshold — measured both through `last_drift` (what the rate
+/// controller consumes) and through the actual reconstructions (what
+/// the user sees).  This is the rate controller's safety invariant:
+/// `err_bound + drift <= error_budget` is only a bound because drift
+/// itself is bounded.
+#[test]
+fn stream_drift_never_exceeds_threshold() {
+    let codec = FourierCodec::default();
+    let mut rng = Rng::new(0x9E04);
+    for case in 0..40 {
+        let rows = 4 + rng.below(28);
+        let cols = 4 + rng.below(28);
+        let geom = BlockGeom {
+            rows,
+            cols,
+            ks: rand_axis(&mut rng, rows),
+            kd: rand_axis(&mut rng, cols),
+        };
+        let n = geom.ks * geom.kd;
+        let thr = [0.0, 0.05, 0.2, 0.5][rng.below(4)];
+        let mut enc = StreamEncoder::new(StreamConfig {
+            keyframe_interval: 1 + rng.below(32) as u32,
+            drift_threshold: thr,
+        });
+        let mut dec = StreamDecoder::new();
+        let mut eng = CodecEngine::new();
+        let mut out = StreamStep::default();
+        let mut truth: Vec<f32> =
+            (0..n).map(|_| rng.normal() as f32).collect();
+        for step in 0..12 {
+            if step > 0 {
+                for _ in 0..1 + rng.below(4) {
+                    let i = rng.below(n);
+                    truth[i] += 0.5 * rng.normal() as f32;
+                }
+            }
+            enc.encode_into(&mut eng, geom, &truth, &mut out).unwrap();
+            assert!(enc.last_drift() <= thr + 1e-9,
+                    "case {case} step {step}: last_drift {} > {thr}",
+                    enc.last_drift());
+            if out.keyframe {
+                dec.apply_key(out.seq, geom, &out.packed).unwrap();
+                assert_eq!(enc.last_drift(), 0.0);
+            } else {
+                dec.apply_delta(out.seq, geom, &out.updates).unwrap();
+            }
+            // decoder state reconstructs within the threshold of the
+            // true block's reconstruction (Parseval)
+            let want = codec.decompress(&fc_payload(geom, &truth)).unwrap();
+            let got =
+                codec.decompress(&fc_payload(geom, dec.block())).unwrap();
+            let err = rel_error(&want, &got);
+            assert!(err <= thr * 1.02 + 1e-6,
+                    "case {case} step {step}: recon drift {err} > {thr}");
+        }
+    }
+}
+
+/// A random quality-monotone ladder (as `validate_ladder` demands).
+fn rand_ladder(rng: &mut Rng) -> Vec<LadderPoint> {
+    let len = 2 + rng.below(4);
+    let mut ks = 9 + 2 * rng.below(12);
+    let mut kd = 9 + 2 * rng.below(12);
+    let mut bound = 0.02 + 0.1 * rng.f64();
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        out.push(LadderPoint { ks, kd, err_bound: bound.min(1.0) });
+        // even decrements keep the widths odd; floor at 1
+        ks = ks.saturating_sub(2 * rng.below(3)).max(1);
+        kd = kd.saturating_sub(2 * rng.below(3)).max(1);
+        bound += 0.15 * rng.f64();
+    }
+    validate_ladder(&out).expect("generator must produce valid ladders");
+    out
+}
+
+/// Property: under arbitrary observation streams the rate controller
+/// (a) never rides a point whose bound + drift exceeds the budget
+/// while an admissible point exists — its safety invariant — and
+/// (b) never performs a non-emergency switch within the dwell floor,
+/// and (c) is fully deterministic.
+#[test]
+fn rate_controller_safety_and_hysteresis_invariants() {
+    for case in 0..60u64 {
+        let mut rng = Rng::new(0xA000 + case);
+        let ladder = rand_ladder(&mut rng);
+        let cfg = RateConfig {
+            error_budget: 0.2 + 0.8 * rng.f64(),
+            target_step_s: 0.001 + 0.05 * rng.f64(),
+            ewma_alpha: 0.2 + 0.7 * rng.f64(),
+            min_dwell_steps: 1 + rng.below(5) as u32,
+            up_margin: 1.0 + rng.f64(),
+        };
+        let mut a = RateController::new(ladder.clone(), cfg).unwrap();
+        let mut b = RateController::new(ladder.clone(), cfg).unwrap();
+        let mut drift = 0.0f64;
+        let mut drift_ewma = 0.0f64;
+        let mut last_point = a.point();
+        let mut since_switch = u32::MAX;
+        for step in 0..200 {
+            // random link/drift weather
+            if rng.below(3) == 0 {
+                let bytes = 50 + rng.below(2000);
+                let secs = 1e-5 + rng.f64() * 0.2;
+                a.observe_send(bytes, secs);
+                b.observe_send(bytes, secs);
+            }
+            if rng.below(4) == 0 {
+                drift = rng.f64() * 0.6;
+            }
+            a.observe_drift(drift);
+            b.observe_drift(drift);
+            drift_ewma =
+                cfg.ewma_alpha * drift + (1.0 - cfg.ewma_alpha) * drift_ewma;
+
+            let before = a.point();
+            let before_ok =
+                ladder[before].err_bound + drift_ewma <= cfg.error_budget + 1e-9;
+            let p = a.step();
+            assert_eq!(p, b.step(), "case {case} step {step}: diverged");
+
+            // (a) safety: if any point is admissible, the ridden one is
+            let any_ok = ladder.iter().any(|q| {
+                q.err_bound + drift_ewma <= cfg.error_budget + 1e-9
+            });
+            if any_ok {
+                assert!(ladder[p].err_bound + drift_ewma
+                            <= cfg.error_budget + 1e-6,
+                        "case {case} step {step}: rode point {p} over \
+                         budget while an admissible point existed");
+            }
+
+            // (b) hysteresis: a switch inside the dwell floor is only
+            // legal as an emergency (the pre-switch point had fallen
+            // out of budget)
+            since_switch = since_switch.saturating_add(1);
+            if p != last_point {
+                assert!(since_switch >= cfg.min_dwell_steps || !before_ok,
+                        "case {case} step {step}: non-emergency switch \
+                         after {since_switch} < {} steps", cfg.min_dwell_steps);
+                since_switch = 0;
+                last_point = p;
+            }
+        }
+    }
+}

@@ -67,7 +67,7 @@ fn stream_128_steps_beats_recompute_5x_within_drift() {
         let recompute = Frame::Activation {
             session: 1, request: step + 1, bucket: geom.rows as u16,
             true_len: geom.rows as u16, ks: geom.ks as u16,
-            kd: geom.kd as u16, packed: truth.clone(),
+            kd: geom.kd as u16, point: 0, packed: truth.clone(),
         };
         recompute_bytes += recompute.encode().len() as u64;
 
@@ -77,7 +77,7 @@ fn stream_128_steps_beats_recompute_5x_within_drift() {
             session: 1, request: step + 1, seq: step_out.seq,
             keyframe: step_out.keyframe, bucket: geom.rows as u16,
             true_len: geom.rows as u16, ks: geom.ks as u16,
-            kd: geom.kd as u16, packed: step_out.packed.clone(),
+            kd: geom.kd as u16, point: 0, packed: step_out.packed.clone(),
             updates: step_out.updates.clone(),
         };
         stream_bytes += frame.encode().len() as u64;

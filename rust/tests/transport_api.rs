@@ -4,15 +4,17 @@
 //! deterministic frame-drop stream resync — all hermetic against
 //! testkit-forged artifacts, most of them without a single socket.
 
+use fourier_compress::codec::rate::RateConfig;
 use fourier_compress::config::{FromJson, ServeConfig};
 use fourier_compress::coordinator::protocol::{caps, ErrorCode, Frame,
                                               ServerError, PROTOCOL_MAGIC,
                                               PROTOCOL_VERSION};
 use fourier_compress::coordinator::{DeviceClient, EdgeServer, ShapedTransport,
                                     Transport, CLIENT_CAPS};
-use fourier_compress::net::{Channel, DropPlan};
+use fourier_compress::model::tokenizer;
+use fourier_compress::net::{Channel, ChannelTrace, DropPlan};
 use fourier_compress::runtime::ArtifactStore;
-use fourier_compress::testkit::forged_store;
+use fourier_compress::testkit::{forged_store, forged_store_with, ForgeSpec};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
@@ -119,7 +121,7 @@ fn version_and_magic_mismatch_are_typed_rejects() {
     // data before a successful handshake is an unknown-session reject
     tx.send(&Frame::Activation {
         session: 1, request: 1, bucket: 16, true_len: 4, ks: 1, kd: 1,
-        packed: vec![0.0],
+        point: 0, packed: vec![0.0],
     }).unwrap();
     match rx.recv().unwrap() {
         Frame::Error { code, .. } => {
@@ -151,7 +153,7 @@ fn recompute_requests_survive_session_eviction() {
     tx.send(&Frame::hello(7, CLIENT_CAPS, "forge-tiny")).unwrap();
     assert!(matches!(rx.recv().unwrap(), Frame::HelloAck { .. }));
     let activation = |request: u64, session: u64| Frame::Activation {
-        session, request, bucket: 16, true_len: 10, ks, kd,
+        session, request, bucket: 16, true_len: 10, ks, kd, point: 0,
         packed: vec![0.25; ks as usize * kd as usize],
     };
     tx.send(&activation(1, 7)).unwrap();
@@ -252,7 +254,8 @@ fn stream_capability_downgrade_falls_back_to_recompute() {
     let (ks, kd) = bucket16(&store);
     tx.send(&Frame::Delta {
         session: 32, request: 1, seq: 0, keyframe: true, bucket: 16,
-        true_len: 10, ks, kd, packed: vec![0.1; ks as usize * kd as usize],
+        true_len: 10, ks, kd, point: 0,
+        packed: vec![0.1; ks as usize * kd as usize],
         updates: vec![],
     }).unwrap();
     match rx.recv().unwrap() {
@@ -278,16 +281,34 @@ fn helloack_bucket_geometry_agrees_with_manifest() {
     let client = DeviceClient::connect_over(
         Box::new(server.connect_inproc()), &store, 41).unwrap();
     assert_eq!(client.negotiated_caps() & caps::STREAM, caps::STREAM);
+    assert_eq!(client.negotiated_caps() & caps::LADDER, caps::LADDER);
     let advertised = client.server_buckets();
     let bmap = store.manifest.path("serving.buckets")
         .and_then(|b| b.as_obj()).expect("manifest buckets");
     assert_eq!(advertised.len(), bmap.len());
     for (bstr, bj) in bmap {
         let bucket: u16 = bstr.parse().unwrap();
-        let geom = advertised.iter().find(|g| g.bucket == bucket)
+        let adv = advertised.iter().find(|g| g.bucket == bucket)
             .unwrap_or_else(|| panic!("bucket {bucket} not advertised"));
-        assert_eq!(geom.ks as usize, bj.usize_or("ks", 0), "bucket {bucket}");
-        assert_eq!(geom.kd as usize, bj.usize_or("kd", 0), "bucket {bucket}");
+        let (aks, akd) = adv.primary();
+        assert_eq!(aks as usize, bj.usize_or("ks", 0), "bucket {bucket}");
+        assert_eq!(akd as usize, bj.usize_or("kd", 0), "bucket {bucket}");
+        // the full quality ladder is advertised and matches the
+        // manifest point for point, forged error bounds included
+        let ladder = bj.get("ladder").and_then(|v| v.as_arr())
+            .expect("manifest ladder");
+        assert_eq!(adv.ladder.len(), ladder.len(), "bucket {bucket}");
+        assert!(adv.ladder.len() > 1, "bucket {bucket}: single-point ladder");
+        for (i, (le, mj)) in adv.ladder.iter().zip(ladder).enumerate() {
+            assert_eq!(le.ks as usize, mj.usize_or("ks", 0),
+                       "bucket {bucket} point {i}");
+            assert_eq!(le.kd as usize, mj.usize_or("kd", 0),
+                       "bucket {bucket} point {i}");
+            let want = mj.f64_or("err_bound", -1.0);
+            assert!((le.err_bound as f64 - want).abs() < 1e-6,
+                    "bucket {bucket} point {i}: bound {} vs manifest {want}",
+                    le.err_bound);
+        }
     }
     server.shutdown();
 }
@@ -312,7 +333,7 @@ fn shaped_frame_drop_forces_stream_reject_then_keyframe_recovers() {
     let (mut tx, mut rx) = Box::new(shaped).split().unwrap();
     let delta = |request: u64, seq: u32, keyframe: bool| Frame::Delta {
         session: 51, request, seq, keyframe, bucket: 16, true_len: 10,
-        ks, kd,
+        ks, kd, point: 0,
         packed: if keyframe { vec![0.5; n] } else { vec![] },
         updates: if keyframe { vec![] } else { vec![(0, 0.75)] },
     };
@@ -390,6 +411,188 @@ fn live_session_cannot_be_taken_over_by_another_connection() {
     }
     assert!(rebound, "released session never became re-bindable");
     tx_b.send(&Frame::Bye).unwrap();
+    server.shutdown();
+}
+
+/// Ladder-point rules, pinned frame by frame: the server validates a
+/// data frame's point id + geometry against the ladder it advertised,
+/// rejects un-advertised points, accepts a downshifted Activation
+/// (embedding the nested block into the primary geometry), and in
+/// stream mode allows a ladder switch only on a keyframe — a delta
+/// naming a new point is a typed StreamReject, exactly like a
+/// sequence gap.
+#[test]
+fn ladder_point_validation_and_switch_rules() {
+    let store = Arc::new(forged_store("tapi_ladder").expect("forge"));
+    let lj = store.manifest.path("serving.buckets.16")
+        .and_then(|b| b.get("ladder"))
+        .and_then(|l| l.as_arr())
+        .expect("manifest ladder");
+    assert!(lj.len() >= 2, "forged ladder must have >= 2 points");
+    let point_geom = |i: usize| -> (u16, u16) {
+        (lj[i].usize_or("ks", 0) as u16, lj[i].usize_or("kd", 0) as u16)
+    };
+    let (ks0, kd0) = point_geom(0);
+    let (ks1, kd1) = point_geom(1);
+    assert!((ks1 as usize) * (kd1 as usize) < (ks0 as usize) * (kd0 as usize),
+            "point 1 must be cheaper than point 0");
+    let cfg = serve_config(&store.root, &[]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+
+    let (mut tx, mut rx) = Box::new(server.connect_inproc()).split().unwrap();
+    tx.send(&Frame::hello(61, CLIENT_CAPS, "forge-tiny")).unwrap();
+    assert!(matches!(rx.recv().unwrap(), Frame::HelloAck { .. }));
+    let expect_err = |rx: &mut Box<dyn fourier_compress::coordinator::FrameRx>,
+                      want: ErrorCode| {
+        match rx.recv().unwrap() {
+            Frame::Error { code, msg } => assert_eq!(code, want, "{msg}"),
+            other => panic!("expected {want:?}, got {}", other.type_id()),
+        }
+    };
+
+    // unknown point id: typed reject
+    tx.send(&Frame::Activation {
+        session: 61, request: 1, bucket: 16, true_len: 10, ks: ks0, kd: kd0,
+        point: 9, packed: vec![0.1; ks0 as usize * kd0 as usize],
+    }).unwrap();
+    expect_err(&mut rx, ErrorCode::BadRequest);
+    // point/geometry mismatch: point 1 with point-0 geometry
+    tx.send(&Frame::Activation {
+        session: 61, request: 2, bucket: 16, true_len: 10, ks: ks0, kd: kd0,
+        point: 1, packed: vec![0.1; ks0 as usize * kd0 as usize],
+    }).unwrap();
+    expect_err(&mut rx, ErrorCode::BadRequest);
+    // valid downshifted activation: served (embedded into primary)
+    tx.send(&Frame::Activation {
+        session: 61, request: 3, bucket: 16, true_len: 10, ks: ks1, kd: kd1,
+        point: 1, packed: vec![0.25; ks1 as usize * kd1 as usize],
+    }).unwrap();
+    assert!(matches!(rx.recv().unwrap(), Frame::Token { request: 3, .. }));
+
+    // stream mode at point 1: keyframe admits, delta follows
+    let delta = |request: u64, seq: u32, keyframe: bool, point: u8,
+                 ks: u16, kd: u16| Frame::Delta {
+        session: 61, request, seq, keyframe, bucket: 16, true_len: 10,
+        ks, kd, point,
+        packed: if keyframe { vec![0.5; ks as usize * kd as usize] }
+                else { vec![] },
+        updates: if keyframe { vec![] } else { vec![(0, 0.75)] },
+    };
+    tx.send(&delta(4, 0, true, 1, ks1, kd1)).unwrap();
+    assert!(matches!(rx.recv().unwrap(), Frame::Token { request: 4, .. }));
+    tx.send(&delta(5, 1, false, 1, ks1, kd1)).unwrap();
+    assert!(matches!(rx.recv().unwrap(), Frame::Token { request: 5, .. }));
+    // an interleaved RECOMPUTE frame at another point must not poison
+    // the stream: the next in-sequence delta at the stream's point is
+    // still served (the stream geometry only moves on keyframes)
+    tx.send(&Frame::Activation {
+        session: 61, request: 50, bucket: 16, true_len: 10, ks: ks0, kd: kd0,
+        point: 0, packed: vec![0.25; ks0 as usize * kd0 as usize],
+    }).unwrap();
+    assert!(matches!(rx.recv().unwrap(), Frame::Token { request: 50, .. }));
+    tx.send(&delta(6, 2, false, 1, ks1, kd1)).unwrap();
+    assert!(matches!(rx.recv().unwrap(), Frame::Token { request: 6, .. }));
+    // a ladder switch on a DELTA is refused: the geometry changed, so
+    // it must arrive as a keyframe (the stream-resync lane)
+    tx.send(&delta(7, 3, false, 0, ks0, kd0)).unwrap();
+    expect_err(&mut rx, ErrorCode::StreamReject);
+    // the switch via keyframe is clean
+    tx.send(&delta(8, 4, true, 0, ks0, kd0)).unwrap();
+    assert!(matches!(rx.recv().unwrap(), Frame::Token { request: 8, .. }));
+
+    // dwell accounting: 0->1 (request 3), 1->0 (the interleaved
+    // recompute), 0->1 (the delta riding the stream point), 1->0
+    // (the switching keyframe) — the rejected frames never count
+    assert_eq!(server.metrics.ladder_switches.load(Ordering::Relaxed), 4);
+    tx.send(&Frame::Bye).unwrap();
+    server.shutdown();
+}
+
+fn gen_steps(c: &mut DeviceClient, prompt: &str, steps: usize) -> Vec<i32> {
+    let mut ctx = tokenizer::encode_prompt(prompt);
+    let mut out = Vec::new();
+    for _ in 0..steps {
+        let (t, _) = c.step(&ctx).unwrap();
+        ctx.push(t);
+        out.push(t);
+    }
+    out
+}
+
+/// The adaptive soak (the tentpole's acceptance scenario): four
+/// concurrent adaptive clients over a shaped link whose throttle
+/// steps down ~700x mid-generation and then recovers.  Every session
+/// must downshift its ladder point under the collapsed link, recover
+/// the primary point on the fast tail, and still produce exactly the
+/// recompute baseline's tokens — the forged ladders keep every point
+/// inside the model's layer-1 band, so quality never moves, only
+/// bytes do.
+#[test]
+fn adaptive_clients_downshift_and_recover_over_fluctuating_link() {
+    let store = Arc::new(forged_store_with(
+        "tapi_soak", &[ForgeSpec::tiny_adaptive()], "forge-adapt")
+        .expect("forge"));
+    let cfg = serve_config(&store.root, &[
+        "max_batch=2".into(),
+        "batch_deadline_us=500".into(),
+    ]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+    const STEPS: usize = 16;
+    let prompts = ["Q rok ? A", "Q mira ? A", "Q zeb ? A", "Q kol ? A"];
+
+    // recompute baselines: primary point, unshaped link
+    let mut base = Vec::new();
+    for (i, prompt) in prompts.iter().enumerate() {
+        let mut c = DeviceClient::connect_over(
+            Box::new(server.connect_inproc()), &store, 300 + i as u64)
+            .unwrap();
+        base.push(gen_steps(&mut c, prompt, STEPS));
+        c.bye().unwrap();
+    }
+
+    // sends 0..=3 (hello + 3 steps) fast, 4..=9 collapsed, then fast
+    let fast = Channel::gbps(0.05, 0); // 50 Mbit/s
+    let slow = Channel::gbps(0.00005, 0); // 50 kbit/s
+    let trace = ChannelTrace::new(&[(4, fast), (6, slow), (1, fast)]);
+    let mut handles = Vec::new();
+    for (i, prompt) in prompts.iter().enumerate() {
+        let transport = ShapedTransport::with_trace(
+            Box::new(server.connect_inproc()), trace.clone(),
+            DropPlan::none());
+        let store = store.clone();
+        let prompt = prompt.to_string();
+        handles.push(std::thread::spawn(move || {
+            let mut c = DeviceClient::connect_over(Box::new(transport),
+                                                   &store, 400 + i as u64)
+                .unwrap();
+            assert!(c.enable_adaptive(RateConfig {
+                error_budget: 1.0,
+                target_step_s: 0.025,
+                ewma_alpha: 0.7,
+                min_dwell_steps: 2,
+                up_margin: 1.5,
+            }), "handshake must negotiate the ladder capability");
+            let toks = gen_steps(&mut c, &prompt, STEPS);
+            assert!(c.stats.max_point > 0,
+                    "session never downshifted under the collapsed link");
+            assert_eq!(c.current_point(), 0,
+                       "session never recovered the primary point");
+            assert!(c.stats.ladder_switches >= 2,
+                    "expected a down- and an up-switch, saw {}",
+                    c.stats.ladder_switches);
+            c.bye().unwrap();
+            toks
+        }));
+    }
+    for (h, want) in handles.into_iter().zip(&base) {
+        let got = h.join().unwrap();
+        assert_eq!(&got, want,
+                   "adaptive ladder riding must not move a single token");
+    }
+    // the server recorded the dwell churn
+    assert!(server.metrics.ladder_switches.load(Ordering::Relaxed) >= 8,
+            "switches {}",
+            server.metrics.ladder_switches.load(Ordering::Relaxed));
     server.shutdown();
 }
 
