@@ -32,14 +32,36 @@
 use crate::dsp::complex::C64;
 use crate::dsp::fft::FftPlan;
 use crate::dsp::fft2d;
+use crate::dsp::rfft::RfftPlan;
+use crate::dsp::simd::{self, Level};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Duration;
 
-#[derive(Default)]
+/// Accumulated per-stage wall time for the codec hot path, recorded by
+/// [`CodecEngine`] when stage timing is enabled (zero-cost when it is
+/// not: one `Option` branch per stage).  The stages mirror the
+/// pipeline: row FFTs, column FFTs, conjugate-symmetric pack/scatter,
+/// int8 quantize/dequantize, and wire-byte moves.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTimes {
+    pub row_fft: Duration,
+    pub col_fft: Duration,
+    pub pack: Duration,
+    pub quant: Duration,
+    pub wire: Duration,
+}
+
 pub struct CodecEngine {
     plans: HashMap<usize, Arc<FftPlan>>,
+    rplans: HashMap<usize, Arc<RfftPlan>>,
     indices: HashMap<(usize, usize), Arc<Vec<usize>>>,
+    /// Kernel dispatch level every transform/pack/quantize call on this
+    /// engine uses.  Defaults to the process-detected best level;
+    /// parity tests pin [`Level::Scalar`] per engine (no global state).
+    pub(crate) simd: Level,
+    pub(crate) timer: Option<Box<StageTimes>>,
     // scratch arena — pub(crate) so the codec impls can split-borrow
     // individual buffers without going through &mut self methods.
     pub(crate) narrow: Vec<C64>,
@@ -47,19 +69,78 @@ pub struct CodecEngine {
     pub(crate) col: Vec<C64>,
     pub(crate) block: Vec<C64>,
     pub(crate) spec: Vec<C64>,
+    pub(crate) half: Vec<C64>,
     pub(crate) floats: Vec<f32>,
+    pub(crate) bytes: Vec<u8>,
     pub(crate) indices32: Vec<u32>,
+}
+
+impl Default for CodecEngine {
+    fn default() -> CodecEngine {
+        CodecEngine::new()
+    }
 }
 
 impl CodecEngine {
     pub fn new() -> CodecEngine {
-        CodecEngine::default()
+        CodecEngine {
+            plans: HashMap::new(),
+            rplans: HashMap::new(),
+            indices: HashMap::new(),
+            simd: simd::detect(),
+            timer: None,
+            narrow: Vec::new(),
+            z: Vec::new(),
+            col: Vec::new(),
+            block: Vec::new(),
+            spec: Vec::new(),
+            half: Vec::new(),
+            floats: Vec::new(),
+            bytes: Vec::new(),
+            indices32: Vec::new(),
+        }
     }
 
     /// Planned transform for axis length `n`: per-engine map first
     /// (no lock), shared tier on miss.
     pub fn plan(&mut self, n: usize) -> Arc<FftPlan> {
         self.plans.entry(n).or_insert_with(|| fft2d::plan(n)).clone()
+    }
+
+    /// Planned real-input transform for axis length `n` (same two-tier
+    /// caching as [`CodecEngine::plan`]).
+    pub fn rplan(&mut self, n: usize) -> Arc<RfftPlan> {
+        self.rplans.entry(n).or_insert_with(|| fft2d::rplan(n)).clone()
+    }
+
+    /// Kernel level this engine dispatches at.
+    pub fn simd_level(&self) -> Level {
+        self.simd
+    }
+
+    /// Enable (process-detected level) or disable (scalar reference
+    /// path) vector kernels for this engine.  Per-engine so a parity
+    /// test can run both paths side by side.
+    pub fn set_simd_enabled(&mut self, enabled: bool) {
+        self.simd = if enabled { simd::detect() } else { Level::Scalar };
+    }
+
+    /// Start (or restart, zeroed) per-stage timing on this engine.
+    pub fn enable_stage_timing(&mut self) {
+        self.timer = Some(Box::new(StageTimes::default()));
+    }
+
+    /// Stop stage timing and drop the accumulator.
+    pub fn disable_stage_timing(&mut self) {
+        self.timer = None;
+    }
+
+    /// Accumulated stage times since [`enable_stage_timing`]
+    /// (`None` when timing is off).
+    ///
+    /// [`enable_stage_timing`]: CodecEngine::enable_stage_timing
+    pub fn stage_times(&self) -> Option<StageTimes> {
+        self.timer.as_deref().copied()
     }
 
     /// Cached centred (conjugate-closed) frequency index set for
@@ -76,6 +157,7 @@ impl CodecEngine {
     pub fn warm(&mut self, rows: usize, cols: usize, ks: usize, kd: usize) {
         self.plan(rows);
         self.plan(cols);
+        self.rplan(cols);
         self.indices(rows, ks);
         self.indices(cols, kd);
     }
@@ -100,7 +182,9 @@ impl CodecEngine {
         self.col = Vec::new();
         self.block = Vec::new();
         self.spec = Vec::new();
+        self.half = Vec::new();
         self.floats = Vec::new();
+        self.bytes = Vec::new();
         self.indices32 = Vec::new();
     }
 
@@ -112,9 +196,11 @@ impl CodecEngine {
             + self.z.capacity()
             + self.col.capacity()
             + self.block.capacity()
-            + self.spec.capacity())
+            + self.spec.capacity()
+            + self.half.capacity())
             * std::mem::size_of::<C64>()
             + self.floats.capacity() * std::mem::size_of::<f32>()
+            + self.bytes.capacity()
             + self.indices32.capacity() * std::mem::size_of::<u32>()
     }
 }
@@ -126,6 +212,26 @@ pub(crate) fn zeroed(buf: &mut Vec<C64>, n: usize) {
     buf.clear();
     buf.resize(n, C64::ZERO);
 }
+
+/// Time `$body` into the named [`StageTimes`] field when `$timer`
+/// (an `&mut Option<Box<StageTimes>>`, usually split-borrowed out of a
+/// [`CodecEngine`]) is engaged; one branch and no clock read when it
+/// is not.
+macro_rules! stage {
+    ($timer:expr, $field:ident, $body:expr) => {{
+        let __t0 = if $timer.is_some() {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        };
+        let __r = $body;
+        if let (Some(__t), Some(__t0)) = ($timer.as_deref_mut(), __t0) {
+            __t.$field += __t0.elapsed();
+        }
+        __r
+    }};
+}
+pub(crate) use stage;
 
 thread_local! {
     static THREAD_ENGINE: RefCell<CodecEngine> = RefCell::new(CodecEngine::new());

@@ -13,16 +13,29 @@
 //! the paper describes, applied to transmission as well as
 //! reconstruction (DESIGN.md §6).
 //!
+//! Hot-path structure (rust/README.md §Codec hot path): both
+//! directions run their row pass through [`crate::dsp::RfftPlan`] —
+//! one half-length complex FFT plus an O(D) twiddle split per real
+//! row.  Compress keeps only the K_D wanted bins per row (mirrored
+//! bins by conjugate symmetry) and runs the column FFT over K_D
+//! columns; decompress inverts only the columns the irfft row pass
+//! actually reads (`v <= D/2`) and reconstructs each row with the
+//! half-spectrum inverse.  Pack/unpack and the wire moves go through
+//! the `dsp::simd` kernels; the whole pipeline dispatches at the
+//! engine's [`crate::dsp::Level`].
+//!
 //! All entry points are `_into`-style over a [`CodecEngine`]: plans,
 //! frequency index sets, and every scratch buffer (`narrow`, `z`,
-//! `col`, `block`, `spec`) live in the engine, so the per-token decode
-//! loop re-uses them and performs zero heap allocation after warm-up.
-//! The plain-named wrappers route through the thread-local engine and
-//! stay byte-compatible with the pre-engine codec.
+//! `col`, `block`, `spec`, `half`, `floats`) live in the engine, so
+//! the per-token decode loop re-uses them and performs zero heap
+//! allocation after warm-up.  The plain-named wrappers route through
+//! the thread-local engine and stay byte-compatible with the
+//! pre-engine codec.
 
-use super::engine::{self, CodecEngine};
+use super::engine::{self, stage, CodecEngine};
 use super::{block_ratio, fc_block, Codec, Payload, Reader, Writer};
 use crate::dsp::complex::C64;
+use crate::dsp::simd;
 use crate::tensor::MatView;
 
 use anyhow::{ensure, Result};
@@ -40,10 +53,11 @@ impl FourierCodec {
 
     /// Compress with an explicit block (the eval sweeps use this).
     ///
-    /// Perf note (EXPERIMENTS.md §Perf): only the K_D kept spectrum
-    /// columns are needed, so after the row FFT pass the column pass
-    /// runs on K_D columns instead of all D — ~40% cheaper than a full
-    /// fft2 at the shipped block shapes.
+    /// Perf note (EXPERIMENTS.md §Perf): each row costs one real-input
+    /// FFT (a D/2-point complex transform + O(D) split) instead of a
+    /// D-point complex transform, and only the K_D kept spectrum
+    /// columns are materialised, so the column pass runs on K_D
+    /// columns instead of all D.
     pub fn compress_block_into(&self, eng: &mut CodecEngine, a: MatView<'_>,
                                ks: usize, kd: usize, out: &mut Payload)
         -> Result<()> {
@@ -51,68 +65,82 @@ impl FourierCodec {
         let ui = eng.indices(rows, ks);
         let vi = eng.indices(cols, kd);
         let plan_s = eng.plan(rows);
-        let plan_d = eng.plan(cols);
+        let rplan_d = eng.rplan(cols);
+        let lv = eng.simd;
         let data = a.as_slice();
 
-        let CodecEngine { narrow, z, col, block, .. } = eng;
+        let CodecEngine { narrow, z, col, block, floats, timer, .. } = eng;
         engine::zeroed(narrow, rows * kd); // [rows, K_D]
-        engine::zeroed(z, cols);
 
-        // row pass with the two-for-one real-FFT trick: pack row pairs
-        // (r, r+1) as re/im of ONE complex FFT and split by conjugate
-        // symmetry — halves the row-pass FFT count; only the K_D kept
-        // columns are materialised (EXPERIMENTS.md §Perf, iter 2).
-        let mut r = 0;
-        while r < rows {
-            let hi = (r + 1 < rows) as usize;
-            for v in 0..cols {
-                z[v] = C64::new(data[r * cols + v] as f64,
-                                if hi == 1 { data[(r + 1) * cols + v] as f64 }
-                                else { 0.0 });
-            }
-            plan_d.forward_in_place(z);
-            for (j, &v) in vi.iter().enumerate() {
-                let zc = z[v];
-                let zm = z[(cols - v) % cols].conj();
-                narrow[r * kd + j] = (zc + zm).scale(0.5);
-                if hi == 1 {
-                    // (zc - zm) / (2i) = -i (zc - zm) / 2
-                    let d = (zc - zm).scale(0.5);
-                    narrow[(r + 1) * kd + j] = C64::new(d.im, -d.re);
+        // row pass: one rfft per row; kept bins past D/2 come from
+        // conjugate symmetry (X[v] = conj(X[D - v])).  No pair trick,
+        // so an odd row count has no half-wasted tail transform.
+        stage!(timer, row_fft, {
+            for r in 0..rows {
+                rplan_d.spectrum_into(lv, &data[r * cols..(r + 1) * cols], z);
+                for (j, &v) in vi.iter().enumerate() {
+                    narrow[r * kd + j] = if v <= cols / 2 {
+                        rplan_d.bin(z, v)
+                    } else {
+                        rplan_d.bin(z, cols - v).conj()
+                    };
                 }
             }
-            r += 2;
-        }
+        });
+
         // selective column pass over the K_D kept columns
-        engine::zeroed(block, ks * kd);
-        engine::zeroed(col, rows);
-        for j in 0..kd {
-            for rr in 0..rows {
-                col[rr] = narrow[rr * kd + j];
+        stage!(timer, col_fft, {
+            engine::zeroed(block, ks * kd);
+            engine::zeroed(col, rows);
+            for j in 0..kd {
+                for rr in 0..rows {
+                    col[rr] = narrow[rr * kd + j];
+                }
+                plan_s.forward_with(lv, col);
+                for (i, &u) in ui.iter().enumerate() {
+                    block[i * kd + j] = col[u];
+                }
             }
-            plan_s.forward_in_place(col);
-            for (i, &u) in ui.iter().enumerate() {
-                block[i * kd + j] = col[u];
-            }
-        }
+        });
 
-        out.reset("fc", rows, cols);
-        let mut w = Writer(&mut out.body);
-        w.u16(ks as u16);
-        w.u16(kd as u16);
-        for (i, &u) in ui.iter().enumerate() {
-            for (j, &v) in vi.iter().enumerate() {
-                let (mu, mv) = ((rows - u) % rows, (cols - v) % cols);
-                if (u, v) > (mu, mv) {
-                    continue; // mirror carries it
+        // pack: the lexicographic (u, v) <= (mu, mv) rule, factored by
+        // row class.  A row whose mirror row differs ships every
+        // column's (re, im) — exactly the interleaved f32 narrowing of
+        // the C64 block row — in one bulk kernel; a self-mirrored row
+        // walks per column; a mirrored-away row ships nothing.
+        stage!(timer, pack, {
+            floats.clear();
+            floats.reserve(ks * kd);
+            for (i, &u) in ui.iter().enumerate() {
+                let mu = (rows - u) % rows;
+                if u > mu {
+                    continue; // mirror row carries it
                 }
-                let c = block[i * kd + j];
-                w.f32(c.re as f32);
-                if (u, v) != (mu, mv) {
-                    w.f32(c.im as f32);
+                let brow = &block[i * kd..(i + 1) * kd];
+                if u < mu {
+                    simd::narrow_c64(lv, brow, floats);
+                } else {
+                    for (j, &v) in vi.iter().enumerate() {
+                        let mv = (cols - v) % cols;
+                        if v > mv {
+                            continue;
+                        }
+                        floats.push(brow[j].re as f32);
+                        if v != mv {
+                            floats.push(brow[j].im as f32);
+                        }
+                    }
                 }
             }
-        }
+        });
+
+        stage!(timer, wire, {
+            out.reset("fc", rows, cols);
+            let mut w = Writer(&mut out.body);
+            w.u16(ks as u16);
+            w.u16(kd as u16);
+            w.f32s(floats);
+        });
         Ok(())
     }
 
@@ -153,42 +181,81 @@ impl Codec for FourierCodec {
         let ui = eng.indices(rows, ks);
         let vi = eng.indices(cols, kd);
         let plan_s = eng.plan(rows);
-        let plan_d = eng.plan(cols);
+        let rplan_d = eng.rplan(cols);
+        let lv = eng.simd;
 
-        // scatter the conjugate-completed block into the (sparse) spectrum
-        let CodecEngine { spec, col, .. } = eng;
-        engine::zeroed(spec, rows * cols);
-        for &u in ui.iter() {
+        let CodecEngine { spec, col, half, floats, timer, .. } = eng;
+
+        // wire: one bulk little-endian move of the packed float stream
+        stage!(timer, wire, {
+            let count = r.remaining() / 4;
+            ensure!(r.remaining() == count * 4, "trailing payload bytes");
+            floats.clear();
+            r.f32s(count, floats)?;
+        });
+
+        // scatter the conjugate-completed block into the (sparse)
+        // spectrum
+        stage!(timer, pack, {
+            engine::zeroed(spec, rows * cols);
+            let packed: &[f32] = floats;
+            let mut pos = 0usize;
+            for &u in ui.iter() {
+                let mu = (rows - u) % rows;
+                for &v in vi.iter() {
+                    let mv = (cols - v) % cols;
+                    if (u, v) > (mu, mv) {
+                        continue;
+                    }
+                    ensure!(pos < packed.len(), "payload truncated");
+                    let re = packed[pos] as f64;
+                    pos += 1;
+                    let im = if (u, v) != (mu, mv) {
+                        ensure!(pos < packed.len(), "payload truncated");
+                        let x = packed[pos] as f64;
+                        pos += 1;
+                        x
+                    } else {
+                        0.0
+                    };
+                    spec[u * cols + v] = C64::new(re, im);
+                    spec[mu * cols + mv] = C64::new(re, -im);
+                }
+            }
+            ensure!(pos == packed.len(), "trailing payload floats");
+        });
+
+        // inverse column pass: the irfft row pass below only reads
+        // bins v <= D/2 of each row, so the mirrored kept columns
+        // (v > D/2) never need transforming — half the column work.
+        stage!(timer, col_fft, {
+            engine::zeroed(col, rows);
             for &v in vi.iter() {
-                let (mu, mv) = ((rows - u) % rows, (cols - v) % cols);
-                if (u, v) > (mu, mv) {
+                if v > cols / 2 {
                     continue;
                 }
-                let re = r.f32()? as f64;
-                let im = if (u, v) != (mu, mv) { r.f32()? as f64 } else { 0.0 };
-                spec[u * cols + v] = C64::new(re, im);
-                spec[mu * cols + mv] = C64::new(re, -im);
+                for rr in 0..rows {
+                    col[rr] = spec[rr * cols + v];
+                }
+                plan_s.inverse_with(lv, col);
+                for rr in 0..rows {
+                    spec[rr * cols + v] = col[rr];
+                }
             }
-        }
-        ensure!(r.remaining() == 0, "trailing payload bytes");
-        // inverse column pass only where columns are non-zero, then
-        // inverse row pass (EXPERIMENTS.md §Perf)
-        engine::zeroed(col, rows);
-        for &v in vi.iter() {
+        });
+
+        // inverse row pass: each spectrum row is conjugate-symmetric
+        // (the scatter wrote exact mirrors), so the half-spectrum
+        // inverse reconstructs the real row directly.
+        stage!(timer, row_fft, {
+            out.clear();
+            out.resize(rows * cols, 0.0);
             for rr in 0..rows {
-                col[rr] = spec[rr * cols + v];
+                rplan_d.inverse_into(lv, &spec[rr * cols..(rr + 1) * cols],
+                                     half,
+                                     &mut out[rr * cols..(rr + 1) * cols]);
             }
-            plan_s.inverse_in_place(col);
-            for rr in 0..rows {
-                spec[rr * cols + v] = col[rr];
-            }
-        }
-        for rr in 0..rows {
-            plan_d.inverse_in_place(&mut spec[rr * cols..(rr + 1) * cols]);
-        }
-        out.clear();
-        out.reserve(rows * cols);
-        out.extend(spec.iter().map(|c| c.re as f32));
+        });
         Ok(())
     }
 }
@@ -225,17 +292,28 @@ pub fn pack_block_into(eng: &mut CodecEngine, re: &[f32], im: &[f32],
                        out: &mut Vec<f32>) {
     let ui = eng.indices(rows, ks);
     let vi = eng.indices(cols, kd);
+    let lv = eng.simd;
     out.clear();
     out.reserve(ks * kd);
     for (i, &u) in ui.iter().enumerate() {
-        for (j, &v) in vi.iter().enumerate() {
-            let (mu, mv) = ((rows - u) % rows, (cols - v) % cols);
-            if (u, v) > (mu, mv) {
-                continue;
-            }
-            out.push(re[i * kd + j]);
-            if (u, v) != (mu, mv) {
-                out.push(im[i * kd + j]);
+        let mu = (rows - u) % rows;
+        if u > mu {
+            continue; // mirror row carries it
+        }
+        let rrow = &re[i * kd..(i + 1) * kd];
+        let irow = &im[i * kd..(i + 1) * kd];
+        if u < mu {
+            simd::interleave_f32(lv, rrow, irow, out);
+        } else {
+            for (j, &v) in vi.iter().enumerate() {
+                let mv = (cols - v) % cols;
+                if v > mv {
+                    continue;
+                }
+                out.push(rrow[j]);
+                if v != mv {
+                    out.push(irow[j]);
+                }
             }
         }
     }
@@ -258,31 +336,59 @@ pub fn unpack_block_into(eng: &mut CodecEngine, packed: &[f32],
                          re: &mut Vec<f32>, im: &mut Vec<f32>) -> Result<()> {
     let ui = eng.indices(rows, ks);
     let vi = eng.indices(cols, kd);
+    let lv = eng.simd;
     re.clear();
     re.resize(ks * kd, 0.0);
     im.clear();
     im.resize(ks * kd, 0.0);
     let mut pos = 0usize;
-    let take = |n: &mut usize| -> Result<f32> {
-        ensure!(*n < packed.len(), "packed block truncated");
-        let v = packed[*n];
-        *n += 1;
-        Ok(v)
-    };
     for (i, &u) in ui.iter().enumerate() {
-        for (j, &v) in vi.iter().enumerate() {
-            let (mu, mv) = ((rows - u) % rows, (cols - v) % cols);
-            if (u, v) > (mu, mv) {
-                continue;
+        let mu = (rows - u) % rows;
+        if u > mu {
+            continue;
+        }
+        let mi = block_pos(rows, ks, mu);
+        if u < mu {
+            // full row: 2·kd interleaved floats split straight into
+            // the (re, im) planes, then the mirror row regenerated
+            // through the column-mirror permutation
+            ensure!(pos + 2 * kd <= packed.len(), "packed block truncated");
+            {
+                let rrow = &mut re[i * kd..(i + 1) * kd];
+                let irow = &mut im[i * kd..(i + 1) * kd];
+                simd::deinterleave_f32(lv, &packed[pos..pos + 2 * kd], rrow,
+                                       irow);
             }
-            let r = take(&mut pos)?;
-            let iv = if (u, v) != (mu, mv) { take(&mut pos)? } else { 0.0 };
-            re[i * kd + j] = r;
-            im[i * kd + j] = iv;
-            // mirror position inside the block
-            let (mi, mj) = (block_pos(rows, ks, mu), block_pos(cols, kd, mv));
-            re[mi * kd + mj] = r;
-            im[mi * kd + mj] = -iv;
+            pos += 2 * kd;
+            for (j, &v) in vi.iter().enumerate() {
+                let mj = block_pos(cols, kd, (cols - v) % cols);
+                re[mi * kd + mj] = re[i * kd + j];
+                im[mi * kd + mj] = -im[i * kd + j];
+            }
+        } else {
+            // self-mirrored row (u == mu, so mi == i)
+            for (j, &v) in vi.iter().enumerate() {
+                let mv = (cols - v) % cols;
+                if v > mv {
+                    continue;
+                }
+                ensure!(pos < packed.len(), "packed block truncated");
+                let r = packed[pos];
+                pos += 1;
+                let iv = if v != mv {
+                    ensure!(pos < packed.len(), "packed block truncated");
+                    let x = packed[pos];
+                    pos += 1;
+                    x
+                } else {
+                    0.0
+                };
+                let mj = block_pos(cols, kd, mv);
+                re[i * kd + j] = r;
+                im[i * kd + j] = iv;
+                re[i * kd + mj] = r;
+                im[i * kd + mj] = -iv;
+            }
         }
     }
     ensure!(pos == packed.len(), "trailing packed floats");
@@ -324,10 +430,26 @@ fn ensure_nested(rows: usize, cols: usize, ks0: usize, kd0: usize,
     Ok(())
 }
 
+/// The nested width `k1`'s index positions inside a `k0`-wide centred
+/// block, as (start, len) runs: the low frequencies occupy the block's
+/// first `h1 + 1` slots and the high (negative) frequencies its last
+/// `h1` (`h1 = (k1 - 1) / 2`); a full axis (`k1 == n`, which forces
+/// `k0 == n`) is one identity run.  Contiguity is what lets crop/embed
+/// be straight slice copies instead of per-element gathers.
+fn axis_segments(n: usize, k0: usize, k1: usize) -> [(usize, usize); 2] {
+    if k1 == n {
+        [(0, k0), (0, 0)]
+    } else {
+        let h1 = (k1 - 1) / 2;
+        [(0, h1 + 1), (k0 - h1, h1)]
+    }
+}
+
 /// Crop a full (re, im) `ks0`×`kd0` block to the nested ladder point
-/// `ks1`×`kd1` (buffers cleared first).  A pure gather: the centred
-/// index set for a smaller odd width is a subset of the larger one's.
-pub fn crop_block_into(eng: &mut CodecEngine, re0: &[f32], im0: &[f32],
+/// `ks1`×`kd1` (buffers cleared first).  Pure contiguous-run copies:
+/// the centred index set for a smaller odd width is a subset of the
+/// larger one's, occupying its leading/trailing rows and columns.
+pub fn crop_block_into(_eng: &mut CodecEngine, re0: &[f32], im0: &[f32],
                        rows: usize, cols: usize, ks0: usize, kd0: usize,
                        ks1: usize, kd1: usize,
                        re1: &mut Vec<f32>, im1: &mut Vec<f32>) -> Result<()> {
@@ -335,18 +457,19 @@ pub fn crop_block_into(eng: &mut CodecEngine, re0: &[f32], im0: &[f32],
     ensure!(re0.len() == ks0 * kd0 && im0.len() == ks0 * kd0,
             "crop source carries {} floats, geometry wants {}", re0.len(),
             ks0 * kd0);
-    let ui = eng.indices(rows, ks1);
-    let vi = eng.indices(cols, kd1);
+    let rseg = axis_segments(rows, ks0, ks1);
+    let cseg = axis_segments(cols, kd0, kd1);
     re1.clear();
     im1.clear();
     re1.reserve(ks1 * kd1);
     im1.reserve(ks1 * kd1);
-    for &u in ui.iter() {
-        let i0 = block_pos(rows, ks0, u);
-        for &v in vi.iter() {
-            let j0 = block_pos(cols, kd0, v);
-            re1.push(re0[i0 * kd0 + j0]);
-            im1.push(im0[i0 * kd0 + j0]);
+    for &(r0, rlen) in &rseg {
+        for i0 in r0..r0 + rlen {
+            for &(c0, clen) in &cseg {
+                let s = i0 * kd0 + c0;
+                re1.extend_from_slice(&re0[s..s + clen]);
+                im1.extend_from_slice(&im0[s..s + clen]);
+            }
         }
     }
     Ok(())
@@ -354,7 +477,7 @@ pub fn crop_block_into(eng: &mut CodecEngine, re0: &[f32], im0: &[f32],
 
 /// Inverse of [`crop_block_into`]: scatter a nested `ks1`×`kd1` block
 /// into a zeroed `ks0`×`kd0` primary block (buffers cleared first).
-pub fn embed_block_into(eng: &mut CodecEngine, re1: &[f32], im1: &[f32],
+pub fn embed_block_into(_eng: &mut CodecEngine, re1: &[f32], im1: &[f32],
                         rows: usize, cols: usize, ks1: usize, kd1: usize,
                         ks0: usize, kd0: usize,
                         re0: &mut Vec<f32>, im0: &mut Vec<f32>) -> Result<()> {
@@ -362,21 +485,147 @@ pub fn embed_block_into(eng: &mut CodecEngine, re1: &[f32], im1: &[f32],
     ensure!(re1.len() == ks1 * kd1 && im1.len() == ks1 * kd1,
             "embed source carries {} floats, geometry wants {}", re1.len(),
             ks1 * kd1);
-    let ui = eng.indices(rows, ks1);
-    let vi = eng.indices(cols, kd1);
+    let rseg = axis_segments(rows, ks0, ks1);
+    let cseg = axis_segments(cols, kd0, kd1);
     re0.clear();
     re0.resize(ks0 * kd0, 0.0);
     im0.clear();
     im0.resize(ks0 * kd0, 0.0);
-    for (a, &u) in ui.iter().enumerate() {
-        let i0 = block_pos(rows, ks0, u);
-        for (b, &v) in vi.iter().enumerate() {
-            let j0 = block_pos(cols, kd0, v);
-            re0[i0 * kd0 + j0] = re1[a * kd1 + b];
-            im0[i0 * kd0 + j0] = im1[a * kd1 + b];
+    let mut src = 0usize;
+    for &(r0, rlen) in &rseg {
+        for i0 in r0..r0 + rlen {
+            for &(c0, clen) in &cseg {
+                let d = i0 * kd0 + c0;
+                re0[d..d + clen].copy_from_slice(&re1[src..src + clen]);
+                im0[d..d + clen].copy_from_slice(&im1[src..src + clen]);
+                src += clen;
+            }
         }
     }
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// baseline — the pre-rfft reference pipeline
+// ---------------------------------------------------------------------------
+
+/// The previous engine pipeline, kept verbatim (allocating, scalar
+/// kernels pinned): row-pair complex FFTs + a full complex inverse row
+/// pass.  `benches/microbench.rs` measures the rfft+SIMD path against
+/// this, and the odd-rows test uses it as an independent oracle.  Not
+/// part of the serving API.
+#[doc(hidden)]
+pub mod baseline {
+    use super::*;
+    use crate::codec::freq_indices;
+    use crate::dsp::fft2d;
+    use crate::dsp::simd::Level;
+
+    pub fn compress_block(a: &[f32], rows: usize, cols: usize, ks: usize,
+                          kd: usize) -> Result<Payload> {
+        ensure!(a.len() == rows * cols, "shape mismatch");
+        let ui = freq_indices(rows, ks);
+        let vi = freq_indices(cols, kd);
+        let plan_s = fft2d::plan(rows);
+        let plan_d = fft2d::plan(cols);
+        let mut narrow = vec![C64::ZERO; rows * kd];
+        let mut z = vec![C64::ZERO; cols];
+        // row-pair trick: rows (r, r+1) as re/im of one complex FFT;
+        // an odd tail row runs with a dead zero imaginary lane
+        let mut r = 0;
+        while r < rows {
+            let hi = (r + 1 < rows) as usize;
+            for v in 0..cols {
+                z[v] = C64::new(a[r * cols + v] as f64,
+                                if hi == 1 { a[(r + 1) * cols + v] as f64 }
+                                else { 0.0 });
+            }
+            plan_d.forward_with(Level::Scalar, &mut z);
+            for (j, &v) in vi.iter().enumerate() {
+                let zc = z[v];
+                let zm = z[(cols - v) % cols].conj();
+                narrow[r * kd + j] = (zc + zm).scale(0.5);
+                if hi == 1 {
+                    let d = (zc - zm).scale(0.5);
+                    narrow[(r + 1) * kd + j] = C64::new(d.im, -d.re);
+                }
+            }
+            r += 2;
+        }
+        let mut block = vec![C64::ZERO; ks * kd];
+        let mut col = vec![C64::ZERO; rows];
+        for j in 0..kd {
+            for rr in 0..rows {
+                col[rr] = narrow[rr * kd + j];
+            }
+            plan_s.forward_with(Level::Scalar, &mut col);
+            for (i, &u) in ui.iter().enumerate() {
+                block[i * kd + j] = col[u];
+            }
+        }
+        let mut out = Payload::empty();
+        out.reset("fc", rows, cols);
+        let mut w = Writer(&mut out.body);
+        w.u16(ks as u16);
+        w.u16(kd as u16);
+        for (i, &u) in ui.iter().enumerate() {
+            for (j, &v) in vi.iter().enumerate() {
+                let (mu, mv) = ((rows - u) % rows, (cols - v) % cols);
+                if (u, v) > (mu, mv) {
+                    continue;
+                }
+                let c = block[i * kd + j];
+                w.f32(c.re as f32);
+                if (u, v) != (mu, mv) {
+                    w.f32(c.im as f32);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn decompress(p: &Payload) -> Result<Vec<f32>> {
+        let (rows, cols) = (p.rows, p.cols);
+        let mut r = Reader::new(&p.body);
+        let ks = r.u16()? as usize;
+        let kd = r.u16()? as usize;
+        ensure!(crate::codec::valid_block_axis(rows, ks)
+                    && crate::codec::valid_block_axis(cols, kd),
+                "bad block {ks}x{kd} for {rows}x{cols}");
+        let ui = freq_indices(rows, ks);
+        let vi = freq_indices(cols, kd);
+        let plan_s = fft2d::plan(rows);
+        let plan_d = fft2d::plan(cols);
+        let mut spec = vec![C64::ZERO; rows * cols];
+        for &u in ui.iter() {
+            for &v in vi.iter() {
+                let (mu, mv) = ((rows - u) % rows, (cols - v) % cols);
+                if (u, v) > (mu, mv) {
+                    continue;
+                }
+                let re = r.f32()? as f64;
+                let im = if (u, v) != (mu, mv) { r.f32()? as f64 } else { 0.0 };
+                spec[u * cols + v] = C64::new(re, im);
+                spec[mu * cols + mv] = C64::new(re, -im);
+            }
+        }
+        ensure!(r.remaining() == 0, "trailing payload bytes");
+        let mut col = vec![C64::ZERO; rows];
+        for &v in vi.iter() {
+            for rr in 0..rows {
+                col[rr] = spec[rr * cols + v];
+            }
+            plan_s.inverse_with(Level::Scalar, &mut col);
+            for rr in 0..rows {
+                spec[rr * cols + v] = col[rr];
+            }
+        }
+        for rr in 0..rows {
+            plan_d.inverse_with(Level::Scalar,
+                                &mut spec[rr * cols..(rr + 1) * cols]);
+        }
+        Ok(spec.iter().map(|c| c.re as f32).collect())
+    }
 }
 
 #[cfg(test)]
@@ -607,6 +856,60 @@ mod tests {
     }
 
     #[test]
+    fn odd_rows_match_baseline_and_naive() {
+        // the rfft row pass has no odd-row tail (one real transform
+        // per row, where the pair trick ran its last transform with a
+        // dead zero imaginary lane); pin odd-row geometries against
+        // both the naive full-FFT reference and the pre-rfft baseline
+        // pipeline, and pin byte determinism
+        for (rows, cols) in
+            [(7usize, 16usize), (17, 32), (31, 100), (1, 8), (9, 9)] {
+            let a = rand_act(rows, cols, (rows * 7 + cols) as u64);
+            let codec = FourierCodec::default();
+            let ks = oddify(5, rows);
+            let kd = oddify(7, cols);
+            let p = codec.compress_block(&a, rows, cols, ks, kd).unwrap();
+            let got = codec.decompress(&p).unwrap();
+            let want = naive_roundtrip(&a, rows, cols, ks, kd);
+            let err = recon_err(&a, &want, &got);
+            assert!(err < 1e-5, "({rows},{cols}): err {err}");
+
+            let bp = baseline::compress_block(&a, rows, cols, ks, kd).unwrap();
+            assert_eq!(p.body.len(), bp.body.len(),
+                       "({rows},{cols}): wire layout drifted from baseline");
+            let bout = baseline::decompress(&bp).unwrap();
+            let berr = recon_err(&a, &bout, &got);
+            assert!(berr < 1e-4, "({rows},{cols}) vs baseline: err {berr}");
+
+            let p2 = codec.compress_block(&a, rows, cols, ks, kd).unwrap();
+            assert_eq!(p, p2, "({rows},{cols}): nondeterministic bytes");
+        }
+    }
+
+    #[test]
+    fn stage_timer_accumulates_and_disables() {
+        let (rows, cols) = (32usize, 64usize);
+        let a = rand_act(rows, cols, 13);
+        let codec = FourierCodec::default();
+        let mut eng = CodecEngine::new();
+        eng.enable_stage_timing();
+        let mut p = Payload::empty();
+        codec.compress_block_into(&mut eng, MatView::new(&a, rows, cols), 9,
+                                  15, &mut p).unwrap();
+        let mut out = Vec::new();
+        codec.decompress_into(&mut eng, &p, &mut out).unwrap();
+        let t = eng.stage_times().unwrap();
+        assert!(t.row_fft > std::time::Duration::ZERO, "row_fft");
+        assert!(t.col_fft > std::time::Duration::ZERO, "col_fft");
+        assert!(t.pack + t.wire > std::time::Duration::ZERO, "pack+wire");
+        eng.disable_stage_timing();
+        assert!(eng.stage_times().is_none());
+        // timing must not perturb the bytes
+        let plain = codec.compress_block(&a, rows, cols, 9, 15).unwrap();
+        assert_eq!(p, plain);
+    }
+
+    #[test]
     fn cropped_true_len_rows_match_naive() {
         // the serving path crops to true_len rows before compressing
         // (PAD rows are never sent): odd / minimal true_len values
@@ -746,6 +1049,54 @@ mod tests {
     }
 
     #[test]
+    fn crop_covers_full_axis_and_degenerate_widths() {
+        // k1 == n (identity axis), k1 == 1 (DC only), k1 == k0 — the
+        // segment decomposition's edges, pinned against a per-element
+        // gather oracle
+        let (rows, cols) = (8usize, 12usize);
+        let mut eng = CodecEngine::new();
+        for (ks0, kd0, ks1, kd1) in [
+            (rows, cols, rows, cols),
+            (rows, cols, 1, 1),
+            (rows, cols, 5, 7),
+            (5, 7, 5, 7),
+            (7, 11, 1, 11),
+            (7, cols, 3, cols),
+        ] {
+            let n0 = ks0 * kd0;
+            let re0: Vec<f32> = (0..n0).map(|x| x as f32).collect();
+            let im0: Vec<f32> = (0..n0).map(|x| -(x as f32)).collect();
+            let (mut re1, mut im1) = (Vec::new(), Vec::new());
+            crop_block_into(&mut eng, &re0, &im0, rows, cols, ks0, kd0, ks1,
+                            kd1, &mut re1, &mut im1).unwrap();
+            // oracle: gather through the centred index lists
+            let ui0 = freq_indices(rows, ks0);
+            let vi0 = freq_indices(cols, kd0);
+            let pos = |list: &[usize], u: usize| {
+                list.iter().position(|&x| x == u).unwrap()
+            };
+            let mut want_re = Vec::new();
+            for &u in &freq_indices(rows, ks1) {
+                for &v in &freq_indices(cols, kd1) {
+                    want_re.push(re0[pos(&ui0, u) * kd0 + pos(&vi0, v)]);
+                }
+            }
+            assert_eq!(re1, want_re, "{ks0}x{kd0} -> {ks1}x{kd1}");
+            assert_eq!(im1.len(), ks1 * kd1);
+
+            // embed is crop's right inverse on the nested entries
+            let (mut bre, mut bim) = (Vec::new(), Vec::new());
+            embed_block_into(&mut eng, &re1, &im1, rows, cols, ks1, kd1, ks0,
+                             kd0, &mut bre, &mut bim).unwrap();
+            let (mut re2, mut im2) = (Vec::new(), Vec::new());
+            crop_block_into(&mut eng, &bre, &bim, rows, cols, ks0, kd0, ks1,
+                            kd1, &mut re2, &mut im2).unwrap();
+            assert_eq!(re1, re2);
+            assert_eq!(im1, im2);
+        }
+    }
+
+    #[test]
     fn crop_and_embed_reject_non_nested_or_misshapen() {
         let mut eng = CodecEngine::new();
         let (mut re, mut im) = (Vec::new(), Vec::new());
@@ -773,5 +1124,10 @@ mod tests {
         p2.body[0] = 0xFF; // ks out of range
         p2.body[1] = 0xFF;
         assert!(codec.decompress(&p2).is_err());
+        // a whole missing float (4-byte aligned truncation) must also
+        // be rejected, by the scatter's position accounting
+        let mut p3 = codec.compress(&a, 16, 32, 8.0).unwrap();
+        p3.body.truncate(p3.body.len() - 4);
+        assert!(codec.decompress(&p3).is_err());
     }
 }

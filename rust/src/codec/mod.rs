@@ -26,7 +26,7 @@ pub mod rate;
 pub mod stream;
 pub mod topk;
 
-pub use engine::{with_thread_engine, CodecEngine};
+pub use engine::{with_thread_engine, CodecEngine, StageTimes};
 
 use crate::tensor::MatView;
 use anyhow::{bail, ensure, Result};
@@ -206,6 +206,26 @@ impl Writer<'_> {
     pub fn f32(&mut self, v: f32) {
         self.0.extend_from_slice(&v.to_le_bytes());
     }
+    /// Bulk little-endian append of a float slice — one `memcpy` on
+    /// little-endian targets (all supported ones), byte-identical to
+    /// the per-element [`Writer::f32`] loop.
+    pub fn f32s(&mut self, vals: &[f32]) {
+        #[cfg(target_endian = "little")]
+        {
+            // SAFETY: f32 has no padding bytes, so 4·len initialised
+            // bytes start at the slice base; LE memory order is
+            // exactly the wire order f32() emits.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(vals.as_ptr() as *const u8,
+                                           4 * vals.len())
+            };
+            self.0.extend_from_slice(bytes);
+        }
+        #[cfg(not(target_endian = "little"))]
+        for v in vals {
+            self.f32(*v);
+        }
+    }
 }
 
 pub(crate) struct Reader<'a> {
@@ -228,6 +248,30 @@ impl<'a> Reader<'a> {
     pub fn f32(&mut self) -> Result<f32> {
         let b = self.take(4)?;
         Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    /// Bulk read of `n` little-endian floats, appended into `out` —
+    /// the decode-side twin of [`Writer::f32s`].
+    pub fn f32s(&mut self, n: usize, out: &mut Vec<f32>) -> Result<()> {
+        let bytes = self.take(4 * n)?;
+        let old = out.len();
+        out.reserve(n);
+        #[cfg(target_endian = "little")]
+        // SAFETY: `bytes` is 4·n readable bytes, every bit pattern is
+        // a valid f32, and the destination capacity was just reserved;
+        // byte-for-byte this is the from_le_bytes loop below.
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(),
+                                          out.as_mut_ptr().add(old)
+                                              as *mut u8,
+                                          4 * n);
+            out.set_len(old + n);
+        }
+        #[cfg(not(target_endian = "little"))]
+        out.extend(bytes.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])));
+        #[cfg(not(target_endian = "little"))]
+        let _ = old;
+        Ok(())
     }
     pub fn byte(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
@@ -478,6 +522,31 @@ mod tests {
         }
         let kd = calibrate_block(&[MatView::new(&a, rows, cols)], 8.0).unwrap();
         assert!((11..=17).contains(&kd), "calibrated kd={kd}");
+    }
+
+    #[test]
+    fn bulk_f32_wire_helpers_match_scalar() {
+        let vals: Vec<f32> = (0..33).map(|i| (i as f32) * 0.37 - 5.0).collect();
+        let mut a = Vec::new();
+        let mut w = Writer(&mut a);
+        w.f32s(&vals);
+        w.f32s(&[]); // empty append is a no-op
+        let mut b = Vec::new();
+        let mut w2 = Writer(&mut b);
+        for v in &vals {
+            w2.f32(*v);
+        }
+        assert_eq!(a, b);
+
+        let mut r = Reader::new(&a);
+        let mut back = vec![9.0f32]; // appended after a sentinel
+        r.f32s(vals.len(), &mut back).unwrap();
+        assert_eq!(back[0], 9.0);
+        assert_eq!(&back[1..], vals.as_slice());
+        assert_eq!(r.remaining(), 0);
+
+        let mut short = Reader::new(&a[..7]);
+        assert!(short.f32s(2, &mut back).is_err());
     }
 
     #[test]

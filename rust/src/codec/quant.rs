@@ -5,8 +5,9 @@
 //!
 //! Wire body: u16 block | u32 n | f32 scales[ceil(n/block)] | i8 q[n]
 
-use super::engine::CodecEngine;
+use super::engine::{stage, CodecEngine};
 use super::{Codec, Payload, Reader, Writer};
+use crate::dsp::simd;
 use crate::tensor::MatView;
 use anyhow::{ensure, Result};
 
@@ -30,32 +31,34 @@ impl Codec for Int8Codec {
         let data = a.as_slice();
         let n = data.len();
         let nb = n.div_ceil(self.block);
-        out.reset("int8", a.rows(), a.cols());
-        let mut w = Writer(&mut out.body);
-        w.u16(self.block as u16);
-        w.u32(n as u32);
-        // per-block absmax scales, staged in the engine's f32 scratch
-        let scales = &mut eng.floats;
-        scales.clear();
-        scales.reserve(nb);
-        for b in 0..nb {
-            let chunk = &data[b * self.block..((b + 1) * self.block).min(n)];
-            let absmax = chunk.iter().fold(0.0f32, |m, v| m.max(v.abs()));
-            let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
-            scales.push(scale);
-            w.f32(scale);
-        }
-        // per-block reciprocal hoisted out of the inner loop: one
-        // divide per block instead of a float divide (plus an integer
-        // divide for the scale lookup) per element — scale is never
-        // zero, see above
-        for (chunk, &scale) in data.chunks(self.block).zip(scales.iter()) {
-            let inv = 1.0 / scale;
-            for &v in chunk {
-                let q = (v * inv).round().clamp(-127.0, 127.0) as i8;
-                w.0.push(q as u8);
+        let lv = eng.simd;
+        let CodecEngine { floats: scales, bytes, timer, .. } = eng;
+
+        // per-block absmax scales + int8 bodies, staged in the
+        // engine's scratch so the wire write below is two bulk moves
+        stage!(timer, quant, {
+            scales.clear();
+            scales.reserve(nb);
+            bytes.clear();
+            bytes.reserve(n);
+            for chunk in data.chunks(self.block) {
+                let absmax = simd::absmax(lv, chunk);
+                let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+                scales.push(scale);
+                // per-block reciprocal hoisted out of the inner loop:
+                // one divide per block — scale is never zero, see above
+                simd::quantize_i8(lv, chunk, 1.0 / scale, bytes);
             }
-        }
+        });
+
+        stage!(timer, wire, {
+            out.reset("int8", a.rows(), a.cols());
+            let mut w = Writer(&mut out.body);
+            w.u16(self.block as u16);
+            w.u32(n as u32);
+            w.f32s(scales);
+            w.0.extend_from_slice(bytes);
+        });
         Ok(())
     }
 
@@ -67,24 +70,26 @@ impl Codec for Int8Codec {
         ensure!(n == p.rows * p.cols, "element count mismatch");
         ensure!(block > 0, "zero block");
         let nb = n.div_ceil(block);
-        let scales = &mut eng.floats;
-        scales.clear();
-        scales.reserve(nb);
-        for _ in 0..nb {
-            scales.push(r.f32()?);
-        }
-        out.clear();
-        out.reserve(n);
-        // same hoist on the decode side: the scale lookup's integer
-        // divide leaves the inner loop
-        for b in 0..nb {
-            let scale = scales[b];
-            for _ in b * block..((b + 1) * block).min(n) {
-                let q = r.byte()? as i8;
-                out.push(q as f32 * scale);
+        let lv = eng.simd;
+        let CodecEngine { floats: scales, timer, .. } = eng;
+
+        // wire: one bulk scale read, one borrow of the int8 body
+        let q = stage!(timer, wire, {
+            scales.clear();
+            r.f32s(nb, scales)?;
+            let q = r.take(n)?;
+            ensure!(r.remaining() == 0, "trailing payload bytes");
+            q
+        });
+
+        stage!(timer, quant, {
+            out.clear();
+            out.reserve(n);
+            // scale lookup hoisted per block, kernel per chunk
+            for (chunk, &scale) in q.chunks(block).zip(scales.iter()) {
+                simd::dequantize_i8(lv, chunk, scale, out);
             }
-        }
-        ensure!(r.remaining() == 0, "trailing payload bytes");
+        });
         Ok(())
     }
 }

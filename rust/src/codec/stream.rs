@@ -143,9 +143,7 @@ pub fn fc_payload(geom: BlockGeom, packed: &[f32]) -> Payload {
     let mut w = Writer(&mut p.body);
     w.u16(geom.ks as u16);
     w.u16(geom.kd as u16);
-    for &v in packed {
-        w.f32(v);
-    }
+    w.f32s(packed);
     p
 }
 

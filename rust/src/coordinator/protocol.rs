@@ -324,9 +324,7 @@ impl Frame {
                 b.extend_from_slice(&ks.to_le_bytes());
                 b.extend_from_slice(&kd.to_le_bytes());
                 b.push(*point);
-                for v in packed {
-                    b.extend_from_slice(&v.to_le_bytes());
-                }
+                crate::codec::Writer(&mut b).f32s(packed);
             }
             Frame::Token { request, token, logprob } => {
                 b.extend_from_slice(&request.to_le_bytes());
@@ -355,9 +353,7 @@ impl Frame {
                 b.extend_from_slice(&kd.to_le_bytes());
                 b.push(*point);
                 if *keyframe {
-                    for v in packed {
-                        b.extend_from_slice(&v.to_le_bytes());
-                    }
+                    crate::codec::Writer(&mut b).f32s(packed);
                 } else {
                     b.extend_from_slice(&(updates.len() as u32).to_le_bytes());
                     for (i, v) in updates {
@@ -421,10 +417,8 @@ impl Frame {
                 let ks = r.u16()?;
                 let kd = r.u16()?;
                 let point = r.byte()?;
-                let mut packed = Vec::with_capacity(r.remaining() / 4);
-                while r.remaining() >= 4 {
-                    packed.push(r.f32()?);
-                }
+                let mut packed = Vec::new();
+                r.f32s(r.remaining() / 4, &mut packed)?;
                 ensure!(r.remaining() == 0,
                         "activation body not f32-aligned ({} stray bytes)",
                         r.remaining());
@@ -464,10 +458,8 @@ impl Frame {
                 let kd = r.u16()?;
                 let point = r.byte()?;
                 let (packed, updates) = if keyframe {
-                    let mut p = Vec::with_capacity(r.remaining() / 4);
-                    while r.remaining() >= 4 {
-                        p.push(r.f32()?);
-                    }
+                    let mut p = Vec::new();
+                    r.f32s(r.remaining() / 4, &mut p)?;
                     ensure!(r.remaining() == 0,
                             "keyframe body not f32-aligned ({} stray bytes)",
                             r.remaining());

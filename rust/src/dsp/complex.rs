@@ -3,7 +3,10 @@
 
 use std::ops::{Add, AddAssign, Mul, MulAssign, Neg, Sub};
 
+// repr(C) pins the (re, im) adjacent-pair layout the SIMD kernels
+// rely on when viewing &[C64] as &[f64] (dsp::simd).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
+#[repr(C)]
 pub struct C64 {
     pub re: f64,
     pub im: f64,

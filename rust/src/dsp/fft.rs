@@ -8,6 +8,8 @@
 //! butterflies only.
 
 use super::complex::C64;
+use super::simd::{self, Level};
+use std::cell::RefCell;
 use std::f64::consts::PI;
 
 #[derive(Debug)]
@@ -83,70 +85,59 @@ impl FftPlan {
     }
 
     /// Forward DFT, in place.  X[k] = Σ x[j] e^{-2πi jk/n}.
+    /// Dispatches at the process-detected SIMD level; use
+    /// [`FftPlan::forward_with`] to pin a level explicitly.
     pub fn forward_in_place(&self, data: &mut [C64]) {
+        self.forward_with(simd::detect(), data);
+    }
+
+    /// Forward DFT at an explicit kernel [`Level`] — the codec engine
+    /// threads its own level through so parity tests can force the
+    /// scalar reference path per engine.
+    pub fn forward_with(&self, lv: Level, data: &mut [C64]) {
         assert_eq!(data.len(), self.n);
         match &self.kind {
             Kind::Radix2 { rev, twiddles } => {
-                radix2_pass(data, rev, twiddles);
+                simd::radix2_pass(lv, data, rev, twiddles);
             }
             Kind::Bluestein { m, chirp, chirp_fft, inner } => {
                 let n = self.n;
-                let mut a = vec![C64::ZERO; *m];
-                for k in 0..n {
-                    a[k] = data[k] * chirp[k];
-                }
-                inner.forward_in_place(&mut a);
-                for (av, bv) in a.iter_mut().zip(chirp_fft.iter()) {
-                    *av = *av * *bv;
-                }
-                inner.inverse_in_place(&mut a);
-                for k in 0..n {
-                    data[k] = a[k] * chirp[k];
-                }
+                // convolution scratch, recycled across calls (bluestein
+                // column passes land in the codec hot path for non-pow2
+                // sequence axes).  Never re-entered: the inner plan of a
+                // Bluestein is always radix-2.
+                BLUESTEIN_SCRATCH.with(|cell| {
+                    let a = &mut *cell.borrow_mut();
+                    a.clear();
+                    a.resize(*m, C64::ZERO);
+                    a[..n].copy_from_slice(data);
+                    simd::cmul_in_place(lv, &mut a[..n], chirp);
+                    inner.forward_with(lv, a);
+                    simd::cmul_in_place(lv, a, chirp_fft);
+                    inner.inverse_with(lv, a);
+                    data.copy_from_slice(&a[..n]);
+                    simd::cmul_in_place(lv, data, chirp);
+                });
             }
         }
     }
 
     /// Inverse DFT (with 1/n normalisation), in place.
     pub fn inverse_in_place(&self, data: &mut [C64]) {
+        self.inverse_with(simd::detect(), data);
+    }
+
+    /// Inverse DFT at an explicit kernel [`Level`].
+    pub fn inverse_with(&self, lv: Level, data: &mut [C64]) {
         // conjugate trick: ifft(x) = conj(fft(conj(x))) / n
-        for v in data.iter_mut() {
-            *v = v.conj();
-        }
-        self.forward_in_place(data);
-        let inv = 1.0 / self.n as f64;
-        for v in data.iter_mut() {
-            *v = v.conj().scale(inv);
-        }
+        simd::conj_in_place(lv, data);
+        self.forward_with(lv, data);
+        simd::conj_scale_in_place(lv, data, 1.0 / self.n as f64);
     }
 }
 
-fn radix2_pass(data: &mut [C64], rev: &[u32], twiddles: &[C64]) {
-    let n = data.len();
-    for i in 0..n {
-        let j = rev[i] as usize;
-        if i < j {
-            data.swap(i, j);
-        }
-    }
-    let mut len = 2;
-    let mut toff = 0;
-    while len <= n {
-        let half = len / 2;
-        let tw = &twiddles[toff..toff + half];
-        let mut base = 0;
-        while base < n {
-            for k in 0..half {
-                let u = data[base + k];
-                let v = data[base + k + half] * tw[k];
-                data[base + k] = u + v;
-                data[base + k + half] = u - v;
-            }
-            base += len;
-        }
-        toff += half;
-        len <<= 1;
-    }
+thread_local! {
+    static BLUESTEIN_SCRATCH: RefCell<Vec<C64>> = const { RefCell::new(Vec::new()) };
 }
 
 /// Direct O(n²) DFT — the oracle the fft is tested against.

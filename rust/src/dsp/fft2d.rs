@@ -13,6 +13,7 @@
 
 use super::complex::C64;
 use super::fft::FftPlan;
+use super::rfft::RfftPlan;
 use crate::tensor::MatView;
 use std::collections::HashMap;
 use std::sync::{Arc, OnceLock, RwLock};
@@ -30,6 +31,22 @@ pub fn plan(n: usize) -> Arc<FftPlan> {
     }
     let mut cache = plan_cache().write().unwrap();
     cache.entry(n).or_insert_with(|| Arc::new(FftPlan::new(n))).clone()
+}
+
+fn rplan_cache() -> &'static RwLock<HashMap<usize, Arc<RfftPlan>>> {
+    static CACHE: OnceLock<RwLock<HashMap<usize, Arc<RfftPlan>>>> = OnceLock::new();
+    CACHE.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
+/// Shared-tier real-FFT plan lookup (same discipline as [`plan`]).
+/// An even-length [`RfftPlan`] holds an `Arc` to the half-length
+/// complex plan from the same cache, so the tables are shared.
+pub fn rplan(n: usize) -> Arc<RfftPlan> {
+    if let Some(p) = rplan_cache().read().unwrap().get(&n) {
+        return p.clone();
+    }
+    let mut cache = rplan_cache().write().unwrap();
+    cache.entry(n).or_insert_with(|| Arc::new(RfftPlan::new(n))).clone()
 }
 
 fn pass_rows(data: &mut [C64], rows: usize, cols: usize, inverse: bool) {

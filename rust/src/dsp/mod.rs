@@ -6,7 +6,11 @@
 pub mod complex;
 pub mod fft;
 pub mod fft2d;
+pub mod rfft;
+pub mod simd;
 
 pub use complex::C64;
 pub use fft::FftPlan;
 pub use fft2d::{fft2, ifft2};
+pub use rfft::RfftPlan;
+pub use simd::Level;

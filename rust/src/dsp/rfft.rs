@@ -1,0 +1,294 @@
+//! Real-input FFT: the length-N transform of a real signal computed
+//! through ONE length-N/2 complex FFT plus an O(N) split/merge twiddle
+//! pass.  This generalizes the row-pair trick the fourier codec used
+//! to inline (two real rows as re/im of one complex FFT) to a single
+//! row, which is what both directions of the codec actually need:
+//!
+//! * **forward** — pack `x[2j], x[2j+1]` as the re/im of a half-length
+//!   complex signal `z`, transform, then split each output bin by
+//!   conjugate symmetry:
+//!
+//!   ```text
+//!   E[k] = (Z[k] + conj(Z[m-k])) / 2          (FFT of even samples)
+//!   O[k] = -i (Z[k] - conj(Z[m-k])) / 2       (FFT of odd samples)
+//!   X[k] = E[k] + w^k O[k],   w = e^{-2πi/N},  m = N/2
+//!   ```
+//!
+//! * **inverse** — un-split (`E[k] = (X[k] + conj(X[m-k]))/2`,
+//!   `O[k] = conj(w^k) (X[k] - conj(X[m-k]))/2`), merge `Z[k] = E[k] +
+//!   i O[k]`, one half-length inverse FFT, and the output's re/im
+//!   lanes interleave back into the N real samples.
+//!
+//! A real N-point transform therefore costs an N/2-point complex FFT
+//! plus O(N) — about half the butterflies of the complex transform the
+//! decompress row pass used to run per row.  Only the `k <= N/2` half
+//! spectrum is materialised; the upper half is implied by conjugate
+//! symmetry (`X[N-k] = conj(X[k])`).
+//!
+//! Odd N falls back to a full complex transform of the widened signal
+//! (no half-split exists); those axis lengths only occur in tests and
+//! degenerate geometries — real hidden dimensions are even.
+
+use super::complex::C64;
+use super::fft::FftPlan;
+use super::fft2d;
+use super::simd::{self, Level};
+use std::f64::consts::PI;
+use std::sync::Arc;
+
+#[derive(Debug)]
+enum RKind {
+    /// Even N: half-length complex plan + split/merge twiddles
+    /// `tw[k] = e^{-2πik/N}` for `k = 0..=N/2`.
+    Even { m: usize, half: Arc<FftPlan>, tw: Vec<C64> },
+    /// Odd N (or 1): full-length complex fallback.
+    Odd { full: Arc<FftPlan> },
+}
+
+/// Planned real-input FFT of a fixed length.  Shared through the
+/// [`fft2d::rplan`] process cache and the per-engine map in
+/// [`crate::codec::CodecEngine`].
+#[derive(Debug)]
+pub struct RfftPlan {
+    n: usize,
+    kind: RKind,
+}
+
+impl RfftPlan {
+    pub fn new(n: usize) -> RfftPlan {
+        assert!(n > 0);
+        if n % 2 == 0 {
+            let m = n / 2;
+            let mut tw: Vec<C64> =
+                (0..=m).map(|k| C64::cis(-2.0 * PI * k as f64 / n as f64)).collect();
+            // pin the exactly-representable roots (cis(-π) carries a
+            // ~1e-16 imaginary dust that would leak into X[m])
+            tw[0] = C64::ONE;
+            tw[m] = C64::new(-1.0, 0.0);
+            RfftPlan { n, kind: RKind::Even { m, half: fft2d::plan(m), tw } }
+        } else {
+            RfftPlan { n, kind: RKind::Odd { full: fft2d::plan(n) } }
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of independent spectrum bins: `n/2 + 1`.
+    pub fn half_len(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    /// Bytes of precomputed tables held by this plan (twiddles only;
+    /// the inner complex plan is shared and accounted separately).
+    pub fn table_bytes(&self) -> usize {
+        match &self.kind {
+            RKind::Even { tw, .. } => tw.len() * std::mem::size_of::<C64>(),
+            RKind::Odd { .. } => 0,
+        }
+    }
+
+    /// Stage 1 of the forward transform: pack the real row into `z`
+    /// (cleared first) and run the inner complex FFT.  Afterwards
+    /// [`RfftPlan::bin`] reads any spectrum value `X[k]`, `k <= n/2`.
+    ///
+    /// Split into pack+bin (rather than always materialising the full
+    /// half spectrum) because the codec's row pass keeps only K_D bins
+    /// per row — the split twiddle work runs on the kept bins only.
+    pub fn spectrum_into(&self, lv: Level, x: &[f32], z: &mut Vec<C64>) {
+        assert_eq!(x.len(), self.n);
+        z.clear();
+        match &self.kind {
+            RKind::Even { half, .. } => {
+                simd::widen_f32_pairs(lv, x, z);
+                half.forward_with(lv, z);
+            }
+            RKind::Odd { full } => {
+                z.extend(x.iter().map(|&v| C64::from_re(v as f64)));
+                full.forward_with(lv, z);
+            }
+        }
+    }
+
+    /// Spectrum bin `X[k]` (`k <= n/2`) from a buffer prepared by
+    /// [`RfftPlan::spectrum_into`].
+    #[inline]
+    pub fn bin(&self, z: &[C64], k: usize) -> C64 {
+        match &self.kind {
+            RKind::Odd { .. } => z[k],
+            RKind::Even { m, tw, .. } => {
+                let m = *m;
+                let a = z[k % m];
+                let b = z[(m - k % m) % m].conj();
+                let e = (a + b).scale(0.5);
+                let d = (a - b).scale(0.5);
+                // -i * d
+                let o = C64::new(d.im, -d.re);
+                e + tw[k] * o
+            }
+        }
+    }
+
+    /// Full forward half spectrum: `out[k] = X[k]` for `k = 0..=n/2`
+    /// (cleared first; `z` is the complex scratch).
+    pub fn forward_into(&self, lv: Level, x: &[f32], z: &mut Vec<C64>,
+                        out: &mut Vec<C64>) {
+        self.spectrum_into(lv, x, z);
+        out.clear();
+        out.reserve(self.half_len());
+        for k in 0..self.half_len() {
+            out.push(self.bin(z, k));
+        }
+    }
+
+    /// Inverse transform from the half spectrum: `spec[k]` must hold
+    /// `X[k]` for `k = 0..half_len()` (longer slices are fine — the
+    /// codec hands whole spectrum rows); writes the `n` real samples
+    /// into `dst` as f32.  `work` is complex scratch.
+    pub fn inverse_into(&self, lv: Level, spec: &[C64], work: &mut Vec<C64>,
+                        dst: &mut [f32]) {
+        assert!(spec.len() >= self.half_len());
+        assert_eq!(dst.len(), self.n);
+        match &self.kind {
+            RKind::Even { m, half, tw } => {
+                let m = *m;
+                work.clear();
+                work.reserve(m);
+                for k in 0..m {
+                    let a = spec[k];
+                    let b = spec[m - k].conj();
+                    let e = (a + b).scale(0.5);
+                    let d = (a - b).scale(0.5);
+                    // O[k] = conj(w^k) * d;  Z[k] = E[k] + i O[k]
+                    let o = d * tw[k].conj();
+                    work.push(C64::new(e.re - o.im, e.im + o.re));
+                }
+                half.inverse_with(lv, work);
+                // z[j] = (x[2j], x[2j+1]): the interleaved narrow IS
+                // the real signal
+                simd::narrow_c64_slice(lv, work, dst);
+            }
+            RKind::Odd { full } => {
+                let n = self.n;
+                work.clear();
+                work.resize(n, C64::ZERO);
+                work[0] = spec[0];
+                for k in 1..=n / 2 {
+                    work[k] = spec[k];
+                    work[n - k] = spec[k].conj();
+                }
+                full.inverse_with(lv, work);
+                for (w, d) in work.iter().zip(dst.iter_mut()) {
+                    *d = w.re as f32;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::fft::dft_direct;
+    use crate::util::rng::Rng;
+
+    fn rand_row(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn direct_spectrum(x: &[f32]) -> Vec<C64> {
+        let cx: Vec<C64> = x.iter().map(|&v| C64::from_re(v as f64)).collect();
+        dft_direct(&cx)
+    }
+
+    #[test]
+    fn forward_matches_direct_dft() {
+        // even pow2, even bluestein, odd, tiny
+        for n in [2usize, 4, 8, 64, 256, 6, 10, 48, 100, 2048, 1, 3, 7, 31] {
+            let x = rand_row(n, n as u64);
+            let plan = RfftPlan::new(n);
+            let mut z = Vec::new();
+            let mut out = Vec::new();
+            plan.forward_into(Level::Scalar, &x, &mut z, &mut out);
+            assert_eq!(out.len(), n / 2 + 1);
+            let want = direct_spectrum(&x);
+            for (k, got) in out.iter().enumerate() {
+                let err = (*got - want[k]).abs();
+                assert!(err < 1e-8 * (n as f64), "n={n} k={k} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn kept_bin_access_covers_whole_half_spectrum() {
+        let n = 96;
+        let x = rand_row(n, 9);
+        let plan = RfftPlan::new(n);
+        let mut z = Vec::new();
+        plan.spectrum_into(Level::Scalar, &x, &mut z);
+        let want = direct_spectrum(&x);
+        // every k <= n/2 individually (the codec gathers sparse bins)
+        for k in 0..=n / 2 {
+            assert!((plan.bin(&z, k) - want[k]).abs() < 1e-9 * n as f64,
+                    "k={k}");
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrips() {
+        for n in [2usize, 4, 8, 64, 6, 48, 100, 256, 1, 3, 31] {
+            let x = rand_row(n, 100 + n as u64);
+            let plan = RfftPlan::new(n);
+            let mut z = Vec::new();
+            let mut spec = Vec::new();
+            plan.forward_into(Level::Scalar, &x, &mut z, &mut spec);
+            let mut work = Vec::new();
+            let mut back = vec![0.0f32; n];
+            plan.inverse_into(Level::Scalar, &spec, &mut work, &mut back);
+            for (a, b) in x.iter().zip(&back) {
+                assert!((a - b).abs() < 1e-5, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_accepts_full_spectrum_rows() {
+        // the codec hands a whole `cols`-long spectrum row; the kernel
+        // must only read the first n/2+1 bins
+        let n = 48;
+        let x = rand_row(n, 3);
+        let plan = RfftPlan::new(n);
+        let mut full: Vec<C64> = direct_spectrum(&x);
+        // poison the mirrored half: must not be read
+        for v in full.iter_mut().skip(n / 2 + 1) {
+            *v = C64::new(1e30, -1e30);
+        }
+        let mut work = Vec::new();
+        let mut back = vec![0.0f32; n];
+        plan.inverse_into(Level::Scalar, &full, &mut work, &mut back);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn nyquist_and_dc_bins_are_real() {
+        let n = 64;
+        let x = rand_row(n, 5);
+        let plan = RfftPlan::new(n);
+        let mut z = Vec::new();
+        plan.spectrum_into(Level::Scalar, &x, &mut z);
+        assert!(plan.bin(&z, 0).im.abs() < 1e-12, "DC");
+        assert!(plan.bin(&z, n / 2).im.abs() < 1e-12, "Nyquist");
+    }
+
+    #[test]
+    fn half_len_accounting() {
+        assert_eq!(RfftPlan::new(8).half_len(), 5);
+        assert_eq!(RfftPlan::new(7).half_len(), 4);
+        assert_eq!(RfftPlan::new(1).half_len(), 1);
+        assert_eq!(RfftPlan::new(2).half_len(), 2);
+    }
+}

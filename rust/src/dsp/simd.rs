@@ -1,0 +1,929 @@
+//! SIMD kernel layer for the codec hot path.
+//!
+//! Every kernel here exists in two byte-parity-pinned forms: a portable
+//! scalar body (always compiled — it IS the reference semantics) and a
+//! vector body selected at runtime behind the `simd` cargo feature.
+//! The dispatch contract is strict: for any input, the vector body must
+//! produce **bit-identical** output to the scalar body.  That is why
+//!
+//! * the complex kernels use the exact mul/add/sub sequence of
+//!   [`C64`]'s operators (no FMA — a fused multiply-add rounds once
+//!   where the scalar code rounds twice);
+//! * the length-2 butterfly stage still multiplies by its twiddle
+//!   `(1.0, -0.0)` — skipping the "trivial" multiply would flip signed
+//!   zeros all over a sparse spectrum;
+//! * int8 quantization emulates Rust's half-away-from-zero
+//!   `f32::round` with a truncate-then-adjust sequence instead of the
+//!   hardware's round-to-nearest-even (`_mm256_round_ps` and
+//!   `floor(x + 0.5)` both disagree with `round` on ties).
+//!
+//! The parity is enforced by unit tests here and by the seeded
+//! SIMD-vs-scalar suite in `tests/properties.rs`, which runs the whole
+//! codec under both levels and compares wire bytes.
+//!
+//! Dispatch levels: `Avx2` on x86_64 (runtime-detected, covers the CI
+//! and serving fleet), `Neon` on aarch64 for the f32 move/convert
+//! kernels (butterflies and quantize stay scalar there until an
+//! aarch64 CI leg exists).  Everything else — and every build without
+//! `--features simd` — runs the scalar bodies.
+
+use super::complex::C64;
+
+/// Kernel dispatch level.  Obtain via [`detect`] (or force
+/// [`Level::Scalar`] to pin the reference path, e.g. in parity tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// Portable scalar kernels — always compiled, the parity baseline.
+    Scalar,
+    /// AVX2 f64/f32 kernels (x86_64, `simd` feature, runtime-checked).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// NEON f32 move/convert kernels (aarch64, `simd` feature).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Level::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Level::Neon => "neon",
+        }
+    }
+}
+
+/// Best available level for this process.  Scalar unless the crate was
+/// built with `--features simd` AND the CPU reports the target feature
+/// at runtime (checked once, cached).
+pub fn detect() -> Level {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        use std::sync::OnceLock;
+        static LV: OnceLock<Level> = OnceLock::new();
+        return *LV.get_or_init(|| {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                Level::Avx2
+            } else {
+                Level::Scalar
+            }
+        });
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        // NEON is baseline on aarch64.
+        return Level::Neon;
+    }
+    #[allow(unreachable_code)]
+    Level::Scalar
+}
+
+// ---------------------------------------------------------------------------
+// complex f64 kernels (FFT internals)
+// ---------------------------------------------------------------------------
+
+/// One full radix-2 pass: bit-reversal permutation + every butterfly
+/// stage.  `twiddles` is the per-stage concatenated table built by
+/// `FftPlan::radix2`.
+pub fn radix2_pass(lv: Level, data: &mut [C64], rev: &[u32],
+                   twiddles: &[C64]) {
+    let n = data.len();
+    // permutation is a memory shuffle — scalar at every level
+    for i in 0..n {
+        let j = rev[i] as usize;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if lv == Level::Avx2 {
+        // SAFETY: Level::Avx2 only exists after `detect` saw avx2.
+        unsafe { butterflies_avx2(data, twiddles) };
+        return;
+    }
+    let _ = lv;
+    butterflies_scalar(data, twiddles);
+}
+
+fn butterflies_scalar(data: &mut [C64], twiddles: &[C64]) {
+    let n = data.len();
+    let mut len = 2;
+    let mut toff = 0;
+    while len <= n {
+        let half = len / 2;
+        let tw = &twiddles[toff..toff + half];
+        let mut base = 0;
+        while base < n {
+            for k in 0..half {
+                let u = data[base + k];
+                let v = data[base + k + half] * tw[k];
+                data[base + k] = u + v;
+                data[base + k + half] = u - v;
+            }
+            base += len;
+        }
+        toff += half;
+        len <<= 1;
+    }
+}
+
+/// `a[i] *= b[i]` over equal-length slices (Bluestein chirp passes).
+pub fn cmul_in_place(lv: Level, a: &mut [C64], b: &[C64]) {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if lv == Level::Avx2 {
+        unsafe { cmul_avx2(a, b) };
+        return;
+    }
+    let _ = lv;
+    for (av, bv) in a.iter_mut().zip(b.iter()) {
+        *av = *av * *bv;
+    }
+}
+
+/// Conjugate every element (first half of the inverse-FFT trick).
+pub fn conj_in_place(lv: Level, data: &mut [C64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if lv == Level::Avx2 {
+        unsafe { conj_avx2(data) };
+        return;
+    }
+    let _ = lv;
+    for v in data.iter_mut() {
+        *v = v.conj();
+    }
+}
+
+/// `data[i] = conj(data[i]) * k` (second half of the inverse trick).
+pub fn conj_scale_in_place(lv: Level, data: &mut [C64], k: f64) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if lv == Level::Avx2 {
+        unsafe { conj_scale_avx2(data, k) };
+        return;
+    }
+    let _ = lv;
+    for v in data.iter_mut() {
+        *v = v.conj().scale(k);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 <-> C64 move/convert kernels (pack/unpack, rfft staging)
+// ---------------------------------------------------------------------------
+
+/// Widen consecutive f32 pairs into complex: `out += [(x[0], x[1]),
+/// (x[2], x[3]), ...]`.  `x.len()` must be even.  This is the rfft
+/// even-length pack: a real row reinterpreted as a half-length complex
+/// signal.
+pub fn widen_f32_pairs(lv: Level, x: &[f32], out: &mut Vec<C64>) {
+    debug_assert_eq!(x.len() % 2, 0);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if lv == Level::Avx2 {
+        unsafe { widen_avx2(x, out) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if lv == Level::Neon {
+        unsafe { widen_neon(x, out) };
+        return;
+    }
+    let _ = lv;
+    out.extend(x.chunks_exact(2).map(|c| C64::new(c[0] as f64, c[1] as f64)));
+}
+
+/// Narrow a complex slice to interleaved f32: `out += [re0, im0, re1,
+/// im1, ...]`.  Used both for packing kept spectrum rows to the wire
+/// and for emitting the irfft's (even, odd) sample pairs.
+pub fn narrow_c64(lv: Level, src: &[C64], out: &mut Vec<f32>) {
+    let old = out.len();
+    out.resize(old + 2 * src.len(), 0.0);
+    narrow_c64_slice(lv, src, &mut out[old..]);
+}
+
+/// [`narrow_c64`] into a caller-owned slice (`dst.len() == 2 *
+/// src.len()`).
+pub fn narrow_c64_slice(lv: Level, src: &[C64], dst: &mut [f32]) {
+    debug_assert_eq!(dst.len(), 2 * src.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if lv == Level::Avx2 {
+        unsafe { narrow_avx2(src, dst) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if lv == Level::Neon {
+        unsafe { narrow_neon(src, dst) };
+        return;
+    }
+    let _ = lv;
+    for (c, d) in src.iter().zip(dst.chunks_exact_mut(2)) {
+        d[0] = c.re as f32;
+        d[1] = c.im as f32;
+    }
+}
+
+/// `out += [a[0], b[0], a[1], b[1], ...]` (pack of a full spectrum
+/// row's separate re/im planes).
+pub fn interleave_f32(lv: Level, a: &[f32], b: &[f32], out: &mut Vec<f32>) {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if lv == Level::Avx2 {
+        unsafe { interleave_avx2(a, b, out) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if lv == Level::Neon {
+        unsafe { interleave_neon(a, b, out) };
+        return;
+    }
+    let _ = lv;
+    for (x, y) in a.iter().zip(b.iter()) {
+        out.push(*x);
+        out.push(*y);
+    }
+}
+
+/// Inverse of [`interleave_f32`]: split `src` (length `2n`) into its
+/// even elements (`a`) and odd elements (`b`), each length `n`.
+pub fn deinterleave_f32(lv: Level, src: &[f32], a: &mut [f32],
+                        b: &mut [f32]) {
+    debug_assert_eq!(src.len(), a.len() + b.len());
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if lv == Level::Avx2 {
+        unsafe { deinterleave_avx2(src, a, b) };
+        return;
+    }
+    let _ = lv;
+    for (c, (x, y)) in src.chunks_exact(2).zip(a.iter_mut().zip(b.iter_mut())) {
+        *x = c[0];
+        *y = c[1];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// int8 quantization kernels
+// ---------------------------------------------------------------------------
+
+/// Per-block absolute maximum (`fold(0.0, |m, v| m.max(v.abs()))`).
+/// max is order-independent over finite floats, so the tree reduction
+/// matches the scalar fold exactly.
+pub fn absmax(lv: Level, x: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if lv == Level::Avx2 {
+        return unsafe { absmax_avx2(x) };
+    }
+    let _ = lv;
+    x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+/// Quantize `x` to int8 at the hoisted reciprocal scale:
+/// `(v * inv).round().clamp(-127.0, 127.0) as i8`, appended as raw
+/// bytes.  Inputs must be finite (activation values always are); the
+/// vector body's tie handling is pinned to Rust's half-away-from-zero
+/// `round`, see module docs.
+pub fn quantize_i8(lv: Level, x: &[f32], inv: f32, out: &mut Vec<u8>) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if lv == Level::Avx2 {
+        unsafe { quantize_avx2(x, inv, out) };
+        return;
+    }
+    let _ = lv;
+    quantize_scalar(x, inv, out);
+}
+
+fn quantize_scalar(x: &[f32], inv: f32, out: &mut Vec<u8>) {
+    for &v in x {
+        let q = (v * inv).round().clamp(-127.0, 127.0) as i8;
+        out.push(q as u8);
+    }
+}
+
+/// Dequantize raw int8 bytes: `out += q as i8 as f32 * scale`.
+pub fn dequantize_i8(lv: Level, q: &[u8], scale: f32, out: &mut Vec<f32>) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if lv == Level::Avx2 {
+        unsafe { dequantize_avx2(q, scale, out) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if lv == Level::Neon {
+        unsafe { dequantize_neon(q, scale, out) };
+        return;
+    }
+    let _ = lv;
+    out.extend(q.iter().map(|&b| (b as i8) as f32 * scale));
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 bodies
+// ---------------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use super::C64;
+    use std::arch::x86_64::*;
+
+    /// Complex multiply of two ymm registers each holding two (re, im)
+    /// f64 pairs, with the scalar operator's exact rounding:
+    /// `re = ar*br - ai*bi; im = ai*br + ar*bi` (mul, mul, addsub).
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn cmul2(a: __m256d, b: __m256d) -> __m256d {
+        let br = _mm256_movedup_pd(b); // [br0, br0, br1, br1]
+        let bi = _mm256_permute_pd::<0b1111>(b); // [bi0, bi0, bi1, bi1]
+        let asw = _mm256_permute_pd::<0b0101>(a); // [ai0, ar0, ai1, ar1]
+        // addsub([ar*br, ai*br], [ai*bi, ar*bi])
+        //   -> [ar*br - ai*bi, ai*br + ar*bi]
+        _mm256_addsub_pd(_mm256_mul_pd(a, br), _mm256_mul_pd(asw, bi))
+    }
+
+    /// Butterfly stages of a radix-2 FFT (after bit-reversal).  Two
+    /// butterflies per iteration; for n >= 4 every stage's half-count
+    /// is even or the stage is the adjacent-pair stage, so there is no
+    /// scalar tail.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn butterflies_avx2(data: &mut [C64], twiddles: &[C64]) {
+        let n = data.len();
+        if n < 4 {
+            super::butterflies_scalar(data, twiddles);
+            return;
+        }
+        let p = data.as_mut_ptr() as *mut f64;
+        let tp = twiddles.as_ptr() as *const f64;
+
+        // stage len == 2: adjacent (u, v) pairs; two butterflies span
+        // two ymm loads.  The twiddle is (1.0, -0.0) but the multiply
+        // still runs — see module docs on signed zeros.
+        let tw0r = _mm256_set1_pd(twiddles[0].re);
+        let tw0i = _mm256_set1_pd(twiddles[0].im);
+        let mut i = 0;
+        while i < n {
+            let y0 = _mm256_loadu_pd(p.add(2 * i)); // [u0, v0]
+            let y1 = _mm256_loadu_pd(p.add(2 * i + 4)); // [u1, v1]
+            let u = _mm256_permute2f128_pd::<0x20>(y0, y1); // [u0, u1]
+            let v = _mm256_permute2f128_pd::<0x31>(y0, y1); // [v0, v1]
+            let vsw = _mm256_permute_pd::<0b0101>(v);
+            let prod = _mm256_addsub_pd(_mm256_mul_pd(v, tw0r),
+                                        _mm256_mul_pd(vsw, tw0i));
+            let s = _mm256_add_pd(u, prod);
+            let d = _mm256_sub_pd(u, prod);
+            _mm256_storeu_pd(p.add(2 * i),
+                             _mm256_permute2f128_pd::<0x20>(s, d));
+            _mm256_storeu_pd(p.add(2 * i + 4),
+                             _mm256_permute2f128_pd::<0x31>(s, d));
+            i += 4;
+        }
+
+        // stages len >= 4: half >= 2, so the 2-wide kernel tiles the
+        // k-loop exactly.
+        let mut len = 4usize;
+        let mut toff = 1usize; // past the len-2 stage's single twiddle
+        while len <= n {
+            let half = len / 2;
+            let mut base = 0;
+            while base < n {
+                let mut k = 0;
+                while k < half {
+                    let ui = 2 * (base + k);
+                    let vi = 2 * (base + k + half);
+                    let u = _mm256_loadu_pd(p.add(ui));
+                    let v = _mm256_loadu_pd(p.add(vi));
+                    let t = _mm256_loadu_pd(tp.add(2 * (toff + k)));
+                    let prod = cmul2(v, t);
+                    _mm256_storeu_pd(p.add(ui), _mm256_add_pd(u, prod));
+                    _mm256_storeu_pd(p.add(vi), _mm256_sub_pd(u, prod));
+                    k += 2;
+                }
+                base += len;
+            }
+            toff += half;
+            len <<= 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn cmul_avx2(a: &mut [C64], b: &[C64]) {
+        let n = a.len();
+        let pa = a.as_mut_ptr() as *mut f64;
+        let pb = b.as_ptr() as *const f64;
+        let mut i = 0;
+        while i + 2 <= n {
+            let va = _mm256_loadu_pd(pa.add(2 * i));
+            let vb = _mm256_loadu_pd(pb.add(2 * i));
+            _mm256_storeu_pd(pa.add(2 * i), cmul2(va, vb));
+            i += 2;
+        }
+        if i < n {
+            a[i] = a[i] * b[i];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn conj_avx2(data: &mut [C64]) {
+        let n = data.len();
+        let p = data.as_mut_ptr() as *mut f64;
+        let flip = _mm256_setr_pd(0.0, -0.0, 0.0, -0.0);
+        let mut i = 0;
+        while i + 2 <= n {
+            let v = _mm256_loadu_pd(p.add(2 * i));
+            _mm256_storeu_pd(p.add(2 * i), _mm256_xor_pd(v, flip));
+            i += 2;
+        }
+        if i < n {
+            data[i] = data[i].conj();
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn conj_scale_avx2(data: &mut [C64], k: f64) {
+        let n = data.len();
+        let p = data.as_mut_ptr() as *mut f64;
+        let flip = _mm256_setr_pd(0.0, -0.0, 0.0, -0.0);
+        let vk = _mm256_set1_pd(k);
+        let mut i = 0;
+        while i + 2 <= n {
+            let v = _mm256_loadu_pd(p.add(2 * i));
+            let c = _mm256_xor_pd(v, flip);
+            _mm256_storeu_pd(p.add(2 * i), _mm256_mul_pd(c, vk));
+            i += 2;
+        }
+        if i < n {
+            data[i] = data[i].conj().scale(k);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn widen_avx2(x: &[f32], out: &mut Vec<C64>) {
+        let m = x.len() / 2; // complex count
+        let old = out.len();
+        out.reserve(m);
+        let dst = (out.as_mut_ptr().add(old)) as *mut f64;
+        let src = x.as_ptr();
+        let mut i = 0; // f32 index
+        while i + 4 <= x.len() {
+            let v = _mm_loadu_ps(src.add(i));
+            _mm256_storeu_pd(dst.add(i), _mm256_cvtps_pd(v));
+            i += 4;
+        }
+        while i < x.len() {
+            *dst.add(i) = *src.add(i) as f64;
+            i += 1;
+        }
+        out.set_len(old + m);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn narrow_avx2(src: &[C64], dst: &mut [f32]) {
+        let total = 2 * src.len(); // f64 count
+        let sp = src.as_ptr() as *const f64;
+        let dp = dst.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= total {
+            let v = _mm256_loadu_pd(sp.add(i));
+            _mm_storeu_ps(dp.add(i), _mm256_cvtpd_ps(v));
+            i += 4;
+        }
+        while i < total {
+            *dp.add(i) = *sp.add(i) as f32;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn interleave_avx2(a: &[f32], b: &[f32], out: &mut Vec<f32>) {
+        let n = a.len();
+        let old = out.len();
+        out.reserve(2 * n);
+        let dst = out.as_mut_ptr().add(old);
+        let mut i = 0;
+        while i + 8 <= n {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            let lo = _mm256_unpacklo_ps(va, vb); // [a0 b0 a1 b1 | a4 b4 a5 b5]
+            let hi = _mm256_unpackhi_ps(va, vb); // [a2 b2 a3 b3 | a6 b6 a7 b7]
+            _mm256_storeu_ps(dst.add(2 * i),
+                             _mm256_permute2f128_ps::<0x20>(lo, hi));
+            _mm256_storeu_ps(dst.add(2 * i + 8),
+                             _mm256_permute2f128_ps::<0x31>(lo, hi));
+            i += 8;
+        }
+        while i < n {
+            *dst.add(2 * i) = a[i];
+            *dst.add(2 * i + 1) = b[i];
+            i += 1;
+        }
+        out.set_len(old + 2 * n);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn deinterleave_avx2(src: &[f32], a: &mut [f32],
+                                    b: &mut [f32]) {
+        let n = a.len();
+        let sp = src.as_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v0 = _mm256_loadu_ps(sp.add(2 * i)); // [a0 b0 .. a3 b3]
+            let v1 = _mm256_loadu_ps(sp.add(2 * i + 8)); // [a4 b4 .. a7 b7]
+            // gather even (a) / odd (b) slots, then fix lane order
+            let sa = _mm256_castpd_ps(_mm256_permute4x64_pd::<0b11_01_10_00>(
+                _mm256_castps_pd(_mm256_shuffle_ps::<0b10_00_10_00>(v0, v1)),
+            ));
+            let sb = _mm256_castpd_ps(_mm256_permute4x64_pd::<0b11_01_10_00>(
+                _mm256_castps_pd(_mm256_shuffle_ps::<0b11_01_11_01>(v0, v1)),
+            ));
+            _mm256_storeu_ps(a.as_mut_ptr().add(i), sa);
+            _mm256_storeu_ps(b.as_mut_ptr().add(i), sb);
+            i += 8;
+        }
+        while i < n {
+            a[i] = *sp.add(2 * i);
+            b[i] = *sp.add(2 * i + 1);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn absmax_avx2(x: &[f32]) -> f32 {
+        let abs_mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= x.len() {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            acc = _mm256_max_ps(acc, _mm256_and_ps(v, abs_mask));
+            i += 8;
+        }
+        // horizontal max of the accumulator
+        let lo = _mm256_castps256_ps128(acc);
+        let hi = _mm256_extractf128_ps::<1>(acc);
+        let m4 = _mm_max_ps(lo, hi);
+        let m2 = _mm_max_ps(m4, _mm_movehl_ps(m4, m4));
+        let m1 = _mm_max_ss(m2, _mm_shuffle_ps::<0b01>(m2, m2));
+        let mut m = _mm_cvtss_f32(m1);
+        while i < x.len() {
+            m = m.max(x[i].abs());
+            i += 1;
+        }
+        m
+    }
+
+    /// `(v * inv).round().clamp(-127.0, 127.0) as i8` for 16 lanes per
+    /// iteration.  `round` (half away from zero) is emulated as
+    /// truncate + adjust: `x - trunc(x)` is exact (Sterbenz), so the
+    /// `|frac| >= 0.5` tie test and the `±1` step reproduce the scalar
+    /// result bit-for-bit on finite input.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_avx2(x: &[f32], inv: f32, out: &mut Vec<u8>) {
+        let n = x.len();
+        let old = out.len();
+        out.reserve(n);
+        let dst = out.as_mut_ptr().add(old);
+        let vinv = _mm256_set1_ps(inv);
+        let abs_mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+        let sign_mask = _mm256_castsi256_ps(_mm256_set1_epi32(u32::MAX as i32 ^ 0x7FFF_FFFF));
+        let one = _mm256_set1_ps(1.0);
+        let half = _mm256_set1_ps(0.5);
+        let lim_hi = _mm256_set1_ps(127.0);
+        let lim_lo = _mm256_set1_ps(-127.0);
+
+        #[target_feature(enable = "avx2")]
+        #[inline]
+        unsafe fn round8(x: __m256, abs_mask: __m256, sign_mask: __m256,
+                         one: __m256, half: __m256, lim_lo: __m256,
+                         lim_hi: __m256) -> __m256i {
+            let t = _mm256_round_ps::<{ _MM_FROUND_TO_ZERO
+                | _MM_FROUND_NO_EXC }>(x);
+            let frac = _mm256_sub_ps(x, t);
+            let tie = _mm256_cmp_ps::<_CMP_GE_OQ>(
+                _mm256_and_ps(frac, abs_mask), half);
+            let step = _mm256_or_ps(_mm256_and_ps(x, sign_mask), one);
+            let r = _mm256_add_ps(t, _mm256_and_ps(tie, step));
+            let c = _mm256_max_ps(_mm256_min_ps(r, lim_hi), lim_lo);
+            _mm256_cvtps_epi32(c) // integral input: exact
+        }
+
+        let mut i = 0;
+        while i + 16 <= n {
+            let x0 = _mm256_mul_ps(_mm256_loadu_ps(x.as_ptr().add(i)), vinv);
+            let x1 = _mm256_mul_ps(_mm256_loadu_ps(x.as_ptr().add(i + 8)),
+                                   vinv);
+            let q0 = round8(x0, abs_mask, sign_mask, one, half, lim_lo, lim_hi);
+            let q1 = round8(x1, abs_mask, sign_mask, one, half, lim_lo, lim_hi);
+            // i32x16 -> ordered i16x16 -> ordered i8x16
+            let p16 = _mm256_permute4x64_epi64::<0b11_01_10_00>(
+                _mm256_packs_epi32(q0, q1));
+            let p8 = _mm_packs_epi16(_mm256_castsi256_si128(p16),
+                                     _mm256_extracti128_si256::<1>(p16));
+            _mm_storeu_si128(dst.add(i) as *mut __m128i, p8);
+            i += 16;
+        }
+        while i < n {
+            let q = (x[i] * inv).round().clamp(-127.0, 127.0) as i8;
+            *dst.add(i) = q as u8;
+            i += 1;
+        }
+        out.set_len(old + n);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequantize_avx2(q: &[u8], scale: f32, out: &mut Vec<f32>) {
+        let n = q.len();
+        let old = out.len();
+        out.reserve(n);
+        let dst = out.as_mut_ptr().add(old);
+        let vs = _mm256_set1_ps(scale);
+        let mut i = 0;
+        while i + 16 <= n {
+            let bytes = _mm_loadu_si128(q.as_ptr().add(i) as *const __m128i);
+            let lo = _mm256_cvtepi8_epi32(bytes);
+            let hi = _mm256_cvtepi8_epi32(_mm_srli_si128::<8>(bytes));
+            _mm256_storeu_ps(dst.add(i),
+                             _mm256_mul_ps(_mm256_cvtepi32_ps(lo), vs));
+            _mm256_storeu_ps(dst.add(i + 8),
+                             _mm256_mul_ps(_mm256_cvtepi32_ps(hi), vs));
+            i += 16;
+        }
+        while i < n {
+            *dst.add(i) = (q[i] as i8) as f32 * scale;
+            i += 1;
+        }
+        out.set_len(old + n);
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+use avx2::*;
+
+// ---------------------------------------------------------------------------
+// NEON bodies (f32 move/convert kernels only — see module docs)
+// ---------------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    use super::C64;
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn widen_neon(x: &[f32], out: &mut Vec<C64>) {
+        let m = x.len() / 2;
+        let old = out.len();
+        out.reserve(m);
+        let dst = (out.as_mut_ptr().add(old)) as *mut f64;
+        let mut i = 0;
+        while i + 4 <= x.len() {
+            let v = vld1q_f32(x.as_ptr().add(i));
+            vst1q_f64(dst.add(i), vcvt_f64_f32(vget_low_f32(v)));
+            vst1q_f64(dst.add(i + 2), vcvt_high_f64_f32(v));
+            i += 4;
+        }
+        while i < x.len() {
+            *dst.add(i) = x[i] as f64;
+            i += 1;
+        }
+        out.set_len(old + m);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn narrow_neon(src: &[C64], dst: &mut [f32]) {
+        let total = 2 * src.len();
+        let sp = src.as_ptr() as *const f64;
+        let dp = dst.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= total {
+            let lo = vcvt_f32_f64(vld1q_f64(sp.add(i)));
+            let hi = vcvt_f32_f64(vld1q_f64(sp.add(i + 2)));
+            vst1q_f32(dp.add(i), vcombine_f32(lo, hi));
+            i += 4;
+        }
+        while i < total {
+            *dp.add(i) = *sp.add(i) as f32;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn interleave_neon(a: &[f32], b: &[f32], out: &mut Vec<f32>) {
+        let n = a.len();
+        let old = out.len();
+        out.reserve(2 * n);
+        let dst = out.as_mut_ptr().add(old);
+        let mut i = 0;
+        while i + 4 <= n {
+            let va = vld1q_f32(a.as_ptr().add(i));
+            let vb = vld1q_f32(b.as_ptr().add(i));
+            vst1q_f32(dst.add(2 * i), vzip1q_f32(va, vb));
+            vst1q_f32(dst.add(2 * i + 4), vzip2q_f32(va, vb));
+            i += 4;
+        }
+        while i < n {
+            *dst.add(2 * i) = a[i];
+            *dst.add(2 * i + 1) = b[i];
+            i += 1;
+        }
+        out.set_len(old + 2 * n);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dequantize_neon(q: &[u8], scale: f32, out: &mut Vec<f32>) {
+        let n = q.len();
+        let old = out.len();
+        out.reserve(n);
+        let dst = out.as_mut_ptr().add(old);
+        let mut i = 0;
+        while i + 8 <= n {
+            let bytes = vld1_s8(q.as_ptr().add(i) as *const i8);
+            let w = vmovl_s8(bytes); // i16x8
+            let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(w)));
+            let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(w)));
+            vst1q_f32(dst.add(i), vmulq_n_f32(lo, scale));
+            vst1q_f32(dst.add(i + 4), vmulq_n_f32(hi, scale));
+            i += 8;
+        }
+        while i < n {
+            *dst.add(i) = (q[i] as i8) as f32 * scale;
+            i += 1;
+        }
+        out.set_len(old + n);
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+use neon::*;
+
+// ---------------------------------------------------------------------------
+// parity tests — every vector body against its scalar twin
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The non-scalar level under test, if this build/CPU has one.
+    fn vector_level() -> Option<Level> {
+        match detect() {
+            Level::Scalar => None,
+            lv => Some(lv),
+        }
+    }
+
+    fn rand_c64(n: usize, seed: u64) -> Vec<C64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+    }
+
+    fn rand_f32(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn bits(c: &[C64]) -> Vec<(u64, u64)> {
+        c.iter().map(|v| (v.re.to_bits(), v.im.to_bits())).collect()
+    }
+
+    #[test]
+    fn detect_is_scalar_without_feature() {
+        if cfg!(not(feature = "simd")) {
+            assert_eq!(detect(), Level::Scalar);
+        }
+    }
+
+    #[test]
+    fn butterflies_bit_parity() {
+        let Some(lv) = vector_level() else { return };
+        for n in [2usize, 4, 8, 64, 256, 1024] {
+            let plan = crate::dsp::fft::FftPlan::new(n);
+            let x = rand_c64(n, n as u64);
+            let mut a = x.clone();
+            let mut b = x.clone();
+            plan.forward_with(Level::Scalar, &mut a);
+            plan.forward_with(lv, &mut b);
+            assert_eq!(bits(&a), bits(&b), "forward n={n}");
+            plan.inverse_with(Level::Scalar, &mut a);
+            plan.inverse_with(lv, &mut b);
+            assert_eq!(bits(&a), bits(&b), "inverse n={n}");
+        }
+    }
+
+    #[test]
+    fn bluestein_bit_parity() {
+        let Some(lv) = vector_level() else { return };
+        for n in [3usize, 31, 100, 255] {
+            let plan = crate::dsp::fft::FftPlan::new(n);
+            let x = rand_c64(n, 7 + n as u64);
+            let mut a = x.clone();
+            let mut b = x.clone();
+            plan.forward_with(Level::Scalar, &mut a);
+            plan.forward_with(lv, &mut b);
+            assert_eq!(bits(&a), bits(&b), "bluestein n={n}");
+        }
+    }
+
+    #[test]
+    fn cmul_conj_parity() {
+        let Some(lv) = vector_level() else { return };
+        for n in [1usize, 2, 3, 17, 64] {
+            let a0 = rand_c64(n, 1 + n as u64);
+            let b = rand_c64(n, 2 + n as u64);
+            let mut s = a0.clone();
+            let mut v = a0.clone();
+            cmul_in_place(Level::Scalar, &mut s, &b);
+            cmul_in_place(lv, &mut v, &b);
+            assert_eq!(bits(&s), bits(&v), "cmul n={n}");
+
+            let mut s = a0.clone();
+            let mut v = a0.clone();
+            conj_in_place(Level::Scalar, &mut s);
+            conj_in_place(lv, &mut v);
+            assert_eq!(bits(&s), bits(&v), "conj n={n}");
+
+            let mut s = a0.clone();
+            let mut v = a0.clone();
+            conj_scale_in_place(Level::Scalar, &mut s, 1.0 / n as f64);
+            conj_scale_in_place(lv, &mut v, 1.0 / n as f64);
+            assert_eq!(bits(&s), bits(&v), "conj_scale n={n}");
+        }
+    }
+
+    #[test]
+    fn move_convert_parity() {
+        let Some(lv) = vector_level() else { return };
+        for n in [0usize, 1, 2, 7, 8, 9, 31, 64] {
+            let a = rand_f32(n, 3 + n as u64);
+            let b = rand_f32(n, 4 + n as u64);
+            let (mut s, mut v) = (vec![99.0f32], vec![99.0f32]);
+            interleave_f32(Level::Scalar, &a, &b, &mut s);
+            interleave_f32(lv, &a, &b, &mut v);
+            assert_eq!(s, v, "interleave n={n}");
+
+            let src = s;
+            let mut sa = vec![0.0f32; n];
+            let mut sb = vec![0.0f32; n];
+            let mut va = vec![0.0f32; n];
+            let mut vb = vec![0.0f32; n];
+            deinterleave_f32(Level::Scalar, &src[1..], &mut sa, &mut sb);
+            deinterleave_f32(lv, &src[1..], &mut va, &mut vb);
+            assert_eq!((sa.clone(), sb.clone()), (va, vb), "deinterleave");
+            assert_eq!((sa, sb), (a.clone(), b.clone()), "roundtrip");
+
+            let pairs = rand_f32(2 * n, 5 + n as u64);
+            let (mut s, mut v) = (Vec::new(), Vec::new());
+            widen_f32_pairs(Level::Scalar, &pairs, &mut s);
+            widen_f32_pairs(lv, &pairs, &mut v);
+            assert_eq!(bits(&s), bits(&v), "widen n={n}");
+
+            let c = rand_c64(n, 6 + n as u64);
+            let (mut s, mut v) = (vec![1.0f32], vec![1.0f32]);
+            narrow_c64(Level::Scalar, &c, &mut s);
+            narrow_c64(lv, &c, &mut v);
+            assert_eq!(
+                s.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "narrow n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantize_parity_including_ties() {
+        let Some(lv) = vector_level() else { return };
+        let mut rng = Rng::new(99);
+        // random values plus adversarial tie/edge cases
+        let mut x: Vec<f32> =
+            (0..300).map(|_| (rng.normal() * 60.0) as f32).collect();
+        x.extend_from_slice(&[
+            0.5, -0.5, 1.5, -1.5, 2.5, -2.5, 126.5, -126.5, 127.49, -127.49,
+            300.0, -300.0, 0.0, -0.0, 0.499_999_97, -0.499_999_97,
+            0.500_000_06, -0.500_000_06,
+        ]);
+        for inv in [1.0f32, 0.37, 119.3] {
+            let (mut s, mut v) = (vec![7u8], vec![7u8]);
+            quantize_i8(Level::Scalar, &x, inv, &mut s);
+            quantize_i8(lv, &x, inv, &mut v);
+            assert_eq!(s, v, "quantize inv={inv}");
+        }
+        let q: Vec<u8> = (0..=255u32).map(|b| b as u8).collect();
+        for scale in [1.0f32, 0.031_25, 3.7e-3] {
+            let (mut s, mut v) = (vec![0.0f32], vec![0.0f32]);
+            dequantize_i8(Level::Scalar, &q, scale, &mut s);
+            dequantize_i8(lv, &q, scale, &mut v);
+            assert_eq!(
+                s.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "dequantize scale={scale}"
+            );
+        }
+    }
+
+    #[test]
+    fn absmax_parity() {
+        let Some(lv) = vector_level() else { return };
+        for n in [0usize, 1, 7, 8, 9, 64, 100] {
+            let x = rand_f32(n, 11 + n as u64);
+            let s = absmax(Level::Scalar, &x);
+            let v = absmax(lv, &x);
+            assert_eq!(s.to_bits(), v.to_bits(), "absmax n={n}");
+        }
+    }
+}

@@ -5,15 +5,18 @@
 //! properties the adaptive serving stack leans on.  Everything is
 //! deterministic: a failure reproduces from its printed case index.
 
-use fourier_compress::codec::fourier::{pack_block, unpack_block,
+use fourier_compress::codec::fourier::{pack_block, pack_block_into,
+                                       unpack_block, unpack_block_into,
                                        FourierCodec};
+use fourier_compress::codec::quant::Int8Codec;
 use fourier_compress::codec::rate::{validate_ladder, LadderPoint, RateConfig,
                                     RateController};
 use fourier_compress::codec::stream::{fc_payload, BlockGeom, StreamConfig,
                                       StreamDecoder, StreamEncoder,
                                       StreamStep};
 use fourier_compress::codec::{rel_error, valid_block_axis, Codec,
-                              CodecEngine};
+                              CodecEngine, Payload};
+use fourier_compress::tensor::MatView;
 use fourier_compress::coordinator::protocol::Frame;
 use fourier_compress::testkit::{band_limited_act, bucket_ladder, ForgeSpec};
 use fourier_compress::util::rng::Rng;
@@ -224,6 +227,72 @@ fn stream_drift_never_exceeds_threshold() {
             assert!(err <= thr * 1.02 + 1e-6,
                     "case {case} step {step}: recon drift {err} > {thr}");
         }
+    }
+}
+
+/// Property: the vectorized kernel path and the scalar reference path
+/// are *byte-identical* — same fc wire payloads, bit-equal
+/// reconstructions, bit-equal pack/unpack planes, same int8 bytes —
+/// over random geometries (radix-2 and Bluestein axis lengths alike).
+/// This is the `simd` feature's parity contract: enabling it may only
+/// change speed, never a single wire or output bit.  On a build
+/// without the feature both engines dispatch the scalar path and the
+/// test degenerates to a determinism check, so it is valid under
+/// either feature configuration.
+#[test]
+fn simd_and_scalar_paths_are_byte_identical_over_random_geometries() {
+    let codec = FourierCodec::default();
+    let int8 = Int8Codec::default();
+    let mut fast = CodecEngine::new(); // process-detected level
+    let mut slow = CodecEngine::new();
+    slow.set_simd_enabled(false);
+    let mut rng = Rng::new(0x9E05);
+    let (mut pf, mut ps) = (Payload::empty(), Payload::empty());
+    let (mut of, mut os) = (Vec::new(), Vec::new());
+    let (mut rf, mut xf) = (Vec::new(), Vec::new());
+    let (mut rs, mut xs) = (Vec::new(), Vec::new());
+    let (mut kf, mut ks_) = (Vec::new(), Vec::new());
+    for case in 0..300 {
+        let rows = 1 + rng.below(40);
+        let cols = 1 + rng.below(48);
+        let ks = rand_axis(&mut rng, rows);
+        let kd = rand_axis(&mut rng, cols);
+        let a: Vec<f32> =
+            (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let view = MatView::new(&a, rows, cols);
+
+        // fc: compressed wire bytes and reconstructed bits
+        codec.compress_block_into(&mut fast, view, ks, kd, &mut pf).unwrap();
+        codec.compress_block_into(&mut slow, view, ks, kd, &mut ps).unwrap();
+        assert_eq!(pf, ps,
+                   "case {case} ({rows}x{cols} block {ks}x{kd}): \
+                    fc payload bytes diverge");
+        codec.decompress_into(&mut fast, &pf, &mut of).unwrap();
+        codec.decompress_into(&mut slow, &ps, &mut os).unwrap();
+        assert_eq!(bits(&of), bits(&os),
+                   "case {case}: fc reconstruction bits diverge");
+
+        // wire transform: unpack then re-pack arbitrary packed floats
+        let n = ks * kd;
+        let packed: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        unpack_block_into(&mut fast, &packed, rows, cols, ks, kd, &mut rf,
+                          &mut xf).unwrap();
+        unpack_block_into(&mut slow, &packed, rows, cols, ks, kd, &mut rs,
+                          &mut xs).unwrap();
+        assert_eq!(bits(&rf), bits(&rs), "case {case}: unpack re diverges");
+        assert_eq!(bits(&xf), bits(&xs), "case {case}: unpack im diverges");
+        pack_block_into(&mut fast, &rf, &xf, rows, cols, ks, kd, &mut kf);
+        pack_block_into(&mut slow, &rs, &xs, rows, cols, ks, kd, &mut ks_);
+        assert_eq!(bits(&kf), bits(&ks_), "case {case}: pack diverges");
+
+        // int8: quantized bytes and dequantized bits
+        int8.compress_into(&mut fast, view, 4.0, &mut pf).unwrap();
+        int8.compress_into(&mut slow, view, 4.0, &mut ps).unwrap();
+        assert_eq!(pf, ps, "case {case}: int8 payload bytes diverge");
+        int8.decompress_into(&mut fast, &pf, &mut of).unwrap();
+        int8.decompress_into(&mut slow, &ps, &mut os).unwrap();
+        assert_eq!(bits(&of), bits(&os),
+                   "case {case}: int8 dequantized bits diverge");
     }
 }
 
