@@ -1,0 +1,160 @@
+//! Serving-core scale bench: drive the sharded, event-driven service
+//! (poll pool + BatchFeed + compute workers) with rungs of 128 / 1k /
+//! 4k concurrent in-proc sessions, all pipelined through the
+//! split-phase client (`step_send` / `step_recv`), and measure p50 /
+//! p99 step latency plus aggregate tokens/sec per rung.
+//!
+//! The hard assertion is the scaling contract: between consecutive
+//! rungs, aggregate throughput must not degrade super-linearly with
+//! session count — `tput(hi) >= tput(lo) / (hi_sessions /
+//! lo_sessions)`.  A serving core whose per-step cost grows with the
+//! number of *registered* sessions (global lock, per-connection
+//! threads thrashing the scheduler) fails this immediately at the 4k
+//! rung.  Writes BENCH_scale.json for the CI smoke step.
+//!
+//!     cargo bench --bench scale_bench            # 128 / 1024 / 4096
+//!     cargo bench --bench scale_bench -- --smoke # CI-sized rungs
+
+use fourier_compress::config::{FromJson, ServeConfig};
+use fourier_compress::coordinator::{start_service, DeviceClient};
+use fourier_compress::model::tokenizer;
+use fourier_compress::testkit::forged_store;
+use fourier_compress::util::json::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+const DRIVERS: usize = 32;
+const STEPS: usize = 3;
+const PROMPT: &str = "Q rok ? A";
+
+struct Rung {
+    sessions: usize,
+    p50_ms: f64,
+    p99_ms: f64,
+    tokens_per_sec: f64,
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+fn run_rung(store: &Arc<fourier_compress::runtime::ArtifactStore>,
+            sessions: usize) -> Rung {
+    let cfg = ServeConfig::load(None, &[
+        "listen=127.0.0.1:0".to_string(),
+        format!("artifacts={}", store.root.display()),
+        "max_batch=16".into(),
+        "batch_deadline_us=200".into(),
+        "compute_units=2".into(),
+        "shards=8".into(),
+        "poll_workers=4".into(),
+        "idle_deadline_ms=0".into(),
+    ]).unwrap();
+    let handle = start_service(&cfg, store.clone()).expect("service");
+
+    let per_driver = sessions / DRIVERS;
+    assert!(per_driver >= 1, "rung {sessions} smaller than driver pool");
+
+    // connect everything first: the rung measures steady-state decode
+    // with all `sessions` connections registered with the poll pool
+    let t_all = Instant::now();
+    let lat_chunks: Vec<Vec<f64>> = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for d in 0..DRIVERS {
+            let handle = &handle;
+            joins.push(scope.spawn(move || {
+                let mut clients: Vec<(DeviceClient, Vec<i32>)> =
+                    (0..per_driver)
+                        .map(|i| {
+                            let sid = 1 + (d * per_driver + i) as u64;
+                            let c = DeviceClient::connect_over(
+                                Box::new(handle.connect_inproc()),
+                                store, sid)
+                                .expect("connect");
+                            (c, tokenizer::encode_prompt(PROMPT))
+                        })
+                        .collect();
+                let mut lats = Vec::with_capacity(per_driver * STEPS);
+                for _ in 0..STEPS {
+                    let mut inflight = Vec::with_capacity(per_driver);
+                    for (c, ctx) in clients.iter_mut() {
+                        let t0 = Instant::now();
+                        let req = c.step_send(&ctx[..]).expect("step_send");
+                        inflight.push((req, t0));
+                    }
+                    for (slot, (req, t0)) in inflight.into_iter().enumerate() {
+                        let (c, ctx) = &mut clients[slot];
+                        let (token, _) = c.step_recv(req).expect("step_recv");
+                        lats.push(t0.elapsed().as_secs_f64() * 1e3);
+                        ctx.push(token);
+                    }
+                }
+                for (mut c, _) in clients {
+                    c.bye().expect("bye");
+                }
+                lats
+            }));
+        }
+        joins.into_iter().map(|j| j.join().expect("driver")).collect()
+    });
+    let wall_s = t_all.elapsed().as_secs_f64();
+    handle.shutdown();
+
+    let mut lats: Vec<f64> = lat_chunks.into_iter().flatten().collect();
+    assert_eq!(lats.len(), per_driver * DRIVERS * STEPS);
+    lats.sort_by(|a, b| a.total_cmp(b));
+    Rung {
+        sessions: per_driver * DRIVERS,
+        p50_ms: percentile(&lats, 0.50),
+        p99_ms: percentile(&lats, 0.99),
+        tokens_per_sec: lats.len() as f64 / wall_s,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let rungs: &[usize] = if smoke { &[128, 512] } else { &[128, 1024, 4096] };
+
+    let store = Arc::new(forged_store("scale_bench").expect("forge artifacts"));
+    let mut results = Vec::new();
+    for &n in rungs {
+        let r = run_rung(&store, n);
+        println!("{:>5} sessions: p50 {:.3} ms  p99 {:.3} ms  {:.0} tok/s",
+                 r.sessions, r.p50_ms, r.p99_ms, r.tokens_per_sec);
+        results.push(r);
+    }
+
+    // the scaling contract: growing the session count by Gx may cost
+    // at most Gx in aggregate throughput (i.e. per-session throughput
+    // degrades at worst linearly — never super-linearly)
+    for w in results.windows(2) {
+        let (lo, hi) = (&w[0], &w[1]);
+        let growth = hi.sessions as f64 / lo.sessions as f64;
+        let floor = lo.tokens_per_sec / growth;
+        assert!(hi.tokens_per_sec >= floor,
+                "super-linear degradation: {} sessions at {:.0} tok/s, but \
+                 {} sessions fell to {:.0} tok/s (floor {:.0})",
+                lo.sessions, lo.tokens_per_sec, hi.sessions,
+                hi.tokens_per_sec, floor);
+    }
+
+    let mut out = Json::obj();
+    out.set("smoke", Json::Bool(smoke));
+    out.set("drivers", Json::Num(DRIVERS as f64));
+    out.set("steps_per_session", Json::Num(STEPS as f64));
+    out.set("rungs", Json::Arr(results.iter().map(|r| {
+        let mut j = Json::obj();
+        j.set("sessions", Json::Num(r.sessions as f64));
+        j.set("p50_step_ms", Json::Num(r.p50_ms));
+        j.set("p99_step_ms", Json::Num(r.p99_ms));
+        j.set("tokens_per_sec", Json::Num(r.tokens_per_sec));
+        j
+    }).collect()));
+    std::fs::write("BENCH_scale.json", out.to_string_pretty())
+        .expect("write BENCH_scale.json");
+    println!("wrote BENCH_scale.json");
+}

@@ -44,6 +44,19 @@ pub struct ServeConfig {
     /// frames at non-primary ladder points — clients downgrade
     /// cleanly to the paper's fixed block.
     pub ladder: bool,
+    /// Session-table shards.  Session state is partitioned by a hash
+    /// of the session id into this many independently-locked
+    /// `SessionManager` shards, so the serving data path never takes
+    /// a global session lock.
+    pub shards: usize,
+    /// Poll-loop worker threads.  Connections are multiplexed over
+    /// this fixed pool via non-blocking `try_recv` readiness instead
+    /// of one blocking thread per connection.
+    pub poll_workers: usize,
+    /// Per-connection idle deadline in milliseconds: a connection
+    /// that sends nothing for this long is disconnected by the poll
+    /// loop (`idle_disconnects` metric).  0 disables the deadline.
+    pub idle_deadline_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -62,6 +75,9 @@ impl Default for ServeConfig {
             session_ttl_s: 300,
             stream: true,
             ladder: true,
+            shards: 8,
+            poll_workers: 4,
+            idle_deadline_ms: 30_000,
         }
     }
 }
@@ -219,6 +235,10 @@ impl FromJson for ServeConfig {
         if let Some(b) = j.get("ladder").and_then(|v| v.as_bool()) {
             self.ladder = b;
         }
+        self.shards = j.usize_or("shards", self.shards);
+        self.poll_workers = j.usize_or("poll_workers", self.poll_workers);
+        self.idle_deadline_ms =
+            j.f64_or("idle_deadline_ms", self.idle_deadline_ms as f64) as u64;
         Ok(())
     }
 
@@ -237,6 +257,9 @@ impl FromJson for ServeConfig {
             "session_ttl_s" => self.session_ttl_s = value.parse()?,
             "stream" => self.stream = value.parse()?,
             "ladder" => self.ladder = value.parse()?,
+            "shards" => self.shards = value.parse()?,
+            "poll_workers" => self.poll_workers = value.parse()?,
+            "idle_deadline_ms" => self.idle_deadline_ms = value.parse()?,
             _ => bail!("unknown ServeConfig key '{key}'"),
         }
         Ok(())
@@ -251,6 +274,12 @@ impl FromJson for ServeConfig {
         }
         if self.ratio < 1.0 {
             bail!("ratio must be >= 1");
+        }
+        if self.shards == 0 || self.shards > 1024 {
+            bail!("shards must be in 1..=1024");
+        }
+        if self.poll_workers == 0 || self.poll_workers > 256 {
+            bail!("poll_workers must be in 1..=256");
         }
         Ok(())
     }
@@ -418,6 +447,21 @@ mod tests {
         assert!(ServeConfig::load(None, &["nope=1".into()]).is_err());
         assert!(ServeConfig::load(None, &["compute_units=0".into()]).is_err());
         assert!(ServeConfig::load(None, &["malformed".into()]).is_err());
+        assert!(ServeConfig::load(None, &["shards=0".into()]).is_err());
+        assert!(ServeConfig::load(None, &["poll_workers=0".into()]).is_err());
+    }
+
+    #[test]
+    fn serving_core_knobs() {
+        let cfg = ServeConfig::default();
+        assert_eq!((cfg.shards, cfg.poll_workers, cfg.idle_deadline_ms),
+                   (8, 4, 30_000));
+        let cfg = ServeConfig::load(None, &["shards=2".into(),
+                                            "poll_workers=1".into(),
+                                            "idle_deadline_ms=0".into()])
+            .unwrap();
+        assert_eq!((cfg.shards, cfg.poll_workers, cfg.idle_deadline_ms),
+                   (2, 1, 0));
     }
 
     #[test]

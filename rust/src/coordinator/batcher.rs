@@ -3,8 +3,19 @@
 //! oldest member ages past the deadline — the standard
 //! continuous-batching policy scaled to this testbed.  A `max_batch
 //! == 1` configuration is the paper-faithful no-batching ablation.
+//!
+//! Two layers live here.  [`Batcher`] is the single-threaded policy
+//! core (unit-testable, no locks).  [`BatchFeed`] is the shared
+//! continuous feed the serving core runs on: per-bucket micro-queues
+//! behind their own mutexes so a push from one connection's poll
+//! worker never contends with a push to a different bucket, plus a
+//! condvar gate the compute workers park on.  The flush policy is
+//! identical to `Batcher` by construction (full buckets first, then
+//! deadline-expired, oldest head winning with the bucket id breaking
+//! ties) — the `feed_matches_batcher_policy` test pins that.
 
 use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// One queued request (activation already unpacked to the full block).
@@ -86,6 +97,169 @@ impl<T> Batcher<T> {
 
     pub fn queued(&self) -> usize {
         self.queues.values().map(|q| q.len()).sum()
+    }
+}
+
+/// What a compute worker gets back from [`BatchFeed::wait_take`].
+pub enum Feed<T> {
+    /// A flushable group: the bucket id and its (≤ `max_batch`) items.
+    Group(usize, Vec<Pending<T>>),
+    /// Nothing became ready within the caller's patience.
+    TimedOut,
+    /// The feed is closed and fully drained — workers should exit.
+    Closed,
+}
+
+struct Gate {
+    /// Bumped on every push/close so waiters can detect a wakeup they
+    /// raced past (scan found nothing, push landed before the park).
+    seq: u64,
+    closed: bool,
+}
+
+/// Continuous cross-connection batching feed.  One instance is shared
+/// by every poll worker (producers) and every compute worker
+/// (consumers); there is no dedicated batcher thread and no global
+/// queue lock — each bucket has its own micro-queue mutex, and the
+/// condvar gate is only touched to park/wake.
+pub struct BatchFeed<T> {
+    /// Sorted by bucket id; fixed at construction from the model's
+    /// bucket set so a push is a binary search + one bucket lock.
+    buckets: Vec<(usize, Mutex<Vec<Pending<T>>>)>,
+    max_batch: usize,
+    deadline: Duration,
+    gate: Mutex<Gate>,
+    cv: Condvar,
+}
+
+impl<T> BatchFeed<T> {
+    pub fn new(bucket_ids: &[usize], max_batch: usize, deadline: Duration) -> BatchFeed<T> {
+        let mut ids: Vec<usize> = bucket_ids.to_vec();
+        ids.sort_unstable();
+        ids.dedup();
+        BatchFeed {
+            buckets: ids.into_iter().map(|b| (b, Mutex::new(Vec::new()))).collect(),
+            max_batch: max_batch.max(1),
+            deadline,
+            gate: Mutex::new(Gate { seq: 0, closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn slot(&self, bucket: usize) -> Option<&Mutex<Vec<Pending<T>>>> {
+        self.buckets
+            .binary_search_by_key(&bucket, |(b, _)| *b)
+            .ok()
+            .map(|i| &self.buckets[i].1)
+    }
+
+    /// Enqueue into the bucket's micro-queue and wake one consumer.
+    /// Returns false (item dropped) if the bucket is unknown or the
+    /// feed is closed — the caller should fail the request, not spin.
+    pub fn push(&self, bucket: usize, item: T) -> bool {
+        let Some(slot) = self.slot(bucket) else { return false };
+        {
+            let g = self.gate.lock().unwrap();
+            if g.closed {
+                return false;
+            }
+        }
+        slot.lock().unwrap().push(Pending { item, enqueued: Instant::now() });
+        let mut g = self.gate.lock().unwrap();
+        g.seq += 1;
+        drop(g);
+        self.cv.notify_one();
+        true
+    }
+
+    /// The `Batcher::ready_bucket` policy over the micro-queues: full
+    /// buckets first, then deadline-expired ones, the oldest head
+    /// winning and the bucket id breaking ties.  When `flush_all` is
+    /// set (shutdown drain) any non-empty bucket qualifies.
+    fn ready_bucket(&self, now: Instant, flush_all: bool) -> Option<usize> {
+        let mut full: Option<(Instant, usize)> = None;
+        let mut aged: Option<(Instant, usize)> = None;
+        for (b, q) in &self.buckets {
+            let q = q.lock().unwrap();
+            let Some(head) = q.first() else { continue };
+            let key = (head.enqueued, *b);
+            if q.len() >= self.max_batch {
+                full = Some(full.map_or(key, |k| k.min(key)));
+            }
+            if flush_all || now.duration_since(head.enqueued) >= self.deadline {
+                aged = Some(aged.map_or(key, |k| k.min(key)));
+            }
+        }
+        full.or(aged).map(|(_, b)| b)
+    }
+
+    /// Earliest pending deadline across buckets (for park timeouts).
+    fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.buckets
+            .iter()
+            .filter_map(|(_, q)| q.lock().unwrap().first().map(|p| p.enqueued))
+            .map(|t| self.deadline.checked_sub(now.duration_since(t)).unwrap_or(Duration::ZERO))
+            .min()
+    }
+
+    fn take(&self, bucket: usize) -> Vec<Pending<T>> {
+        let Some(slot) = self.slot(bucket) else { return Vec::new() };
+        let mut q = slot.lock().unwrap();
+        let n = q.len().min(self.max_batch);
+        let rest = q.split_off(n);
+        std::mem::replace(&mut *q, rest)
+    }
+
+    /// Block until a group is ready, the feed closes (and drains), or
+    /// `patience` elapses.  Many compute workers may wait at once;
+    /// each flushed group goes to exactly one of them.
+    pub fn wait_take(&self, patience: Duration) -> Feed<T> {
+        let give_up = Instant::now() + patience;
+        loop {
+            let (seq0, closed) = {
+                let g = self.gate.lock().unwrap();
+                (g.seq, g.closed)
+            };
+            let now = Instant::now();
+            if let Some(b) = self.ready_bucket(now, closed) {
+                let got = self.take(b);
+                if !got.is_empty() {
+                    // siblings may still have work; pass the wakeup on
+                    self.cv.notify_one();
+                    return Feed::Group(b, got);
+                }
+                continue; // another worker drained it between scan and take
+            }
+            if closed {
+                return Feed::Closed;
+            }
+            if now >= give_up {
+                return Feed::TimedOut;
+            }
+            let mut wait = give_up - now;
+            if let Some(d) = self.next_deadline(now) {
+                wait = wait.min(d.max(Duration::from_micros(50)));
+            }
+            let g = self.gate.lock().unwrap();
+            if g.seq == seq0 && !g.closed {
+                let _ = self.cv.wait_timeout(g, wait).unwrap();
+            }
+        }
+    }
+
+    /// Close the feed: pushes start failing, parked workers wake, and
+    /// `wait_take` flushes whatever is still queued before reporting
+    /// [`Feed::Closed`].
+    pub fn close(&self) {
+        let mut g = self.gate.lock().unwrap();
+        g.closed = true;
+        g.seq += 1;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    pub fn queued(&self) -> usize {
+        self.buckets.iter().map(|(_, q)| q.lock().unwrap().len()).sum()
     }
 }
 
@@ -276,5 +450,178 @@ mod tests {
             pushed.sort();
             assert_eq!(taken, pushed);
         }
+    }
+
+    // ---- BatchFeed: the shared continuous feed ----
+
+    #[test]
+    fn feed_flushes_full_bucket_immediately() {
+        let f: BatchFeed<u32> =
+            BatchFeed::new(&[16, 32], 2, Duration::from_secs(10));
+        assert!(f.push(32, 1));
+        assert!(f.push(32, 2));
+        match f.wait_take(Duration::from_millis(50)) {
+            Feed::Group(b, items) => {
+                assert_eq!(b, 32);
+                assert_eq!(items.len(), 2);
+            }
+            _ => panic!("full bucket must flush without waiting"),
+        }
+        assert!(matches!(f.wait_take(Duration::from_millis(1)), Feed::TimedOut));
+    }
+
+    #[test]
+    fn feed_rejects_unknown_bucket_and_push_after_close() {
+        let f: BatchFeed<u32> =
+            BatchFeed::new(&[16], 4, Duration::from_secs(10));
+        assert!(!f.push(99, 1), "unknown bucket must be refused");
+        f.close();
+        assert!(!f.push(16, 1), "push after close must be refused");
+        assert!(matches!(f.wait_take(Duration::from_millis(1)), Feed::Closed));
+    }
+
+    #[test]
+    fn feed_close_drains_remainder_before_reporting_closed() {
+        let f: BatchFeed<u32> =
+            BatchFeed::new(&[16, 32], 8, Duration::from_secs(100));
+        f.push(16, 1);
+        std::thread::sleep(Duration::from_millis(2));
+        f.push(32, 2);
+        f.close();
+        // neither bucket is full or expired, but close flushes both —
+        // oldest head first — before workers are released
+        match f.wait_take(Duration::from_millis(50)) {
+            Feed::Group(b, items) => {
+                assert_eq!(b, 16);
+                assert_eq!(items.len(), 1);
+            }
+            _ => panic!("close must drain queued work"),
+        }
+        match f.wait_take(Duration::from_millis(50)) {
+            Feed::Group(b, _) => assert_eq!(b, 32),
+            _ => panic!("close must drain every bucket"),
+        }
+        assert!(matches!(f.wait_take(Duration::from_millis(1)), Feed::Closed));
+    }
+
+    #[test]
+    fn feed_wakes_parked_consumer_on_push() {
+        use std::sync::Arc;
+        let f: Arc<BatchFeed<u32>> =
+            Arc::new(BatchFeed::new(&[64], 1, Duration::from_secs(10)));
+        let g = Arc::clone(&f);
+        let consumer = std::thread::spawn(move || {
+            match g.wait_take(Duration::from_secs(5)) {
+                Feed::Group(64, items) => items[0].item,
+                _ => panic!("consumer should receive the pushed item"),
+            }
+        });
+        std::thread::sleep(Duration::from_millis(10)); // let it park
+        let t0 = Instant::now();
+        assert!(f.push(64, 7));
+        assert_eq!(consumer.join().unwrap(), 7);
+        assert!(t0.elapsed() < Duration::from_secs(1),
+                "push must wake the parked consumer, not wait out the timeout");
+    }
+
+    #[test]
+    fn feed_matches_batcher_policy() {
+        // drive identical workloads through the lock-free-ish feed and
+        // the reference Batcher; flush order must agree exactly
+        let mut rng = crate::util::rng::Rng::new(41);
+        for _ in 0..30 {
+            let max_batch = 1 + rng.below(4);
+            let ids = [16usize, 32, 48, 64];
+            let feed: BatchFeed<u64> =
+                BatchFeed::new(&ids, max_batch, Duration::ZERO);
+            let mut reference: Batcher<u64> =
+                Batcher::new(max_batch, Duration::ZERO);
+            let n = 1 + rng.below(30);
+            for i in 0..n {
+                let b = ids[rng.below(4)];
+                // interleave so enqueue timestamps order the same way
+                assert!(feed.push(b, i as u64));
+                reference.push(b, i as u64);
+            }
+            // deadline ZERO: everything is aged, so the pure policy
+            // (full-first, oldest-head, bucket-id tiebreak) decides
+            loop {
+                let want = reference.ready_bucket(Instant::now());
+                match feed.wait_take(Duration::from_millis(5)) {
+                    Feed::Group(b, items) => {
+                        assert_eq!(Some(b), want, "flush order diverged");
+                        let got: Vec<u64> =
+                            items.iter().map(|p| p.item).collect();
+                        let refs: Vec<u64> = reference
+                            .take(b)
+                            .iter()
+                            .map(|p| p.item)
+                            .collect();
+                        assert_eq!(got, refs, "group contents diverged");
+                    }
+                    Feed::TimedOut => {
+                        assert_eq!(want, None);
+                        break;
+                    }
+                    Feed::Closed => unreachable!(),
+                }
+            }
+            assert_eq!(feed.queued(), 0);
+            assert_eq!(reference.queued(), 0);
+        }
+    }
+
+    #[test]
+    fn feed_concurrent_producers_conserve_items() {
+        use std::sync::Arc;
+        let ids = [16usize, 32, 48];
+        let f: Arc<BatchFeed<u64>> =
+            Arc::new(BatchFeed::new(&ids, 3, Duration::from_millis(1)));
+        let mut producers = Vec::new();
+        for t in 0..8u64 {
+            let f = Arc::clone(&f);
+            producers.push(std::thread::spawn(move || {
+                for i in 0..50u64 {
+                    let tag = t * 1000 + i;
+                    assert!(f.push(ids[(tag % 3) as usize], tag));
+                }
+            }));
+        }
+        let drainer = {
+            let f = Arc::clone(&f);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                let mut dry_rounds = 0;
+                while got.len() < 400 {
+                    match f.wait_take(Duration::from_millis(100)) {
+                        Feed::Group(b, items) => {
+                            dry_rounds = 0;
+                            for p in items {
+                                assert_eq!(ids[(p.item % 3) as usize], b,
+                                           "item crossed buckets");
+                                got.push(p.item);
+                            }
+                        }
+                        Feed::TimedOut => {
+                            dry_rounds += 1;
+                            assert!(dry_rounds < 50,
+                                    "feed went dry at {} of 400 items",
+                                    got.len());
+                        }
+                        Feed::Closed => break,
+                    }
+                }
+                got
+            })
+        };
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut got = drainer.join().unwrap();
+        got.sort_unstable();
+        let mut want: Vec<u64> =
+            (0..8).flat_map(|t| (0..50).map(move |i| t * 1000 + i)).collect();
+        want.sort_unstable();
+        assert_eq!(got, want, "every pushed item drained exactly once");
     }
 }

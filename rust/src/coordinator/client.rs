@@ -84,6 +84,10 @@ pub struct DeviceClient {
     crop_im: Vec<f32>,
     /// Ladder point the previous step shipped (switch accounting).
     last_point: u8,
+    /// Send timestamps of requests in flight through the split-phase
+    /// [`DeviceClient::step_send`] / [`DeviceClient::step_recv`] API
+    /// (round-trip accounting).
+    inflight: Vec<(u64, Instant)>,
     /// Capability bits the server advertised in its `HelloAck`.
     server_caps: u32,
     /// Bucket quality ladders the server advertised (validated
@@ -115,6 +119,18 @@ impl ClientStats {
     pub fn compression_ratio(&self) -> f64 {
         self.bytes_uncompressed as f64 / self.bytes_sent.max(1) as f64
     }
+}
+
+/// A decode step compressed and ready to ship (see
+/// [`DeviceClient::step`] / [`DeviceClient::step_send`]).
+struct PreparedStep {
+    request: u64,
+    bucket: usize,
+    len: usize,
+    ks: usize,
+    kd: usize,
+    point: u8,
+    packed: Vec<f32>,
 }
 
 #[derive(Debug, Clone)]
@@ -205,6 +221,7 @@ impl DeviceClient {
             crop_re: Vec::new(),
             crop_im: Vec::new(),
             last_point: 0,
+            inflight: Vec::new(),
             server_caps: 0,
             server_buckets: Vec::new(),
             stats: ClientStats::default(),
@@ -401,6 +418,56 @@ impl DeviceClient {
     /// point the rate controller picks, if adaptive), send, await
     /// token.
     pub fn step(&mut self, context: &[i32]) -> Result<(i32, f32)> {
+        let ps = self.prepare_step(context)?;
+        let request = ps.request;
+        let t1 = Instant::now();
+        let reply = if self.encoder.is_some() {
+            let r = self.stream_step(request, ps.bucket, ps.len, ps.ks,
+                                     ps.kd, ps.point, &ps.packed);
+            self.packed_scratch = ps.packed;
+            r?
+        } else {
+            self.send_activation(ps)?;
+            self.await_token(request)?
+        };
+        self.stats.round_trip_us.push(t1.elapsed().as_micros() as u64);
+        Ok(reply)
+    }
+
+    /// Split-phase decode, send half: compress the context and ship
+    /// the Activation frame *without* waiting for the token — the
+    /// other half is [`DeviceClient::step_recv`].  This is how a
+    /// pipelined driver keeps many sessions in flight from one thread
+    /// (send a step on every client, then collect every token).
+    /// Recompute regime only: the delta stream's keyframe-resync
+    /// protocol needs the lockstep [`DeviceClient::step`] loop.
+    pub fn step_send(&mut self, context: &[i32]) -> Result<u64> {
+        ensure!(self.encoder.is_none(),
+                "step_send: stream mode requires the lockstep step() loop");
+        let ps = self.prepare_step(context)?;
+        let request = ps.request;
+        self.send_activation(ps)?;
+        self.inflight.push((request, Instant::now()));
+        Ok(request)
+    }
+
+    /// Split-phase decode, receive half: await the token for a
+    /// request previously shipped by [`DeviceClient::step_send`].
+    pub fn step_recv(&mut self, request: u64) -> Result<(i32, f32)> {
+        let reply = self.await_token(request)?;
+        if let Some(i) = self.inflight.iter().position(|&(r, _)| r == request) {
+            let (_, t) = self.inflight.swap_remove(i);
+            self.stats.round_trip_us.push(t.elapsed().as_micros() as u64);
+        }
+        Ok(reply)
+    }
+
+    /// The shared front half of a decode step: pick the bucket and
+    /// ladder point, run the fused client executable, and pack the
+    /// block at that point's geometry.  The packed buffer travels in
+    /// the returned [`PreparedStep`] and is recovered into
+    /// `packed_scratch` by whichever send path consumes it.
+    fn prepare_step(&mut self, context: &[i32]) -> Result<PreparedStep> {
         let len = context.len();
         let bucket = self
             .bucket_for(len)
@@ -456,33 +523,28 @@ impl DeviceClient {
 
         let request = self.next_request;
         self.next_request += 1;
-        let t1 = Instant::now();
-        let reply = if self.encoder.is_some() {
-            let r = self.stream_step(request, bucket, len, ks, kd, point,
-                                     &packed);
-            self.packed_scratch = packed;
-            r?
-        } else {
-            let frame = Frame::Activation {
-                session: self.session,
-                request,
-                bucket: bucket as u16,
-                true_len: len as u16,
-                ks: ks as u16,
-                kd: kd as u16,
-                point,
-                packed,
-            };
-            self.timed_send(&frame)?;
-            // recover the coefficient buffer so the next step reuses it
-            if let Frame::Activation { packed, .. } = frame {
-                self.packed_scratch = packed;
-            }
-            self.stats.requests += 1;
-            self.await_token(request)?
+        Ok(PreparedStep { request, bucket, len, ks, kd, point, packed })
+    }
+
+    /// Ship a prepared step as a recompute Activation frame,
+    /// recovering the coefficient buffer for the next step.
+    fn send_activation(&mut self, ps: PreparedStep) -> Result<()> {
+        let frame = Frame::Activation {
+            session: self.session,
+            request: ps.request,
+            bucket: ps.bucket as u16,
+            true_len: ps.len as u16,
+            ks: ps.ks as u16,
+            kd: ps.kd as u16,
+            point: ps.point,
+            packed: ps.packed,
         };
-        self.stats.round_trip_us.push(t1.elapsed().as_micros() as u64);
-        Ok(reply)
+        self.timed_send(&frame)?;
+        if let Frame::Activation { packed, .. } = frame {
+            self.packed_scratch = packed;
+        }
+        self.stats.requests += 1;
+        Ok(())
     }
 
     /// Send one frame, timing the tx half and feeding the adaptive

@@ -31,6 +31,14 @@ pub struct Metrics {
     /// microseconds, despite the histogram's time-flavoured API —
     /// sessions spent at a point before switching away.
     pub ladder_switches: AtomicU64,
+    /// Poll-loop lifecycle: connections registered with the shared
+    /// poll workers, connections retired (peer closed / errored /
+    /// Bye), and connections cut by the per-connection idle deadline
+    /// (a hung peer must never park a poll worker — it gets dropped
+    /// here instead).
+    pub conns_opened: AtomicU64,
+    pub conns_closed: AtomicU64,
+    pub idle_disconnects: AtomicU64,
     pub ladder_dwell_frames: Histogram,
     pub queue_wait_us: Histogram,
     pub decompress_us: Histogram,
@@ -69,6 +77,9 @@ impl Metrics {
         j.set("hellos", g(&self.hellos));
         j.set("proto_rejects", g(&self.proto_rejects));
         j.set("ladder_switches", g(&self.ladder_switches));
+        j.set("conns_opened", g(&self.conns_opened));
+        j.set("conns_closed", g(&self.conns_closed));
+        j.set("idle_disconnects", g(&self.idle_disconnects));
         for (name, h) in [("queue_wait_us", &self.queue_wait_us),
                           ("decompress_us", &self.decompress_us),
                           ("exec_us", &self.exec_us),
@@ -111,7 +122,13 @@ mod tests {
         m.proto_rejects.fetch_add(1, Ordering::Relaxed);
         m.ladder_switches.fetch_add(3, Ordering::Relaxed);
         m.ladder_dwell_frames.record_us(12);
+        m.conns_opened.fetch_add(4, Ordering::Relaxed);
+        m.conns_closed.fetch_add(3, Ordering::Relaxed);
+        m.idle_disconnects.fetch_add(1, Ordering::Relaxed);
         let j = m.to_json();
+        assert_eq!(j.usize_or("conns_opened", 0), 4);
+        assert_eq!(j.usize_or("conns_closed", 0), 3);
+        assert_eq!(j.usize_or("idle_disconnects", 0), 1);
         assert_eq!(j.usize_or("hellos", 0), 2);
         assert_eq!(j.usize_or("proto_rejects", 0), 1);
         assert_eq!(j.usize_or("ladder_switches", 0), 3);

@@ -15,6 +15,13 @@
 //!   behind a typed `handle(frame) -> Response` API; the TCP accept
 //!   loop and the in-proc connector are thin adapters over it.
 //!
+//! The core is sharded and event-driven: session state lives in a
+//! [`ShardedSessions`] table (hash-partitioned, per-shard locks),
+//! every connection is multiplexed over a fixed [`PollPool`] of
+//! readiness-polling workers (no thread per connection), and the
+//! continuous [`BatchFeed`] of per-bucket micro-queues feeds the
+//! compute workers directly.
+//!
 //! A device-side [`DeviceClient`] runs embed + layer 1 + the pallas
 //! FC codec (one fused HLO), negotiates features at connect, and
 //! ships compressed blocks — full recompute activations or spectral
@@ -30,13 +37,17 @@
 pub mod batcher;
 pub mod client;
 pub mod metrics;
+pub mod poll;
 pub mod protocol;
 pub mod server;
 pub mod session;
 pub mod transport;
 
+pub use batcher::{BatchFeed, Feed};
 pub use client::{DeviceClient, CLIENT_CAPS};
+pub use poll::PollPool;
 pub use server::{serve_transport, start_service, EdgeServer, Response,
                  ServerHandle, ServiceHandle, ServingService};
+pub use session::{SessionManager, ShardedSessions};
 pub use transport::{FrameRx, FrameTx, InProcTransport, ShapedTransport,
                     TcpTransport, Transport};

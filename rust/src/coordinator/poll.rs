@@ -1,0 +1,238 @@
+//! Shared poll loop: a fixed pool of worker threads multiplexing
+//! every registered connection through non-blocking
+//! [`FrameRx::try_recv`] readiness checks, in place of the old
+//! blocking thread per connection.
+//!
+//! Lifecycle of a connection:
+//!
+//! 1. **register** — the transport is split, the service opens a
+//!    [`ConnState`] (codec engine + reply channel + ownership nonce),
+//!    and the assembled [`PolledConn`] joins the shared round-robin
+//!    queue.
+//! 2. **visit** — a worker pops the connection, drains up to
+//!    [`INBOUND_QUANTUM`] inbound frames through
+//!    [`ServingService::handle`] (replies are routed through the
+//!    connection's reply channel so they stay ordered with the
+//!    compute workers' `Token` frames), flushes the reply channel
+//!    into the tx half, then pushes the connection back.
+//! 3. **retire** — on peer disconnect, a typed `Close`, service
+//!    shutdown, or the per-connection idle deadline, the worker
+//!    flushes any queued replies, releases the session-ownership
+//!    binding via [`ServingService::close_conn`], and drops the
+//!    connection.
+//!
+//! A hung peer therefore costs one failed readiness probe per visit —
+//! never a parked worker — and is eventually collected by the idle
+//! deadline (the `idle_disconnects` metric counts those).  When a
+//! full pass over the queue makes no progress the worker naps briefly
+//! instead of spinning.
+
+use super::protocol::Frame;
+use super::server::{ConnState, Response, ServingService};
+use super::transport::{FrameRx, FrameTx, Transport};
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Max inbound frames handled per visit before the connection yields
+/// the worker — keeps one chatty peer from starving the queue.
+const INBOUND_QUANTUM: usize = 32;
+
+/// Worker nap after a full no-progress pass over the queue.
+const IDLE_NAP: Duration = Duration::from_micros(200);
+
+/// One registered connection as the poll workers see it.
+struct PolledConn {
+    tx: Box<dyn FrameTx>,
+    rx: Box<dyn FrameRx>,
+    /// Held so the reply channel never reads Disconnected while the
+    /// connection lives; handle() replies are sent here to stay FIFO
+    /// with the compute workers' Token frames.
+    reply_tx: mpsc::Sender<Frame>,
+    reply_rx: mpsc::Receiver<Frame>,
+    conn: ConnState,
+    /// Last time the peer produced a frame — the idle deadline ticks
+    /// from here.
+    last_rx: Instant,
+}
+
+struct PollShared {
+    service: Arc<ServingService>,
+    queue: Mutex<VecDeque<PolledConn>>,
+    /// Live connection count — sizes a worker's "full pass" estimate
+    /// for idle pacing (and is handy for tests).
+    conns: AtomicUsize,
+    stop: AtomicBool,
+    /// None = no idle deadline (`idle_deadline_ms = 0`).
+    idle: Option<Duration>,
+}
+
+/// The worker pool.  Owned by the service handle; `register` may be
+/// called from any thread (the TCP accept loop, in-proc connectors).
+pub struct PollPool {
+    shared: Arc<PollShared>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl PollPool {
+    pub fn start(service: Arc<ServingService>, workers: usize,
+                 idle: Option<Duration>) -> PollPool {
+        let shared = Arc::new(PollShared {
+            service,
+            queue: Mutex::new(VecDeque::new()),
+            conns: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+            idle,
+        });
+        let n = workers.max(1);
+        let handles = (0..n)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("fc-poll-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn poll worker")
+            })
+            .collect();
+        PollPool { shared, workers: Mutex::new(handles) }
+    }
+
+    /// Split the transport and enter it into the shared poll queue.
+    /// Returns once the connection is registered — frames flow as
+    /// soon as a worker visits it.
+    pub fn register(&self, transport: Box<dyn Transport>) -> Result<()> {
+        let peer = transport.peer();
+        let (tx, rx) = transport.split()?;
+        let (reply_tx, reply_rx) = mpsc::channel::<Frame>();
+        let conn = self.shared.service.open_conn(reply_tx.clone(), peer);
+        self.shared.service.metrics.conns_opened
+            .fetch_add(1, Ordering::Relaxed);
+        self.shared.conns.fetch_add(1, Ordering::Relaxed);
+        self.shared.queue.lock().unwrap().push_back(PolledConn {
+            tx, rx, reply_tx, reply_rx, conn, last_rx: Instant::now(),
+        });
+        Ok(())
+    }
+
+    /// Live registered connections (diagnostic).
+    pub fn conn_count(&self) -> usize {
+        self.shared.conns.load(Ordering::Relaxed)
+    }
+
+    /// Stop the workers, join them, and retire every connection still
+    /// in the queue (releasing session-ownership bindings).
+    pub fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+        let mut q = self.shared.queue.lock().unwrap();
+        while let Some(pc) = q.pop_front() {
+            retire(&self.shared, pc);
+        }
+    }
+}
+
+/// Flush queued replies and release the connection's session binding.
+fn retire(shared: &PollShared, mut pc: PolledConn) {
+    while let Ok(frame) = pc.reply_rx.try_recv() {
+        match pc.tx.send(&frame) {
+            Ok(n) => {
+                shared.service.metrics.bytes_tx
+                    .fetch_add(n as u64, Ordering::Relaxed);
+            }
+            Err(_) => break,
+        }
+    }
+    shared.service.close_conn(&pc.conn);
+    shared.service.metrics.conns_closed.fetch_add(1, Ordering::Relaxed);
+    shared.conns.fetch_sub(1, Ordering::Relaxed);
+}
+
+/// Visit one connection: drain inbound, flush replies, check the
+/// idle deadline.  Returns (made_progress, close).
+fn visit(shared: &PollShared, pc: &mut PolledConn) -> (bool, bool) {
+    let mut progress = false;
+    let mut close = false;
+    for _ in 0..INBOUND_QUANTUM {
+        match pc.rx.try_recv() {
+            Ok(Some(frame)) => {
+                progress = true;
+                pc.last_rx = Instant::now();
+                match shared.service.handle(&mut pc.conn, frame) {
+                    Response::None => {}
+                    Response::Reply(f) => {
+                        // cannot fail: pc.reply_tx keeps the channel open
+                        let _ = pc.reply_tx.send(f);
+                    }
+                    Response::Close => {
+                        close = true;
+                        break;
+                    }
+                }
+            }
+            Ok(None) => break, // nothing buffered right now
+            Err(_) => {
+                close = true; // peer disconnected / framing error
+                break;
+            }
+        }
+    }
+    loop {
+        match pc.reply_rx.try_recv() {
+            Ok(frame) => {
+                progress = true;
+                match pc.tx.send(&frame) {
+                    Ok(n) => {
+                        shared.service.metrics.bytes_tx
+                            .fetch_add(n as u64, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        close = true;
+                        break;
+                    }
+                }
+            }
+            Err(mpsc::TryRecvError::Empty) => break,
+            Err(mpsc::TryRecvError::Disconnected) => unreachable!(),
+        }
+    }
+    if let Some(idle) = shared.idle {
+        if !close && pc.last_rx.elapsed() >= idle {
+            shared.service.metrics.idle_disconnects
+                .fetch_add(1, Ordering::Relaxed);
+            crate::debug!("poll", "{}: idle deadline", pc.conn.peer());
+            close = true;
+        }
+    }
+    (progress, close)
+}
+
+fn worker_loop(shared: &PollShared) {
+    // consecutive no-progress visits; once it covers every live
+    // connection the worker has made a full dry pass and naps
+    let mut dry_visits = 0usize;
+    while !shared.stop.load(Ordering::SeqCst) {
+        let Some(mut pc) = shared.queue.lock().unwrap().pop_front() else {
+            std::thread::sleep(IDLE_NAP);
+            continue;
+        };
+        let (progress, close) = visit(shared, &mut pc);
+        if close {
+            retire(shared, pc);
+        } else {
+            shared.queue.lock().unwrap().push_back(pc);
+        }
+        if progress {
+            dry_visits = 0;
+        } else {
+            dry_visits += 1;
+            if dry_visits >= shared.conns.load(Ordering::Relaxed).max(1) {
+                dry_visits = 0;
+                std::thread::sleep(IDLE_NAP);
+            }
+        }
+    }
+}

@@ -6,23 +6,32 @@
 //!   owns sessions, the dynamic batcher feed, metrics, handshake
 //!   negotiation, and all frame semantics behind the typed
 //!   [`ServingService::handle`] API.  It never sees a socket.
-//! * Transport adapters — [`serve_transport`] pumps any
-//!   [`Transport`] (TCP, in-proc, shaped) through the core;
-//!   [`EdgeServer`] is the thin TCP accept loop,
+//! * Transport adapters — every connection (TCP, in-proc, shaped) is
+//!   registered with a shared [`PollPool`]: a fixed set of worker
+//!   threads multiplexing all links through non-blocking
+//!   `try_recv` readiness, so session count is no longer capped by OS
+//!   threads.  [`EdgeServer`] is the thin TCP accept loop,
 //!   [`ServiceHandle::connect_inproc`] the zero-socket connector the
-//!   hermetic tests, benches, and the sim's live probe use.
+//!   hermetic tests, benches, and the sim's live probe use;
+//!   [`serve_transport`] remains as the dedicated-thread adapter for
+//!   embedders that want one.
 //!
-//! Batching is unchanged: per-connection readers feed a shared
-//! dynamic batcher; a worker pool sized to the accelerator count
-//! executes the fused server HLOs (reconstruct + layers 2..L + head)
-//! and answers through per-connection writer channels.
+//! Session state is partitioned into a [`ShardedSessions`] table
+//! (session-id hash → independently-locked shard) so the data path
+//! never takes a global session lock, and batching is continuous: the
+//! poll workers push unpacked blocks into a shared
+//! [`BatchFeed`] of per-bucket micro-queues that the compute workers
+//! (one per accelerator unit) drain directly — there is no dedicated
+//! batcher thread, and a filling batch never waits on a slow
+//! connection.
 
-use super::batcher::Batcher;
+use super::batcher::{BatchFeed, Feed};
 use super::metrics::Metrics;
+use super::poll::PollPool;
 use super::protocol::{caps, BucketAdvert, ErrorCode, Frame, LadderEntry,
                       ACTIVATION_HEADER_BYTES, PROTOCOL_MAGIC,
                       PROTOCOL_VERSION, STREAM_HEADER_BYTES};
-use super::session::SessionManager;
+use super::session::{SessionManager, ShardedSessions};
 use super::transport::{InProcTransport, TcpTransport, Transport};
 use crate::codec::fourier::{embed_block_into, unpack_block_into};
 use crate::codec::rate::{ladder_from_manifest, LadderPoint};
@@ -37,7 +46,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -209,10 +218,6 @@ pub struct GroupItem {
     pub t_rx: Instant,
 }
 
-enum Job {
-    Group { bucket: usize, items: Vec<GroupItem> },
-}
-
 /// Immediate outcome of [`ServingService::handle`] for one inbound
 /// frame.  Asynchronous results (tokens from the batcher workers)
 /// flow through the connection's reply channel, never through this.
@@ -256,6 +261,11 @@ impl ConnState {
     pub fn negotiated_caps(&self, server_caps: u32) -> u32 {
         self.client_caps & server_caps
     }
+
+    /// The peer label the connection was opened with (diagnostics).
+    pub fn peer(&self) -> &str {
+        &self.peer
+    }
 }
 
 /// The transport-agnostic serving core: sessions, batching feed,
@@ -266,8 +276,11 @@ impl ConnState {
 pub struct ServingService {
     model: Arc<ServingModel>,
     pub metrics: Arc<Metrics>,
-    sessions: Arc<Mutex<SessionManager>>,
-    breq_tx: mpsc::Sender<(usize, GroupItem)>,
+    /// Session state, hash-partitioned into independently-locked
+    /// shards — no frame ever takes a global session lock.
+    sessions: ShardedSessions,
+    /// The continuous batching feed the compute workers drain.
+    feed: Arc<BatchFeed<GroupItem>>,
     /// Capability bits this server advertises in `HelloAck`.
     pub caps: u32,
     /// Advertise full quality ladders in `HelloAck` (paired with
@@ -303,12 +316,11 @@ impl ServingService {
 
     /// Connection teardown: release the session-ownership binding so
     /// a legitimate reconnect (same session, new connection) is
-    /// admitted immediately.  Called by [`serve_transport`] on every
-    /// exit path.
+    /// admitted immediately.  Called by the poll loop (and
+    /// [`serve_transport`]) on every exit path.
     pub fn close_conn(&self, conn: &ConnState) {
         if conn.hello_done {
-            self.sessions.lock().unwrap()
-                .release_owner(conn.session, conn.conn_id);
+            self.sessions.release_owner(conn.session, conn.conn_id);
         }
     }
 
@@ -392,7 +404,7 @@ impl ServingService {
             reply: conn.reply.clone(),
             t_rx,
         };
-        if self.breq_tx.send((bucket, item)).is_err() {
+        if !self.feed.push(bucket, item) {
             return Response::Close; // service shutting down
         }
         Response::None
@@ -422,28 +434,34 @@ impl ServingService {
                         format!("protocol v{version} unsupported \
                                  (server speaks v{PROTOCOL_VERSION})"));
                 }
-                {
-                    let mut sessions = self.sessions.lock().unwrap();
-                    // ownership check first: a refused takeover must
-                    // not refresh or rewrite the foreign session
-                    if sessions.owned_by_other(session, conn.conn_id) {
-                        return Self::err(
+                // admission is atomic within the session's shard: the
+                // ownership check comes first (a refused takeover must
+                // not refresh or rewrite the foreign session), and
+                // bind_owner cannot fail because the shard lock is
+                // held across the check
+                let conn_id = conn.conn_id;
+                let gate = self.sessions.with(session, |s| {
+                    if s.owned_by_other(session, conn_id) {
+                        return Some(Self::err(
                             ErrorCode::AdmissionRefused,
                             format!("session {session} is bound to another \
-                                     live connection"));
+                                     live connection")));
                     }
-                    if !sessions.hello(session, &model, client_caps) {
-                        return Self::err(ErrorCode::AdmissionRefused,
-                                         "admission refused".into());
+                    if !s.hello(session, &model, client_caps) {
+                        return Some(Self::err(ErrorCode::AdmissionRefused,
+                                              "admission refused".into()));
                     }
-                    // cannot fail: the lock is held and the ownership
-                    // check above passed
-                    sessions.bind_owner(session, conn.conn_id);
-                    // re-handshaking onto a different session releases
-                    // the old binding
-                    if conn.hello_done && conn.session != session {
-                        sessions.release_owner(conn.session, conn.conn_id);
-                    }
+                    s.bind_owner(session, conn_id);
+                    None
+                });
+                if let Some(reject) = gate {
+                    return reject;
+                }
+                // re-handshaking onto a different session releases the
+                // old binding — a separate, sequential lock of the old
+                // session's shard (shard locks never nest)
+                if conn.hello_done && conn.session != session {
+                    self.sessions.release_owner(conn.session, conn.conn_id);
                 }
                 conn.client_caps = client_caps;
                 conn.session = session;
@@ -481,17 +499,23 @@ impl ServingService {
                 };
                 {
                     let body = (packed.len() * 4) as u64;
-                    let mut sessions = self.sessions.lock().unwrap();
-                    if !sessions.touch(session, body) {
-                        // recompute requests are stateless: an evicted
-                        // session is re-admitted like a stream keyframe
-                        // rather than failed mid-generation — only
-                        // live-table admission pressure refuses
-                        if !sessions.readmit(session) {
-                            return Self::err(ErrorCode::AdmissionRefused,
-                                             "admission refused".into());
+                    let admitted = self.sessions.with(session, |s| {
+                        if !s.touch(session, body) {
+                            // recompute requests are stateless: an
+                            // evicted session is re-admitted like a
+                            // stream keyframe rather than failed
+                            // mid-generation — only live-table
+                            // admission pressure refuses
+                            if !s.readmit(session) {
+                                return false;
+                            }
+                            s.touch(session, body);
                         }
-                        sessions.touch(session, body);
+                        true
+                    });
+                    if !admitted {
+                        return Self::err(ErrorCode::AdmissionRefused,
+                                         "admission refused".into());
                     }
                 }
                 let resp = self.unpack_and_enqueue(conn, session, request,
@@ -503,8 +527,7 @@ impl ServingService {
                 // would get a spurious switch-requires-keyframe
                 // reject) nor fabricate switch metrics
                 if matches!(resp, Response::None) {
-                    let switched = self.sessions.lock().unwrap()
-                        .note_point(session, point);
+                    let switched = self.sessions.note_point(session, point);
                     if let Some(dwell) = switched {
                         self.metrics.ladder_switches
                             .fetch_add(1, Ordering::Relaxed);
@@ -565,15 +588,14 @@ impl ServingService {
                                        cols: self.model.d_model,
                                        ks: bks, kd: bkd };
                 // apply the frame to the per-session decoder state
-                // under the session lock — any failure (gap, evicted
-                // state, admission) surfaces as a StreamReject the
-                // client answers with a keyframe resync
-                let applied = {
-                    let mut guard = self.sessions.lock().unwrap();
-                    apply_stream_frame(&mut guard, session, seq, keyframe,
-                                       point, geom, body_bytes as u64,
-                                       &packed, &updates)
-                };
+                // under the session's shard lock — any failure (gap,
+                // evicted state, admission) surfaces as a StreamReject
+                // the client answers with a keyframe resync
+                let applied = self.sessions.with(session, |s| {
+                    apply_stream_frame(s, session, seq, keyframe, point,
+                                       geom, body_bytes as u64, &packed,
+                                       &updates)
+                });
                 let (block, switched) = match applied {
                     Ok(ok) => ok,
                     Err(e) => {
@@ -650,11 +672,14 @@ fn apply_stream_frame(sessions: &mut SessionManager, session: u64, seq: u32,
     Ok((block, sessions.note_point(session, point)))
 }
 
-/// Pump one transport through the service core: a writer thread
-/// drains the reply channel into the tx half while this thread feeds
-/// inbound frames to [`ServingService::handle`].  Returns when the
-/// peer disconnects, says `Bye`, or the service shuts down.  Every
-/// medium — TCP, in-proc, shaped — goes through exactly this loop.
+/// Pump one transport through the service core on the caller's
+/// thread: a writer thread drains the reply channel into the tx half
+/// while this thread feeds inbound frames to
+/// [`ServingService::handle`].  Returns when the peer disconnects,
+/// says `Bye`, or the service shuts down.  The serving stack itself
+/// multiplexes connections through the [`PollPool`] instead; this
+/// dedicated-thread adapter remains for embedders that want one
+/// blocking loop per link.
 pub fn serve_transport(service: Arc<ServingService>,
                        transport: Box<dyn Transport>) -> Result<()> {
     let peer = transport.peer();
@@ -697,14 +722,15 @@ pub fn serve_transport(service: Arc<ServingService>,
     Ok(())
 }
 
-/// A running service core (batcher + worker pool) with no listener
-/// attached: transports are plugged in via [`ServiceHandle::serve`]
-/// or [`ServiceHandle::connect_inproc`].  [`EdgeServer::start`] wraps
-/// one of these with a TCP accept loop.
+/// A running service core (poll pool + batching feed + compute
+/// workers) with no listener attached: transports are plugged in via
+/// [`ServiceHandle::serve`] or [`ServiceHandle::connect_inproc`].
+/// [`EdgeServer::start`] wraps one of these with a TCP accept loop.
 pub struct ServiceHandle {
     service: Arc<ServingService>,
     pub metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
+    poll: Arc<PollPool>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -713,140 +739,125 @@ impl ServiceHandle {
         self.service.clone()
     }
 
-    /// Serve one transport on its own (detached) thread — the same
-    /// lifecycle as a TCP connection thread.
+    /// Register one transport with the shared poll pool — no
+    /// per-connection thread is spawned.
     pub fn serve(&self, transport: Box<dyn Transport>) {
-        let service = self.service.clone();
-        std::thread::spawn(move || {
-            if let Err(e) = serve_transport(service, transport) {
-                crate::debug!("conn", "closed: {e:#}");
-            }
-        });
+        if let Err(e) = self.poll.register(transport) {
+            crate::debug!("conn", "register: {e:#}");
+        }
     }
 
     /// Open a zero-socket connection to this service: returns the
     /// device half of an [`InProcTransport`] pair whose server half
-    /// is already being served.
+    /// is already registered with the poll pool.
     pub fn connect_inproc(&self) -> InProcTransport {
         let (device, server) = InProcTransport::pair();
         self.serve(Box::new(server));
         device
     }
 
-    /// Stop the batcher + workers and join them.  Connection threads
-    /// are detached and exit when their peer (or the batcher feed)
-    /// goes away.
+    /// Live connections registered with the poll pool (diagnostic).
+    pub fn conn_count(&self) -> usize {
+        self.poll.conn_count()
+    }
+
+    /// Stop and join everything, in dependency order: the poll
+    /// workers first (no new work enters the feed, registered
+    /// connections are retired and their session bindings released),
+    /// then the feed is closed (compute workers drain what's queued
+    /// and exit), then the workers are joined.  No thread survives
+    /// this call.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        self.poll.shutdown();
+        self.service.feed.close();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-/// Start the service core: model load, batcher thread, and a worker
-/// pool sized to `cfg.compute_units`.  No listener — see
+/// Start the service core: model load, sharded session table, the
+/// continuous [`BatchFeed`], a compute-worker pool sized to
+/// `cfg.compute_units`, and the [`PollPool`] connection multiplexer
+/// sized to `cfg.poll_workers`.  No listener — see
 /// [`EdgeServer::start`] for the TCP adapter.
 pub fn start_service(cfg: &ServeConfig, store: Arc<ArtifactStore>)
     -> Result<ServiceHandle> {
     let model = Arc::new(ServingModel::load(&store)?);
     let metrics = Arc::new(Metrics::new());
-    let sessions = Arc::new(Mutex::new(SessionManager::new(
-        Duration::from_secs(cfg.session_ttl_s), 100_000)));
+    let sessions = ShardedSessions::new(
+        Duration::from_secs(cfg.session_ttl_s), 100_000, cfg.shards);
     let stop = Arc::new(AtomicBool::new(false));
 
-    // batcher input + worker job channels
-    let (breq_tx, breq_rx) = mpsc::channel::<(usize, GroupItem)>();
-    let (job_tx, job_rx) = mpsc::channel::<Job>();
-    let job_rx = Arc::new(Mutex::new(job_rx));
+    let bucket_ids: Vec<usize> = model.buckets.keys().copied().collect();
+    let feed: Arc<BatchFeed<GroupItem>> = Arc::new(BatchFeed::new(
+        &bucket_ids, cfg.max_batch,
+        Duration::from_micros(cfg.batch_deadline_us)));
     let mut handles = Vec::new();
 
-    // batcher thread
-    {
-        let stop = stop.clone();
-        let metrics = metrics.clone();
-        let max_batch = cfg.max_batch;
-        let deadline = Duration::from_micros(cfg.batch_deadline_us);
-        handles.push(std::thread::spawn(move || {
-            let mut batcher: Batcher<GroupItem> = Batcher::new(max_batch, deadline);
-            loop {
-                if stop.load(Ordering::SeqCst) {
-                    break;
-                }
-                let wait = batcher
-                    .next_deadline(Instant::now())
-                    .unwrap_or(Duration::from_millis(50))
-                    .min(Duration::from_millis(50));
-                match breq_rx.recv_timeout(wait) {
-                    Ok((bucket, item)) => batcher.push(bucket, item),
-                    Err(mpsc::RecvTimeoutError::Timeout) => {}
-                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                }
-                while let Some(bucket) = batcher.ready_bucket(Instant::now()) {
-                    let group = batcher.take(bucket);
-                    metrics.batches.fetch_add(1, Ordering::Relaxed);
-                    metrics.batch_size_sum
-                        .fetch_add(group.len() as u64, Ordering::Relaxed);
-                    let now = Instant::now();
-                    let items: Vec<GroupItem> = group
-                        .into_iter()
-                        .map(|p| {
-                            metrics.queue_wait_us.record(
-                                now.duration_since(p.enqueued));
-                            p.item
-                        })
-                        .collect();
-                    if job_tx.send(Job::Group { bucket, items }).is_err() {
-                        return;
-                    }
-                }
-            }
-        }));
-    }
-
-    // worker pool — one thread per compute unit
+    // compute workers — one thread per accelerator unit, pulling
+    // flushed groups straight off the shared feed (no batcher thread,
+    // no hand-off channel)
     for wid in 0..cfg.compute_units {
-        let job_rx = job_rx.clone();
+        let feed = feed.clone();
         let model = model.clone();
         let metrics = metrics.clone();
         let stop = stop.clone();
-        handles.push(std::thread::spawn(move || loop {
-            let job = {
-                let rx = job_rx.lock().unwrap();
-                rx.recv_timeout(Duration::from_millis(50))
-            };
-            match job {
-                Ok(Job::Group { bucket, items }) => {
-                    let t0 = Instant::now();
-                    match model.run_group(bucket, &items) {
-                        Ok(results) => {
-                            metrics.exec_us.record(t0.elapsed());
-                            for (it, (token, logprob)) in
-                                items.iter().zip(results) {
-                                metrics.tokens.fetch_add(1, Ordering::Relaxed);
-                                metrics.e2e_us.record(it.t_rx.elapsed());
-                                let _ = it.reply.send(Frame::Token {
-                                    request: it.request, token, logprob });
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("fc-compute-{wid}"))
+                .spawn(move || loop {
+                    let group = feed.wait_take(Duration::from_millis(50));
+                    match group {
+                        Feed::Group(bucket, group) => {
+                            metrics.batches.fetch_add(1, Ordering::Relaxed);
+                            metrics.batch_size_sum.fetch_add(
+                                group.len() as u64, Ordering::Relaxed);
+                            let now = Instant::now();
+                            let items: Vec<GroupItem> = group
+                                .into_iter()
+                                .map(|p| {
+                                    metrics.queue_wait_us.record(
+                                        now.duration_since(p.enqueued));
+                                    p.item
+                                })
+                                .collect();
+                            let t0 = Instant::now();
+                            match model.run_group(bucket, &items) {
+                                Ok(results) => {
+                                    metrics.exec_us.record(t0.elapsed());
+                                    for (it, (token, logprob)) in
+                                        items.iter().zip(results) {
+                                        metrics.tokens
+                                            .fetch_add(1, Ordering::Relaxed);
+                                        metrics.e2e_us.record(
+                                            it.t_rx.elapsed());
+                                        let _ = it.reply.send(Frame::Token {
+                                            request: it.request, token,
+                                            logprob });
+                                    }
+                                }
+                                Err(e) => {
+                                    crate::error!("worker",
+                                                  "unit {wid}: {e:#}");
+                                    for it in &items {
+                                        let _ = it.reply.send(Frame::Error {
+                                            code: ErrorCode::Internal,
+                                            msg: format!("{e:#}") });
+                                    }
+                                }
                             }
                         }
-                        Err(e) => {
-                            crate::error!("worker", "unit {wid}: {e:#}");
-                            for it in &items {
-                                let _ = it.reply.send(Frame::Error {
-                                    code: ErrorCode::Internal,
-                                    msg: format!("{e:#}") });
+                        Feed::TimedOut => {
+                            if stop.load(Ordering::SeqCst) {
+                                break;
                             }
                         }
+                        Feed::Closed => break,
                     }
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => {
-                    if stop.load(Ordering::SeqCst) {
-                        break;
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-        }));
+                })
+                .expect("spawn compute worker"));
     }
 
     let mut server_caps = caps::CODEC_FC;
@@ -860,12 +871,16 @@ pub fn start_service(cfg: &ServeConfig, store: Arc<ArtifactStore>)
         model,
         metrics: metrics.clone(),
         sessions,
-        breq_tx,
+        feed,
         caps: server_caps,
         advertise_ladder: cfg.ladder,
         next_conn: std::sync::atomic::AtomicU64::new(1),
     });
-    Ok(ServiceHandle { service, metrics, stop, handles })
+    let idle = (cfg.idle_deadline_ms > 0)
+        .then(|| Duration::from_millis(cfg.idle_deadline_ms));
+    let poll = Arc::new(PollPool::start(service.clone(), cfg.poll_workers,
+                                        idle));
+    Ok(ServiceHandle { service, metrics, stop, poll, handles })
 }
 
 pub struct EdgeServer;
@@ -910,11 +925,12 @@ impl EdgeServer {
                      inner.service.model.model, cfg.compute_units,
                      cfg.max_batch);
 
-        // accept loop: a thin adapter — every connection is just a
-        // TcpTransport pumped through the shared service core
+        // accept loop: a thin adapter — every accepted stream is a
+        // TcpTransport registered with the shared poll pool (no
+        // per-connection thread)
         {
             let stop = inner.stop.clone();
-            let service = inner.service.clone();
+            let poll = inner.poll.clone();
             inner.handles.push(std::thread::spawn(move || {
                 for conn in listener.incoming() {
                     if stop.load(Ordering::SeqCst) {
@@ -922,20 +938,11 @@ impl EdgeServer {
                     }
                     match conn {
                         Ok(stream) => {
-                            let service = service.clone();
-                            std::thread::spawn(move || {
-                                let t = match TcpTransport::from_stream(stream) {
-                                    Ok(t) => t,
-                                    Err(e) => {
-                                        crate::debug!("conn", "setup: {e:#}");
-                                        return;
-                                    }
-                                };
-                                if let Err(e) =
-                                    serve_transport(service, Box::new(t)) {
-                                    crate::debug!("conn", "closed: {e:#}");
-                                }
-                            });
+                            let registered = TcpTransport::from_stream(stream)
+                                .and_then(|t| poll.register(Box::new(t)));
+                            if let Err(e) = registered {
+                                crate::debug!("conn", "setup: {e:#}");
+                            }
                         }
                         Err(e) => crate::warn_!("server", "accept: {e}"),
                     }

@@ -4,9 +4,19 @@
 //! and reseeds its decoder; a delta requires a live, synced session —
 //! TTL eviction mid-stream therefore forces the client through a
 //! keyframe resync, never through silent state divergence.
+//!
+//! At serving scale the table is wrapped in [`ShardedSessions`]: N
+//! independently-locked [`SessionManager`] shards keyed by a
+//! session-id hash, so concurrent connections touching different
+//! sessions never contend on one global lock.  Every operation names
+//! exactly one session id, which makes per-shard locking trivially
+//! correct; the TTL/LRU and ownership invariants hold *per shard*
+//! (admission pressure is a per-shard budget of
+//! `max_sessions / shards`).
 
 use crate::codec::stream::StreamDecoder;
 use std::collections::HashMap;
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 #[derive(Debug)]
@@ -265,6 +275,118 @@ impl SessionManager {
     }
 }
 
+// ---------------------------------------------------------------------------
+// sharding
+// ---------------------------------------------------------------------------
+
+/// N independently-locked [`SessionManager`] shards keyed by a
+/// session-id hash — the serving core's session table.  There is no
+/// global lock on the data path: a frame for session `s` locks only
+/// `shard(s)`, so connections on different sessions proceed in
+/// parallel.  Multi-step protocol sequences (ownership check → hello
+/// → bind) stay atomic because [`ShardedSessions::with`] runs the
+/// whole closure under the one shard lock the session lives in.
+pub struct ShardedSessions {
+    shards: Vec<Mutex<SessionManager>>,
+}
+
+impl ShardedSessions {
+    /// `max_sessions` is the whole-table budget; each shard gets an
+    /// equal slice (rounded up), so admission pressure is enforced
+    /// per shard.
+    pub fn new(ttl: Duration, max_sessions: usize, shards: usize)
+        -> ShardedSessions {
+        let n = shards.max(1);
+        let per_shard = max_sessions.div_ceil(n).max(1);
+        ShardedSessions {
+            shards: (0..n)
+                .map(|_| Mutex::new(SessionManager::new(ttl, per_shard)))
+                .collect(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard index session `id` lives in.  Fibonacci-multiply
+    /// hashing spreads the sequential ids tests and benches hand out
+    /// across shards instead of clustering them modulo-N.
+    pub fn shard_of(&self, id: u64) -> usize {
+        let h = (id ^ (id >> 32)).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        ((h >> 32) as usize) % self.shards.len()
+    }
+
+    /// Run `f` under the lock of the shard owning session `id`.  This
+    /// is the only way in: every caller names the session it is
+    /// about, so cross-shard lock nesting cannot arise from this API
+    /// (callers needing two sessions take the shards sequentially).
+    pub fn with<R>(&self, id: u64, f: impl FnOnce(&mut SessionManager) -> R)
+        -> R {
+        let mut guard = self.shards[self.shard_of(id)].lock().unwrap();
+        f(&mut guard)
+    }
+
+    // Delegates for the common single-op calls (each is one shard
+    // lock); multi-step sequences use `with` to stay atomic.
+
+    pub fn hello(&self, id: u64, model: &str, caps: u32) -> bool {
+        self.with(id, |m| m.hello(id, model, caps))
+    }
+
+    pub fn readmit(&self, id: u64) -> bool {
+        self.with(id, |m| m.readmit(id))
+    }
+
+    pub fn touch(&self, id: u64, bytes: u64) -> bool {
+        self.with(id, |m| m.touch(id, bytes))
+    }
+
+    pub fn owned_by_other(&self, id: u64, conn: u64) -> bool {
+        self.with(id, |m| m.owned_by_other(id, conn))
+    }
+
+    pub fn bind_owner(&self, id: u64, conn: u64) -> bool {
+        self.with(id, |m| m.bind_owner(id, conn))
+    }
+
+    pub fn release_owner(&self, id: u64, conn: u64) {
+        self.with(id, |m| m.release_owner(id, conn))
+    }
+
+    pub fn note_point(&self, id: u64, point: u8) -> Option<u64> {
+        self.with(id, |m| m.note_point(id, point))
+    }
+
+    pub fn remove(&self, id: u64) {
+        self.with(id, |m| m.remove(id))
+    }
+
+    /// Sweep every shard's expired sessions (shards locked one at a
+    /// time, never together).
+    pub fn evict_expired(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().evict_expired();
+        }
+    }
+
+    /// Total live sessions across shards (momentary: each shard is
+    /// read under its own lock, one at a time).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Per-shard live-session counts, for the stress suite's
+    /// per-shard invariant checks.
+    pub fn shard_lens(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -428,5 +550,67 @@ mod tests {
         // a keyframe after removal re-admits from scratch
         assert!(m.stream_key_decoder(5, 0).is_some());
         assert!(!m.get(5).unwrap().stream.is_synced());
+    }
+
+    // -- sharding --------------------------------------------------------
+
+    #[test]
+    fn sharded_ops_route_to_one_stable_shard() {
+        let s = ShardedSessions::new(Duration::from_secs(60), 64, 4);
+        assert_eq!(s.shard_count(), 4);
+        for id in 0..200u64 {
+            let a = s.shard_of(id);
+            assert_eq!(a, s.shard_of(id), "shard map must be stable");
+            assert!(a < 4);
+        }
+        // ids spread across shards rather than clustering in one
+        let shards: std::collections::HashSet<usize> =
+            (0..64u64).map(|id| s.shard_of(id)).collect();
+        assert!(shards.len() >= 3, "64 ids landed on {} shard(s)",
+                shards.len());
+
+        assert!(s.hello(7, "x", 0b1));
+        assert!(s.touch(7, 10));
+        assert!(!s.touch(8, 10), "unknown session on another shard");
+        assert_eq!(s.len(), 1);
+        let lens = s.shard_lens();
+        assert_eq!(lens.iter().sum::<usize>(), 1);
+        assert_eq!(lens[s.shard_of(7)], 1, "session must live in its shard");
+    }
+
+    #[test]
+    fn sharded_admission_budget_is_per_shard() {
+        // 8 total over 4 shards = 2 per shard: a third live session
+        // hashed to the same shard is refused even though the table
+        // as a whole has room
+        let s = ShardedSessions::new(Duration::from_secs(60), 8, 4);
+        let mut by_shard: HashMap<usize, Vec<u64>> = HashMap::new();
+        for id in 0..64u64 {
+            by_shard.entry(s.shard_of(id)).or_default().push(id);
+        }
+        let ids = by_shard.values().find(|v| v.len() >= 3).unwrap();
+        assert!(s.hello(ids[0], "x", 0));
+        assert!(s.hello(ids[1], "x", 0));
+        assert!(!s.hello(ids[2], "x", 0),
+                "third live session in a 2-budget shard must be refused");
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn sharded_ownership_and_eviction() {
+        let s = ShardedSessions::new(Duration::from_millis(10), 16, 2);
+        assert!(s.hello(3, "x", 0));
+        assert!(s.bind_owner(3, 101));
+        assert!(s.owned_by_other(3, 102));
+        assert!(!s.bind_owner(3, 102));
+        s.release_owner(3, 101);
+        assert!(!s.owned_by_other(3, 102));
+        std::thread::sleep(Duration::from_millis(20));
+        s.evict_expired();
+        assert!(s.is_empty());
+        assert!(s.readmit(3));
+        assert!(s.with(3, |m| m.get(3).is_some()));
+        s.remove(3);
+        assert_eq!(s.len(), 0);
     }
 }

@@ -21,15 +21,19 @@
 //! Contract every impl must honour: frames arrive **in send order**,
 //! exactly once per direction (unless a shaping decorator explicitly
 //! drops them), and `recv` returns `Err` on a closed peer — there is
-//! no silent truncation and no reordering.
+//! no silent truncation and no reordering.  Every rx half also
+//! offers the non-blocking [`FrameRx::try_recv`] readiness hook the
+//! server's poll loop is built on: `Ok(None)` when no complete frame
+//! is buffered (partial frames accumulate invisibly), with the same
+//! order/exactly-once guarantees as `recv`.
 
-use super::protocol::Frame;
+use super::protocol::{Frame, FRAME_OVERHEAD_BYTES, MAX_FRAME};
 use crate::net::{Channel, ChannelTrace, DropPlan};
-use anyhow::{anyhow, Result};
-use std::io::{BufReader, BufWriter, Write};
+use anyhow::{anyhow, bail, Result};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::mpsc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Sending half of a framed link.
 pub trait FrameTx: Send {
@@ -46,10 +50,28 @@ pub trait FrameTx: Send {
     }
 }
 
-/// Receiving half of a framed link.  `recv` blocks until a frame
-/// arrives and returns `Err` once the peer is gone.
+/// Receiving half of a framed link.
+///
+/// Two receive disciplines share one half:
+///
+/// * [`FrameRx::recv`] blocks until a frame arrives and returns `Err`
+///   once the peer is gone — the device client's await-the-token
+///   path, bounded (60 s) so a hung peer surfaces as an error.
+/// * [`FrameRx::try_recv`] is the **readiness hook** the server's
+///   poll loop runs on: it never blocks — `Ok(Some)` hands back one
+///   complete frame, `Ok(None)` means no complete frame is buffered
+///   right now (a half-written frame stays buffered until its bytes
+///   arrive), and `Err` means the peer disconnected or broke framing.
+///   One rx half must not interleave both disciplines concurrently,
+///   but may switch between them (the TCP impl flips the socket's
+///   blocking mode lazily).
 pub trait FrameRx: Send {
     fn recv(&mut self) -> Result<Frame>;
+
+    /// Non-blocking receive: `Ok(Some(frame))` if a complete frame
+    /// was ready, `Ok(None)` if not, `Err` on disconnect/protocol
+    /// breakage.
+    fn try_recv(&mut self) -> Result<Option<Frame>>;
 }
 
 /// A framed, ordered, bidirectional byte link.
@@ -91,8 +113,9 @@ impl Transport for TcpTransport {
     fn split(self: Box<Self>) -> Result<(Box<dyn FrameTx>, Box<dyn FrameRx>)> {
         let TcpTransport { stream } = *self;
         let reader = stream.try_clone()?;
-        Ok((Box::new(TcpTx { w: BufWriter::new(stream) }),
-            Box::new(TcpRx { r: BufReader::new(reader) })))
+        Ok((Box::new(TcpTx { stream }),
+            Box::new(TcpRx { stream: reader, buf: Vec::new(), pos: 0,
+                             nonblocking: false })))
     }
 
     fn peer(&self) -> String {
@@ -103,25 +126,140 @@ impl Transport for TcpTransport {
     }
 }
 
+/// How long a TCP send keeps retrying against a back-pressured
+/// socket before declaring the peer hung — the write-direction twin
+/// of the 60 s read timeout.
+const TCP_SEND_BOUND: Duration = Duration::from_secs(60);
+
 struct TcpTx {
-    w: BufWriter<TcpStream>,
+    stream: TcpStream,
 }
 
 impl FrameTx for TcpTx {
     fn send_encoded(&mut self, bytes: &[u8]) -> Result<usize> {
-        self.w.write_all(bytes)?;
-        self.w.flush()?;
+        // the tx half shares its file description (and so its
+        // blocking flag) with the rx half: when the poll loop has the
+        // socket in non-blocking mode a full send buffer surfaces as
+        // WouldBlock here, so writes retry with a short sleep instead
+        // of assuming blocking semantics — bounded, because a peer
+        // that stops reading must become an error, not a wedged
+        // worker
+        let t0 = Instant::now();
+        let mut off = 0usize;
+        while off < bytes.len() {
+            match self.stream.write(&bytes[off..]) {
+                Ok(0) => bail!("tcp send: peer closed"),
+                Ok(n) => off += n,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if t0.elapsed() > TCP_SEND_BOUND {
+                        bail!("tcp send: peer stalled for {}s",
+                              TCP_SEND_BOUND.as_secs());
+                    }
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
         Ok(bytes.len())
     }
 }
 
 struct TcpRx {
-    r: BufReader<TcpStream>,
+    stream: TcpStream,
+    /// Accumulated wire bytes not yet parsed into frames; `pos` is
+    /// the consumed prefix.  A half-written frame simply stays here
+    /// across `try_recv` calls until the rest of its bytes arrive —
+    /// frame boundaries never depend on read-call boundaries.
+    buf: Vec<u8>,
+    pos: usize,
+    nonblocking: bool,
+}
+
+impl TcpRx {
+    fn set_mode(&mut self, nonblocking: bool) -> Result<()> {
+        if self.nonblocking != nonblocking {
+            self.stream.set_nonblocking(nonblocking)?;
+            self.nonblocking = nonblocking;
+        }
+        Ok(())
+    }
+
+    /// Parse one complete frame out of the buffer, if present.
+    fn parse_frame(&mut self) -> Result<Option<Frame>> {
+        let avail = self.buf.len() - self.pos;
+        if avail < FRAME_OVERHEAD_BYTES {
+            return Ok(None);
+        }
+        let b = &self.buf[self.pos..];
+        let len = u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize;
+        if len > MAX_FRAME {
+            bail!("frame too large: {len}");
+        }
+        let total = FRAME_OVERHEAD_BYTES + len;
+        if avail < total {
+            return Ok(None);
+        }
+        let mut cur =
+            std::io::Cursor::new(&self.buf[self.pos..self.pos + total]);
+        let frame = Frame::read_from(&mut cur)?;
+        self.pos += total;
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > (1 << 16) {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        Ok(Some(frame))
+    }
+
+    /// One read into the buffer; `Ok(0)` is the peer closing.
+    fn fill(&mut self) -> std::io::Result<usize> {
+        let mut chunk = [0u8; 16 * 1024];
+        let n = self.stream.read(&mut chunk)?;
+        if n > 0 {
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+        Ok(n)
+    }
 }
 
 impl FrameRx for TcpRx {
     fn recv(&mut self) -> Result<Frame> {
-        Frame::read_from(&mut self.r)
+        self.set_mode(false)?;
+        loop {
+            if let Some(f) = self.parse_frame()? {
+                return Ok(f);
+            }
+            match self.fill() {
+                Ok(0) => bail!("tcp recv: peer closed"),
+                Ok(_) => {}
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                // a configured read timeout (the client's 60 s
+                // hung-peer bound) surfaces here as WouldBlock or
+                // TimedOut — both are errors, like before
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Frame>> {
+        self.set_mode(true)?;
+        loop {
+            if let Some(f) = self.parse_frame()? {
+                return Ok(Some(f));
+            }
+            match self.fill() {
+                Ok(0) => bail!("tcp recv: peer closed"),
+                Ok(_) => {}
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    return Ok(None);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
     }
 }
 
@@ -194,13 +332,30 @@ impl FrameRx for InProcRx {
     fn recv(&mut self) -> Result<Frame> {
         // same hung-peer bound as TcpTransport::connect's read
         // timeout: a wedged service must turn into a test failure,
-        // not a CI job that hangs until the job-level timeout
+        // not a CI job that hangs until the job-level timeout.  Only
+        // the *client's* await path blocks here — the server's poll
+        // loop runs exclusively on `try_recv`, so one hung peer can
+        // never park a shared poll worker for these 60 s (the
+        // per-connection idle deadline reaps it instead).
         let bytes = self
             .rx
             .recv_timeout(Duration::from_secs(60))
             .map_err(|e| anyhow!("in-proc recv: {e}"))?;
         let mut cur = std::io::Cursor::new(bytes);
         Frame::read_from(&mut cur)
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Frame>> {
+        match self.rx.try_recv() {
+            Ok(bytes) => {
+                let mut cur = std::io::Cursor::new(bytes);
+                Frame::read_from(&mut cur).map(Some)
+            }
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Err(anyhow!("in-proc recv: peer disconnected"))
+            }
+        }
     }
 }
 
@@ -364,6 +519,101 @@ mod tests {
         }
         tx.send(&Frame::Bye).unwrap();
         echo.join().unwrap();
+    }
+
+    #[test]
+    fn inproc_try_recv_is_nonblocking_and_ordered() {
+        let (device, server) = InProcTransport::pair();
+        let (mut dtx, _drx) = Box::new(device).split().unwrap();
+        let (_stx, mut srx) = Box::new(server).split().unwrap();
+        // nothing sent yet: readiness reports None, never blocks
+        assert!(srx.try_recv().unwrap().is_none());
+        let frames = sample_frames();
+        for f in &frames {
+            dtx.send(f).unwrap();
+        }
+        for f in &frames {
+            assert_eq!(srx.try_recv().unwrap().as_ref(), Some(f));
+        }
+        assert!(srx.try_recv().unwrap().is_none());
+        // peer gone: readiness turns into an error, like recv
+        drop(dtx);
+        assert!(srx.try_recv().is_err());
+    }
+
+    #[test]
+    fn tcp_try_recv_reassembles_half_written_frames() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut stream = std::net::TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+            let frames = sample_frames();
+            let wire: Vec<u8> =
+                frames.iter().flat_map(|f| f.encode()).collect();
+            // dribble the byte stream in 3-byte slivers so every
+            // frame crosses the link half-written at least once
+            for chunk in wire.chunks(3) {
+                stream.write_all(chunk).unwrap();
+                stream.flush().unwrap();
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            // leave a dangling half frame, then disconnect
+            let tail = Frame::GetStats.encode();
+            stream.write_all(&tail[..2]).unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let t = TcpTransport::from_stream(stream).unwrap();
+        let (_tx, mut rx) = (Box::new(t) as Box<dyn Transport>)
+            .split().unwrap();
+        let mut got = Vec::new();
+        loop {
+            match rx.try_recv() {
+                Ok(Some(f)) => got.push(f),
+                // no complete frame buffered: poll again — exactly
+                // what the serve loop does between visits
+                Ok(None) => std::thread::sleep(Duration::from_micros(100)),
+                Err(_) => break, // disconnect with a dangling half frame
+            }
+        }
+        assert_eq!(got, sample_frames(),
+                   "slivered frames must reassemble in order");
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_rx_switches_between_blocking_and_readiness() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut stream = std::net::TcpStream::connect(addr).unwrap();
+            for f in sample_frames() {
+                stream.write_all(&f.encode()).unwrap();
+                stream.flush().unwrap();
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let t = TcpTransport::from_stream(stream).unwrap();
+        let (_tx, mut rx) = (Box::new(t) as Box<dyn Transport>)
+            .split().unwrap();
+        let want = sample_frames();
+        // alternate disciplines frame by frame: blocking recv, then
+        // poll try_recv until ready — no frame lost or reordered
+        for (i, f) in want.iter().enumerate() {
+            let got = if i % 2 == 0 {
+                rx.recv().unwrap()
+            } else {
+                loop {
+                    if let Some(g) = rx.try_recv().unwrap() {
+                        break g;
+                    }
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+            };
+            assert_eq!(&got, f);
+        }
+        writer.join().unwrap();
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! Scale soak for the sharded, event-driven serving core: a thousand
+//! concurrent in-proc sessions — recompute, adaptive, and spectral
+//! stream clients mixed — multiplexed over the fixed poll pool, with
+//! hard assertions on per-session token parity against the recompute
+//! reference (which doubles as the zero-cross-session-bleed check:
+//! every session must get *its own prompt's* tokens back), on clean
+//! shutdown with no leaked worker threads, and on the hung-peer
+//! regression: one silent connection must not stall anyone else's
+//! step latency even with a single poll worker.
+//!
+//! Everything is seeded and deterministic: prompt assignment and the
+//! client-mode mix derive from the session id, the forged model is
+//! byte-stable, and stream clients run with `drift_threshold = 0` so
+//! their tokens are bit-identical to the recompute path.
+
+use fourier_compress::codec::rate::RateConfig;
+use fourier_compress::codec::stream::StreamConfig;
+use fourier_compress::config::ServeConfig;
+use fourier_compress::coordinator::{start_service, DeviceClient};
+use fourier_compress::model::tokenizer;
+use fourier_compress::testkit::forged_store;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Tests in this binary measure process-wide thread counts, so they
+/// must not overlap.
+static SOAK_LOCK: Mutex<()> = Mutex::new(());
+
+fn serve_config(store_root: &std::path::Path, overrides: &[String]) -> ServeConfig {
+    use fourier_compress::config::FromJson;
+    let mut args = vec![
+        "listen=127.0.0.1:0".to_string(),
+        format!("artifacts={}", store_root.display()),
+    ];
+    args.extend_from_slice(overrides);
+    ServeConfig::load(None, &args).unwrap()
+}
+
+/// Live threads in this process, from procfs (Linux CI).
+fn live_threads() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status")
+        .expect("read /proc/self/status");
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+        .expect("Threads: line in /proc/self/status")
+}
+
+/// An adaptive config whose controller genuinely runs every step but
+/// deterministically holds the primary point on an in-proc link: the
+/// deadline is far above any measurable in-proc send time, so
+/// `desired()` always lands on point 0 and tokens stay parity-exact
+/// with the recompute reference even under scheduler noise.
+fn soak_rate_config() -> RateConfig {
+    RateConfig { target_step_s: 5.0, ..RateConfig::default() }
+}
+
+const SESSIONS: u64 = 1024;
+const DRIVERS: u64 = 32;
+const STEPS: usize = 3;
+const PROMPTS: [&str; 4] = [
+    "Q probe alpha ? A",
+    "Q probe bravo ? A",
+    "Q mira hue ? A",
+    "Q probe delta ? A",
+];
+
+fn prompt_of(session: u64) -> usize {
+    (session as usize * 7 + 3) % PROMPTS.len()
+}
+
+#[test]
+fn thousand_concurrent_sessions_keep_token_parity() {
+    let _guard = SOAK_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let baseline_threads = live_threads();
+
+    let store = Arc::new(forged_store("scale_soak").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &[
+        "max_batch=8".into(),
+        "batch_deadline_us=200".into(),
+        "compute_units=2".into(),
+        "shards=8".into(),
+        "poll_workers=4".into(),
+        "idle_deadline_ms=0".into(), // no idle reaping during the soak
+    ]);
+    let handle = start_service(&cfg, store.clone()).unwrap();
+
+    // recompute references, one per prompt — the parity oracle every
+    // concurrent session (whatever its mode) is judged against
+    let mut references = Vec::new();
+    for (p, prompt) in PROMPTS.iter().enumerate() {
+        let mut oracle = DeviceClient::connect_over(
+            Box::new(handle.connect_inproc()), &store, 900_001 + p as u64)
+            .unwrap();
+        let mut context = tokenizer::encode_prompt(prompt);
+        let mut tokens = Vec::new();
+        for _ in 0..STEPS {
+            let (token, _) = oracle.step(&context).unwrap();
+            context.push(token);
+            tokens.push(token);
+        }
+        oracle.bye().unwrap();
+        references.push(tokens);
+    }
+
+    // the soak proper: 32 driver threads × 32 pipelined sessions each
+    // — 1024 connections concurrently registered with the poll pool
+    let per_driver = SESSIONS / DRIVERS;
+    std::thread::scope(|scope| {
+        for d in 0..DRIVERS {
+            let handle = &handle;
+            let store = &store;
+            let references = &references;
+            scope.spawn(move || {
+                // open every connection up front so all of this
+                // driver's sessions are concurrently live...
+                let sessions: Vec<u64> =
+                    (0..per_driver).map(|i| 1 + d * per_driver + i).collect();
+                let mut clients: Vec<(u64, DeviceClient, Vec<i32>)> = sessions
+                    .iter()
+                    .map(|&sid| {
+                        let c = DeviceClient::connect_over(
+                            Box::new(handle.connect_inproc()), store, sid)
+                            .unwrap_or_else(|e| {
+                                panic!("session {sid}: connect: {e:#}")
+                            });
+                        let ctx = tokenizer::encode_prompt(
+                            PROMPTS[prompt_of(sid)]);
+                        (sid, c, ctx)
+                    })
+                    .collect();
+                for (sid, client, _) in clients.iter_mut() {
+                    match *sid % 3 {
+                        1 => assert!(client.enable_adaptive(soak_rate_config()),
+                                     "session {sid}: adaptive refused"),
+                        2 => assert!(client.enable_stream(StreamConfig {
+                                         keyframe_interval: 32,
+                                         drift_threshold: 0.0 }),
+                                     "session {sid}: stream refused"),
+                        _ => {}
+                    }
+                }
+                // ...then interleave the decode steps: split-phase
+                // send/recv pipelining for recompute+adaptive
+                // sessions, lockstep for stream sessions
+                for step in 0..STEPS {
+                    let mut inflight: Vec<(usize, u64)> = Vec::new();
+                    for (slot, (sid, client, ctx)) in
+                        clients.iter_mut().enumerate() {
+                        let want =
+                            references[prompt_of(*sid)][step];
+                        if *sid % 3 == 2 {
+                            let (token, _) = client.step(&ctx[..])
+                                .unwrap_or_else(|e| panic!(
+                                    "session {sid} step {step}: {e:#}"));
+                            assert_eq!(token, want,
+                                       "session {sid} (stream) step {step} \
+                                        diverged from its prompt's reference");
+                            ctx.push(token);
+                        } else {
+                            let req = client.step_send(&ctx[..])
+                                .unwrap_or_else(|e| panic!(
+                                    "session {sid} step {step}: {e:#}"));
+                            inflight.push((slot, req));
+                        }
+                    }
+                    for (slot, req) in inflight {
+                        let (sid, client, ctx) = &mut clients[slot];
+                        let (token, logprob) = client.step_recv(req)
+                            .unwrap_or_else(|e| panic!(
+                                "session {sid} step {step} recv: {e:#}"));
+                        let want = references[prompt_of(*sid)][step];
+                        assert!(logprob <= 0.0);
+                        assert_eq!(token, want,
+                                   "session {sid} step {step} diverged \
+                                    from its prompt's reference");
+                        ctx.push(token);
+                    }
+                }
+                for (sid, mut client, _) in clients {
+                    client.bye().unwrap_or_else(|e| {
+                        panic!("session {sid}: bye: {e:#}")
+                    });
+                }
+            });
+        }
+    });
+
+    // the service saw every step from every session, batched them,
+    // and opened/closed exactly the connections we made
+    let m = &handle.metrics;
+    let want_steps = (SESSIONS as usize * STEPS) as u64;
+    assert!(m.requests.load(Ordering::Relaxed) >= want_steps,
+            "server requests {} < {want_steps}",
+            m.requests.load(Ordering::Relaxed));
+    assert!(m.tokens.load(Ordering::Relaxed) >= want_steps);
+    assert!(m.batches.load(Ordering::Relaxed) >= 1);
+    assert!(m.conns_opened.load(Ordering::Relaxed)
+            >= SESSIONS + PROMPTS.len() as u64);
+    assert_eq!(m.idle_disconnects.load(Ordering::Relaxed), 0,
+               "idle reaping was disabled for the soak");
+
+    // every Bye'd connection must retire from the poll queue on its
+    // own — before shutdown is ever called
+    let drained = Instant::now();
+    while handle.conn_count() > 0 {
+        assert!(drained.elapsed() < Duration::from_secs(30),
+                "{} connections never retired", handle.conn_count());
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(m.conns_opened.load(Ordering::Relaxed),
+               m.conns_closed.load(Ordering::Relaxed),
+               "open/close accounting diverged");
+
+    // clean shutdown: poll workers, compute workers, and the feed all
+    // stop; the process thread count returns to its pre-test baseline
+    handle.shutdown();
+    let deadline = Instant::now();
+    loop {
+        let now = live_threads();
+        if now <= baseline_threads {
+            break;
+        }
+        assert!(deadline.elapsed() < Duration::from_secs(10),
+                "leaked worker threads: {now} live, baseline \
+                 {baseline_threads}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn hung_peer_cannot_stall_other_sessions() {
+    let _guard = SOAK_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+
+    // ONE poll worker and a short idle deadline: if any per-connection
+    // receive could still block (the old 60 s in-proc bound), the
+    // silent peer would freeze the only worker and the active client's
+    // steps would take tens of seconds
+    let store = Arc::new(forged_store("hung_peer").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &[
+        "compute_units=1".into(),
+        "poll_workers=1".into(),
+        "idle_deadline_ms=200".into(),
+    ]);
+    let handle = start_service(&cfg, store.clone()).unwrap();
+
+    // a connection that registers and then says nothing — held open so
+    // it is hung, not disconnected
+    let silent = handle.connect_inproc();
+
+    let mut client = DeviceClient::connect_over(
+        Box::new(handle.connect_inproc()), &store, 1).unwrap();
+    // the recompute regime is stateless, so stepping the same context
+    // repeatedly is legal — it keeps this client chatty (and alive)
+    // without outgrowing the largest bucket while we wait
+    let context = tokenizer::encode_prompt("Q probe alpha ? A");
+    let mut worst = Duration::ZERO;
+    for _ in 0..6 {
+        let t0 = Instant::now();
+        client.step(&context).unwrap();
+        worst = worst.max(t0.elapsed());
+    }
+    // generous bound — normal steps are sub-millisecond; the old
+    // blocking receive would push this past 60 s
+    assert!(worst < Duration::from_secs(5),
+            "a silent peer stalled an active session: worst step {worst:?}");
+
+    // the silent connection is reaped by the idle deadline — while the
+    // active client keeps talking and must NOT be
+    let t0 = Instant::now();
+    while handle.metrics.idle_disconnects.load(Ordering::Relaxed) == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10),
+                "idle deadline never fired for the silent connection");
+        client.step(&context).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert_eq!(handle.metrics.idle_disconnects.load(Ordering::Relaxed), 1,
+               "the chatty client was idle-reaped too");
+    drop(silent);
+    client.bye().unwrap();
+    handle.shutdown();
+}

@@ -8,15 +8,30 @@
 //! service must still serve a clean generation: fuzz traffic may be
 //! rejected, never wedge the core.
 
+use fourier_compress::runtime::ArtifactStore;
 use fourier_compress::config::{FromJson, ServeConfig};
 use fourier_compress::coordinator::protocol::{Frame, PROTOCOL_MAGIC,
                                               PROTOCOL_VERSION};
-use fourier_compress::coordinator::{start_service, DeviceClient, Response,
-                                    CLIENT_CAPS};
+use fourier_compress::coordinator::{start_service, DeviceClient, EdgeServer,
+                                    Response, Transport, CLIENT_CAPS};
 use fourier_compress::testkit::forged_store;
 use fourier_compress::util::rng::Rng;
+use std::io::{Read, Write};
 use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::Duration;
+
+/// The real serving geometry (bucket, ks, kd) from the manifest.
+fn manifest_geoms(store: &ArtifactStore) -> Vec<(u16, u16, u16)> {
+    store.manifest.path("serving.buckets")
+        .and_then(|b| b.as_obj())
+        .expect("buckets")
+        .iter()
+        .map(|(bstr, bj)| (bstr.parse().unwrap(),
+                           bj.usize_or("ks", 0) as u16,
+                           bj.usize_or("kd", 0) as u16))
+        .collect()
+}
 
 /// One random frame, biased toward the interesting arms: data frames
 /// with a mix of correct and corrupt sessions/buckets/points, stream
@@ -122,16 +137,7 @@ fn random_frame_interleavings_never_panic_and_stay_typed() {
     ]).unwrap();
     let handle = start_service(&cfg, store.clone()).unwrap();
     let service = handle.service();
-
-    // the real serving geometry (bucket, ks, kd) from the manifest
-    let bmap = store.manifest.path("serving.buckets")
-        .and_then(|b| b.as_obj()).expect("buckets");
-    let geoms: Vec<(u16, u16, u16)> = bmap
-        .iter()
-        .map(|(bstr, bj)| (bstr.parse().unwrap(),
-                           bj.usize_or("ks", 0) as u16,
-                           bj.usize_or("kd", 0) as u16))
-        .collect();
+    let geoms = manifest_geoms(&store);
 
     let mut rng = Rng::new(0xF0_55);
     for round in 0..8u64 {
@@ -182,4 +188,121 @@ fn random_frame_interleavings_never_panic_and_stay_typed() {
     assert!(g.steps >= 1, "service wedged by fuzz traffic");
     client.bye().unwrap();
     handle.shutdown();
+}
+
+#[test]
+fn poll_loop_survives_fuzz_disconnects_and_raw_bytes() {
+    // the same fuzz pressure, but through the event-driven path: many
+    // registered connections interleaved by the shared poll workers,
+    // peers that vanish mid-generation without a Bye, and raw TCP
+    // writes of garbage, oversized, and half-written frames — the
+    // service must never panic, reply only with typed frames, and
+    // still serve a clean generation afterwards
+    let store = Arc::new(forged_store("poll_fuzz").expect("forge artifacts"));
+    let cfg = ServeConfig::load(None, &[
+        "listen=127.0.0.1:0".to_string(),
+        format!("artifacts={}", store.root.display()),
+        "poll_workers=2".into(),
+        "compute_units=1".into(),
+        "idle_deadline_ms=2000".into(),
+    ]).unwrap();
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+    let addr = server.addr;
+    let geoms = manifest_geoms(&store);
+
+    // phase 1: 8 in-proc fuzz peers hammer the poll loop concurrently
+    std::thread::scope(|scope| {
+        for t in 0..8u64 {
+            let server = &server;
+            let geoms = &geoms;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0xED_F0 + t);
+                let (mut tx, mut rx) =
+                    (Box::new(server.connect_inproc()) as Box<dyn Transport>)
+                        .split()
+                        .unwrap();
+                let session = 7000 + t;
+                // half the peers handshake first so valid generation
+                // traffic flows through the poll loop alongside junk
+                if t % 2 == 0 {
+                    let _ = tx.send(&Frame::hello(session, CLIENT_CAPS,
+                                                  "forge-tiny"));
+                }
+                for i in 0..250u64 {
+                    let frame = random_frame(&mut rng, session, geoms);
+                    if tx.send(&frame).is_err() {
+                        break; // server retired us (fine) — stop talking
+                    }
+                    if i % 16 == 0 {
+                        while let Ok(Some(reply)) = rx.try_recv() {
+                            match reply {
+                                Frame::Token { .. } | Frame::Error { .. }
+                                | Frame::HelloAck { .. }
+                                | Frame::Stats { .. } => {}
+                                other => panic!(
+                                    "peer {t}: server sent frame type {}",
+                                    other.type_id()),
+                            }
+                        }
+                    }
+                }
+                // mid-generation disconnect: no Bye, just vanish —
+                // dropping tx+rx severs both in-proc channels
+            });
+        }
+    });
+
+    // phase 2: raw TCP bytes straight at the listener
+    let hello = Frame::hello(42, CLIENT_CAPS, "forge-tiny").encode();
+    let raw_cases: Vec<Vec<u8>> = vec![
+        b"\xde\xad\xbe\xef garbage that is not a frame".to_vec(),
+        // plausible header (len 16, type 1) but only 5 body bytes,
+        // then disconnect: a half-written frame
+        {
+            let mut v = vec![16, 0, 0, 0, 1];
+            v.extend_from_slice(&[9, 9, 9, 9, 9]);
+            v
+        },
+        // a length prefix far past MAX_FRAME
+        vec![0xff, 0xff, 0xff, 0xff, 2],
+        // connect-and-vanish
+        vec![],
+        // a valid Hello truncated mid-body
+        hello[..hello.len() / 2].to_vec(),
+    ];
+    for (i, case) in raw_cases.iter().enumerate() {
+        let mut s = std::net::TcpStream::connect(addr)
+            .unwrap_or_else(|e| panic!("raw case {i}: connect: {e}"));
+        let _ = s.write_all(case);
+        drop(s); // half-written frames end in a disconnect
+    }
+
+    // phase 3: a byte-dribbled (but complete) Hello must still be
+    // reassembled by the poll loop and answered with a HelloAck
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    for chunk in hello.chunks(3) {
+        s.write_all(chunk).unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let mut header = [0u8; 5];
+    s.read_exact(&mut header)
+        .expect("no reply to a dribbled handshake");
+    let ack_type = Frame::HelloAck { version: PROTOCOL_VERSION, caps: 0,
+                                     buckets: vec![] }.type_id();
+    assert_eq!(header[4], ack_type,
+               "dribbled Hello answered with frame type {}", header[4]);
+    drop(s);
+
+    // the service is unwedged: a well-behaved client still generates,
+    // and the fuzz connections all retired
+    let mut client = DeviceClient::connect_over(
+        Box::new(server.connect_inproc()), &store, 1).unwrap();
+    let g = client.generate("Q mira hue ? A", 3).unwrap();
+    assert!(g.steps >= 1, "service wedged by poll-loop fuzz");
+    client.bye().unwrap();
+    let m = &server.metrics;
+    assert!(m.conns_opened.load(std::sync::atomic::Ordering::Relaxed) >= 9);
+    server.shutdown();
 }
