@@ -33,6 +33,7 @@ fn main() -> anyhow::Result<()> {
         re: vec![0.0; bm.ks * bm.kd], im: vec![0.0; bm.ks * bm.kd],
         reply: std::sync::mpsc::channel().0,
         t_rx: Instant::now(),
+        trace: None,
     };
     let t0 = Instant::now();
     serving.run_group(64, &[item])?;

@@ -57,6 +57,14 @@ pub struct ServeConfig {
     /// that sends nothing for this long is disconnected by the poll
     /// loop (`idle_disconnects` metric).  0 disables the deadline.
     pub idle_deadline_ms: u64,
+    /// Observability snapshot cadence in milliseconds: a background
+    /// tick emits one delta-metrics JSONL line per interval
+    /// (`ServiceHandle::snapshots`).  0 disables the tick entirely.
+    pub snapshot_interval_ms: u64,
+    /// Per-step trace sampling divisor: trace every step whose span
+    /// id is ≡ 0 mod this value (1 = every step).  0 disables
+    /// tracing — the hot path then pays one atomic load + branch.
+    pub trace_sample: u64,
 }
 
 impl Default for ServeConfig {
@@ -78,6 +86,8 @@ impl Default for ServeConfig {
             shards: 8,
             poll_workers: 4,
             idle_deadline_ms: 30_000,
+            snapshot_interval_ms: 0,
+            trace_sample: 0,
         }
     }
 }
@@ -239,6 +249,10 @@ impl FromJson for ServeConfig {
         self.poll_workers = j.usize_or("poll_workers", self.poll_workers);
         self.idle_deadline_ms =
             j.f64_or("idle_deadline_ms", self.idle_deadline_ms as f64) as u64;
+        self.snapshot_interval_ms =
+            j.f64_or("snapshot_interval_ms", self.snapshot_interval_ms as f64) as u64;
+        self.trace_sample =
+            j.f64_or("trace_sample", self.trace_sample as f64) as u64;
         Ok(())
     }
 
@@ -260,6 +274,8 @@ impl FromJson for ServeConfig {
             "shards" => self.shards = value.parse()?,
             "poll_workers" => self.poll_workers = value.parse()?,
             "idle_deadline_ms" => self.idle_deadline_ms = value.parse()?,
+            "snapshot_interval_ms" => self.snapshot_interval_ms = value.parse()?,
+            "trace_sample" => self.trace_sample = value.parse()?,
             _ => bail!("unknown ServeConfig key '{key}'"),
         }
         Ok(())
@@ -280,6 +296,9 @@ impl FromJson for ServeConfig {
         }
         if self.poll_workers == 0 || self.poll_workers > 256 {
             bail!("poll_workers must be in 1..=256");
+        }
+        if self.snapshot_interval_ms > 60_000 {
+            bail!("snapshot_interval_ms must be <= 60000 (0 = off)");
         }
         Ok(())
     }
@@ -462,6 +481,26 @@ mod tests {
             .unwrap();
         assert_eq!((cfg.shards, cfg.poll_workers, cfg.idle_deadline_ms),
                    (2, 1, 0));
+    }
+
+    #[test]
+    fn observability_knobs() {
+        let cfg = ServeConfig::default();
+        assert_eq!((cfg.snapshot_interval_ms, cfg.trace_sample), (0, 0),
+                   "observability defaults off");
+        let cfg = ServeConfig::load(None, &["snapshot_interval_ms=250".into(),
+                                            "trace_sample=16".into()])
+            .unwrap();
+        assert_eq!((cfg.snapshot_interval_ms, cfg.trace_sample), (250, 16));
+        assert!(ServeConfig::load(None, &["snapshot_interval_ms=90000".into()])
+                    .is_err(),
+                "snapshot cadence above 60s must be refused");
+        // JSON-file path reaches the same fields
+        let p = std::env::temp_dir().join("fc_cfg_obs_test.json");
+        std::fs::write(&p, r#"{"snapshot_interval_ms": 100, "trace_sample": 4}"#)
+            .unwrap();
+        let cfg = ServeConfig::load(Some(p.to_str().unwrap()), &[]).unwrap();
+        assert_eq!((cfg.snapshot_interval_ms, cfg.trace_sample), (100, 4));
     }
 
     #[test]

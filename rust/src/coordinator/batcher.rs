@@ -261,6 +261,15 @@ impl<T> BatchFeed<T> {
     pub fn queued(&self) -> usize {
         self.buckets.iter().map(|(_, q)| q.lock().unwrap().len()).sum()
     }
+
+    /// Momentary per-bucket depths `(bucket id, queued items)` — the
+    /// queue-depth gauge the observability snapshot reads.
+    pub fn depths(&self) -> Vec<(usize, usize)> {
+        self.buckets
+            .iter()
+            .map(|(b, q)| (*b, q.lock().unwrap().len()))
+            .collect()
+    }
 }
 
 #[cfg(test)]

@@ -17,6 +17,7 @@
 //! [`ServerError`]s; only [`ErrorCode::StreamReject`] triggers the
 //! transparent keyframe resync.
 
+use super::obs::span_id;
 use super::protocol::{caps, ErrorCode, Frame, ServerError, PROTOCOL_VERSION};
 use super::transport::{FrameRx, FrameTx, ShapedTransport, TcpTransport,
                        Transport};
@@ -88,6 +89,10 @@ pub struct DeviceClient {
     /// [`DeviceClient::step_send`] / [`DeviceClient::step_recv`] API
     /// (round-trip accounting).
     inflight: Vec<(u64, Instant)>,
+    /// Trace span of the most recent prepared step — the same id the
+    /// server mints for this (session, request), derived purely from
+    /// the pair so no wire bytes change (see [`span_id`]).
+    last_span: u64,
     /// Capability bits the server advertised in its `HelloAck`.
     server_caps: u32,
     /// Bucket quality ladders the server advertised (validated
@@ -108,6 +113,11 @@ pub struct ClientStats {
     pub key_frames: u64,
     pub delta_frames: u64,
     pub resyncs: u64,
+    /// Stream mode: wire bytes shipped as keyframes vs delta frames
+    /// (each includes the frame header) — lets a test reconcile the
+    /// server's `bytes_rx` against client-side accounting.
+    pub key_bytes: u64,
+    pub delta_bytes: u64,
     /// Adaptive rate control: ladder-point switches this session
     /// performed and the deepest (cheapest) point it ever rode —
     /// `max_point > 0` means the session downshifted at least once.
@@ -222,6 +232,7 @@ impl DeviceClient {
             crop_im: Vec::new(),
             last_point: 0,
             inflight: Vec::new(),
+            last_span: 0,
             server_caps: 0,
             server_buckets: Vec::new(),
             stats: ClientStats::default(),
@@ -315,6 +326,13 @@ impl DeviceClient {
     /// The bucket quality ladders the server advertised at handshake.
     pub fn server_buckets(&self) -> &[super::protocol::BucketAdvert] {
         &self.server_buckets
+    }
+
+    /// Trace span of the most recent prepared step — matches the span
+    /// the server mints for the same (session, request) pair, with no
+    /// extra wire bytes.  0 before the first step.
+    pub fn last_span(&self) -> u64 {
+        self.last_span
     }
 
     /// Pick the smallest bucket that fits `len` tokens.
@@ -523,6 +541,7 @@ impl DeviceClient {
 
         let request = self.next_request;
         self.next_request += 1;
+        self.last_span = span_id(self.session, request);
         Ok(PreparedStep { request, bucket, len, ks, kd, point, packed })
     }
 
@@ -606,11 +625,6 @@ impl DeviceClient {
                 st.ctrl.observe_drift(drift);
             }
             let keyframe = self.step_scratch.keyframe;
-            if keyframe {
-                self.stats.key_frames += 1;
-            } else {
-                self.stats.delta_frames += 1;
-            }
             let frame = Frame::Delta {
                 session: self.session,
                 request,
@@ -624,7 +638,16 @@ impl DeviceClient {
                 packed: std::mem::take(&mut self.step_scratch.packed),
                 updates: std::mem::take(&mut self.step_scratch.updates),
             };
+            let b0 = self.stats.bytes_sent;
             self.timed_send(&frame)?;
+            let wire = self.stats.bytes_sent - b0;
+            if keyframe {
+                self.stats.key_frames += 1;
+                self.stats.key_bytes += wire;
+            } else {
+                self.stats.delta_frames += 1;
+                self.stats.delta_bytes += wire;
+            }
             // recover the frame buffers so the next step reuses them
             if let Frame::Delta { packed, updates, .. } = frame {
                 self.step_scratch.packed = packed;

@@ -27,9 +27,9 @@ pub struct Metrics {
     pub hellos: AtomicU64,
     pub proto_rejects: AtomicU64,
     /// Adaptive rate control (`codec::rate`): ladder-point switches
-    /// observed across sessions, and the dwell — in *frames*, not
-    /// microseconds, despite the histogram's time-flavoured API —
-    /// sessions spent at a point before switching away.
+    /// observed across sessions, and the dwell — in *frames*, via the
+    /// histogram's unit-generic core — sessions spent at a point
+    /// before switching away.
     pub ladder_switches: AtomicU64,
     /// Poll-loop lifecycle: connections registered with the shared
     /// poll workers, connections retired (peer closed / errored /
@@ -87,11 +87,11 @@ impl Metrics {
                           ("ladder_dwell_frames", &self.ladder_dwell_frames)] {
             let mut hj = Json::obj();
             hj.set("count", Json::Num(h.count() as f64));
-            hj.set("mean", Json::Num(h.mean_us()));
-            hj.set("p50", Json::Num(h.percentile_us(50.0) as f64));
-            hj.set("p95", Json::Num(h.percentile_us(95.0) as f64));
-            hj.set("p99", Json::Num(h.percentile_us(99.0) as f64));
-            hj.set("max", Json::Num(h.max_us() as f64));
+            hj.set("mean", Json::Num(h.mean()));
+            hj.set("p50", Json::Num(h.percentile(50.0) as f64));
+            hj.set("p95", Json::Num(h.percentile(95.0) as f64));
+            hj.set("p99", Json::Num(h.percentile(99.0) as f64));
+            hj.set("max", Json::Num(h.max() as f64));
             j.set(name, hj);
         }
         j
@@ -121,7 +121,7 @@ mod tests {
         m.hellos.fetch_add(2, Ordering::Relaxed);
         m.proto_rejects.fetch_add(1, Ordering::Relaxed);
         m.ladder_switches.fetch_add(3, Ordering::Relaxed);
-        m.ladder_dwell_frames.record_us(12);
+        m.ladder_dwell_frames.record(12);
         m.conns_opened.fetch_add(4, Ordering::Relaxed);
         m.conns_closed.fetch_add(3, Ordering::Relaxed);
         m.idle_disconnects.fetch_add(1, Ordering::Relaxed);

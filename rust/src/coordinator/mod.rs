@@ -37,6 +37,7 @@
 pub mod batcher;
 pub mod client;
 pub mod metrics;
+pub mod obs;
 pub mod poll;
 pub mod protocol;
 pub mod server;
@@ -45,9 +46,11 @@ pub mod transport;
 
 pub use batcher::{BatchFeed, Feed};
 pub use client::{DeviceClient, CLIENT_CAPS};
+pub use obs::{span_id, FlightEvent, FlightKind, FlightRecorder, Obs,
+              StepTrace, Tracer};
 pub use poll::PollPool;
-pub use server::{serve_transport, start_service, EdgeServer, Response,
-                 ServerHandle, ServiceHandle, ServingService};
+pub use server::{serve_transport, start_service, EdgeServer, Reply,
+                 Response, ServerHandle, ServiceHandle, ServingService};
 pub use session::{SessionManager, ShardedSessions};
 pub use transport::{FrameRx, FrameTx, InProcTransport, ShapedTransport,
                     TcpTransport, Transport};

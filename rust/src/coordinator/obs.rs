@@ -1,0 +1,695 @@
+//! Serving observability: per-step trace records, the lock-free
+//! flight recorder, and the sharded metric families that extend the
+//! legacy global [`super::metrics::Metrics`] blob.
+//!
+//! Three independent mechanisms live here, all threaded through the
+//! serving core by `start_service`:
+//!
+//! * **Step traces** ([`Tracer`]) — a span id minted deterministically
+//!   from `(session, request)` (no wire change: both ends derive the
+//!   identical id from fields already in every data frame), sampled
+//!   1-in-N, carried in-process through poll visit → feed enqueue →
+//!   compute → reply flush, and finalized into a [`StepTrace`] with
+//!   per-stage timings plus the codec's [`StageTimes`].  The cost
+//!   contract when tracing is off is **one relaxed atomic load and a
+//!   branch** per data frame ([`Tracer::begin`]).
+//! * **Flight recorder** ([`FlightRecorder`]) — a fixed-size
+//!   seqlock-style ring of recent structured events (rejects,
+//!   evictions, idle disconnects, ladder switches, keyframe resyncs,
+//!   rx errors).  Writers are lock-free (one `fetch_add` plus five
+//!   atomic stores); readers validate slot versions and skip torn
+//!   slots, so a dump is safe from any thread at any time — including
+//!   a panicking one ([`DumpOnPanic`]).
+//! * **Sharded metric families** ([`ShardMetrics`], [`BucketMetrics`],
+//!   [`WorkerMetrics`]) — per-session-shard admission/eviction
+//!   counters, per-batch-bucket enqueue/wait accounting, and
+//!   per-poll-worker occupancy gauges (visits, frame quanta, dry-pass
+//!   naps, busy time), all plain relaxed atomics, aggregated into the
+//!   Stats-frame JSON next to the legacy keys.
+
+use crate::codec::StageTimes;
+use crate::util::hist::Histogram;
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// span ids + step traces
+// ---------------------------------------------------------------------------
+
+/// Mint the span id for one decode step.  Deterministic in
+/// `(session, request)` — the client mints it at `prepare_step` and
+/// the server re-derives the identical id from the frame header, so
+/// the trace needs no new wire field and protocol v3 stays
+/// byte-identical.
+pub fn span_id(session: u64, request: u64) -> u64 {
+    let mut x = session
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ request.wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    x ^= x >> 33;
+    x.max(1)
+}
+
+/// A sampled step's in-flight trace state, carried through the
+/// serving pipeline inside the `GroupItem` / reply wrapper (never on
+/// the wire).  Stage fields are stamped by whichever stage ran them.
+#[derive(Debug)]
+pub struct TraceInFlight {
+    pub span: u64,
+    pub session: u64,
+    pub request: u64,
+    pub bucket: usize,
+    pub point: u8,
+    pub shard: usize,
+    /// Frame receive time — every later stage is measured against it.
+    pub t_rx: Instant,
+    pub decompress_us: u64,
+    pub queue_wait_us: u64,
+    pub exec_us: u64,
+    /// Codec per-stage breakdown for this frame's unpack (from the
+    /// connection engine's [`StageTimes`], enabled only while a
+    /// sampled frame decompresses).
+    pub codec: StageTimes,
+}
+
+/// One completed per-step trace record.
+#[derive(Debug, Clone)]
+pub struct StepTrace {
+    pub span: u64,
+    pub session: u64,
+    pub request: u64,
+    pub bucket: usize,
+    pub point: u8,
+    pub shard: usize,
+    pub queue_wait_us: u64,
+    pub decompress_us: u64,
+    pub exec_us: u64,
+    /// Reply serialization + transmit, stamped at the tx flush.
+    pub tx_us: u64,
+    /// rx → reply-on-the-wire, the span's full server residency.
+    pub total_us: u64,
+    pub codec_row_fft_us: u64,
+    pub codec_col_fft_us: u64,
+    pub codec_pack_us: u64,
+    pub codec_quant_us: u64,
+    pub codec_wire_us: u64,
+}
+
+impl StepTrace {
+    /// Finalize an in-flight trace at the moment its reply hit the
+    /// wire.
+    pub fn finish(t: TraceInFlight, tx_us: u64) -> StepTrace {
+        StepTrace {
+            span: t.span,
+            session: t.session,
+            request: t.request,
+            bucket: t.bucket,
+            point: t.point,
+            shard: t.shard,
+            queue_wait_us: t.queue_wait_us,
+            decompress_us: t.decompress_us,
+            exec_us: t.exec_us,
+            tx_us,
+            total_us: t.t_rx.elapsed().as_micros() as u64,
+            codec_row_fft_us: t.codec.row_fft.as_micros() as u64,
+            codec_col_fft_us: t.codec.col_fft.as_micros() as u64,
+            codec_pack_us: t.codec.pack.as_micros() as u64,
+            codec_quant_us: t.codec.quant.as_micros() as u64,
+            codec_wire_us: t.codec.wire.as_micros() as u64,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("span", Json::Num(self.span as f64));
+        j.set("session", Json::Num(self.session as f64));
+        j.set("request", Json::Num(self.request as f64));
+        j.set("bucket", Json::Num(self.bucket as f64));
+        j.set("point", Json::Num(self.point as f64));
+        j.set("shard", Json::Num(self.shard as f64));
+        j.set("queue_wait_us", Json::Num(self.queue_wait_us as f64));
+        j.set("decompress_us", Json::Num(self.decompress_us as f64));
+        j.set("exec_us", Json::Num(self.exec_us as f64));
+        j.set("tx_us", Json::Num(self.tx_us as f64));
+        j.set("total_us", Json::Num(self.total_us as f64));
+        let mut c = Json::obj();
+        c.set("row_fft_us", Json::Num(self.codec_row_fft_us as f64));
+        c.set("col_fft_us", Json::Num(self.codec_col_fft_us as f64));
+        c.set("pack_us", Json::Num(self.codec_pack_us as f64));
+        c.set("quant_us", Json::Num(self.codec_quant_us as f64));
+        c.set("wire_us", Json::Num(self.codec_wire_us as f64));
+        j.set("codec", c);
+        j
+    }
+}
+
+/// How many completed traces the tracer retains (oldest dropped).
+pub const TRACE_CAPACITY: usize = 1024;
+
+/// Per-step trace control: deterministic 1-in-N sampling and the ring
+/// of completed records.  `sample == 0` disables tracing entirely —
+/// the begin path is then a single relaxed load + branch, which is
+/// the hot-path cost contract the observability layer ships under.
+pub struct Tracer {
+    sample: AtomicU64,
+    done: Mutex<VecDeque<StepTrace>>,
+}
+
+impl Tracer {
+    pub fn new(sample: u64) -> Tracer {
+        Tracer { sample: AtomicU64::new(sample),
+                 done: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Current 1-in-N sampling divisor (0 = tracing off).
+    pub fn sample(&self) -> u64 {
+        self.sample.load(Ordering::Relaxed)
+    }
+
+    pub fn set_sample(&self, n: u64) {
+        self.sample.store(n, Ordering::Relaxed);
+    }
+
+    /// Whether the span for `(session, request)` is sampled.  The
+    /// decision is a pure function of the ids and the divisor, so the
+    /// client can predict exactly which of its steps the server
+    /// traced.
+    pub fn sampled(&self, session: u64, request: u64) -> bool {
+        let n = self.sample.load(Ordering::Relaxed);
+        n != 0 && span_id(session, request) % n == 0
+    }
+
+    /// Start a trace for one data frame, or `None` when the step is
+    /// not sampled.  The disabled path returns after one relaxed
+    /// atomic load and a branch.
+    #[inline]
+    pub fn begin(&self, session: u64, request: u64, t_rx: Instant)
+        -> Option<Box<TraceInFlight>> {
+        let n = self.sample.load(Ordering::Relaxed);
+        if n == 0 {
+            return None;
+        }
+        let span = span_id(session, request);
+        if span % n != 0 {
+            return None;
+        }
+        Some(Box::new(TraceInFlight {
+            span,
+            session,
+            request,
+            bucket: 0,
+            point: 0,
+            shard: 0,
+            t_rx,
+            decompress_us: 0,
+            queue_wait_us: 0,
+            exec_us: 0,
+            codec: StageTimes::default(),
+        }))
+    }
+
+    /// Retire a completed trace into the bounded ring.
+    pub fn finish(&self, trace: StepTrace) {
+        let mut q = self.done.lock().unwrap();
+        if q.len() >= TRACE_CAPACITY {
+            q.pop_front();
+        }
+        q.push_back(trace);
+    }
+
+    /// Completed traces retained so far (oldest first).
+    pub fn completed(&self) -> Vec<StepTrace> {
+        self.done.lock().unwrap().iter().cloned().collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// flight recorder
+// ---------------------------------------------------------------------------
+
+/// Event kinds the flight recorder distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FlightKind {
+    /// Hello with a bad magic or protocol version.
+    ProtoReject = 1,
+    /// Stream frame refused (sequence gap, evicted state, illegal
+    /// mid-stream ladder switch) — `seq` carries the frame's sequence
+    /// number.
+    StreamReject = 2,
+    /// Data frame refused before the codec (bad bucket/point
+    /// geometry, admission, unpack failure).
+    BadRequest = 3,
+    /// Session dropped by TTL/LRU eviction in its shard.
+    SessionEvict = 4,
+    /// Connection cut by the poll loop's idle deadline.
+    IdleDisconnect = 5,
+    /// Session switched quality-ladder points (`aux` = new point).
+    LadderSwitch = 6,
+    /// A keyframe resynced a desynced stream (`seq` = keyframe seq).
+    KeyframeResync = 7,
+    /// Receive-side transport failure: peer vanished mid-stream or
+    /// sent an oversize/garbage frame the codec layer refused.
+    RxError = 8,
+}
+
+impl FlightKind {
+    fn from_u8(v: u8) -> Option<FlightKind> {
+        Some(match v {
+            1 => FlightKind::ProtoReject,
+            2 => FlightKind::StreamReject,
+            3 => FlightKind::BadRequest,
+            4 => FlightKind::SessionEvict,
+            5 => FlightKind::IdleDisconnect,
+            6 => FlightKind::LadderSwitch,
+            7 => FlightKind::KeyframeResync,
+            8 => FlightKind::RxError,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FlightKind::ProtoReject => "proto_reject",
+            FlightKind::StreamReject => "stream_reject",
+            FlightKind::BadRequest => "bad_request",
+            FlightKind::SessionEvict => "session_evict",
+            FlightKind::IdleDisconnect => "idle_disconnect",
+            FlightKind::LadderSwitch => "ladder_switch",
+            FlightKind::KeyframeResync => "keyframe_resync",
+            FlightKind::RxError => "rx_error",
+        }
+    }
+}
+
+/// One structured flight-recorder event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlightEvent {
+    /// Microseconds since the recorder (≈ the service) started.
+    pub t_us: u64,
+    pub kind: FlightKind,
+    pub session: u64,
+    pub shard: u16,
+    /// Stream sequence number where applicable, else 0.
+    pub seq: u32,
+    /// Kind-specific extra word (ladder point, protocol version, …).
+    pub aux: u64,
+}
+
+impl std::fmt::Display for FlightEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "+{:>10}us {:<16} session={} shard={} seq={} aux={}",
+               self.t_us, self.kind.name(), self.session, self.shard,
+               self.seq, self.aux)
+    }
+}
+
+impl FlightEvent {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("t_us", Json::Num(self.t_us as f64));
+        j.set("kind", Json::Str(self.kind.name().to_string()));
+        j.set("session", Json::Num(self.session as f64));
+        j.set("shard", Json::Num(self.shard as f64));
+        j.set("seq", Json::Num(self.seq as f64));
+        j.set("aux", Json::Num(self.aux as f64));
+        j
+    }
+}
+
+/// Default ring capacity — recent events only, by design.
+pub const FLIGHT_CAPACITY: usize = 256;
+
+/// One ring slot: a seqlock version word plus four packed data words.
+/// The version is `2*idx + 1` while logical event `idx` is being
+/// written and `2*idx + 2` once it is complete, so a reader can tell
+/// a torn or recycled slot from a settled one without any lock.
+struct Slot {
+    ver: AtomicU64,
+    w: [AtomicU64; 4],
+}
+
+/// Fixed-size lock-free ring of recent structured events.  Recording
+/// is wait-free for writers (`fetch_add` + 6 stores, no CAS loops);
+/// dumping is safe concurrently with writers — a slot whose version
+/// does not settle is skipped rather than read torn.
+pub struct FlightRecorder {
+    slots: Vec<Slot>,
+    /// Total events ever recorded; `head % slots.len()` is the next
+    /// slot to write.
+    head: AtomicU64,
+    start: Instant,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            slots: (0..capacity.max(1))
+                .map(|_| Slot { ver: AtomicU64::new(0),
+                                w: Default::default() })
+                .collect(),
+            head: AtomicU64::new(0),
+            start: Instant::now(),
+        }
+    }
+
+    /// Record one event.  Lock-free; callable from any worker thread.
+    pub fn record(&self, kind: FlightKind, session: u64, shard: u16,
+                  seq: u32, aux: u64) {
+        let t_us = self.start.elapsed().as_micros() as u64;
+        let idx = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(idx % self.slots.len() as u64) as usize];
+        slot.ver.store(idx * 2 + 1, Ordering::Release);
+        slot.w[0].store(t_us, Ordering::Relaxed);
+        slot.w[1].store(session, Ordering::Relaxed);
+        slot.w[2].store(((kind as u64) << 56) | ((shard as u64) << 40)
+                        | seq as u64,
+                        Ordering::Relaxed);
+        slot.w[3].store(aux, Ordering::Relaxed);
+        slot.ver.store(idx * 2 + 2, Ordering::Release);
+    }
+
+    /// Total events recorded since start (including any the ring has
+    /// since overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.recorded() == 0
+    }
+
+    /// Snapshot the ring: the most recent events, oldest first.
+    /// Slots being concurrently rewritten are skipped (their newer
+    /// contents belong to a later logical position anyway).
+    pub fn dump(&self) -> Vec<FlightEvent> {
+        let head = self.head.load(Ordering::Acquire);
+        let n = self.slots.len() as u64;
+        let lo = head.saturating_sub(n);
+        let mut out = Vec::with_capacity((head - lo) as usize);
+        for pos in lo..head {
+            let slot = &self.slots[(pos % n) as usize];
+            for _ in 0..64 {
+                let v1 = slot.ver.load(Ordering::Acquire);
+                if v1 > pos * 2 + 2 {
+                    break; // recycled by a newer event — skip
+                }
+                if v1 != pos * 2 + 2 {
+                    std::hint::spin_loop(); // writer mid-flight
+                    continue;
+                }
+                let w0 = slot.w[0].load(Ordering::Acquire);
+                let w1 = slot.w[1].load(Ordering::Acquire);
+                let w2 = slot.w[2].load(Ordering::Acquire);
+                let w3 = slot.w[3].load(Ordering::Acquire);
+                if slot.ver.load(Ordering::Acquire) != v1 {
+                    continue; // torn read — retry
+                }
+                if let Some(kind) = FlightKind::from_u8((w2 >> 56) as u8) {
+                    out.push(FlightEvent {
+                        t_us: w0,
+                        kind,
+                        session: w1,
+                        shard: ((w2 >> 40) & 0xFFFF) as u16,
+                        seq: (w2 & 0xFFFF_FFFF) as u32,
+                        aux: w3,
+                    });
+                }
+                break;
+            }
+        }
+        out
+    }
+
+    /// Human-readable dump, one event per line (post-mortems).
+    pub fn dump_text(&self) -> String {
+        let events = self.dump();
+        if events.is_empty() {
+            return "flight recorder: no events".to_string();
+        }
+        let mut s = format!("flight recorder: {} recent of {} total\n",
+                            events.len(), self.recorded());
+        for e in &events {
+            s.push_str(&format!("  {e}\n"));
+        }
+        s
+    }
+}
+
+/// Drop guard for worker threads: if the thread unwinds, the flight
+/// recorder's recent events are printed to stderr so the panic is
+/// diagnosable post-mortem without a debugger attached.
+pub struct DumpOnPanic(pub Arc<FlightRecorder>);
+
+impl Drop for DumpOnPanic {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            eprintln!("[flight-recorder] worker panicked; {}",
+                      self.0.dump_text());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sharded metric families
+// ---------------------------------------------------------------------------
+
+/// Per-session-shard counters (live count is read momentarily from
+/// the shard itself — only monotone counters live here).
+#[derive(Default)]
+pub struct ShardMetrics {
+    /// Sessions newly created in this shard (hello / readmit /
+    /// stream-keyframe admission).
+    pub admitted: AtomicU64,
+    /// Sessions dropped by TTL sweep, LRU pressure, or delta-path
+    /// expiry.
+    pub evicted: AtomicU64,
+}
+
+/// Per-batch-bucket queue accounting (depth is read momentarily from
+/// the feed's micro-queue).
+#[derive(Default)]
+pub struct BucketMetrics {
+    /// Items enqueued into this bucket's micro-queue.
+    pub enqueued: AtomicU64,
+    /// Groups flushed out of this bucket.
+    pub groups: AtomicU64,
+    /// Per-item queue wait, µs.
+    pub wait_us: Histogram,
+}
+
+/// Per-poll-worker occupancy gauges.
+#[derive(Default)]
+pub struct WorkerMetrics {
+    /// Connections visited.
+    pub visits: AtomicU64,
+    /// Inbound frames handled across visits (per-visit quantum is
+    /// `frames / visits`).
+    pub frames: AtomicU64,
+    /// 200µs naps after a full dry pass over the queue.
+    pub naps: AtomicU64,
+    /// Wall time spent inside visits, µs — occupancy is
+    /// `busy_us / uptime`.
+    pub busy_us: AtomicU64,
+}
+
+/// The service-wide observability bundle: one per running service,
+/// shared by every worker.
+pub struct Obs {
+    pub tracer: Tracer,
+    pub flight: Arc<FlightRecorder>,
+    pub shards: Vec<Arc<ShardMetrics>>,
+    /// Sorted by bucket id, mirroring the feed's bucket set.
+    pub buckets: Vec<(usize, BucketMetrics)>,
+    pub workers: Vec<WorkerMetrics>,
+    snapshots: Mutex<Vec<String>>,
+}
+
+impl Obs {
+    pub fn new(trace_sample: u64, shards: usize, bucket_ids: &[usize],
+               poll_workers: usize) -> Obs {
+        let mut ids: Vec<usize> = bucket_ids.to_vec();
+        ids.sort_unstable();
+        ids.dedup();
+        Obs {
+            tracer: Tracer::new(trace_sample),
+            flight: Arc::new(FlightRecorder::new(FLIGHT_CAPACITY)),
+            shards: (0..shards.max(1))
+                .map(|_| Arc::new(ShardMetrics::default()))
+                .collect(),
+            buckets: ids.into_iter()
+                .map(|b| (b, BucketMetrics::default()))
+                .collect(),
+            workers: (0..poll_workers.max(1))
+                .map(|_| WorkerMetrics::default())
+                .collect(),
+            snapshots: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The metric family for one batch bucket.
+    pub fn bucket(&self, id: usize) -> Option<&BucketMetrics> {
+        self.buckets
+            .binary_search_by_key(&id, |(b, _)| *b)
+            .ok()
+            .map(|i| &self.buckets[i].1)
+    }
+
+    /// Append one snapshot JSONL line (the `snapshot_interval_ms`
+    /// background tick).
+    pub fn push_snapshot(&self, line: String) {
+        self.snapshots.lock().unwrap().push(line);
+    }
+
+    /// All snapshot lines emitted so far, in order.
+    pub fn snapshots(&self) -> Vec<String> {
+        self.snapshots.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_is_deterministic_and_mixes() {
+        assert_eq!(span_id(7, 42), span_id(7, 42));
+        assert_ne!(span_id(7, 42), span_id(7, 43));
+        assert_ne!(span_id(7, 42), span_id(8, 42));
+        assert_ne!(span_id(0, 0), 0, "spans are never zero");
+        // sequential requests must spread over the sampling residues,
+        // or 1-in-N sampling would alias whole sessions away
+        let hits = (0..1000u64).filter(|&r| span_id(5, r) % 4 == 0).count();
+        assert!((150..400).contains(&hits), "1-in-4 sampled {hits}/1000");
+    }
+
+    #[test]
+    fn tracer_sampling_contract() {
+        let t = Tracer::new(0);
+        let now = Instant::now();
+        assert!(t.begin(1, 1, now).is_none(), "disabled: no allocation");
+        assert!(!t.sampled(1, 1));
+        t.set_sample(1);
+        for r in 0..20 {
+            assert!(t.begin(9, r, now).is_some(), "1-in-1 samples all");
+        }
+        t.set_sample(3);
+        for r in 0..200u64 {
+            // begin() and sampled() must agree exactly — the client
+            // predicts server sampling through the same function
+            assert_eq!(t.begin(9, r, now).is_some(), t.sampled(9, r));
+            assert_eq!(t.sampled(9, r), span_id(9, r) % 3 == 0);
+        }
+    }
+
+    #[test]
+    fn tracer_ring_caps_and_orders() {
+        let t = Tracer::new(1);
+        for i in 0..(TRACE_CAPACITY + 10) as u64 {
+            let inflight = t.begin(1, i, Instant::now()).unwrap();
+            t.finish(StepTrace::finish(*inflight, 5));
+        }
+        let done = t.completed();
+        assert_eq!(done.len(), TRACE_CAPACITY, "ring must cap");
+        assert_eq!(done.last().unwrap().request, (TRACE_CAPACITY + 9) as u64,
+                   "newest trace retained");
+        assert_eq!(done[0].request, 10, "oldest traces dropped");
+        assert_eq!(done[0].tx_us, 5);
+        let j = done[0].to_json();
+        assert_eq!(j.usize_or("request", 0), 10);
+        assert!(j.path("codec.row_fft_us").is_some());
+    }
+
+    #[test]
+    fn flight_event_roundtrip_packs_all_fields() {
+        let r = FlightRecorder::new(8);
+        r.record(FlightKind::StreamReject, u64::MAX - 3, 1023,
+                 0xDEAD_BEEF, 77);
+        let d = r.dump();
+        assert_eq!(d.len(), 1);
+        let e = d[0];
+        assert_eq!(e.kind, FlightKind::StreamReject);
+        assert_eq!(e.session, u64::MAX - 3);
+        assert_eq!(e.shard, 1023);
+        assert_eq!(e.seq, 0xDEAD_BEEF);
+        assert_eq!(e.aux, 77);
+        assert!(e.to_json().get("kind").and_then(|v| v.as_str())
+                == Some("stream_reject"));
+        assert!(format!("{e}").contains("stream_reject"));
+    }
+
+    #[test]
+    fn flight_ring_keeps_most_recent_on_wrap() {
+        let r = FlightRecorder::new(4);
+        for i in 0..10u32 {
+            r.record(FlightKind::SessionEvict, 100 + i as u64, 0, i, 0);
+        }
+        assert_eq!(r.recorded(), 10);
+        let d = r.dump();
+        assert_eq!(d.len(), 4, "ring holds the last capacity events");
+        let seqs: Vec<u32> = d.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "oldest first, newest last");
+        assert!(r.dump_text().contains("4 recent of 10 total"));
+    }
+
+    #[test]
+    fn flight_concurrent_writers_never_produce_garbage() {
+        let r = Arc::new(FlightRecorder::new(64));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let r = r.clone();
+                s.spawn(move || {
+                    for i in 0..2000u32 {
+                        r.record(FlightKind::RxError, t * 10_000 + i as u64,
+                                 t as u16, i, t);
+                    }
+                });
+            }
+            let reader = {
+                let (r, stop) = (r.clone(), stop.clone());
+                s.spawn(move || {
+                    let mut dumps = 0usize;
+                    while !stop.load(Ordering::Relaxed) {
+                        for e in r.dump() {
+                            // every decoded event must be one a writer
+                            // actually produced — no torn mixes
+                            assert_eq!(e.kind, FlightKind::RxError);
+                            let t = e.session / 10_000;
+                            assert_eq!(e.session % 10_000, e.seq as u64);
+                            assert_eq!(e.aux, t);
+                            assert_eq!(e.shard as u64, t);
+                        }
+                        dumps += 1;
+                    }
+                    dumps
+                })
+            };
+            // writers finish, then the reader sees a settled ring
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            stop.store(true, Ordering::Relaxed);
+            assert!(reader.join().unwrap() > 0);
+        });
+        assert_eq!(r.recorded(), 8000);
+        assert_eq!(r.dump().len(), 64, "settled ring dumps every slot");
+    }
+
+    #[test]
+    fn obs_bucket_lookup_and_snapshots() {
+        let o = Obs::new(0, 4, &[64, 16, 32, 16], 2);
+        assert_eq!(o.buckets.len(), 3, "bucket ids dedup + sort");
+        assert!(o.bucket(16).is_some());
+        assert!(o.bucket(99).is_none());
+        o.bucket(32).unwrap().enqueued.fetch_add(2, Ordering::Relaxed);
+        assert_eq!(o.bucket(32).unwrap().enqueued.load(Ordering::Relaxed), 2);
+        assert_eq!(o.shards.len(), 4);
+        assert_eq!(o.workers.len(), 2);
+        o.push_snapshot("{\"t_ms\":1}".into());
+        o.push_snapshot("{\"t_ms\":2}".into());
+        assert_eq!(o.snapshots().len(), 2);
+    }
+}

@@ -27,8 +27,8 @@
 //! full pass over the queue makes no progress the worker naps briefly
 //! instead of spinning.
 
-use super::protocol::Frame;
-use super::server::{ConnState, Response, ServingService};
+use super::obs::{DumpOnPanic, FlightKind, StepTrace};
+use super::server::{ConnState, Reply, Response, ServingService};
 use super::transport::{FrameRx, FrameTx, Transport};
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -50,8 +50,8 @@ struct PolledConn {
     /// Held so the reply channel never reads Disconnected while the
     /// connection lives; handle() replies are sent here to stay FIFO
     /// with the compute workers' Token frames.
-    reply_tx: mpsc::Sender<Frame>,
-    reply_rx: mpsc::Receiver<Frame>,
+    reply_tx: mpsc::Sender<Reply>,
+    reply_rx: mpsc::Receiver<Reply>,
     conn: ConnState,
     /// Last time the peer produced a frame — the idle deadline ticks
     /// from here.
@@ -92,7 +92,7 @@ impl PollPool {
                 let shared = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("fc-poll-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || worker_loop(&shared, i))
                     .expect("spawn poll worker")
             })
             .collect();
@@ -105,7 +105,7 @@ impl PollPool {
     pub fn register(&self, transport: Box<dyn Transport>) -> Result<()> {
         let peer = transport.peer();
         let (tx, rx) = transport.split()?;
-        let (reply_tx, reply_rx) = mpsc::channel::<Frame>();
+        let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
         let conn = self.shared.service.open_conn(reply_tx.clone(), peer);
         self.shared.service.metrics.conns_opened
             .fetch_add(1, Ordering::Relaxed);
@@ -135,15 +135,31 @@ impl PollPool {
     }
 }
 
+/// Send one reply on the wire and, for sampled steps, stamp the tx
+/// stage and retire the trace — the flush point is the only place
+/// that knows when the frame actually left.
+fn flush_reply(shared: &PollShared, pc: &mut PolledConn, reply: Reply)
+    -> bool {
+    let t0 = Instant::now();
+    match pc.tx.send(&reply.frame) {
+        Ok(n) => {
+            shared.service.metrics.bytes_tx
+                .fetch_add(n as u64, Ordering::Relaxed);
+            if let Some(t) = reply.trace {
+                shared.service.obs().tracer.finish(StepTrace::finish(
+                    *t, t0.elapsed().as_micros() as u64));
+            }
+            true
+        }
+        Err(_) => false,
+    }
+}
+
 /// Flush queued replies and release the connection's session binding.
 fn retire(shared: &PollShared, mut pc: PolledConn) {
-    while let Ok(frame) = pc.reply_rx.try_recv() {
-        match pc.tx.send(&frame) {
-            Ok(n) => {
-                shared.service.metrics.bytes_tx
-                    .fetch_add(n as u64, Ordering::Relaxed);
-            }
-            Err(_) => break,
+    while let Ok(reply) = pc.reply_rx.try_recv() {
+        if !flush_reply(shared, &mut pc, reply) {
+            break;
         }
     }
     shared.service.close_conn(&pc.conn);
@@ -152,20 +168,25 @@ fn retire(shared: &PollShared, mut pc: PolledConn) {
 }
 
 /// Visit one connection: drain inbound, flush replies, check the
-/// idle deadline.  Returns (made_progress, close).
-fn visit(shared: &PollShared, pc: &mut PolledConn) -> (bool, bool) {
+/// idle deadline.  Returns (made_progress, close).  `wid` names the
+/// visiting worker's occupancy gauges.
+fn visit(shared: &PollShared, pc: &mut PolledConn, wid: usize)
+    -> (bool, bool) {
+    let t_visit = Instant::now();
     let mut progress = false;
     let mut close = false;
+    let mut frames = 0u64;
     for _ in 0..INBOUND_QUANTUM {
         match pc.rx.try_recv() {
             Ok(Some(frame)) => {
                 progress = true;
+                frames += 1;
                 pc.last_rx = Instant::now();
                 match shared.service.handle(&mut pc.conn, frame) {
                     Response::None => {}
                     Response::Reply(f) => {
                         // cannot fail: pc.reply_tx keeps the channel open
-                        let _ = pc.reply_tx.send(f);
+                        let _ = pc.reply_tx.send(f.into());
                     }
                     Response::Close => {
                         close = true;
@@ -175,24 +196,22 @@ fn visit(shared: &PollShared, pc: &mut PolledConn) -> (bool, bool) {
             }
             Ok(None) => break, // nothing buffered right now
             Err(_) => {
-                close = true; // peer disconnected / framing error
+                // peer disconnected / framing error mid-stream
+                shared.service.obs().flight.record(
+                    FlightKind::RxError, pc.conn.session(),
+                    shared.service.shard_of(pc.conn.session()) as u16, 0, 0);
+                close = true;
                 break;
             }
         }
     }
     loop {
         match pc.reply_rx.try_recv() {
-            Ok(frame) => {
+            Ok(reply) => {
                 progress = true;
-                match pc.tx.send(&frame) {
-                    Ok(n) => {
-                        shared.service.metrics.bytes_tx
-                            .fetch_add(n as u64, Ordering::Relaxed);
-                    }
-                    Err(_) => {
-                        close = true;
-                        break;
-                    }
+                if !flush_reply(shared, pc, reply) {
+                    close = true;
+                    break;
                 }
             }
             Err(mpsc::TryRecvError::Empty) => break,
@@ -203,23 +222,40 @@ fn visit(shared: &PollShared, pc: &mut PolledConn) -> (bool, bool) {
         if !close && pc.last_rx.elapsed() >= idle {
             shared.service.metrics.idle_disconnects
                 .fetch_add(1, Ordering::Relaxed);
+            shared.service.obs().flight.record(
+                FlightKind::IdleDisconnect, pc.conn.session(),
+                shared.service.shard_of(pc.conn.session()) as u16, 0,
+                pc.last_rx.elapsed().as_millis() as u64);
             crate::debug!("poll", "{}: idle deadline", pc.conn.peer());
             close = true;
         }
     }
+    if let Some(w) = shared.service.obs().workers.get(wid) {
+        w.visits.fetch_add(1, Ordering::Relaxed);
+        w.frames.fetch_add(frames, Ordering::Relaxed);
+        w.busy_us.fetch_add(t_visit.elapsed().as_micros() as u64,
+                            Ordering::Relaxed);
+    }
     (progress, close)
 }
 
-fn worker_loop(shared: &PollShared) {
+fn worker_loop(shared: &PollShared, wid: usize) {
+    let _postmortem = DumpOnPanic(shared.service.obs().flight.clone());
+    let nap = |shared: &PollShared| {
+        if let Some(w) = shared.service.obs().workers.get(wid) {
+            w.naps.fetch_add(1, Ordering::Relaxed);
+        }
+        std::thread::sleep(IDLE_NAP);
+    };
     // consecutive no-progress visits; once it covers every live
     // connection the worker has made a full dry pass and naps
     let mut dry_visits = 0usize;
     while !shared.stop.load(Ordering::SeqCst) {
         let Some(mut pc) = shared.queue.lock().unwrap().pop_front() else {
-            std::thread::sleep(IDLE_NAP);
+            nap(shared);
             continue;
         };
-        let (progress, close) = visit(shared, &mut pc);
+        let (progress, close) = visit(shared, &mut pc, wid);
         if close {
             retire(shared, pc);
         } else {
@@ -231,7 +267,7 @@ fn worker_loop(shared: &PollShared) {
             dry_visits += 1;
             if dry_visits >= shared.conns.load(Ordering::Relaxed).max(1) {
                 dry_visits = 0;
-                std::thread::sleep(IDLE_NAP);
+                nap(shared);
             }
         }
     }

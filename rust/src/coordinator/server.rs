@@ -27,6 +27,7 @@
 
 use super::batcher::{BatchFeed, Feed};
 use super::metrics::Metrics;
+use super::obs::{DumpOnPanic, FlightKind, Obs, StepTrace, TraceInFlight};
 use super::poll::PollPool;
 use super::protocol::{caps, BucketAdvert, ErrorCode, Frame, LadderEntry,
                       ACTIVATION_HEADER_BYTES, PROTOCOL_MAGIC,
@@ -42,6 +43,7 @@ use crate::model::weights::Weights;
 use crate::model::ModelMeta;
 use crate::runtime::{ArtifactStore, Executable};
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::net::{TcpListener, TcpStream};
@@ -214,8 +216,26 @@ pub struct GroupItem {
     pub true_len: usize,
     pub re: Vec<f32>,
     pub im: Vec<f32>,
-    pub reply: mpsc::Sender<Frame>,
+    pub reply: mpsc::Sender<Reply>,
     pub t_rx: Instant,
+    /// In-flight per-step trace when this step is sampled (carried
+    /// in-process only — never serialized).
+    pub trace: Option<Box<TraceInFlight>>,
+}
+
+/// What flows back over a connection's reply channel: the frame to
+/// send plus, for sampled steps, the in-flight trace the writer
+/// finalizes once the reply is on the wire (the tx stage is the last
+/// stamp, so only the flushing thread can take it).
+pub struct Reply {
+    pub frame: Frame,
+    pub trace: Option<Box<TraceInFlight>>,
+}
+
+impl From<Frame> for Reply {
+    fn from(frame: Frame) -> Reply {
+        Reply { frame, trace: None }
+    }
 }
 
 /// Immediate outcome of [`ServingService::handle`] for one inbound
@@ -236,7 +256,7 @@ pub enum Response {
 /// negotiated.
 pub struct ConnState {
     engine: CodecEngine,
-    reply: mpsc::Sender<Frame>,
+    reply: mpsc::Sender<Reply>,
     peer: String,
     /// Reusable planes for unpacking a non-primary ladder point
     /// before embedding it into the primary block (they never leave
@@ -266,6 +286,12 @@ impl ConnState {
     pub fn peer(&self) -> &str {
         &self.peer
     }
+
+    /// The session this connection handshook (0 before `Hello`) —
+    /// lets the poll loop attribute idle disconnects to a session.
+    pub fn session(&self) -> u64 {
+        if self.hello_done { self.session } else { 0 }
+    }
 }
 
 /// The transport-agnostic serving core: sessions, batching feed,
@@ -289,14 +315,84 @@ pub struct ServingService {
     /// Connection-nonce source for session ownership (starts at 1 —
     /// owner 0 means "unowned").
     next_conn: std::sync::atomic::AtomicU64,
+    /// The service's observability bundle: tracer, flight recorder,
+    /// and the per-shard/bucket/worker metric families.
+    obs: Arc<Obs>,
 }
 
 impl ServingService {
+    /// The service's observability bundle.
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.obs
+    }
+
+    /// The shard index session `id` lives in (so tests and dumps can
+    /// cross-check flight events against the session table's layout).
+    pub fn shard_of(&self, id: u64) -> usize {
+        self.sessions.shard_of(id)
+    }
+
+    /// Live sessions across every shard (momentary gauge).
+    pub fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// The full Stats-frame JSON: every legacy flat key from
+    /// [`Metrics::to_json`] unchanged, plus the sharded families as
+    /// `shards` / `buckets` / `workers` arrays.
+    pub fn stats_json(&self) -> Json {
+        let mut j = self.metrics.to_json();
+        let lens = self.sessions.shard_lens();
+        let mut shards = Vec::with_capacity(self.obs.shards.len());
+        for (i, m) in self.obs.shards.iter().enumerate() {
+            let mut sj = Json::obj();
+            sj.set("live", Json::Num(lens.get(i).copied().unwrap_or(0) as f64));
+            sj.set("admitted",
+                   Json::Num(m.admitted.load(Ordering::Relaxed) as f64));
+            sj.set("evicted",
+                   Json::Num(m.evicted.load(Ordering::Relaxed) as f64));
+            shards.push(sj);
+        }
+        j.set("shards", Json::Arr(shards));
+        let depths = self.feed.depths();
+        let mut buckets = Vec::with_capacity(self.obs.buckets.len());
+        for (b, m) in &self.obs.buckets {
+            let mut bj = Json::obj();
+            bj.set("bucket", Json::Num(*b as f64));
+            let depth = depths.iter().find(|(id, _)| id == b)
+                .map(|(_, d)| *d).unwrap_or(0);
+            bj.set("depth", Json::Num(depth as f64));
+            bj.set("enqueued",
+                   Json::Num(m.enqueued.load(Ordering::Relaxed) as f64));
+            bj.set("groups",
+                   Json::Num(m.groups.load(Ordering::Relaxed) as f64));
+            let mut wj = Json::obj();
+            wj.set("count", Json::Num(m.wait_us.count() as f64));
+            wj.set("mean", Json::Num(m.wait_us.mean()));
+            wj.set("p99", Json::Num(m.wait_us.percentile(99.0) as f64));
+            bj.set("wait_us", wj);
+            buckets.push(bj);
+        }
+        j.set("buckets", Json::Arr(buckets));
+        let mut workers = Vec::with_capacity(self.obs.workers.len());
+        for m in &self.obs.workers {
+            let mut wj = Json::obj();
+            wj.set("visits", Json::Num(m.visits.load(Ordering::Relaxed) as f64));
+            wj.set("frames", Json::Num(m.frames.load(Ordering::Relaxed) as f64));
+            wj.set("naps", Json::Num(m.naps.load(Ordering::Relaxed) as f64));
+            wj.set("busy_us",
+                   Json::Num(m.busy_us.load(Ordering::Relaxed) as f64));
+            workers.push(wj);
+        }
+        j.set("workers", Json::Arr(workers));
+        j.set("sessions", Json::Num(self.sessions.len() as f64));
+        j
+    }
     /// Per-connection setup: a codec engine pre-warmed for every
     /// servable bucket (geometry was validated by
     /// [`ServingModel::load`], so warming cannot trip the
     /// freq_indices asserts).
-    pub fn open_conn(&self, reply: mpsc::Sender<Frame>, peer: String)
+    pub fn open_conn(&self, reply: mpsc::Sender<Reply>, peer: String)
         -> ConnState {
         let mut engine = CodecEngine::new();
         for (&bucket, bm) in &self.model.buckets {
@@ -369,12 +465,19 @@ impl ServingService {
     #[allow(clippy::too_many_arguments)]
     fn unpack_and_enqueue(&self, conn: &mut ConnState, session: u64,
                           request: u64, bucket: usize, pks: usize, pkd: usize,
-                          true_len: u16, block: &[f32], t_rx: Instant)
+                          true_len: u16, block: &[f32], t_rx: Instant,
+                          seq: u32, mut trace: Option<Box<TraceInFlight>>)
         -> Response {
         let bm = &self.model.buckets[&bucket];
         let (ks0, kd0) = (bm.ks, bm.kd);
         let d = self.model.d_model;
         let t0 = Instant::now();
+        // a sampled step borrows the connection engine's stage timer
+        // for the duration of its own unpack — unsampled frames on the
+        // same connection never pay the per-stage clock reads
+        if trace.is_some() {
+            conn.engine.enable_stage_timing();
+        }
         let (mut re, mut im) = (Vec::new(), Vec::new());
         let unpacked = if pks == ks0 && pkd == kd0 {
             unpack_block_into(&mut conn.engine, block, bucket, d, pks, pkd,
@@ -391,8 +494,17 @@ impl ServingService {
             conn.point_im = sim;
             r
         };
-        self.metrics.decompress_us.record(t0.elapsed());
+        let spent = t0.elapsed();
+        self.metrics.decompress_us.record_dur(spent);
+        if let Some(t) = trace.as_mut() {
+            t.decompress_us = spent.as_micros() as u64;
+            t.codec = conn.engine.stage_times().unwrap_or_default();
+            conn.engine.disable_stage_timing();
+        }
         if let Err(e) = unpacked {
+            self.obs.flight.record(FlightKind::BadRequest, session,
+                                   self.sessions.shard_of(session) as u16,
+                                   seq, bucket as u64);
             return Self::err(ErrorCode::BadRequest, format!("unpack: {e}"));
         }
         let item = GroupItem {
@@ -403,9 +515,13 @@ impl ServingService {
             im,
             reply: conn.reply.clone(),
             t_rx,
+            trace,
         };
         if !self.feed.push(bucket, item) {
             return Response::Close; // service shutting down
+        }
+        if let Some(bm) = self.obs.bucket(bucket) {
+            bm.enqueued.fetch_add(1, Ordering::Relaxed);
         }
         Response::None
     }
@@ -420,6 +536,10 @@ impl ServingService {
                 self.metrics.hellos.fetch_add(1, Ordering::Relaxed);
                 if magic != PROTOCOL_MAGIC {
                     self.metrics.proto_rejects.fetch_add(1, Ordering::Relaxed);
+                    self.obs.flight.record(
+                        FlightKind::ProtoReject, session,
+                        self.sessions.shard_of(session) as u16, 0,
+                        magic as u64);
                     crate::debug!("service", "{}: bad magic {magic:#010x}",
                                   conn.peer);
                     return Self::err(ErrorCode::VersionMismatch,
@@ -427,6 +547,10 @@ impl ServingService {
                 }
                 if version != PROTOCOL_VERSION {
                     self.metrics.proto_rejects.fetch_add(1, Ordering::Relaxed);
+                    self.obs.flight.record(
+                        FlightKind::ProtoReject, session,
+                        self.sessions.shard_of(session) as u16, 0,
+                        version as u64);
                     crate::debug!("service", "{}: protocol v{version}",
                                   conn.peer);
                     return Self::err(
@@ -492,6 +616,10 @@ impl ServingService {
                 let Some((pks, pkd)) =
                     self.checked_point(bucket, point, ks, kd)
                 else {
+                    self.obs.flight.record(
+                        FlightKind::BadRequest, session,
+                        self.sessions.shard_of(session) as u16, 0,
+                        bucket as u64);
                     return Self::err(
                         ErrorCode::BadRequest,
                         format!("bad bucket {bucket} point {point} \
@@ -518,9 +646,15 @@ impl ServingService {
                                          "admission refused".into());
                     }
                 }
+                let mut trace = self.obs.tracer.begin(session, request, t_rx);
+                if let Some(t) = trace.as_mut() {
+                    t.bucket = bucket;
+                    t.point = point;
+                    t.shard = self.sessions.shard_of(session);
+                }
                 let resp = self.unpack_and_enqueue(conn, session, request,
                                                    bucket, pks, pkd, true_len,
-                                                   &packed, t_rx);
+                                                   &packed, t_rx, 0, trace);
                 // record the ladder point only for frames that were
                 // actually served: a rejected body must not move the
                 // session's point (a stream running at another point
@@ -531,7 +665,11 @@ impl ServingService {
                     if let Some(dwell) = switched {
                         self.metrics.ladder_switches
                             .fetch_add(1, Ordering::Relaxed);
-                        self.metrics.ladder_dwell_frames.record_us(dwell);
+                        self.metrics.ladder_dwell_frames.record(dwell);
+                        self.obs.flight.record(
+                            FlightKind::LadderSwitch, session,
+                            self.sessions.shard_of(session) as u16, 0,
+                            point as u64);
                     }
                 }
                 resp
@@ -565,6 +703,10 @@ impl ServingService {
                 let Some((bks, bkd)) =
                     self.checked_point(bucket, point, ks, kd)
                 else {
+                    self.obs.flight.record(
+                        FlightKind::BadRequest, session,
+                        self.sessions.shard_of(session) as u16, seq,
+                        bucket as u64);
                     return Self::err(
                         ErrorCode::BadRequest,
                         format!("bad bucket {bucket} point {point} \
@@ -596,25 +738,43 @@ impl ServingService {
                                        geom, body_bytes as u64, &packed,
                                        &updates)
                 });
-                let (block, switched) = match applied {
+                let shard = self.sessions.shard_of(session) as u16;
+                let (block, switched, resynced) = match applied {
                     Ok(ok) => ok,
                     Err(e) => {
                         self.metrics.stream_rejects.fetch_add(
                             1, Ordering::Relaxed);
+                        self.obs.flight.record(FlightKind::StreamReject,
+                                               session, shard, seq,
+                                               point as u64);
                         return Self::err(ErrorCode::StreamReject,
                                          format!("stream: {e:#}"));
                     }
                 };
+                if resynced {
+                    self.obs.flight.record(FlightKind::KeyframeResync,
+                                           session, shard, seq,
+                                           point as u64);
+                }
                 if let Some(dwell) = switched {
                     self.metrics.ladder_switches
                         .fetch_add(1, Ordering::Relaxed);
-                    self.metrics.ladder_dwell_frames.record_us(dwell);
+                    self.metrics.ladder_dwell_frames.record(dwell);
+                    self.obs.flight.record(FlightKind::LadderSwitch, session,
+                                           shard, seq, point as u64);
+                }
+                let mut trace = self.obs.tracer.begin(session, request, t_rx);
+                if let Some(t) = trace.as_mut() {
+                    t.bucket = bucket;
+                    t.point = point;
+                    t.shard = shard as usize;
                 }
                 self.unpack_and_enqueue(conn, session, request, bucket, bks,
-                                        bkd, true_len, &block, t_rx)
+                                        bkd, true_len, &block, t_rx, seq,
+                                        trace)
             }
             Frame::GetStats => Response::Reply(Frame::Stats {
-                json: self.metrics.to_json().to_string_compact() }),
+                json: self.stats_json().to_string_compact() }),
             Frame::Bye => Response::Close,
             other => Self::err(ErrorCode::BadRequest,
                                format!("unexpected frame {}",
@@ -635,13 +795,16 @@ impl ServingService {
 /// session; the copy keeps the critical section to the decoder apply
 /// — unpacking happens outside the lock, like the Activation path.
 /// `body_bytes` is the codec-body size charged to the session
-/// (headerless, matching the Activation path's accounting).
+/// (headerless, matching the Activation path's accounting).  The
+/// final bool reports a keyframe *resync*: a mid-stream keyframe that
+/// re-seeded a desynced (evicted or never-seeded) decoder — the
+/// client-visible recovery event the flight recorder tracks.
 #[allow(clippy::too_many_arguments)]
 fn apply_stream_frame(sessions: &mut SessionManager, session: u64, seq: u32,
                       keyframe: bool, point: u8, geom: BlockGeom,
                       body_bytes: u64, packed: &[f32],
                       updates: &[(u32, f32)])
-    -> Result<(Vec<f32>, Option<u64>)> {
+    -> Result<(Vec<f32>, Option<u64>, bool)> {
     // continuity is validated against the STREAM's own point (moved
     // only by keyframes) — an interleaved recompute frame at another
     // point must not poison an in-sequence delta
@@ -650,6 +813,12 @@ fn apply_stream_frame(sessions: &mut SessionManager, session: u64, seq: u32,
         bail!("ladder switch (point {} -> {point}) requires a keyframe",
               prev.unwrap());
     }
+    let was_synced = sessions
+        .get(session)
+        .map(|s| s.stream.is_synced())
+        .unwrap_or(false);
+    // a keyframe at seq 0 is the normal stream start, not a recovery
+    let resynced = keyframe && !was_synced && seq != 0;
     let block = {
         let dec = if keyframe {
             sessions.stream_key_decoder(session, body_bytes)
@@ -669,7 +838,7 @@ fn apply_stream_frame(sessions: &mut SessionManager, session: u64, seq: u32,
     if keyframe {
         sessions.set_stream_point(session, point);
     }
-    Ok((block, sessions.note_point(session, point)))
+    Ok((block, sessions.note_point(session, point), resynced))
 }
 
 /// Pump one transport through the service core on the caller's
@@ -685,14 +854,21 @@ pub fn serve_transport(service: Arc<ServingService>,
     let peer = transport.peer();
     let (mut tx, mut rx) = transport.split()?;
 
-    // writer thread: serialises replies from batcher workers + us
-    let (reply_tx, reply_rx) = mpsc::channel::<Frame>();
-    let metrics = service.metrics.clone();
+    // writer thread: serialises replies from batcher workers + us,
+    // and stamps sampled steps' tx stage once the frame is on the wire
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+    let svc = service.clone();
     let wh = std::thread::spawn(move || {
-        while let Ok(frame) = reply_rx.recv() {
-            match tx.send(&frame) {
+        while let Ok(reply) = reply_rx.recv() {
+            let t0 = Instant::now();
+            match tx.send(&reply.frame) {
                 Ok(n) => {
-                    metrics.bytes_tx.fetch_add(n as u64, Ordering::Relaxed);
+                    svc.metrics.bytes_tx.fetch_add(n as u64,
+                                                   Ordering::Relaxed);
+                    if let Some(t) = reply.trace {
+                        svc.obs.tracer.finish(StepTrace::finish(
+                            *t, t0.elapsed().as_micros() as u64));
+                    }
                 }
                 Err(_) => break,
             }
@@ -708,7 +884,7 @@ pub fn serve_transport(service: Arc<ServingService>,
         match service.handle(&mut conn, frame) {
             Response::None => {}
             Response::Reply(f) => {
-                if reply_tx.send(f).is_err() {
+                if reply_tx.send(f.into()).is_err() {
                     break;
                 }
             }
@@ -761,6 +937,29 @@ impl ServiceHandle {
         self.poll.conn_count()
     }
 
+    /// The service's observability bundle (tracer, flight recorder,
+    /// sharded metric families).
+    pub fn obs(&self) -> &Arc<Obs> {
+        self.service.obs()
+    }
+
+    /// Snapshot the flight recorder: the most recent structured
+    /// events, oldest first.
+    pub fn dump_flight(&self) -> Vec<super::obs::FlightEvent> {
+        self.service.obs.flight.dump()
+    }
+
+    /// Snapshot-timeline JSONL lines emitted so far (one per
+    /// `snapshot_interval_ms` tick, plus one final line at shutdown).
+    pub fn snapshots(&self) -> Vec<String> {
+        self.service.obs.snapshots()
+    }
+
+    /// Completed per-step traces retained by the tracer.
+    pub fn traces(&self) -> Vec<StepTrace> {
+        self.service.obs.tracer.completed()
+    }
+
     /// Stop and join everything, in dependency order: the poll
     /// workers first (no new work enters the feed, registered
     /// connections are retired and their session bindings released),
@@ -773,6 +972,13 @@ impl ServiceHandle {
         self.service.feed.close();
         for h in self.handles.drain(..) {
             let _ = h.join();
+        }
+        // the flight recorder's last words: anything it saw is part of
+        // the service's post-mortem record (debug level — soaks that
+        // deliberately provoke rejects stay quiet by default)
+        if !self.service.obs.flight.is_empty() {
+            crate::debug!("service", "shutdown {}",
+                          self.service.obs.flight.dump_text());
         }
     }
 }
@@ -794,6 +1000,9 @@ pub fn start_service(cfg: &ServeConfig, store: Arc<ArtifactStore>)
     let feed: Arc<BatchFeed<GroupItem>> = Arc::new(BatchFeed::new(
         &bucket_ids, cfg.max_batch,
         Duration::from_micros(cfg.batch_deadline_us)));
+    let obs = Arc::new(Obs::new(cfg.trace_sample, cfg.shards, &bucket_ids,
+                                cfg.poll_workers));
+    sessions.attach_obs(&obs.shards, &obs.flight);
     let mut handles = Vec::new();
 
     // compute workers — one thread per accelerator unit, pulling
@@ -804,57 +1013,82 @@ pub fn start_service(cfg: &ServeConfig, store: Arc<ArtifactStore>)
         let model = model.clone();
         let metrics = metrics.clone();
         let stop = stop.clone();
+        let obs = obs.clone();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("fc-compute-{wid}"))
-                .spawn(move || loop {
-                    let group = feed.wait_take(Duration::from_millis(50));
-                    match group {
-                        Feed::Group(bucket, group) => {
-                            metrics.batches.fetch_add(1, Ordering::Relaxed);
-                            metrics.batch_size_sum.fetch_add(
-                                group.len() as u64, Ordering::Relaxed);
-                            let now = Instant::now();
-                            let items: Vec<GroupItem> = group
-                                .into_iter()
-                                .map(|p| {
-                                    metrics.queue_wait_us.record(
-                                        now.duration_since(p.enqueued));
-                                    p.item
-                                })
-                                .collect();
-                            let t0 = Instant::now();
-                            match model.run_group(bucket, &items) {
-                                Ok(results) => {
-                                    metrics.exec_us.record(t0.elapsed());
-                                    for (it, (token, logprob)) in
-                                        items.iter().zip(results) {
-                                        metrics.tokens
-                                            .fetch_add(1, Ordering::Relaxed);
-                                        metrics.e2e_us.record(
-                                            it.t_rx.elapsed());
-                                        let _ = it.reply.send(Frame::Token {
-                                            request: it.request, token,
-                                            logprob });
-                                    }
+                .spawn(move || {
+                    let _postmortem = DumpOnPanic(obs.flight.clone());
+                    loop {
+                        let group = feed.wait_take(Duration::from_millis(50));
+                        match group {
+                            Feed::Group(bucket, group) => {
+                                metrics.batches.fetch_add(1, Ordering::Relaxed);
+                                metrics.batch_size_sum.fetch_add(
+                                    group.len() as u64, Ordering::Relaxed);
+                                let bucket_obs = obs.bucket(bucket);
+                                if let Some(bm) = bucket_obs {
+                                    bm.groups.fetch_add(1, Ordering::Relaxed);
                                 }
-                                Err(e) => {
-                                    crate::error!("worker",
-                                                  "unit {wid}: {e:#}");
-                                    for it in &items {
-                                        let _ = it.reply.send(Frame::Error {
-                                            code: ErrorCode::Internal,
-                                            msg: format!("{e:#}") });
+                                let now = Instant::now();
+                                let mut items: Vec<GroupItem> = group
+                                    .into_iter()
+                                    .map(|p| {
+                                        let wait = now.duration_since(p.enqueued);
+                                        metrics.queue_wait_us.record_dur(wait);
+                                        if let Some(bm) = bucket_obs {
+                                            bm.wait_us.record(
+                                                wait.as_micros() as u64);
+                                        }
+                                        let mut item = p.item;
+                                        if let Some(t) = item.trace.as_mut() {
+                                            t.queue_wait_us =
+                                                wait.as_micros() as u64;
+                                        }
+                                        item
+                                    })
+                                    .collect();
+                                let t0 = Instant::now();
+                                match model.run_group(bucket, &items) {
+                                    Ok(results) => {
+                                        let spent = t0.elapsed();
+                                        metrics.exec_us.record_dur(spent);
+                                        for (it, (token, logprob)) in
+                                            items.iter_mut().zip(results) {
+                                            metrics.tokens
+                                                .fetch_add(1, Ordering::Relaxed);
+                                            metrics.e2e_us.record_dur(
+                                                it.t_rx.elapsed());
+                                            let mut trace = it.trace.take();
+                                            if let Some(t) = trace.as_mut() {
+                                                t.exec_us =
+                                                    spent.as_micros() as u64;
+                                            }
+                                            let _ = it.reply.send(Reply {
+                                                frame: Frame::Token {
+                                                    request: it.request, token,
+                                                    logprob },
+                                                trace });
+                                        }
+                                    }
+                                    Err(e) => {
+                                        crate::error!("worker",
+                                                      "unit {wid}: {e:#}");
+                                        for it in &items {
+                                            let _ = it.reply.send(Frame::Error {
+                                                code: ErrorCode::Internal,
+                                                msg: format!("{e:#}") }.into());
+                                        }
                                     }
                                 }
                             }
-                        }
-                        Feed::TimedOut => {
-                            if stop.load(Ordering::SeqCst) {
-                                break;
+                            Feed::TimedOut => {
+                                if stop.load(Ordering::SeqCst) {
+                                    break;
+                                }
                             }
+                            Feed::Closed => break,
                         }
-                        Feed::Closed => break,
                     }
                 })
                 .expect("spawn compute worker"));
@@ -875,11 +1109,68 @@ pub fn start_service(cfg: &ServeConfig, store: Arc<ArtifactStore>)
         caps: server_caps,
         advertise_ladder: cfg.ladder,
         next_conn: std::sync::atomic::AtomicU64::new(1),
+        obs,
     });
     let idle = (cfg.idle_deadline_ms > 0)
         .then(|| Duration::from_millis(cfg.idle_deadline_ms));
     let poll = Arc::new(PollPool::start(service.clone(), cfg.poll_workers,
                                         idle));
+
+    // snapshot timeline: one delta-metrics JSONL line per tick, plus
+    // a final line at shutdown so even a short run has a timeline
+    if cfg.snapshot_interval_ms > 0 {
+        let svc = service.clone();
+        let poll = poll.clone();
+        let stop = stop.clone();
+        let interval = Duration::from_millis(cfg.snapshot_interval_ms);
+        handles.push(
+            std::thread::Builder::new()
+                .name("fc-obs-snap".into())
+                .spawn(move || {
+                    let start = Instant::now();
+                    let snap = |m: &Metrics| -> [u64; 6] {
+                        [m.tokens.load(Ordering::Relaxed),
+                         m.requests.load(Ordering::Relaxed),
+                         m.batches.load(Ordering::Relaxed),
+                         m.bytes_rx.load(Ordering::Relaxed),
+                         m.bytes_tx.load(Ordering::Relaxed),
+                         m.stream_rejects.load(Ordering::Relaxed)]
+                    };
+                    let mut last = snap(&svc.metrics);
+                    loop {
+                        let wake = Instant::now() + interval;
+                        while Instant::now() < wake
+                            && !stop.load(Ordering::SeqCst) {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        let stopping = stop.load(Ordering::SeqCst);
+                        let cur = snap(&svc.metrics);
+                        let mut j = Json::obj();
+                        j.set("t_ms", Json::Num(
+                            start.elapsed().as_millis() as f64));
+                        for (i, key) in ["tokens", "requests", "batches",
+                                         "bytes_rx", "bytes_tx",
+                                         "stream_rejects"]
+                            .iter().enumerate() {
+                            j.set(key, Json::Num(
+                                cur[i].saturating_sub(last[i]) as f64));
+                        }
+                        j.set("queued",
+                              Json::Num(svc.feed.queued() as f64));
+                        j.set("conns",
+                              Json::Num(poll.conn_count() as f64));
+                        j.set("sessions",
+                              Json::Num(svc.sessions.len() as f64));
+                        svc.obs.push_snapshot(j.to_string_compact());
+                        last = cur;
+                        if stopping {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawn snapshot thread"));
+    }
+
     Ok(ServiceHandle { service, metrics, stop, poll, handles })
 }
 

@@ -15,9 +15,18 @@
 //! `max_sessions / shards`).
 
 use crate::codec::stream::StreamDecoder;
+use crate::coordinator::obs::{FlightKind, FlightRecorder, ShardMetrics};
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// `aux` word of a [`FlightKind::SessionEvict`] event: dropped by the
+/// TTL (sweep or delta-path expiry).
+pub const EVICT_TTL: u64 = 1;
+/// `aux` word of a [`FlightKind::SessionEvict`] event: LRU-displaced
+/// by a new session under admission pressure.
+pub const EVICT_LRU: u64 = 2;
 
 #[derive(Debug)]
 pub struct Session {
@@ -58,11 +67,37 @@ pub struct SessionManager {
     sessions: HashMap<u64, Session>,
     ttl: Duration,
     max_sessions: usize,
+    /// Observability hook: this manager's shard index plus the shared
+    /// per-shard counters and flight recorder.  Attached by the
+    /// serving core via [`ShardedSessions::attach_obs`]; absent for
+    /// bare managers (unit tests), in which case admissions and
+    /// evictions simply go unrecorded.
+    obs: Option<(u16, Arc<ShardMetrics>, Arc<FlightRecorder>)>,
 }
 
 impl SessionManager {
     pub fn new(ttl: Duration, max_sessions: usize) -> SessionManager {
-        SessionManager { sessions: HashMap::new(), ttl, max_sessions }
+        SessionManager { sessions: HashMap::new(), ttl, max_sessions, obs: None }
+    }
+
+    /// Attach the per-shard observability hook (shard index, counter
+    /// family, flight recorder).
+    pub fn set_obs(&mut self, shard: u16, metrics: Arc<ShardMetrics>,
+                   flight: Arc<FlightRecorder>) {
+        self.obs = Some((shard, metrics, flight));
+    }
+
+    fn note_admitted(&self) {
+        if let Some((_, m, _)) = &self.obs {
+            m.admitted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn note_evicted(&self, id: u64, cause: u64) {
+        if let Some((shard, m, flight)) = &self.obs {
+            m.evicted.fetch_add(1, Ordering::Relaxed);
+            flight.record(FlightKind::SessionEvict, id, *shard, 0, cause);
+        }
     }
 
     /// Register (or refresh) a session from a handshake, recording
@@ -105,13 +140,14 @@ impl SessionManager {
                     return false;
                 }
                 self.sessions.remove(&stale);
+                self.note_evicted(stale, EVICT_LRU);
             }
         }
         let now = Instant::now();
-        self.sessions
-            .entry(id)
-            .and_modify(|s| s.last_seen = now)
-            .or_insert(Session {
+        if let Some(s) = self.sessions.get_mut(&id) {
+            s.last_seen = now;
+        } else {
+            self.sessions.insert(id, Session {
                 id,
                 model: model.to_string(),
                 caps: 0,
@@ -125,6 +161,8 @@ impl SessionManager {
                 point_frames: 0,
                 stream_point: 0,
             });
+            self.note_admitted();
+        }
         true
     }
 
@@ -193,6 +231,7 @@ impl SessionManager {
             .unwrap_or(false);
         if expired {
             self.sessions.remove(&id);
+            self.note_evicted(id, EVICT_TTL);
             return None;
         }
         let s = self.sessions.get_mut(&id)?;
@@ -259,7 +298,20 @@ impl SessionManager {
 
     pub fn evict_expired(&mut self) {
         let ttl = self.ttl;
-        self.sessions.retain(|_, s| s.last_seen.elapsed() < ttl);
+        if self.obs.is_none() {
+            self.sessions.retain(|_, s| s.last_seen.elapsed() < ttl);
+            return;
+        }
+        let dead: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| s.last_seen.elapsed() >= ttl)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in dead {
+            self.sessions.remove(&id);
+            self.note_evicted(id, EVICT_TTL);
+        }
     }
 
     pub fn remove(&mut self, id: u64) {
@@ -307,6 +359,19 @@ impl ShardedSessions {
 
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Attach per-shard observability: shard `i` gets `metrics[i]`
+    /// and the shared flight recorder, so its admissions/evictions
+    /// are counted and eviction events land in the flight ring.
+    /// Called once by the serving core at startup.
+    pub fn attach_obs(&self, metrics: &[Arc<ShardMetrics>],
+                      flight: &Arc<FlightRecorder>) {
+        for (i, s) in self.shards.iter().enumerate() {
+            s.lock().unwrap().set_obs(i as u16,
+                                      metrics[i % metrics.len()].clone(),
+                                      flight.clone());
+        }
     }
 
     /// The shard index session `id` lives in.  Fibonacci-multiply
@@ -594,6 +659,45 @@ mod tests {
         assert!(!s.hello(ids[2], "x", 0),
                 "third live session in a 2-budget shard must be refused");
         assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn obs_hook_counts_admissions_and_evictions() {
+        let s = ShardedSessions::new(Duration::from_millis(10), 16, 2);
+        let metrics: Vec<Arc<ShardMetrics>> =
+            (0..2).map(|_| Arc::new(ShardMetrics::default())).collect();
+        let flight = Arc::new(FlightRecorder::new(16));
+        s.attach_obs(&metrics, &flight);
+        assert!(s.hello(3, "x", 0));
+        assert!(s.hello(4, "x", 0));
+        let admitted: u64 = metrics.iter()
+            .map(|m| m.admitted.load(Ordering::Relaxed)).sum();
+        assert_eq!(admitted, 2);
+        // refreshing an existing session is not a new admission
+        assert!(s.hello(3, "x", 0));
+        let again: u64 = metrics.iter()
+            .map(|m| m.admitted.load(Ordering::Relaxed)).sum();
+        assert_eq!(again, 2);
+        std::thread::sleep(Duration::from_millis(20));
+        s.evict_expired();
+        let evicted: u64 = metrics.iter()
+            .map(|m| m.evicted.load(Ordering::Relaxed)).sum();
+        assert_eq!(evicted, 2);
+        // each eviction landed in the flight ring with the session's
+        // own shard index and the TTL cause word
+        let dump = flight.dump();
+        assert_eq!(dump.len(), 2);
+        for e in dump {
+            assert_eq!(e.kind, FlightKind::SessionEvict);
+            assert_eq!(e.shard as usize, s.shard_of(e.session));
+            assert_eq!(e.aux, EVICT_TTL);
+            assert!([3, 4].contains(&e.session));
+        }
+        // per-shard eviction counts match where the sessions lived
+        for sid in [3u64, 4] {
+            assert!(metrics[s.shard_of(sid)].evicted
+                        .load(Ordering::Relaxed) >= 1);
+        }
     }
 
     #[test]

@@ -1,8 +1,16 @@
-//! Log-bucketed latency histogram (HDR-style): cheap concurrent
-//! recording in the coordinator hot path, percentile queries for the
-//! benchmark reports.  Buckets are powers of 2^(1/8) over
-//! [1us, ~4000s], i.e. ~8.6% relative precision — ample for latency
-//! reporting.
+//! Log-bucketed histogram (HDR-style): cheap concurrent recording in
+//! the coordinator hot path, percentile queries for the benchmark
+//! reports.  Buckets are powers of 2^(1/8) over [1, ~4e9], i.e. ~8.6%
+//! relative precision — ample for latency reporting.
+//!
+//! The core API is unit-generic — [`Histogram::record`] /
+//! [`Histogram::mean`] / [`Histogram::percentile`] take and return
+//! plain `u64` values in whatever unit the caller chose (frames,
+//! bytes, …).  Latency call sites use the `_us`-suffixed wrappers
+//! ([`Histogram::record_us`], [`Histogram::record_dur`], …) so the
+//! unit is visible at the call site; a frame-counting histogram like
+//! the coordinator's `ladder_dwell_frames` uses the generic core and
+//! no longer abuses a time-flavoured name.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -14,8 +22,8 @@ const NBUCKETS: usize = LINEAR as usize + SUB * OCTAVES;
 pub struct Histogram {
     buckets: Vec<AtomicU64>,
     count: AtomicU64,
-    sum_us: AtomicU64,
-    max_us: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
 }
 
 impl Default for Histogram {
@@ -29,17 +37,17 @@ impl Histogram {
         Histogram {
             buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
             count: AtomicU64::new(0),
-            sum_us: AtomicU64::new(0),
-            max_us: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
         }
     }
 
-    fn index(us: u64) -> usize {
-        if us < LINEAR {
-            return us as usize;
+    fn index(v: u64) -> usize {
+        if v < LINEAR {
+            return v as usize;
         }
-        let oct = 63 - us.leading_zeros() as usize; // floor(log2), >= 8
-        let frac = ((us - (1 << oct)) * SUB as u64 >> oct) as usize;
+        let oct = 63 - v.leading_zeros() as usize; // floor(log2), >= 8
+        let frac = ((v - (1 << oct)) * SUB as u64 >> oct) as usize;
         (LINEAR as usize + (oct - 8) * SUB + frac).min(NBUCKETS - 1)
     }
 
@@ -53,36 +61,35 @@ impl Histogram {
         (1u64 << oct) + (frac << oct) / SUB as u64
     }
 
-    pub fn record_us(&self, us: u64) {
-        self.buckets[Self::index(us)].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
-        self.max_us.fetch_max(us, Ordering::Relaxed);
-    }
+    // -- unit-generic core -------------------------------------------------
 
-    pub fn record(&self, d: std::time::Duration) {
-        self.record_us(d.as_micros() as u64);
+    /// Record one value (whatever unit this histogram counts).
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
-    pub fn mean_us(&self) -> f64 {
+    pub fn mean(&self) -> f64 {
         let c = self.count();
         if c == 0 {
             0.0
         } else {
-            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+            self.sum.load(Ordering::Relaxed) as f64 / c as f64
         }
     }
 
-    pub fn max_us(&self) -> u64 {
-        self.max_us.load(Ordering::Relaxed)
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
     }
 
     /// p in [0, 100].
-    pub fn percentile_us(&self, p: f64) -> u64 {
+    pub fn percentile(&self, p: f64) -> u64 {
         let total = self.count();
         if total == 0 {
             return 0;
@@ -95,18 +102,40 @@ impl Histogram {
                 return Self::bucket_value(i);
             }
         }
-        self.max_us()
+        self.max()
+    }
+
+    // -- microsecond wrappers (latency call sites) -------------------------
+
+    pub fn record_us(&self, us: u64) {
+        self.record(us);
+    }
+
+    pub fn record_dur(&self, d: std::time::Duration) {
+        self.record(d.as_micros() as u64);
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean()
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max()
+    }
+
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        self.percentile(p)
     }
 
     pub fn summary(&self) -> String {
         format!(
             "n={} mean={:.1}us p50={}us p95={}us p99={}us max={}us",
             self.count(),
-            self.mean_us(),
-            self.percentile_us(50.0),
-            self.percentile_us(95.0),
-            self.percentile_us(99.0),
-            self.max_us()
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+            self.max()
         )
     }
 }
@@ -118,8 +147,8 @@ mod tests {
     #[test]
     fn index_monotone() {
         let mut last = 0;
-        for us in [1u64, 2, 3, 5, 9, 17, 100, 1000, 123_456, 10_000_000] {
-            let i = Histogram::index(us);
+        for v in [1u64, 2, 3, 5, 9, 17, 100, 1000, 123_456, 10_000_000] {
+            let i = Histogram::index(v);
             assert!(i >= last);
             last = i;
         }
@@ -127,13 +156,13 @@ mod tests {
 
     #[test]
     fn bucket_value_brackets_input() {
-        for us in [0u64, 1, 7, 63, 255, 256, 257, 1000, 4095, 1 << 20, 1 << 31] {
-            let idx = Histogram::index(us);
+        for v in [0u64, 1, 7, 63, 255, 256, 257, 1000, 4095, 1 << 20, 1 << 31] {
+            let idx = Histogram::index(v);
             let lo = Histogram::bucket_value(idx);
-            assert!(lo <= us, "lo {lo} us {us}");
+            assert!(lo <= v, "lo {lo} v {v}");
             // next bucket must be above
             let hi = Histogram::bucket_value(idx + 1);
-            assert!(hi > us, "hi {hi} us {us}");
+            assert!(hi > v, "hi {hi} v {v}");
         }
     }
 
@@ -141,20 +170,35 @@ mod tests {
     fn percentiles_reasonable() {
         let h = Histogram::new();
         for i in 1..=1000u64 {
-            h.record_us(i);
+            h.record(i);
         }
-        let p50 = h.percentile_us(50.0);
+        let p50 = h.percentile(50.0);
         assert!((450..=560).contains(&p50), "p50={p50}");
-        let p99 = h.percentile_us(99.0);
+        let p99 = h.percentile(99.0);
         assert!((900..=1100).contains(&p99), "p99={p99}");
         assert_eq!(h.count(), 1000);
-        assert!((h.mean_us() - 500.5).abs() < 1.0);
+        assert!((h.mean() - 500.5).abs() < 1.0);
     }
 
     #[test]
     fn empty_is_zero() {
         let h = Histogram::new();
-        assert_eq!(h.percentile_us(99.0), 0);
-        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.percentile(99.0), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn unit_wrappers_share_the_core() {
+        // the _us wrappers are aliases over the generic core, so a
+        // histogram recorded through one API reads back through the
+        // other — one set of buckets, not two
+        let h = Histogram::new();
+        h.record_us(100);
+        h.record_dur(std::time::Duration::from_micros(300));
+        h.record(500); // generic unit (e.g. frames)
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max(), h.max_us());
+        assert_eq!(h.percentile(100.0), h.percentile_us(100.0));
+        assert!((h.mean() - 300.0).abs() < 1e-9);
     }
 }

@@ -1,8 +1,16 @@
-//! Tiny leveled logger.  `FC_LOG=debug|info|warn|error` selects the
-//! level (default info); output goes to stderr with elapsed-time
-//! stamps so request traces in the coordinator are readable.
+//! Tiny leveled logger with per-target filtering.  `FC_LOG` is a
+//! comma-separated directive list: a bare level
+//! (`debug|info|warn|error`) sets the default, and `target=level`
+//! overrides it for one log target (matched by prefix, longest
+//! directive winning), e.g. `FC_LOG=warn,poll=debug` silences
+//! everything below warn except the poll workers.  Unrecognized
+//! directives are reported once to stderr instead of being silently
+//! swallowed into the info default.  Output goes to stderr with
+//! elapsed-time stamps so request traces in the coordinator are
+//! readable.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -14,26 +22,89 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(255);
+static TARGETS: OnceLock<Vec<(String, Level)>> = OnceLock::new();
 
 fn start() -> Instant {
-    use std::sync::OnceLock;
     static START: OnceLock<Instant> = OnceLock::new();
     *START.get_or_init(Instant::now)
 }
 
-pub fn level() -> Level {
-    let raw = LEVEL.load(Ordering::Relaxed);
-    if raw == 255 {
-        let lvl = match std::env::var("FC_LOG").as_deref() {
-            Ok("debug") => Level::Debug,
-            Ok("warn") => Level::Warn,
-            Ok("error") => Level::Error,
-            _ => Level::Info,
-        };
-        LEVEL.store(lvl as u8, Ordering::Relaxed);
-        return lvl;
+fn parse_level(s: &str) -> Option<Level> {
+    match s {
+        "debug" => Some(Level::Debug),
+        "info" => Some(Level::Info),
+        "warn" => Some(Level::Warn),
+        "error" => Some(Level::Error),
+        _ => None,
     }
-    match raw {
+}
+
+/// Parse an `FC_LOG` spec into (default level, per-target directives,
+/// unrecognized tokens).  Pure, so the grammar is unit-testable
+/// without touching the process environment.
+fn parse_spec(spec: &str) -> (Option<Level>, Vec<(String, Level)>, Vec<String>) {
+    let mut default = None;
+    let mut targets = Vec::new();
+    let mut bad = Vec::new();
+    for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        if let Some((t, l)) = tok.split_once('=') {
+            match parse_level(l.trim()) {
+                Some(lvl) => targets.push((t.trim().to_string(), lvl)),
+                None => bad.push(tok.to_string()),
+            }
+        } else {
+            match parse_level(tok) {
+                Some(lvl) => default = Some(lvl),
+                None => bad.push(tok.to_string()),
+            }
+        }
+    }
+    (default, targets, bad)
+}
+
+/// Effective level for `target` given the parsed directives: the
+/// longest directive key that prefixes the target wins; no match
+/// falls back to the default.
+fn effective(targets: &[(String, Level)], default: Level, target: &str) -> Level {
+    let mut best: Option<(usize, Level)> = None;
+    for (key, lvl) in targets {
+        if target.starts_with(key.as_str())
+            && best.map(|(n, _)| key.len() > n).unwrap_or(true)
+        {
+            best = Some((key.len(), *lvl));
+        }
+    }
+    best.map(|(_, l)| l).unwrap_or(default)
+}
+
+/// Parse `FC_LOG` exactly once (warning once about anything
+/// unrecognized) and return the per-target directives.
+fn directives() -> &'static [(String, Level)] {
+    TARGETS.get_or_init(|| {
+        let spec = std::env::var("FC_LOG").unwrap_or_default();
+        let (default, targets, bad) = parse_spec(&spec);
+        for tok in &bad {
+            eprintln!(
+                "[FC_LOG] unrecognized directive '{tok}' (expected \
+                 debug|info|warn|error or target=level); using info"
+            );
+        }
+        // an explicit set_level() that already ran wins over the env
+        let _ = LEVEL.compare_exchange(
+            255,
+            default.unwrap_or(Level::Info) as u8,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        );
+        targets
+    })
+}
+
+/// The default log level (per-target directives may override it for
+/// individual targets — see [`target_level`]).
+pub fn level() -> Level {
+    directives();
+    match LEVEL.load(Ordering::Relaxed) {
         0 => Level::Debug,
         1 => Level::Info,
         2 => Level::Warn,
@@ -41,12 +112,18 @@ pub fn level() -> Level {
     }
 }
 
+/// The effective level for one log target.
+pub fn target_level(target: &str) -> Level {
+    let targets = directives();
+    effective(targets, level(), target)
+}
+
 pub fn set_level(lvl: Level) {
     LEVEL.store(lvl as u8, Ordering::Relaxed);
 }
 
 pub fn log(lvl: Level, target: &str, msg: std::fmt::Arguments<'_>) {
-    if lvl < level() {
+    if lvl < target_level(target) {
         return;
     }
     let tag = match lvl {
@@ -83,5 +160,50 @@ mod tests {
         assert_eq!(level(), Level::Warn);
         set_level(Level::Info);
         assert_eq!(level(), Level::Info);
+    }
+
+    #[test]
+    fn spec_bare_level() {
+        let (d, t, bad) = parse_spec("debug");
+        assert_eq!(d, Some(Level::Debug));
+        assert!(t.is_empty());
+        assert!(bad.is_empty());
+    }
+
+    #[test]
+    fn spec_per_target_directives() {
+        let (d, t, bad) = parse_spec("warn,poll=debug, service = error");
+        assert_eq!(d, Some(Level::Warn));
+        assert_eq!(t, vec![("poll".to_string(), Level::Debug),
+                           ("service".to_string(), Level::Error)]);
+        assert!(bad.is_empty());
+    }
+
+    #[test]
+    fn spec_collects_unrecognized_tokens() {
+        // bad tokens are reported, good ones still apply — no silent
+        // fall-through to info for the whole spec
+        let (d, t, bad) = parse_spec("verbose,warn,poll=loud");
+        assert_eq!(d, Some(Level::Warn));
+        assert!(t.is_empty());
+        assert_eq!(bad, vec!["verbose".to_string(), "poll=loud".to_string()]);
+        let (d, _, bad) = parse_spec("");
+        assert_eq!(d, None);
+        assert!(bad.is_empty());
+    }
+
+    #[test]
+    fn effective_prefix_match_longest_wins() {
+        let t = vec![("poll".to_string(), Level::Debug),
+                     ("serv".to_string(), Level::Error),
+                     ("server".to_string(), Level::Debug)];
+        assert_eq!(effective(&t, Level::Info, "poll"), Level::Debug);
+        // prefix match: "serv" covers "service"...
+        assert_eq!(effective(&t, Level::Info, "service"), Level::Error);
+        // ...but the longer "server" directive beats it for "server"
+        assert_eq!(effective(&t, Level::Info, "server"), Level::Debug);
+        // no directive: the default applies
+        assert_eq!(effective(&t, Level::Warn, "client"), Level::Warn);
+        assert_eq!(effective(&[], Level::Info, "anything"), Level::Info);
     }
 }

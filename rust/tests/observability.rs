@@ -1,0 +1,426 @@
+//! End-to-end observability: the Stats frame's sharded metric
+//! families reconcile with client-side accounting over both in-proc
+//! and TCP transports, per-step traces carry the deterministic span
+//! both ends mint from (session, request), a poisoned delta frame is
+//! diagnosable from the flight-recorder dump alone, the snapshot
+//! timeline emits schema-stable JSONL deltas, and a hung peer leaves
+//! the other poll workers' occupancy gauges unaffected.
+//!
+//! Everything runs against the forged hermetic model — no artifacts,
+//! no network beyond a loopback socket in the TCP leg.
+
+use fourier_compress::codec::stream::StreamConfig;
+use fourier_compress::config::{FromJson, ServeConfig};
+use fourier_compress::coordinator::protocol::{ErrorCode, Frame};
+use fourier_compress::coordinator::{span_id, start_service, DeviceClient,
+                                    EdgeServer, FlightKind, CLIENT_CAPS};
+use fourier_compress::model::tokenizer;
+use fourier_compress::net::Channel;
+use fourier_compress::runtime::ArtifactStore;
+use fourier_compress::testkit::forged_store;
+use fourier_compress::util::json;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn serve_config(store_root: &std::path::Path, overrides: &[String])
+    -> ServeConfig {
+    let mut args = vec![
+        "listen=127.0.0.1:0".to_string(),
+        format!("artifacts={}", store_root.display()),
+        "session_ttl_s=60".to_string(),
+    ];
+    args.extend_from_slice(overrides);
+    ServeConfig::load(None, &args).unwrap()
+}
+
+/// The real serving geometry (bucket, ks, kd) from the manifest.
+fn manifest_geoms(store: &ArtifactStore) -> Vec<(u16, u16, u16)> {
+    store.manifest.path("serving.buckets")
+        .and_then(|b| b.as_obj())
+        .expect("buckets")
+        .iter()
+        .map(|(bstr, bj)| (bstr.parse().unwrap(),
+                           bj.usize_or("ks", 0) as u16,
+                           bj.usize_or("kd", 0) as u16))
+        .collect()
+}
+
+const PROMPT: &str = "Q probe alpha ? A";
+
+/// Satellite pin: the Stats frame's counters — served over both the
+/// in-proc and TCP transports, queried mid-run and after — reconcile
+/// exactly with what the clients themselves accounted: requests,
+/// tokens, the key/delta frame and wire-byte split (the server counts
+/// headerless-framed bodies; the client counts full wire images, so
+/// they differ by exactly `FRAME_OVERHEAD_BYTES` per frame), and
+/// open/close connection parity once everything drains.
+#[test]
+fn stats_reconcile_with_client_accounting_inproc_and_tcp() {
+    use fourier_compress::coordinator::protocol::FRAME_OVERHEAD_BYTES;
+
+    let store = Arc::new(forged_store("obs_stats").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &["compute_units=1".into()]);
+    let handle = EdgeServer::start(cfg, store.clone()).unwrap();
+    let addr = handle.addr.to_string();
+
+    // one spectral-stream client over TCP, one recompute client
+    // in-proc — both against the same running service
+    let mut tcp = DeviceClient::connect(&addr, &store, 41,
+                                        Channel::unlimited()).unwrap();
+    assert!(tcp.enable_stream(StreamConfig { keyframe_interval: 32,
+                                             drift_threshold: 0.0 }));
+    let mut inproc = DeviceClient::connect_over(
+        Box::new(handle.connect_inproc()), &store, 42).unwrap();
+
+    let steps = 4usize;
+    let mut ctx_tcp = tokenizer::encode_prompt(PROMPT);
+    let mut ctx_ip = tokenizer::encode_prompt(PROMPT);
+    for step in 0..steps {
+        let (t1, _) = tcp.step(&ctx_tcp).unwrap();
+        ctx_tcp.push(t1);
+        let (t2, _) = inproc.step(&ctx_ip).unwrap();
+        ctx_ip.push(t2);
+        if step == 1 {
+            // mid-soak: GetStats must answer on both transports while
+            // decode traffic is still in flight
+            for stats in [tcp.server_stats().unwrap(),
+                          inproc.server_stats().unwrap()] {
+                let j = json::parse(&stats).expect("stats json");
+                assert!(j.usize_or("requests", 0) >= 2 * (step + 1),
+                        "mid-soak stats stale: {stats}");
+                assert!(j.get("shards").is_some(), "sharded families \
+                        missing mid-soak");
+            }
+        }
+    }
+
+    let cs = tcp.stats.clone();
+    let ci = inproc.stats.clone();
+    tcp.bye().unwrap();
+    inproc.bye().unwrap();
+    drop(tcp);
+    drop(inproc);
+
+    // every connection we opened must retire on its own (Bye +
+    // disconnect), restoring open/close parity
+    let m = handle.metrics.clone();
+    let t0 = Instant::now();
+    while m.conns_opened.load(Ordering::Relaxed)
+        != m.conns_closed.load(Ordering::Relaxed) {
+        assert!(t0.elapsed() < Duration::from_secs(10),
+                "connections never drained: {} opened, {} closed",
+                m.conns_opened.load(Ordering::Relaxed),
+                m.conns_closed.load(Ordering::Relaxed));
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // token/request parity: both clients ran clean (no resyncs, no
+    // rejects), so the server saw exactly their steps
+    let want = (cs.requests + ci.requests) as usize;
+    assert_eq!(want, 2 * steps);
+    assert_eq!(m.requests.load(Ordering::Relaxed), want as u64);
+    assert_eq!(m.tokens.load(Ordering::Relaxed), want as u64);
+    assert_eq!(m.stream_rejects.load(Ordering::Relaxed), 0);
+    assert_eq!(cs.resyncs, 0);
+
+    // stream wire split: the server books body + stream header per
+    // frame; the client's new key/delta byte counters book the full
+    // wire image — off by exactly the frame overhead per frame
+    assert_eq!(m.key_frames.load(Ordering::Relaxed), cs.key_frames);
+    assert_eq!(m.delta_frames.load(Ordering::Relaxed), cs.delta_frames);
+    assert!(cs.key_frames >= 1 && cs.delta_frames >= 1,
+            "soak must exercise both frame kinds");
+    assert_eq!(cs.key_bytes,
+               m.key_bytes_rx.load(Ordering::Relaxed)
+               + cs.key_frames * FRAME_OVERHEAD_BYTES as u64);
+    assert_eq!(cs.delta_bytes,
+               m.delta_bytes_rx.load(Ordering::Relaxed)
+               + cs.delta_frames * FRAME_OVERHEAD_BYTES as u64);
+    assert!(cs.key_bytes + cs.delta_bytes < cs.bytes_sent,
+            "handshake/stats bytes sit outside the stream split");
+
+    handle.shutdown();
+}
+
+/// Tentpole pin: with 1-in-1 sampling every step produces a completed
+/// trace whose span matches what the *client* minted from the same
+/// (session, request) pair — no wire change — with sane stage
+/// timings; flipping to 1-in-3 sampling traces exactly the steps the
+/// client-side predictor says it will.
+#[test]
+fn per_step_traces_match_client_predicted_spans() {
+    let store = Arc::new(forged_store("obs_trace").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &[
+        "compute_units=1".into(),
+        "trace_sample=1".into(),
+    ]);
+    let handle = start_service(&cfg, store.clone()).unwrap();
+    let session = 7u64;
+    let mut client = DeviceClient::connect_over(
+        Box::new(handle.connect_inproc()), &store, session).unwrap();
+
+    let context = tokenizer::encode_prompt(PROMPT);
+    let mut expected = Vec::new();
+    for _ in 0..5 {
+        client.step(&context).unwrap();
+        assert_ne!(client.last_span(), 0);
+        expected.push(client.last_span());
+    }
+
+    // the tx stamp lands just after the token reaches the client —
+    // give the poll worker a beat to retire the last trace
+    let t0 = Instant::now();
+    while handle.traces().len() < 5 {
+        assert!(t0.elapsed() < Duration::from_secs(5),
+                "only {} of 5 traces completed", handle.traces().len());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let traces = handle.traces();
+    assert_eq!(traces.len(), 5);
+    for (i, t) in traces.iter().enumerate() {
+        assert_eq!(t.span, expected[i], "server span != client span");
+        assert_eq!(t.session, session);
+        assert_eq!(t.request, i as u64 + 1);
+        assert_eq!(t.span, span_id(t.session, t.request));
+        assert_eq!(t.shard, handle.service().shard_of(session));
+        assert!(t.bucket >= context.len(), "bucket fits the context");
+        assert!(t.total_us >= t.exec_us, "total {} < exec {}",
+                t.total_us, t.exec_us);
+        assert!(t.total_us >= t.decompress_us + t.queue_wait_us,
+                "stage sum exceeds residency");
+    }
+
+    // 1-in-3: the server must trace exactly the steps the shared
+    // predictor samples — the client can tell, per step, whether the
+    // server recorded it
+    handle.obs().tracer.set_sample(3);
+    let mut predicted = Vec::new();
+    for _ in 0..30 {
+        client.step(&context).unwrap();
+        let span = client.last_span();
+        if span % 3 == 0 {
+            predicted.push(span);
+        }
+    }
+    let t0 = Instant::now();
+    loop {
+        let got: Vec<u64> = handle.traces().iter()
+            .filter(|t| t.request > 5)
+            .map(|t| t.span)
+            .collect();
+        if got.len() >= predicted.len() {
+            assert_eq!(got, predicted,
+                       "sampled spans diverge from the client predictor");
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5),
+                "sampled {} of {} predicted traces", got.len(),
+                predicted.len());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    client.bye().unwrap();
+    handle.shutdown();
+}
+
+/// Acceptance pin: a poisoned delta frame (no keyframe ever seeded
+/// the stream) must be fully diagnosable from the flight dump alone —
+/// the dump names the session, its shard, and the offending sequence
+/// number without any log scraping.
+#[test]
+fn poisoned_delta_is_diagnosable_from_flight_dump() {
+    let store = Arc::new(forged_store("obs_poison").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &["compute_units=1".into()]);
+    let handle = start_service(&cfg, store.clone()).unwrap();
+    let session = 777_001u64;
+    let (bucket, ks, kd) = manifest_geoms(&store)[0];
+
+    // raw frames, no DeviceClient: the client-side resync machinery
+    // would mask the reject we are injecting
+    let (mut tx, mut rx) = {
+        use fourier_compress::coordinator::Transport;
+        (Box::new(handle.connect_inproc()) as Box<dyn Transport>).split()
+            .unwrap()
+    };
+    tx.send(&Frame::hello(session, CLIENT_CAPS, "forge-tiny")).unwrap();
+    assert!(matches!(rx.recv().unwrap(), Frame::HelloAck { .. }));
+    tx.send(&Frame::Delta {
+        session, request: 1, seq: 7, keyframe: false, bucket,
+        true_len: 4, ks, kd, point: 0, packed: vec![],
+        updates: vec![(0, 1.0)],
+    }).unwrap();
+    match rx.recv().unwrap() {
+        Frame::Error { code, .. } => assert_eq!(code, ErrorCode::StreamReject),
+        other => panic!("poisoned delta answered {}", other.type_id()),
+    }
+
+    let dump = handle.dump_flight();
+    let reject = dump.iter()
+        .find(|e| e.kind == FlightKind::StreamReject)
+        .unwrap_or_else(|| panic!("no stream_reject in flight dump: {dump:?}"));
+    assert_eq!(reject.session, session);
+    assert_eq!(reject.seq, 7);
+    assert_eq!(reject.shard as usize, handle.service().shard_of(session));
+    assert_eq!(handle.metrics.stream_rejects.load(Ordering::Relaxed), 1);
+
+    drop(tx);
+    drop(rx);
+    handle.shutdown();
+}
+
+/// Tentpole pin: the snapshot timeline emits one delta-metrics JSONL
+/// line per tick (plus a final line at shutdown), schema-stable, with
+/// monotone timestamps, and the per-tick token deltas sum back to the
+/// service's total token counter.
+#[test]
+fn snapshot_timeline_has_schema_and_monotone_time() {
+    let store = Arc::new(forged_store("obs_snap").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &[
+        "compute_units=1".into(),
+        "snapshot_interval_ms=20".into(),
+    ]);
+    let handle = start_service(&cfg, store.clone()).unwrap();
+    let mut client = DeviceClient::connect_over(
+        Box::new(handle.connect_inproc()), &store, 1).unwrap();
+
+    let context = tokenizer::encode_prompt(PROMPT);
+    for _ in 0..5 {
+        client.step(&context).unwrap();
+        std::thread::sleep(Duration::from_millis(15));
+    }
+    client.bye().unwrap();
+
+    // keep the bundle alive past shutdown so the final stop-line is
+    // included in what we check
+    let obs = handle.obs().clone();
+    let metrics = handle.metrics.clone();
+    handle.shutdown();
+
+    let lines = obs.snapshots();
+    assert!(lines.len() >= 2, "expected several ticks, got {lines:?}");
+    let mut last_t = 0.0f64;
+    let mut token_sum = 0u64;
+    for line in &lines {
+        let j = json::parse(line)
+            .unwrap_or_else(|e| panic!("bad snapshot line {line:?}: {e:?}"));
+        for key in ["t_ms", "tokens", "requests", "batches", "bytes_rx",
+                    "bytes_tx", "stream_rejects", "queued", "conns",
+                    "sessions"] {
+            assert!(j.get(key).is_some(), "snapshot missing {key}: {line}");
+        }
+        let t = j.f64_or("t_ms", -1.0);
+        assert!(t >= last_t, "t_ms not monotone: {lines:?}");
+        last_t = t;
+        token_sum += j.usize_or("tokens", 0) as u64;
+    }
+    assert_eq!(token_sum, metrics.tokens.load(Ordering::Relaxed),
+               "per-tick token deltas must sum to the counter");
+}
+
+/// Satellite pin (poll-loop health): with two poll workers, one hung
+/// peer costs failed readiness probes — both workers keep visiting,
+/// the active session's steps stay fast, and the dry-pass naps are
+/// counted rather than burned as spin; the hung peer's eventual idle
+/// disconnect lands in the flight recorder.
+#[test]
+fn hung_peer_leaves_other_workers_occupancy_unaffected() {
+    let store = Arc::new(forged_store("obs_hung").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &[
+        "compute_units=1".into(),
+        "poll_workers=2".into(),
+        "idle_deadline_ms=200".into(),
+    ]);
+    let handle = start_service(&cfg, store.clone()).unwrap();
+
+    let silent = handle.connect_inproc();
+    let mut client = DeviceClient::connect_over(
+        Box::new(handle.connect_inproc()), &store, 1).unwrap();
+    let context = tokenizer::encode_prompt(PROMPT);
+    let mut worst = Duration::ZERO;
+    for _ in 0..6 {
+        let t0 = Instant::now();
+        client.step(&context).unwrap();
+        worst = worst.max(t0.elapsed());
+    }
+    assert!(worst < Duration::from_secs(5),
+            "a silent peer stalled an active session: worst {worst:?}");
+
+    let t0 = Instant::now();
+    while handle.metrics.idle_disconnects.load(Ordering::Relaxed) == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10),
+                "idle deadline never fired");
+        client.step(&context).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    let obs = handle.obs();
+    assert_eq!(obs.workers.len(), 2);
+    for (wid, w) in obs.workers.iter().enumerate() {
+        // the queue rotates through both workers: a hung peer parked
+        // on one of them would zero the other's progress — or its own
+        assert!(w.visits.load(Ordering::Relaxed) > 0,
+                "worker {wid} made no visits");
+    }
+    let frames: u64 = obs.workers.iter()
+        .map(|w| w.frames.load(Ordering::Relaxed)).sum();
+    assert!(frames >= 8, "workers handled {frames} frames");
+    let naps: u64 = obs.workers.iter()
+        .map(|w| w.naps.load(Ordering::Relaxed)).sum();
+    assert!(naps > 0, "idle time must be napped, not spun");
+    assert!(handle.dump_flight().iter()
+            .any(|e| e.kind == FlightKind::IdleDisconnect),
+            "idle disconnect missing from flight dump");
+
+    drop(silent);
+    client.bye().unwrap();
+    handle.shutdown();
+}
+
+/// The Stats JSON keeps every legacy flat key and gains the sharded
+/// families sized to the service's actual topology.
+#[test]
+fn stats_json_exposes_sharded_families() {
+    let store = Arc::new(forged_store("obs_shape").expect("forge artifacts"));
+    let cfg = serve_config(&store.root, &[
+        "compute_units=1".into(),
+        "shards=4".into(),
+        "poll_workers=3".into(),
+    ]);
+    let handle = start_service(&cfg, store.clone()).unwrap();
+    let mut client = DeviceClient::connect_over(
+        Box::new(handle.connect_inproc()), &store, 11).unwrap();
+    let context = tokenizer::encode_prompt(PROMPT);
+    let steps = 3usize;
+    for _ in 0..steps {
+        client.step(&context).unwrap();
+    }
+
+    let j = json::parse(&client.server_stats().unwrap()).unwrap();
+    // legacy flat keys survive unchanged
+    assert_eq!(j.usize_or("requests", 0), steps);
+    assert_eq!(j.usize_or("tokens", 0), steps);
+    assert!(j.path("e2e_us.count").is_some());
+    // sharded families mirror the configured topology
+    let shards = j.get("shards").and_then(|v| v.as_arr()).expect("shards");
+    assert_eq!(shards.len(), 4);
+    let admitted: usize = shards.iter()
+        .map(|s| s.usize_or("admitted", 0)).sum();
+    assert!(admitted >= 1, "our session was admitted somewhere");
+    let workers = j.get("workers").and_then(|v| v.as_arr()).expect("workers");
+    assert_eq!(workers.len(), 3);
+    let buckets = j.get("buckets").and_then(|v| v.as_arr()).expect("buckets");
+    let mut want: Vec<usize> = manifest_geoms(&store).iter()
+        .map(|&(b, _, _)| b as usize).collect();
+    want.sort_unstable();
+    let got: Vec<usize> = buckets.iter()
+        .map(|b| b.usize_or("bucket", 0)).collect();
+    assert_eq!(got, want, "bucket families mirror the manifest");
+    let enqueued: usize = buckets.iter()
+        .map(|b| b.usize_or("enqueued", 0)).sum();
+    assert_eq!(enqueued, steps, "every step passed through a bucket queue");
+    assert!(j.usize_or("sessions", 0) >= 1, "live session gauge");
+
+    client.bye().unwrap();
+    handle.shutdown();
+}

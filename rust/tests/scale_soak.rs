@@ -16,7 +16,9 @@
 use fourier_compress::codec::rate::RateConfig;
 use fourier_compress::codec::stream::StreamConfig;
 use fourier_compress::config::ServeConfig;
-use fourier_compress::coordinator::{start_service, DeviceClient};
+use fourier_compress::coordinator::protocol::{ErrorCode, Frame};
+use fourier_compress::coordinator::{start_service, DeviceClient, FlightKind,
+                                    Transport, CLIENT_CAPS};
 use fourier_compress::model::tokenizer;
 use fourier_compress::testkit::forged_store;
 use std::sync::atomic::Ordering;
@@ -108,7 +110,47 @@ fn thousand_concurrent_sessions_keep_token_parity() {
     // the soak proper: 32 driver threads × 32 pipelined sessions each
     // — 1024 connections concurrently registered with the poll pool
     let per_driver = SESSIONS / DRIVERS;
+    const POISON_SESSION: u64 = 777_777;
     std::thread::scope(|scope| {
+        // forced-failure injection: while the full soak is in flight,
+        // one rogue connection ships a delta no keyframe ever seeded
+        // — the service must reject it with a typed StreamReject and
+        // the flight recorder must capture enough to diagnose it
+        // (asserted below, after the drivers join)
+        {
+            let handle = &handle;
+            let store = &store;
+            scope.spawn(move || {
+                let (bucket, ks, kd) = store.manifest
+                    .path("serving.buckets")
+                    .and_then(|b| b.as_obj())
+                    .map(|o| (o[0].0.parse::<u16>().unwrap(),
+                              o[0].1.usize_or("ks", 0) as u16,
+                              o[0].1.usize_or("kd", 0) as u16))
+                    .expect("manifest geometry");
+                let (mut tx, mut rx) =
+                    (Box::new(handle.connect_inproc()) as Box<dyn Transport>)
+                        .split().unwrap();
+                tx.send(&Frame::hello(POISON_SESSION, CLIENT_CAPS,
+                                      "forge-tiny")).unwrap();
+                assert!(matches!(rx.recv().unwrap(),
+                                 Frame::HelloAck { .. }));
+                tx.send(&Frame::Delta {
+                    session: POISON_SESSION, request: 1, seq: 7,
+                    keyframe: false, bucket, true_len: 4, ks, kd, point: 0,
+                    packed: vec![], updates: vec![(0, 1.0)],
+                }).unwrap();
+                match rx.recv().unwrap() {
+                    Frame::Error { code, .. } => {
+                        assert_eq!(code, ErrorCode::StreamReject,
+                                   "poisoned delta must StreamReject");
+                    }
+                    other => panic!("poisoned delta answered {}",
+                                    other.type_id()),
+                }
+                tx.send(&Frame::Bye).unwrap();
+            });
+        }
         for d in 0..DRIVERS {
             let handle = &handle;
             let store = &store;
@@ -187,6 +229,23 @@ fn thousand_concurrent_sessions_keep_token_parity() {
             });
         }
     });
+
+    // the injected failure is diagnosable from the flight dump alone:
+    // the reject event names the poisoned session, the shard its
+    // state lives in, and the offending sequence number
+    let dump = handle.dump_flight();
+    let reject = dump.iter()
+        .find(|e| e.kind == FlightKind::StreamReject
+              && e.session == POISON_SESSION)
+        .unwrap_or_else(|| panic!(
+            "poisoned delta missing from flight dump ({} events)",
+            dump.len()));
+    assert_eq!(reject.seq, 7, "dump must carry the poisoned sequence");
+    assert_eq!(reject.shard as usize,
+               handle.service().shard_of(POISON_SESSION),
+               "dump must name the session's shard");
+    assert_eq!(handle.metrics.stream_rejects.load(Ordering::Relaxed), 1,
+               "exactly the injected frame was rejected");
 
     // the service saw every step from every session, batched them,
     // and opened/closed exactly the connections we made

@@ -13,7 +13,7 @@ use fourier_compress::config::{FromJson, ServeConfig};
 use fourier_compress::coordinator::protocol::{Frame, PROTOCOL_MAGIC,
                                               PROTOCOL_VERSION};
 use fourier_compress::coordinator::{start_service, DeviceClient, EdgeServer,
-                                    Response, Transport, CLIENT_CAPS};
+                                    Reply, Response, Transport, CLIENT_CAPS};
 use fourier_compress::testkit::forged_store;
 use fourier_compress::util::rng::Rng;
 use std::io::{Read, Write};
@@ -141,7 +141,7 @@ fn random_frame_interleavings_never_panic_and_stay_typed() {
 
     let mut rng = Rng::new(0xF0_55);
     for round in 0..8u64 {
-        let (reply_tx, reply_rx) = mpsc::channel::<Frame>();
+        let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
         let mut conn = service.open_conn(reply_tx, format!("fuzz-{round}"));
         let session = 9000 + round;
         // half the rounds start with a legitimate handshake so the
