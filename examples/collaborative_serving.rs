@@ -9,7 +9,8 @@
 //!     cargo run --release --example collaborative_serving -- \
 //!         [--clients 4] [--prompts 6] [--gbps 1.0] [--max-batch 4] \
 //!         [--stream] [--keyframe-interval 32] [--drift 0.05] \
-//!         [--adaptive] [--error-budget 1.0] [--target-step-ms 25]
+//!         [--adaptive] [--error-budget 1.0] [--target-step-ms 25] \
+//!         [--entropy | --no-entropy]
 //!
 //! `--stream` switches the clients to the spectral delta stream
 //! (`codec::stream`): keyframes on cadence/bucket promotion, sparse
@@ -19,6 +20,10 @@
 //! bucket quality ladder the server advertises, downshifting when the
 //! link cannot clear a step inside `--target-step-ms` and upshifting
 //! back (with hysteresis) when it can, under `--error-budget`.
+//! Entropy coding (`codec::wire`, negotiated via the ENTROPY
+//! capability) is on by default: each frame body is losslessly
+//! re-coded and shipped in whichever form is smaller; `--no-entropy`
+//! pins the raw pre-entropy wire format.
 
 use fourier_compress::codec::rate::RateConfig;
 use fourier_compress::codec::stream::StreamConfig;
@@ -43,6 +48,8 @@ fn main() -> anyhow::Result<()> {
         drift_threshold: args.f64_or("drift", 0.05),
     };
     let adaptive = args.has("adaptive");
+    // on unless --no-entropy; --entropy spells the default explicitly
+    let entropy = args.has("entropy") || !args.has("no-entropy");
     let rate_cfg = RateConfig {
         error_budget: args.f64_or("error-budget", 1.0),
         target_step_s: args.f64_or("target-step-ms", 25.0) / 1000.0,
@@ -81,6 +88,9 @@ fn main() -> anyhow::Result<()> {
             if adaptive && !client.enable_adaptive(rate_cfg) {
                 anyhow::bail!("server did not advertise the ladder capability");
             }
+            if entropy && !client.enable_entropy() {
+                anyhow::bail!("server did not advertise the entropy capability");
+            }
             let mut gens = Vec::new();
             for p in 0..n_prompts {
                 let prompt = prompts[(cid + p) % prompts.len()];
@@ -98,6 +108,8 @@ fn main() -> anyhow::Result<()> {
     let mut total_raw = 0u64;
     let (mut keys, mut deltas, mut resyncs) = (0u64, 0u64, 0u64);
     let (mut switches, mut max_point) = (0u64, 0u8);
+    let (mut eframes, mut efalls) = (0u64, 0u64);
+    let (mut pre_coding, mut post_coding) = (0u64, 0u64);
     let mut rts: Vec<u64> = Vec::new();
     for (cid, h) in handles.into_iter().enumerate() {
         let (gens, stats) = h.join().unwrap()?;
@@ -114,6 +126,10 @@ fn main() -> anyhow::Result<()> {
         resyncs += stats.resyncs;
         switches += stats.ladder_switches;
         max_point = max_point.max(stats.max_point);
+        eframes += stats.entropy_frames;
+        efalls += stats.entropy_fallbacks;
+        pre_coding += stats.pre_coding_bytes;
+        post_coding += stats.post_coding_bytes;
         rts.extend(stats.round_trip_us);
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -135,6 +151,12 @@ fn main() -> anyhow::Result<()> {
     if adaptive {
         println!("rate control:       {switches} ladder switches, deepest \
                   point {max_point}");
+    }
+    if entropy {
+        println!("entropy coding:     {eframes} coded frames, {efalls} raw \
+                  fallbacks; coded bodies {pre_coding} B -> {post_coding} B \
+                  ({:.2}x)",
+                 pre_coding as f64 / post_coding.max(1) as f64);
     }
 
     // server-side metrics

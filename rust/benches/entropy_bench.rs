@@ -1,0 +1,345 @@
+//! Entropy-wire bench: the lossless `codec::wire` coding layer,
+//! measured two ways and hard-asserted so the CI smoke step fails
+//! loudly on a regression.
+//!
+//! 1. End to end through the *real* serving core (forged artifacts,
+//!    in-proc transport): entropy off vs on in both the recompute and
+//!    the delta-stream regime, at bit-identical output tokens, with
+//!    the try-and-compare never-worse contract and the exact byte
+//!    reconciliation (entropy bytes + bytes saved == raw bytes).
+//! 2. A 128-step delta stream over the band-limited activation family
+//!    (`testkit::band_limited_act`, the family the forged models
+//!    produce at the layer-1 boundary) at the serving-like 64x128
+//!    geometry of stream_bench — every coded frame decoded back and
+//!    checked bit-exact, and the entropy layer hard-asserted to shave
+//!    >= 1.25x additional wire bytes off the already delta-compressed
+//!    stream.
+//!
+//! Plus ns/KiB encode/decode rows for each plane kind (f32 keyframe,
+//! sparse updates, int8) in the written JSON.  Writes
+//! BENCH_entropy.json.
+//!
+//!     cargo bench --bench entropy_bench
+
+use fourier_compress::codec::fourier::FourierCodec;
+use fourier_compress::codec::quant::{i8_plane, Int8Codec};
+use fourier_compress::codec::stream::{BlockGeom, StreamConfig, StreamEncoder,
+                                      StreamStep, UPDATE_WIRE_BYTES};
+use fourier_compress::codec::{wire, Codec, CodecEngine};
+use fourier_compress::config::{FromJson, ServeConfig};
+use fourier_compress::coordinator::protocol::Frame;
+use fourier_compress::coordinator::{start_service, DeviceClient};
+use fourier_compress::model::tokenizer;
+use fourier_compress::testkit::{band_limited_act, forged_store};
+use fourier_compress::util::bench::bench;
+use fourier_compress::util::json::Json;
+use fourier_compress::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+const STEPS: usize = 22;
+const PROMPT: &str = "Q rok ? A"; // 10 tokens; 22 steps stay <= bucket 32
+const BAND_STEPS: usize = 128;
+
+fn gen_steps(c: &mut DeviceClient, steps: usize) -> (Vec<i32>, u64) {
+    let mut ctx = tokenizer::encode_prompt(PROMPT);
+    let b0 = c.stats.bytes_sent;
+    let mut toks = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let (t, _) = c.step(&ctx).expect("step");
+        ctx.push(t);
+        toks.push(t);
+    }
+    (toks, c.stats.bytes_sent - b0)
+}
+
+/// One ns/KiB coding row: median encode and decode time over a plane,
+/// normalised per KiB of *raw* payload, plus the achieved byte split.
+fn coding_row(plane: &str, raw_bytes: usize, coded: &[u8],
+              enc_ns: f64, dec_ns: f64) -> Json {
+    let kib = raw_bytes as f64 / 1024.0;
+    let mut row = Json::obj();
+    row.set("plane", Json::Str(plane.into()));
+    row.set("raw_bytes", Json::Num(raw_bytes as f64));
+    row.set("coded_bytes", Json::Num(coded.len() as f64));
+    row.set("ratio_x", Json::Num(raw_bytes as f64 / coded.len() as f64));
+    row.set("encode_ns_per_kib", Json::Num(enc_ns / kib));
+    row.set("decode_ns_per_kib", Json::Num(dec_ns / kib));
+    println!("{plane}: {raw_bytes} B -> {} B ({:.2}x), encode \
+              {:.0} ns/KiB, decode {:.0} ns/KiB",
+             coded.len(), raw_bytes as f64 / coded.len() as f64,
+             enc_ns / kib, dec_ns / kib);
+    row
+}
+
+fn main() {
+    let mut out = Json::obj();
+
+    // ------------------------------------------------------------------
+    // leg 1: the real serving core, entropy off vs on, both regimes
+    // ------------------------------------------------------------------
+    let store = Arc::new(forged_store("entropy_bench").expect("forge"));
+    let cfg = ServeConfig::load(None, &[
+        "listen=127.0.0.1:0".to_string(),
+        format!("artifacts={}", store.root.display()),
+    ]).unwrap();
+    let handle = start_service(&cfg, store.clone()).expect("service");
+
+    // recompute regime, raw frames
+    let mut rc = DeviceClient::connect_over(
+        Box::new(handle.connect_inproc()), &store, 1).unwrap();
+    let (base_tokens, rc_raw) = gen_steps(&mut rc, STEPS);
+    rc.bye().unwrap();
+
+    // recompute regime, entropy coded
+    let mut re = DeviceClient::connect_over(
+        Box::new(handle.connect_inproc()), &store, 2).unwrap();
+    assert!(re.enable_entropy(), "entropy capability must negotiate");
+    let (re_tokens, rc_ent) = gen_steps(&mut re, STEPS);
+    assert_eq!(re_tokens, base_tokens,
+               "entropy coding moved the recompute output tokens");
+    assert!(rc_ent <= rc_raw,
+            "entropy recompute {rc_ent} B vs raw {rc_raw} B — the \
+             try-and-compare contract never ships a larger frame");
+    assert_eq!(re.stats.entropy_frames + re.stats.entropy_fallbacks,
+               STEPS as u64);
+    let re_saved = re.stats.pre_coding_bytes - re.stats.post_coding_bytes;
+    assert_eq!(rc_ent + re_saved, rc_raw,
+               "recompute byte accounting does not reconcile");
+    let (re_frames, re_falls) =
+        (re.stats.entropy_frames, re.stats.entropy_fallbacks);
+    re.bye().unwrap();
+
+    // delta-stream regime, raw frames (lossless stream: drift 0)
+    let sc = StreamConfig { keyframe_interval: 64, drift_threshold: 0.0 };
+    let mut sr = DeviceClient::connect_over(
+        Box::new(handle.connect_inproc()), &store, 3).unwrap();
+    assert!(sr.enable_stream(sc), "stream capability must negotiate");
+    let (sr_tokens, st_raw) = gen_steps(&mut sr, STEPS);
+    assert_eq!(sr_tokens, base_tokens, "raw stream diverged from recompute");
+    sr.bye().unwrap();
+
+    // delta-stream regime, entropy coded
+    let mut se = DeviceClient::connect_over(
+        Box::new(handle.connect_inproc()), &store, 4).unwrap();
+    assert!(se.enable_stream(sc));
+    assert!(se.enable_entropy());
+    let (se_tokens, st_ent) = gen_steps(&mut se, STEPS);
+    assert_eq!(se_tokens, base_tokens,
+               "entropy coding moved the stream output tokens");
+    assert_eq!(se.stats.resyncs, 0);
+    assert!(st_ent <= st_raw,
+            "entropy stream {st_ent} B vs raw stream {st_raw} B");
+    let se_saved = se.stats.pre_coding_bytes - se.stats.post_coding_bytes;
+    assert_eq!(st_ent + se_saved, st_raw,
+               "stream byte accounting does not reconcile");
+    let (se_frames, se_falls) =
+        (se.stats.entropy_frames, se.stats.entropy_fallbacks);
+    se.bye().unwrap();
+    handle.shutdown();
+
+    let rc_x = rc_raw as f64 / rc_ent.max(1) as f64;
+    let st_x = st_raw as f64 / st_ent.max(1) as f64;
+    println!("serving recompute: raw {rc_raw} B, entropy {rc_ent} B \
+              ({rc_x:.2}x, {re_frames} coded / {re_falls} fallback)");
+    println!("serving stream:    raw {st_raw} B, entropy {st_ent} B \
+              ({st_x:.2}x, {se_frames} coded / {se_falls} fallback)");
+
+    out.set("steps", Json::Num(STEPS as f64));
+    out.set("recompute_raw_bytes", Json::Num(rc_raw as f64));
+    out.set("recompute_entropy_bytes", Json::Num(rc_ent as f64));
+    out.set("recompute_savings_x", Json::Num(rc_x));
+    out.set("recompute_entropy_frames", Json::Num(re_frames as f64));
+    out.set("recompute_entropy_fallbacks", Json::Num(re_falls as f64));
+    out.set("stream_raw_bytes", Json::Num(st_raw as f64));
+    out.set("stream_entropy_bytes", Json::Num(st_ent as f64));
+    out.set("stream_savings_x", Json::Num(st_x));
+    out.set("stream_entropy_frames", Json::Num(se_frames as f64));
+    out.set("stream_entropy_fallbacks", Json::Num(se_falls as f64));
+    out.set("token_parity", Json::Bool(true));
+
+    // ------------------------------------------------------------------
+    // leg 2: the band-limited activation family at stream_bench's
+    // serving-like geometry — the hard >= 1.25x gate
+    // ------------------------------------------------------------------
+    let geom = BlockGeom { rows: 64, cols: 128, ks: 33, kd: 15 };
+    let n = geom.ks * geom.kd;
+    let bins = 2;
+    let act = band_limited_act(geom.rows, geom.cols, bins, 0x1FC9);
+    let fc = FourierCodec::default();
+    let p = fc.compress_block(&act, geom.rows, geom.cols, geom.ks, geom.kd)
+        .expect("fc compress");
+    // fc payload body: u16 ks | u16 kd | f32 packed[ks*kd], all LE
+    assert_eq!(p.body.len(), 4 + n * 4, "unexpected fc payload layout");
+    let (ks, kd) = (u16::from_le_bytes([p.body[0], p.body[1]]) as usize,
+                    u16::from_le_bytes([p.body[2], p.body[3]]) as usize);
+    assert_eq!((ks, kd), (geom.ks, geom.kd));
+    let mut truth: Vec<f32> = p.body[4..].chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+
+    // the in-band slots: the hidden axis is band-limited, so only the
+    // kept columns inside the band carry signal — the rest of the
+    // packed plane is FFT round-off.  Decode-step evolution moves the
+    // signal, never the round-off floor.
+    let sig: Vec<usize> = truth.iter().enumerate()
+        .filter(|(_, v)| v.abs() > 1e-2)
+        .map(|(i, _)| i)
+        .collect();
+    assert!(sig.len() >= 16 && sig.len() <= n / 2,
+            "band-limited plane has {} signal slots of {n} — the \
+             family or the geometry changed", sig.len());
+
+    let scfg = StreamConfig { keyframe_interval: 16, drift_threshold: 0.0 };
+    let mut enc = StreamEncoder::new(scfg);
+    let mut eng = CodecEngine::new();
+    let mut step = StreamStep::default();
+    let mut rng = Rng::new(0x1FC9);
+    let mut coded = Vec::new();
+    let mut decoded_f = Vec::new();
+    let mut decoded_u = Vec::new();
+    let (mut raw_bytes, mut ent_bytes) = (0u64, 0u64);
+    let (mut keys, mut deltas, mut coded_frames, mut fallbacks) =
+        (0u64, 0u64, 0u64, 0u64);
+    for t in 0..BAND_STEPS as u64 {
+        if t > 0 {
+            // decode-step evolution: in-band spectral coefficients move
+            for _ in 0..40 {
+                let i = sig[rng.below(sig.len())];
+                truth[i] += rng.normal() as f32;
+            }
+        }
+        enc.encode_into(&mut eng, geom, &truth, &mut step).unwrap();
+        if step.keyframe { keys += 1 } else { deltas += 1 }
+
+        // entropy off: the PR-5 stream frame as-is
+        let raw_frame = Frame::Delta {
+            session: 1, request: t + 1, seq: step.seq, keyframe: step.keyframe,
+            bucket: geom.rows as u16, true_len: geom.rows as u16,
+            ks: geom.ks as u16, kd: geom.kd as u16, point: 0,
+            packed: step.packed.clone(), updates: step.updates.clone(),
+            coded: vec![],
+        };
+        raw_bytes += raw_frame.encode().len() as u64;
+
+        // entropy on: the client's try-and-compare, then decode the
+        // coded body back and check it bit-exact (what the server sees)
+        coded.clear();
+        if step.keyframe {
+            wire::encode_f32_plane(&step.packed, &mut coded);
+        } else {
+            wire::encode_updates(&step.updates, &mut coded);
+        }
+        if coded.len() < step.body_bytes() {
+            coded_frames += 1;
+            if step.keyframe {
+                wire::decode_f32_plane(&coded, &mut decoded_f).unwrap();
+                assert!(decoded_f.iter().map(|v| v.to_bits())
+                            .eq(step.packed.iter().map(|v| v.to_bits())),
+                        "coded keyframe is not bit-exact");
+            } else {
+                wire::decode_updates(&coded, &mut decoded_u).unwrap();
+                let mut want = step.updates.clone();
+                want.sort_unstable_by_key(|&(i, _)| i);
+                assert!(decoded_u.iter().map(|&(i, v)| (i, v.to_bits()))
+                            .eq(want.iter().map(|&(i, v)| (i, v.to_bits()))),
+                        "coded delta is not bit-exact");
+            }
+            let ent_frame = Frame::Delta {
+                session: 1, request: t + 1, seq: step.seq,
+                keyframe: step.keyframe, bucket: geom.rows as u16,
+                true_len: geom.rows as u16, ks: geom.ks as u16,
+                kd: geom.kd as u16, point: 0, packed: vec![],
+                updates: vec![], coded: std::mem::take(&mut coded),
+            };
+            ent_bytes += ent_frame.encode().len() as u64;
+        } else {
+            fallbacks += 1;
+            ent_bytes += raw_frame.encode().len() as u64;
+        }
+    }
+    let band_x = raw_bytes as f64 / ent_bytes as f64;
+    println!("band-limited stream, {BAND_STEPS} steps @ {}x{} block {}x{} \
+              (bins {bins}): raw {raw_bytes} B, entropy {ent_bytes} B \
+              ({band_x:.2}x, {keys} keys / {deltas} deltas, {coded_frames} \
+              coded / {fallbacks} fallback)",
+             geom.rows, geom.cols, geom.ks, geom.kd);
+    assert!(band_x >= 1.25,
+            "entropy coding saved only {band_x:.2}x additional wire bytes \
+             on the band-limited stream (need >= 1.25x)");
+
+    out.set("band_steps", Json::Num(BAND_STEPS as f64));
+    out.set("band_geometry", Json::Str(format!(
+        "{}x{} block {}x{} bins {bins}", geom.rows, geom.cols, geom.ks,
+        geom.kd)));
+    out.set("band_raw_bytes", Json::Num(raw_bytes as f64));
+    out.set("band_entropy_bytes", Json::Num(ent_bytes as f64));
+    out.set("band_savings_x", Json::Num(band_x));
+    out.set("band_key_frames", Json::Num(keys as f64));
+    out.set("band_delta_frames", Json::Num(deltas as f64));
+    out.set("band_coded_frames", Json::Num(coded_frames as f64));
+    out.set("band_fallbacks", Json::Num(fallbacks as f64));
+
+    // ------------------------------------------------------------------
+    // leg 3: ns/KiB encode + decode per plane kind
+    // ------------------------------------------------------------------
+    let mut rows = Vec::new();
+    let budget = Duration::from_secs(1);
+
+    // f32 keyframe plane (the final truth block of the band scenario)
+    let mut buf = Vec::new();
+    let enc_t = bench("wire encode f32 plane", 400, budget, || {
+        buf.clear();
+        wire::encode_f32_plane(&truth, &mut buf);
+        std::hint::black_box(&buf);
+    });
+    let dec_t = bench("wire decode f32 plane", 400, budget, || {
+        wire::decode_f32_plane(&buf, &mut decoded_f).unwrap();
+        std::hint::black_box(&decoded_f);
+    });
+    rows.push(coding_row("f32_keyframe", truth.len() * 4, &buf,
+                         enc_t.median.as_nanos() as f64,
+                         dec_t.median.as_nanos() as f64));
+
+    // sparse update list (64 in-band updates, serving-delta shaped)
+    let updates: Vec<(u32, f32)> = sig.iter().step_by(2).take(64)
+        .map(|&i| (i as u32, truth[i]))
+        .collect();
+    let raw_u = 4 + updates.len() * UPDATE_WIRE_BYTES;
+    let enc_t = bench("wire encode updates", 400, budget, || {
+        buf.clear();
+        wire::encode_updates(&updates, &mut buf);
+        std::hint::black_box(&buf);
+    });
+    let dec_t = bench("wire decode updates", 400, budget, || {
+        wire::decode_updates(&buf, &mut decoded_u).unwrap();
+        std::hint::black_box(&decoded_u);
+    });
+    rows.push(coding_row("sparse_updates", raw_u, &buf,
+                         enc_t.median.as_nanos() as f64,
+                         dec_t.median.as_nanos() as f64));
+
+    // int8 plane (the quantized codec's wire body)
+    let qp = Int8Codec::default()
+        .compress(&act, geom.rows, geom.cols, 4.0)
+        .expect("int8 compress");
+    let q = i8_plane(&qp).expect("i8 plane");
+    let mut qdec = Vec::new();
+    let enc_t = bench("wire encode i8 plane", 400, budget, || {
+        buf.clear();
+        wire::encode_i8_plane(&q, &mut buf);
+        std::hint::black_box(&buf);
+    });
+    let dec_t = bench("wire decode i8 plane", 400, budget, || {
+        wire::decode_i8_plane(&buf, &mut qdec).unwrap();
+        std::hint::black_box(&qdec);
+    });
+    rows.push(coding_row("i8_plane", q.len(), &buf,
+                         enc_t.median.as_nanos() as f64,
+                         dec_t.median.as_nanos() as f64));
+
+    out.set("coding", Json::Arr(rows));
+    std::fs::write("BENCH_entropy.json", out.to_string_pretty())
+        .expect("write BENCH_entropy.json");
+    println!("wrote BENCH_entropy.json");
+}

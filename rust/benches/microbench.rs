@@ -85,6 +85,7 @@ fn generic_sweeps(budget: Duration) {
     let frame = Frame::Activation {
         session: 1, request: 2, bucket: 64, true_len: 60, ks: 64, kd: 15,
         point: 0, packed: packed.clone(),
+        coded: vec![],
     };
     bench("frame encode+decode", 500, budget, || {
         let enc = frame.encode();

@@ -47,6 +47,7 @@ fn main() {
             session: 1, request: t + 1, bucket: geom.rows as u16,
             true_len: geom.rows as u16, ks: geom.ks as u16,
             kd: geom.kd as u16, point: 0, packed: truth.clone(),
+            coded: vec![],
         };
         recompute_bytes += recompute.encode().len() as u64;
 
@@ -56,6 +57,7 @@ fn main() {
             bucket: geom.rows as u16, true_len: geom.rows as u16,
             ks: geom.ks as u16, kd: geom.kd as u16, point: 0,
             packed: step.packed.clone(), updates: step.updates.clone(),
+            coded: vec![],
         };
         stream_bytes += frame.encode().len() as u64;
         if step.keyframe {

@@ -25,6 +25,7 @@ pub mod quant;
 pub mod rate;
 pub mod stream;
 pub mod topk;
+pub mod wire;
 
 pub use engine::{with_thread_engine, CodecEngine, StageTimes};
 

@@ -94,6 +94,23 @@ impl Codec for Int8Codec {
     }
 }
 
+/// The raw int8 lane of an [`Int8Codec`] payload: parses the wire
+/// body and returns the quantized values as `i8` (scales skipped).
+/// This is what the entropy layer (`codec::wire::encode_i8_plane`)
+/// codes in the related-work ablation benches — the zero-run + sign /
+/// magnitude path needs signed values, not the wire's raw bytes.
+pub fn i8_plane(p: &Payload) -> Result<Vec<i8>> {
+    let mut r = Reader::new(&p.body);
+    let block = r.u16()? as usize;
+    let n = r.u32()? as usize;
+    ensure!(block > 0, "zero block");
+    let mut scales = Vec::new();
+    r.f32s(n.div_ceil(block), &mut scales)?;
+    let q = r.take(n)?;
+    ensure!(r.remaining() == 0, "trailing payload bytes");
+    Ok(q.iter().map(|&b| b as i8).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,6 +150,20 @@ mod tests {
         // second block (indices 64..) is outlier-free and near-exact
         for i in 64..128 {
             assert!((out[i] - 0.01).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn i8_plane_matches_dequant_sign() {
+        let a = rand_act(8, 16, 7);
+        let p = Int8Codec::default().compress(&a, 8, 16, 4.0).unwrap();
+        let q = i8_plane(&p).unwrap();
+        assert_eq!(q.len(), 128);
+        // quantization preserves sign (absmax scaling, zero maps to 0)
+        for (x, &v) in a.iter().zip(&q) {
+            if v != 0 {
+                assert_eq!(x.is_sign_negative(), v < 0, "{x} vs {v}");
+            }
         }
     }
 

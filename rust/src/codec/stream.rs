@@ -47,6 +47,14 @@
 //! recovers byte-identical state (`tests/stream_serving.rs` pins
 //! this).  The decoder never guesses — silent drift is the one failure
 //! mode a lossy activation link cannot afford.
+//!
+//! Both frame kinds compose with the lossless entropy layer
+//! ([`super::wire`], negotiated via
+//! [`crate::coordinator::protocol::caps::ENTROPY`]): a keyframe's
+//! packed plane and a delta's sparse update list each have a coded
+//! wire form the transport ships when it is smaller than the raw one.
+//! The stream codec itself is unaware — coding happens at the frame
+//! boundary, on exactly the bytes [`StreamStep::body_bytes`] counts.
 
 use super::engine::CodecEngine;
 use super::{valid_block_axis, Payload, Writer};

@@ -1,0 +1,802 @@
+//! `codec::wire` — lossless entropy coding between the packed-block /
+//! delta producers and the frame encoder.
+//!
+//! Three self-describing plane formats, all sharing the same 5-byte
+//! header (`u8 mode | u32 count`) and the same try-and-compare
+//! contract: the encoder builds every applicable mode, keeps the
+//! smallest, and mode 0 is always the raw bytes — so a coded plane is
+//! never larger than raw + [`PLANE_HEADER_BYTES`], and decode is
+//! deterministic from the header alone.
+//!
+//! * **f32 planes** ([`encode_f32_plane`]): packed spectral blocks
+//!   (recompute activations and stream keyframes).  Mode 1 splits
+//!   each float into sign / exponent / mantissa and codes the
+//!   exponent as a gamma-coded delta from its predecessor (spectral
+//!   coefficients cluster in magnitude, so exponent deltas are
+//!   small); exact zeros collapse to a flag bit.  Mode 2 re-slices
+//!   the plane into its four byte planes and pushes each through the
+//!   adaptive binary range coder with a per-plane bit-tree context.
+//! * **i8 planes** ([`encode_i8_plane`]): quantized coefficient
+//!   planes.  Mode 1 is zero-run + sign/magnitude (runs gamma-coded,
+//!   magnitudes gamma-coded); mode 2 range-codes the bytes with a
+//!   was-previous-zero context pair.
+//! * **sorted index/value lists** ([`encode_updates`]): sparse delta
+//!   updates.  Mode 1 sorts by index and Golomb-Rice codes the gaps
+//!   with a per-frame parameter derived from the gap mean (carried in
+//!   a 1-byte header), then hands the values to the f32 plane coder.
+//!
+//! The range coder is the classic adaptive binary arithmetic coder
+//! (11-bit probabilities, shift-5 adaptation, byte-wise renormalizing
+//! below 2^24 with carry propagation through a cache byte); byte
+//! symbols ride an 8-level bit tree, MSB first.
+//!
+//! Every decoder returns typed errors on truncated, corrupt, or
+//! oversized input — these functions parse attacker-controlled frame
+//! bodies behind `ServingService::handle`.
+
+use crate::util::bits::{BitReader, BitWriter};
+use anyhow::{bail, ensure, Result};
+
+/// Bytes every coded plane spends before its payload: `u8 mode` +
+/// `u32 count`.
+pub const PLANE_HEADER_BYTES: usize = 5;
+
+/// Mode byte values shared by all three plane formats: mode 0 is
+/// always the raw pass-through.
+pub const MODE_RAW: u8 = 0;
+/// f32: exponent-delta split; i8: zero-run + sign/magnitude; updates:
+/// Rice-coded index gaps.
+pub const MODE_SPLIT: u8 = 1;
+/// Second-stage adaptive range coding (f32 byte planes / i8 bytes).
+pub const MODE_RC: u8 = 2;
+
+/// Upper bound on the element count a coded plane may declare —
+/// matches the 64 MiB `MAX_FRAME` at 4 bytes per element, so a
+/// corrupt count errors before any pathological allocation.
+pub const MAX_PLANE: usize = 16 << 20;
+
+// ---------------------------------------------------------------------------
+// adaptive binary range coder (LZMA-style)
+// ---------------------------------------------------------------------------
+
+const RC_PROB_BITS: u32 = 11;
+const RC_PROB_INIT: u16 = 1 << (RC_PROB_BITS - 1);
+const RC_MOVE_BITS: u32 = 5;
+const RC_TOP: u32 = 1 << 24;
+
+struct RcEncoder {
+    low: u64,
+    range: u32,
+    cache: u8,
+    cache_size: u64,
+    out: Vec<u8>,
+}
+
+impl RcEncoder {
+    fn new() -> RcEncoder {
+        RcEncoder { low: 0, range: u32::MAX, cache: 0, cache_size: 1,
+                    out: Vec::new() }
+    }
+
+    fn encode(&mut self, prob: &mut u16, bit: u32) {
+        let bound = (self.range >> RC_PROB_BITS) * (*prob as u32);
+        if bit == 0 {
+            self.range = bound;
+            *prob += ((1u16 << RC_PROB_BITS) - *prob) >> RC_MOVE_BITS;
+        } else {
+            self.low += bound as u64;
+            self.range -= bound;
+            *prob -= *prob >> RC_MOVE_BITS;
+        }
+        while self.range < RC_TOP {
+            self.shift_low();
+            self.range <<= 8;
+        }
+    }
+
+    fn shift_low(&mut self) {
+        // flush the cache byte (plus any 0xFF run) once the carry can
+        // no longer reach it
+        if (self.low as u32) < 0xFF00_0000 || self.low > u32::MAX as u64 {
+            let carry = (self.low >> 32) as u8;
+            let mut b = self.cache;
+            loop {
+                self.out.push(b.wrapping_add(carry));
+                b = 0xFF;
+                self.cache_size -= 1;
+                if self.cache_size == 0 {
+                    break;
+                }
+            }
+            self.cache = (self.low >> 24) as u8;
+        }
+        self.cache_size += 1;
+        self.low = (self.low << 8) & u32::MAX as u64;
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        for _ in 0..5 {
+            self.shift_low();
+        }
+        self.out
+    }
+}
+
+struct RcDecoder<'a> {
+    code: u32,
+    range: u32,
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> RcDecoder<'a> {
+    fn new(buf: &'a [u8]) -> Result<RcDecoder<'a>> {
+        let mut d = RcDecoder { code: 0, range: u32::MAX, buf, pos: 0 };
+        for _ in 0..5 {
+            let b = d.next_byte()?;
+            d.code = (d.code << 8) | b as u32;
+        }
+        Ok(d)
+    }
+
+    fn next_byte(&mut self) -> Result<u8> {
+        ensure!(self.pos < self.buf.len(),
+                "range-coded stream truncated at byte {}", self.pos);
+        let b = self.buf[self.pos];
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn decode(&mut self, prob: &mut u16) -> Result<u32> {
+        let bound = (self.range >> RC_PROB_BITS) * (*prob as u32);
+        let bit = if self.code < bound {
+            self.range = bound;
+            *prob += ((1u16 << RC_PROB_BITS) - *prob) >> RC_MOVE_BITS;
+            0
+        } else {
+            self.code -= bound;
+            self.range -= bound;
+            *prob -= *prob >> RC_MOVE_BITS;
+            1
+        };
+        while self.range < RC_TOP {
+            let b = self.next_byte()?;
+            self.code = (self.code << 8) | b as u32;
+            self.range <<= 8;
+        }
+        Ok(bit)
+    }
+}
+
+/// One byte symbol as an 8-level bit tree (255 adaptive contexts),
+/// MSB first — the magnitude-symbol model of the second stage.
+struct ByteTree([u16; 256]);
+
+impl ByteTree {
+    fn new() -> ByteTree {
+        ByteTree([RC_PROB_INIT; 256])
+    }
+
+    fn encode(&mut self, rc: &mut RcEncoder, byte: u8) {
+        let mut m = 1usize;
+        for i in (0..8).rev() {
+            let bit = ((byte >> i) & 1) as u32;
+            rc.encode(&mut self.0[m], bit);
+            m = (m << 1) | bit as usize;
+        }
+    }
+
+    fn decode(&mut self, rc: &mut RcDecoder) -> Result<u8> {
+        let mut m = 1usize;
+        for _ in 0..8 {
+            let bit = rc.decode(&mut self.0[m])?;
+            m = (m << 1) | bit as usize;
+        }
+        Ok((m - 256) as u8)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 planes
+// ---------------------------------------------------------------------------
+
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(z: u64) -> i64 {
+    ((z >> 1) as i64) ^ -((z & 1) as i64)
+}
+
+/// Mode 1: sign/exponent/mantissa split with gamma-coded exponent
+/// deltas; exact zeros cost a flag bit instead of a mantissa.
+fn split_f32(vals: &[f32]) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    let mut prev_exp = 127i64;
+    for v in vals {
+        let bits = v.to_bits();
+        let exp = ((bits >> 23) & 0xFF) as i64;
+        let man = (bits & 0x7F_FFFF) as u64;
+        w.write_gamma(zigzag(exp - prev_exp) + 1);
+        prev_exp = exp;
+        w.write_bit(bits >> 31 != 0);
+        if exp == 0 {
+            // zero or subnormal: the common exact-zero case collapses
+            // to one flag bit
+            w.write_bit(man != 0);
+            if man != 0 {
+                w.write_bits(man, 23);
+            }
+        } else {
+            w.write_bits(man, 23);
+        }
+    }
+    w.finish()
+}
+
+fn unsplit_f32(bytes: &[u8], n: usize, out: &mut Vec<f32>) -> Result<()> {
+    let mut r = BitReader::new(bytes);
+    let mut prev_exp = 127i64;
+    for _ in 0..n {
+        let d = unzigzag(r.read_gamma()?.checked_sub(1)
+            .ok_or_else(|| anyhow::anyhow!("zero gamma symbol"))?);
+        let exp = prev_exp + d;
+        ensure!((0..=255).contains(&exp), "split exponent {exp} out of range");
+        prev_exp = exp;
+        let sign = r.read_bit()? as u32;
+        let man = if exp == 0 {
+            if r.read_bit()? { r.read_bits(23)? as u32 } else { 0 }
+        } else {
+            r.read_bits(23)? as u32
+        };
+        out.push(f32::from_bits((sign << 31) | ((exp as u32) << 23) | man));
+    }
+    ensure!(r.remaining_bits() < 8,
+            "trailing split-plane bytes ({} bits)", r.remaining_bits());
+    Ok(())
+}
+
+/// Mode 2: the plane re-sliced into its four byte planes (MSB plane
+/// first: sign+exponent, then exponent-low+mantissa-high, then the
+/// mantissa tail), each range-coded under its own bit-tree context.
+fn rc_f32(vals: &[f32]) -> Vec<u8> {
+    let mut rc = RcEncoder::new();
+    let mut trees = [ByteTree::new(), ByteTree::new(), ByteTree::new(),
+                     ByteTree::new()];
+    for (p, tree) in trees.iter_mut().enumerate() {
+        let shift = 8 * (3 - p) as u32;
+        for v in vals {
+            tree.encode(&mut rc, (v.to_bits() >> shift) as u8);
+        }
+    }
+    rc.finish()
+}
+
+fn un_rc_f32(bytes: &[u8], n: usize, out: &mut Vec<f32>) -> Result<()> {
+    let mut rc = RcDecoder::new(bytes)?;
+    let mut trees = [ByteTree::new(), ByteTree::new(), ByteTree::new(),
+                     ByteTree::new()];
+    let start = out.len();
+    out.resize(start + n, 0.0);
+    for (p, tree) in trees.iter_mut().enumerate() {
+        let shift = 8 * (3 - p) as u32;
+        for v in out[start..].iter_mut() {
+            let b = tree.decode(&mut rc)? as u32;
+            *v = f32::from_bits(v.to_bits() | (b << shift));
+        }
+    }
+    Ok(())
+}
+
+/// Entropy-code an f32 plane (packed spectral block).  Tries the
+/// split and range-coded modes, keeps the smallest, and falls back to
+/// raw — the output never exceeds `4·n + PLANE_HEADER_BYTES` bytes.
+pub fn encode_f32_plane(vals: &[f32], out: &mut Vec<u8>) {
+    assert!(vals.len() <= MAX_PLANE, "plane too large");
+    let raw_len = 4 * vals.len();
+    let split = split_f32(vals);
+    let rc = rc_f32(vals);
+    let (mode, best_len) = [(MODE_SPLIT, split.len()), (MODE_RC, rc.len())]
+        .into_iter()
+        .fold((MODE_RAW, raw_len), |best, cand| {
+            if cand.1 < best.1 { cand } else { best }
+        });
+    out.reserve(PLANE_HEADER_BYTES + best_len);
+    out.push(mode);
+    out.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+    match mode {
+        MODE_SPLIT => out.extend_from_slice(&split),
+        MODE_RC => out.extend_from_slice(&rc),
+        _ => crate::codec::Writer(out).f32s(vals),
+    }
+}
+
+/// Decode an f32 plane coded by [`encode_f32_plane`].  Typed errors
+/// on truncation, unknown modes, or oversized counts — never panics.
+pub fn decode_f32_plane(bytes: &[u8], out: &mut Vec<f32>) -> Result<()> {
+    let mut r = crate::codec::Reader::new(bytes);
+    let mode = r.byte()?;
+    let n = r.u32()? as usize;
+    ensure!(n <= MAX_PLANE, "f32 plane count {n} too large");
+    out.clear();
+    out.reserve(n.min(4096));
+    let body = r.take(r.remaining())?;
+    match mode {
+        MODE_RAW => {
+            ensure!(body.len() == 4 * n,
+                    "raw f32 plane length {} != 4x{n}", body.len());
+            crate::codec::Reader::new(body).f32s(n, out)?;
+        }
+        MODE_SPLIT => unsplit_f32(body, n, out)?,
+        MODE_RC => un_rc_f32(body, n, out)?,
+        m => bail!("unknown f32 plane mode {m}"),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// i8 planes
+// ---------------------------------------------------------------------------
+
+/// Mode 1: zero runs gamma-coded, nonzero symbols as sign bit +
+/// gamma-coded magnitude.
+fn zrun_i8(vals: &[i8]) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    let mut i = 0usize;
+    while i < vals.len() {
+        let run = vals[i..].iter().take_while(|&&v| v == 0).count();
+        w.write_gamma(run as u64 + 1);
+        i += run;
+        if i < vals.len() {
+            let v = vals[i];
+            w.write_bit(v < 0);
+            w.write_gamma(v.unsigned_abs() as u64);
+            i += 1;
+        }
+    }
+    w.finish()
+}
+
+fn un_zrun_i8(bytes: &[u8], n: usize, out: &mut Vec<i8>) -> Result<()> {
+    let mut r = BitReader::new(bytes);
+    while out.len() < n {
+        let run = r.read_gamma()? - 1;
+        ensure!(run as usize <= n - out.len(),
+                "zero run {run} overruns plane of {n}");
+        out.resize(out.len() + run as usize, 0);
+        if out.len() < n {
+            let neg = r.read_bit()?;
+            let mag = r.read_gamma()?;
+            ensure!(mag <= 127 + neg as u64, "i8 magnitude {mag} out of range");
+            out.push(if neg { -(mag as i64) as i8 } else { mag as i8 });
+        }
+    }
+    ensure!(r.remaining_bits() < 8,
+            "trailing i8 plane bytes ({} bits)", r.remaining_bits());
+    Ok(())
+}
+
+/// Mode 2: bytes through the range coder, context = was the previous
+/// symbol zero (zero-heavy quantized planes adapt both ways).
+fn rc_i8(vals: &[i8]) -> Vec<u8> {
+    let mut rc = RcEncoder::new();
+    let mut trees = [ByteTree::new(), ByteTree::new()];
+    let mut prev_zero = true;
+    for &v in vals {
+        trees[prev_zero as usize].encode(&mut rc, v as u8);
+        prev_zero = v == 0;
+    }
+    rc.finish()
+}
+
+fn un_rc_i8(bytes: &[u8], n: usize, out: &mut Vec<i8>) -> Result<()> {
+    let mut rc = RcDecoder::new(bytes)?;
+    let mut trees = [ByteTree::new(), ByteTree::new()];
+    let mut prev_zero = true;
+    for _ in 0..n {
+        let b = trees[prev_zero as usize].decode(&mut rc)? as i8;
+        prev_zero = b == 0;
+        out.push(b);
+    }
+    Ok(())
+}
+
+/// Entropy-code an int8 quantized coefficient plane.  Same contract
+/// as [`encode_f32_plane`]: output never exceeds raw + header.
+pub fn encode_i8_plane(vals: &[i8], out: &mut Vec<u8>) {
+    assert!(vals.len() <= MAX_PLANE, "plane too large");
+    let zrun = zrun_i8(vals);
+    let rc = rc_i8(vals);
+    let (mode, best_len) = [(MODE_SPLIT, zrun.len()), (MODE_RC, rc.len())]
+        .into_iter()
+        .fold((MODE_RAW, vals.len()), |best, cand| {
+            if cand.1 < best.1 { cand } else { best }
+        });
+    out.reserve(PLANE_HEADER_BYTES + best_len);
+    out.push(mode);
+    out.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+    match mode {
+        MODE_SPLIT => out.extend_from_slice(&zrun),
+        MODE_RC => out.extend_from_slice(&rc),
+        // SAFETY-free raw path: i8 and u8 share representation
+        _ => out.extend(vals.iter().map(|&v| v as u8)),
+    }
+}
+
+/// Decode an i8 plane coded by [`encode_i8_plane`].
+pub fn decode_i8_plane(bytes: &[u8], out: &mut Vec<i8>) -> Result<()> {
+    let mut r = crate::codec::Reader::new(bytes);
+    let mode = r.byte()?;
+    let n = r.u32()? as usize;
+    ensure!(n <= MAX_PLANE, "i8 plane count {n} too large");
+    out.clear();
+    out.reserve(n.min(4096));
+    let body = r.take(r.remaining())?;
+    match mode {
+        MODE_RAW => {
+            ensure!(body.len() == n, "raw i8 plane length {} != {n}",
+                    body.len());
+            out.extend(body.iter().map(|&b| b as i8));
+        }
+        MODE_SPLIT => un_zrun_i8(body, n, out)?,
+        MODE_RC => un_rc_i8(body, n, out)?,
+        m => bail!("unknown i8 plane mode {m}"),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// sorted index/value lists (sparse delta updates)
+// ---------------------------------------------------------------------------
+
+/// Rice parameter from the gap mean: the classic `floor(log2 mean)`
+/// rule, clamped to the 1-byte header's documented 0..=31 range.
+fn rice_k_for(gaps: &[u64]) -> u32 {
+    let n = gaps.len().max(1) as u64;
+    let mean = gaps.iter().sum::<u64>() / n;
+    if mean < 1 { 0 } else { (63 - mean.leading_zeros() as u64).min(31) as u32 }
+}
+
+/// Entropy-code a sparse update list.  Mode 1 sorts by index, Rice-
+/// codes the strictly-increasing index gaps (parameter from the gap
+/// mean, carried in a 1-byte header), and routes the values through
+/// the f32 plane coder; duplicate indices or an empty list fall back
+/// to raw.  Output never exceeds `4 + 8·n + PLANE_HEADER_BYTES` — one
+/// header over the legacy sparse body.
+pub fn encode_updates(updates: &[(u32, f32)], out: &mut Vec<u8>) {
+    assert!(updates.len() <= MAX_PLANE, "update list too large");
+    let raw_len = 8 * updates.len();
+    let coded = coded_updates(updates);
+    let (mode, best) = match &coded {
+        Some(c) if c.len() < raw_len => (MODE_SPLIT, c.len()),
+        _ => (MODE_RAW, raw_len),
+    };
+    out.reserve(PLANE_HEADER_BYTES + best);
+    out.push(mode);
+    out.extend_from_slice(&(updates.len() as u32).to_le_bytes());
+    if mode == MODE_SPLIT {
+        out.extend_from_slice(&coded.expect("coded candidate"));
+    } else {
+        let mut w = crate::codec::Writer(out);
+        for (i, v) in updates {
+            w.u32(*i);
+            w.f32(*v);
+        }
+    }
+}
+
+/// The mode-1 candidate body: `u32 gap_bytes | u8 rice_k | gaps |
+/// f32-plane values`.  None when the list is empty or holds a
+/// duplicate index (gap-1 coding needs strict monotonicity).
+fn coded_updates(updates: &[(u32, f32)]) -> Option<Vec<u8>> {
+    if updates.is_empty() {
+        return None;
+    }
+    let mut sorted: Vec<(u32, f32)> = updates.to_vec();
+    sorted.sort_unstable_by_key(|&(i, _)| i);
+    if sorted.windows(2).any(|w| w[0].0 == w[1].0) {
+        return None;
+    }
+    // gaps: the first index absolute, later ones minus the implied +1
+    let gaps: Vec<u64> = sorted
+        .iter()
+        .enumerate()
+        .map(|(j, &(i, _))| {
+            if j == 0 { i as u64 } else { (i - sorted[j - 1].0 - 1) as u64 }
+        })
+        .collect();
+    let k = rice_k_for(&gaps);
+    let mut w = BitWriter::new();
+    for &g in &gaps {
+        w.write_rice(g, k);
+    }
+    let bits = w.finish();
+    let mut body = Vec::with_capacity(5 + bits.len());
+    body.extend_from_slice(&(1 + bits.len() as u32).to_le_bytes());
+    body.push(k as u8);
+    body.extend_from_slice(&bits);
+    let vals: Vec<f32> = sorted.iter().map(|&(_, v)| v).collect();
+    encode_f32_plane(&vals, &mut body);
+    Some(body)
+}
+
+/// Decode an update list coded by [`encode_updates`].  Mode-1 lists
+/// come back sorted by index (semantically equivalent: indices are
+/// unique and application order does not matter); mode-0 lists keep
+/// their original order byte-for-byte.
+pub fn decode_updates(bytes: &[u8], out: &mut Vec<(u32, f32)>) -> Result<()> {
+    let mut r = crate::codec::Reader::new(bytes);
+    let mode = r.byte()?;
+    let n = r.u32()? as usize;
+    ensure!(n <= MAX_PLANE, "update count {n} too large");
+    out.clear();
+    out.reserve(n.min(4096));
+    match mode {
+        MODE_RAW => {
+            ensure!(r.remaining() == 8 * n,
+                    "raw update list length {} != 8x{n}", r.remaining());
+            for _ in 0..n {
+                let i = r.u32()?;
+                let v = r.f32()?;
+                out.push((i, v));
+            }
+        }
+        MODE_SPLIT => {
+            let gap_bytes = r.u32()? as usize;
+            ensure!(gap_bytes >= 1 && gap_bytes <= r.remaining(),
+                    "gap section length {gap_bytes} out of range");
+            let section = r.take(gap_bytes)?;
+            let k = section[0] as u32;
+            ensure!(k <= 31, "rice parameter {k} out of range");
+            let mut bits = BitReader::new(&section[1..]);
+            let mut idx = 0u64;
+            let mut values = Vec::new();
+            decode_f32_plane(r.take(r.remaining())?, &mut values)?;
+            ensure!(values.len() == n,
+                    "update values {} != indices {n}", values.len());
+            for (j, &v) in values.iter().enumerate() {
+                let g = bits.read_rice(k)?;
+                idx = if j == 0 { g } else {
+                    idx.checked_add(g + 1)
+                        .ok_or_else(|| anyhow::anyhow!("index overflow"))?
+                };
+                ensure!(idx <= u32::MAX as u64, "update index {idx} overflows");
+                out.push((idx as u32, v));
+            }
+            ensure!(bits.remaining_bits() < 8,
+                    "trailing gap bytes ({} bits)", bits.remaining_bits());
+        }
+        m => bail!("unknown update list mode {m}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip_f32(vals: &[f32]) -> usize {
+        let mut enc = Vec::new();
+        encode_f32_plane(vals, &mut enc);
+        assert!(enc.len() <= 4 * vals.len() + PLANE_HEADER_BYTES,
+                "expansion: {} > {}", enc.len(),
+                4 * vals.len() + PLANE_HEADER_BYTES);
+        let mut back = Vec::new();
+        decode_f32_plane(&enc, &mut back).unwrap();
+        assert_eq!(back.len(), vals.len());
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bit-exactness");
+        }
+        enc.len()
+    }
+
+    #[test]
+    fn f32_plane_roundtrips_bit_exact() {
+        roundtrip_f32(&[]);
+        roundtrip_f32(&[0.0]);
+        roundtrip_f32(&[1.0, -2.5, 0.0, 3.25, f32::MIN_POSITIVE,
+                        -f32::MIN_POSITIVE / 2.0, f32::MAX, f32::MIN,
+                        f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0]);
+        let mut rng = Rng::new(11);
+        let vals: Vec<f32> = (0..500).map(|_| rng.normal() as f32).collect();
+        roundtrip_f32(&vals);
+    }
+
+    #[test]
+    fn clustered_magnitudes_compress() {
+        // spectral-coefficient-like data: similar magnitudes, many
+        // exact zeros — both coded modes should beat raw easily
+        let mut rng = Rng::new(12);
+        let vals: Vec<f32> = (0..2000)
+            .map(|i| if i % 3 == 0 { 0.0 }
+                 else { (rng.normal() * 0.01) as f32 })
+            .collect();
+        let n = roundtrip_f32(&vals);
+        assert!(n < 4 * vals.len() * 9 / 10,
+                "coded {} vs raw {}", n, 4 * vals.len());
+    }
+
+    #[test]
+    fn incompressible_plane_falls_back_to_raw() {
+        let mut rng = Rng::new(13);
+        let vals: Vec<f32> = (0..257)
+            .map(|_| f32::from_bits(rng.next_u64() as u32))
+            .collect();
+        let mut enc = Vec::new();
+        encode_f32_plane(&vals, &mut enc);
+        assert!(enc.len() <= 4 * vals.len() + PLANE_HEADER_BYTES);
+        let mut back = Vec::new();
+        decode_f32_plane(&enc, &mut back).unwrap();
+        assert_eq!(vals.len(), back.len());
+    }
+
+    #[test]
+    fn i8_plane_roundtrips_and_compresses_zeros() {
+        let cases: Vec<Vec<i8>> = vec![
+            vec![],
+            vec![0; 100],
+            vec![1, -1, 127, -128, 0, 0, 5],
+            (0..=255u8).map(|b| b as i8).collect(),
+        ];
+        for vals in &cases {
+            let mut enc = Vec::new();
+            encode_i8_plane(vals, &mut enc);
+            assert!(enc.len() <= vals.len() + PLANE_HEADER_BYTES);
+            let mut back = Vec::new();
+            decode_i8_plane(&enc, &mut back).unwrap();
+            assert_eq!(&back, vals);
+        }
+        // zero-heavy quantized plane: large win
+        let mut rng = Rng::new(21);
+        let vals: Vec<i8> = (0..4000)
+            .map(|_| if rng.below(8) == 0 { (rng.below(15) as i8) - 7 }
+                 else { 0 })
+            .collect();
+        let mut enc = Vec::new();
+        encode_i8_plane(&vals, &mut enc);
+        assert!(enc.len() < vals.len() / 3,
+                "zero-heavy plane coded {} of {}", enc.len(), vals.len());
+        let mut back = Vec::new();
+        decode_i8_plane(&enc, &mut back).unwrap();
+        assert_eq!(back, vals);
+    }
+
+    #[test]
+    fn updates_roundtrip_sorted() {
+        let cases: Vec<Vec<(u32, f32)>> = vec![
+            vec![],
+            vec![(0, 1.0)],
+            vec![(5, 1.0), (2, -2.0), (9, 0.5)], // unsorted input
+            vec![(0, 1.0), (1, 2.0), (2, 3.0), (1000, -1.0)],
+            vec![(u32::MAX, 7.0), (0, -7.0)],
+            vec![(3, 1.0), (3, 2.0)], // duplicate index: raw fallback
+        ];
+        for ups in &cases {
+            let mut enc = Vec::new();
+            encode_updates(ups, &mut enc);
+            assert!(enc.len() <= 8 * ups.len() + PLANE_HEADER_BYTES,
+                    "expansion on {ups:?}");
+            let mut back = Vec::new();
+            decode_updates(&enc, &mut back).unwrap();
+            let mut want = ups.clone();
+            let mut got = back.clone();
+            want.sort_by(|a, b| (a.0, a.1.to_bits()).cmp(&(b.0, b.1.to_bits())));
+            got.sort_by(|a, b| (a.0, a.1.to_bits()).cmp(&(b.0, b.1.to_bits())));
+            assert_eq!(want.len(), got.len());
+            for (w, g) in want.iter().zip(&got) {
+                assert_eq!(w.0, g.0);
+                assert_eq!(w.1.to_bits(), g.1.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn dense_sorted_updates_compress_well() {
+        // the shape stream deltas actually have: clustered indices
+        // with small gaps, values of similar magnitude
+        let mut rng = Rng::new(31);
+        let mut idx = 0u32;
+        let ups: Vec<(u32, f32)> = (0..400)
+            .map(|_| {
+                idx += 1 + rng.below(6) as u32;
+                (idx, (rng.normal() * 0.02) as f32)
+            })
+            .collect();
+        let mut enc = Vec::new();
+        encode_updates(&ups, &mut enc);
+        assert!(enc.len() * 3 < 8 * ups.len() * 2,
+                "gap coding saved too little: {} vs {}", enc.len(),
+                8 * ups.len());
+        let mut back = Vec::new();
+        decode_updates(&enc, &mut back).unwrap();
+        assert_eq!(back, ups, "already-sorted input comes back identical");
+    }
+
+    #[test]
+    fn corrupt_streams_error_never_panic() {
+        let mut rng = Rng::new(0xE44);
+        let vals: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let ups: Vec<(u32, f32)> = (0..32).map(|i| (i * 7, 0.5)).collect();
+        let q: Vec<i8> = (0..64).map(|_| (rng.below(5) as i8) - 2).collect();
+        let mut encs: Vec<Vec<u8>> = Vec::new();
+        for m in [MODE_RAW, MODE_SPLIT, MODE_RC] {
+            // force each mode byte onto each valid payload
+            let mut e = Vec::new();
+            encode_f32_plane(&vals, &mut e);
+            e[0] = m;
+            encs.push(e.clone());
+            let mut e = Vec::new();
+            encode_i8_plane(&q, &mut e);
+            e[0] = m;
+            encs.push(e.clone());
+            let mut e = Vec::new();
+            encode_updates(&ups, &mut e);
+            e[0] = m.min(MODE_SPLIT);
+            encs.push(e);
+        }
+        let mut f32_out = Vec::new();
+        let mut i8_out = Vec::new();
+        let mut up_out = Vec::new();
+        for enc in &encs {
+            // truncations
+            for cut in 0..enc.len() {
+                let _ = decode_f32_plane(&enc[..cut], &mut f32_out);
+                let _ = decode_i8_plane(&enc[..cut], &mut i8_out);
+                let _ = decode_updates(&enc[..cut], &mut up_out);
+            }
+            // seeded bit flips (mode byte, counts, rice k, payload)
+            for _ in 0..400 {
+                let mut e = enc.clone();
+                let i = rng.below(e.len());
+                e[i] ^= 1 << rng.below(8);
+                let _ = decode_f32_plane(&e, &mut f32_out);
+                let _ = decode_i8_plane(&e, &mut i8_out);
+                let _ = decode_updates(&e, &mut up_out);
+            }
+        }
+        // huge declared counts error before allocating
+        for tid in 0..3 {
+            let mut e = vec![MODE_SPLIT];
+            e.extend_from_slice(&u32::MAX.to_le_bytes());
+            e.extend_from_slice(&[0xAB; 16]);
+            let r = match tid {
+                0 => decode_f32_plane(&e, &mut f32_out).is_err(),
+                1 => decode_i8_plane(&e, &mut i8_out).is_err(),
+                _ => decode_updates(&e, &mut up_out).is_err(),
+            };
+            assert!(r, "oversized count must be a typed error");
+        }
+        // unknown mode bytes
+        let mut e = vec![7u8, 1, 0, 0, 0, 0, 0, 0, 0];
+        assert!(decode_f32_plane(&e, &mut f32_out).is_err());
+        assert!(decode_i8_plane(&e, &mut i8_out).is_err());
+        e[0] = 2; // MODE_RC is not a valid update-list mode
+        assert!(decode_updates(&e, &mut up_out).is_err());
+    }
+
+    #[test]
+    fn range_coder_roundtrips_random_bytes() {
+        let mut rng = Rng::new(0x4C0DE);
+        for case in 0..20 {
+            let n = rng.below(300);
+            let skew = rng.below(4) == 0;
+            let bytes: Vec<u8> = (0..n)
+                .map(|_| if skew { (rng.below(3)) as u8 }
+                     else { rng.next_u64() as u8 })
+                .collect();
+            let mut rc = RcEncoder::new();
+            let mut tree = ByteTree::new();
+            for &b in &bytes {
+                tree.encode(&mut rc, b);
+            }
+            let enc = rc.finish();
+            let mut dec = RcDecoder::new(&enc).unwrap();
+            let mut tree = ByteTree::new();
+            for (i, &b) in bytes.iter().enumerate() {
+                assert_eq!(tree.decode(&mut dec).unwrap(), b,
+                           "case {case} byte {i}");
+            }
+        }
+    }
+}

@@ -44,6 +44,11 @@ pub struct ServeConfig {
     /// frames at non-primary ladder points — clients downgrade
     /// cleanly to the paper's fixed block.
     pub ladder: bool,
+    /// Advertise the lossless entropy-coding capability
+    /// (`codec::wire`) in the handshake.  `false` makes
+    /// entropy-capable clients downgrade cleanly to raw payloads (and
+    /// rejects coded frames) — same negotiation lever as `stream`.
+    pub entropy: bool,
     /// Session-table shards.  Session state is partitioned by a hash
     /// of the session id into this many independently-locked
     /// `SessionManager` shards, so the serving data path never takes
@@ -83,6 +88,7 @@ impl Default for ServeConfig {
             session_ttl_s: 300,
             stream: true,
             ladder: true,
+            entropy: true,
             shards: 8,
             poll_workers: 4,
             idle_deadline_ms: 30_000,
@@ -245,6 +251,9 @@ impl FromJson for ServeConfig {
         if let Some(b) = j.get("ladder").and_then(|v| v.as_bool()) {
             self.ladder = b;
         }
+        if let Some(b) = j.get("entropy").and_then(|v| v.as_bool()) {
+            self.entropy = b;
+        }
         self.shards = j.usize_or("shards", self.shards);
         self.poll_workers = j.usize_or("poll_workers", self.poll_workers);
         self.idle_deadline_ms =
@@ -271,6 +280,7 @@ impl FromJson for ServeConfig {
             "session_ttl_s" => self.session_ttl_s = value.parse()?,
             "stream" => self.stream = value.parse()?,
             "ladder" => self.ladder = value.parse()?,
+            "entropy" => self.entropy = value.parse()?,
             "shards" => self.shards = value.parse()?,
             "poll_workers" => self.poll_workers = value.parse()?,
             "idle_deadline_ms" => self.idle_deadline_ms = value.parse()?,
@@ -455,10 +465,18 @@ mod tests {
         assert_eq!(cfg.ratio, 6.5);
         assert!(cfg.stream, "stream capability defaults on");
         assert!(cfg.ladder, "ladder capability defaults on");
+        assert!(cfg.entropy, "entropy capability defaults on");
         let cfg = ServeConfig::load(None, &["stream=false".into(),
-                                            "ladder=false".into()]).unwrap();
+                                            "ladder=false".into(),
+                                            "entropy=false".into()]).unwrap();
         assert!(!cfg.stream);
         assert!(!cfg.ladder);
+        assert!(!cfg.entropy);
+        // the JSON path reaches the entropy knob too
+        let p = std::env::temp_dir().join("fc_cfg_entropy_test.json");
+        std::fs::write(&p, r#"{"entropy": false}"#).unwrap();
+        let cfg = ServeConfig::load(Some(p.to_str().unwrap()), &[]).unwrap();
+        assert!(!cfg.entropy);
     }
 
     #[test]

@@ -24,7 +24,9 @@ use super::transport::{FrameRx, FrameTx, ShapedTransport, TcpTransport,
 use crate::codec::fourier::{crop_block_into, pack_block_into};
 use crate::codec::rate::{ladder_from_manifest, LadderPoint, RateConfig,
                          RateController};
-use crate::codec::stream::{BlockGeom, StreamConfig, StreamEncoder, StreamStep};
+use crate::codec::stream::{BlockGeom, StreamConfig, StreamEncoder,
+                           StreamStep, UPDATE_WIRE_BYTES};
+use crate::codec::wire;
 use crate::codec::CodecEngine;
 use crate::model::tokenizer;
 use crate::model::weights::Weights;
@@ -38,7 +40,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 /// Capabilities this client implementation requests in its `Hello`.
-pub const CLIENT_CAPS: u32 = caps::STREAM | caps::CODEC_FC | caps::LADDER;
+pub const CLIENT_CAPS: u32 =
+    caps::STREAM | caps::CODEC_FC | caps::LADDER | caps::ENTROPY;
 
 struct ClientBucket {
     ks: usize,
@@ -79,6 +82,14 @@ pub struct DeviceClient {
     step_scratch: StreamStep,
     /// Adaptive rate control (None = pinned to the primary point).
     adaptive: Option<AdaptiveState>,
+    /// Entropy-coded wire format (`codec::wire`): when enabled, each
+    /// data-frame body is losslessly entropy-coded and shipped coded
+    /// only when that wins over the raw encoding (try-and-compare).
+    entropy: bool,
+    /// Reusable entropy-coded body buffer (moved into the frame for
+    /// the send, then recovered — the raw-frame twin of
+    /// `packed_scratch`).
+    coded_scratch: Vec<u8>,
     /// Reusable planes for cropping the fused executable's full block
     /// down to a non-primary ladder point.
     crop_re: Vec<f32>,
@@ -123,6 +134,15 @@ pub struct ClientStats {
     /// `max_point > 0` means the session downshifted at least once.
     pub ladder_switches: u64,
     pub max_point: u8,
+    /// Entropy-coded wire layer (`codec::wire`): frames shipped coded
+    /// vs raw fallbacks (coding would not have shrunk the body), plus
+    /// the pre/post-coding byte split over the coded frames' bodies —
+    /// `pre_coding_bytes` is what those bodies would have cost raw,
+    /// `post_coding_bytes` what actually crossed the wire.
+    pub entropy_frames: u64,
+    pub entropy_fallbacks: u64,
+    pub pre_coding_bytes: u64,
+    pub post_coding_bytes: u64,
 }
 
 impl ClientStats {
@@ -228,6 +248,8 @@ impl DeviceClient {
             encoder: None,
             step_scratch: StreamStep::default(),
             adaptive: None,
+            entropy: false,
+            coded_scratch: Vec::new(),
             crop_re: Vec::new(),
             crop_im: Vec::new(),
             last_point: 0,
@@ -403,6 +425,32 @@ impl DeviceClient {
         self.adaptive.is_some()
     }
 
+    /// Switch this session to the entropy-coded wire format
+    /// (`codec::wire`): every subsequent Activation / Delta body is
+    /// losslessly entropy-coded and ships coded only when that beats
+    /// the raw encoding (try-and-compare; a frame coding cannot
+    /// shrink falls back to raw and counts as `entropy_fallbacks`).
+    /// Tokens are bit-identical either way — the coding is lossless.
+    /// Returns false (staying on raw frames) when the handshake did
+    /// not negotiate the entropy capability — the clean downgrade
+    /// path against pre-entropy servers.
+    #[must_use = "a false return means the server refused the entropy \
+                  capability and the client stays on raw frames"]
+    pub fn enable_entropy(&mut self) -> bool {
+        if self.negotiated_caps() & caps::ENTROPY == 0 {
+            crate::warn_!("client",
+                          "session {}: server lacks the entropy capability; \
+                           staying on raw frames", self.session);
+            return false;
+        }
+        self.entropy = true;
+        true
+    }
+
+    pub fn entropy_enabled(&self) -> bool {
+        self.entropy
+    }
+
     /// Pin the session to one advertised ladder point (the benches'
     /// fixed-point ablation lever): adaptive accounting still runs
     /// but the point never moves.  Returns false without the ladder
@@ -546,8 +594,31 @@ impl DeviceClient {
     }
 
     /// Ship a prepared step as a recompute Activation frame,
-    /// recovering the coefficient buffer for the next step.
+    /// recovering the coefficient buffer for the next step.  With the
+    /// entropy format enabled the packed plane is coded first and the
+    /// smaller of the two encodings crosses the wire.
     fn send_activation(&mut self, ps: PreparedStep) -> Result<()> {
+        let mut packed = ps.packed;
+        let mut coded = std::mem::take(&mut self.coded_scratch);
+        coded.clear();
+        if self.entropy {
+            wire::encode_f32_plane(&packed, &mut coded);
+            let raw = packed.len() * 4;
+            if coded.len() < raw {
+                self.stats.entropy_frames += 1;
+                self.stats.pre_coding_bytes += raw as u64;
+                self.stats.post_coding_bytes += coded.len() as u64;
+            } else {
+                self.stats.entropy_fallbacks += 1;
+                coded.clear();
+            }
+        }
+        let is_coded = !coded.is_empty();
+        if is_coded {
+            // the coded bytes carry the step; the packed plane never
+            // leaves, so recover it for the next step right away
+            self.packed_scratch = std::mem::take(&mut packed);
+        }
         let frame = Frame::Activation {
             session: self.session,
             request: ps.request,
@@ -556,11 +627,15 @@ impl DeviceClient {
             ks: ps.ks as u16,
             kd: ps.kd as u16,
             point: ps.point,
-            packed: ps.packed,
+            packed,
+            coded,
         };
         self.timed_send(&frame)?;
-        if let Frame::Activation { packed, .. } = frame {
-            self.packed_scratch = packed;
+        if let Frame::Activation { packed, coded, .. } = frame {
+            if !is_coded {
+                self.packed_scratch = packed;
+            }
+            self.coded_scratch = coded;
         }
         self.stats.requests += 1;
         Ok(())
@@ -625,6 +700,37 @@ impl DeviceClient {
                 st.ctrl.observe_drift(drift);
             }
             let keyframe = self.step_scratch.keyframe;
+            let mut packed = std::mem::take(&mut self.step_scratch.packed);
+            let mut updates = std::mem::take(&mut self.step_scratch.updates);
+            let mut coded = std::mem::take(&mut self.coded_scratch);
+            coded.clear();
+            if self.entropy {
+                let raw = if keyframe {
+                    packed.len() * 4
+                } else {
+                    4 + updates.len() * UPDATE_WIRE_BYTES
+                };
+                if keyframe {
+                    wire::encode_f32_plane(&packed, &mut coded);
+                } else {
+                    wire::encode_updates(&updates, &mut coded);
+                }
+                if coded.len() < raw {
+                    self.stats.entropy_frames += 1;
+                    self.stats.pre_coding_bytes += raw as u64;
+                    self.stats.post_coding_bytes += coded.len() as u64;
+                } else {
+                    self.stats.entropy_fallbacks += 1;
+                    coded.clear();
+                }
+            }
+            let is_coded = !coded.is_empty();
+            if is_coded {
+                // the coded bytes carry the step; the raw buffers
+                // never leave, so recover them right away
+                self.step_scratch.packed = std::mem::take(&mut packed);
+                self.step_scratch.updates = std::mem::take(&mut updates);
+            }
             let frame = Frame::Delta {
                 session: self.session,
                 request,
@@ -635,23 +741,27 @@ impl DeviceClient {
                 ks: ks as u16,
                 kd: kd as u16,
                 point,
-                packed: std::mem::take(&mut self.step_scratch.packed),
-                updates: std::mem::take(&mut self.step_scratch.updates),
+                packed,
+                updates,
+                coded,
             };
             let b0 = self.stats.bytes_sent;
             self.timed_send(&frame)?;
-            let wire = self.stats.bytes_sent - b0;
+            let sent = self.stats.bytes_sent - b0;
             if keyframe {
                 self.stats.key_frames += 1;
-                self.stats.key_bytes += wire;
+                self.stats.key_bytes += sent;
             } else {
                 self.stats.delta_frames += 1;
-                self.stats.delta_bytes += wire;
+                self.stats.delta_bytes += sent;
             }
             // recover the frame buffers so the next step reuses them
-            if let Frame::Delta { packed, updates, .. } = frame {
-                self.step_scratch.packed = packed;
-                self.step_scratch.updates = updates;
+            if let Frame::Delta { packed, updates, coded, .. } = frame {
+                if !is_coded {
+                    self.step_scratch.packed = packed;
+                    self.step_scratch.updates = updates;
+                }
+                self.coded_scratch = coded;
             }
             if !counted {
                 self.stats.requests += 1;

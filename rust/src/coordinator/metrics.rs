@@ -39,6 +39,14 @@ pub struct Metrics {
     pub conns_opened: AtomicU64,
     pub conns_closed: AtomicU64,
     pub idle_disconnects: AtomicU64,
+    /// Entropy-coded wire layer (`codec::wire`): data frames that
+    /// arrived entropy-coded, the wire bytes saved versus the raw
+    /// packed encoding of the same payloads, and frames a capable
+    /// client sent raw because coding would not have shrunk them
+    /// (try-and-compare fallback, observed server-side).
+    pub entropy_frames: AtomicU64,
+    pub entropy_bytes_saved: AtomicU64,
+    pub entropy_fallbacks: AtomicU64,
     pub ladder_dwell_frames: Histogram,
     pub queue_wait_us: Histogram,
     pub decompress_us: Histogram,
@@ -80,6 +88,9 @@ impl Metrics {
         j.set("conns_opened", g(&self.conns_opened));
         j.set("conns_closed", g(&self.conns_closed));
         j.set("idle_disconnects", g(&self.idle_disconnects));
+        j.set("entropy_frames", g(&self.entropy_frames));
+        j.set("entropy_bytes_saved", g(&self.entropy_bytes_saved));
+        j.set("entropy_fallbacks", g(&self.entropy_fallbacks));
         for (name, h) in [("queue_wait_us", &self.queue_wait_us),
                           ("decompress_us", &self.decompress_us),
                           ("exec_us", &self.exec_us),
@@ -134,5 +145,12 @@ mod tests {
         assert_eq!(j.usize_or("ladder_switches", 0), 3);
         assert_eq!(j.path("ladder_dwell_frames.count").unwrap().as_usize(),
                    Some(1));
+        m.entropy_frames.fetch_add(7, Ordering::Relaxed);
+        m.entropy_bytes_saved.fetch_add(512, Ordering::Relaxed);
+        m.entropy_fallbacks.fetch_add(1, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.usize_or("entropy_frames", 0), 7);
+        assert_eq!(j.usize_or("entropy_bytes_saved", 0), 512);
+        assert_eq!(j.usize_or("entropy_fallbacks", 0), 1);
     }
 }

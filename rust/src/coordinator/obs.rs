@@ -255,6 +255,11 @@ pub enum FlightKind {
     /// Receive-side transport failure: peer vanished mid-stream or
     /// sent an oversize/garbage frame the codec layer refused.
     RxError = 8,
+    /// An entropy-capable sender fell back to a raw payload
+    /// mid-stream (its try-and-compare lost) — recorded only for
+    /// connections that previously sent coded frames, so the ring is
+    /// not flooded by peers that simply never enabled entropy.
+    EntropyFallback = 9,
 }
 
 impl FlightKind {
@@ -268,6 +273,7 @@ impl FlightKind {
             6 => FlightKind::LadderSwitch,
             7 => FlightKind::KeyframeResync,
             8 => FlightKind::RxError,
+            9 => FlightKind::EntropyFallback,
             _ => return None,
         })
     }
@@ -282,6 +288,7 @@ impl FlightKind {
             FlightKind::LadderSwitch => "ladder_switch",
             FlightKind::KeyframeResync => "keyframe_resync",
             FlightKind::RxError => "rx_error",
+            FlightKind::EntropyFallback => "entropy_fallback",
         }
     }
 }
@@ -480,6 +487,13 @@ pub struct BucketMetrics {
     pub groups: AtomicU64,
     /// Per-item queue wait, µs.
     pub wait_us: Histogram,
+    /// Raw-equivalent body bytes of this bucket's entropy-coded
+    /// frames (what the payloads would have cost uncoded).  Coded
+    /// frames only, so `pre / post` is the bucket's realized
+    /// entropy-coding ratio.
+    pub pre_bytes: AtomicU64,
+    /// Actual coded body bytes of the same frames.
+    pub post_bytes: AtomicU64,
 }
 
 /// Per-poll-worker occupancy gauges.
@@ -620,6 +634,14 @@ mod tests {
         assert!(e.to_json().get("kind").and_then(|v| v.as_str())
                 == Some("stream_reject"));
         assert!(format!("{e}").contains("stream_reject"));
+        // every kind byte roundtrips through the packed word
+        for k in 1..=9u8 {
+            let kind = FlightKind::from_u8(k).unwrap();
+            r.record(kind, 1, 0, 0, 0);
+            assert_eq!(r.dump().last().unwrap().kind, kind);
+        }
+        assert!(FlightKind::from_u8(10).is_none());
+        assert_eq!(FlightKind::EntropyFallback.name(), "entropy_fallback");
     }
 
     #[test]
@@ -686,6 +708,10 @@ mod tests {
         assert!(o.bucket(99).is_none());
         o.bucket(32).unwrap().enqueued.fetch_add(2, Ordering::Relaxed);
         assert_eq!(o.bucket(32).unwrap().enqueued.load(Ordering::Relaxed), 2);
+        o.bucket(32).unwrap().pre_bytes.fetch_add(100, Ordering::Relaxed);
+        o.bucket(32).unwrap().post_bytes.fetch_add(60, Ordering::Relaxed);
+        assert_eq!(o.bucket(32).unwrap().pre_bytes.load(Ordering::Relaxed),
+                   100);
         assert_eq!(o.shards.len(), 4);
         assert_eq!(o.workers.len(), 2);
         o.push_snapshot("{\"t_ms\":1}".into());

@@ -9,6 +9,8 @@
 //!   Activation c→s  u64 session | u64 request | u16 bucket | u16 true_len
 //!                   | u16 ks | u16 kd | u8 point
 //!                   | f32 packed[·]  (conjugate-sym pack)
+//!                   (entropy: point bit 7 set, body = codec::wire
+//!                   f32 plane instead of raw packed floats)
 //!   Token      s→c  u64 request | i32 token | f32 logprob
 //!   GetStats   c→s  (empty)
 //!   Stats      s→c  u32 json_len | json
@@ -18,6 +20,8 @@
 //!                   | u16 bucket | u16 true_len | u16 ks | u16 kd | u8 point
 //!                   | keyframe=1: f32 packed[·]   (full block)
 //!                   | keyframe=0: u32 count | (u32 idx | f32 val)[count]
+//!                   (entropy: keyframe bit 1 set, body = codec::wire
+//!                   f32 plane (keyframe) or update list (sparse))
 //!   HelloAck   s→c  u16 version | u32 caps | u16 bucket_count
 //!                   | per bucket: u16 bucket | u8 n
 //!                   | n x (u16 ks | u16 kd | f32 err_bound)
@@ -38,6 +42,18 @@
 //! updates into it.  The server keeps per-session decoder state and
 //! hard-fails deltas that arrive out of sequence, answering with
 //! [`ErrorCode::StreamReject`] so the client resyncs via keyframe.
+//!
+//! Entropy coding ([`caps::ENTROPY`], `codec::wire`) rides the
+//! existing data frames without a version bump: when both sides
+//! advertised the cap, a sender may flag a frame as entropy-coded via
+//! spare flag bits in the existing header (Activation: bit 7 of the
+//! ladder point byte; Delta: bit 1 of the keyframe byte) and replace
+//! the raw payload with a self-describing `codec::wire` plane.
+//! `Frame::decode` carries the coded bytes opaquely in `coded` — the
+//! service decodes them lazily so corrupt bitstreams become typed
+//! [`ErrorCode::BadRequest`] rejects, and a peer that never
+//! negotiated the cap never sees a flag bit (legacy frames stay
+//! byte-identical).
 
 use anyhow::{bail, ensure, Result};
 use std::io::{Read, Write};
@@ -117,6 +133,12 @@ pub mod caps {
     /// accepts data frames at the non-primary ladder points it
     /// advertises in its `HelloAck`.
     pub const LADDER: u32 = 1 << 4;
+    /// Lossless entropy-coded payloads (`codec::wire`): Activation
+    /// and Delta bodies may arrive as coded planes behind the spare
+    /// header flag bits.  Negotiated like every other cap — a sender
+    /// must never set a flag bit toward a peer that did not advertise
+    /// this.
+    pub const ENTROPY: u32 = 1 << 5;
 }
 
 /// Typed reason byte carried by every [`Frame::Error`].
@@ -240,6 +262,11 @@ pub enum Frame {
         /// against the ladder it advertised.
         point: u8,
         packed: Vec<f32>,
+        /// Entropy-coded body (`codec::wire` f32 plane).  Invariant:
+        /// non-empty ⇔ the frame crossed the wire entropy-coded, and
+        /// then `packed` is empty.  Requires [`caps::ENTROPY`] on
+        /// both sides; flagged on the wire via bit 7 of `point`.
+        coded: Vec<u8>,
     },
     Token { request: u64, token: i32, logprob: f32 },
     GetStats,
@@ -265,6 +292,11 @@ pub enum Frame {
         point: u8,
         packed: Vec<f32>,
         updates: Vec<(u32, f32)>,
+        /// Entropy-coded body: a `codec::wire` f32 plane (keyframe)
+        /// or update list (sparse delta).  Invariant: non-empty ⇔
+        /// entropy-coded on the wire, and then `packed`/`updates`
+        /// are empty.  Flagged via bit 1 of the keyframe byte.
+        coded: Vec<u8>,
     },
     /// Server's handshake answer: its protocol version, capability
     /// bits, and the bucket quality ladders it serves — the client
@@ -316,15 +348,22 @@ impl Frame {
                 b.extend_from_slice(model.as_bytes());
             }
             Frame::Activation { session, request, bucket, true_len, ks, kd,
-                                point, packed } => {
+                                point, packed, coded } => {
                 b.extend_from_slice(&session.to_le_bytes());
                 b.extend_from_slice(&request.to_le_bytes());
                 b.extend_from_slice(&bucket.to_le_bytes());
                 b.extend_from_slice(&true_len.to_le_bytes());
                 b.extend_from_slice(&ks.to_le_bytes());
                 b.extend_from_slice(&kd.to_le_bytes());
-                b.push(*point);
-                crate::codec::Writer(&mut b).f32s(packed);
+                if coded.is_empty() {
+                    b.push(*point);
+                    crate::codec::Writer(&mut b).f32s(packed);
+                } else {
+                    debug_assert!(packed.is_empty(),
+                                  "coded and packed are exclusive");
+                    b.push(*point | 0x80);
+                    b.extend_from_slice(coded);
+                }
             }
             Frame::Token { request, token, logprob } => {
                 b.extend_from_slice(&request.to_le_bytes());
@@ -342,17 +381,21 @@ impl Frame {
                 b.extend_from_slice(msg.as_bytes());
             }
             Frame::Delta { session, request, seq, keyframe, bucket, true_len,
-                           ks, kd, point, packed, updates } => {
+                           ks, kd, point, packed, updates, coded } => {
                 b.extend_from_slice(&session.to_le_bytes());
                 b.extend_from_slice(&request.to_le_bytes());
                 b.extend_from_slice(&seq.to_le_bytes());
-                b.push(*keyframe as u8);
+                b.push(*keyframe as u8 | if coded.is_empty() { 0 } else { 2 });
                 b.extend_from_slice(&bucket.to_le_bytes());
                 b.extend_from_slice(&true_len.to_le_bytes());
                 b.extend_from_slice(&ks.to_le_bytes());
                 b.extend_from_slice(&kd.to_le_bytes());
                 b.push(*point);
-                if *keyframe {
+                if !coded.is_empty() {
+                    debug_assert!(packed.is_empty() && updates.is_empty(),
+                                  "coded and raw bodies are exclusive");
+                    b.extend_from_slice(coded);
+                } else if *keyframe {
                     crate::codec::Writer(&mut b).f32s(packed);
                 } else {
                     b.extend_from_slice(&(updates.len() as u32).to_le_bytes());
@@ -417,13 +460,22 @@ impl Frame {
                 let ks = r.u16()?;
                 let kd = r.u16()?;
                 let point = r.byte()?;
-                let mut packed = Vec::new();
-                r.f32s(r.remaining() / 4, &mut packed)?;
-                ensure!(r.remaining() == 0,
-                        "activation body not f32-aligned ({} stray bytes)",
-                        r.remaining());
+                let (packed, coded) = if point & 0x80 != 0 {
+                    // entropy-coded body: carried opaquely, decoded
+                    // lazily by the service behind the cap check
+                    let c = r.take(r.remaining())?.to_vec();
+                    ensure!(!c.is_empty(), "empty entropy-coded activation");
+                    (Vec::new(), c)
+                } else {
+                    let mut p = Vec::new();
+                    r.f32s(r.remaining() / 4, &mut p)?;
+                    ensure!(r.remaining() == 0,
+                            "activation body not f32-aligned ({} stray bytes)",
+                            r.remaining());
+                    (p, Vec::new())
+                };
                 Frame::Activation { session, request, bucket, true_len, ks, kd,
-                                    point, packed }
+                                    point: point & 0x7F, packed, coded }
             }
             2 => {
                 let request = u64_of(&mut r)?;
@@ -450,20 +502,25 @@ impl Frame {
                 let request = u64_of(&mut r)?;
                 let seq = r.u32()?;
                 let kf = r.byte()?;
-                ensure!(kf <= 1, "bad keyframe flag {kf}");
-                let keyframe = kf == 1;
+                ensure!(kf <= 3, "bad keyframe flag {kf}");
+                let keyframe = kf & 1 == 1;
+                let is_coded = kf & 2 != 0;
                 let bucket = r.u16()?;
                 let true_len = r.u16()?;
                 let ks = r.u16()?;
                 let kd = r.u16()?;
                 let point = r.byte()?;
-                let (packed, updates) = if keyframe {
+                let (packed, updates, coded) = if is_coded {
+                    let c = r.take(r.remaining())?.to_vec();
+                    ensure!(!c.is_empty(), "empty entropy-coded delta");
+                    (Vec::new(), Vec::new(), c)
+                } else if keyframe {
                     let mut p = Vec::new();
                     r.f32s(r.remaining() / 4, &mut p)?;
                     ensure!(r.remaining() == 0,
                             "keyframe body not f32-aligned ({} stray bytes)",
                             r.remaining());
-                    (p, Vec::new())
+                    (p, Vec::new(), Vec::new())
                 } else {
                     let n = r.u32()? as usize;
                     let mut u = Vec::with_capacity(n.min(r.remaining() / 8));
@@ -474,10 +531,11 @@ impl Frame {
                     }
                     ensure!(r.remaining() == 0,
                             "trailing delta bytes ({})", r.remaining());
-                    (Vec::new(), u)
+                    (Vec::new(), u, Vec::new())
                 };
                 Frame::Delta { session, request, seq, keyframe, bucket,
-                               true_len, ks, kd, point, packed, updates }
+                               true_len, ks, kd, point, packed, updates,
+                               coded }
             }
             8 => {
                 let version = r.u16()?;
@@ -559,11 +617,13 @@ mod tests {
         roundtrip(Frame::Activation {
             session: 1, request: 42, bucket: 32, true_len: 29, ks: 32, kd: 15,
             point: 0, packed: vec![1.0, -2.5, 0.0, 3.25],
+            coded: vec![],
         });
         // a downshifted ladder point rides the same header
         roundtrip(Frame::Activation {
             session: 1, request: 43, bucket: 32, true_len: 29, ks: 32, kd: 7,
             point: 2, packed: vec![1.0, -2.5],
+            coded: vec![],
         });
         roundtrip(Frame::Token { request: 42, token: 101, logprob: -0.75 });
         roundtrip(Frame::GetStats);
@@ -575,17 +635,36 @@ mod tests {
             session: 3, request: 9, seq: 4, keyframe: true, bucket: 16,
             true_len: 12, ks: 5, kd: 3, point: 1, packed: vec![0.5; 15],
             updates: vec![],
+            coded: vec![],
         });
         roundtrip(Frame::Delta {
             session: 3, request: 10, seq: 5, keyframe: false, bucket: 16,
             true_len: 13, ks: 5, kd: 3, point: 0, packed: vec![],
             updates: vec![(0, 1.0), (7, -2.5), (14, 0.125)],
+            coded: vec![],
         });
         // empty delta: the "nothing drifted" frame is legal and tiny
         roundtrip(Frame::Delta {
             session: 3, request: 11, seq: 6, keyframe: false, bucket: 16,
             true_len: 13, ks: 5, kd: 3, point: 0, packed: vec![],
             updates: vec![],
+            coded: vec![],
+        });
+        // entropy-coded bodies ride the spare flag bits (the coded
+        // bytes are opaque at this layer)
+        roundtrip(Frame::Activation {
+            session: 1, request: 44, bucket: 32, true_len: 29, ks: 32, kd: 15,
+            point: 2, packed: vec![], coded: vec![1, 4, 0, 0, 0, 0xAB, 0xCD],
+        });
+        roundtrip(Frame::Delta {
+            session: 3, request: 12, seq: 7, keyframe: true, bucket: 16,
+            true_len: 12, ks: 5, kd: 3, point: 1, packed: vec![],
+            updates: vec![], coded: vec![2, 1, 0, 0, 0, 0x55],
+        });
+        roundtrip(Frame::Delta {
+            session: 3, request: 13, seq: 8, keyframe: false, bucket: 16,
+            true_len: 13, ks: 5, kd: 3, point: 0, packed: vec![],
+            updates: vec![], coded: vec![0, 0, 0, 0, 0],
         });
         roundtrip(Frame::HelloAck {
             version: PROTOCOL_VERSION, caps: caps::STREAM | caps::CODEC_FC,
@@ -667,6 +746,7 @@ mod tests {
                 session: 1, request: 42, bucket: 32, true_len: 29, ks: 3,
                 kd: 3, point: 0,
                 packed: vec![1.0, -2.5, 0.0, 3.25, 0.5, -1.0, 2.0, 0.25, 9.0],
+                coded: vec![],
             },
             Frame::Token { request: 42, token: 101, logprob: -0.75 },
             Frame::GetStats,
@@ -678,11 +758,23 @@ mod tests {
                 session: 1, request: 43, seq: 2, keyframe: true, bucket: 32,
                 true_len: 29, ks: 3, kd: 3, point: 1, packed: vec![1.0; 9],
                 updates: vec![],
+                coded: vec![],
             },
             Frame::Delta {
                 session: 1, request: 44, seq: 3, keyframe: false, bucket: 32,
                 true_len: 30, ks: 3, kd: 3, point: 0, packed: vec![],
                 updates: vec![(2, 0.5), (8, -1.0)],
+                coded: vec![],
+            },
+            Frame::Activation {
+                session: 1, request: 45, bucket: 32, true_len: 29, ks: 3,
+                kd: 3, point: 1, packed: vec![],
+                coded: vec![1, 9, 0, 0, 0, 0xDE, 0xAD, 0xBE, 0xEF],
+            },
+            Frame::Delta {
+                session: 1, request: 46, seq: 4, keyframe: false, bucket: 32,
+                true_len: 30, ks: 3, kd: 3, point: 0, packed: vec![],
+                updates: vec![], coded: vec![0, 0, 0, 0, 0],
             },
             Frame::HelloAck {
                 version: PROTOCOL_VERSION, caps: caps::STREAM,
@@ -740,6 +832,7 @@ mod tests {
         let f = Frame::Activation {
             session: 1, request: 2, bucket: 16, true_len: 8, ks: 3, kd: 3,
             point: 0, packed: vec![1.0; 9],
+            coded: vec![],
         };
         let mut enc = f.encode();
         // append 2 stray bytes to the body and patch the length prefix
@@ -764,17 +857,37 @@ mod tests {
             session: 1, request: 2, seq: 0, keyframe: false, bucket: 16,
             true_len: 8, ks: 3, kd: 3, point: 0, packed: vec![],
             updates: vec![(1, 2.0)],
+            coded: vec![],
         };
         let enc = f.encode();
         let mut body = enc[FRAME_OVERHEAD_BYTES..].to_vec();
-        body[20] = 2; // keyframe flag offset: 8 + 8 + 4
+        body[20] = 4; // keyframe flag offset: 8 + 8 + 4; 4 > coded|kf
         assert!(Frame::decode(7, &body).is_err());
+
+        // the coded flag (bit 1) with an empty body is malformed
+        let mut body = enc[FRAME_OVERHEAD_BYTES..].to_vec();
+        body[20] = 2;
+        body.truncate(STREAM_HEADER_BYTES);
+        assert!(Frame::decode(7, &body).is_err(),
+                "empty entropy-coded delta must not decode");
+        // ...but with a body it decodes, carrying the bytes opaquely
+        let mut body = enc[FRAME_OVERHEAD_BYTES..].to_vec();
+        body[20] = 2;
+        match Frame::decode(7, &body).unwrap() {
+            Frame::Delta { keyframe, packed, updates, coded, .. } => {
+                assert!(!keyframe);
+                assert!(packed.is_empty() && updates.is_empty());
+                assert_eq!(coded.len(), 4 + 8); // former count + 1 update
+            }
+            other => panic!("expected Delta, got {}", other.type_id()),
+        }
 
         // keyframe with a partial trailing float
         let kf = Frame::Delta {
             session: 1, request: 2, seq: 0, keyframe: true, bucket: 16,
             true_len: 8, ks: 3, kd: 3, point: 0, packed: vec![1.0; 9],
             updates: vec![],
+            coded: vec![],
         };
         let mut kenc = kf.encode();
         kenc.extend_from_slice(&[0xAA, 0xBB]);
@@ -788,6 +901,7 @@ mod tests {
             session: 1, request: 2, seq: 0, keyframe: false, bucket: 16,
             true_len: 8, ks: 3, kd: 3, point: 0, packed: vec![],
             updates: vec![(1, 2.0), (3, 4.0)],
+            coded: vec![],
         };
         let denc = d.encode();
         let mut dbody = denc[FRAME_OVERHEAD_BYTES..].to_vec();
@@ -806,6 +920,7 @@ mod tests {
             session: 0, request: 0, seq: 1, keyframe: true, bucket: 64,
             true_len: 64, ks: 33, kd: 15, point: 0, packed: vec![0.0; 33 * 15],
             updates: vec![],
+            coded: vec![],
         };
         assert_eq!(kf.encode().len(),
                    FRAME_OVERHEAD_BYTES + STREAM_HEADER_BYTES + 33 * 15 * 4);
@@ -814,6 +929,7 @@ mod tests {
             session: 0, request: 0, seq: 2, keyframe: false, bucket: 64,
             true_len: 64, ks: 33, kd: 15, point: 0, packed: vec![],
             updates: vec![(0, 1.0); 7],
+            coded: vec![],
         };
         assert_eq!(d.encode().len(),
                    FRAME_OVERHEAD_BYTES + STREAM_HEADER_BYTES + 4 + 7 * 8);
@@ -826,11 +942,60 @@ mod tests {
         let f = Frame::Activation {
             session: 0, request: 0, bucket: 64, true_len: 64, ks: 64, kd: 15,
             point: 0, packed: vec![0.0; 64 * 15],
+            coded: vec![],
         };
         let enc = f.encode();
         assert_eq!(enc.len(),
                    FRAME_OVERHEAD_BYTES + ACTIVATION_HEADER_BYTES
                    + 64 * 15 * 4);
+    }
+
+    /// Entropy-coded frames: the flag bits are pinned to the wire
+    /// (Activation point bit 7, Delta keyframe bit 1), an empty coded
+    /// body is malformed, and a frame built without `coded` encodes
+    /// byte-identically to the pre-entropy layout — the mixed-version
+    /// guarantee.
+    #[test]
+    fn entropy_flag_bits_are_pinned() {
+        let act = Frame::Activation {
+            session: 1, request: 2, bucket: 16, true_len: 8, ks: 3, kd: 3,
+            point: 5, packed: vec![], coded: vec![0xAA, 0xBB, 0xCC],
+        };
+        let enc = act.encode();
+        // point byte is the last header byte; bit 7 flags the coding
+        assert_eq!(enc[FRAME_OVERHEAD_BYTES + ACTIVATION_HEADER_BYTES - 1],
+                   5 | 0x80);
+        assert_eq!(enc.len(),
+                   FRAME_OVERHEAD_BYTES + ACTIVATION_HEADER_BYTES + 3);
+        roundtrip(act);
+        // flag set but body empty: malformed
+        let hdr = &enc[FRAME_OVERHEAD_BYTES
+                       ..FRAME_OVERHEAD_BYTES + ACTIVATION_HEADER_BYTES];
+        assert!(Frame::decode(1, hdr).is_err(),
+                "empty entropy-coded activation must not decode");
+
+        let delta = Frame::Delta {
+            session: 1, request: 2, seq: 3, keyframe: true, bucket: 16,
+            true_len: 8, ks: 3, kd: 3, point: 0, packed: vec![],
+            updates: vec![], coded: vec![0x11; 6],
+        };
+        let enc = delta.encode();
+        assert_eq!(enc[FRAME_OVERHEAD_BYTES + 20], 1 | 2,
+                   "keyframe byte carries the coded flag in bit 1");
+        assert_eq!(enc.len(),
+                   FRAME_OVERHEAD_BYTES + STREAM_HEADER_BYTES + 6);
+        roundtrip(delta);
+
+        // without coded, the encoding is byte-identical to pre-entropy:
+        // no flag bit, packed floats in place (legacy peers parse it)
+        let legacy = Frame::Activation {
+            session: 9, request: 8, bucket: 32, true_len: 20, ks: 3, kd: 3,
+            point: 1, packed: vec![1.5; 9], coded: vec![],
+        };
+        let enc = legacy.encode();
+        assert_eq!(enc[FRAME_OVERHEAD_BYTES + ACTIVATION_HEADER_BYTES - 1], 1);
+        assert_eq!(enc.len(),
+                   FRAME_OVERHEAD_BYTES + ACTIVATION_HEADER_BYTES + 9 * 4);
     }
 
     /// Satellite pin: for every frame variant, the documented header
@@ -848,6 +1013,7 @@ mod tests {
         assert_eq!(body_len(&Frame::Activation {
             session: 0, request: 0, bucket: 16, true_len: 8, ks: 0, kd: 0,
             point: 0, packed: vec![],
+            coded: vec![],
         }), ACTIVATION_HEADER_BYTES);
 
         assert_eq!(body_len(&Frame::Token {
@@ -871,12 +1037,14 @@ mod tests {
             session: 0, request: 0, seq: 0, keyframe: true, bucket: 16,
             true_len: 8, ks: 0, kd: 0, point: 0, packed: vec![],
             updates: vec![],
+            coded: vec![],
         }), STREAM_HEADER_BYTES);
         // a sparse delta adds its u32 count even when empty
         assert_eq!(body_len(&Frame::Delta {
             session: 0, request: 0, seq: 0, keyframe: false, bucket: 16,
             true_len: 8, ks: 0, kd: 0, point: 0, packed: vec![],
             updates: vec![],
+            coded: vec![],
         }), STREAM_HEADER_BYTES + 4);
 
         assert_eq!(body_len(&Frame::HelloAck {
@@ -921,6 +1089,7 @@ mod tests {
             session: 0, request: 0, seq: 0, keyframe: false, bucket: 1,
             true_len: 1, ks: 1, kd: 1, point: 0, packed: vec![],
             updates: vec![],
+            coded: vec![],
         }.encode()[FRAME_OVERHEAD_BYTES..].to_vec();
         let off = STREAM_HEADER_BYTES;
         sparse[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());

@@ -37,6 +37,7 @@ use super::transport::{InProcTransport, TcpTransport, Transport};
 use crate::codec::fourier::{embed_block_into, unpack_block_into};
 use crate::codec::rate::{ladder_from_manifest, LadderPoint};
 use crate::codec::stream::{BlockGeom, UPDATE_WIRE_BYTES};
+use crate::codec::wire;
 use crate::codec::CodecEngine;
 use crate::config::ServeConfig;
 use crate::model::weights::Weights;
@@ -274,6 +275,12 @@ pub struct ConnState {
     /// sessions.
     session: u64,
     hello_done: bool,
+    /// The connection has sent at least one entropy-coded data frame
+    /// — raw frames after this point are the client's try-and-compare
+    /// fallback and get recorded as such.  Gating on it keeps plain
+    /// pre-entropy clients from flooding the flight ring with
+    /// spurious fallback events.
+    saw_entropy: bool,
 }
 
 impl ConnState {
@@ -366,6 +373,10 @@ impl ServingService {
                    Json::Num(m.enqueued.load(Ordering::Relaxed) as f64));
             bj.set("groups",
                    Json::Num(m.groups.load(Ordering::Relaxed) as f64));
+            bj.set("pre_bytes",
+                   Json::Num(m.pre_bytes.load(Ordering::Relaxed) as f64));
+            bj.set("post_bytes",
+                   Json::Num(m.post_bytes.load(Ordering::Relaxed) as f64));
             let mut wj = Json::obj();
             wj.set("count", Json::Num(m.wait_us.count() as f64));
             wj.set("mean", Json::Num(m.wait_us.mean()));
@@ -407,7 +418,7 @@ impl ServingService {
         let conn_id = self.next_conn.fetch_add(1, Ordering::Relaxed);
         ConnState { engine, reply, peer, point_re: Vec::new(),
                     point_im: Vec::new(), client_caps: 0, conn_id, session: 0,
-                    hello_done: false }
+                    hello_done: false, saw_entropy: false }
     }
 
     /// Connection teardown: release the session-ownership binding so
@@ -452,6 +463,69 @@ impl ServingService {
         let lp = bm.ladder.get(point as usize)?;
         (lp.ks == ks as usize && lp.kd == kd as usize)
             .then_some((lp.ks, lp.kd))
+    }
+
+    /// Lazy decode of an entropy-coded wire body ([`codec::wire`],
+    /// negotiated via [`caps::ENTROPY`]).  `Frame::decode` carries the
+    /// coded bytes opaquely so the frame layer stays stateless; this
+    /// is where they become a packed plane (keyframe / recompute) or a
+    /// sparse update list (delta), where a malformed bitstream turns
+    /// into a typed `BadRequest` instead of a panic, and where the
+    /// entropy counters and per-bucket pre/post byte split are fed.
+    /// Raw frames pass through untouched — but a raw frame on a
+    /// connection that already sent coded ones is the client's
+    /// try-and-compare fallback, recorded for the flight ring.
+    #[allow(clippy::too_many_arguments)]
+    #[allow(clippy::type_complexity)]
+    fn take_entropy_body(&self, conn: &mut ConnState, session: u64, seq: u32,
+                         bucket: usize, keyframe: bool, coded: Vec<u8>,
+                         packed: Vec<f32>, updates: Vec<(u32, f32)>)
+        -> std::result::Result<(Vec<f32>, Vec<(u32, f32)>), Response> {
+        let shard = self.sessions.shard_of(session) as u16;
+        if coded.is_empty() {
+            if conn.saw_entropy {
+                self.metrics.entropy_fallbacks.fetch_add(1, Ordering::Relaxed);
+                self.obs.flight.record(FlightKind::EntropyFallback, session,
+                                       shard, seq, keyframe as u64);
+            }
+            return Ok((packed, updates));
+        }
+        if conn.negotiated_caps(self.caps) & caps::ENTROPY == 0 {
+            return Err(Self::err(
+                ErrorCode::BadRequest,
+                "entropy capability not negotiated".into()));
+        }
+        conn.saw_entropy = true;
+        let (packed, updates, pre) = if keyframe {
+            let mut vals = Vec::new();
+            if let Err(e) = wire::decode_f32_plane(&coded, &mut vals) {
+                self.obs.flight.record(FlightKind::BadRequest, session,
+                                       shard, seq, bucket as u64);
+                return Err(Self::err(ErrorCode::BadRequest,
+                                     format!("entropy: {e}")));
+            }
+            let pre = vals.len() as u64 * 4;
+            (vals, updates, pre)
+        } else {
+            let mut ups = Vec::new();
+            if let Err(e) = wire::decode_updates(&coded, &mut ups) {
+                self.obs.flight.record(FlightKind::BadRequest, session,
+                                       shard, seq, bucket as u64);
+                return Err(Self::err(ErrorCode::BadRequest,
+                                     format!("entropy: {e}")));
+            }
+            let pre = (4 + ups.len() * UPDATE_WIRE_BYTES) as u64;
+            (packed, ups, pre)
+        };
+        let post = coded.len() as u64;
+        self.metrics.entropy_frames.fetch_add(1, Ordering::Relaxed);
+        self.metrics.entropy_bytes_saved
+            .fetch_add(pre.saturating_sub(post), Ordering::Relaxed);
+        if let Some(bm) = self.obs.bucket(bucket) {
+            bm.pre_bytes.fetch_add(pre, Ordering::Relaxed);
+            bm.post_bytes.fetch_add(post, Ordering::Relaxed);
+        }
+        Ok((packed, updates))
     }
 
     /// Shared tail of both data arms: unpack a packed block with the
@@ -597,11 +671,16 @@ impl ServingService {
                 })
             }
             Frame::Activation { session, request, bucket, true_len, ks, kd,
-                                point, packed } => {
+                                point, packed, coded } => {
                 let t_rx = Instant::now();
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                let body_wire = if coded.is_empty() {
+                    packed.len() * 4
+                } else {
+                    coded.len()
+                };
                 self.metrics.bytes_rx.fetch_add(
-                    (packed.len() * 4 + ACTIVATION_HEADER_BYTES) as u64,
+                    (body_wire + ACTIVATION_HEADER_BYTES) as u64,
                     Ordering::Relaxed);
                 if let Some(reject) = self.session_gate(conn, session) {
                     return reject;
@@ -625,8 +704,14 @@ impl ServingService {
                         format!("bad bucket {bucket} point {point} \
                                  ({ks}x{kd})"));
                 };
+                let (packed, _) = match self.take_entropy_body(
+                    conn, session, 0, bucket, true, coded, packed,
+                    Vec::new()) {
+                    Ok(pu) => pu,
+                    Err(reject) => return reject,
+                };
                 {
-                    let body = (packed.len() * 4) as u64;
+                    let body = body_wire as u64;
                     let admitted = self.sessions.with(session, |s| {
                         if !s.touch(session, body) {
                             // recompute requests are stateless: an
@@ -675,10 +760,12 @@ impl ServingService {
                 resp
             }
             Frame::Delta { session, request, seq, keyframe, bucket, true_len,
-                           ks, kd, point, packed, updates } => {
+                           ks, kd, point, packed, updates, coded } => {
                 let t_rx = Instant::now();
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-                let body_bytes = if keyframe {
+                let body_bytes = if !coded.is_empty() {
+                    coded.len()
+                } else if keyframe {
                     packed.len() * 4
                 } else {
                     4 + updates.len() * UPDATE_WIRE_BYTES
@@ -711,6 +798,12 @@ impl ServingService {
                         ErrorCode::BadRequest,
                         format!("bad bucket {bucket} point {point} \
                                  ({ks}x{kd})"));
+                };
+                let (packed, updates) = match self.take_entropy_body(
+                    conn, session, seq, bucket, keyframe, coded, packed,
+                    updates) {
+                    Ok(pu) => pu,
+                    Err(reject) => return reject,
                 };
                 // only frames a negotiated peer aims at a real stream
                 // count in the key/delta wire split (in-sequence
@@ -1100,6 +1193,9 @@ pub fn start_service(cfg: &ServeConfig, store: Arc<ArtifactStore>)
     }
     if cfg.ladder {
         server_caps |= caps::LADDER;
+    }
+    if cfg.entropy {
+        server_caps |= caps::ENTROPY;
     }
     let service = Arc::new(ServingService {
         model,

@@ -456,6 +456,7 @@ mod tests {
             Frame::Activation {
                 session: 1, request: 2, bucket: 16, true_len: 9, ks: 3, kd: 3,
                 point: 0, packed: vec![0.5; 9],
+                coded: vec![],
             },
             Frame::Token { request: 2, token: 65, logprob: -0.5 },
             Frame::Error { code: ErrorCode::StreamReject, msg: "gap".into() },

@@ -1,0 +1,357 @@
+//! Bit-level I/O for the entropy-coded wire format (`codec::wire`):
+//! an LSB-first [`BitWriter`]/[`BitReader`] pair with the unary,
+//! Elias-gamma, and Golomb-Rice integer codes built on top.
+//!
+//! Bit order is LSB-first: the first bit written lands in the
+//! least-significant bit of the first byte, so multi-bit fields can
+//! straddle byte boundaries without the reader knowing widths in
+//! advance.  The reader treats truncated input as a typed error,
+//! never a panic — these decoders sit behind `Frame::decode` on
+//! attacker-controlled bytes.
+
+use anyhow::{ensure, Result};
+
+/// Append-only bit stream writer.  `finish` zero-pads the last
+/// partial byte, so a decoder must track its own element count rather
+/// than reading to exhaustion.
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    cur: u8,
+    /// Filled bits of `cur`, always 0..8.
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> BitWriter {
+        BitWriter::default()
+    }
+
+    /// Total bits written so far (before padding).
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Bytes the stream will occupy once finished (padding included).
+    pub fn byte_len(&self) -> usize {
+        self.bit_len().div_ceil(8)
+    }
+
+    /// Append the low `n` bits of `val`, LSB first.  `n` may be 0
+    /// (writes nothing) up to 64 (the full word).
+    pub fn write_bits(&mut self, mut val: u64, mut n: u32) {
+        assert!(n <= 64, "bit width {n} > 64");
+        if n < 64 {
+            val &= (1u64 << n) - 1;
+        }
+        while n > 0 {
+            let take = (8 - self.nbits).min(n);
+            self.cur |= ((val & ((1u64 << take) - 1)) as u8) << self.nbits;
+            self.nbits += take;
+            val >>= take;
+            n -= take;
+            if self.nbits == 8 {
+                self.buf.push(self.cur);
+                self.cur = 0;
+                self.nbits = 0;
+            }
+        }
+    }
+
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u64, 1);
+    }
+
+    /// Unary code: `v` zero bits, then a terminating one bit.
+    pub fn write_unary(&mut self, v: u64) {
+        for _ in 0..v {
+            self.write_bit(false);
+        }
+        self.write_bit(true);
+    }
+
+    /// Elias gamma (`v >= 1`): the exponent `k = floor(log2 v)` in
+    /// unary, then the `k` low bits of `v` (the leading one bit is
+    /// implied by the exponent).
+    pub fn write_gamma(&mut self, v: u64) {
+        assert!(v >= 1, "gamma is defined for v >= 1");
+        let k = 63 - v.leading_zeros();
+        self.write_unary(k as u64);
+        self.write_bits(v, k);
+    }
+
+    /// Golomb-Rice with parameter `k`: the quotient `v >> k` in
+    /// unary, then the `k` remainder bits raw.
+    pub fn write_rice(&mut self, v: u64, k: u32) {
+        assert!(k < 64, "rice parameter {k} out of range");
+        self.write_unary(v >> k);
+        self.write_bits(v, k);
+    }
+
+    /// Flush the last partial byte (zero padding) and return the
+    /// stream.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push(self.cur);
+        }
+        self.buf
+    }
+}
+
+/// Bit stream reader over a borrowed byte slice.  Every read returns
+/// a typed error once the input is exhausted.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Bit cursor into `buf`.
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> BitReader<'a> {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Bits left, including any zero padding the writer flushed with.
+    pub fn remaining_bits(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+
+    pub fn read_bit(&mut self) -> Result<bool> {
+        ensure!(self.pos < self.buf.len() * 8,
+                "bitstream truncated at bit {}", self.pos);
+        let b = (self.buf[self.pos / 8] >> (self.pos % 8)) & 1;
+        self.pos += 1;
+        Ok(b == 1)
+    }
+
+    /// Read `n` bits (0..=64), LSB first — the inverse of
+    /// [`BitWriter::write_bits`].
+    pub fn read_bits(&mut self, n: u32) -> Result<u64> {
+        ensure!(n <= 64, "bit width {n} > 64");
+        ensure!(self.remaining_bits() >= n as usize,
+                "bitstream truncated at bit {} (+{n})", self.pos);
+        let mut out = 0u64;
+        let mut got = 0u32;
+        while got < n {
+            let byte = self.buf[self.pos / 8] as u64;
+            let off = (self.pos % 8) as u32;
+            let take = (8 - off).min(n - got);
+            out |= ((byte >> off) & ((1u64 << take) - 1)) << got;
+            got += take;
+            self.pos += take as usize;
+        }
+        Ok(out)
+    }
+
+    pub fn read_unary(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        loop {
+            if self.read_bit()? {
+                return Ok(v);
+            }
+            v += 1;
+        }
+    }
+
+    pub fn read_gamma(&mut self) -> Result<u64> {
+        let k = self.read_unary()?;
+        ensure!(k < 64, "gamma exponent {k} out of range");
+        Ok((1u64 << k) | self.read_bits(k as u32)?)
+    }
+
+    pub fn read_rice(&mut self, k: u32) -> Result<u64> {
+        ensure!(k < 64, "rice parameter {k} out of range");
+        let q = self.read_unary()?;
+        ensure!(k == 0 || q <= (u64::MAX >> k),
+                "rice quotient {q} overflows at k={k}");
+        Ok((q << k) | self.read_bits(k)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bits_roundtrip_across_byte_boundaries() {
+        // widths 1..=64 written back to back so nearly every field
+        // straddles a byte boundary
+        let mut w = BitWriter::new();
+        for n in 1..=64u32 {
+            let v = 0xA5A5_5A5A_F00D_BEEFu64 >> (64 - n);
+            w.write_bits(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for n in 1..=64u32 {
+            let want = 0xA5A5_5A5A_F00D_BEEFu64 >> (64 - n);
+            assert_eq!(r.read_bits(n).unwrap(), want, "width {n}");
+        }
+        assert!(r.remaining_bits() < 8, "only padding may remain");
+    }
+
+    #[test]
+    fn zero_and_full_width_edges() {
+        let mut w = BitWriter::new();
+        w.write_bits(0xDEAD, 0); // no-op
+        assert_eq!(w.bit_len(), 0);
+        w.write_bits(u64::MAX, 64);
+        w.write_bits(123, 0); // no-op between fields
+        w.write_bits(u64::MAX, 64);
+        w.write_bit(true);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(0).unwrap(), 0);
+        assert_eq!(r.read_bits(64).unwrap(), u64::MAX);
+        assert_eq!(r.read_bits(64).unwrap(), u64::MAX);
+        assert!(r.read_bit().unwrap());
+    }
+
+    #[test]
+    fn lsb_first_layout_is_pinned() {
+        // 0b1 then 0b01 then 0b111: byte 0 = 1 | (01 << 1) | (111<<3)
+        let mut w = BitWriter::new();
+        w.write_bits(0b1, 1);
+        w.write_bits(0b01, 2);
+        w.write_bits(0b111, 3);
+        let bytes = w.finish();
+        assert_eq!(bytes, vec![0b0011_1011]);
+    }
+
+    #[test]
+    fn unary_gamma_rice_roundtrip() {
+        let vals: Vec<u64> = vec![0, 1, 2, 3, 7, 8, 63, 64, 100, 4095,
+                                  1 << 20, (1 << 33) + 17];
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            if v < 200 {
+                w.write_unary(v);
+            }
+            w.write_gamma(v + 1);
+            for k in [0u32, 1, 4, 13] {
+                w.write_rice(v, k);
+            }
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            if v < 200 {
+                assert_eq!(r.read_unary().unwrap(), v);
+            }
+            assert_eq!(r.read_gamma().unwrap(), v + 1);
+            for k in [0u32, 1, 4, 13] {
+                assert_eq!(r.read_rice(k).unwrap(), v, "rice k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn gamma_handles_u64_extremes() {
+        let mut w = BitWriter::new();
+        w.write_gamma(1);
+        w.write_gamma(u64::MAX);
+        w.write_rice(u64::MAX, 63);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_gamma().unwrap(), 1);
+        assert_eq!(r.read_gamma().unwrap(), u64::MAX);
+        assert_eq!(r.read_rice(63).unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn seeded_random_streams_roundtrip() {
+        let mut rng = Rng::new(0xB175);
+        for case in 0..200u64 {
+            let mut w = BitWriter::new();
+            let mut script: Vec<(u8, u64, u32)> = Vec::new();
+            for _ in 0..rng.below(64) + 1 {
+                match rng.below(4) {
+                    0 => {
+                        let n = rng.below(65) as u32;
+                        let v = rng.next_u64();
+                        w.write_bits(v, n);
+                        let want = if n == 64 { v }
+                                   else if n == 0 { 0 }
+                                   else { v & ((1 << n) - 1) };
+                        script.push((0, want, n));
+                    }
+                    1 => {
+                        let v = rng.below(40) as u64;
+                        w.write_unary(v);
+                        script.push((1, v, 0));
+                    }
+                    2 => {
+                        let v = rng.next_u64() >> rng.below(64) as u32 | 1;
+                        w.write_gamma(v);
+                        script.push((2, v, 0));
+                    }
+                    _ => {
+                        let k = rng.below(20) as u32;
+                        let v = rng.below(100_000) as u64;
+                        w.write_rice(v, k);
+                        script.push((3, v, k));
+                    }
+                }
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &(op, v, n) in &script {
+                let got = match op {
+                    0 => r.read_bits(n).unwrap(),
+                    1 => r.read_unary().unwrap(),
+                    2 => r.read_gamma().unwrap(),
+                    _ => r.read_rice(n).unwrap(),
+                };
+                assert_eq!(got, v, "case {case} op {op}");
+            }
+            assert!(r.remaining_bits() < 8, "case {case}: stray bytes");
+        }
+    }
+
+    #[test]
+    fn truncated_input_errors_instead_of_panicking() {
+        let mut w = BitWriter::new();
+        w.write_gamma(1 << 30);
+        w.write_rice(999, 5);
+        let bytes = w.finish();
+        for cut in 0..bytes.len() {
+            let mut r = BitReader::new(&bytes[..cut]);
+            // some prefix decodes, but the stream must end in an
+            // error (never a panic) before both fields come back
+            let first = r.read_gamma();
+            let both = first.is_ok() && r.read_rice(5).is_ok();
+            assert!(!both, "cut {cut}: truncated stream decoded fully");
+        }
+        let mut r = BitReader::new(&[]);
+        assert!(r.read_bit().is_err());
+        assert!(r.read_bits(1).is_err());
+        assert!(r.read_unary().is_err());
+        assert!(r.read_gamma().is_err());
+        assert!(r.read_rice(3).is_err());
+        assert_eq!(r.read_bits(0).unwrap(), 0, "0-bit read needs no input");
+    }
+
+    #[test]
+    fn all_zero_padding_never_decodes_as_unary() {
+        // a unary terminator can't come from the zero padding: a
+        // reader that overruns its element count hits a typed error
+        let mut w = BitWriter::new();
+        w.write_bit(true);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_unary().unwrap(), 0);
+        assert!(r.read_unary().is_err(), "padding is all zeros");
+    }
+
+    #[test]
+    fn oversized_rice_quotient_is_error() {
+        // forge a stream whose unary quotient would overflow q << k
+        let mut w = BitWriter::new();
+        w.write_unary(3);
+        w.write_bits(0, 63);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read_rice(63).is_err(), "3 << 63 overflows");
+    }
+}

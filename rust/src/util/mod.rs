@@ -1,6 +1,7 @@
 //! Zero-dependency utilities: JSON, deterministic RNG, logging,
 //! latency histograms.
 
+pub mod bits;
 pub mod hist;
 pub mod json;
 pub mod log;

@@ -1,0 +1,206 @@
+//! Hermetic entropy-wire tests: the lossless `codec::wire` layer
+//! negotiated via `caps::ENTROPY`, driven end to end through the live
+//! server — token identity, the try-and-compare never-worse byte
+//! contract, the mixed-version downgrade against a legacy (entropy
+//! off) server, and the server-side metric / byte-split accounting.
+//! All tests hard-assert on every checkout — no python, no XLA.
+
+use fourier_compress::codec::stream::StreamConfig;
+use fourier_compress::config::{FromJson, ServeConfig};
+use fourier_compress::coordinator::protocol::caps;
+use fourier_compress::coordinator::{DeviceClient, EdgeServer};
+use fourier_compress::model::tokenizer;
+use fourier_compress::net::Channel;
+use fourier_compress::testkit::forged_store;
+use fourier_compress::util::json;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+fn serve_config(store_root: &std::path::Path, overrides: &[String])
+    -> ServeConfig {
+    let mut args = vec![
+        "listen=127.0.0.1:0".to_string(),
+        format!("artifacts={}", store_root.display()),
+    ];
+    args.extend_from_slice(overrides);
+    ServeConfig::load(None, &args).unwrap()
+}
+
+const PROMPT: &str = "Q mira hue ? A";
+const STEPS: usize = 8;
+
+/// Drive one client for `STEPS` tokens and return them.
+fn drive(client: &mut DeviceClient) -> Vec<i32> {
+    let mut ctx = tokenizer::encode_prompt(PROMPT);
+    let mut tokens = Vec::new();
+    for _ in 0..STEPS {
+        let (t, _) = client.step(&ctx).unwrap();
+        ctx.push(t);
+        tokens.push(t);
+    }
+    tokens
+}
+
+/// Recompute regime, entropy on vs off against the same server: the
+/// coding is lossless (bit-identical tokens), never ships a larger
+/// frame than raw (try-and-compare), and both sides account the
+/// coded/raw split consistently — client stats, server counters, and
+/// the per-bucket pre/post byte columns in the Stats JSON all agree.
+#[test]
+fn entropy_recompute_is_lossless_and_never_worse() {
+    let store = Arc::new(forged_store("entropy_e2e").expect("forge"));
+    let cfg = serve_config(&store.root, &[]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+    let addr = server.addr.to_string();
+
+    // baseline: raw frames (entropy negotiated but never enabled)
+    let mut base = DeviceClient::connect(&addr, &store, 41,
+                                         Channel::unlimited()).unwrap();
+    assert!(base.server_caps() & caps::ENTROPY != 0,
+            "server must advertise the entropy capability by default");
+    assert!(!base.entropy_enabled());
+    let base_tokens = drive(&mut base);
+    let base_bytes = base.stats.bytes_sent;
+    assert_eq!(base.stats.entropy_frames + base.stats.entropy_fallbacks, 0);
+    base.bye().unwrap();
+    let served_raw = server.metrics.entropy_frames.load(Ordering::Relaxed);
+    assert_eq!(served_raw, 0, "raw client must not count as entropy");
+
+    // entropy on: same prompt, same steps
+    let mut ec = DeviceClient::connect(&addr, &store, 42,
+                                       Channel::unlimited()).unwrap();
+    assert!(ec.enable_entropy(),
+            "handshake must negotiate the entropy capability");
+    assert!(ec.entropy_enabled());
+    let tokens = drive(&mut ec);
+    assert_eq!(tokens, base_tokens,
+               "entropy coding is lossless: tokens must be bit-identical");
+    // try-and-compare: an entropy client never ships more bytes
+    assert!(ec.stats.bytes_sent <= base_bytes,
+            "entropy {} B vs raw {} B", ec.stats.bytes_sent, base_bytes);
+    // every step was either coded or an explicit raw fallback
+    assert_eq!(ec.stats.entropy_frames + ec.stats.entropy_fallbacks,
+               STEPS as u64);
+    // the coded frames' byte split is self-consistent and explains
+    // the total savings exactly
+    assert!(ec.stats.post_coding_bytes <= ec.stats.pre_coding_bytes);
+    let saved = ec.stats.pre_coding_bytes - ec.stats.post_coding_bytes;
+    assert_eq!(ec.stats.bytes_sent + saved, base_bytes,
+               "client byte accounting does not reconcile");
+
+    // server-side accounting mirrors the client exactly
+    let m = &server.metrics;
+    assert_eq!(m.entropy_frames.load(Ordering::Relaxed),
+               ec.stats.entropy_frames);
+    assert_eq!(m.entropy_bytes_saved.load(Ordering::Relaxed), saved);
+    // a raw frame from a client that already sent coded ones (and
+    // only such a client) counts as a server-observed fallback, so
+    // the server can never see more fallbacks than the client took
+    assert!(m.entropy_fallbacks.load(Ordering::Relaxed)
+                <= ec.stats.entropy_fallbacks);
+
+    // the Stats JSON carries the per-bucket pre/post coding split
+    let stats = ec.server_stats().unwrap();
+    let j = json::parse(&stats).unwrap();
+    assert_eq!(j.usize_or("entropy_frames", usize::MAX) as u64,
+               ec.stats.entropy_frames);
+    let buckets = j.get("buckets").and_then(|b| b.as_arr()).expect("buckets");
+    let (mut pre, mut post) = (0u64, 0u64);
+    for b in buckets {
+        pre += b.usize_or("pre_bytes", 0) as u64;
+        post += b.usize_or("post_bytes", 0) as u64;
+    }
+    assert_eq!(pre, ec.stats.pre_coding_bytes,
+               "bucket pre-coding split does not reconcile");
+    assert_eq!(post, ec.stats.post_coding_bytes,
+               "bucket post-coding split does not reconcile");
+    ec.bye().unwrap();
+    server.shutdown();
+}
+
+/// Mixed-version handshake: an ENTROPY-capable client against a
+/// legacy server (entropy off) downgrades cleanly — `enable_entropy`
+/// returns false, every frame crosses the wire raw, and the byte
+/// stream is identical to what the same client produces when it never
+/// asks for entropy at all (i.e. byte-identical pre-entropy frames).
+#[test]
+fn capable_client_downgrades_to_byte_identical_frames_on_legacy_server() {
+    let store = Arc::new(forged_store("entropy_legacy").expect("forge"));
+
+    // legacy server: the entropy capability withheld
+    let legacy = EdgeServer::start(
+        serve_config(&store.root, &["entropy=false".into()]),
+        store.clone()).unwrap();
+    let mut lc = DeviceClient::connect(&legacy.addr.to_string(), &store, 51,
+                                       Channel::unlimited()).unwrap();
+    assert_eq!(lc.server_caps() & caps::ENTROPY, 0);
+    assert!(!lc.enable_entropy(),
+            "enable_entropy must refuse without the negotiated capability");
+    assert!(!lc.entropy_enabled());
+    let legacy_tokens = drive(&mut lc);
+    let legacy_bytes = lc.stats.bytes_sent;
+    assert_eq!(lc.stats.entropy_frames + lc.stats.entropy_fallbacks, 0);
+    lc.bye().unwrap();
+    assert_eq!(legacy.metrics.entropy_frames.load(Ordering::Relaxed), 0);
+    legacy.shutdown();
+
+    // modern server, client never enabling entropy: the wire bytes
+    // must be identical — the capability bit changes the HelloAck,
+    // never a data frame, so the two runs' data traffic is
+    // byte-for-byte the pre-entropy format
+    let modern = EdgeServer::start(serve_config(&store.root, &[]),
+                                   store.clone()).unwrap();
+    let mut mc = DeviceClient::connect(&modern.addr.to_string(), &store, 51,
+                                       Channel::unlimited()).unwrap();
+    let modern_tokens = drive(&mut mc);
+    assert_eq!(modern_tokens, legacy_tokens);
+    assert_eq!(mc.stats.bytes_sent, legacy_bytes,
+               "raw data frames must be byte-identical across the \
+                capability divide");
+    mc.bye().unwrap();
+    modern.shutdown();
+}
+
+/// Stream mode with entropy: keyframes and sparse deltas both ride
+/// the coded wire form, tokens stay bit-identical to the raw stream,
+/// and the entropy layer shaves additional bytes off a regime that is
+/// already delta-compressed.
+#[test]
+fn entropy_stream_mode_is_lossless_and_saves_bytes() {
+    let store = Arc::new(forged_store("entropy_stream").expect("forge"));
+    let cfg = serve_config(&store.root, &[]);
+    let server = EdgeServer::start(cfg, store.clone()).unwrap();
+    let addr = server.addr.to_string();
+    let sc_cfg = StreamConfig { keyframe_interval: 64,
+                                drift_threshold: 0.0 };
+
+    // baseline: raw delta stream
+    let mut base = DeviceClient::connect(&addr, &store, 61,
+                                         Channel::unlimited()).unwrap();
+    assert!(base.enable_stream(sc_cfg));
+    let base_tokens = drive(&mut base);
+    let base_bytes = base.stats.bytes_sent;
+    base.bye().unwrap();
+
+    // entropy-coded delta stream
+    let mut ec = DeviceClient::connect(&addr, &store, 62,
+                                       Channel::unlimited()).unwrap();
+    assert!(ec.enable_stream(sc_cfg));
+    assert!(ec.enable_entropy());
+    let tokens = drive(&mut ec);
+    assert_eq!(tokens, base_tokens, "entropy stream diverged from raw");
+    assert_eq!(ec.stats.resyncs, 0);
+    assert_eq!(ec.stats.key_frames + ec.stats.delta_frames, STEPS as u64);
+    assert_eq!(ec.stats.entropy_frames + ec.stats.entropy_fallbacks,
+               STEPS as u64);
+    assert!(ec.stats.bytes_sent <= base_bytes,
+            "entropy stream {} B vs raw stream {} B",
+            ec.stats.bytes_sent, base_bytes);
+    let saved = ec.stats.pre_coding_bytes - ec.stats.post_coding_bytes;
+    assert_eq!(ec.stats.bytes_sent + saved, base_bytes,
+               "stream byte accounting does not reconcile");
+    assert_eq!(server.metrics.entropy_frames.load(Ordering::Relaxed),
+               ec.stats.entropy_frames);
+    ec.bye().unwrap();
+    server.shutdown();
+}

@@ -249,6 +249,7 @@ fn poisoned_delta_is_diagnosable_from_flight_dump() {
         session, request: 1, seq: 7, keyframe: false, bucket,
         true_len: 4, ks, kd, point: 0, packed: vec![],
         updates: vec![(0, 1.0)],
+        coded: vec![],
     }).unwrap();
     match rx.recv().unwrap() {
         Frame::Error { code, .. } => assert_eq!(code, ErrorCode::StreamReject),

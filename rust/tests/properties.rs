@@ -92,6 +92,7 @@ fn ladder_frames_roundtrip_over_random_fields() {
                 packed: (0..rng.below(50))
                     .map(|_| rng.normal() as f32)
                     .collect(),
+                coded: vec![],
             }
         } else {
             let keyframe = rng.below(2) == 0;
@@ -118,6 +119,7 @@ fn ladder_frames_roundtrip_over_random_fields() {
                                   rng.normal() as f32))
                         .collect()
                 },
+                coded: vec![],
             }
         };
         let enc = frame.encode();
@@ -293,6 +295,96 @@ fn simd_and_scalar_paths_are_byte_identical_over_random_geometries() {
         int8.decompress_into(&mut slow, &ps, &mut os).unwrap();
         assert_eq!(bits(&of), bits(&os),
                    "case {case}: int8 dequantized bits diverge");
+    }
+}
+
+/// Property: the lossless entropy layer (`codec::wire`) round-trips
+/// bit-exactly over random f32 planes, int8 planes, and update lists,
+/// and never expands a body past raw + its plane header — the
+/// try-and-compare guarantee the client's wire accounting and the
+/// entropy bench's byte-win assertions lean on.  Covers the whole
+/// sparsity/magnitude spectrum: smooth near-zero planes, white noise,
+/// zero-run-heavy int8, and dense vs sparse index gaps.
+#[test]
+fn entropy_coding_roundtrips_bit_exactly_and_never_expands() {
+    use fourier_compress::codec::wire::{self, PLANE_HEADER_BYTES};
+    let mut rng = Rng::new(0x9E06);
+    let mut coded = Vec::new();
+    for case in 0..300 {
+        coded.clear();
+        match case % 3 {
+            0 => {
+                // f32 plane: random mix of exact zeros, normal noise,
+                // and tiny smooth magnitudes (exponent clusters)
+                let n = rng.below(400);
+                let zero_p = rng.f64();
+                let vals: Vec<f32> = (0..n)
+                    .map(|_| {
+                        if rng.f64() < zero_p {
+                            0.0
+                        } else if rng.below(2) == 0 {
+                            rng.normal() as f32
+                        } else {
+                            (rng.f32() - 0.5) * 1e-3
+                        }
+                    })
+                    .collect();
+                wire::encode_f32_plane(&vals, &mut coded);
+                assert!(coded.len() <= 4 * n + PLANE_HEADER_BYTES,
+                        "case {case}: f32 plane expanded ({} > {})",
+                        coded.len(), 4 * n + PLANE_HEADER_BYTES);
+                let mut back = Vec::new();
+                wire::decode_f32_plane(&coded, &mut back).unwrap();
+                assert_eq!(bits(&back), bits(&vals),
+                           "case {case}: f32 plane not bit-exact");
+            }
+            1 => {
+                // i8 plane with random zero density and full range
+                let n = rng.below(600);
+                let zero_p = rng.f64();
+                let vals: Vec<i8> = (0..n)
+                    .map(|_| {
+                        if rng.f64() < zero_p {
+                            0
+                        } else {
+                            (rng.below(256) as i64 - 128) as i8
+                        }
+                    })
+                    .collect();
+                wire::encode_i8_plane(&vals, &mut coded);
+                assert!(coded.len() <= n + PLANE_HEADER_BYTES,
+                        "case {case}: i8 plane expanded");
+                let mut back = Vec::new();
+                wire::decode_i8_plane(&coded, &mut back).unwrap();
+                assert_eq!(back, vals, "case {case}: i8 plane not exact");
+            }
+            _ => {
+                // strictly-increasing update list with a random gap
+                // scale (dense deltas and sparse scatters alike)
+                let n = rng.below(200);
+                let stride = 1 + rng.below(50);
+                let mut idx = 0u32;
+                let updates: Vec<(u32, f32)> = (0..n)
+                    .map(|_| {
+                        idx += 1 + rng.below(stride) as u32;
+                        (idx, rng.normal() as f32)
+                    })
+                    .collect();
+                wire::encode_updates(&updates, &mut coded);
+                assert!(coded.len() <= 8 * n + PLANE_HEADER_BYTES,
+                        "case {case}: update list expanded");
+                let mut back = Vec::new();
+                wire::decode_updates(&coded, &mut back).unwrap();
+                // mode-1 lists decode index-sorted; the generator is
+                // already strictly increasing, so equality is exact —
+                // compared through bits so -0.0 cannot mask a flip
+                let key = |u: &[(u32, f32)]| -> Vec<(u32, u32)> {
+                    u.iter().map(|&(i, v)| (i, v.to_bits())).collect()
+                };
+                assert_eq!(key(&back), key(&updates),
+                           "case {case}: update list not bit-exact");
+            }
+        }
     }
 }
 

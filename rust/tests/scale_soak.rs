@@ -139,6 +139,7 @@ fn thousand_concurrent_sessions_keep_token_parity() {
                     session: POISON_SESSION, request: 1, seq: 7,
                     keyframe: false, bucket, true_len: 4, ks, kd, point: 0,
                     packed: vec![], updates: vec![(0, 1.0)],
+                    coded: vec![],
                 }).unwrap();
                 match rx.recv().unwrap() {
                     Frame::Error { code, .. } => {

@@ -8,9 +8,11 @@
 //! service must still serve a clean generation: fuzz traffic may be
 //! rejected, never wedge the core.
 
+use fourier_compress::codec::wire;
 use fourier_compress::runtime::ArtifactStore;
 use fourier_compress::config::{FromJson, ServeConfig};
-use fourier_compress::coordinator::protocol::{Frame, PROTOCOL_MAGIC,
+use fourier_compress::coordinator::protocol::{ErrorCode, Frame,
+                                              PROTOCOL_MAGIC,
                                               PROTOCOL_VERSION};
 use fourier_compress::coordinator::{start_service, DeviceClient, EdgeServer,
                                     Reply, Response, Transport, CLIENT_CAPS};
@@ -31,6 +33,45 @@ fn manifest_geoms(store: &ArtifactStore) -> Vec<(u16, u16, u16)> {
                            bj.usize_or("ks", 0) as u16,
                            bj.usize_or("kd", 0) as u16))
         .collect()
+}
+
+/// A random entropy-coded body: usually a valid coding of random
+/// data, often corrupted afterwards — a flipped mode byte, a bit flip
+/// anywhere (headers, Rice parameter, bitstream), or a truncated
+/// tail.  Whatever comes out, the service must answer with a typed
+/// reject or a token, never panic.
+fn random_coded(rng: &mut Rng, n: usize, updates: bool) -> Vec<u8> {
+    let mut coded = Vec::new();
+    if updates {
+        let mut idx = 0u32;
+        let ups: Vec<(u32, f32)> = (0..rng.below(8))
+            .map(|_| {
+                idx += 1 + rng.below(9) as u32;
+                (idx, rng.normal() as f32)
+            })
+            .collect();
+        wire::encode_updates(&ups, &mut coded);
+    } else {
+        let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        wire::encode_f32_plane(&vals, &mut coded);
+    }
+    match rng.below(4) {
+        0 => {} // valid
+        1 => coded[0] = rng.below(256) as u8, // random mode byte
+        2 => {
+            // single bit flip anywhere: count, Rice k, bitstream...
+            let i = rng.below(coded.len());
+            coded[i] ^= 1 << rng.below(8);
+        }
+        _ => {
+            coded.truncate(rng.below(coded.len()));
+            if coded.is_empty() {
+                // the wire flag demands a non-empty coded body
+                coded.push(rng.below(256) as u8);
+            }
+        }
+    }
+    coded
 }
 
 /// One random frame, biased toward the interesting arms: data frames
@@ -68,21 +109,40 @@ fn random_frame(rng: &mut Rng, session: u64, geoms: &[(u16, u16, u16)])
             session,
             model: "forge-tiny".into(),
         },
-        1..=3 => Frame::Activation {
-            session,
-            request: rng.next_u64(),
-            bucket,
-            true_len: rng.below(70) as u16,
-            ks,
-            kd,
-            point,
-            packed: (0..if rng.below(3) == 0 { rng.below(n.max(1) * 2) }
+        1..=3 => {
+            // a quarter of activations ride the entropy-coded wire
+            // form (valid or corrupted) instead of a raw plane
+            let coded = if rng.below(4) == 0 {
+                random_coded(rng, n.clamp(1, 64), false)
+            } else {
+                vec![]
+            };
+            Frame::Activation {
+                session,
+                request: rng.next_u64(),
+                bucket,
+                true_len: rng.below(70) as u16,
+                ks,
+                kd,
+                point,
+                packed: if coded.is_empty() {
+                    (0..if rng.below(3) == 0 { rng.below(n.max(1) * 2) }
                         else { n })
-                .map(|_| rng.normal() as f32)
-                .collect(),
-        },
+                        .map(|_| rng.normal() as f32)
+                        .collect()
+                } else {
+                    vec![]
+                },
+                coded,
+            }
+        }
         4..=7 => {
             let keyframe = rng.below(2) == 0;
+            let coded = if rng.below(4) == 0 {
+                random_coded(rng, n.clamp(1, 64), !keyframe)
+            } else {
+                vec![]
+            };
             Frame::Delta {
                 session,
                 request: rng.next_u64(),
@@ -93,12 +153,12 @@ fn random_frame(rng: &mut Rng, session: u64, geoms: &[(u16, u16, u16)])
                 ks,
                 kd,
                 point,
-                packed: if keyframe {
+                packed: if keyframe && coded.is_empty() {
                     (0..n).map(|_| rng.normal() as f32).collect()
                 } else {
                     vec![]
                 },
-                updates: if keyframe {
+                updates: if keyframe || !coded.is_empty() {
                     vec![]
                 } else {
                     (0..rng.below(6))
@@ -113,6 +173,7 @@ fn random_frame(rng: &mut Rng, session: u64, geoms: &[(u16, u16, u16)])
                         })
                         .collect()
                 },
+                coded,
             }
         }
         8 => Frame::GetStats,
@@ -187,6 +248,69 @@ fn random_frame_interleavings_never_panic_and_stay_typed() {
     let g = client.generate("Q mira hue ? A", 3).unwrap();
     assert!(g.steps >= 1, "service wedged by fuzz traffic");
     client.bye().unwrap();
+    handle.shutdown();
+}
+
+/// A peer that ships entropy-coded frames to a server that never
+/// advertised [`caps::ENTROPY`] (`entropy=false`) gets a typed
+/// BadRequest naming the missing capability — on both data arms —
+/// and the connection keeps working on raw frames afterwards.
+#[test]
+fn entropy_frames_to_a_legacy_server_are_typed_rejects() {
+    let store = Arc::new(forged_store("entropy_fuzz").expect("forge artifacts"));
+    let cfg = ServeConfig::load(None, &[
+        "listen=127.0.0.1:0".to_string(),
+        format!("artifacts={}", store.root.display()),
+        "entropy=false".into(),
+    ]).unwrap();
+    let handle = start_service(&cfg, store.clone()).unwrap();
+    let service = handle.service();
+    let geoms = manifest_geoms(&store);
+    let &(bucket, ks, kd) = &geoms[0];
+    let n = ks as usize * kd as usize;
+
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+    let mut conn = service.open_conn(reply_tx, "entropy-fuzz".into());
+    assert!(matches!(
+        service.handle(&mut conn, Frame::hello(5, CLIENT_CAPS, "forge-tiny")),
+        Response::Reply(Frame::HelloAck { .. })));
+
+    let mut rng = Rng::new(0xE17);
+    let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut coded = Vec::new();
+    wire::encode_f32_plane(&vals, &mut coded);
+    let act = Frame::Activation {
+        session: 5, request: 1, bucket, true_len: 3, ks, kd, point: 0,
+        packed: vec![], coded: coded.clone(),
+    };
+    match service.handle(&mut conn, act) {
+        Response::Reply(Frame::Error { code: ErrorCode::BadRequest, msg }) => {
+            assert!(msg.contains("entropy"), "unexpected reject: {msg}");
+        }
+        _ => panic!("coded Activation to a non-entropy server must be a \
+                     typed BadRequest"),
+    }
+    let delta = Frame::Delta {
+        session: 5, request: 2, seq: 0, keyframe: true, bucket, true_len: 3,
+        ks, kd, point: 0, packed: vec![], updates: vec![], coded,
+    };
+    match service.handle(&mut conn, delta) {
+        Response::Reply(Frame::Error { code: ErrorCode::BadRequest, msg }) => {
+            assert!(msg.contains("entropy"), "unexpected reject: {msg}");
+        }
+        _ => panic!("coded Delta to a non-entropy server must be a typed \
+                     BadRequest"),
+    }
+    // raw frames on the same connection still serve
+    let raw = Frame::Activation {
+        session: 5, request: 3, bucket, true_len: 3, ks, kd, point: 0,
+        packed: vals, coded: vec![],
+    };
+    assert!(matches!(service.handle(&mut conn, raw), Response::None),
+            "raw frame after entropy rejects must still serve");
+    service.close_conn(&conn);
+    drop(conn);
+    while reply_rx.try_recv().is_ok() {}
     handle.shutdown();
 }
 

@@ -109,6 +109,7 @@ fn rejects_bad_bucket_body(store: Arc<ArtifactStore>) {
     tx.send(&Frame::Activation {
         session: 9, request: 1, bucket: 999, true_len: 10, ks: 3, kd: 3,
         point: 0, packed: vec![0.0; 9],
+        coded: vec![],
     }).unwrap();
     match rx.recv().unwrap() {
         Frame::Error { code, msg } => {

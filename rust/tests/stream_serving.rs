@@ -68,6 +68,7 @@ fn stream_128_steps_beats_recompute_5x_within_drift() {
             session: 1, request: step + 1, bucket: geom.rows as u16,
             true_len: geom.rows as u16, ks: geom.ks as u16,
             kd: geom.kd as u16, point: 0, packed: truth.clone(),
+            coded: vec![],
         };
         recompute_bytes += recompute.encode().len() as u64;
 
@@ -79,6 +80,7 @@ fn stream_128_steps_beats_recompute_5x_within_drift() {
             true_len: geom.rows as u16, ks: geom.ks as u16,
             kd: geom.kd as u16, point: 0, packed: step_out.packed.clone(),
             updates: step_out.updates.clone(),
+            coded: vec![],
         };
         stream_bytes += frame.encode().len() as u64;
         if step_out.keyframe {

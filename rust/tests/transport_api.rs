@@ -122,6 +122,7 @@ fn version_and_magic_mismatch_are_typed_rejects() {
     tx.send(&Frame::Activation {
         session: 1, request: 1, bucket: 16, true_len: 4, ks: 1, kd: 1,
         point: 0, packed: vec![0.0],
+        coded: vec![],
     }).unwrap();
     match rx.recv().unwrap() {
         Frame::Error { code, .. } => {
@@ -155,6 +156,7 @@ fn recompute_requests_survive_session_eviction() {
     let activation = |request: u64, session: u64| Frame::Activation {
         session, request, bucket: 16, true_len: 10, ks, kd, point: 0,
         packed: vec![0.25; ks as usize * kd as usize],
+        coded: vec![],
     };
     tx.send(&activation(1, 7)).unwrap();
     assert!(matches!(rx.recv().unwrap(), Frame::Token { request: 1, .. }));
@@ -257,6 +259,7 @@ fn stream_capability_downgrade_falls_back_to_recompute() {
         true_len: 10, ks, kd, point: 0,
         packed: vec![0.1; ks as usize * kd as usize],
         updates: vec![],
+        coded: vec![],
     }).unwrap();
     match rx.recv().unwrap() {
         Frame::Error { code, msg } => {
@@ -336,6 +339,7 @@ fn shaped_frame_drop_forces_stream_reject_then_keyframe_recovers() {
         ks, kd, point: 0,
         packed: if keyframe { vec![0.5; n] } else { vec![] },
         updates: if keyframe { vec![] } else { vec![(0, 0.75)] },
+        coded: vec![],
     };
 
     tx.send(&Frame::hello(51, CLIENT_CAPS, "forge-tiny")).unwrap(); // idx 0
@@ -454,18 +458,21 @@ fn ladder_point_validation_and_switch_rules() {
     tx.send(&Frame::Activation {
         session: 61, request: 1, bucket: 16, true_len: 10, ks: ks0, kd: kd0,
         point: 9, packed: vec![0.1; ks0 as usize * kd0 as usize],
+        coded: vec![],
     }).unwrap();
     expect_err(&mut rx, ErrorCode::BadRequest);
     // point/geometry mismatch: point 1 with point-0 geometry
     tx.send(&Frame::Activation {
         session: 61, request: 2, bucket: 16, true_len: 10, ks: ks0, kd: kd0,
         point: 1, packed: vec![0.1; ks0 as usize * kd0 as usize],
+        coded: vec![],
     }).unwrap();
     expect_err(&mut rx, ErrorCode::BadRequest);
     // valid downshifted activation: served (embedded into primary)
     tx.send(&Frame::Activation {
         session: 61, request: 3, bucket: 16, true_len: 10, ks: ks1, kd: kd1,
         point: 1, packed: vec![0.25; ks1 as usize * kd1 as usize],
+        coded: vec![],
     }).unwrap();
     assert!(matches!(rx.recv().unwrap(), Frame::Token { request: 3, .. }));
 
@@ -477,6 +484,7 @@ fn ladder_point_validation_and_switch_rules() {
         packed: if keyframe { vec![0.5; ks as usize * kd as usize] }
                 else { vec![] },
         updates: if keyframe { vec![] } else { vec![(0, 0.75)] },
+        coded: vec![],
     };
     tx.send(&delta(4, 0, true, 1, ks1, kd1)).unwrap();
     assert!(matches!(rx.recv().unwrap(), Frame::Token { request: 4, .. }));
@@ -488,6 +496,7 @@ fn ladder_point_validation_and_switch_rules() {
     tx.send(&Frame::Activation {
         session: 61, request: 50, bucket: 16, true_len: 10, ks: ks0, kd: kd0,
         point: 0, packed: vec![0.25; ks0 as usize * kd0 as usize],
+        coded: vec![],
     }).unwrap();
     assert!(matches!(rx.recv().unwrap(), Frame::Token { request: 50, .. }));
     tx.send(&delta(6, 2, false, 1, ks1, kd1)).unwrap();
