@@ -10,7 +10,8 @@
 //!         [--clients 4] [--prompts 6] [--gbps 1.0] [--max-batch 4] \
 //!         [--stream] [--keyframe-interval 32] [--drift 0.05] \
 //!         [--adaptive] [--error-budget 1.0] [--target-step-ms 25] \
-//!         [--entropy | --no-entropy]
+//!         [--entropy | --no-entropy] \
+//!         [--prefill-chunk-rows 16] [--no-prefill]
 //!
 //! `--stream` switches the clients to the spectral delta stream
 //! (`codec::stream`): keyframes on cadence/bucket promotion, sparse
@@ -23,10 +24,14 @@
 //! Entropy coding (`codec::wire`, negotiated via the ENTROPY
 //! capability) is on by default: each frame body is losslessly
 //! re-coded and shipped in whichever form is smaller; `--no-entropy`
-//! pins the raw pre-entropy wire format.
+//! pins the raw pre-entropy wire format.  Chunked prefill (negotiated
+//! via the PREFILL capability) is also on by default: each prompt
+//! ships as one keyframe chunk plus row-delta chunks of
+//! `--prefill-chunk-rows` packed-plane rows instead of one monolithic
+//! keyframe; `--no-prefill` pins the monolithic prompt path.
 
 use fourier_compress::codec::rate::RateConfig;
-use fourier_compress::codec::stream::StreamConfig;
+use fourier_compress::codec::stream::{PrefillConfig, StreamConfig};
 use fourier_compress::config::{FromJson, ServeConfig};
 use fourier_compress::coordinator::{DeviceClient, EdgeServer};
 use fourier_compress::net::Channel;
@@ -50,6 +55,12 @@ fn main() -> anyhow::Result<()> {
     let adaptive = args.has("adaptive");
     // on unless --no-entropy; --entropy spells the default explicitly
     let entropy = args.has("entropy") || !args.has("no-entropy");
+    // chunked prefill: on unless --no-prefill
+    let prefill = !args.has("no-prefill");
+    let prefill_cfg = PrefillConfig {
+        chunk_rows: args.usize_or("prefill-chunk-rows", 16),
+        drift_threshold: args.f64_or("drift", 0.05),
+    };
     let rate_cfg = RateConfig {
         error_budget: args.f64_or("error-budget", 1.0),
         target_step_s: args.f64_or("target-step-ms", 25.0) / 1000.0,
@@ -91,6 +102,9 @@ fn main() -> anyhow::Result<()> {
             if entropy && !client.enable_entropy() {
                 anyhow::bail!("server did not advertise the entropy capability");
             }
+            if prefill && !client.enable_prefill(prefill_cfg) {
+                anyhow::bail!("server did not advertise the prefill capability");
+            }
             let mut gens = Vec::new();
             for p in 0..n_prompts {
                 let prompt = prompts[(cid + p) % prompts.len()];
@@ -110,6 +124,8 @@ fn main() -> anyhow::Result<()> {
     let (mut switches, mut max_point) = (0u64, 0u8);
     let (mut eframes, mut efalls) = (0u64, 0u64);
     let (mut pre_coding, mut post_coding) = (0u64, 0u64);
+    let (mut pf_prompts, mut pf_chunks, mut pf_keys) = (0u64, 0u64, 0u64);
+    let (mut pf_bytes, mut pf_resyncs) = (0u64, 0u64);
     let mut rts: Vec<u64> = Vec::new();
     for (cid, h) in handles.into_iter().enumerate() {
         let (gens, stats) = h.join().unwrap()?;
@@ -130,6 +146,11 @@ fn main() -> anyhow::Result<()> {
         efalls += stats.entropy_fallbacks;
         pre_coding += stats.pre_coding_bytes;
         post_coding += stats.post_coding_bytes;
+        pf_prompts += stats.prefill_prompts;
+        pf_chunks += stats.prefill_chunks;
+        pf_keys += stats.prefill_key_chunks;
+        pf_bytes += stats.prefill_bytes;
+        pf_resyncs += stats.prefill_resyncs;
         rts.extend(stats.round_trip_us);
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -157,6 +178,11 @@ fn main() -> anyhow::Result<()> {
                   fallbacks; coded bodies {pre_coding} B -> {post_coding} B \
                   ({:.2}x)",
                  pre_coding as f64 / post_coding.max(1) as f64);
+    }
+    if prefill {
+        println!("chunked prefill:    {pf_prompts} prompts in {pf_chunks} \
+                  chunks ({pf_keys} keyframe), {pf_bytes} B on the wire, \
+                  {pf_resyncs} resyncs");
     }
 
     // server-side metrics

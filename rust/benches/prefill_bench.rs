@@ -1,0 +1,211 @@
+//! Chunked-prefill bench: the prompt-phase bandwidth cliff, measured
+//! two ways and hard-asserted so the CI smoke step fails loudly on a
+//! regression.
+//!
+//! 1. End to end through the *real* serving core (long-context forged
+//!    artifacts, in-proc transport): a ~1500-token prompt sent
+//!    monolithically vs as chunked prefill — prompt-phase wire bytes
+//!    (hard-asserted >= 2x smaller chunked), time-to-first-token, and
+//!    bit-identical generated tokens across the whole run.
+//! 2. Codec-level on the band-limited activation family at the same
+//!    2048-bucket serving geometry: every chunk reassembled and
+//!    checked bit-exact against the encoder's transmitted plane, with
+//!    the same >= 2x wire-byte gate vs the monolithic keyframe.
+//!
+//! Writes BENCH_prefill.json.
+//!
+//!     cargo bench --bench prefill_bench
+
+use fourier_compress::codec::stream::{split_prefill, BlockGeom,
+                                      PrefillAssembler, PrefillConfig};
+use fourier_compress::codec::fourier::FourierCodec;
+use fourier_compress::codec::{Codec, CodecEngine};
+use fourier_compress::config::{FromJson, ServeConfig, SimConfig};
+use fourier_compress::coordinator::protocol::{Frame, PREFILL_HEADER_BYTES};
+use fourier_compress::coordinator::{start_service, DeviceClient};
+use fourier_compress::model::tokenizer;
+use fourier_compress::sim::{prompt_bytes, Arm};
+use fourier_compress::testkit::{band_limited_act, forged_longctx_store};
+use fourier_compress::util::json::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+const STEPS: usize = 8;
+const CHUNK_ROWS: usize = 16;
+const DRIFT_THR: f64 = 0.01;
+
+/// A multi-thousand-token prompt that buckets to the long-context
+/// store's 2048-token bucket.
+fn long_prompt() -> String {
+    let mut p = "pad ".repeat(1500);
+    p.push_str("Q mira hue ? A");
+    p
+}
+
+/// Drive `STEPS` tokens; the first step goes through `send_prompt`
+/// (chunked when prefill is enabled, the monolithic fallback
+/// otherwise).  Returns (tokens, prompt-phase wire bytes, TTFT us).
+fn drive(c: &mut DeviceClient, prompt: &str) -> (Vec<i32>, u64, f64) {
+    let mut ctx = tokenizer::encode_prompt(prompt);
+    let mut toks = Vec::with_capacity(STEPS);
+    let b0 = c.stats.bytes_sent;
+    let t0 = Instant::now();
+    let (t, _) = c.send_prompt(&ctx).expect("prompt");
+    let ttft_us = t0.elapsed().as_secs_f64() * 1e6;
+    let prompt_bytes = c.stats.bytes_sent - b0;
+    ctx.push(t);
+    toks.push(t);
+    for _ in 1..STEPS {
+        let (t, _) = c.step(&ctx).expect("step");
+        ctx.push(t);
+        toks.push(t);
+    }
+    (toks, prompt_bytes, ttft_us)
+}
+
+fn main() {
+    let mut out = Json::obj();
+    let cfg = PrefillConfig { chunk_rows: CHUNK_ROWS,
+                              drift_threshold: DRIFT_THR };
+
+    // ------------------------------------------------------------------
+    // leg 1: the real serving core, monolithic vs chunked prompt
+    // ------------------------------------------------------------------
+    let store = Arc::new(forged_longctx_store("prefill_bench").expect("forge"));
+    let scfg = ServeConfig::load(None, &[
+        "listen=127.0.0.1:0".to_string(),
+        format!("artifacts={}", store.root.display()),
+    ]).unwrap();
+    let handle = start_service(&scfg, store.clone()).expect("service");
+    let prompt = long_prompt();
+    let n_prompt = tokenizer::encode_prompt(&prompt).len();
+    assert!(n_prompt > 1000, "prompt is only {n_prompt} tokens — the \
+                              long-context scenario wants thousands");
+
+    // monolithic: prefill never enabled, send_prompt falls back to the
+    // full-plane recompute step
+    let mut mono = DeviceClient::connect_over(
+        Box::new(handle.connect_inproc()), &store, 1).unwrap();
+    let (mono_tokens, mono_bytes, mono_ttft) = drive(&mut mono, &prompt);
+    assert_eq!(mono.stats.prefill_chunks, 0);
+    mono.bye().unwrap();
+
+    // chunked prefill
+    let mut ch = DeviceClient::connect_over(
+        Box::new(handle.connect_inproc()), &store, 2).unwrap();
+    assert!(ch.enable_prefill(cfg), "prefill capability must negotiate");
+    let (ch_tokens, ch_bytes, ch_ttft) = drive(&mut ch, &prompt);
+    assert_eq!(ch_tokens, mono_tokens,
+               "chunked prefill moved the generated tokens — the \
+                Parseval-bounded chunk budget must not change the output");
+    assert_eq!(ch.stats.prefill_prompts, 1);
+    assert_eq!(ch.stats.prefill_resyncs, 0);
+    let (chunks, key_chunks) =
+        (ch.stats.prefill_chunks, ch.stats.prefill_key_chunks);
+    assert!(chunks >= 4, "only {chunks} chunks — the 2048-bucket plane \
+                          must split into many at {CHUNK_ROWS} rows");
+    ch.bye().unwrap();
+    handle.shutdown();
+
+    let serve_x = mono_bytes as f64 / ch_bytes.max(1) as f64;
+    println!("serving prompt ({n_prompt} tokens, bucket 2048): monolithic \
+              {mono_bytes} B vs chunked {ch_bytes} B ({serve_x:.2}x, \
+              {chunks} chunks / {key_chunks} keyframe), TTFT \
+              {mono_ttft:.0} us vs {ch_ttft:.0} us");
+    assert!(serve_x >= 2.0,
+            "chunked prefill saved only {serve_x:.2}x prompt-phase wire \
+             bytes on the served long-context scenario (need >= 2x)");
+
+    out.set("prompt_tokens", Json::Num(n_prompt as f64));
+    out.set("steps", Json::Num(STEPS as f64));
+    out.set("chunk_rows", Json::Num(CHUNK_ROWS as f64));
+    out.set("drift_threshold", Json::Num(DRIFT_THR));
+    out.set("serve_mono_prompt_bytes", Json::Num(mono_bytes as f64));
+    out.set("serve_chunked_prompt_bytes", Json::Num(ch_bytes as f64));
+    out.set("serve_savings_x", Json::Num(serve_x));
+    out.set("serve_mono_ttft_us", Json::Num(mono_ttft.round()));
+    out.set("serve_chunked_ttft_us", Json::Num(ch_ttft.round()));
+    out.set("serve_chunks", Json::Num(chunks as f64));
+    out.set("serve_key_chunks", Json::Num(key_chunks as f64));
+    out.set("token_parity", Json::Bool(true));
+
+    // ------------------------------------------------------------------
+    // leg 2: codec-level on the band-limited family at the same
+    // geometry — every chunk reassembled bit-exact, same >= 2x gate
+    // ------------------------------------------------------------------
+    let spec = fourier_compress::testkit::ForgeSpec::tiny_longctx();
+    let ladder = fourier_compress::testkit::bucket_ladder(
+        2048, spec.d_model, spec.l1_freq_bins, &spec.ladder_kds, spec.ratio)
+        .expect("ladder");
+    let geom = BlockGeom { rows: 2048, cols: spec.d_model,
+                           ks: ladder[0].ks, kd: ladder[0].kd };
+    let act = band_limited_act(geom.rows, geom.cols, spec.l1_freq_bins,
+                               0x9F11);
+    let fc = FourierCodec::default();
+    let p = fc.compress_block(&act, geom.rows, geom.cols, geom.ks, geom.kd)
+        .expect("fc compress");
+    let n = geom.ks * geom.kd;
+    assert_eq!(p.body.len(), 4 + n * 4, "unexpected fc payload layout");
+    let plane: Vec<f32> = p.body[4..].chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+
+    let mut eng = CodecEngine::new();
+    let (mut chunks2, mut state) = (Vec::new(), Vec::new());
+    let drift = split_prefill(&mut eng, geom, &plane, cfg, &mut chunks2,
+                              &mut state).expect("split");
+    assert!(drift <= DRIFT_THR + 1e-9, "drift {drift} over threshold");
+    let mut asm = PrefillAssembler::new();
+    let mut done = None;
+    let mut chunk_bytes = 0u64;
+    for c in &chunks2 {
+        // the wire-framed chunk round-trips exactly too
+        let f = Frame::PrefillChunk {
+            session: 1, request: 1, bucket: geom.rows as u16,
+            true_len: geom.rows as u16, ks: geom.ks as u16,
+            kd: geom.kd as u16, point: 0, index: c.index, last: c.last,
+            keyframe: c.keyframe, packed: c.packed.clone(),
+            updates: c.updates.clone(), coded: vec![],
+        };
+        let enc = f.encode();
+        let back = Frame::read_from(&mut std::io::Cursor::new(enc)).unwrap();
+        assert_eq!(back, f, "chunk {} frame roundtrip", c.index);
+        chunk_bytes += (c.body_bytes() + PREFILL_HEADER_BYTES) as u64;
+        done = asm.apply(geom, c.index, c.last, c.keyframe, &c.packed,
+                         &c.updates).expect("apply");
+    }
+    let assembled = done.expect("last chunk completes the plane");
+    assert!(assembled.iter().map(|v| v.to_bits())
+                .eq(state.iter().map(|v| v.to_bits())),
+            "reassembled plane is not bit-exact against the encoder state");
+    let mono2 = (n * 4 + PREFILL_HEADER_BYTES) as u64;
+    let codec_x = mono2 as f64 / chunk_bytes as f64;
+    println!("codec plane ({}x{} block {}x{}): monolithic {mono2} B vs \
+              {} chunks {chunk_bytes} B ({codec_x:.2}x), drift {drift:.2e}",
+             geom.rows, geom.cols, geom.ks, geom.kd, chunks2.len());
+    assert!(codec_x >= 2.0,
+            "chunked prefill saved only {codec_x:.2}x wire bytes at the \
+             codec level (need >= 2x)");
+
+    out.set("codec_geometry", Json::Str(format!(
+        "{}x{} block {}x{}", geom.rows, geom.cols, geom.ks, geom.kd)));
+    out.set("codec_mono_bytes", Json::Num(mono2 as f64));
+    out.set("codec_chunked_bytes", Json::Num(chunk_bytes as f64));
+    out.set("codec_savings_x", Json::Num(codec_x));
+    out.set("codec_chunks", Json::Num(chunks2.len() as f64));
+    out.set("codec_drift", Json::Num(drift));
+    out.set("chunks_bit_exact", Json::Bool(true));
+
+    // the Fig-7 byte model's chunked-prefill column, for cross-checking
+    // the DES against what the real wire just measured
+    let sim = SimConfig { prompt_tokens: n_prompt,
+                          prefill_chunks: chunks2.len(),
+                          ..SimConfig::default() };
+    out.set("sim_model_savings_x",
+            Json::Num(prompt_bytes(&sim, Arm::Fc)
+                      / prompt_bytes(&sim, Arm::FcStream)));
+
+    std::fs::write("BENCH_prefill.json", out.to_string_pretty())
+        .expect("write BENCH_prefill.json");
+    println!("wrote BENCH_prefill.json");
+}

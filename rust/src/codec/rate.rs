@@ -314,6 +314,22 @@ impl RateController {
         cheapest_adm.unwrap_or(0)
     }
 
+    /// The rung prompt-phase chunks ride: the deepest (cheapest)
+    /// admissible point under the error budget.  The prompt plane is
+    /// the largest single transfer of a session and is sent exactly
+    /// once, so unlike [`RateController::step`] there is no deadline
+    /// fit or hysteresis to weigh — any quality headroom the forged
+    /// bounds leave is spent on wire bytes.  Pinned sessions hold the
+    /// pin; with nothing admissible the primary point is best effort.
+    /// Read-only: the decode-side dwell/switch state does not move.
+    pub fn prefill_point(&self) -> usize {
+        if let Some(p) = self.pinned {
+            return p;
+        }
+        (0..self.ladder.len()).rev().find(|&i| self.admissible(i))
+            .unwrap_or(0)
+    }
+
     /// Advance one decode step and return the ladder point to use.
     /// Hysteresis lives here; the emergency lane (current point no
     /// longer within the error budget) bypasses it.
@@ -466,6 +482,23 @@ mod tests {
         c.retarget(ladder3()[..2].to_vec()).unwrap();
         assert_eq!(c.step(), 1);
         assert_eq!(c.ladder().len(), 2);
+    }
+
+    #[test]
+    fn prefill_point_rides_the_deepest_admissible_rung() {
+        let mut c = RateController::new(ladder3(), cfg()).unwrap();
+        // budget 0.5, bounds 0.05/0.15/0.40, no drift: deepest wins
+        assert_eq!(c.prefill_point(), 2);
+        // and the decode-side state never moved
+        assert_eq!(c.point(), 0);
+        assert_eq!(c.switches(), 0);
+        // measured drift eats the budget (EWMA 0.45): only point 0
+        // stays admissible
+        c.observe_drift(0.9);
+        assert_eq!(c.prefill_point(), 0);
+        // a pin overrides the choice
+        c.pin(1).unwrap();
+        assert_eq!(c.prefill_point(), 1);
     }
 
     #[test]

@@ -1,15 +1,15 @@
 //! Spectral delta streaming: a session-stateful temporal codec over
-//! the FourierCompress block that kills the recompute regime's
-//! bandwidth amplification.
+//! the FourierCompress block, applied along **both** of the serving
+//! stack's bandwidth cliffs — the per-token decode loop and the
+//! prompt-phase (prefill) transfer.
 //!
-//! In the paper's recompute regime (Fig 1/Fig 7) decode step *t*
-//! retransmits the full (prompt + *t*)×D activation, so wire bytes per
-//! conversation grow quadratically with output length.  But
-//! consecutive steps compress *nearly the same matrix*: inside one
-//! serving bucket the block geometry is fixed and only the rows from
-//! the appended token onward change, so most of the K_S×K_D spectral
-//! coefficients drift by little.  This module streams that block
-//! temporally, the way atsc streams frames of a time series:
+//! Decode steps have not retransmitted the full (prompt + *t*)×D
+//! activation since the delta stream landed: inside one serving
+//! bucket the block geometry is fixed and only the rows from the
+//! appended token onward change, so most of the K_S×K_D spectral
+//! coefficients drift by little between steps.  This module streams
+//! that block temporally, the way atsc streams frames of a time
+//! series:
 //!
 //! * a **keyframe** carries the full conjugate-symmetric packing
 //!   (exactly the floats an Activation frame carries) and
@@ -28,7 +28,29 @@
 //! delta whose *unsent* drift is bounded by
 //! [`StreamConfig::drift_threshold`].  Updates are exact f32
 //! replacements, so encoder and decoder state never diverge — with a
-//! zero threshold the stream is bit-identical to the recompute regime.
+//! zero threshold the stream is bit-identical to retransmitting the
+//! packed block every step.
+//!
+//! ## Prefill chunks
+//!
+//! The first frame of a conversation — the prompt-phase block — has
+//! no previous step to delta against, so it used to cross the wire as
+//! one monolithic keyframe.  [`split_prefill`] reuses the same
+//! Parseval-bounded delta machinery *spatially, across the prompt
+//! dimension*: the packed plane is cut into fixed-row chunks
+//! ([`PrefillConfig::chunk_rows`] rows of `kd` floats), chunk 0 ships
+//! as a **keyframe chunk**, and every later chunk ships as row
+//! deltas against the previous chunk's transmitted rows (falling back
+//! to a keyframe chunk when the delta would be denser than raw).  On
+//! a band-limited hidden axis adjacent row groups agree on every
+//! out-of-band slot, so the delta chunks collapse to the in-band
+//! columns.  The [`PrefillAssembler`] (server side) reassembles the
+//! plane chunk by chunk, hard-fails sequence gaps, and resyncs only
+//! on a restart from keyframe chunk 0 — the same no-silent-drift
+//! contract the decode stream has.  A completed prefill plane seeds
+//! the decode stream ([`StreamEncoder::seed`] /
+//! [`StreamDecoder::apply_key`]) so decode step 1 can ride a delta
+//! against the prompt state.
 //!
 //! ## Drift accounting
 //!
@@ -39,7 +61,10 @@
 //! between the *reconstructions* of the stale and the true block, so
 //! `drift_threshold` directly bounds the per-step reconstruction
 //! error the stream adds on top of the FC truncation the keyframe
-//! regime already has.
+//! regime already has.  Prefill chunks budget the same way, but
+//! against the *whole-plane* energy prorated by chunk length, so the
+//! cumulative drift across every chunk of one prompt stays under the
+//! advertised [`PrefillConfig::drift_threshold`].
 //!
 //! The [`StreamDecoder`] (server side) reconstructs from per-session
 //! state and **hard-fails on sequence gaps**: a lost or reordered
@@ -48,13 +73,14 @@
 //! this).  The decoder never guesses — silent drift is the one failure
 //! mode a lossy activation link cannot afford.
 //!
-//! Both frame kinds compose with the lossless entropy layer
-//! ([`super::wire`], negotiated via
-//! [`crate::coordinator::protocol::caps::ENTROPY`]): a keyframe's
-//! packed plane and a delta's sparse update list each have a coded
-//! wire form the transport ships when it is smaller than the raw one.
-//! The stream codec itself is unaware — coding happens at the frame
-//! boundary, on exactly the bytes [`StreamStep::body_bytes`] counts.
+//! All frame kinds — keyframes, deltas, and prefill chunks — compose
+//! with the lossless entropy layer ([`super::wire`], negotiated via
+//! [`crate::coordinator::protocol::caps::ENTROPY`]): a packed plane
+//! or chunk slice and a sparse update list each have a coded wire
+//! form the transport ships when it is smaller than the raw one.  The
+//! stream codec itself is unaware — coding happens at the frame
+//! boundary, on exactly the bytes [`StreamStep::body_bytes`] /
+//! [`PrefillChunk::body_bytes`] count.
 
 use super::engine::CodecEngine;
 use super::{valid_block_axis, Payload, Writer};
@@ -222,6 +248,33 @@ impl StreamEncoder {
     /// (TTL eviction, sequence gap) to resynchronise.
     pub fn force_keyframe(&mut self) {
         self.force_key = true;
+    }
+
+    /// Seed the encoder from an externally transmitted plane — the
+    /// chunked-prefill handoff.  After [`split_prefill`] ships a
+    /// prompt plane the server seeds its [`StreamDecoder`] with
+    /// `apply_key(0, geom, plane)`; calling `seed` with the same
+    /// transmitted plane (`split_prefill`'s `state` output) puts the
+    /// encoder in the matching state, so decode step 1 rides a delta
+    /// with sequence number 1 instead of paying a fresh keyframe.
+    pub fn seed(&mut self, eng: &mut CodecEngine, geom: BlockGeom,
+                state: &[f32]) -> Result<()> {
+        ensure!(valid_block_axis(geom.rows, geom.ks)
+                    && valid_block_axis(geom.cols, geom.kd),
+                "invalid stream block {}x{} for {}x{}", geom.ks, geom.kd,
+                geom.rows, geom.cols);
+        ensure!(state.len() == geom.ks * geom.kd,
+                "seed plane carries {} floats, geometry wants {}", state.len(),
+                geom.ks * geom.kd);
+        mirror_weights(eng, geom, &mut self.weight);
+        self.geom = Some(geom);
+        self.state.clear();
+        self.state.extend_from_slice(state);
+        self.seq = 1;
+        self.since_key = 0;
+        self.force_key = false;
+        self.last_drift = 0.0;
+        Ok(())
     }
 
     /// Encode the current packed block as the next stream frame into
@@ -398,6 +451,318 @@ impl StreamDecoder {
         }
         self.next_seq = self.next_seq.wrapping_add(1);
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// prefill chunks (prompt-phase streaming)
+// ---------------------------------------------------------------------------
+
+/// Prefill chunking knobs (device side).
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillConfig {
+    /// Packed-plane rows (`kd` floats each) per chunk.  The wire cost
+    /// of a resync is one chunk, not the whole plane, so smaller
+    /// chunks recover cheaper but pay more per-chunk header overhead.
+    pub chunk_rows: usize,
+    /// Max relative spectral drift (mirror-weighted, whole-plane) the
+    /// chunked prompt may leave unsent across *all* chunks combined
+    /// (0.0 = the reassembled plane is bit-identical to the input).
+    pub drift_threshold: f64,
+}
+
+impl Default for PrefillConfig {
+    fn default() -> PrefillConfig {
+        PrefillConfig { chunk_rows: 16, drift_threshold: 0.01 }
+    }
+}
+
+/// One prompt-phase chunk: a contiguous row range of the packed
+/// plane, shipped either raw (keyframe chunk) or as sparse updates
+/// against the previous chunk's transmitted rows.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PrefillChunk {
+    /// Position in the chunk sequence (0-based; chunk 0 is always a
+    /// keyframe chunk and defines the chunk length).
+    pub index: u32,
+    /// Set on the final chunk of the plane.
+    pub last: bool,
+    /// Keyframe chunk: `packed` carries the raw row slice.  Otherwise
+    /// `updates` carries chunk-local sparse replacements.
+    pub keyframe: bool,
+    pub packed: Vec<f32>,
+    pub updates: Vec<(u32, f32)>,
+}
+
+impl PrefillChunk {
+    /// Codec-body wire bytes of this chunk (the protocol adds
+    /// [`crate::coordinator::protocol::PREFILL_HEADER_BYTES`] on top).
+    pub fn body_bytes(&self) -> usize {
+        if self.keyframe {
+            self.packed.len() * 4
+        } else {
+            4 + self.updates.len() * UPDATE_WIRE_BYTES
+        }
+    }
+}
+
+/// Split a packed prompt-phase plane into prefill chunks: one
+/// keyframe chunk (chunk 0) plus row-delta chunks, each delta'd
+/// against the *previous chunk's transmitted rows*.  `state` receives
+/// the transmitted plane — exactly what a [`PrefillAssembler`]
+/// reassembles, bit for bit — and the return value is the relative
+/// spectral drift `state` carries vs `packed`, which stays under
+/// `cfg.drift_threshold`: each chunk's unsent-drift budget is the
+/// whole-plane threshold prorated by chunk length, so the chunk
+/// budgets sum to the advertised bound.  Chunks where the delta would
+/// out-weigh raw rows fall back to mid-sequence keyframe chunks.
+pub fn split_prefill(eng: &mut CodecEngine, geom: BlockGeom, packed: &[f32],
+                     cfg: PrefillConfig, chunks: &mut Vec<PrefillChunk>,
+                     state: &mut Vec<f32>) -> Result<f64> {
+    ensure!(valid_block_axis(geom.rows, geom.ks)
+                && valid_block_axis(geom.cols, geom.kd),
+            "invalid prefill block {}x{} for {}x{}", geom.ks, geom.kd,
+            geom.rows, geom.cols);
+    let n = geom.ks * geom.kd;
+    ensure!(packed.len() == n,
+            "packed plane {} floats, geometry wants {n}", packed.len());
+    ensure!(cfg.chunk_rows >= 1, "prefill chunk_rows must be >= 1");
+    let chunk_len = (cfg.chunk_rows * geom.kd).min(n);
+    let n_chunks = n.div_ceil(chunk_len);
+
+    let mut weight = Vec::new();
+    mirror_weights(eng, geom, &mut weight);
+    let e_plane: f64 = packed
+        .iter()
+        .zip(&weight)
+        .map(|(&p, &w)| w as f64 * p as f64 * p as f64)
+        .sum();
+    let thr = cfg.drift_threshold.max(0.0);
+
+    chunks.clear();
+    state.clear();
+    state.reserve(n);
+    let mut cand: Vec<(f64, u32)> = Vec::new();
+    let mut leftover = 0.0f64;
+    for ci in 0..n_chunks {
+        let lo = ci * chunk_len;
+        let hi = (lo + chunk_len).min(n);
+        let cur = &packed[lo..hi];
+        let mut chunk = PrefillChunk {
+            index: ci as u32,
+            last: ci + 1 == n_chunks,
+            keyframe: ci == 0,
+            packed: Vec::new(),
+            updates: Vec::new(),
+        };
+        if ci > 0 {
+            // candidate updates vs the previous chunk's *transmitted*
+            // rows (every non-final chunk is full-length, so the
+            // predictor always covers the current chunk)
+            let pred = &state[lo - chunk_len..lo - chunk_len + cur.len()];
+            cand.clear();
+            let mut drift = 0.0f64;
+            for (j, (&c, &s)) in cur.iter().zip(pred).enumerate() {
+                if c != s {
+                    let d = weight[lo + j] as f64
+                        * (c as f64 - s as f64)
+                        * (c as f64 - s as f64);
+                    drift += d;
+                    cand.push((d, j as u32));
+                }
+            }
+            // whole-plane budget prorated by chunk length: the chunk
+            // budgets sum to thr^2 * e_plane across the prompt
+            let budget = thr * thr * e_plane * cur.len() as f64 / n as f64;
+            if drift > budget {
+                cand.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+                for &(d, j) in &cand {
+                    chunk.updates.push((j, cur[j as usize]));
+                    drift -= d;
+                    if drift <= budget {
+                        break;
+                    }
+                }
+            }
+            if chunk.updates.len() * UPDATE_WIRE_BYTES >= cur.len() * 4 {
+                // dense fallback: a mid-sequence keyframe chunk
+                chunk.keyframe = true;
+                chunk.updates.clear();
+            } else {
+                leftover += drift.max(0.0);
+                let base = state.len() - chunk_len;
+                for j in 0..cur.len() {
+                    let v = state[base + j];
+                    state.push(v);
+                }
+                let snap = state.len() - cur.len();
+                for &(j, v) in &chunk.updates {
+                    state[snap + j as usize] = v;
+                }
+            }
+        }
+        if chunk.keyframe {
+            chunk.packed.extend_from_slice(cur);
+            state.extend_from_slice(cur);
+        }
+        chunks.push(chunk);
+    }
+    Ok(if e_plane > 0.0 { (leftover / e_plane).sqrt() } else { 0.0 })
+}
+
+/// Server-side prefill reassembly: applies chunks in order and yields
+/// the full packed plane when the last one lands.
+///
+/// Failure policy mirrors the decode stream's no-silent-drift
+/// contract, adapted to a burst of frames the client sends before it
+/// reads replies: the *first* violation (sequence gap, geometry
+/// change, bad slice length, out-of-range update) hard-fails — the
+/// caller turns that into one typed reject — and every further
+/// non-restart chunk is swallowed silently, so the straggling tail of
+/// an already-doomed burst cannot flood the client with stale errors
+/// while it resends.  Only a keyframe chunk at index 0 (a restart)
+/// resynchronises.
+#[derive(Debug, Default)]
+pub struct PrefillAssembler {
+    geom: Option<BlockGeom>,
+    /// Chunk length in floats, learned from chunk 0's payload.
+    chunk_len: usize,
+    plane: Vec<f32>,
+    next_index: u32,
+    active: bool,
+    rejected: bool,
+}
+
+impl PrefillAssembler {
+    pub fn new() -> PrefillAssembler {
+        PrefillAssembler::default()
+    }
+
+    /// A prefill is mid-assembly (some chunks applied, last not seen).
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// The assembler refused a chunk and is dropping the rest of the
+    /// burst until a restart from keyframe chunk 0.
+    pub fn is_rejected(&self) -> bool {
+        self.rejected
+    }
+
+    fn fail(&mut self, msg: String) -> anyhow::Error {
+        self.active = false;
+        self.rejected = true;
+        anyhow::anyhow!(msg)
+    }
+
+    /// Apply one chunk.  Returns `Ok(Some(plane))` when the last
+    /// chunk completes the plane (assembler returns to idle),
+    /// `Ok(None)` mid-assembly or while silently dropping a doomed
+    /// burst, and `Err` exactly once per violation.
+    pub fn apply(&mut self, geom: BlockGeom, index: u32, last: bool,
+                 keyframe: bool, packed: &[f32], updates: &[(u32, f32)])
+        -> Result<Option<Vec<f32>>> {
+        ensure!(valid_block_axis(geom.rows, geom.ks)
+                    && valid_block_axis(geom.cols, geom.kd),
+                "invalid prefill block {}x{} for {}x{}", geom.ks, geom.kd,
+                geom.rows, geom.cols);
+        let n = geom.ks * geom.kd;
+        if keyframe && index == 0 {
+            // restart: unconditional resync, like a decode keyframe
+            self.active = false;
+            self.rejected = false;
+            if packed.is_empty() || packed.len() > n
+                || (packed.len() < n && packed.len() % geom.kd != 0) {
+                return Err(self.fail(format!(
+                    "prefill chunk 0 carries {} floats; want whole rows of \
+                     {} up to {n}", packed.len(), geom.kd)));
+            }
+            if last && packed.len() != n {
+                return Err(self.fail(format!(
+                    "single-chunk prefill carries {} floats, plane wants {n}",
+                    packed.len())));
+            }
+            self.geom = Some(geom);
+            self.chunk_len = packed.len();
+            self.plane.clear();
+            self.plane.extend_from_slice(packed);
+            self.next_index = 1;
+            if last {
+                self.chunk_len = 0;
+                self.geom = None;
+                return Ok(Some(std::mem::take(&mut self.plane)));
+            }
+            if packed.len() == n {
+                return Err(self.fail(
+                    "prefill chunk 0 filled the plane without a last flag"
+                        .into()));
+            }
+            self.active = true;
+            return Ok(None);
+        }
+        if self.rejected {
+            return Ok(None); // doomed burst: swallow until a restart
+        }
+        if !self.active {
+            return Err(self.fail(format!(
+                "prefill chunk {index} without a keyframe chunk 0")));
+        }
+        if self.geom != Some(geom) {
+            return Err(self.fail(
+                "prefill geometry changed mid-assembly".into()));
+        }
+        if index != self.next_index {
+            return Err(self.fail(format!(
+                "prefill chunk gap: got {index}, expected {}",
+                self.next_index)));
+        }
+        let lo = index as usize * self.chunk_len;
+        if lo >= n {
+            return Err(self.fail(format!(
+                "prefill chunk {index} starts past the plane ({n} floats)")));
+        }
+        let hi = (lo + self.chunk_len).min(n);
+        let cur_len = hi - lo;
+        if keyframe {
+            if packed.len() != cur_len {
+                return Err(self.fail(format!(
+                    "prefill keyframe chunk {index} carries {} floats, \
+                     want {cur_len}", packed.len())));
+            }
+            self.plane.extend_from_slice(packed);
+        } else {
+            if let Some(&(j, _)) =
+                updates.iter().find(|&&(j, _)| j as usize >= cur_len) {
+                return Err(self.fail(format!(
+                    "prefill update index {j} out of range ({cur_len} \
+                     floats in chunk {index})")));
+            }
+            let base = lo - self.chunk_len;
+            for j in 0..cur_len {
+                let v = self.plane[base + j];
+                self.plane.push(v);
+            }
+            let snap = self.plane.len() - cur_len;
+            for &(j, v) in updates {
+                self.plane[snap + j as usize] = v;
+            }
+        }
+        self.next_index += 1;
+        if last {
+            if hi != n {
+                return Err(self.fail(format!(
+                    "prefill ended at {hi} of {n} floats")));
+            }
+            self.active = false;
+            self.chunk_len = 0;
+            self.geom = None;
+            return Ok(Some(std::mem::take(&mut self.plane)));
+        }
+        if hi == n {
+            return Err(self.fail(
+                "prefill chunks filled the plane without a last flag".into()));
+        }
+        Ok(None)
     }
 }
 
@@ -708,5 +1073,178 @@ mod tests {
             .sum();
         let rel = (weighted - full).abs() / full.max(1e-30);
         assert!(rel < 1e-5, "weighted {weighted} vs full {full}");
+    }
+
+    fn assemble(geom: BlockGeom, chunks: &[PrefillChunk]) -> Vec<f32> {
+        let mut asm = PrefillAssembler::new();
+        let mut plane = None;
+        for c in chunks {
+            let got = asm
+                .apply(geom, c.index, c.last, c.keyframe, &c.packed,
+                       &c.updates)
+                .unwrap();
+            assert_eq!(got.is_some(), c.last, "chunk {}", c.index);
+            plane = got.or(plane);
+        }
+        plane.expect("last chunk yields the plane")
+    }
+
+    #[test]
+    fn prefill_zero_threshold_roundtrips_bit_exact() {
+        let mut eng = CodecEngine::new();
+        let p = rand_packed(35, 30);
+        let (mut chunks, mut state) = (Vec::new(), Vec::new());
+        let cfg = PrefillConfig { chunk_rows: 2, drift_threshold: 0.0 };
+        let drift =
+            split_prefill(&mut eng, GEOM, &p, cfg, &mut chunks, &mut state)
+                .unwrap();
+        assert_eq!(drift, 0.0);
+        assert_eq!(bits(&state), bits(&p), "zero threshold is lossless");
+        assert!(chunks[0].keyframe && chunks[0].index == 0);
+        assert!(chunks.last().unwrap().last);
+        assert_eq!(chunks.len(), 35usize.div_ceil(2 * GEOM.kd));
+        assert_eq!(bits(&assemble(GEOM, &chunks)), bits(&p));
+    }
+
+    #[test]
+    fn prefill_band_limited_rows_collapse_to_sparse_deltas() {
+        // rows that agree outside a narrow column band: delta chunks
+        // carry only the in-band slots, the chunked-prompt win
+        let mut eng = CodecEngine::new();
+        let g = BlockGeom { rows: 64, cols: 32, ks: 21, kd: 7 };
+        let mut rng = Rng::new(31);
+        let mut p = vec![0.0f32; g.ks * g.kd];
+        for r in 0..g.ks {
+            for c in 0..2 {
+                p[r * g.kd + c] = rng.normal() as f32; // in-band
+            }
+            for c in 2..g.kd {
+                p[r * g.kd + c] = 1e-7 * rng.normal() as f32; // noise
+            }
+        }
+        let (mut chunks, mut state) = (Vec::new(), Vec::new());
+        let cfg = PrefillConfig { chunk_rows: 3, drift_threshold: 0.01 };
+        let drift =
+            split_prefill(&mut eng, g, &p, cfg, &mut chunks, &mut state)
+                .unwrap();
+        assert!(drift <= 0.01, "drift {drift}");
+        let body: usize = chunks.iter().map(|c| c.body_bytes()).sum();
+        assert!(body * 2 <= p.len() * 4,
+                "chunked body {body} B vs monolithic {} B", p.len() * 4);
+        for c in &chunks[1..] {
+            assert!(!c.keyframe, "chunk {} fell back dense", c.index);
+            // noise slots stay unsent: only in-band columns update
+            assert!(c.updates.len() <= 2 * cfg.chunk_rows, "chunk {}",
+                    c.index);
+        }
+        assert_eq!(bits(&assemble(g, &chunks)), bits(&state));
+    }
+
+    #[test]
+    fn prefill_drift_bounds_reconstruction_error() {
+        let thr = 0.3;
+        let codec = FourierCodec::default();
+        let mut eng = CodecEngine::new();
+        let p = rand_packed(35, 32);
+        let (mut chunks, mut state) = (Vec::new(), Vec::new());
+        let cfg = PrefillConfig { chunk_rows: 1, drift_threshold: thr };
+        let drift =
+            split_prefill(&mut eng, GEOM, &p, cfg, &mut chunks, &mut state)
+                .unwrap();
+        assert!(drift <= thr + 1e-9, "reported drift {drift}");
+        let want = codec.decompress(&fc_payload(GEOM, &p)).unwrap();
+        let got = codec.decompress(&fc_payload(GEOM, &state)).unwrap();
+        let err = rel_error(&want, &got);
+        assert!(err <= thr * 1.01 + 1e-6, "cumulative drift {err}");
+    }
+
+    #[test]
+    fn prefill_assembler_gap_rejects_once_then_swallows_until_restart() {
+        let mut eng = CodecEngine::new();
+        let p = rand_packed(35, 33);
+        let (mut chunks, mut state) = (Vec::new(), Vec::new());
+        let cfg = PrefillConfig { chunk_rows: 1, drift_threshold: 0.0 };
+        split_prefill(&mut eng, GEOM, &p, cfg, &mut chunks, &mut state)
+            .unwrap();
+        assert!(chunks.len() >= 4);
+        let mut asm = PrefillAssembler::new();
+        let c0 = &chunks[0];
+        asm.apply(GEOM, 0, c0.last, true, &c0.packed, &c0.updates).unwrap();
+        // chunk 1 dropped on the wire; chunk 2 arrives -> gap, one
+        // typed failure, then the rest of the burst is swallowed
+        let c2 = &chunks[2];
+        assert!(asm
+            .apply(GEOM, 2, c2.last, c2.keyframe, &c2.packed, &c2.updates)
+            .is_err());
+        assert!(asm.is_rejected());
+        let c3 = &chunks[3];
+        assert!(asm
+            .apply(GEOM, 3, c3.last, c3.keyframe, &c3.packed, &c3.updates)
+            .unwrap()
+            .is_none());
+        // restart from keyframe chunk 0 recovers bit-exact
+        let mut plane = None;
+        for c in &chunks {
+            plane = asm
+                .apply(GEOM, c.index, c.last, c.keyframe, &c.packed,
+                       &c.updates)
+                .unwrap()
+                .or(plane);
+        }
+        assert_eq!(bits(&plane.unwrap()), bits(&p));
+        assert!(!asm.is_active() && !asm.is_rejected());
+    }
+
+    #[test]
+    fn prefill_assembler_rejects_bad_inputs() {
+        let mut asm = PrefillAssembler::new();
+        // delta chunk out of nowhere
+        assert!(asm.apply(GEOM, 1, false, false, &[], &[]).is_err());
+        assert!(asm.is_rejected());
+        // chunk 0 with a partial row
+        let mut asm = PrefillAssembler::new();
+        assert!(asm.apply(GEOM, 0, false, true, &[0.0; 5], &[]).is_err());
+        // chunk 0 flagged last but short of the plane
+        let mut asm = PrefillAssembler::new();
+        assert!(asm.apply(GEOM, 0, true, true, &[0.0; 7], &[]).is_err());
+        // full plane in chunk 0 without the last flag
+        let mut asm = PrefillAssembler::new();
+        assert!(asm.apply(GEOM, 0, false, true, &[0.0; 35], &[]).is_err());
+        // out-of-range update index
+        let mut asm = PrefillAssembler::new();
+        asm.apply(GEOM, 0, false, true, &[0.0; 7], &[]).unwrap();
+        assert!(asm
+            .apply(GEOM, 1, false, false, &[], &[(7, 1.0)])
+            .is_err());
+        assert!(asm.is_rejected());
+    }
+
+    #[test]
+    fn seeded_encoder_continues_a_prefilled_stream() {
+        let mut eng = CodecEngine::new();
+        let p = rand_packed(35, 34);
+        let (mut chunks, mut state) = (Vec::new(), Vec::new());
+        let cfg = PrefillConfig { chunk_rows: 2, drift_threshold: 0.0 };
+        split_prefill(&mut eng, GEOM, &p, cfg, &mut chunks, &mut state)
+            .unwrap();
+        // server side: the reassembled plane seeds the decode stream
+        let mut dec = StreamDecoder::new();
+        dec.apply_key(0, GEOM, &assemble(GEOM, &chunks)).unwrap();
+        // client side: seed from the transmitted plane
+        let mut enc = StreamEncoder::new(StreamConfig {
+            keyframe_interval: 1024,
+            drift_threshold: 0.0,
+        });
+        enc.seed(&mut eng, GEOM, &state).unwrap();
+        assert_eq!(enc.next_seq(), 1);
+        // decode step 1 rides a delta, no keyframe repayment
+        let mut p2 = p.clone();
+        p2[3] = 9.0;
+        let mut out = StreamStep::default();
+        enc.encode_into(&mut eng, GEOM, &p2, &mut out).unwrap();
+        assert!(!out.keyframe, "seeded stream must not re-keyframe");
+        assert_eq!(out.seq, 1);
+        dec.apply_delta(out.seq, GEOM, &out.updates).unwrap();
+        assert_eq!(bits(dec.block()), bits(&p2));
     }
 }

@@ -49,6 +49,12 @@ pub struct ServeConfig {
     /// entropy-capable clients downgrade cleanly to raw payloads (and
     /// rejects coded frames) — same negotiation lever as `stream`.
     pub entropy: bool,
+    /// Advertise the chunked-prefill capability (`codec::stream`
+    /// prefill mode) in the handshake.  `false` makes prefill-capable
+    /// clients downgrade cleanly to the monolithic prompt keyframe
+    /// (and rejects `PrefillChunk` frames) — same negotiation lever
+    /// as `stream`.
+    pub prefill: bool,
     /// Session-table shards.  Session state is partitioned by a hash
     /// of the session id into this many independently-locked
     /// `SessionManager` shards, so the serving data path never takes
@@ -89,6 +95,7 @@ impl Default for ServeConfig {
             stream: true,
             ladder: true,
             entropy: true,
+            prefill: true,
             shards: 8,
             poll_workers: 4,
             idle_deadline_ms: 30_000,
@@ -150,6 +157,15 @@ pub struct SimConfig {
     /// step retransmits (at 8 wire bytes each — u32 index + f32
     /// value; see `sim::bytes_per_step`).
     pub stream_delta_fill: f64,
+    /// Chunked prefill (`codec::stream` prefill mode): number of
+    /// fixed-row chunks the prompt-phase plane is split into — one
+    /// keyframe chunk plus `prefill_chunks - 1` row-delta chunks
+    /// (see `sim::prompt_bytes`).
+    pub prefill_chunks: usize,
+    /// Chunked prefill: fraction of a delta chunk's coefficients the
+    /// Parseval-bounded budget actually retransmits (at 8 wire bytes
+    /// each — u32 index + f32 value).
+    pub prefill_delta_fill: f64,
     /// `Arm::FcAdaptive`: length (in decode steps) of each phase of
     /// the built-in fluctuating-link trace — fast and slow phases
     /// alternate.
@@ -177,6 +193,8 @@ impl Default for SimConfig {
             fc_ratio: 10.3,
             stream_keyframe_interval: 32,
             stream_delta_fill: 0.05,
+            prefill_chunks: 16,
+            prefill_delta_fill: 0.05,
             adaptive_phase_steps: 16,
             adaptive_low_fill: 0.35,
             // calibrated so a fully-batched 8-unit server is NOT the
@@ -254,6 +272,9 @@ impl FromJson for ServeConfig {
         if let Some(b) = j.get("entropy").and_then(|v| v.as_bool()) {
             self.entropy = b;
         }
+        if let Some(b) = j.get("prefill").and_then(|v| v.as_bool()) {
+            self.prefill = b;
+        }
         self.shards = j.usize_or("shards", self.shards);
         self.poll_workers = j.usize_or("poll_workers", self.poll_workers);
         self.idle_deadline_ms =
@@ -281,6 +302,7 @@ impl FromJson for ServeConfig {
             "stream" => self.stream = value.parse()?,
             "ladder" => self.ladder = value.parse()?,
             "entropy" => self.entropy = value.parse()?,
+            "prefill" => self.prefill = value.parse()?,
             "shards" => self.shards = value.parse()?,
             "poll_workers" => self.poll_workers = value.parse()?,
             "idle_deadline_ms" => self.idle_deadline_ms = value.parse()?,
@@ -381,6 +403,9 @@ impl FromJson for SimConfig {
             j.usize_or("stream_keyframe_interval", self.stream_keyframe_interval);
         self.stream_delta_fill =
             j.f64_or("stream_delta_fill", self.stream_delta_fill);
+        self.prefill_chunks = j.usize_or("prefill_chunks", self.prefill_chunks);
+        self.prefill_delta_fill =
+            j.f64_or("prefill_delta_fill", self.prefill_delta_fill);
         self.adaptive_phase_steps =
             j.usize_or("adaptive_phase_steps", self.adaptive_phase_steps);
         self.adaptive_low_fill =
@@ -405,6 +430,9 @@ impl FromJson for SimConfig {
             "stream_keyframe_interval" =>
                 self.stream_keyframe_interval = value.parse()?,
             "stream_delta_fill" => self.stream_delta_fill = value.parse()?,
+            "prefill_chunks" => self.prefill_chunks = value.parse()?,
+            "prefill_delta_fill" =>
+                self.prefill_delta_fill = value.parse()?,
             "adaptive_phase_steps" =>
                 self.adaptive_phase_steps = value.parse()?,
             "adaptive_low_fill" => self.adaptive_low_fill = value.parse()?,
@@ -431,6 +459,12 @@ impl FromJson for SimConfig {
         }
         if !(0.0..=1.0).contains(&self.stream_delta_fill) {
             bail!("stream_delta_fill must be in [0, 1]");
+        }
+        if self.prefill_chunks == 0 {
+            bail!("prefill_chunks must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&self.prefill_delta_fill) {
+            bail!("prefill_delta_fill must be in [0, 1]");
         }
         if self.adaptive_phase_steps == 0 {
             bail!("adaptive_phase_steps must be >= 1");
@@ -466,17 +500,21 @@ mod tests {
         assert!(cfg.stream, "stream capability defaults on");
         assert!(cfg.ladder, "ladder capability defaults on");
         assert!(cfg.entropy, "entropy capability defaults on");
+        assert!(cfg.prefill, "prefill capability defaults on");
         let cfg = ServeConfig::load(None, &["stream=false".into(),
                                             "ladder=false".into(),
-                                            "entropy=false".into()]).unwrap();
+                                            "entropy=false".into(),
+                                            "prefill=false".into()]).unwrap();
         assert!(!cfg.stream);
         assert!(!cfg.ladder);
         assert!(!cfg.entropy);
-        // the JSON path reaches the entropy knob too
+        assert!(!cfg.prefill);
+        // the JSON path reaches the entropy + prefill knobs too
         let p = std::env::temp_dir().join("fc_cfg_entropy_test.json");
-        std::fs::write(&p, r#"{"entropy": false}"#).unwrap();
+        std::fs::write(&p, r#"{"entropy": false, "prefill": false}"#).unwrap();
         let cfg = ServeConfig::load(Some(p.to_str().unwrap()), &[]).unwrap();
         assert!(!cfg.entropy);
+        assert!(!cfg.prefill);
     }
 
     #[test]

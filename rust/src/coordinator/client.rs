@@ -24,7 +24,8 @@ use super::transport::{FrameRx, FrameTx, ShapedTransport, TcpTransport,
 use crate::codec::fourier::{crop_block_into, pack_block_into};
 use crate::codec::rate::{ladder_from_manifest, LadderPoint, RateConfig,
                          RateController};
-use crate::codec::stream::{BlockGeom, StreamConfig, StreamEncoder,
+use crate::codec::stream::{split_prefill, BlockGeom, PrefillChunk,
+                           PrefillConfig, StreamConfig, StreamEncoder,
                            StreamStep, UPDATE_WIRE_BYTES};
 use crate::codec::wire;
 use crate::codec::CodecEngine;
@@ -40,8 +41,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 /// Capabilities this client implementation requests in its `Hello`.
-pub const CLIENT_CAPS: u32 =
-    caps::STREAM | caps::CODEC_FC | caps::LADDER | caps::ENTROPY;
+pub const CLIENT_CAPS: u32 = caps::STREAM | caps::CODEC_FC | caps::LADDER
+    | caps::ENTROPY | caps::PREFILL;
 
 struct ClientBucket {
     ks: usize,
@@ -82,6 +83,15 @@ pub struct DeviceClient {
     step_scratch: StreamStep,
     /// Adaptive rate control (None = pinned to the primary point).
     adaptive: Option<AdaptiveState>,
+    /// Chunked prefill (None = prompts ship as one monolithic frame).
+    prefill: Option<PrefillConfig>,
+    /// Reusable prefill chunk buffers (each chunk's payload is moved
+    /// into its wire frame for the send, then recovered).
+    chunk_scratch: Vec<PrefillChunk>,
+    /// The transmitted prompt plane `split_prefill` reconstructs —
+    /// exactly what the server's assembler holds, so it seeds the
+    /// decode stream after the prompt completes.
+    prefill_state: Vec<f32>,
     /// Entropy-coded wire format (`codec::wire`): when enabled, each
     /// data-frame body is losslessly entropy-coded and shipped coded
     /// only when that wins over the raw encoding (try-and-compare).
@@ -143,6 +153,15 @@ pub struct ClientStats {
     pub entropy_fallbacks: u64,
     pub pre_coding_bytes: u64,
     pub post_coding_bytes: u64,
+    /// Chunked prefill: prompts shipped chunked, the chunk frames
+    /// that carried them (keyframe chunks separately), their wire
+    /// bytes (headers included, also counted in `bytes_sent`), and
+    /// full-prompt resends after a server-side prefill rejection.
+    pub prefill_prompts: u64,
+    pub prefill_chunks: u64,
+    pub prefill_key_chunks: u64,
+    pub prefill_bytes: u64,
+    pub prefill_resyncs: u64,
 }
 
 impl ClientStats {
@@ -248,6 +267,9 @@ impl DeviceClient {
             encoder: None,
             step_scratch: StreamStep::default(),
             adaptive: None,
+            prefill: None,
+            chunk_scratch: Vec::new(),
+            prefill_state: Vec::new(),
             entropy: false,
             coded_scratch: Vec::new(),
             crop_re: Vec::new(),
@@ -451,6 +473,41 @@ impl DeviceClient {
         self.entropy
     }
 
+    /// Switch this session to chunked prefill (`codec::stream`
+    /// prefill mode): [`DeviceClient::send_prompt`] splits the
+    /// prompt-phase plane into one keyframe chunk plus row-delta
+    /// chunks (`Frame::PrefillChunk`) instead of one monolithic
+    /// Activation/keyframe, reusing the Parseval-bounded delta
+    /// machinery across the prompt dimension.  Returns false (prompts
+    /// keep shipping monolithic) when the handshake did not negotiate
+    /// the prefill capability — the clean downgrade path against
+    /// pre-prefill servers.  Composes with the stream (the completed
+    /// prompt seeds the delta encoder), adaptive (prompt chunks ride
+    /// [`RateController::prefill_point`]), and entropy (each chunk
+    /// body is try-and-compare coded) levers.
+    #[must_use = "a false return means the server refused the prefill \
+                  capability and prompts ship as monolithic frames"]
+    pub fn enable_prefill(&mut self, cfg: PrefillConfig) -> bool {
+        if self.negotiated_caps() & caps::PREFILL == 0 {
+            crate::warn_!("client",
+                          "session {}: server lacks the prefill capability; \
+                           prompts ship monolithic", self.session);
+            return false;
+        }
+        if cfg.chunk_rows == 0 {
+            crate::warn_!("client",
+                          "session {}: prefill chunk_rows must be >= 1",
+                          self.session);
+            return false;
+        }
+        self.prefill = Some(cfg);
+        true
+    }
+
+    pub fn prefill_enabled(&self) -> bool {
+        self.prefill.is_some()
+    }
+
     /// Pin the session to one advertised ladder point (the benches'
     /// fixed-point ablation lever): adaptive accounting still runs
     /// but the point never moves.  Returns false without the ladder
@@ -534,6 +591,16 @@ impl DeviceClient {
     /// the returned [`PreparedStep`] and is recovered into
     /// `packed_scratch` by whichever send path consumes it.
     fn prepare_step(&mut self, context: &[i32]) -> Result<PreparedStep> {
+        self.prepare_step_at(context, false)
+    }
+
+    /// [`DeviceClient::prepare_step`], optionally at the prefill
+    /// ladder rung: `prefill: true` packs the prompt at
+    /// [`RateController::prefill_point`] — the deepest admissible
+    /// point, read *after* the controller retargets onto the prompt's
+    /// bucket — without advancing the decode-side controller.
+    fn prepare_step_at(&mut self, context: &[i32], prefill: bool)
+        -> Result<PreparedStep> {
         let len = context.len();
         let bucket = self
             .bucket_for(len)
@@ -547,7 +614,11 @@ impl DeviceClient {
                     st.ctrl.retarget(self.buckets[&bucket].ladder.clone())?;
                     st.bucket = bucket;
                 }
-                st.ctrl.step() as u8
+                if prefill {
+                    st.ctrl.prefill_point() as u8
+                } else {
+                    st.ctrl.step() as u8
+                }
             }
             None => 0,
         };
@@ -795,16 +866,162 @@ impl DeviceClient {
         bail!("stream resync failed: keyframe rejected")
     }
 
+    /// Ship the prompt-phase activation and await the first token.
+    /// With chunked prefill enabled the packed prompt plane is split
+    /// into one keyframe chunk plus row-delta chunks
+    /// ([`split_prefill`]) and streamed as `Frame::PrefillChunk`s at
+    /// the prefill ladder rung; otherwise this is exactly
+    /// [`DeviceClient::step`].  If the server rejects a chunk
+    /// ([`ErrorCode::StreamReject`]: chunk-index gap, TTL-evicted
+    /// mid-assembly state) the whole chunk sequence is resent once
+    /// from chunk 0 — the keyframe-chunk resync protocol.  On success
+    /// the delta encoder (stream mode) is seeded from the transmitted
+    /// plane, so the first decode step rides a delta instead of
+    /// paying a fresh keyframe.
+    pub fn send_prompt(&mut self, context: &[i32]) -> Result<(i32, f32)> {
+        let Some(cfg) = self.prefill else {
+            return self.step(context);
+        };
+        let t1 = Instant::now();
+        let ps = self.prepare_step_at(context, true)?;
+        let request = ps.request;
+        let geom = BlockGeom { rows: ps.bucket, cols: self.d_model,
+                               ks: ps.ks, kd: ps.kd };
+        let mut chunks = std::mem::take(&mut self.chunk_scratch);
+        let mut state = std::mem::take(&mut self.prefill_state);
+        split_prefill(&mut self.engine, geom, &ps.packed, cfg, &mut chunks,
+                      &mut state)?;
+        let mut reply = None;
+        'attempt: for attempt in 0..2 {
+            for ci in 0..chunks.len() {
+                let (index, last, keyframe) =
+                    (chunks[ci].index, chunks[ci].last, chunks[ci].keyframe);
+                let mut packed = std::mem::take(&mut chunks[ci].packed);
+                let mut updates = std::mem::take(&mut chunks[ci].updates);
+                let mut coded = std::mem::take(&mut self.coded_scratch);
+                coded.clear();
+                if self.entropy {
+                    let raw = if keyframe {
+                        packed.len() * 4
+                    } else {
+                        4 + updates.len() * UPDATE_WIRE_BYTES
+                    };
+                    if keyframe {
+                        wire::encode_f32_plane(&packed, &mut coded);
+                    } else {
+                        wire::encode_updates(&updates, &mut coded);
+                    }
+                    if coded.len() < raw {
+                        self.stats.entropy_frames += 1;
+                        self.stats.pre_coding_bytes += raw as u64;
+                        self.stats.post_coding_bytes += coded.len() as u64;
+                    } else {
+                        self.stats.entropy_fallbacks += 1;
+                        coded.clear();
+                    }
+                }
+                let is_coded = !coded.is_empty();
+                if is_coded {
+                    // the coded bytes carry the chunk; the raw buffers
+                    // never leave, so recover them right away
+                    chunks[ci].packed = std::mem::take(&mut packed);
+                    chunks[ci].updates = std::mem::take(&mut updates);
+                }
+                let frame = Frame::PrefillChunk {
+                    session: self.session,
+                    request,
+                    bucket: ps.bucket as u16,
+                    true_len: ps.len as u16,
+                    ks: ps.ks as u16,
+                    kd: ps.kd as u16,
+                    point: ps.point,
+                    index,
+                    last,
+                    keyframe,
+                    packed,
+                    updates,
+                    coded,
+                };
+                let b0 = self.stats.bytes_sent;
+                self.timed_send(&frame)?;
+                self.stats.prefill_bytes += self.stats.bytes_sent - b0;
+                self.stats.prefill_chunks += 1;
+                if keyframe {
+                    self.stats.prefill_key_chunks += 1;
+                }
+                // recover the chunk + coded buffers for reuse (resend
+                // attempt / next prompt)
+                if let Frame::PrefillChunk { packed, updates, coded, .. }
+                    = frame {
+                    if !is_coded {
+                        chunks[ci].packed = packed;
+                        chunks[ci].updates = updates;
+                    }
+                    self.coded_scratch = coded;
+                }
+            }
+            if attempt == 0 {
+                self.stats.requests += 1;
+            }
+            loop {
+                match self.recv()? {
+                    Frame::Token { request: r, token, logprob }
+                        if r == request => {
+                        reply = Some((token, logprob));
+                        break 'attempt;
+                    }
+                    Frame::Token { .. } => continue, // stale reply
+                    Frame::Error { code: ErrorCode::StreamReject, msg }
+                        if attempt == 0 => {
+                        // the server lost or refused the mid-assembly
+                        // state (chunk gap after a drop, TTL eviction):
+                        // resend the whole sequence — its chunk 0 is
+                        // the keyframe-chunk restart
+                        crate::debug!("client", "prefill resync: {msg}");
+                        self.stats.prefill_resyncs += 1;
+                        break;
+                    }
+                    Frame::Error { code, msg } => {
+                        return Err(ServerError { code, msg }.into());
+                    }
+                    other => bail!("unexpected frame {}", other.type_id()),
+                }
+            }
+        }
+        let Some(reply) = reply else {
+            bail!("prefill resync failed: restarted chunk sequence rejected");
+        };
+        self.stats.prefill_prompts += 1;
+        // hand the stream encoder the transmitted plane the server's
+        // assembler reconstructed, so decode step 1 can be a delta
+        if self.encoder.is_some() {
+            self.encoder.as_mut().expect("stream mode")
+                .seed(&mut self.engine, geom, &state)?;
+        }
+        self.packed_scratch = ps.packed;
+        self.chunk_scratch = chunks;
+        self.prefill_state = state;
+        self.stats.round_trip_us.push(t1.elapsed().as_micros() as u64);
+        Ok(reply)
+    }
+
     /// Autoregressive generation (recompute regime).
     pub fn generate(&mut self, prompt: &str, max_new: usize) -> Result<Generation> {
         let mut context = tokenizer::encode_prompt(prompt);
         let mut produced = Vec::new();
         let max_bucket = *self.buckets.keys().last().unwrap_or(&64);
-        for _ in 0..max_new {
+        for step_i in 0..max_new {
             if context.len() >= max_bucket {
                 break;
             }
-            let (token, _lp) = self.step(&context)?;
+            // the first step is the prompt phase: send_prompt ships
+            // it chunked when prefill is enabled, and falls back to
+            // an ordinary step otherwise
+            let (token, _lp) = if step_i == 0 {
+                self.send_prompt(&context)?
+            } else {
+                self.step(&context)?
+            };
             context.push(token);
             produced.push(token);
             if token == tokenizer::EOS || token == tokenizer::PAD {

@@ -47,6 +47,16 @@ pub struct Metrics {
     pub entropy_frames: AtomicU64,
     pub entropy_bytes_saved: AtomicU64,
     pub entropy_fallbacks: AtomicU64,
+    /// Chunked prefill (`codec::stream` prefill mode): prompt-phase
+    /// chunk frames seen, how many were keyframe chunks (chunk 0 or a
+    /// mid-sequence dense fallback), their wire bytes (also counted in
+    /// `bytes_rx`), chunks rejected (sequence gap / bad geometry →
+    /// client restarts from chunk 0), and prompts fully reassembled.
+    pub prefill_chunks: AtomicU64,
+    pub prefill_key_chunks: AtomicU64,
+    pub prefill_bytes_rx: AtomicU64,
+    pub prefill_rejects: AtomicU64,
+    pub prefill_prompts: AtomicU64,
     pub ladder_dwell_frames: Histogram,
     pub queue_wait_us: Histogram,
     pub decompress_us: Histogram,
@@ -91,6 +101,11 @@ impl Metrics {
         j.set("entropy_frames", g(&self.entropy_frames));
         j.set("entropy_bytes_saved", g(&self.entropy_bytes_saved));
         j.set("entropy_fallbacks", g(&self.entropy_fallbacks));
+        j.set("prefill_chunks", g(&self.prefill_chunks));
+        j.set("prefill_key_chunks", g(&self.prefill_key_chunks));
+        j.set("prefill_bytes_rx", g(&self.prefill_bytes_rx));
+        j.set("prefill_rejects", g(&self.prefill_rejects));
+        j.set("prefill_prompts", g(&self.prefill_prompts));
         for (name, h) in [("queue_wait_us", &self.queue_wait_us),
                           ("decompress_us", &self.decompress_us),
                           ("exec_us", &self.exec_us),
@@ -152,5 +167,16 @@ mod tests {
         assert_eq!(j.usize_or("entropy_frames", 0), 7);
         assert_eq!(j.usize_or("entropy_bytes_saved", 0), 512);
         assert_eq!(j.usize_or("entropy_fallbacks", 0), 1);
+        m.prefill_chunks.fetch_add(6, Ordering::Relaxed);
+        m.prefill_key_chunks.fetch_add(2, Ordering::Relaxed);
+        m.prefill_bytes_rx.fetch_add(2048, Ordering::Relaxed);
+        m.prefill_rejects.fetch_add(1, Ordering::Relaxed);
+        m.prefill_prompts.fetch_add(1, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.usize_or("prefill_chunks", 0), 6);
+        assert_eq!(j.usize_or("prefill_key_chunks", 0), 2);
+        assert_eq!(j.usize_or("prefill_bytes_rx", 0), 2048);
+        assert_eq!(j.usize_or("prefill_rejects", 0), 1);
+        assert_eq!(j.usize_or("prefill_prompts", 0), 1);
     }
 }

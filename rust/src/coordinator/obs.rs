@@ -260,6 +260,10 @@ pub enum FlightKind {
     /// connections that previously sent coded frames, so the ring is
     /// not flooded by peers that simply never enabled entropy.
     EntropyFallback = 9,
+    /// Prefill chunk refused (chunk-index gap, bad geometry, chunk
+    /// without a keyframe chunk 0) — `seq` carries the chunk index;
+    /// the client restarts the prompt from chunk 0.
+    PrefillReject = 10,
 }
 
 impl FlightKind {
@@ -274,6 +278,7 @@ impl FlightKind {
             7 => FlightKind::KeyframeResync,
             8 => FlightKind::RxError,
             9 => FlightKind::EntropyFallback,
+            10 => FlightKind::PrefillReject,
             _ => return None,
         })
     }
@@ -289,6 +294,7 @@ impl FlightKind {
             FlightKind::KeyframeResync => "keyframe_resync",
             FlightKind::RxError => "rx_error",
             FlightKind::EntropyFallback => "entropy_fallback",
+            FlightKind::PrefillReject => "prefill_reject",
         }
     }
 }
@@ -635,13 +641,14 @@ mod tests {
                 == Some("stream_reject"));
         assert!(format!("{e}").contains("stream_reject"));
         // every kind byte roundtrips through the packed word
-        for k in 1..=9u8 {
+        for k in 1..=10u8 {
             let kind = FlightKind::from_u8(k).unwrap();
             r.record(kind, 1, 0, 0, 0);
             assert_eq!(r.dump().last().unwrap().kind, kind);
         }
-        assert!(FlightKind::from_u8(10).is_none());
+        assert!(FlightKind::from_u8(11).is_none());
         assert_eq!(FlightKind::EntropyFallback.name(), "entropy_fallback");
+        assert_eq!(FlightKind::PrefillReject.name(), "prefill_reject");
     }
 
     #[test]

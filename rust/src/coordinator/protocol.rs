@@ -25,6 +25,15 @@
 //!   HelloAck   s→c  u16 version | u32 caps | u16 bucket_count
 //!                   | per bucket: u16 bucket | u8 n
 //!                   | n x (u16 ks | u16 kd | f32 err_bound)
+//!   PrefillChunk c→s u64 session | u64 request | u16 bucket
+//!                   | u16 true_len | u16 ks | u16 kd | u8 point
+//!                   | u32 index | u8 flags
+//!                   | flags bit0 (keyframe chunk): f32 packed[·]
+//!                     (a raw row slice of the packed plane)
+//!                   | else: u32 count | (u32 idx | f32 val)[count]
+//!                     (chunk-local sparse updates)
+//!                   (flags bit1 = last chunk; bit2 = entropy-coded
+//!                   body, a codec::wire f32 plane or update list)
 //!
 //! The v2 handshake replaces the old unversioned `Hello {session,
 //! model}`: the client leads with [`PROTOCOL_MAGIC`], its protocol
@@ -54,6 +63,16 @@
 //! [`ErrorCode::BadRequest`] rejects, and a peer that never
 //! negotiated the cap never sees a flag bit (legacy frames stay
 //! byte-identical).
+//!
+//! `PrefillChunk` ([`caps::PREFILL`], `codec::stream::split_prefill`)
+//! streams the prompt-phase block as fixed-row chunks — one keyframe
+//! chunk (index 0, raw rows) plus row-delta chunks — again with no
+//! version bump: a client that never negotiated the cap sends the
+//! prompt as the usual monolithic Activation/Delta keyframe,
+//! byte-identical to pre-prefill traffic.  The server reassembles
+//! per-session, hard-fails chunk sequence gaps with
+//! [`ErrorCode::StreamReject`] (the client restarts from chunk 0),
+//! and a `Token` for the chunked request only follows the last chunk.
 
 use anyhow::{bail, ensure, Result};
 use std::io::{Read, Write};
@@ -102,6 +121,12 @@ pub const ERROR_HEADER_BYTES: usize = 3;
 /// [`ACTIVATION_HEADER_BYTES`], used by the wire-byte accounting.
 pub const STREAM_HEADER_BYTES: usize = 30;
 
+/// Body-header bytes of a `PrefillChunk` frame (session + request +
+/// bucket + true_len + ks + kd + ladder point + chunk index + flags)
+/// — the prompt-phase counterpart of [`STREAM_HEADER_BYTES`], used by
+/// the prefill wire-byte accounting.
+pub const PREFILL_HEADER_BYTES: usize = 30;
+
 /// Fixed body-header bytes of a `HelloAck` frame (version + caps +
 /// bucket_count); [`HELLO_ACK_BUCKET_BYTES`] per advertised bucket
 /// follow.
@@ -139,6 +164,11 @@ pub mod caps {
     /// must never set a flag bit toward a peer that did not advertise
     /// this.
     pub const ENTROPY: u32 = 1 << 5;
+    /// Chunked prefill streaming ([`super::Frame::PrefillChunk`]):
+    /// the server reassembles a prompt-phase plane from one keyframe
+    /// chunk plus row-delta chunks instead of requiring a monolithic
+    /// transfer.  Un-negotiated sessions stay byte-identical.
+    pub const PREFILL: u32 = 1 << 6;
 }
 
 /// Typed reason byte carried by every [`Frame::Error`].
@@ -308,6 +338,36 @@ pub enum Frame {
         caps: u32,
         buckets: Vec<BucketAdvert>,
     },
+    /// One chunk of a chunked prompt-phase transfer
+    /// (`codec::stream::split_prefill`): a keyframe chunk carries a
+    /// raw row slice of the packed plane in `packed`; a delta chunk
+    /// carries chunk-local sparse updates against the previous
+    /// chunk's rows.  The `Token` answer follows the `last` chunk.
+    PrefillChunk {
+        session: u64,
+        request: u64,
+        bucket: u16,
+        true_len: u16,
+        ks: u16,
+        kd: u16,
+        /// Quality-ladder point of the whole chunked plane — prefill
+        /// may ride a cheaper rung than decode.
+        point: u8,
+        /// 0-based chunk index; chunk 0 is always a keyframe chunk
+        /// and defines the chunk length.
+        index: u32,
+        /// Final chunk of the plane.
+        last: bool,
+        /// Keyframe chunk (raw rows) vs delta chunk (updates).
+        keyframe: bool,
+        packed: Vec<f32>,
+        updates: Vec<(u32, f32)>,
+        /// Entropy-coded body: a `codec::wire` f32 plane (keyframe
+        /// chunk) or update list (delta chunk).  Invariant: non-empty
+        /// ⇔ entropy-coded on the wire, and then `packed`/`updates`
+        /// are empty.  Flagged via bit 2 of the flags byte.
+        coded: Vec<u8>,
+    },
 }
 
 impl Frame {
@@ -333,6 +393,7 @@ impl Frame {
             Frame::Bye => 6,
             Frame::Delta { .. } => 7,
             Frame::HelloAck { .. } => 8,
+            Frame::PrefillChunk { .. } => 9,
         }
     }
 
@@ -416,6 +477,34 @@ impl Frame {
                         b.extend_from_slice(&p.ks.to_le_bytes());
                         b.extend_from_slice(&p.kd.to_le_bytes());
                         b.extend_from_slice(&p.err_bound.to_le_bytes());
+                    }
+                }
+            }
+            Frame::PrefillChunk { session, request, bucket, true_len, ks, kd,
+                                  point, index, last, keyframe, packed,
+                                  updates, coded } => {
+                b.extend_from_slice(&session.to_le_bytes());
+                b.extend_from_slice(&request.to_le_bytes());
+                b.extend_from_slice(&bucket.to_le_bytes());
+                b.extend_from_slice(&true_len.to_le_bytes());
+                b.extend_from_slice(&ks.to_le_bytes());
+                b.extend_from_slice(&kd.to_le_bytes());
+                b.push(*point);
+                b.extend_from_slice(&index.to_le_bytes());
+                b.push(*keyframe as u8
+                       | (*last as u8) << 1
+                       | if coded.is_empty() { 0 } else { 4 });
+                if !coded.is_empty() {
+                    debug_assert!(packed.is_empty() && updates.is_empty(),
+                                  "coded and raw bodies are exclusive");
+                    b.extend_from_slice(coded);
+                } else if *keyframe {
+                    crate::codec::Writer(&mut b).f32s(packed);
+                } else {
+                    b.extend_from_slice(&(updates.len() as u32).to_le_bytes());
+                    for (i, v) in updates {
+                        b.extend_from_slice(&i.to_le_bytes());
+                        b.extend_from_slice(&v.to_le_bytes());
                     }
                 }
             }
@@ -561,6 +650,49 @@ impl Frame {
                         "trailing hello-ack bytes ({})", r.remaining());
                 Frame::HelloAck { version, caps, buckets }
             }
+            9 => {
+                let session = u64_of(&mut r)?;
+                let request = u64_of(&mut r)?;
+                let bucket = r.u16()?;
+                let true_len = r.u16()?;
+                let ks = r.u16()?;
+                let kd = r.u16()?;
+                let point = r.byte()?;
+                let index = r.u32()?;
+                let flags = r.byte()?;
+                ensure!(flags <= 7, "bad prefill flags {flags}");
+                let keyframe = flags & 1 == 1;
+                let last = flags & 2 != 0;
+                let is_coded = flags & 4 != 0;
+                let (packed, updates, coded) = if is_coded {
+                    let c = r.take(r.remaining())?.to_vec();
+                    ensure!(!c.is_empty(),
+                            "empty entropy-coded prefill chunk");
+                    (Vec::new(), Vec::new(), c)
+                } else if keyframe {
+                    let mut p = Vec::new();
+                    r.f32s(r.remaining() / 4, &mut p)?;
+                    ensure!(r.remaining() == 0,
+                            "prefill chunk body not f32-aligned ({} stray \
+                             bytes)", r.remaining());
+                    (p, Vec::new(), Vec::new())
+                } else {
+                    let n = r.u32()? as usize;
+                    let mut u = Vec::with_capacity(n.min(r.remaining() / 8));
+                    for _ in 0..n {
+                        let i = r.u32()?;
+                        let v = r.f32()?;
+                        u.push((i, v));
+                    }
+                    ensure!(r.remaining() == 0,
+                            "trailing prefill chunk bytes ({})",
+                            r.remaining());
+                    (Vec::new(), u, Vec::new())
+                };
+                Frame::PrefillChunk { session, request, bucket, true_len, ks,
+                                      kd, point, index, last, keyframe,
+                                      packed, updates, coded }
+            }
             t => bail!("unknown frame type {t}"),
         })
     }
@@ -680,6 +812,30 @@ mod tests {
             version: PROTOCOL_VERSION, caps: 0,
             buckets: vec![advert(16, &[])],
         });
+        // prefill chunks: keyframe chunk, delta chunk, last-flagged,
+        // and an entropy-coded body
+        roundtrip(Frame::PrefillChunk {
+            session: 4, request: 20, bucket: 128, true_len: 100, ks: 17,
+            kd: 11, point: 0, index: 0, last: false, keyframe: true,
+            packed: vec![1.0, -2.5, 0.0, 3.25], updates: vec![],
+            coded: vec![],
+        });
+        roundtrip(Frame::PrefillChunk {
+            session: 4, request: 20, bucket: 128, true_len: 100, ks: 17,
+            kd: 11, point: 1, index: 3, last: false, keyframe: false,
+            packed: vec![], updates: vec![(0, 1.0), (7, -2.5)],
+            coded: vec![],
+        });
+        roundtrip(Frame::PrefillChunk {
+            session: 4, request: 20, bucket: 128, true_len: 100, ks: 17,
+            kd: 11, point: 0, index: 8, last: true, keyframe: false,
+            packed: vec![], updates: vec![], coded: vec![],
+        });
+        roundtrip(Frame::PrefillChunk {
+            session: 4, request: 21, bucket: 128, true_len: 100, ks: 17,
+            kd: 11, point: 0, index: 0, last: false, keyframe: true,
+            packed: vec![], updates: vec![], coded: vec![1, 4, 0, 0, 0, 0xEE],
+        });
     }
 
     #[test]
@@ -779,6 +935,24 @@ mod tests {
             Frame::HelloAck {
                 version: PROTOCOL_VERSION, caps: caps::STREAM,
                 buckets: vec![advert(16, &[(9, 15, 0.1), (9, 7, 0.3)])],
+            },
+            Frame::PrefillChunk {
+                session: 1, request: 47, bucket: 32, true_len: 29, ks: 3,
+                kd: 3, point: 0, index: 0, last: false, keyframe: true,
+                packed: vec![1.0, -2.0, 3.0], updates: vec![],
+                coded: vec![],
+            },
+            Frame::PrefillChunk {
+                session: 1, request: 47, bucket: 32, true_len: 29, ks: 3,
+                kd: 3, point: 0, index: 2, last: true, keyframe: false,
+                packed: vec![], updates: vec![(1, 0.5), (2, -1.5)],
+                coded: vec![],
+            },
+            Frame::PrefillChunk {
+                session: 1, request: 48, bucket: 32, true_len: 29, ks: 3,
+                kd: 3, point: 1, index: 0, last: false, keyframe: true,
+                packed: vec![], updates: vec![],
+                coded: vec![1, 3, 0, 0, 0, 0xBE, 0xEF],
             },
         ]
     }
@@ -1047,6 +1221,19 @@ mod tests {
             coded: vec![],
         }), STREAM_HEADER_BYTES + 4);
 
+        // a keyframe prefill chunk's body is exactly the header
+        assert_eq!(body_len(&Frame::PrefillChunk {
+            session: 0, request: 0, bucket: 16, true_len: 8, ks: 0, kd: 0,
+            point: 0, index: 0, last: false, keyframe: true, packed: vec![],
+            updates: vec![], coded: vec![],
+        }), PREFILL_HEADER_BYTES);
+        // a delta chunk adds its u32 count even when empty
+        assert_eq!(body_len(&Frame::PrefillChunk {
+            session: 0, request: 0, bucket: 16, true_len: 8, ks: 0, kd: 0,
+            point: 0, index: 1, last: true, keyframe: false, packed: vec![],
+            updates: vec![], coded: vec![],
+        }), PREFILL_HEADER_BYTES + 4);
+
         assert_eq!(body_len(&Frame::HelloAck {
             version: 2, caps: 0, buckets: vec![],
         }), HELLO_ACK_HEADER_BYTES);
@@ -1058,6 +1245,71 @@ mod tests {
             + 6 * HELLO_ACK_POINT_BYTES);
     }
 
+    /// Prefill chunk wire pins: the flags byte layout (bit 0
+    /// keyframe, bit 1 last, bit 2 entropy-coded), malformed-flag and
+    /// empty-coded rejects, and delta-chunk body alignment.
+    #[test]
+    fn prefill_flags_are_pinned() {
+        let kf = Frame::PrefillChunk {
+            session: 1, request: 2, bucket: 16, true_len: 8, ks: 3, kd: 3,
+            point: 5, index: 0, last: false, keyframe: true,
+            packed: vec![1.5; 3], updates: vec![], coded: vec![],
+        };
+        let enc = kf.encode();
+        // flags is the last header byte
+        assert_eq!(enc[FRAME_OVERHEAD_BYTES + PREFILL_HEADER_BYTES - 1], 1);
+        assert_eq!(enc.len(),
+                   FRAME_OVERHEAD_BYTES + PREFILL_HEADER_BYTES + 3 * 4);
+        roundtrip(kf);
+
+        let last_coded = Frame::PrefillChunk {
+            session: 1, request: 2, bucket: 16, true_len: 8, ks: 3, kd: 3,
+            point: 0, index: 4, last: true, keyframe: false,
+            packed: vec![], updates: vec![], coded: vec![0xAA, 0xBB],
+        };
+        let enc = last_coded.encode();
+        assert_eq!(enc[FRAME_OVERHEAD_BYTES + PREFILL_HEADER_BYTES - 1],
+                   2 | 4, "last flag in bit 1, coded flag in bit 2");
+        assert_eq!(enc.len(),
+                   FRAME_OVERHEAD_BYTES + PREFILL_HEADER_BYTES + 2);
+        roundtrip(last_coded);
+
+        // undefined flag bits are malformed
+        let mut body = enc[FRAME_OVERHEAD_BYTES..].to_vec();
+        body[PREFILL_HEADER_BYTES - 1] = 8;
+        assert!(Frame::decode(9, &body).is_err());
+        // coded flag with an empty body is malformed
+        let mut body = enc[FRAME_OVERHEAD_BYTES..].to_vec();
+        body.truncate(PREFILL_HEADER_BYTES);
+        assert!(Frame::decode(9, &body).is_err(),
+                "empty entropy-coded prefill chunk must not decode");
+
+        // keyframe chunk with a partial trailing float
+        let kenc = Frame::PrefillChunk {
+            session: 1, request: 2, bucket: 16, true_len: 8, ks: 3, kd: 3,
+            point: 0, index: 0, last: false, keyframe: true,
+            packed: vec![1.0; 3], updates: vec![], coded: vec![],
+        }.encode();
+        let mut body = kenc[FRAME_OVERHEAD_BYTES..].to_vec();
+        body.extend_from_slice(&[0xAA, 0xBB]);
+        assert!(Frame::decode(9, &body).is_err());
+
+        // delta chunk promising more updates than the body holds
+        let denc = Frame::PrefillChunk {
+            session: 1, request: 2, bucket: 16, true_len: 8, ks: 3, kd: 3,
+            point: 0, index: 1, last: false, keyframe: false,
+            packed: vec![], updates: vec![(1, 2.0)], coded: vec![],
+        }.encode();
+        let mut body = denc[FRAME_OVERHEAD_BYTES..].to_vec();
+        body[PREFILL_HEADER_BYTES] = 3; // update count leads the body
+        assert!(Frame::decode(9, &body).is_err());
+        // huge declared count must error without allocating
+        let mut body = denc[FRAME_OVERHEAD_BYTES..].to_vec();
+        body[PREFILL_HEADER_BYTES..PREFILL_HEADER_BYTES + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Frame::decode(9, &body).is_err());
+    }
+
     /// Satellite pin: `Frame::decode` over seeded-random type ids and
     /// bodies returns errors, never panics (and never over-allocates
     /// from attacker-controlled counts).
@@ -1065,7 +1317,7 @@ mod tests {
     fn decode_random_bodies_never_panics() {
         let mut rng = Rng::new(0xF0_22ED);
         for _ in 0..20_000 {
-            let tid = rng.below(12) as u8; // valid ids 0..=8 + invalid
+            let tid = rng.below(12) as u8; // valid ids 0..=9 + invalid
             let len = rng.below(300);
             let body: Vec<u8> =
                 (0..len).map(|_| rng.next_u64() as u8).collect();

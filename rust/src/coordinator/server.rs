@@ -30,8 +30,8 @@ use super::metrics::Metrics;
 use super::obs::{DumpOnPanic, FlightKind, Obs, StepTrace, TraceInFlight};
 use super::poll::PollPool;
 use super::protocol::{caps, BucketAdvert, ErrorCode, Frame, LadderEntry,
-                      ACTIVATION_HEADER_BYTES, PROTOCOL_MAGIC,
-                      PROTOCOL_VERSION, STREAM_HEADER_BYTES};
+                      ACTIVATION_HEADER_BYTES, PREFILL_HEADER_BYTES,
+                      PROTOCOL_MAGIC, PROTOCOL_VERSION, STREAM_HEADER_BYTES};
 use super::session::{SessionManager, ShardedSessions};
 use super::transport::{InProcTransport, TcpTransport, Transport};
 use crate::codec::fourier::{embed_block_into, unpack_block_into};
@@ -866,6 +866,136 @@ impl ServingService {
                                         bkd, true_len, &block, t_rx, seq,
                                         trace)
             }
+            Frame::PrefillChunk { session, request, bucket, true_len, ks, kd,
+                                  point, index, last, keyframe, packed,
+                                  updates, coded } => {
+                let t_rx = Instant::now();
+                let body_bytes = if !coded.is_empty() {
+                    coded.len()
+                } else if keyframe {
+                    packed.len() * 4
+                } else {
+                    4 + updates.len() * UPDATE_WIRE_BYTES
+                };
+                let wire = (body_bytes + PREFILL_HEADER_BYTES) as u64;
+                self.metrics.bytes_rx.fetch_add(wire, Ordering::Relaxed);
+                if let Some(reject) = self.session_gate(conn, session) {
+                    return reject;
+                }
+                if conn.negotiated_caps(self.caps) & caps::PREFILL == 0 {
+                    return Self::err(
+                        ErrorCode::BadRequest,
+                        "prefill capability not negotiated".into());
+                }
+                if point != 0
+                    && conn.negotiated_caps(self.caps) & caps::LADDER == 0 {
+                    return Self::err(
+                        ErrorCode::BadRequest,
+                        "ladder capability not negotiated".into());
+                }
+                let bucket = bucket as usize;
+                let Some((bks, bkd)) =
+                    self.checked_point(bucket, point, ks, kd)
+                else {
+                    self.obs.flight.record(
+                        FlightKind::BadRequest, session,
+                        self.sessions.shard_of(session) as u16, index,
+                        bucket as u64);
+                    return Self::err(
+                        ErrorCode::BadRequest,
+                        format!("bad bucket {bucket} point {point} \
+                                 ({ks}x{kd})"));
+                };
+                let (packed, updates) = match self.take_entropy_body(
+                    conn, session, index, bucket, keyframe, coded, packed,
+                    updates) {
+                    Ok(pu) => pu,
+                    Err(reject) => return reject,
+                };
+                // only frames a negotiated peer aims at a real prompt
+                // count in the prefill wire split — same reasoning as
+                // the stream key/delta accounting above
+                self.metrics.prefill_chunks.fetch_add(1, Ordering::Relaxed);
+                if keyframe {
+                    self.metrics.prefill_key_chunks
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                self.metrics.prefill_bytes_rx.fetch_add(wire,
+                                                        Ordering::Relaxed);
+                let geom = BlockGeom { rows: bucket,
+                                       cols: self.model.d_model,
+                                       ks: bks, kd: bkd };
+                let shard = self.sessions.shard_of(session) as u16;
+                // apply the chunk to the per-session assembler under
+                // the shard lock.  A keyframe chunk 0 (re-)admits the
+                // session like a stream keyframe; anything else needs
+                // live mid-assembly state.  On completion the decode
+                // stream is seeded from the assembled plane inside the
+                // same critical section, so the client's first decode
+                // delta can never race an unseeded decoder.
+                let body = body_bytes as u64;
+                let applied = self.sessions.with(session, |sm| {
+                    let asm = if keyframe && index == 0 {
+                        sm.prefill_restart(session, body).ok_or_else(
+                            || anyhow!("prefill admission refused"))?
+                    } else {
+                        sm.prefill_assembler(session, body).ok_or_else(
+                            || anyhow!("prefill state evicted; restart \
+                                        from chunk 0"))?
+                    };
+                    let done = asm.apply(geom, index, last, keyframe,
+                                         &packed, &updates)?;
+                    if let Some(plane) = done {
+                        if !sm.seed_stream_from_prefill(session, geom,
+                                                        &plane, point) {
+                            bail!("prefill stream seed failed");
+                        }
+                        return Ok(Some(plane));
+                    }
+                    Ok(None)
+                });
+                let plane = match applied {
+                    Ok(Some(plane)) => plane,
+                    // absorbed mid-assembly chunk, or a silently
+                    // swallowed stray after a reject the client has
+                    // already been told about
+                    Ok(None) => return Response::None,
+                    Err(e) => {
+                        self.metrics.prefill_rejects
+                            .fetch_add(1, Ordering::Relaxed);
+                        self.obs.flight.record(FlightKind::PrefillReject,
+                                               session, shard, index,
+                                               point as u64);
+                        return Self::err(ErrorCode::StreamReject,
+                                         format!("prefill: {e:#}"));
+                    }
+                };
+                // one reassembled prompt = one request = one token,
+                // like the monolithic Activation path
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                self.metrics.prefill_prompts.fetch_add(1, Ordering::Relaxed);
+                let mut trace = self.obs.tracer.begin(session, request, t_rx);
+                if let Some(t) = trace.as_mut() {
+                    t.bucket = bucket;
+                    t.point = point;
+                    t.shard = shard as usize;
+                }
+                let resp = self.unpack_and_enqueue(conn, session, request,
+                                                   bucket, bks, bkd, true_len,
+                                                   &plane, t_rx, index, trace);
+                if matches!(resp, Response::None) {
+                    if let Some(dwell) = self.sessions.note_point(session,
+                                                                  point) {
+                        self.metrics.ladder_switches
+                            .fetch_add(1, Ordering::Relaxed);
+                        self.metrics.ladder_dwell_frames.record(dwell);
+                        self.obs.flight.record(
+                            FlightKind::LadderSwitch, session, shard, index,
+                            point as u64);
+                    }
+                }
+                resp
+            }
             Frame::GetStats => Response::Reply(Frame::Stats {
                 json: self.stats_json().to_string_compact() }),
             Frame::Bye => Response::Close,
@@ -1196,6 +1326,9 @@ pub fn start_service(cfg: &ServeConfig, store: Arc<ArtifactStore>)
     }
     if cfg.entropy {
         server_caps |= caps::ENTROPY;
+    }
+    if cfg.prefill {
+        server_caps |= caps::PREFILL;
     }
     let service = Arc::new(ServingService {
         model,

@@ -14,7 +14,7 @@
 //! (admission pressure is a per-shard budget of
 //! `max_sessions / shards`).
 
-use crate::codec::stream::StreamDecoder;
+use crate::codec::stream::{BlockGeom, PrefillAssembler, StreamDecoder};
 use crate::coordinator::obs::{FlightKind, FlightRecorder, ShardMetrics};
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
@@ -61,6 +61,11 @@ pub struct Session {
     /// keyframes move it, so an interleaved recompute frame at a
     /// different point cannot poison in-sequence delta validation.
     pub stream_point: u8,
+    /// Per-session chunked-prefill reassembly state
+    /// (`codec::stream::PrefillAssembler`): dropped with the session
+    /// on eviction, so a mid-prefill eviction forces the client to
+    /// restart from keyframe chunk 0 — never silent reassembly drift.
+    pub prefill: PrefillAssembler,
 }
 
 pub struct SessionManager {
@@ -160,6 +165,7 @@ impl SessionManager {
                 point: 0,
                 point_frames: 0,
                 stream_point: 0,
+                prefill: PrefillAssembler::default(),
             });
             self.note_admitted();
         }
@@ -239,6 +245,64 @@ impl SessionManager {
         s.requests += 1;
         s.bytes_rx += bytes;
         Some(&mut s.stream)
+    }
+
+    /// Assembler for a prefill **restart** (keyframe chunk 0):
+    /// (re-)admits the session under the same TTL/LRU rules as a
+    /// stream keyframe and records the request.  `None` means
+    /// admission was refused (table full of live sessions).
+    pub fn prefill_restart(&mut self, id: u64, bytes: u64)
+        -> Option<&mut PrefillAssembler> {
+        if !self.admit(id, "") {
+            return None;
+        }
+        let s = self.sessions.get_mut(&id)?;
+        s.requests += 1;
+        s.bytes_rx += bytes;
+        Some(&mut s.prefill)
+    }
+
+    /// Assembler for a **follow-up** prefill chunk: only for a live
+    /// (non-expired) session — mid-assembly state evaporated with an
+    /// evicted session, so the protocol surfaces `None` as "restart
+    /// from chunk 0", the prefill resync path.
+    pub fn prefill_assembler(&mut self, id: u64, bytes: u64)
+        -> Option<&mut PrefillAssembler> {
+        let expired = self
+            .sessions
+            .get(&id)
+            .map(|s| s.last_seen.elapsed() >= self.ttl)
+            .unwrap_or(false);
+        if expired {
+            self.sessions.remove(&id);
+            self.note_evicted(id, EVICT_TTL);
+            return None;
+        }
+        let s = self.sessions.get_mut(&id)?;
+        s.last_seen = Instant::now();
+        s.requests += 1;
+        s.bytes_rx += bytes;
+        Some(&mut s.prefill)
+    }
+
+    /// Seed the session's decode-stream state from a completed
+    /// prefill plane: the stream decoder behaves as if a keyframe
+    /// with sequence 0 carried the plane (the device-side
+    /// `StreamEncoder::seed` mirror), so decode step 1 may arrive as
+    /// a delta.  Returns false for unknown sessions or invalid
+    /// geometry.
+    pub fn seed_stream_from_prefill(&mut self, id: u64, geom: BlockGeom,
+                                    plane: &[f32], point: u8) -> bool {
+        match self.sessions.get_mut(&id) {
+            Some(s) => {
+                if s.stream.apply_key(0, geom, plane).is_err() {
+                    return false;
+                }
+                s.stream_point = point;
+                true
+            }
+            None => false,
+        }
     }
 
     pub fn get(&self, id: u64) -> Option<&Session> {
@@ -601,6 +665,58 @@ mod tests {
         assert!(m.note_point(1, 2).is_none());
         // upshift after two frames at point 2
         assert_eq!(m.note_point(1, 0), Some(2));
+    }
+
+    /// Prefill reassembly needs a plane of more than one chunk, so a
+    /// taller block than the stream-lifecycle tests use.
+    const PGEOM: BlockGeom = BlockGeom { rows: 4, cols: 8, ks: 3, kd: 3 };
+
+    #[test]
+    fn prefill_lifecycle_mirrors_the_stream_decoder_rules() {
+        let mut m = SessionManager::new(Duration::from_millis(10), 4);
+        assert!(m.hello(1, "x", 0));
+        // restart path admits + accounts, follow-up path is live-only
+        let asm = m.prefill_restart(1, 12).unwrap();
+        asm.apply(PGEOM, 0, false, true, &[1.0, 2.0, 3.0], &[]).unwrap();
+        assert!(asm.is_active());
+        assert_eq!(m.get(1).unwrap().requests, 1);
+        assert_eq!(m.get(1).unwrap().bytes_rx, 12);
+        assert!(m.prefill_assembler(1, 8).is_some());
+        assert_eq!(m.get(1).unwrap().bytes_rx, 20);
+
+        std::thread::sleep(Duration::from_millis(20));
+        // eviction mid-assembly: the follow-up path refuses (and
+        // evicts) — half-built planes never survive a TTL expiry
+        assert!(m.prefill_assembler(1, 8).is_none());
+        assert_eq!(m.len(), 0);
+        // a restart re-admits from scratch
+        let asm = m.prefill_restart(1, 12).unwrap();
+        assert!(!asm.is_active() && !asm.is_rejected());
+        asm.apply(PGEOM, 0, false, true, &[1.0, 2.0, 3.0], &[]).unwrap();
+        assert!(m.get(1).unwrap().prefill.is_active());
+
+        // admission pressure: restarts may not evict live sessions
+        let mut full = SessionManager::new(Duration::from_secs(60), 1);
+        assert!(full.hello(7, "x", 0));
+        assert!(full.prefill_restart(8, 0).is_none());
+    }
+
+    #[test]
+    fn seed_stream_from_prefill_primes_delta_continuation() {
+        let mut m = SessionManager::new(Duration::from_secs(60), 4);
+        assert!(!m.seed_stream_from_prefill(1, GEOM, &[0.0; 3], 0),
+                "unknown session");
+        assert!(m.hello(1, "x", 0));
+        // wrong plane length is refused, stream stays unsynced
+        assert!(!m.seed_stream_from_prefill(1, GEOM, &[0.0; 2], 0));
+        assert!(!m.get(1).unwrap().stream.is_synced());
+        let plane = [1.0f32, 2.0, 3.0];
+        assert!(m.seed_stream_from_prefill(1, GEOM, &plane, 2));
+        assert_eq!(m.stream_point_of(1), Some(2));
+        let s = m.get(1).unwrap();
+        assert!(s.stream.is_synced());
+        assert_eq!(s.stream.next_seq(), 1, "decode step 1 rides a delta");
+        assert_eq!(s.stream.block(), &plane[..]);
     }
 
     #[test]

@@ -18,7 +18,7 @@ pub mod live;
 
 use crate::codec::stream::UPDATE_WIRE_BYTES;
 use crate::config::SimConfig;
-use crate::coordinator::protocol::STREAM_HEADER_BYTES;
+use crate::coordinator::protocol::{PREFILL_HEADER_BYTES, STREAM_HEADER_BYTES};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use des::{EventQueue, Resource};
@@ -86,6 +86,33 @@ pub fn bytes_per_step(cfg: &SimConfig, arm: Arm, step: usize) -> f64 {
                 key * cfg.stream_delta_fill * (UPDATE_WIRE_BYTES as f64 / 4.0)
                     + STREAM_HEADER_BYTES as f64
             }
+        }
+    }
+}
+
+/// Prompt-phase (prefill) uplink bytes under `arm` — the one-shot
+/// upload that precedes decode, public so the prefill bench and tests
+/// can audit the chunked-prefill byte model against the real wire.
+///
+/// Recompute regimes send the whole prompt plane monolithically
+/// (`Original` raw, `Fc` the packed plane).  The streaming arms model
+/// chunked prefill: the plane splits into `prefill_chunks` fixed-row
+/// chunks — one keyframe chunk carrying its rows' coefficients dense,
+/// the rest row-delta chunks retransmitting only `prefill_delta_fill`
+/// of their coefficients at [`UPDATE_WIRE_BYTES`] each — every chunk
+/// paying the [`PREFILL_HEADER_BYTES`] PrefillChunk frame header.
+pub fn prompt_bytes(cfg: &SimConfig, arm: Arm) -> f64 {
+    let raw = (cfg.prompt_tokens * cfg.hidden * 4) as f64;
+    match arm {
+        Arm::Original => raw,
+        Arm::Fc => raw / cfg.fc_ratio,
+        Arm::FcStream | Arm::FcAdaptive => {
+            let plane = raw / cfg.fc_ratio;
+            let n = cfg.prefill_chunks.max(1) as f64;
+            let key = plane / n;
+            let delta = plane / n * cfg.prefill_delta_fill
+                * (UPDATE_WIRE_BYTES as f64 / 4.0);
+            key + (n - 1.0) * delta + n * PREFILL_HEADER_BYTES as f64
         }
     }
 }
@@ -220,6 +247,11 @@ pub fn fig7(cfg: &SimConfig) -> Json {
     out.set("fc_ratio", Json::Num(cfg.fc_ratio));
     out.set("clients",
             Json::Arr(cfg.clients.iter().map(|&c| Json::Num(c as f64)).collect()));
+    for (arm, tag) in [(Arm::Original, "orig"), (Arm::Fc, "fc"),
+                       (Arm::FcStream, "fcs"), (Arm::FcAdaptive, "fca")] {
+        out.set(&format!("{tag}_prompt_bytes"),
+                Json::Num(prompt_bytes(cfg, arm).round()));
+    }
     for &g in &cfg.link_gbps {
         for (arm, tag) in [(Arm::Original, "orig"), (Arm::Fc, "fc"),
                            (Arm::FcStream, "fcs"),
@@ -255,6 +287,8 @@ mod tests {
             fc_ratio: 10.0,
             stream_keyframe_interval: 32,
             stream_delta_fill: 0.05,
+            prefill_chunks: 16,
+            prefill_delta_fill: 0.05,
             adaptive_phase_steps: 16,
             adaptive_low_fill: 0.35,
             service_per_token_s: 0.002,
@@ -360,6 +394,29 @@ mod tests {
         assert_eq!(a.completed, b.completed);
         assert_eq!(a.mean_response_s, b.mean_response_s);
         assert!(a.completed > 0);
+    }
+
+    #[test]
+    fn chunked_prefill_prompt_bytes_undercut_monolithic_2x() {
+        // the PR-10 headline: chunked prefill must undercut the
+        // monolithic keyframe >= 2x on prompt-phase wire bytes
+        let cfg = quick_cfg();
+        let orig = prompt_bytes(&cfg, Arm::Original);
+        let mono = prompt_bytes(&cfg, Arm::Fc);
+        let chunked = prompt_bytes(&cfg, Arm::FcStream);
+        assert!(mono / chunked >= 2.0,
+                "mono {mono:.0} vs chunked {chunked:.0}");
+        assert!(orig > mono);
+        // deterministic, and the streaming arms share the model
+        assert_eq!(chunked, prompt_bytes(&cfg, Arm::FcStream));
+        assert_eq!(chunked, prompt_bytes(&cfg, Arm::FcAdaptive));
+        // degenerate single-chunk split collapses to ~the monolithic
+        // plane (one keyframe chunk + one header)
+        let mut one = quick_cfg();
+        one.prefill_chunks = 1;
+        let pb = prompt_bytes(&one, Arm::FcStream);
+        assert!((pb - mono - super::PREFILL_HEADER_BYTES as f64).abs() < 1e-6,
+                "single-chunk {pb:.0} vs mono {mono:.0}");
     }
 
     #[test]

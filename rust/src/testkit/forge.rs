@@ -112,6 +112,25 @@ impl ForgeSpec {
         }
     }
 
+    /// Long-context variant for the chunked-prefill suite: the
+    /// narrow band + wide ladder of [`ForgeSpec::tiny_adaptive`]
+    /// under buckets spanning 128 -> 2048 tokens, so a
+    /// multi-thousand-token prompt packs to a plane of thousands of
+    /// floats (row chunking has something to chunk) while goldens
+    /// stay self-consistent and the small bucket keeps the hermetic
+    /// tests affordable.
+    pub fn tiny_longctx() -> ForgeSpec {
+        ForgeSpec {
+            name: "forge-longctx".into(),
+            l1_freq_bins: 2,
+            ladder_kds: vec![31, 15, 7],
+            max_seq: 2048,
+            seq_buckets: vec![128, 2048],
+            seed: 0xF0C8,
+            ..ForgeSpec::tiny()
+        }
+    }
+
     /// Calibrated hidden-axis block width (`2·bins - 1`, the centred
     /// equivalent of the rfft band).
     pub fn kd_band(&self) -> usize {
@@ -688,6 +707,13 @@ pub fn forged_store(tag: &str) -> Result<ArtifactStore> {
                       "forge-tiny")
 }
 
+/// Forge the long-context tree (serving = tiny-longctx) into a fresh
+/// per-test scratch dir and open it — the chunked-prefill scenario
+/// store.
+pub fn forged_longctx_store(tag: &str) -> Result<ArtifactStore> {
+    forged_store_with(tag, &[ForgeSpec::tiny_longctx()], "forge-longctx")
+}
+
 /// Forge a custom tree into a fresh per-test scratch dir and open it.
 pub fn forged_store_with(tag: &str, specs: &[ForgeSpec], serving_model: &str)
     -> Result<ArtifactStore> {
@@ -787,6 +813,26 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn longctx_spec_validates_and_its_ladders_forge() {
+        let spec = ForgeSpec::tiny_longctx();
+        spec.validate().unwrap();
+        assert_eq!(spec.kd_band(), 3);
+        assert_eq!(spec.seq_buckets, vec![128, 2048]);
+        let l = bucket_ladder(2048, spec.d_model, spec.l1_freq_bins,
+                              &spec.ladder_kds, spec.ratio).unwrap();
+        assert_eq!(l.len(), 3);
+        // the prompt plane at the primary point must be thousands of
+        // floats with a dominating row axis, or chunking the prompt
+        // dimension has nothing to win
+        assert!(l[0].ks * l[0].kd > 4_000,
+                "primary plane too small: {}x{}", l[0].ks, l[0].kd);
+        assert!(l[0].ks > 64, "row axis must dominate: ks {}", l[0].ks);
+        // every point covers the band, so prefill chunks at any rung
+        // keep the cross-point token-parity contract
+        assert!(l.iter().all(|p| p.kd >= spec.kd_band()));
     }
 
     #[test]

@@ -27,5 +27,5 @@
 pub mod forge;
 
 pub use forge::{band_limited_act, bucket_ladder, forge_tree, forged_err_bound,
-                forged_store, forged_store_with, naive_topk, svd_rank_r,
-                ForgeSpec};
+                forged_longctx_store, forged_store, forged_store_with,
+                naive_topk, svd_rank_r, ForgeSpec};

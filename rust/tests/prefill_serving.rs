@@ -1,0 +1,313 @@
+//! Hermetic chunked-prefill tests: the prompt-phase streaming mode
+//! negotiated via `caps::PREFILL`, driven end to end through the live
+//! server — chunked vs monolithic token parity over in-proc and TCP
+//! transports, dropped-chunk → typed reject → keyframe-chunk-0
+//! recovery at the service-handle level, the entropy-coded chunk byte
+//! reconciliation, and the mixed-capability downgrade against a
+//! legacy (prefill off) server.  All tests hard-assert on every
+//! checkout — no python, no XLA.
+
+use fourier_compress::codec::stream::{split_prefill, BlockGeom, PrefillChunk,
+                                      PrefillConfig};
+use fourier_compress::codec::CodecEngine;
+use fourier_compress::config::{FromJson, ServeConfig};
+use fourier_compress::coordinator::protocol::{caps, ErrorCode, Frame};
+use fourier_compress::coordinator::{start_service, DeviceClient, EdgeServer,
+                                    Reply, Response, CLIENT_CAPS};
+use fourier_compress::model::tokenizer;
+use fourier_compress::net::Channel;
+use fourier_compress::runtime::ArtifactStore;
+use fourier_compress::testkit::forged_longctx_store;
+use fourier_compress::util::rng::Rng;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn serve_config(store_root: &std::path::Path, overrides: &[String])
+    -> ServeConfig {
+    let mut args = vec![
+        "listen=127.0.0.1:0".to_string(),
+        format!("artifacts={}", store_root.display()),
+    ];
+    args.extend_from_slice(overrides);
+    ServeConfig::load(None, &args).unwrap()
+}
+
+/// A multi-dozen-token prompt that buckets to the long-context
+/// store's 128-token bucket (the 15x31 packed plane → 4 chunks at
+/// `chunk_rows = 4`).
+fn long_prompt() -> String {
+    let mut p = "pad ".repeat(24);
+    p.push_str("Q mira hue ? A");
+    p
+}
+
+const STEPS: usize = 8;
+const CHUNK_CFG: PrefillConfig =
+    PrefillConfig { chunk_rows: 4, drift_threshold: 0.0 };
+
+/// Drive one client for `STEPS` tokens; the first step rides
+/// `send_prompt` (chunked when prefill is enabled, monolithic
+/// fallback otherwise), the rest the ordinary decode path.
+fn drive(client: &mut DeviceClient, prompt: &str) -> Vec<i32> {
+    let mut ctx = tokenizer::encode_prompt(prompt);
+    let mut tokens = Vec::new();
+    for i in 0..STEPS {
+        let (t, _) = if i == 0 {
+            client.send_prompt(&ctx).unwrap()
+        } else {
+            client.step(&ctx).unwrap()
+        };
+        ctx.push(t);
+        tokens.push(t);
+    }
+    tokens
+}
+
+/// The serving (bucket, ks, kd) of the long-context store's small
+/// bucket from the manifest — the geometry every chunk frame in the
+/// handle-level tests must carry.
+fn small_bucket_geom(store: &ArtifactStore) -> (u16, u16, u16) {
+    store.manifest.path("serving.buckets")
+        .and_then(|b| b.as_obj())
+        .expect("buckets")
+        .iter()
+        .map(|(bstr, bj)| (bstr.parse::<u16>().unwrap(),
+                           bj.usize_or("ks", 0) as u16,
+                           bj.usize_or("kd", 0) as u16))
+        .min()
+        .expect("at least one bucket")
+}
+
+fn chunk_frame(session: u64, request: u64, bucket: u16,
+               ks: u16, kd: u16, c: &PrefillChunk) -> Frame {
+    Frame::PrefillChunk {
+        session, request, bucket, true_len: 40, ks, kd, point: 0,
+        index: c.index, last: c.last, keyframe: c.keyframe,
+        packed: c.packed.clone(), updates: c.updates.clone(),
+        coded: vec![],
+    }
+}
+
+/// Chunked prefill at zero drift threshold is bit-exact, so the
+/// generated tokens must match the monolithic prompt path exactly —
+/// over TCP and over the in-proc transport — and both sides must
+/// account chunks, prompts, and rejects consistently.
+#[test]
+fn chunked_prefill_matches_monolithic_tokens_over_tcp_and_inproc() {
+    let store = Arc::new(forged_longctx_store("prefill_e2e").expect("forge"));
+    let server = EdgeServer::start(serve_config(&store.root, &[]),
+                                   store.clone()).unwrap();
+    let addr = server.addr.to_string();
+    let prompt = long_prompt();
+
+    // baseline: monolithic prompt (prefill never enabled — send_prompt
+    // falls back to the ordinary recompute step)
+    let mut base = DeviceClient::connect(&addr, &store, 71,
+                                         Channel::unlimited()).unwrap();
+    assert!(base.server_caps() & caps::PREFILL != 0,
+            "server must advertise the prefill capability by default");
+    assert!(!base.prefill_enabled());
+    let base_tokens = drive(&mut base, &prompt);
+    assert_eq!(base.stats.prefill_prompts, 0);
+    assert_eq!(base.stats.prefill_chunks, 0);
+    base.bye().unwrap();
+    assert_eq!(server.metrics.prefill_chunks.load(Ordering::Relaxed), 0,
+               "monolithic client must not count prefill chunks");
+
+    // chunked over TCP
+    let mut tc = DeviceClient::connect(&addr, &store, 72,
+                                       Channel::unlimited()).unwrap();
+    assert!(tc.enable_prefill(CHUNK_CFG),
+            "handshake must negotiate the prefill capability");
+    assert!(tc.prefill_enabled());
+    let tokens = drive(&mut tc, &prompt);
+    assert_eq!(tokens, base_tokens,
+               "zero-threshold chunked prefill must be bit-exact: tokens \
+                diverged from the monolithic prompt");
+    assert_eq!(tc.stats.prefill_prompts, 1);
+    // the 15x31 plane at chunk_rows = 4 is exactly 4 chunks
+    assert_eq!(tc.stats.prefill_chunks, 4);
+    assert!(tc.stats.prefill_key_chunks >= 1
+                && tc.stats.prefill_key_chunks <= tc.stats.prefill_chunks);
+    assert_eq!(tc.stats.prefill_resyncs, 0);
+    assert!(tc.stats.prefill_bytes > 0
+                && tc.stats.prefill_bytes <= tc.stats.bytes_sent);
+    tc.bye().unwrap();
+
+    // chunked over the in-proc transport: same tokens again
+    let mut ic = DeviceClient::connect_over(
+        Box::new(server.connect_inproc()), &store, 73).unwrap();
+    assert!(ic.enable_prefill(CHUNK_CFG));
+    assert_eq!(drive(&mut ic, &prompt), base_tokens,
+               "in-proc chunked prefill diverged");
+    ic.bye().unwrap();
+
+    // server-side accounting mirrors the two chunked clients
+    let m = &server.metrics;
+    assert_eq!(m.prefill_prompts.load(Ordering::Relaxed), 2);
+    assert_eq!(m.prefill_chunks.load(Ordering::Relaxed), 8);
+    assert_eq!(m.prefill_rejects.load(Ordering::Relaxed), 0);
+    assert!(m.prefill_bytes_rx.load(Ordering::Relaxed) > 0);
+    server.shutdown();
+}
+
+/// A dropped chunk is a hard sequence-gap failure: exactly one typed
+/// `StreamReject` naming prefill, the rest of the doomed burst is
+/// swallowed silently, and a restart from keyframe chunk 0 completes
+/// the prompt and serves a token.
+#[test]
+fn dropped_chunk_is_a_typed_reject_and_keyframe_restart_recovers() {
+    let store =
+        Arc::new(forged_longctx_store("prefill_resync").expect("forge"));
+    let cfg = serve_config(&store.root, &[]);
+    let handle = start_service(&cfg, store.clone()).unwrap();
+    let service = handle.service();
+    let (bucket, ks, kd) = small_bucket_geom(&store);
+
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+    let mut conn = service.open_conn(reply_tx, "prefill-resync".into());
+    assert!(matches!(
+        service.handle(&mut conn,
+                       Frame::hello(7, CLIENT_CAPS, "forge-longctx")),
+        Response::Reply(Frame::HelloAck { .. })));
+
+    // a valid chunk sequence for the real serving geometry (the forged
+    // model's d_model is 32 — the tiny-spec hidden size)
+    let geom = BlockGeom { rows: bucket as usize, cols: 32,
+                           ks: ks as usize, kd: kd as usize };
+    let mut rng = Rng::new(0xBEEF);
+    let plane: Vec<f32> =
+        (0..geom.ks * geom.kd).map(|_| rng.normal() as f32).collect();
+    let mut eng = CodecEngine::new();
+    let (mut chunks, mut state) = (Vec::new(), Vec::new());
+    split_prefill(&mut eng, geom, &plane, CHUNK_CFG, &mut chunks, &mut state)
+        .unwrap();
+    assert_eq!(chunks.len(), 4, "the 15x31 plane must split into 4 chunks");
+
+    // chunk 0 lands, chunk 1 is lost, chunk 2 → one typed reject
+    assert!(matches!(
+        service.handle(&mut conn, chunk_frame(7, 1, bucket, ks, kd,
+                                              &chunks[0])),
+        Response::None));
+    match service.handle(&mut conn, chunk_frame(7, 1, bucket, ks, kd,
+                                                &chunks[2])) {
+        Response::Reply(Frame::Error { code: ErrorCode::StreamReject, msg }) =>
+            assert!(msg.contains("prefill"), "unexpected reject: {msg}"),
+        _ => panic!("a sequence gap must be a typed StreamReject"),
+    }
+    // the rest of the doomed burst is swallowed silently (no reject
+    // storm: one Error per resend attempt)
+    assert!(matches!(
+        service.handle(&mut conn, chunk_frame(7, 1, bucket, ks, kd,
+                                              &chunks[3])),
+        Response::None));
+    assert_eq!(handle.metrics.prefill_rejects.load(Ordering::Relaxed), 1);
+    assert_eq!(handle.metrics.prefill_prompts.load(Ordering::Relaxed), 0);
+
+    // restart from keyframe chunk 0: the full sequence completes the
+    // plane and the batcher serves a token
+    for c in &chunks {
+        assert!(matches!(
+            service.handle(&mut conn, chunk_frame(7, 2, bucket, ks, kd, c)),
+            Response::None));
+    }
+    let reply = reply_rx.recv_timeout(Duration::from_secs(30))
+        .expect("no token after the recovered prefill");
+    assert!(matches!(reply.frame, Frame::Token { .. }),
+            "recovered prefill must serve a token");
+    assert_eq!(handle.metrics.prefill_prompts.load(Ordering::Relaxed), 1);
+    assert_eq!(handle.metrics.prefill_rejects.load(Ordering::Relaxed), 1);
+
+    service.close_conn(&conn);
+    drop(conn);
+    while reply_rx.try_recv().is_ok() {}
+    handle.shutdown();
+}
+
+/// Entropy-coded prefill chunks are lossless and the byte accounting
+/// reconciles exactly: tokens identical to the raw chunked run, never
+/// more bytes on the wire, and `bytes_sent + saved == raw bytes`.
+#[test]
+fn entropy_coded_prefill_is_lossless_and_reconciles_bytes() {
+    let store =
+        Arc::new(forged_longctx_store("prefill_entropy").expect("forge"));
+    let server = EdgeServer::start(serve_config(&store.root, &[]),
+                                   store.clone()).unwrap();
+    let addr = server.addr.to_string();
+    let prompt = long_prompt();
+
+    // raw chunked baseline
+    let mut raw = DeviceClient::connect(&addr, &store, 81,
+                                        Channel::unlimited()).unwrap();
+    assert!(raw.enable_prefill(CHUNK_CFG));
+    let raw_tokens = drive(&mut raw, &prompt);
+    let raw_bytes = raw.stats.bytes_sent;
+    assert_eq!(raw.stats.entropy_frames + raw.stats.entropy_fallbacks, 0);
+    raw.bye().unwrap();
+
+    // entropy-coded chunked run: same prompt, same steps
+    let mut ec = DeviceClient::connect(&addr, &store, 82,
+                                       Channel::unlimited()).unwrap();
+    assert!(ec.enable_prefill(CHUNK_CFG));
+    assert!(ec.enable_entropy());
+    let tokens = drive(&mut ec, &prompt);
+    assert_eq!(tokens, raw_tokens,
+               "entropy coding is lossless: chunked tokens must match");
+    assert_eq!(ec.stats.prefill_prompts, 1);
+    assert_eq!(ec.stats.prefill_chunks, 4);
+    assert!(ec.stats.bytes_sent <= raw_bytes,
+            "entropy {} B vs raw {} B", ec.stats.bytes_sent, raw_bytes);
+    // try-and-compare: every frame (4 chunks + 7 decode steps) was
+    // either coded or an explicit raw fallback
+    assert_eq!(ec.stats.entropy_frames + ec.stats.entropy_fallbacks,
+               (4 + STEPS - 1) as u64);
+    let saved = ec.stats.pre_coding_bytes - ec.stats.post_coding_bytes;
+    assert_eq!(ec.stats.bytes_sent + saved, raw_bytes,
+               "prefill byte accounting does not reconcile");
+    assert_eq!(server.metrics.entropy_frames.load(Ordering::Relaxed),
+               ec.stats.entropy_frames);
+    ec.bye().unwrap();
+    server.shutdown();
+}
+
+/// Mixed-capability handshake: a PREFILL-capable client against a
+/// legacy server (prefill off) downgrades cleanly — `enable_prefill`
+/// refuses, `send_prompt` rides the monolithic path, and the wire
+/// traffic is byte-identical to a client that never asked for
+/// prefill, with identical tokens.
+#[test]
+fn prefill_client_downgrades_byte_identical_on_legacy_server() {
+    let store =
+        Arc::new(forged_longctx_store("prefill_legacy").expect("forge"));
+    let legacy = EdgeServer::start(
+        serve_config(&store.root, &["prefill=false".into()]),
+        store.clone()).unwrap();
+    let addr = legacy.addr.to_string();
+    let prompt = long_prompt();
+
+    // a client that never mentions prefill: the legacy byte stream
+    let mut lc = DeviceClient::connect(&addr, &store, 91,
+                                       Channel::unlimited()).unwrap();
+    assert_eq!(lc.server_caps() & caps::PREFILL, 0);
+    let legacy_tokens = drive(&mut lc, &prompt);
+    let legacy_bytes = lc.stats.bytes_sent;
+    lc.bye().unwrap();
+
+    // a capable client that asks and is refused: identical traffic
+    let mut mc = DeviceClient::connect(&addr, &store, 92,
+                                       Channel::unlimited()).unwrap();
+    assert!(!mc.enable_prefill(CHUNK_CFG),
+            "enable_prefill must refuse without the negotiated capability");
+    assert!(!mc.prefill_enabled());
+    let tokens = drive(&mut mc, &prompt);
+    assert_eq!(tokens, legacy_tokens);
+    assert_eq!(mc.stats.bytes_sent, legacy_bytes,
+               "un-negotiated prefill must leave the wire byte-identical");
+    assert_eq!(mc.stats.prefill_prompts, 0);
+    assert_eq!(mc.stats.prefill_chunks, 0);
+    mc.bye().unwrap();
+    assert_eq!(legacy.metrics.prefill_chunks.load(Ordering::Relaxed), 0);
+    legacy.shutdown();
+}

@@ -11,9 +11,10 @@ use fourier_compress::codec::fourier::{pack_block, pack_block_into,
 use fourier_compress::codec::quant::Int8Codec;
 use fourier_compress::codec::rate::{validate_ladder, LadderPoint, RateConfig,
                                     RateController};
-use fourier_compress::codec::stream::{fc_payload, BlockGeom, StreamConfig,
-                                      StreamDecoder, StreamEncoder,
-                                      StreamStep};
+use fourier_compress::codec::stream::{fc_payload, split_prefill, BlockGeom,
+                                      PrefillAssembler, PrefillConfig,
+                                      StreamConfig, StreamDecoder,
+                                      StreamEncoder, StreamStep};
 use fourier_compress::codec::{rel_error, valid_block_axis, Codec,
                               CodecEngine, Payload};
 use fourier_compress::tensor::MatView;
@@ -229,6 +230,87 @@ fn stream_drift_never_exceeds_threshold() {
             assert!(err <= thr * 1.02 + 1e-6,
                     "case {case} step {step}: recon drift {err} > {thr}");
         }
+    }
+}
+
+/// Property: across random geometries, chunk sizes, and drift
+/// thresholds, chunked prefill splits into a well-formed sequence
+/// (keyframe chunk 0, contiguous indices, exactly one `last`), the
+/// server-side assembler reproduces the transmitted plane *bit
+/// exactly*, a zero threshold is fully lossless, and the cumulative
+/// drift every chunk of one prompt leaves unsent stays under the
+/// advertised Parseval bound — measured on the reconstructions, the
+/// quantity the bound is written against.
+#[test]
+fn prefill_split_reassemble_roundtrips_and_bounds_cumulative_drift() {
+    let codec = FourierCodec::default();
+    let mut eng = CodecEngine::new();
+    let mut rng = Rng::new(0x9E07);
+    let (mut chunks, mut state) = (Vec::new(), Vec::new());
+    for case in 0..300 {
+        let rows = 1 + rng.below(40);
+        let cols = 1 + rng.below(48);
+        let geom = BlockGeom {
+            rows,
+            cols,
+            ks: rand_axis(&mut rng, rows),
+            kd: rand_axis(&mut rng, cols),
+        };
+        let n = geom.ks * geom.kd;
+        let packed: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        // chunk sizes from single-row up past the whole plane (the
+        // degenerate single-chunk prefill)
+        let chunk_rows = 1 + rng.below(geom.ks + 2);
+        let thr = [0.0, 0.0, 0.01, 0.1][rng.below(4)];
+        let cfg = PrefillConfig { chunk_rows, drift_threshold: thr };
+        let drift = split_prefill(&mut eng, geom, &packed, cfg, &mut chunks,
+                                  &mut state)
+            .unwrap_or_else(|e| panic!("case {case} ({rows}x{cols} block \
+                                        {}x{}): {e}", geom.ks, geom.kd));
+        assert!(drift <= thr + 1e-9,
+                "case {case}: reported drift {drift} > {thr}");
+
+        // sequence shape: keyframe chunk 0, contiguous indices,
+        // exactly the expected count, `last` only on the final chunk
+        assert!(chunks[0].keyframe && chunks[0].index == 0, "case {case}");
+        assert_eq!(chunks.len(),
+                   n.div_ceil((chunk_rows * geom.kd).min(n)),
+                   "case {case}: wrong chunk count");
+        for (i, c) in chunks.iter().enumerate() {
+            assert_eq!(c.index as usize, i, "case {case}");
+            assert_eq!(c.last, i + 1 == chunks.len(), "case {case}");
+        }
+
+        // server-side reassembly is bit-exact against the encoder's
+        // transmitted plane, and fully lossless at zero threshold
+        let mut asm = PrefillAssembler::new();
+        let mut done = None;
+        for c in &chunks {
+            let r = asm.apply(geom, c.index, c.last, c.keyframe, &c.packed,
+                              &c.updates)
+                .unwrap_or_else(|e| panic!("case {case} chunk {}: {e}",
+                                           c.index));
+            assert_eq!(r.is_some(), c.last, "case {case} chunk {}", c.index);
+            if c.last {
+                done = r;
+            }
+        }
+        let plane = done.expect("last chunk completes the plane");
+        assert_eq!(bits(&plane), bits(&state),
+                   "case {case}: reassembly not bit-exact");
+        if thr == 0.0 {
+            assert_eq!(bits(&plane), bits(&packed),
+                       "case {case}: zero threshold must be lossless");
+        }
+
+        // cumulative drift across every chunk of the prompt, measured
+        // where it matters: between the reconstructions of the true
+        // and the reassembled plane (Parseval)
+        let want = codec.decompress(&fc_payload(geom, &packed)).unwrap();
+        let got = codec.decompress(&fc_payload(geom, &plane)).unwrap();
+        let err = rel_error(&want, &got);
+        assert!(err <= thr * 1.02 + 1e-6,
+                "case {case}: cumulative recon drift {err} > {thr}");
     }
 }
 

@@ -1,7 +1,8 @@
 //! Service state-machine fuzz: drive `ServingService::handle` with
 //! seeded random interleavings of valid, corrupt, out-of-order, and
 //! ladder-switch frames — handshakes mid-stream, deltas before
-//! keyframes, foreign sessions, bogus buckets/points/geometries,
+//! keyframes, prefill chunks with random indices and bodies, foreign
+//! sessions, bogus buckets/points/geometries,
 //! client-bound frame types — and assert the service never panics and
 //! only ever answers with typed protocol frames (`Frame::Error` with
 //! a defined code, `HelloAck`, or `Stats`).  Afterwards the same
@@ -98,7 +99,7 @@ fn random_frame(rng: &mut Rng, session: u64, geoms: &[(u16, u16, u16)])
     };
     let point = rng.below(5) as u8; // 0..=2 valid, 3..=4 not
     let n = ks as usize * kd as usize;
-    match rng.below(10) {
+    match rng.below(12) {
         0 => Frame::Hello {
             magic: if rng.below(4) == 0 { rng.next_u64() as u32 }
                    else { PROTOCOL_MAGIC },
@@ -177,6 +178,52 @@ fn random_frame(rng: &mut Rng, session: u64, geoms: &[(u16, u16, u16)])
             }
         }
         8 => Frame::GetStats,
+        9..=10 => {
+            // prompt-phase chunks: random indices (gaps, duplicates,
+            // and matches), truncated/oversized keyframe bodies,
+            // out-of-range update indices, premature `last` flags
+            let keyframe = rng.below(2) == 0;
+            let coded = if rng.below(4) == 0 {
+                random_coded(rng, n.clamp(1, 64), !keyframe)
+            } else {
+                vec![]
+            };
+            Frame::PrefillChunk {
+                session,
+                request: rng.next_u64(),
+                bucket,
+                true_len: rng.below(70) as u16,
+                ks,
+                kd,
+                point,
+                index: rng.below(6) as u32,
+                last: rng.below(3) == 0,
+                keyframe,
+                packed: if keyframe && coded.is_empty() {
+                    (0..if rng.below(3) == 0 { rng.below(n.max(1) * 2) }
+                        else { n })
+                        .map(|_| rng.normal() as f32)
+                        .collect()
+                } else {
+                    vec![]
+                },
+                updates: if keyframe || !coded.is_empty() {
+                    vec![]
+                } else {
+                    (0..rng.below(6))
+                        .map(|_| {
+                            let i = if rng.below(3) == 0 {
+                                rng.next_u64() as u32
+                            } else {
+                                rng.below(n.max(1)) as u32
+                            };
+                            (i, rng.normal() as f32)
+                        })
+                        .collect()
+                },
+                coded,
+            }
+        }
         // client-bound frames a rogue peer might echo back
         _ => match rng.below(3) {
             0 => Frame::Token { request: rng.next_u64(), token: 1,
@@ -311,6 +358,155 @@ fn entropy_frames_to_a_legacy_server_are_typed_rejects() {
     service.close_conn(&conn);
     drop(conn);
     while reply_rx.try_recv().is_ok() {}
+    handle.shutdown();
+}
+
+/// Prefill chunks at a server that never advertised `caps::PREFILL`
+/// (`prefill=false`) are typed BadRequests naming the capability;
+/// at a capable server, out-of-order, duplicate, and truncated chunks
+/// are typed StreamRejects (or swallowed silently inside a doomed
+/// burst), never panics — and the service still generates afterwards.
+#[test]
+fn prefill_chaos_is_typed_rejects_and_never_wedges_the_service() {
+    use fourier_compress::codec::stream::{split_prefill, BlockGeom,
+                                          PrefillConfig};
+    use fourier_compress::codec::CodecEngine;
+    use fourier_compress::testkit::forged_longctx_store;
+
+    // legacy server: the prefill capability withheld
+    let store =
+        Arc::new(forged_store("prefill_fuzz_legacy").expect("forge artifacts"));
+    let cfg = ServeConfig::load(None, &[
+        "listen=127.0.0.1:0".to_string(),
+        format!("artifacts={}", store.root.display()),
+        "prefill=false".into(),
+    ]).unwrap();
+    let handle = start_service(&cfg, store.clone()).unwrap();
+    let service = handle.service();
+    let geoms = manifest_geoms(&store);
+    let &(bucket, ks, kd) = &geoms[0];
+    let n = ks as usize * kd as usize;
+
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+    let mut conn = service.open_conn(reply_tx, "prefill-fuzz".into());
+    assert!(matches!(
+        service.handle(&mut conn, Frame::hello(6, CLIENT_CAPS, "forge-tiny")),
+        Response::Reply(Frame::HelloAck { .. })));
+    let chunk = |request: u64, index: u32, last: bool, keyframe: bool,
+                 packed: Vec<f32>, updates: Vec<(u32, f32)>| {
+        Frame::PrefillChunk {
+            session: 6, request, bucket, true_len: 3, ks, kd, point: 0,
+            index, last, keyframe, packed, updates, coded: vec![],
+        }
+    };
+    let mut rng = Rng::new(0xF111);
+    let plane: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    match service.handle(&mut conn,
+                         chunk(1, 0, true, true, plane.clone(), vec![])) {
+        Response::Reply(Frame::Error { code: ErrorCode::BadRequest, msg }) =>
+            assert!(msg.contains("prefill"), "unexpected reject: {msg}"),
+        _ => panic!("prefill chunk to a non-PREFILL server must be a typed \
+                     BadRequest"),
+    }
+    // raw frames on the same connection still serve
+    let raw = Frame::Activation {
+        session: 6, request: 2, bucket, true_len: 3, ks, kd, point: 0,
+        packed: plane.clone(), coded: vec![],
+    };
+    assert!(matches!(service.handle(&mut conn, raw), Response::None));
+    service.close_conn(&conn);
+    drop(conn);
+    while reply_rx.try_recv().is_ok() {}
+    handle.shutdown();
+
+    // capable server: out-of-order, duplicate, and truncated chunks,
+    // on the long-context store whose small bucket gives a
+    // multi-chunk plane
+    let store = Arc::new(forged_longctx_store("prefill_fuzz_chaos")
+        .expect("forge artifacts"));
+    let cfg = ServeConfig::load(None, &[
+        "listen=127.0.0.1:0".to_string(),
+        format!("artifacts={}", store.root.display()),
+    ]).unwrap();
+    let handle = start_service(&cfg, store.clone()).unwrap();
+    let service = handle.service();
+    let (bucket, ks, kd) = *manifest_geoms(&store).iter().min()
+        .expect("at least one bucket");
+    let n = ks as usize * kd as usize;
+
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+    let mut conn = service.open_conn(reply_tx, "prefill-chaos".into());
+    assert!(matches!(
+        service.handle(&mut conn,
+                       Frame::hello(8, CLIENT_CAPS, "forge-longctx")),
+        Response::Reply(Frame::HelloAck { .. })));
+    let chunk = |request: u64, index: u32, last: bool, keyframe: bool,
+                 packed: Vec<f32>, updates: Vec<(u32, f32)>| {
+        Frame::PrefillChunk {
+            session: 8, request, bucket, true_len: 3, ks, kd, point: 0,
+            index, last, keyframe, packed, updates, coded: vec![],
+        }
+    };
+    let plane: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut eng = CodecEngine::new();
+    let geom = BlockGeom { rows: bucket as usize, cols: 32,
+                           ks: ks as usize, kd: kd as usize };
+    let (mut chunks, mut state) = (Vec::new(), Vec::new());
+    split_prefill(&mut eng, geom, &plane,
+                  PrefillConfig { chunk_rows: 1, drift_threshold: 0.0 },
+                  &mut chunks, &mut state).unwrap();
+    assert!(chunks.len() >= 3, "need a multi-chunk sequence to disorder");
+    macro_rules! expect_reject {
+        ($f:expr, $what:expr) => {
+            match service.handle(&mut conn, $f) {
+                Response::Reply(Frame::Error {
+                    code: ErrorCode::StreamReject, msg }) =>
+                    assert!(msg.contains("prefill"), "{}: {msg}", $what),
+                _ => panic!("{} must be a typed StreamReject", $what),
+            }
+        };
+    }
+
+    // out-of-order: a mid-sequence chunk with no chunk 0 first
+    let c = &chunks[1];
+    expect_reject!(chunk(3, c.index, c.last, c.keyframe, c.packed.clone(),
+                         c.updates.clone()),
+                   "chunk before any keyframe chunk 0");
+    // duplicate: chunk 0, chunk 1, chunk 1 again → sequence gap
+    for c in &chunks[..2] {
+        assert!(matches!(
+            service.handle(&mut conn,
+                           chunk(4, c.index, c.last, c.keyframe,
+                                 c.packed.clone(), c.updates.clone())),
+            Response::None));
+    }
+    let c = &chunks[1];
+    expect_reject!(chunk(4, c.index, c.last, c.keyframe, c.packed.clone(),
+                         c.updates.clone()),
+                   "duplicate chunk");
+    // the rest of the doomed burst is swallowed, not a reject storm
+    let c = &chunks[2];
+    assert!(matches!(
+        service.handle(&mut conn,
+                       chunk(4, c.index, c.last, c.keyframe,
+                             c.packed.clone(), c.updates.clone())),
+        Response::None));
+    // truncated: a restart whose keyframe chunk 0 carries ragged rows
+    expect_reject!(chunk(5, 0, false, true, plane[..geom.kd + 1].to_vec(),
+                         vec![]),
+                   "truncated keyframe chunk");
+    service.close_conn(&conn);
+    drop(conn);
+    while reply_rx.try_recv().is_ok() {}
+
+    // the core survived: a well-behaved prefill client still generates
+    let mut client = DeviceClient::connect_over(
+        Box::new(handle.connect_inproc()), &store, 1).unwrap();
+    assert!(client.enable_prefill(PrefillConfig { chunk_rows: 1,
+                                                  drift_threshold: 0.0 }));
+    let g = client.generate("Q mira hue ? A", 3).unwrap();
+    assert!(g.steps >= 1, "service wedged by prefill chaos");
+    client.bye().unwrap();
     handle.shutdown();
 }
 
